@@ -1,0 +1,77 @@
+//! Image classification with a convolutional Neural ODE, solver by solver.
+//!
+//! Demonstrates the paper's §4.1 trade-off interactively: classify the
+//! exported eval batch with euler / midpoint / rk4 / HyperEuler at a chosen
+//! step count and compare accuracy + cost, on both the native path and the
+//! fused PJRT classify executables (image → logits).
+//!
+//! ```bash
+//! cargo run --release --example classification -- --dataset img_smnist --k 2
+//! ```
+
+use hypersolvers::metrics::accuracy;
+use hypersolvers::nn::ImageModel;
+use hypersolvers::runtime::Executor;
+use hypersolvers::solvers::{odeint_fixed, odeint_hyper, Tableau};
+use hypersolvers::tensor::Tensor;
+use hypersolvers::util::artifacts::{load_blob, load_labels, require_manifest};
+use hypersolvers::util::benchkit::Table;
+use hypersolvers::util::cli::Cli;
+
+fn main() {
+    let args = Cli::new("classification — conv Neural ODE solver comparison")
+        .opt("dataset", "img_smnist", "img_smnist | img_scifar")
+        .opt("k", "2", "fixed-step count K")
+        .parse_env();
+    let ds = args.get("dataset");
+    let k = args.get_usize("k");
+
+    let m = require_manifest();
+    let task = m.task(&ds).expect("dataset artifacts");
+    let model = ImageModel::load(&m.weights_path(task)).expect("weights");
+    let z0 = load_blob(&m, &ds, "z0");
+    let labels = load_labels(&m, &ds, "y");
+    let truth = load_blob(&m, &ds, "truth");
+    let acc_star = accuracy(&model.hy(&truth).unwrap(), &labels).unwrap();
+
+    println!("{ds}: dopri5 reference accuracy {acc_star:.3}  (K={k})\n");
+    let mut table = Table::new(&["method", "NFE", "accuracy", "acc drop %"]);
+    for (name, tab, hyper) in [
+        ("euler", Tableau::euler(), false),
+        ("midpoint", Tableau::midpoint(), false),
+        ("rk4", Tableau::rk4(), false),
+        ("hypereuler", Tableau::euler(), true),
+    ] {
+        let zt = if hyper {
+            odeint_hyper(&model.field, &model.hyper, &z0, task.s_span, k, &tab)
+                .unwrap()
+        } else {
+            odeint_fixed(&model.field, &z0, task.s_span, k, &tab).unwrap()
+        };
+        let acc = accuracy(&model.hy(&zt).unwrap(), &labels).unwrap();
+        table.row(&[
+            name.into(),
+            (tab.stages() * k).to_string(),
+            format!("{acc:.3}"),
+            format!("{:.2}", (acc_star - acc) * 100.0),
+        ]);
+    }
+    table.print();
+
+    // the fused image→logits executables (the deployable classify path)
+    let x = load_blob(&m, &ds, "x");
+    let exec = Executor::spawn().expect("pjrt");
+    let h = exec.handle();
+    println!("\nfused PJRT classify executables (image -> logits, batch {}):", x.shape()[0]);
+    for tag in ["hypereuler_k2_logits", "euler_k8_logits", "rk4_k4_logits"] {
+        let hlo = m.hlo_path(&format!("{ds}_{tag}.hlo.txt"));
+        if !hlo.exists() {
+            continue;
+        }
+        h.load(tag, hlo).unwrap();
+        let out = h.run(tag, x.data().to_vec(), x.shape()).unwrap();
+        let logits = Tensor::new(&[x.shape()[0], 10], out[0].clone()).unwrap();
+        let acc = accuracy(&logits, &labels).unwrap();
+        println!("  {tag:<22} accuracy {acc:.3}");
+    }
+}

@@ -1,0 +1,143 @@
+//! End-to-end driver (the repo's mandated E2E validation): bring up the
+//! full serving stack on the real trained CNF models and push a live
+//! workload through every layer — Pallas/JAX AOT artifacts → PJRT executor
+//! → policy → dynamic batcher → responses — reporting latency, throughput
+//! and sample quality. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example cnf_serving -- --requests 2000 --rate 1500
+//! ```
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::{Duration, Instant};
+
+use hypersolvers::coordinator::{Engine, EngineConfig, Policy};
+use hypersolvers::data::densities::{hist_l1, histogram2d};
+use hypersolvers::data::workload::WorkloadSpec;
+use hypersolvers::tensor::Tensor;
+use hypersolvers::util::artifacts::{load_blob, require_manifest};
+use hypersolvers::util::cli::Cli;
+use hypersolvers::util::prng::Rng;
+use hypersolvers::util::stats;
+
+fn main() {
+    let args = Cli::new("cnf_serving — end-to-end hypersolver serving demo")
+        .opt("requests", "2000", "number of requests to replay")
+        .opt("rate", "1500", "offered requests/second")
+        .opt("budget", "0.08", "MAPE budget of the main traffic class")
+        .opt("max-wait-ms", "2", "batching deadline")
+        .parse_env();
+
+    let manifest = require_manifest();
+    let densities: Vec<String> = manifest
+        .tasks
+        .keys()
+        .filter(|k| k.starts_with("cnf_"))
+        .cloned()
+        .collect();
+
+    let engine = Engine::new(EngineConfig {
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms") as u64),
+        policy: Policy::MinMacs,
+        ..Default::default()
+    })
+    .expect("engine");
+    println!("warming up {} CNF tasks (PJRT compile)...", densities.len());
+    for d in &densities {
+        engine.warmup(d).expect("warmup");
+    }
+
+    let spec = WorkloadSpec {
+        rate: args.get_f64("rate"),
+        count: args.get_usize("requests"),
+        tasks: densities.clone(),
+        budgets: vec![
+            (args.get_f64("budget") as f32, 0.8), // main traffic
+            (0.01, 0.1),                          // premium accuracy
+            (0.5, 0.1),                           // best-effort
+        ],
+    };
+    let trace = spec.generate(&mut Rng::new(2026));
+    println!(
+        "replaying {} requests over {:.2}s across {:?}",
+        trace.events.len(),
+        trace.duration_s(),
+        densities
+    );
+
+    let mut rng = Rng::new(7);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(trace.events.len());
+    for ev in &trace.events {
+        let target = t0 + Duration::from_secs_f64(ev.at_s);
+        loop {
+            let now = Instant::now();
+            if now >= target {
+                break;
+            }
+            let gap = target - now;
+            if gap > Duration::from_millis(1) {
+                std::thread::sleep(gap - Duration::from_micros(500));
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        let input = vec![rng.normal_f32(), rng.normal_f32()];
+        pending.push((
+            ev.task.clone(),
+            engine.submit(&ev.task, ev.budget, input).expect("submit"),
+        ));
+    }
+    let mut latencies = Vec::with_capacity(pending.len());
+    let mut outputs: std::collections::BTreeMap<String, Vec<f32>> = Default::default();
+    let mut variant_counts: std::collections::BTreeMap<String, usize> = Default::default();
+    for (task, rx) in pending {
+        let resp = rx.recv().expect("response");
+        latencies.push(resp.latency.as_secs_f64() * 1e3);
+        outputs.entry(task).or_default().extend(&resp.output);
+        *variant_counts.entry(resp.variant).or_default() += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== serving results ==");
+    println!(
+        "throughput: {:.0} req/s (offered {:.0})   wall {:.2}s",
+        trace.events.len() as f64 / wall,
+        spec.rate,
+        wall
+    );
+    println!(
+        "latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+        stats::percentile(&latencies, 50.0),
+        stats::percentile(&latencies, 95.0),
+        stats::percentile(&latencies, 99.0),
+        stats::max(&latencies),
+    );
+    let metrics = engine.metrics();
+    println!("coordinator: {}", metrics.report());
+    println!("variants served: {variant_counts:?}");
+    println!(
+        "mean NFE/request: {:.1} (dopri5 alone would spend ~{} per request)",
+        metrics.nfe_total.load(Relaxed) as f64 / metrics.responses.load(Relaxed) as f64,
+        manifest
+            .task(&densities[0])
+            .unwrap()
+            .variant("dopri5")
+            .map(|v| v.nfe)
+            .unwrap_or(0),
+    );
+
+    // sample quality: served samples vs the training data distribution
+    println!("\n== sample quality (histogram L1 vs data; lower is better) ==");
+    for d in &densities {
+        let Some(served) = outputs.get(d) else { continue };
+        let n = served.len() / 2;
+        let served_t = Tensor::new(&[n, 2], served.clone()).unwrap();
+        let data = load_blob(&manifest, d, "density_samples");
+        let l1 = hist_l1(
+            &histogram2d(&served_t, 14, 4.0),
+            &histogram2d(&data, 14, 4.0),
+        );
+        println!("  {d:<18} {n:>5} samples  L1 {l1:.3}");
+    }
+}

@@ -1,0 +1,51 @@
+//! Quickstart: load the trained CNF, solve it three ways, see the paper's
+//! point in 30 lines.
+//!
+//! ```bash
+//! make artifacts            # once: trains + AOT-exports everything
+//! cargo run --release --example quickstart
+//! ```
+
+use hypersolvers::metrics::mape;
+use hypersolvers::nn::CnfModel;
+use hypersolvers::solvers::{
+    dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, Tableau,
+};
+use hypersolvers::util::artifacts::{load_blob, require_manifest};
+
+fn main() {
+    let manifest = require_manifest();
+    let task = manifest.task("cnf_rings").expect("cnf_rings artifacts");
+    let model = CnfModel::load(&manifest.weights_path(task)).expect("weights");
+    let z0 = load_blob(&manifest, "cnf_rings", "z0"); // 256 noise samples
+
+    // 1. reference: adaptive dopri5 (what Neural ODE papers actually run)
+    let reference = dopri5(&model.field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-6))
+        .expect("dopri5");
+    println!("dopri5      : {:>4} NFE  (reference)", reference.nfe);
+
+    // 2. classical fixed-step at TWO function evaluations: fails
+    let heun = odeint_fixed(&model.field, &z0, task.s_span, 1, &Tableau::heun())
+        .expect("heun");
+    println!(
+        "heun K=1    : {:>4} NFE  MAPE {:.4}",
+        2,
+        mape(&heun, &reference.z).unwrap()
+    );
+
+    // 3. the paper: same 2 NFE + the trained hypersolver correction
+    let hyper = odeint_hyper(
+        &model.field,
+        &model.hyper,
+        &z0,
+        task.s_span,
+        1,
+        &Tableau::heun(),
+    )
+    .expect("hyperheun");
+    println!(
+        "hyperheun K=1: {:>4} NFE  MAPE {:.4}   <- dopri5-grade samples at 2 NFE",
+        2,
+        mape(&hyper, &reference.z).unwrap()
+    );
+}

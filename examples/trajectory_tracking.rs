@@ -1,0 +1,107 @@
+//! Trajectory tracking (paper §C.1): a Galerkin-flavoured Neural ODE tracks
+//! β(s) = [sin 2πs, cos 2πs]; the trajectory-fitted HyperEuler keeps the
+//! rollout on the reference path at a fraction of the NFEs.
+//!
+//! Prints an ASCII plot of one tracked trajectory per method plus the
+//! global error table — the lightweight control/real-time story of the
+//! paper's introduction.
+//!
+//! ```bash
+//! cargo run --release --example trajectory_tracking -- --k 10
+//! ```
+
+use hypersolvers::metrics::mean_l2;
+use hypersolvers::nn::TrackingModel;
+use hypersolvers::solvers::{odeint_fixed_traj, odeint_hyper_traj, Tableau};
+use hypersolvers::tensor::Tensor;
+use hypersolvers::util::artifacts::{load_blob, require_manifest};
+use hypersolvers::util::benchkit::Table;
+use hypersolvers::util::cli::Cli;
+
+fn main() {
+    let args = Cli::new("trajectory_tracking — periodic signal tracking demo")
+        .opt("k", "10", "fixed-step count K (NFE for euler/hypereuler)")
+        .parse_env();
+    let k = args.get_usize("k");
+
+    let m = require_manifest();
+    let task = m.task("tracking").expect("tracking artifacts");
+    let model = TrackingModel::load(&m.weights_path(task)).expect("weights");
+    let z0 = load_blob(&m, "tracking", "z0");
+    let mesh = load_blob(&m, "tracking", "mesh");
+    let (mesh_pts, b, d) = (mesh.shape()[0], mesh.shape()[1], mesh.shape()[2]);
+    let mesh_at = |i: usize| {
+        Tensor::new(&[b, d], mesh.data()[i * b * d..(i + 1) * b * d].to_vec()).unwrap()
+    };
+
+    println!("tracking β(s) over s ∈ [0,1], K = {k}\n");
+    let mut table = Table::new(&["method", "NFE", "terminal E_K"]);
+    let mut plots: Vec<(String, Vec<(f32, f32)>)> = Vec::new();
+
+    for (name, tab, hyper) in [
+        ("euler", Tableau::euler(), false),
+        ("midpoint", Tableau::midpoint(), false),
+        ("hypereuler", Tableau::euler(), true),
+    ] {
+        let traj = if hyper {
+            odeint_hyper_traj(&model.field, &model.hyper, &z0, task.s_span, k, &tab)
+                .unwrap()
+        } else {
+            odeint_fixed_traj(&model.field, &z0, task.s_span, k, &tab).unwrap()
+        };
+        let term = mean_l2(traj.last().unwrap(), &mesh_at(mesh_pts - 1)).unwrap();
+        table.row(&[
+            name.into(),
+            (tab.stages() * k).to_string(),
+            format!("{term:.4}"),
+        ]);
+        // first sample's (x, y) path for the ascii plot
+        plots.push((
+            name.to_string(),
+            traj.iter()
+                .map(|z| (z.data()[0], z.data()[1]))
+                .collect(),
+        ));
+    }
+    table.print();
+
+    // reference path of sample 0 from the dopri5 mesh
+    let reference: Vec<(f32, f32)> = (0..mesh_pts)
+        .map(|i| {
+            let z = mesh_at(i);
+            (z.data()[0], z.data()[1])
+        })
+        .collect();
+    plots.push(("dopri5".into(), reference));
+
+    println!("\nsample-0 phase portrait (x vs y), 41x21 ascii:");
+    ascii_plot(&plots);
+}
+
+fn ascii_plot(series: &[(String, Vec<(f32, f32)>)]) {
+    let (w, h) = (41usize, 21usize);
+    let mut grid = vec![b' '; w * h];
+    let marks = [b'e', b'm', b'H', b'*'];
+    let (lim, _) = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter())
+        .fold((1.0f32, ()), |(lim, ()), (x, y)| {
+            (lim.max(x.abs()).max(y.abs()), ())
+        });
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (x, y) in pts {
+            let cx = (((x / lim) + 1.0) / 2.0 * (w - 1) as f32).round() as usize;
+            let cy = ((1.0 - (y / lim)) / 2.0 * (h - 1) as f32).round() as usize;
+            grid[cy.min(h - 1) * w + cx.min(w - 1)] = marks[si % marks.len()];
+        }
+    }
+    for row in 0..h {
+        println!("  {}", String::from_utf8_lossy(&grid[row * w..(row + 1) * w]));
+    }
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{}={}", marks[i % marks.len()] as char, n))
+        .collect();
+    println!("  [{}]", legend.join("  "));
+}

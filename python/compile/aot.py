@@ -1,0 +1,539 @@
+"""AOT build entrypoint: train everything, export every artifact.
+
+``make artifacts`` → ``python -m compile.aot --out ../artifacts``.
+
+Python runs ONCE here and never again: the rust coordinator is fully
+self-contained after this script writes
+
+  artifacts/<task>_<variant>.hlo.txt   full-solve executables (HLO text)
+  artifacts/<task>_field.hlo.txt       single f-eval (rust-driven dopri5)
+  artifacts/weights/<task>.json        raw weights (native rust nn path)
+  artifacts/data/<task>_*.bin          eval batches + dopri5 ground truth
+  artifacts/manifest.json              the registry the rust side loads
+
+Incremental: a content stamp over python/compile/**.py is stored in the
+manifest; when it matches, the build is a no-op.
+
+``--quick`` shrinks every iteration count ~20× (used by pytest to exercise
+the full export path in seconds; quality is NOT representative).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import export as E
+from compile import fields as F
+from compile import macs as M
+from compile import solvers as S
+from compile.tasks import cnf as C
+from compile.tasks import images as I
+from compile.tasks import tracking as T
+
+SEED = 0
+
+
+def stamp_sources() -> str:
+    """Content hash of every python source feeding the artifacts."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(dirpath, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def mape(pred, truth) -> float:
+    """Mean absolute percentage error with the paper's small-denominator
+    guard (terminal-state MAPE, §C.2)."""
+    p = np.asarray(pred).reshape(-1)
+    t = np.asarray(truth).reshape(-1)
+    return float(np.mean(np.abs(p - t) / (np.abs(t) + 1e-2)))
+
+
+# ---------------------------------------------------------------------------
+# Generic variant exporter
+# ---------------------------------------------------------------------------
+
+
+def export_variants(
+    out_dir,
+    task_name,
+    f,
+    g,
+    z0_eval,
+    truth,
+    s_span,
+    fixed_grid,
+    hyper_grid,
+    hyper_tab,
+    mac_f,
+    mac_g,
+    use_kernels,
+    dopri_tol=1e-4,
+    extra_metric=None,
+):
+    """Export full-solve HLOs for a (solver, K) grid plus dopri5; measure
+    terminal MAPE of each variant against ``truth`` on the eval batch.
+
+    fixed_grid: list of (solver_name, K); hyper_grid: list of K for the
+    hypersolved variant with base ``hyper_tab``. Returns manifest entries.
+    """
+    variants = []
+    B = z0_eval.shape[0]
+
+    def emit(name, fn, nfe, macs_total, solver, k, hyper):
+        path = os.path.join(out_dir, f"{task_name}_{name}.hlo.txt")
+        E.export_fn(fn, (z0_eval,), path)
+        zT = jax.jit(fn)(z0_eval)
+        if isinstance(zT, tuple):
+            zT = zT[0]
+        ent = {
+            "name": name,
+            "solver": solver,
+            "k": k,
+            "hyper": hyper,
+            "hlo": os.path.basename(path),
+            "nfe": nfe,
+            "macs": macs_total,
+            "mape": mape(zT, truth),
+            "in_shape": list(z0_eval.shape),
+            "out_shape": list(np.asarray(zT).shape),
+        }
+        if extra_metric is not None:
+            ent.update(extra_metric(zT))
+        variants.append(ent)
+
+    for sname, k in fixed_grid:
+        tab = S.solver_by_name(sname)
+        fn = lambda z, tab=tab, k=k: S.odeint_fixed(
+            f, z, s_span, k, tab, use_kernels=use_kernels
+        )
+        emit(
+            f"{sname}_k{k}", fn, tab.stages * k,
+            M.solve_macs(mac_f, mac_g, tab.stages, k, False), sname, k, False,
+        )
+
+    for k in hyper_grid:
+        fn = lambda z, k=k: S.odeint_hyper(
+            f, g, z, s_span, k, hyper_tab, use_kernels=use_kernels
+        )
+        emit(
+            f"hyper{hyper_tab.name}_k{k}", fn, hyper_tab.stages * k,
+            M.solve_macs(mac_f, mac_g, hyper_tab.stages, k, True),
+            hyper_tab.name, k, True,
+        )
+
+    # adaptive baseline: whole dopri5 loop in one HLO (returns (z, nfe))
+    def dopri_fn(z):
+        return S.odeint_dopri5(f, z, s_span, dopri_tol, dopri_tol)
+
+    path = os.path.join(out_dir, f"{task_name}_dopri5.hlo.txt")
+    E.export_fn(dopri_fn, (z0_eval,), path)
+    zT, nfe = jax.jit(dopri_fn)(z0_eval)
+    ent = {
+        "name": "dopri5",
+        "solver": "dopri5",
+        "k": 0,
+        "hyper": False,
+        "hlo": os.path.basename(path),
+        "nfe": int(nfe),
+        "macs": int(nfe) * mac_f,
+        "mape": mape(zT, truth),
+        "in_shape": list(z0_eval.shape),
+        "out_shape": list(np.asarray(zT).shape),
+        "outputs": ["z", "nfe"],
+    }
+    if extra_metric is not None:
+        ent.update(extra_metric(zT))
+    variants.append(ent)
+
+    # single f evaluation: drives the rust-native adaptive solver
+    field_path = os.path.join(out_dir, f"{task_name}_field.hlo.txt")
+    E.export_fn(lambda s, z: f(s[0], z), (jnp.zeros((1,), jnp.float32), z0_eval), field_path)
+    return variants
+
+
+# ---------------------------------------------------------------------------
+# CNF tasks
+# ---------------------------------------------------------------------------
+
+
+def build_cnf(out_dir, quick, density, key):
+    t0 = time.time()
+    iters = 30 if quick else 500
+    hiters = 40 if quick else 1200
+    params, nll = C.train_cnf(key, density, iters=iters)
+    hkey = jax.random.fold_in(key, 1)
+    hparams, delta = C.fit_hyperheun(hkey, params, iters=hiters)
+    name = f"cnf_{density}"
+
+    B = 256
+    rng = np.random.default_rng(42)
+    z0 = jnp.asarray(rng.normal(size=(B, 2)), jnp.float32)
+    f = lambda s, z: C.cnf_field(params, s, z, use_kernels=False)
+    fk = lambda s, z: C.cnf_field(params, s, z, use_kernels=True)
+    g = lambda e, s, z, dz: C.hyper_apply(hparams, e, s, z, dz)
+    truth, _ = jax.jit(
+        lambda z: S.odeint_dopri5(f, z, C.S_SPAN, 1e-6, 1e-6)
+    )(z0)
+
+    mac_f = M.mlp_field_macs(2, C.CNF_HIDDEN, 1)
+    mac_g = M.hyper_mlp_macs(2, C.HYPER_HIDDEN)
+    fixed = [
+        ("euler", 1), ("euler", 2), ("euler", 4), ("euler", 8), ("euler", 16),
+        ("midpoint", 1), ("midpoint", 2), ("midpoint", 4), ("midpoint", 8),
+        ("heun", 1), ("heun", 2), ("heun", 4), ("heun", 8),
+        ("rk4", 1), ("rk4", 2), ("rk4", 4),
+    ]
+    variants = export_variants(
+        out_dir, name, fk, g, z0, truth, C.S_SPAN,
+        fixed, [1, 2, 4], S.HEUN, mac_f, mac_g, use_kernels=True,
+        dopri_tol=1e-5,
+    )
+
+    # weights for the native rust path
+    E.write_json(
+        {
+            "kind": "cnf",
+            "field": {
+                "type": "mlp_field",
+                "time_mode": "concat",
+                "layers": E.mlp_json(params["layers"]),
+            },
+            "hyper": {
+                "type": "hyper_mlp",
+                "layers": E.mlp_json(hparams["layers"]),
+            },
+        },
+        os.path.join(out_dir, "weights", f"{name}.json"),
+    )
+    data = {
+        "z0": E.write_f32(z0, os.path.join(out_dir, "data", f"{name}_z0.bin")),
+        "truth": E.write_f32(
+            truth, os.path.join(out_dir, "data", f"{name}_truth.bin")
+        ),
+        "density_samples": E.write_f32(
+            C.sample_density(density, 2000, np.random.default_rng(7)),
+            os.path.join(out_dir, "data", f"{name}_density.bin"),
+        ),
+    }
+    print(f"[aot] {name}: nll={nll:.3f} delta={delta:.4f} "
+          f"({time.time()-t0:.0f}s)")
+    return name, {
+        "kind": "cnf",
+        "state": {"shape": [B, 2]},
+        "s_span": list(C.S_SPAN),
+        "weights": f"weights/{name}.json",
+        "field_hlo": f"{name}_field.hlo.txt",
+        "macs": {"field": mac_f, "hyper": mac_g},
+        "delta": delta,
+        "train_nll": nll,
+        "variants": variants,
+        "data": data,
+        "hyper_base": "heun",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Image tasks
+# ---------------------------------------------------------------------------
+
+
+def build_images(out_dir, quick, ds, key, with_hypermidpoint=False):
+    t0 = time.time()
+    iters = 20 if quick else 250
+    hiters = 20 if quick else 400
+    params, loss = I.train_model(key, ds, iters=iters)
+    hkey = jax.random.fold_in(key, 1)
+    hparams, delta = I.fit_hyper(hkey, params, ds, iters=hiters)
+    name = f"img_{ds}"
+    ch = I.DATASETS[ds]
+
+    B = 64
+    rng = np.random.default_rng(123)
+    x_eval, y_eval = I.make_dataset(ds, B, rng)
+    x_eval = jnp.asarray(x_eval)
+    z0 = F.image_hx_apply(params, x_eval)
+    f = lambda s, z: I.field(params, s, z)
+    g = lambda e, s, z, dz: F.hyper_cnn_apply(hparams, e, s, z, dz)
+    truth, _ = jax.jit(
+        lambda z: S.odeint_dopri5(f, z, I.S_SPAN, 1e-6, 1e-6)
+    )(z0)
+    truth_logits = F.image_hy_apply(params, truth)
+    truth_acc = I.accuracy(truth_logits, jnp.asarray(y_eval))
+
+    def extra(zT):
+        # task metric: accuracy decrement vs the dopri5 reference (§C.2)
+        if zT.ndim != truth.ndim:
+            return {}
+        logits = F.image_hy_apply(params, zT)
+        acc = I.accuracy(logits, jnp.asarray(y_eval))
+        return {"acc": acc, "acc_drop": truth_acc - acc}
+
+    mac_f = M.conv_field_macs(I.AUG_CH, I.HIDDEN_CH, I.HW)
+    mac_g = M.hyper_cnn_macs(I.AUG_CH, I.HYPER_CH, I.HW)
+    fixed = [
+        ("euler", 1), ("euler", 2), ("euler", 4), ("euler", 8), ("euler", 16),
+        ("midpoint", 1), ("midpoint", 2), ("midpoint", 4), ("midpoint", 8),
+        ("rk4", 1), ("rk4", 2), ("rk4", 4),
+    ]
+    variants = export_variants(
+        out_dir, name, f, g, z0, truth, I.S_SPAN,
+        fixed, [1, 2, 4, 8], S.EULER, mac_f, mac_g, use_kernels=False,
+        dopri_tol=1e-4, extra_metric=extra,
+    )
+
+    # classification end-to-end executables (image -> logits) for serving
+    for sname, k, hyper in [("euler", 2, True), ("euler", 8, False),
+                            ("rk4", 4, False)]:
+        tag = ("hyper" if hyper else "") + f"{sname}_k{k}_logits"
+        fn = (
+            (lambda x: I.classify_hyper(params, hparams, x, k, S.EULER))
+            if hyper
+            else (lambda x: I.classify(params, x, k, S.solver_by_name(sname)))
+        )
+        E.export_fn(fn, (x_eval,), os.path.join(out_dir, f"{name}_{tag}.hlo.txt"))
+
+    wjson = {
+        "kind": "image",
+        "hw": I.HW,
+        "in_ch": ch,
+        "aug_ch": I.AUG_CH,
+        "hx": E.conv_json(params["hx"]),
+        "field": {
+            "type": "conv_field",
+            "c1": E.conv_json(params["field"]["c1"]),
+            "c2": E.conv_json(params["field"]["c2"]),
+            "c3": E.conv_json(params["field"]["c3"]),
+        },
+        "hy_conv": E.conv_json(params["hy_conv"]),
+        "hy_lin": E.linear_json(params["hy_lin"], "id"),
+        "hyper": {
+            "type": "hyper_cnn",
+            "c1": E.conv_json(hparams["c1"]),
+            "p1": E.prelu_json(hparams["p1"]),
+            "c2": E.conv_json(hparams["c2"]),
+        },
+    }
+    entry = {
+        "kind": "image",
+        "state": {"shape": [B, I.AUG_CH, I.HW, I.HW]},
+        "s_span": list(I.S_SPAN),
+        "weights": f"weights/{name}.json",
+        "field_hlo": f"{name}_field.hlo.txt",
+        "macs": {"field": mac_f, "hyper": mac_g},
+        "delta": delta,
+        "truth_acc": truth_acc,
+        "variants": variants,
+        "hyper_base": "euler",
+    }
+
+    if with_hypermidpoint:
+        # HyperMidpoint for the α-family generalization experiment (Fig 6)
+        hm_key = jax.random.fold_in(key, 2)
+        hm_params, hm_delta = I.fit_hyper(
+            hm_key, params, ds, tab=S.MIDPOINT, iters=hiters
+        )
+        wjson["hyper_midpoint"] = {
+            "type": "hyper_cnn",
+            "c1": E.conv_json(hm_params["c1"]),
+            "p1": E.prelu_json(hm_params["p1"]),
+            "c2": E.conv_json(hm_params["c2"]),
+        }
+        entry["hyper_midpoint_delta"] = hm_delta
+
+    E.write_json(wjson, os.path.join(out_dir, "weights", f"{name}.json"))
+    entry["data"] = {
+        "x": E.write_f32(x_eval, os.path.join(out_dir, "data", f"{name}_x.bin")),
+        "y": E.write_i32(y_eval, os.path.join(out_dir, "data", f"{name}_y.bin")),
+        "z0": E.write_f32(z0, os.path.join(out_dir, "data", f"{name}_z0.bin")),
+        "truth": E.write_f32(
+            truth, os.path.join(out_dir, "data", f"{name}_truth.bin")
+        ),
+    }
+    print(f"[aot] {name}: train_loss={loss:.3f} acc*={truth_acc:.3f} "
+          f"delta={delta:.4f} ({time.time()-t0:.0f}s)")
+    return name, entry
+
+
+# ---------------------------------------------------------------------------
+# Tracking task
+# ---------------------------------------------------------------------------
+
+
+def build_tracking(out_dir, quick, key):
+    t0 = time.time()
+    iters = 20 if quick else 400
+    hiters = 30 if quick else 800
+    params, loss = T.train_tracker(key, iters=iters)
+    hkey = jax.random.fold_in(key, 1)
+    hparams, delta = T.fit_hyper(hkey, params, iters=hiters)
+    name = "tracking"
+
+    B = 64
+    rng = np.random.default_rng(21)
+    z0 = jnp.asarray(
+        np.asarray(T.beta(0.0))[None, :] + 0.3 * rng.normal(size=(B, 2)),
+        jnp.float32,
+    )
+    f = lambda s, z: T.field(params, s, z)
+    g = lambda e, s, z, dz: T.hyper_apply(hparams, e, s, z, dz)
+    truth, _ = jax.jit(
+        lambda z: S.odeint_dopri5(f, z, T.S_SPAN, 1e-6, 1e-6)
+    )(z0)
+
+    mac_f = M.mlp_field_macs(2, T.FIELD_HIDDEN, 6)
+    mac_g = M.hyper_mlp_macs(2, T.HYPER_HIDDEN)
+    fixed = [
+        ("euler", 5), ("euler", 10), ("euler", 25), ("euler", 50),
+        ("midpoint", 5), ("midpoint", 10), ("midpoint", 25),
+        ("rk4", 2), ("rk4", 5), ("rk4", 10),
+    ]
+    variants = export_variants(
+        out_dir, name, f, g, z0, truth, T.S_SPAN,
+        fixed, [5, 10, 25], S.EULER, mac_f, mac_g, use_kernels=False,
+        dopri_tol=1e-5,
+    )
+
+    # dense ground-truth mesh for the global-error (Fig 8) bench
+    s_grid = np.linspace(T.S_SPAN[0], T.S_SPAN[1], 26)
+    mesh = jax.jit(lambda z: S.dopri5_mesh(f, z, list(s_grid), 1e-6, 1e-6))(z0)
+
+    E.write_json(
+        {
+            "kind": "tracking",
+            "field": {
+                "type": "mlp_field",
+                "time_mode": "fourier3",
+                "layers": E.mlp_json(params["layers"]),
+            },
+            "hyper": {
+                "type": "hyper_mlp",
+                "layers": E.mlp_json(hparams["layers"]),
+            },
+        },
+        os.path.join(out_dir, "weights", f"{name}.json"),
+    )
+    data = {
+        "z0": E.write_f32(z0, os.path.join(out_dir, "data", f"{name}_z0.bin")),
+        "truth": E.write_f32(
+            truth, os.path.join(out_dir, "data", f"{name}_truth.bin")
+        ),
+        "mesh": E.write_f32(
+            mesh, os.path.join(out_dir, "data", f"{name}_mesh.bin")
+        ),
+    }
+    print(f"[aot] {name}: loss={loss:.4f} delta={delta:.4f} "
+          f"({time.time()-t0:.0f}s)")
+    return name, {
+        "kind": "tracking",
+        "state": {"shape": [B, 2]},
+        "s_span": list(T.S_SPAN),
+        "weights": f"weights/{name}.json",
+        "field_hlo": f"{name}_field.hlo.txt",
+        "macs": {"field": mac_f, "hyper": mac_g},
+        "delta": delta,
+        "variants": variants,
+        "data": data,
+        "hyper_base": "euler",
+    }
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny iteration counts (pytest path exercise only)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated task subset, e.g. cnf_rings,img_smnist",
+    )
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    stamp = stamp_sources() + ("-quick" if args.quick else "")
+
+    if not args.force and os.path.exists(manifest_path):
+        with open(manifest_path) as fh:
+            old = json.load(fh)
+        if (
+            old.get("stamp") == stamp
+            and args.only is None
+            and not old.get("partial", False)
+        ):
+            print(f"[aot] artifacts up to date (stamp {stamp}); skipping")
+            return
+
+    only = set(args.only.split(",")) if args.only else None
+    t0 = time.time()
+    key = jax.random.PRNGKey(SEED)
+    tasks = {}
+
+    builders = []
+    for i, d in enumerate(C.DENSITIES):
+        builders.append(
+            (f"cnf_{d}", lambda d=d, i=i: build_cnf(
+                out_dir, args.quick, d, jax.random.fold_in(key, 10 + i)))
+        )
+    builders.append(
+        ("img_smnist", lambda: build_images(
+            out_dir, args.quick, "smnist", jax.random.fold_in(key, 20),
+            with_hypermidpoint=True))
+    )
+    builders.append(
+        ("img_scifar", lambda: build_images(
+            out_dir, args.quick, "scifar", jax.random.fold_in(key, 21)))
+    )
+    builders.append(
+        ("tracking", lambda: build_tracking(
+            out_dir, args.quick, jax.random.fold_in(key, 30)))
+    )
+
+    for tname, build in builders:
+        if only is not None and tname not in only:
+            continue
+        name, entry = build()
+        tasks[name] = entry
+
+    # merge with an existing manifest when --only rebuilt a subset
+    if only is not None and os.path.exists(manifest_path):
+        with open(manifest_path) as fh:
+            old = json.load(fh)
+        merged = old.get("tasks", {})
+        merged.update(tasks)
+        tasks = merged
+
+    manifest = {
+        "version": 1,
+        "stamp": stamp,
+        "seed": SEED,
+        "quick": args.quick,
+        "partial": only is not None,
+        "tasks": tasks,
+    }
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"[aot] wrote {manifest_path} ({time.time()-t0:.0f}s total)")
+
+
+if __name__ == "__main__":
+    main()

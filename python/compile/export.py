@@ -1,0 +1,90 @@
+"""AOT export utilities: jax → HLO text, weights → JSON, raw f32 blobs.
+
+HLO **text** is the interchange format (NOT serialized HloModuleProto):
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 rust crate links) rejects
+with ``proto.id() <= INT_MAX``. The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/README.md.
+"""
+
+import json
+import os
+from typing import Any, Dict, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation → XLA HLO text (tuple-rooted).
+
+    ``print_large_constants=True`` is essential: the default printer elides
+    big dense constants as ``constant({...})``, which the 0.5.1 text parser
+    silently turns into garbage — the trained weights ARE large constants in
+    the full-solve exports.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def export_fn(fn, example_args, path: str) -> str:
+    """jit-lower ``fn`` at the example shapes and write HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return text
+
+
+def _np(x) -> Any:
+    """jnp/np array → nested python lists for JSON."""
+    return np.asarray(x).astype(np.float32).round(7).tolist()
+
+
+def linear_json(p: Dict, act: str) -> Dict:
+    return {"kind": "linear", "w": _np(p["w"]), "b": _np(p["b"]), "act": act}
+
+
+def mlp_json(layers, hidden_act: str = "tanh", out_act: str = "id") -> list:
+    out = []
+    for i, p in enumerate(layers):
+        act = hidden_act if i < len(layers) - 1 else out_act
+        out.append(linear_json(p, act))
+    return out
+
+
+def conv_json(p: Dict) -> Dict:
+    # OIHW weights; SAME padding, stride 1 everywhere in this codebase.
+    return {"kind": "conv2d", "w": _np(p["w"]), "b": _np(p["b"])}
+
+
+def prelu_json(p: Dict) -> Dict:
+    return {"kind": "prelu", "alpha": _np(p["alpha"])}
+
+
+def write_json(obj: Dict, path: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f)
+
+
+def write_f32(arr, path: str) -> Dict:
+    """Raw little-endian f32 blob + shape descriptor for the manifest."""
+    a = np.ascontiguousarray(np.asarray(arr), dtype="<f4")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    a.tofile(path)
+    return {"path": os.path.basename(os.path.dirname(path)) + "/" + os.path.basename(path), "shape": list(a.shape)}
+
+
+def write_i32(arr, path: str) -> Dict:
+    a = np.ascontiguousarray(np.asarray(arr), dtype="<i4")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    a.tofile(path)
+    return {"path": os.path.basename(os.path.dirname(path)) + "/" + os.path.basename(path), "shape": list(a.shape)}

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for hypersolver inference.
+
+Every kernel here runs with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the interpreter path lowers the kernels to
+plain HLO ops that any backend (including the rust PJRT CPU client) can run.
+On a real TPU the same BlockSpecs map tiles into VMEM and matmuls onto the
+MXU; see DESIGN.md §4 (Hardware adaptation) for the footprint estimates.
+
+Kernels:
+  - ``linear_act.fused_linear_act`` — act(x @ W + b), one VMEM pass.
+  - ``hyper_step.hyper_step``       — z + eps*psi + eps^{p+1}*g, fused.
+  - ``rk_combine.rk_combine``       — z + eps * sum_i b_i r_i.
+
+``ref.py`` carries pure-jnp oracles; pytest + hypothesis sweep shapes and
+dtypes and assert_allclose against them.
+"""
+
+from compile.kernels.linear_act import fused_linear_act
+from compile.kernels.hyper_step import hyper_step
+from compile.kernels.rk_combine import rk_combine
+
+__all__ = ["fused_linear_act", "hyper_step", "rk_combine"]

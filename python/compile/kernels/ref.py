@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against (pytest +
+hypothesis sweeps in ``python/tests/test_kernels.py``). They are also used
+directly by the JAX layer when a shape is too small / ragged to be worth a
+kernel launch (the dispatch heuristics live in the kernel modules).
+"""
+
+import jax.numpy as jnp
+
+
+def act(x, kind: str):
+    """Activation dispatch shared by kernel and oracle."""
+    if kind == "id":
+        return x
+    if kind == "tanh":
+        return jnp.tanh(x)
+    if kind == "softplus":
+        return jnp.logaddexp(x, 0.0)
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def linear_act_ref(x, w, b, kind: str = "tanh"):
+    """act(x @ w + b) — oracle for fused_linear_act.
+
+    x: (m, k), w: (k, n), b: (n,)  →  (m, n)
+    """
+    return act(jnp.dot(x, w) + b[None, :], kind)
+
+
+def hyper_step_ref(z, psi, g, eps, order: int):
+    """z + eps*psi + eps^{p+1}*g — oracle for hyper_step.
+
+    The hypersolved update of eq. (5) in the paper: ``psi`` is the base
+    solver's update direction, ``g`` the hypersolver net output, ``order``
+    the base solver order p.
+    """
+    return z + eps * psi + (eps ** (order + 1)) * g
+
+
+def rk_combine_ref(z, stages, b, eps):
+    """z + eps * sum_i b_i stages_i — oracle for rk_combine.
+
+    stages: (p, *z.shape) stacked RK stage derivatives, b: (p,) tableau
+    weights.
+    """
+    acc = jnp.tensordot(b, stages, axes=1)
+    return z + eps * acc

@@ -1,0 +1,66 @@
+"""Fused Runge-Kutta stage combination kernel: z + eps * sum_i b_i r_i.
+
+The final line of eq. (3): after the p stage derivatives r_i are computed
+the solver combines them with the tableau weights b. For p stages this is
+p fused multiply-adds per element; doing it in one VPU pass reads each
+stage once instead of materialising p-1 partial sums in HBM.
+
+The stage count p is a compile-time constant (it is part of the solver
+identity, like the step size), so the combination loop is unrolled inside
+the kernel body.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import rk_combine_ref
+
+
+def _rk_combine_kernel(z_ref, stages_ref, o_ref, *, b, eps):
+    acc = z_ref[...]
+    for i, bi in enumerate(b):  # p is static: unrolled FMA chain
+        if bi != 0.0:
+            acc = acc + (eps * bi) * stages_ref[i, :]
+    o_ref[...] = acc
+
+
+def _pick_block(dim: int, target: int) -> int:
+    blk = min(dim, target)
+    while dim % blk != 0:
+        blk -= 1
+    return blk
+
+
+def rk_combine(z, stages, b, eps):
+    """z + eps * Σ_i b_i stages_i (tableau output combination).
+
+    z: state, stages: (p, *z.shape), b: tuple/list of p python floats,
+    eps: python float. b and eps are baked at trace time.
+    """
+    b = tuple(float(x) for x in b)
+    eps = float(eps)
+    p = stages.shape[0]
+    assert p == len(b), (p, b)
+    shape = z.shape
+    flat = z.size
+    if flat < 1024:
+        return rk_combine_ref(z, stages, jnp.array(b, jnp.float32), eps)
+
+    blk = _pick_block(flat, 1024)
+    grid = (flat // blk,)
+    kernel = functools.partial(_rk_combine_kernel, b=b, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((p, blk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((flat,), jnp.float32),
+        interpret=True,
+    )(z.reshape(flat), stages.reshape(p, flat))
+    return out.reshape(shape)

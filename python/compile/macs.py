@@ -1,0 +1,56 @@
+"""Analytic multiply-accumulate (MAC) cost model.
+
+The paper reports algorithmic complexity in MACs (§4.1) because NFE alone
+ignores the hypersolver overhead MAC_g. These counts are *per sample* (batch
+size excluded) and are exported to the manifest so the rust coordinator and
+benches account costs identically to the python layer.
+
+Totals for a solve: fixed p-stage solver over K steps costs p·K·MAC_f;
+a hypersolved variant adds K·MAC_g (one g_ω evaluation per step — eq. §6's
+relative overhead O_r = 1 + MAC_g / (p·MAC_f)).
+"""
+
+from typing import Dict, List, Sequence
+
+
+def linear_macs(n_in: int, n_out: int) -> int:
+    return n_in * n_out
+
+
+def mlp_macs(sizes: Sequence[int]) -> int:
+    return sum(a * b for a, b in zip(sizes[:-1], sizes[1:]))
+
+
+def conv_macs(c_in: int, c_out: int, ksize: int, hw: int) -> int:
+    return c_in * c_out * ksize * ksize * hw * hw
+
+
+def mlp_field_macs(state_dim: int, hidden: Sequence[int], feat_dim: int) -> int:
+    return mlp_macs([state_dim + feat_dim, *hidden, state_dim])
+
+
+def hyper_mlp_macs(state_dim: int, hidden: Sequence[int]) -> int:
+    return mlp_macs([2 * state_dim + 2, *hidden, state_dim])
+
+
+def conv_field_macs(aug_ch: int, hidden_ch: int, hw: int) -> int:
+    return (
+        conv_macs(aug_ch + 1, hidden_ch, 3, hw)
+        + conv_macs(hidden_ch + 1, hidden_ch, 3, hw)
+        + conv_macs(hidden_ch, aug_ch, 3, hw)
+    )
+
+
+def hyper_cnn_macs(aug_ch: int, hidden_ch: int, hw: int) -> int:
+    return conv_macs(2 * aug_ch + 1, hidden_ch, 3, hw) + conv_macs(
+        hidden_ch, aug_ch, 3, hw
+    )
+
+
+def solve_macs(mac_f: int, mac_g: int, stages: int, steps: int,
+               hyper: bool) -> int:
+    """Total MACs of one fixed-step solve (per sample)."""
+    total = stages * steps * mac_f
+    if hyper:
+        total += steps * mac_g
+    return total

@@ -1,0 +1,1 @@
+"""Benchmark tasks: CNF density estimation, image classification, tracking."""

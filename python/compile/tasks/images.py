@@ -1,0 +1,267 @@
+"""Image classification with convolutional Neural ODEs (paper §4.1).
+
+Substitution (DESIGN.md §3): MNIST/CIFAR10 are replaced by procedurally
+generated datasets — the offline image has no dataset downloads, and the
+paper's claims are about ODE-solution accuracy vs compute, not image
+content. Classes are parametric stroke patterns (grayscale, "smnist") and
+colored textured strokes ("scifar"), 16×16, 10 classes, with per-sample
+jitter/noise so the classification task is non-trivial.
+
+Model shape follows appendix C.2 at CPU-friendly widths: input-layer
+augmentation (conv in→aug), DepthCat conv field, conv+linear head. The
+HyperEuler g_ω is the appendix's 2-layer PReLU CNN taking cat(z, f(z), s).
+"""
+
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import fields as F
+from compile import solvers as S
+
+# CPU-budget widths (paper: 28×28/32×32, aug 12/8, hidden 64; see DESIGN.md
+# §3 — the MAC_g/MAC_f ratio ≈ 0.5 of the paper is preserved).
+HW = 16
+N_CLASSES = 10
+AUG_CH = 6
+HIDDEN_CH = 16
+HYPER_CH = 16
+S_SPAN = (0.0, 1.0)
+
+DATASETS = {"smnist": 1, "scifar": 3}  # name -> channels
+
+
+# ---------------------------------------------------------------------------
+# Synthetic dataset
+# ---------------------------------------------------------------------------
+
+
+def _render_stroke(c: int, rng: np.random.Generator) -> np.ndarray:
+    """Render one 16×16 grayscale sample of class c.
+
+    Class identity = (start angle, curvature, n_lobes) of a parametric
+    curve; gaussian bumps are splatted along it. Per-sample jitter: center
+    shift, rotation, amplitude noise.
+    """
+    t = np.linspace(0.0, 1.0, 24)
+    ang0 = 2 * np.pi * c / N_CLASSES + rng.normal(scale=0.1)
+    curv = 2.0 + 1.5 * ((c * 7) % N_CLASSES) / N_CLASSES
+    lobes = 1 + (c % 3)
+    r = 0.25 + 0.18 * np.sin(lobes * 2 * np.pi * t)
+    ang = ang0 + curv * t
+    cx = 0.5 + 0.06 * rng.normal()
+    cy = 0.5 + 0.06 * rng.normal()
+    px = cx + r * np.cos(ang)
+    py = cy + r * np.sin(ang)
+    ys, xs = np.meshgrid(
+        np.linspace(0, 1, HW), np.linspace(0, 1, HW), indexing="ij"
+    )
+    img = np.zeros((HW, HW))
+    sig2 = 2 * (0.045**2)
+    for x, y in zip(px, py):
+        img += np.exp(-((xs - x) ** 2 + (ys - y) ** 2) / sig2)
+    img = img / (img.max() + 1e-6)
+    img += rng.normal(scale=0.05, size=img.shape)
+    return img.astype(np.float32)
+
+
+def make_dataset(
+    name: str, n: int, rng: np.random.Generator
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(images NCHW f32, labels int32). 'scifar' adds class-coded color +
+    background texture over the stroke pattern."""
+    ch = DATASETS[name]
+    labels = rng.integers(0, N_CLASSES, n).astype(np.int32)
+    imgs = np.zeros((n, ch, HW, HW), np.float32)
+    for i, c in enumerate(labels):
+        g = _render_stroke(int(c), rng)
+        if ch == 1:
+            imgs[i, 0] = g
+        else:
+            # class-dependent color mixing + low-freq background texture
+            mix = np.array(
+                [
+                    0.3 + 0.7 * ((c * 3) % 10) / 10,
+                    0.3 + 0.7 * ((c * 7 + 2) % 10) / 10,
+                    0.3 + 0.7 * ((c * 5 + 5) % 10) / 10,
+                ]
+            )
+            ys, xs = np.meshgrid(
+                np.linspace(0, 2 * np.pi, HW),
+                np.linspace(0, 2 * np.pi, HW),
+                indexing="ij",
+            )
+            tex = 0.15 * np.sin(xs * (1 + c % 4) + ys * (1 + (c // 4)))
+            for k in range(3):
+                imgs[i, k] = mix[k] * g + tex + rng.normal(
+                    scale=0.05, size=g.shape
+                )
+    return imgs, labels
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, name: str) -> Dict:
+    return F.init_image_model(
+        key, DATASETS[name], AUG_CH, HIDDEN_CH, HW, N_CLASSES
+    )
+
+
+def field(params, s, z):
+    return F.conv_field_apply(params["field"], s, z)
+
+
+def classify(params, x_img, steps: int, tab: S.Tableau):
+    """Full forward pass: h_x -> odeint -> h_y (logits)."""
+    z0 = F.image_hx_apply(params, x_img)
+    zT = S.odeint_fixed(
+        lambda s, z: field(params, s, z), z0, S_SPAN, steps, tab
+    )
+    return F.image_hy_apply(params, zT)
+
+
+def classify_hyper(params, hparams, x_img, steps: int, tab: S.Tableau):
+    """Forward pass with a hypersolved ODE block."""
+    z0 = F.image_hx_apply(params, x_img)
+    g = lambda e, s, z, dz: F.hyper_cnn_apply(hparams, e, s, z, dz)
+    zT = S.odeint_hyper(
+        lambda s, z: field(params, s, z), g, z0, S_SPAN, steps, tab,
+        use_kernels=False,
+    )
+    return F.image_hy_apply(params, zT)
+
+
+def ce_loss(params, x_img, labels, steps: int, tab: S.Tableau):
+    logits = classify(params, x_img, steps, tab)
+    logz = jax.scipy.special.logsumexp(logits, axis=1)
+    ll = logits[jnp.arange(labels.shape[0]), labels] - logz
+    return -jnp.mean(ll)
+
+
+def accuracy(logits, labels) -> float:
+    return float(jnp.mean(jnp.argmax(logits, axis=1) == labels))
+
+
+def train_model(
+    key,
+    name: str,
+    iters: int = 250,
+    batch: int = 32,
+    lr: float = 3e-3,
+    seed: int = 0,
+    train_steps: int = 2,
+    train_tab: S.Tableau = S.MIDPOINT,
+):
+    """Train a conv Neural ODE classifier (midpoint, K=train_steps).
+
+    The paper trains with dopri5; a fixed low-order solver at training time
+    is a CPU budget substitution — the trained dynamics are equally 'real'
+    for the hypersolver experiments, which only need a trained f_θ.
+    """
+    params = init_model(key, name)
+    opt = F.adamw_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, opt, x, y, lr_now):
+        loss, grads = jax.value_and_grad(ce_loss)(
+            params, x, y, train_steps, train_tab
+        )
+        params, opt = F.adamw_update(grads, opt, params, lr_now)
+        return params, opt, loss
+
+    loss = jnp.float32(0.0)
+    for it in range(iters):
+        x, y = make_dataset(name, batch, rng)
+        lr_now = F.cosine_lr(jnp.int32(it), iters, lr, 1e-4)
+        params, opt, loss = step(
+            params, opt, jnp.asarray(x), jnp.asarray(y), lr_now
+        )
+    return params, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# Hypersolver fitting (residual fitting on K=10 dopri5 meshes — §4.1)
+# ---------------------------------------------------------------------------
+
+
+def init_hyper(key) -> Dict:
+    return F.init_hyper_cnn(key, AUG_CH, HYPER_CH)
+
+
+def residual_loss_mesh(hparams, params, mesh, s_grid, tab: S.Tableau):
+    """Mean ‖R_k − g_ω(...)‖ over a K-step mesh (eq. 6).
+
+    mesh: (K+1, B, C, H, W) dopri5 checkpoints of the conv state.
+    """
+    eps = float(s_grid[1] - s_grid[0])
+    f = lambda s, z: field(params, s, z)
+    total = 0.0
+    K = mesh.shape[0] - 1
+    for k in range(K):
+        zk, zk1 = mesh[k], mesh[k + 1]
+        s = float(s_grid[k])
+        direction = S.psi(f, tab, s, zk, eps)
+        resid = (zk1 - zk - eps * direction) / eps ** (tab.order + 1)
+        dz = f(s, zk)
+        pred = F.hyper_cnn_apply(hparams, eps, s, zk, dz)
+        d = (resid - pred).reshape(zk.shape[0], -1)
+        total = total + jnp.mean(jnp.linalg.norm(d, axis=1))
+    return total / K
+
+
+def fit_hyper(
+    key,
+    params,
+    name: str,
+    tab: S.Tableau = S.EULER,
+    mesh_k: int = 10,
+    iters: int = 500,
+    batch: int = 32,
+    lr: float = 1e-2,
+    swap_every: int = 10,
+    pretrain: int = 10,
+    seed: int = 1,
+    tol: float = 1e-4,
+):
+    """Two-phase residual fitting (paper §C.2).
+
+    Phase 1: ``pretrain`` iterations on a single batch's trajectories.
+    Phase 2: swap the residual-generating batch every ``swap_every``
+    iterations. Ground truth: dopri5 tol=1e-4 meshes with K=mesh_k.
+    Returns (hyper_params, final δ).
+    """
+    hparams = init_hyper(key)
+    opt = F.adamw_init(hparams)
+    rng = np.random.default_rng(seed)
+    s_grid = np.linspace(S_SPAN[0], S_SPAN[1], mesh_k + 1)
+    f = lambda s, z: field(params, s, z)
+
+    @jax.jit
+    def make_mesh(x):
+        z0 = F.image_hx_apply(params, x)
+        return S.dopri5_mesh(f, z0, list(s_grid), tol, tol)
+
+    @jax.jit
+    def step(hparams, opt, mesh, lr_now):
+        loss, grads = jax.value_and_grad(residual_loss_mesh)(
+            hparams, params, mesh, s_grid, tab
+        )
+        hparams, opt = F.adamw_update(grads, opt, hparams, lr_now)
+        return hparams, opt, loss
+
+    x, _ = make_dataset(name, batch, rng)
+    mesh = make_mesh(jnp.asarray(x))
+    loss = jnp.float32(0.0)
+    for it in range(iters):
+        if it >= pretrain and (it - pretrain) % swap_every == 0:
+            x, _ = make_dataset(name, batch, rng)
+            mesh = make_mesh(jnp.asarray(x))
+        lr_now = F.cosine_lr(jnp.int32(it), iters, lr, 5e-4)
+        hparams, opt, loss = step(hparams, opt, mesh, lr_now)
+    return hparams, float(loss)

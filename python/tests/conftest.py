@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run either from python/ (Makefile) or the repo root; make the
+# `compile` package importable in both cases.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,120 @@
+"""Field/net building blocks: shapes, activations, optimiser, schedules."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import fields as F
+
+
+def test_mlp_shapes():
+    key = jax.random.PRNGKey(0)
+    layers = F.init_mlp(key, [5, 16, 3])
+    x = jnp.ones((7, 5), jnp.float32)
+    y = F.mlp_apply(layers, x)
+    assert y.shape == (7, 3)
+
+
+def test_linear_apply_kernel_and_ref_agree():
+    key = jax.random.PRNGKey(1)
+    p = F.init_linear(key, 64, 64)
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 64), jnp.float32)
+    a = F.linear_apply(p, x, "tanh", use_kernels=True)
+    b = F.linear_apply(p, x, "tanh", use_kernels=False)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_time_features():
+    assert F.time_features(0.5, "concat").shape == (1,)
+    ff = F.time_features(0.25, "fourier3")
+    assert ff.shape == (6,)
+    np.testing.assert_allclose(ff[0], np.sin(2 * np.pi * 0.25), rtol=1e-5)
+    with pytest.raises(ValueError):
+        F.time_features(0.1, "poly")
+
+
+def test_mlp_field_apply_batches():
+    key = jax.random.PRNGKey(3)
+    params = F.init_mlp_field(key, 2, (32,), "fourier3")
+    z = jnp.ones((9, 2), jnp.float32)
+    out = F.mlp_field_apply(params, 0.3, z, "fourier3")
+    assert out.shape == (9, 2)
+    # time-dependence: different s must give different output
+    out2 = F.mlp_field_apply(params, 0.8, z, "fourier3")
+    assert not np.allclose(out, out2)
+
+
+def test_depth_cat():
+    x = jnp.zeros((2, 3, 4, 4), jnp.float32)
+    y = F.depth_cat(0.7, x)
+    assert y.shape == (2, 4, 4, 4)
+    np.testing.assert_allclose(y[:, 3], 0.7 * np.ones((2, 4, 4)))
+
+
+def test_conv_field_shapes():
+    key = jax.random.PRNGKey(4)
+    params = F.init_conv_field(key, 6, 16)
+    z = jnp.ones((2, 6, 16, 16), jnp.float32)
+    out = F.conv_field_apply(params, 0.5, z)
+    assert out.shape == z.shape
+
+
+def test_prelu_negative_slope():
+    p = {"alpha": jnp.array([0.5, 0.1], jnp.float32)}
+    x = jnp.array([[-2.0, -2.0]], jnp.float32)[:, :, None, None]
+    y = F.prelu_apply(p, x)
+    np.testing.assert_allclose(y[0, :, 0, 0], [-1.0, -0.2], rtol=1e-6)
+
+
+def test_image_model_end_to_end_shapes():
+    key = jax.random.PRNGKey(5)
+    params = F.init_image_model(key, 1, 6, 16, 16, 10)
+    x = jnp.ones((3, 1, 16, 16), jnp.float32)
+    z0 = F.image_hx_apply(params, x)
+    assert z0.shape == (3, 6, 16, 16)
+    logits = F.image_hy_apply(params, z0)
+    assert logits.shape == (3, 10)
+
+
+def test_hyper_mlp_apply():
+    key = jax.random.PRNGKey(6)
+    hp = F.init_hyper_mlp(key, 2, (16,))
+    z = jnp.ones((5, 2), jnp.float32)
+    out = F.hyper_mlp_apply(hp, 0.1, 0.0, z, z)
+    assert out.shape == (5, 2)
+
+
+def test_hyper_cnn_apply():
+    key = jax.random.PRNGKey(7)
+    hp = F.init_hyper_cnn(key, 6, 16)
+    z = jnp.ones((2, 6, 16, 16), jnp.float32)
+    out = F.hyper_cnn_apply(hp, 0.1, 0.0, z, z)
+    assert out.shape == z.shape
+
+
+def test_adamw_minimises_quadratic():
+    params = {"x": jnp.array([5.0, -3.0], jnp.float32)}
+    opt = F.adamw_init(params)
+    loss_fn = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(300):
+        grads = jax.grad(loss_fn)(params)
+        params, opt = F.adamw_update(grads, opt, params, lr=0.1)
+    assert float(loss_fn(params)) < 1e-3
+
+
+def test_adamw_weight_decay_shrinks_params():
+    params = {"x": jnp.array([1.0], jnp.float32)}
+    opt = F.adamw_init(params)
+    zero = {"x": jnp.array([0.0], jnp.float32)}
+    p1, _ = F.adamw_update(zero, opt, params, lr=1.0, weight_decay=0.1)
+    assert float(p1["x"][0]) < 1.0
+
+
+def test_cosine_lr_endpoints():
+    lr0 = float(F.cosine_lr(jnp.int32(0), 100, 1e-2, 1e-4))
+    lr_end = float(F.cosine_lr(jnp.int32(100), 100, 1e-2, 1e-4))
+    assert abs(lr0 - 1e-2) < 1e-8
+    assert abs(lr_end - 1e-4) < 1e-8
+    mid = float(F.cosine_lr(jnp.int32(50), 100, 1e-2, 1e-4))
+    assert 1e-4 < mid < 1e-2

@@ -1,0 +1,162 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE L1 correctness signal.
+
+hypothesis sweeps shapes (including non-multiples of the tile sizes, odd
+batch dims, the tiny-problem oracle-dispatch path) and checks allclose.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_linear_act, hyper_step, rk_combine
+from compile.kernels.ref import (
+    act,
+    hyper_step_ref,
+    linear_act_ref,
+    rk_combine_ref,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear_act
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([1, 7, 32, 64, 128, 200]),
+    k=st.sampled_from([2, 3, 16, 64, 67]),
+    n=st.sampled_from([1, 10, 64, 128]),
+    kind=st.sampled_from(["id", "tanh", "relu", "softplus"]),
+    seed=st.integers(0, 2**16),
+)
+def test_linear_act_matches_oracle(m, k, n, kind, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    out = fused_linear_act(x, w, b, kind)
+    ref = linear_act_ref(x, w, b, kind)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_linear_act_large_tiled_path():
+    # well above the oracle-dispatch threshold: exercises the real grid
+    rng = np.random.default_rng(0)
+    x, w, b = rand(rng, 256, 128), rand(rng, 128, 256), rand(rng, 256)
+    out = fused_linear_act(x, w, b, "tanh")
+    np.testing.assert_allclose(
+        out, linear_act_ref(x, w, b, "tanh"), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_linear_act_rejects_bad_shapes():
+    rng = np.random.default_rng(0)
+    with pytest.raises(AssertionError):
+        fused_linear_act(rand(rng, 4, 3), rand(rng, 5, 2), rand(rng, 2))
+
+
+def test_act_unknown_kind_raises():
+    with pytest.raises(ValueError):
+        act(jnp.zeros((2,)), "gelu")
+
+
+def test_linear_act_composes_under_jit():
+    # The kernels are INFERENCE-path ops (training uses the ref path:
+    # pallas-interpret bodies do not autodiff). They must still compose
+    # under an outer jit, which is how the AOT exporter lowers them.
+    rng = np.random.default_rng(1)
+    x, w, b = rand(rng, 64, 32), rand(rng, 32, 64), rand(rng, 64)
+
+    @jax.jit
+    def chain(x):
+        h = fused_linear_act(x, w, b, "tanh")
+        return fused_linear_act(h, w.T, b[:32], "id")
+
+    out = chain(x)
+    ref = linear_act_ref(
+        linear_act_ref(x, w, b, "tanh"), w.T, b[:32], "id"
+    )
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# hyper_step
+# ---------------------------------------------------------------------------
+
+
+@given(
+    shape=st.sampled_from([(3,), (8, 2), (8, 512), (2, 6, 16, 16), (4, 1000)]),
+    eps=st.sampled_from([0.01, 0.1, 0.5, 1.0]),
+    order=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_hyper_step_matches_oracle(shape, eps, order, seed):
+    rng = np.random.default_rng(seed)
+    z, psi, g = rand(rng, *shape), rand(rng, *shape), rand(rng, *shape)
+    out = hyper_step(z, psi, g, eps, order)
+    ref = hyper_step_ref(z, psi, g, eps, order)
+    assert out.shape == shape
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_hyper_step_zero_g_is_base_update():
+    rng = np.random.default_rng(3)
+    z, psi = rand(rng, 16, 128), rand(rng, 16, 128)
+    out = hyper_step(z, psi, jnp.zeros_like(z), 0.25, 2)
+    np.testing.assert_allclose(out, z + 0.25 * psi, rtol=1e-6)
+
+
+def test_hyper_step_order_scaling():
+    # the correction term must scale as eps^{p+1}
+    rng = np.random.default_rng(4)
+    z = jnp.zeros((4, 512), jnp.float32)
+    psi = jnp.zeros_like(z)
+    g = rand(rng, 4, 512)
+    for p in (1, 2, 4):
+        out = hyper_step(z, psi, g, 0.5, p)
+        np.testing.assert_allclose(out, (0.5 ** (p + 1)) * g, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rk_combine
+# ---------------------------------------------------------------------------
+
+
+@given(
+    shape=st.sampled_from([(5,), (8, 64), (16, 256), (2, 6, 8, 8)]),
+    p=st.integers(1, 7),
+    eps=st.sampled_from([0.05, 0.2, 1.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_rk_combine_matches_oracle(shape, p, eps, seed):
+    rng = np.random.default_rng(seed)
+    z = rand(rng, *shape)
+    stages = rand(rng, p, *shape)
+    b = rng.normal(size=p).tolist()
+    out = rk_combine(z, stages, b, eps)
+    ref = rk_combine_ref(z, stages, jnp.array(b, jnp.float32), eps)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_rk_combine_euler_weights():
+    rng = np.random.default_rng(5)
+    z = rand(rng, 8, 256)
+    stages = rand(rng, 1, 8, 256)
+    out = rk_combine(z, stages, [1.0], 0.1)
+    np.testing.assert_allclose(out, z + 0.1 * stages[0], rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_rk_combine_zero_weights_identity():
+    rng = np.random.default_rng(6)
+    z = rand(rng, 8, 256)
+    stages = rand(rng, 3, 8, 256)
+    out = rk_combine(z, stages, [0.0, 0.0, 0.0], 0.7)
+    np.testing.assert_allclose(out, z, rtol=1e-6)

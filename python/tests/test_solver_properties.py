@@ -1,0 +1,90 @@
+"""hypothesis property tests over the JAX solver layer (mirrors the rust
+`properties` suite so both language stacks carry the same invariants)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import solvers as S
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+A = jnp.array([[0.0, 1.0], [-1.0, 0.0]], jnp.float32)
+rot = lambda s, z: z @ A.T
+
+
+def rot_exact(z0, s):
+    c, si = np.cos(s), np.sin(s)
+    R = jnp.asarray(np.array([[c, -si], [si, c]]), jnp.float32)
+    return z0 @ R.T
+
+
+@given(
+    x=st.floats(-2, 2), y=st.floats(-2, 2),
+    name=st.sampled_from(["euler", "midpoint", "heun", "rk4", "alpha0.4"]),
+)
+def test_flow_composition(x, y, name):
+    """One solve over [0,1] equals two half-solves at matched meshes."""
+    z0 = jnp.array([[x, y]], jnp.float32)
+    tab = S.solver_by_name(name)
+    whole = S.odeint_fixed(rot, z0, (0.0, 1.0), 8, tab)
+    half = S.odeint_fixed(rot, z0, (0.0, 0.5), 4, tab)
+    rest = S.odeint_fixed(rot, half, (0.5, 1.0), 4, tab)
+    np.testing.assert_allclose(whole, rest, atol=1e-5)
+
+
+@given(x=st.floats(-2, 2), y=st.floats(0.1, 2))
+def test_rk4_preserves_rotation_norm(x, y):
+    z0 = jnp.array([[x, y]], jnp.float32)
+    z1 = S.odeint_fixed(rot, z0, (0.0, 1.0), 32, S.RK4)
+    assert abs(
+        float(jnp.linalg.norm(z1)) - float(jnp.linalg.norm(z0))
+    ) < 1e-4 * (1 + float(jnp.linalg.norm(z0)))
+
+
+@given(omega=st.floats(0.5, 4.0))
+def test_dopri5_matches_exact_rotation(omega):
+    f = lambda s, z: omega * (z @ A.T)
+    z0 = jnp.array([[1.0, 0.0]], jnp.float32)
+    zT, nfe = S.odeint_dopri5(f, z0, (0.0, 1.0), 1e-6, 1e-6)
+    exact = rot_exact(z0, -omega)  # clockwise by omega
+    np.testing.assert_allclose(zT, exact, atol=1e-4)
+    assert int(nfe) % 7 == 0
+
+
+@given(k=st.integers(2, 16))
+def test_trajectory_endpoint_consistency(k):
+    z0 = jnp.array([[0.7, -0.3]], jnp.float32)
+    traj = S.odeint_fixed(rot, z0, (0.0, 1.0), int(k), S.HEUN,
+                          return_traj=True)
+    direct = S.odeint_fixed(rot, z0, (0.0, 1.0), int(k), S.HEUN)
+    assert traj.shape[0] == k + 1
+    np.testing.assert_allclose(traj[-1], direct, rtol=1e-6)
+
+
+@given(
+    batch=st.integers(1, 8),
+    name=st.sampled_from(["euler", "heun", "rk4"]),
+)
+def test_batch_independence(batch, name):
+    """Solving a batch together equals solving each sample alone — no
+    cross-sample leakage in the vectorised solvers."""
+    rng = np.random.default_rng(batch)
+    z0 = jnp.asarray(rng.normal(size=(batch, 2)), jnp.float32)
+    tab = S.solver_by_name(name)
+    together = S.odeint_fixed(rot, z0, (0.0, 1.0), 6, tab)
+    for i in range(batch):
+        alone = S.odeint_fixed(rot, z0[i : i + 1], (0.0, 1.0), 6, tab)
+        np.testing.assert_allclose(together[i : i + 1], alone, atol=1e-6)
+
+
+@given(alpha=st.floats(0.25, 1.0))
+def test_hyper_g_zero_reduces_to_base_alpha_family(alpha):
+    z0 = jnp.array([[0.5, 0.5]], jnp.float32)
+    tab = S.alpha_tableau(float(alpha))
+    g0 = lambda e, s, z, dz: jnp.zeros_like(z)
+    zh = S.odeint_hyper(rot, g0, z0, (0.0, 1.0), 5, tab, use_kernels=False)
+    zb = S.odeint_fixed(rot, z0, (0.0, 1.0), 5, tab)
+    np.testing.assert_allclose(zh, zb, rtol=1e-6)

@@ -1,0 +1,188 @@
+"""Task-level smoke + invariants: data generators, losses, short training."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import fields as F
+from compile import solvers as S
+from compile.tasks import cnf as C
+from compile.tasks import images as I
+from compile.tasks import tracking as T
+
+
+# ---------------------------------------------------------------------------
+# CNF
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", C.DENSITIES)
+def test_density_samplers(name):
+    rng = np.random.default_rng(0)
+    x = C.sample_density(name, 500, rng)
+    assert x.shape == (500, 2) and x.dtype == np.float32
+    assert np.isfinite(x).all()
+    assert np.abs(x).max() < 10.0
+
+
+def test_density_sampler_deterministic():
+    a = C.sample_density("pinwheel", 100, np.random.default_rng(7))
+    b = C.sample_density("pinwheel", 100, np.random.default_rng(7))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_density_unknown_raises():
+    with pytest.raises(KeyError):
+        C.sample_density("two_moons", 10, np.random.default_rng(0))
+
+
+def test_aug_field_trace_matches_autodiff():
+    key = jax.random.PRNGKey(0)
+    params = C.init_cnf(key)
+    z = jax.random.normal(jax.random.PRNGKey(1), (4, 2), jnp.float32)
+    u = jnp.concatenate([z, jnp.zeros((4, 1), jnp.float32)], axis=1)
+    du = C.aug_field(params, 0.3, u)
+    # check the trace channel against a full jacobian
+    def single(zi):
+        return C.cnf_field(params, 0.3, zi[None])[0]
+
+    for i in range(4):
+        J = jax.jacrev(single)(z[i])
+        np.testing.assert_allclose(du[i, 2], -jnp.trace(J), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_cnf_nll_finite_and_training_reduces_it():
+    key = jax.random.PRNGKey(0)
+    params, _ = C.train_cnf(key, "rings", iters=2, batch=64)
+    x = jnp.asarray(C.sample_density("rings", 64, np.random.default_rng(3)))
+    before = float(C.nll_loss(params, x))
+    params2, _ = C.train_cnf(key, "rings", iters=60, batch=64)
+    after = float(C.nll_loss(params2, x))
+    assert np.isfinite(before) and np.isfinite(after)
+    assert after < before
+
+
+def test_hyperheun_residual_loss_positive():
+    key = jax.random.PRNGKey(0)
+    params = C.init_cnf(key)
+    hp = C.init_hyperheun(jax.random.PRNGKey(1))
+    z0 = jax.random.normal(jax.random.PRNGKey(2), (16, 2), jnp.float32)
+    f = lambda s, z: C.cnf_field(params, s, z)
+    z1, _ = S.odeint_dopri5(f, z0, C.S_SPAN, 1e-5, 1e-5)
+    loss = float(C.residual_loss(hp, params, z0, z1, S.HEUN))
+    assert np.isfinite(loss) and loss > 0
+
+
+def test_fit_hyperheun_reduces_residual():
+    key = jax.random.PRNGKey(0)
+    params, _ = C.train_cnf(key, "rings", iters=30, batch=64)
+    _, d_short = C.fit_hyperheun(jax.random.PRNGKey(1), params, iters=5)
+    _, d_long = C.fit_hyperheun(jax.random.PRNGKey(1), params, iters=150)
+    assert d_long < d_short
+
+
+# ---------------------------------------------------------------------------
+# Images
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(I.DATASETS))
+def test_image_dataset(name):
+    rng = np.random.default_rng(0)
+    x, y = I.make_dataset(name, 40, rng)
+    assert x.shape == (40, I.DATASETS[name], I.HW, I.HW)
+    assert y.shape == (40,) and y.min() >= 0 and y.max() < I.N_CLASSES
+    assert np.isfinite(x).all()
+
+
+def test_image_dataset_classes_distinguishable():
+    # class templates must differ: mean intra-class distance < inter-class
+    rng = np.random.default_rng(1)
+    xs = []
+    for c in range(3):
+        imgs = np.stack(
+            [I._render_stroke(c, rng) for _ in range(8)]
+        ).reshape(8, -1)
+        xs.append(imgs)
+    intra = np.mean(
+        [np.linalg.norm(x - x.mean(0), axis=1).mean() for x in xs]
+    )
+    inter = np.mean(
+        [
+            np.linalg.norm(xs[i].mean(0) - xs[j].mean(0))
+            for i in range(3)
+            for j in range(i + 1, 3)
+        ]
+    )
+    assert inter > intra, (inter, intra)
+
+
+def test_image_classify_shapes():
+    params = I.init_model(jax.random.PRNGKey(0), "smnist")
+    x = jnp.ones((4, 1, I.HW, I.HW), jnp.float32)
+    logits = I.classify(params, x, 2, S.MIDPOINT)
+    assert logits.shape == (4, I.N_CLASSES)
+    hp = I.init_hyper(jax.random.PRNGKey(1))
+    logits_h = I.classify_hyper(params, hp, x, 2, S.EULER)
+    assert logits_h.shape == (4, I.N_CLASSES)
+
+
+def test_image_training_improves_accuracy():
+    params, _ = I.train_model(jax.random.PRNGKey(0), "smnist", iters=60,
+                              batch=32)
+    x, y = I.make_dataset("smnist", 128, np.random.default_rng(9))
+    acc = I.accuracy(I.classify(params, jnp.asarray(x), 2, S.MIDPOINT),
+                     jnp.asarray(y))
+    assert acc > 0.5, acc  # 10 classes: chance is 0.1
+
+
+def test_residual_loss_mesh_runs():
+    params = I.init_model(jax.random.PRNGKey(0), "smnist")
+    hp = I.init_hyper(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    x, _ = I.make_dataset("smnist", 4, rng)
+    z0 = F.image_hx_apply(params, jnp.asarray(x))
+    grid = np.linspace(0, 1, 4)
+    f = lambda s, z: I.field(params, s, z)
+    mesh = S.dopri5_mesh(f, z0, list(grid), 1e-3, 1e-3)
+    loss = float(I.residual_loss_mesh(hp, params, mesh, grid, S.EULER))
+    assert np.isfinite(loss) and loss > 0
+
+
+# ---------------------------------------------------------------------------
+# Tracking
+# ---------------------------------------------------------------------------
+
+
+def test_beta_periodic():
+    np.testing.assert_allclose(T.beta(0.0), T.beta(1.0), atol=1e-6)
+    assert T.beta(jnp.array([0.0, 0.5])).shape == (2, 2)
+
+
+def test_tracking_training_reduces_loss():
+    p0 = T.init_field(jax.random.PRNGKey(0))
+    z0 = jnp.asarray(
+        np.asarray(T.beta(0.0))[None] + 0.1 * np.random.default_rng(0).normal(size=(8, 2)),
+        jnp.float32,
+    )
+    before = float(T.tracking_loss(p0, z0))
+    params, _ = T.train_tracker(jax.random.PRNGKey(0), iters=80, batch=32)
+    after = float(T.tracking_loss(params, z0))
+    assert after < before
+
+
+def test_trajectory_fitting_reduces_global_error():
+    params, _ = T.train_tracker(jax.random.PRNGKey(0), iters=60, batch=32)
+    hp0 = T.init_hyper(jax.random.PRNGKey(5))
+    hp, _ = T.fit_hyper(jax.random.PRNGKey(5), params, iters=120, batch=32)
+    z0 = jnp.asarray(
+        np.asarray(T.beta(0.0))[None] + 0.3 * np.random.default_rng(1).normal(size=(16, 2)),
+        jnp.float32,
+    )
+    f = lambda s, z: T.field(params, s, z)
+    truth = S.dopri5_mesh(f, z0, list(np.linspace(0, 1, 11)), 1e-6, 1e-6)
+    err_before = float(T.trajectory_loss(hp0, params, z0, truth, 10))
+    err_after = float(T.trajectory_loss(hp, params, z0, truth, 10))
+    assert err_after < err_before

@@ -1,0 +1,96 @@
+//! Ablation (paper §6) — beyond fixed-step explicit hypersolvers.
+//!
+//! Exercises the two §6 extensions on the trained CNF models:
+//!
+//! 1. **Adaptive hypersolver** — the ε^{p+1}·g_ω term doubles as a free
+//!    local-error estimate, so the hypersolved scheme can adapt its own
+//!    step size (`odeint_hyper_adaptive`). Compared against dopri5 and
+//!    fixed-K hypersolving on NFE and terminal MAPE.
+//! 2. **Predictor-corrector** — Adams-Bashforth-Moulton with the trained
+//!    HyperHeun net correcting the predictor, vs plain ABM and AB2.
+
+use hypersolvers::metrics::mape;
+use hypersolvers::nn::CnfModel;
+use hypersolvers::solvers::{
+    dopri5, odeint_ab, odeint_abm, odeint_abm_plain, odeint_hyper,
+    odeint_hyper_adaptive, AbOrder, AdaptiveOpts, Tableau,
+};
+use hypersolvers::util::artifacts::{load_blob, require_manifest};
+use hypersolvers::util::benchkit::Table;
+
+fn main() {
+    let m = require_manifest();
+    let task = m.task("cnf_rings").unwrap();
+    let model = CnfModel::load(&m.weights_path(task)).unwrap();
+    let z0 = load_blob(&m, "cnf_rings", "z0");
+    let truth = load_blob(&m, "cnf_rings", "truth");
+
+    println!("Ablation §6.1 — adaptive hypersolver (trained HyperHeun, rings CNF)\n");
+    let mut t1 = Table::new(&["method", "NFE", "MAPE", "steps acc/rej"]);
+    let d5 = dopri5(&model.field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-4)).unwrap();
+    t1.row(&[
+        "dopri5(1e-4)".into(),
+        d5.nfe.to_string(),
+        format!("{:.4}", mape(&d5.z, &truth).unwrap()),
+        format!("{}/{}", d5.accepted, d5.rejected),
+    ]);
+    for k in [1usize, 2, 4] {
+        let z = odeint_hyper(
+            &model.field, &model.hyper, &z0, task.s_span, k, &Tableau::heun(),
+        )
+        .unwrap();
+        t1.row(&[
+            format!("hyperheun K={k} (fixed)"),
+            (2 * k).to_string(),
+            format!("{:.4}", mape(&z, &truth).unwrap()),
+            "-".into(),
+        ]);
+    }
+    for tol in [1e-2f32, 1e-3] {
+        let r = odeint_hyper_adaptive(
+            &model.field,
+            &model.hyper,
+            &z0,
+            task.s_span,
+            &Tableau::heun(),
+            &AdaptiveOpts::with_tol(tol),
+        )
+        .unwrap();
+        t1.row(&[
+            format!("hyperheun adaptive({tol:.0e})"),
+            r.nfe.to_string(),
+            format!("{:.4}", mape(&r.z, &truth).unwrap()),
+            format!("{}/{}", r.accepted, r.rejected),
+        ]);
+    }
+    t1.print();
+
+    println!("\nAblation §6.2 — predictor-corrector with hypersolver predictor\n");
+    let mut t2 = Table::new(&["method", "NFE/step", "K", "MAPE"]);
+    for k in [4usize, 8, 16] {
+        let ab2 = odeint_ab(&model.field, &z0, task.s_span, k, AbOrder::Two).unwrap();
+        let abm = odeint_abm_plain(&model.field, &z0, task.s_span, k).unwrap();
+        let abm_h = odeint_abm(
+            &model.field, &z0, task.s_span, k, Some(&model.hyper),
+        )
+        .unwrap();
+        t2.row(&[
+            "AB2".into(), "1".into(), k.to_string(),
+            format!("{:.4}", mape(&ab2, &truth).unwrap()),
+        ]);
+        t2.row(&[
+            "ABM (PECE)".into(), "2".into(), k.to_string(),
+            format!("{:.4}", mape(&abm, &truth).unwrap()),
+        ]);
+        t2.row(&[
+            "ABM + hyper predictor".into(), "2".into(), k.to_string(),
+            format!("{:.4}", mape(&abm_h, &truth).unwrap()),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\n(the HyperHeun net was trained for K=1 Heun residuals; its reuse \
+         inside other schemes is the paper's §6 proposal — gains concentrate \
+         at coarse K where its training regime applies)"
+    );
+}

@@ -1,0 +1,98 @@
+//! Fig. 2 — asymptotic complexity table.
+//!
+//! Regenerates the paper's complexity comparison empirically: for each
+//! solver, NFE per K steps and the fitted local-truncation-error order
+//! (slope of log error vs log ε) on the trained CNF field; for the
+//! hypersolver, the δ·ε^{p+1} scaling of Theorem 1 — its one-step error
+//! should sit roughly a factor δ below the base method's.
+//!
+//! Paper rows:  p-th order solver  O(pK) NFE, O(ε^{p+1}) local error;
+//!              p-th order hypersolver  O(pK)+K·g, O(δ ε^{p+1}).
+
+use hypersolvers::metrics::mean_l2;
+use hypersolvers::nn::CnfModel;
+use hypersolvers::solvers::{dopri5, hyper_step, odeint_fixed, AdaptiveOpts, Tableau};
+use hypersolvers::tensor::Tensor;
+use hypersolvers::util::artifacts::{load_blob, require_manifest};
+use hypersolvers::util::benchkit::{fmt_sci, Table};
+
+fn main() {
+    let m = require_manifest();
+    let task = m.task("cnf_rings").unwrap();
+    let model = CnfModel::load(&m.weights_path(task)).unwrap();
+    let z0 = load_blob(&m, "cnf_rings", "z0");
+
+    println!("Fig. 2 — NFE and local-error order (trained CNF field, rings)\n");
+    let mut table = Table::new(&[
+        "method", "NFE(K)", "local err eps=1/4", "local err eps=1/8",
+        "emp. order", "paper",
+    ]);
+
+    // exact one-step references from tight dopri5
+    let step_truth = |z: &Tensor, s0: f32, eps: f32| -> Tensor {
+        dopri5(&model.field, z, (s0, s0 + eps), &AdaptiveOpts::with_tol(1e-7))
+            .unwrap()
+            .z
+    };
+
+    let solvers = [
+        (Tableau::euler(), "O(eps^2)"),
+        (Tableau::midpoint(), "O(eps^3)"),
+        (Tableau::heun(), "O(eps^3)"),
+        (Tableau::rk4(), "O(eps^5)"),
+    ];
+    for (tab, paper) in &solvers {
+        let mut errs = Vec::new();
+        for eps in [0.25f32, 0.125] {
+            let truth = step_truth(&z0, 0.0, eps);
+            let one = odeint_fixed(&model.field, &z0, (0.0, eps), 1, tab).unwrap();
+            errs.push(mean_l2(&one, &truth).unwrap());
+        }
+        let order = (errs[0] / errs[1]).log2();
+        table.row(&[
+            tab.name.clone(),
+            format!("{}K", tab.stages()),
+            fmt_sci(errs[0]),
+            fmt_sci(errs[1]),
+            format!("{order:.2}"),
+            paper.to_string(),
+        ]);
+    }
+
+    // hypersolved heun: local error ≈ δ · (heun local error scale)
+    let tab = Tableau::heun();
+    let mut errs = Vec::new();
+    for eps in [0.25f32, 0.125] {
+        let truth = step_truth(&z0, 0.0, eps);
+        let one = hyper_step(&model.field, &model.hyper, &tab, 0.0, &z0, eps).unwrap();
+        errs.push(mean_l2(&one, &truth).unwrap());
+    }
+    let order = (errs[0] / errs[1]).log2();
+    table.row(&[
+        "hyperheun".into(),
+        "2K+g".into(),
+        fmt_sci(errs[0]),
+        fmt_sci(errs[1]),
+        format!("{order:.2}"),
+        "O(d.eps^3)".into(),
+    ]);
+
+    // adaptive row: NFE has no fixed bound; report measured
+    let r = dopri5(&model.field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-5)).unwrap();
+    table.row(&[
+        "dopri5(1e-5)".into(),
+        format!("{} (measured)", r.nfe),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "adaptive".into(),
+    ]);
+
+    table.print();
+    println!(
+        "\nhypersolver residual fit delta = {:.4} (manifest); \
+         relative overhead O_r = 1 + MAC_g/(p*MAC_f) = {:.3}",
+        task.delta,
+        hypersolvers::metrics::relative_overhead(task.mac_f, task.mac_g, 2),
+    );
+}

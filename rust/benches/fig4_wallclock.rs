@@ -1,0 +1,131 @@
+//! Fig. 4 — wall-clock speedup of fixed-step methods over dopri5 (image
+//! Neural ODE).
+//!
+//! Protocol (paper §4.1): each method runs the *minimum number of steps*
+//! that keeps test-accuracy loss vs dopri5 under 0.1%; wall-clock is the
+//! mean time to solve one test batch. Both paths are measured:
+//!   native  — the rust tensor stack (apples-to-apples across methods);
+//!   pjrt    — the fused AOT executables the coordinator actually serves.
+//!
+//! Paper claim to reproduce: HyperEuler ~8× faster than dopri5; Euler needs
+//! more steps than HyperEuler to reach the accuracy bar, so it lands slower.
+
+use hypersolvers::metrics::accuracy;
+use hypersolvers::nn::ImageModel;
+use hypersolvers::runtime::Executor;
+use hypersolvers::solvers::{
+    dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, Tableau,
+};
+use hypersolvers::util::artifacts::{load_blob, load_labels, require_manifest};
+use hypersolvers::util::benchkit::{Bench, Table};
+
+fn main() {
+    let m = require_manifest();
+    let ds = "img_smnist";
+    let task = m.task(ds).unwrap();
+    let model = ImageModel::load(&m.weights_path(task)).unwrap();
+    let z0 = load_blob(&m, ds, "z0");
+    let labels = load_labels(&m, ds, "y");
+    let truth = load_blob(&m, ds, "truth");
+    let acc_star = accuracy(&model.hy(&truth).unwrap(), &labels).unwrap();
+    println!("Fig. 4 — wall-clock vs dopri5 ({ds}), acc* = {acc_star:.4}");
+    println!("accuracy constraint: drop <= 0.1% (paper protocol)\n");
+
+    // find min K per method meeting the accuracy bar
+    let find_k = |tab: &Tableau, hyper: bool| -> Option<usize> {
+        for k in 1..=64usize {
+            let zt = if hyper {
+                odeint_hyper(&model.field, &model.hyper, &z0, task.s_span, k, tab)
+                    .unwrap()
+            } else {
+                odeint_fixed(&model.field, &z0, task.s_span, k, tab).unwrap()
+            };
+            let acc = accuracy(&model.hy(&zt).unwrap(), &labels).unwrap();
+            if acc_star - acc <= 0.001 {
+                return Some(k);
+            }
+        }
+        None
+    };
+
+    let bench = Bench::with_budget(400);
+    let mut table = Table::new(&[
+        "method", "min K", "NFE", "native ms/batch", "speedup vs dopri5",
+    ]);
+
+    // dopri5 baseline (native)
+    let opts = AdaptiveOpts::with_tol(1e-4);
+    let d5 = bench.run("dopri5", || {
+        let _ = dopri5(&model.field, &z0, task.s_span, &opts).unwrap();
+    });
+    let d5_nfe = dopri5(&model.field, &z0, task.s_span, &opts).unwrap().nfe;
+    table.row(&[
+        "dopri5(1e-4)".into(),
+        "-".into(),
+        d5_nfe.to_string(),
+        format!("{:.2}", d5.mean_ms()),
+        "1.0x".into(),
+    ]);
+
+    let methods: Vec<(&str, Tableau, bool)> = vec![
+        ("euler", Tableau::euler(), false),
+        ("midpoint", Tableau::midpoint(), false),
+        ("rk4", Tableau::rk4(), false),
+        ("hypereuler", Tableau::euler(), true),
+    ];
+    for (name, tab, hyper) in methods {
+        let Some(k) = find_k(&tab, hyper) else {
+            table.row(&[
+                name.into(), ">64".into(), "-".into(), "-".into(), "-".into(),
+            ]);
+            continue;
+        };
+        let mm = bench.run(name, || {
+            if hyper {
+                let _ = odeint_hyper(
+                    &model.field, &model.hyper, &z0, task.s_span, k, &tab,
+                )
+                .unwrap();
+            } else {
+                let _ = odeint_fixed(&model.field, &z0, task.s_span, k, &tab).unwrap();
+            }
+        });
+        let nfe = tab.stages() * k;
+        table.row(&[
+            name.into(),
+            k.to_string(),
+            nfe.to_string(),
+            format!("{:.2}", mm.mean_ms()),
+            format!("{:.1}x", d5.mean_ms() / mm.mean_ms()),
+        ]);
+    }
+    table.print();
+
+    // PJRT path: the fused executables the coordinator serves
+    println!("\nPJRT fused-executable path (batch of {}):", task.batch());
+    let exec = Executor::spawn().unwrap();
+    let h = exec.handle();
+    let mut t2 = Table::new(&["variant", "NFE", "pjrt ms/batch", "speedup"]);
+    let mut d5_ms = None;
+    for vname in ["dopri5", "rk4_k4", "euler_k8", "hypereuler_k2"] {
+        let Some(v) = task.variant(vname) else { continue };
+        h.load(vname, m.hlo_path(&v.hlo)).unwrap();
+        let input = z0.data().to_vec();
+        let shape = v.in_shape.clone();
+        let mm = bench.run(vname, || {
+            let _ = h.run(vname, input.clone(), &shape).unwrap();
+        });
+        if vname == "dopri5" {
+            d5_ms = Some(mm.mean_ms());
+        }
+        t2.row(&[
+            vname.into(),
+            v.nfe.to_string(),
+            format!("{:.2}", mm.mean_ms()),
+            d5_ms
+                .map(|d| format!("{:.1}x", d / mm.mean_ms()))
+                .unwrap_or("-".into()),
+        ]);
+    }
+    t2.print();
+}

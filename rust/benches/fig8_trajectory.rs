@@ -1,0 +1,112 @@
+//! Fig. 8 — trajectory tracking: global-truncation-error pareto under
+//! *trajectory fitting*.
+//!
+//! The tracking HyperEuler was trained by minimising the global error along
+//! the whole mesh (paper §3.2 / §C.1). This bench sweeps NFE for euler /
+//! midpoint / rk4 / HyperEuler and reports the mean global error E_K at the
+//! terminal mesh point plus the mean error along the trajectory against
+//! dopri5(1e-6) checkpoints.
+//!
+//! Paper claim: in the 10–25 NFE range HyperEuler beats midpoint and rk4.
+
+use hypersolvers::metrics::{mean_l2, pareto_front, ParetoPoint};
+use hypersolvers::nn::TrackingModel;
+use hypersolvers::solvers::{
+    odeint_fixed_traj, odeint_hyper_traj, Tableau,
+};
+use hypersolvers::tensor::Tensor;
+use hypersolvers::util::artifacts::{load_blob, require_manifest};
+use hypersolvers::util::benchkit::{fmt_sci, Table};
+
+fn main() {
+    let m = require_manifest();
+    let task = m.task("tracking").unwrap();
+    let model = TrackingModel::load(&m.weights_path(task)).unwrap();
+    let z0 = load_blob(&m, "tracking", "z0");
+    // dense dopri5 mesh exported by aot.py: (26, B, 2) checkpoints
+    let mesh = load_blob(&m, "tracking", "mesh");
+    let mesh_pts = mesh.shape()[0];
+    let b = mesh.shape()[1];
+    let d = mesh.shape()[2];
+    let mesh_at = |i: usize| -> Tensor {
+        Tensor::new(&[b, d], mesh.data()[i * b * d..(i + 1) * b * d].to_vec()).unwrap()
+    };
+
+    println!("Fig. 8 — tracking global error (trajectory-fitted HyperEuler)\n");
+    let mut table = Table::new(&[
+        "method", "K", "NFE", "terminal E_K", "mean traj error",
+    ]);
+    let mut points = Vec::new();
+
+    // K choices give the paper's 5–50 NFE x-axis; mesh has 25 segments so
+    // K must divide 25 for exact checkpoint comparison
+    let base: Vec<(Tableau, Vec<usize>)> = vec![
+        (Tableau::euler(), vec![5, 25]),
+        (Tableau::midpoint(), vec![5, 25]),
+        (Tableau::rk4(), vec![5]),
+    ];
+    let eval = |traj: &[Tensor]| -> (f64, f64) {
+        // trajectory points at mesh indices: traj has K+1 points over [0,1],
+        // mesh has 26 over [0,1] → compare where grids coincide
+        let k = traj.len() - 1;
+        let stride = (mesh_pts - 1) / k;
+        let mut total = 0.0;
+        for (i, z) in traj.iter().enumerate() {
+            total += mean_l2(z, &mesh_at(i * stride)).unwrap();
+        }
+        let terminal = mean_l2(traj.last().unwrap(), &mesh_at(mesh_pts - 1)).unwrap();
+        (terminal, total / traj.len() as f64)
+    };
+
+    for (tab, ks) in &base {
+        for &k in ks {
+            let traj =
+                odeint_fixed_traj(&model.field, &z0, task.s_span, k, tab).unwrap();
+            let (term, avg) = eval(&traj);
+            let nfe = tab.stages() * k;
+            table.row(&[
+                tab.name.clone(),
+                k.to_string(),
+                nfe.to_string(),
+                fmt_sci(term),
+                fmt_sci(avg),
+            ]);
+            points.push(ParetoPoint {
+                label: format!("{}_k{k}", tab.name),
+                cost: nfe as f64,
+                error: term,
+            });
+        }
+    }
+    for &k in &[5usize, 25] {
+        let traj = odeint_hyper_traj(
+            &model.field, &model.hyper, &z0, task.s_span, k, &Tableau::euler(),
+        )
+        .unwrap();
+        let (term, avg) = eval(&traj);
+        table.row(&[
+            "hypereuler".into(),
+            k.to_string(),
+            k.to_string(),
+            fmt_sci(term),
+            fmt_sci(avg),
+        ]);
+        points.push(ParetoPoint {
+            label: format!("hypereuler_k{k}"),
+            cost: k as f64,
+            error: term,
+        });
+    }
+    table.print();
+
+    let front = pareto_front(&points);
+    println!(
+        "\nglobal-error pareto front: {}",
+        front
+            .iter()
+            .map(|p| p.label.as_str())
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    );
+    println!("paper: HyperEuler most efficient in the 10-25 NFE range");
+}

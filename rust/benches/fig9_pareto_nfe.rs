@@ -1,0 +1,76 @@
+//! Fig. 9 (appendix) — MAPE–NFE pareto fronts on both image datasets.
+//!
+//! The same sweep as Fig. 3 but with NFE on the cost axis (the appendix
+//! variant). Kept as its own bench so `cargo bench` regenerates every
+//! figure one-to-one; the dense K grid here is finer than Fig. 3's.
+
+use hypersolvers::metrics::{mape, pareto_front, ParetoPoint};
+use hypersolvers::nn::ImageModel;
+use hypersolvers::solvers::{odeint_fixed, odeint_hyper, Tableau};
+use hypersolvers::util::artifacts::{load_blob, require_manifest};
+use hypersolvers::util::benchkit::Table;
+
+fn main() {
+    let m = require_manifest();
+    for ds in ["img_smnist", "img_scifar"] {
+        let task = m.task(ds).unwrap();
+        let model = ImageModel::load(&m.weights_path(task)).unwrap();
+        let z0 = load_blob(&m, ds, "z0");
+        let truth = load_blob(&m, ds, "truth");
+
+        println!("\nFig. 9 — {ds} MAPE vs NFE");
+        let mut table = Table::new(&["NFE", "euler", "midpoint", "rk4", "hypereuler"]);
+        let mut points = Vec::new();
+
+        // a common NFE grid; for each method pick K so stages*K == NFE
+        for nfe in [1usize, 2, 4, 6, 8, 12, 16, 24, 32] {
+            let mut row = vec![nfe.to_string()];
+            for (tab, hyper) in [
+                (Tableau::euler(), false),
+                (Tableau::midpoint(), false),
+                (Tableau::rk4(), false),
+                (Tableau::euler(), true),
+            ] {
+                let name = if hyper { "hypereuler".to_string() } else { tab.name.clone() };
+                let stages = if hyper { 1 } else { tab.stages() };
+                if nfe % stages != 0 {
+                    row.push("-".into());
+                    continue;
+                }
+                let k = nfe / stages;
+                let zt = if hyper {
+                    odeint_hyper(&model.field, &model.hyper, &z0, task.s_span, k, &tab)
+                        .unwrap()
+                } else {
+                    odeint_fixed(&model.field, &z0, task.s_span, k, &tab).unwrap()
+                };
+                let mp = mape(&zt, &truth).unwrap();
+                row.push(format!("{mp:.4}"));
+                points.push(ParetoPoint {
+                    label: format!("{name}_nfe{nfe}"),
+                    cost: nfe as f64,
+                    error: mp,
+                });
+            }
+            table.row(&row);
+        }
+        table.print();
+        let front = pareto_front(&points);
+        println!(
+            "front: {}",
+            front
+                .iter()
+                .map(|p| p.label.as_str())
+                .collect::<Vec<_>>()
+                .join(" -> ")
+        );
+        let low_nfe_hyper = front
+            .iter()
+            .filter(|p| p.cost <= 8.0 && p.label.starts_with("hypereuler"))
+            .count();
+        println!(
+            "hypereuler holds {low_nfe_hyper} of the front points at NFE<=8 \
+             (paper: dominant at low NFE)"
+        );
+    }
+}

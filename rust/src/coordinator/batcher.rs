@@ -1,0 +1,195 @@
+//! Dynamic batching: per-(task, variant) queues flushed on batch-full or
+//! deadline.
+//!
+//! The exported executables have a fixed batch dimension B, so a batch is
+//! (a) full when B samples are queued, or (b) forced when the oldest queued
+//! request has waited `max_wait` — the standard dynamic batching policy of
+//! serving systems (vLLM/Triton style), applied at the ODE-solve level.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::{Request, Response};
+
+/// A request waiting in a queue, with its response channel.
+pub struct Pending {
+    pub req: Request,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Queue key: (task, variant) — requests routed to the same executable batch
+/// together regardless of their exact budgets.
+pub type QueueKey = (String, String);
+
+/// A batch ready for execution.
+pub struct ReadyBatch {
+    pub key: QueueKey,
+    pub items: Vec<Pending>,
+}
+
+/// Per-variant FIFO queues with deadline tracking. Not internally
+/// synchronised — the engine wraps it in a mutex and a condvar.
+pub struct Batcher {
+    queues: HashMap<QueueKey, VecDeque<Pending>>,
+    batch_sizes: HashMap<QueueKey, usize>,
+    max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_wait: Duration) -> Batcher {
+        Batcher {
+            queues: HashMap::new(),
+            batch_sizes: HashMap::new(),
+            max_wait,
+        }
+    }
+
+    /// Register the executable batch size for a queue (first sight).
+    pub fn ensure_queue(&mut self, key: &QueueKey, batch_size: usize) {
+        self.batch_sizes.entry(key.clone()).or_insert(batch_size);
+        self.queues.entry(key.clone()).or_default();
+    }
+
+    pub fn push(&mut self, key: &QueueKey, p: Pending) {
+        self.queues
+            .get_mut(key)
+            .expect("ensure_queue before push")
+            .push_back(p);
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queues.values().map(VecDeque::len).sum()
+    }
+
+    /// Pop every batch that is ready now (full, or oldest beyond deadline).
+    pub fn ready_batches(&mut self, now: Instant) -> Vec<ReadyBatch> {
+        let mut out = Vec::new();
+        for (key, q) in self.queues.iter_mut() {
+            let b = self.batch_sizes[key];
+            loop {
+                let flush = if q.len() >= b {
+                    true
+                } else if let Some(front) = q.front() {
+                    now.duration_since(front.req.t_submit) >= self.max_wait
+                } else {
+                    false
+                };
+                if !flush {
+                    break;
+                }
+                let take = q.len().min(b);
+                let items: Vec<Pending> = q.drain(..take).collect();
+                out.push(ReadyBatch {
+                    key: key.clone(),
+                    items,
+                });
+            }
+        }
+        out
+    }
+
+    /// Earliest deadline across all queues (None when idle) — drives the
+    /// engine's condvar timeout.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front().map(|p| p.req.t_submit + self.max_wait))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(id: u64, at: Instant) -> (Pending, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        let mut req = Request::new(id, "t", 0.1, vec![0.0]);
+        req.t_submit = at;
+        (Pending { req, reply: tx }, rx)
+    }
+
+    fn key() -> QueueKey {
+        ("t".to_string(), "v".to_string())
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        b.ensure_queue(&key(), 3);
+        let now = Instant::now();
+        for i in 0..7 {
+            let (p, _rx) = pending(i, now);
+            std::mem::forget(_rx);
+            b.push(&key(), p);
+        }
+        let ready = b.ready_batches(now);
+        // 7 queued, batch 3 → two full batches, one remains queued
+        assert_eq!(ready.len(), 2);
+        assert!(ready.iter().all(|r| r.items.len() == 3));
+        assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn flushes_partial_on_deadline() {
+        let mut b = Batcher::new(Duration::from_millis(5));
+        b.ensure_queue(&key(), 64);
+        let old = Instant::now() - Duration::from_millis(50);
+        let (p, _rx) = pending(0, old);
+        std::mem::forget(_rx);
+        b.push(&key(), p);
+        let ready = b.ready_batches(Instant::now());
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ready[0].items.len(), 1);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn no_flush_before_deadline() {
+        let mut b = Batcher::new(Duration::from_secs(1));
+        b.ensure_queue(&key(), 64);
+        let now = Instant::now();
+        let (p, _rx) = pending(0, now);
+        std::mem::forget(_rx);
+        b.push(&key(), p);
+        assert!(b.ready_batches(now).is_empty());
+        assert_eq!(b.queued(), 1);
+        let dl = b.next_deadline().unwrap();
+        assert!(dl > now);
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated_property() {
+        use crate::util::propkit::{check, gen_range, prop_assert};
+        check("conservation of requests", 30, |rng| {
+            let batch = gen_range(rng, 1, 8);
+            let n = gen_range(rng, 0, 40);
+            let mut b = Batcher::new(Duration::from_millis(1));
+            b.ensure_queue(&key(), batch);
+            let old = Instant::now() - Duration::from_secs(1);
+            for i in 0..n {
+                let (p, _rx) = pending(i as u64, old);
+                std::mem::forget(_rx);
+                b.push(&key(), p);
+            }
+            // everything is past deadline → all must flush exactly once
+            let ready = b.ready_batches(Instant::now());
+            let mut ids: Vec<u64> = ready
+                .iter()
+                .flat_map(|r| r.items.iter().map(|p| p.req.id))
+                .collect();
+            ids.sort();
+            prop_assert(
+                ids == (0..n as u64).collect::<Vec<_>>(),
+                format!("ids {ids:?}"),
+            )?;
+            prop_assert(b.queued() == 0, "queue should drain")?;
+            // batch size bound respected
+            prop_assert(
+                ready.iter().all(|r| r.items.len() <= batch),
+                "oversized batch",
+            )
+        });
+    }
+}

@@ -1,0 +1,287 @@
+//! The coordinator engine: policy → queues → dispatcher → PJRT executor.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batcher, Pending, QueueKey, ReadyBatch};
+use crate::coordinator::metrics::CoordinatorMetrics;
+use crate::coordinator::policy::{select_variant, Policy};
+use crate::coordinator::request::{Request, Response};
+use crate::runtime::exec::{Executor, ExecutorHandle};
+use crate::runtime::manifest::Manifest;
+use crate::{log_debug, log_info, Error, Result};
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// dynamic batching deadline
+    pub max_wait: Duration,
+    pub policy: Policy,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: crate::artifacts_dir(),
+            max_wait: Duration::from_millis(2),
+            policy: Policy::MinMacs,
+        }
+    }
+}
+
+struct Shared {
+    batcher: Mutex<Batcher>,
+    work: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The serving engine. `submit` is thread-safe; execution happens on the
+/// dispatcher + PJRT executor threads.
+pub struct Engine {
+    manifest: Arc<Manifest>,
+    shared: Arc<Shared>,
+    metrics: Arc<CoordinatorMetrics>,
+    next_id: AtomicU64,
+    dispatcher: Option<thread::JoinHandle<()>>,
+    // keep the executor alive (drops last: dispatcher uses its handle)
+    _executor: Executor,
+    config: EngineConfig,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig) -> Result<Engine> {
+        let manifest = Arc::new(Manifest::load(&config.artifacts_dir)?);
+        let executor = Executor::spawn()?;
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(config.max_wait)),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(CoordinatorMetrics::new());
+
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            let manifest = Arc::clone(&manifest);
+            let metrics = Arc::clone(&metrics);
+            let handle = executor.handle();
+            thread::Builder::new()
+                .name("hsolve-dispatcher".into())
+                .spawn(move || dispatcher_main(shared, manifest, metrics, handle))
+                .map_err(|e| Error::Coordinator(format!("spawn dispatcher: {e}")))?
+        };
+
+        log_info!(
+            "engine up: {} tasks, policy {:?}, max_wait {:?}",
+            manifest.tasks.len(),
+            config.policy,
+            config.max_wait
+        );
+        Ok(Engine {
+            manifest,
+            shared,
+            metrics,
+            next_id: AtomicU64::new(1),
+            dispatcher: Some(dispatcher),
+            _executor: executor,
+            config,
+        })
+    }
+
+    pub fn with_defaults() -> Result<Engine> {
+        Self::new(EngineConfig::default())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn metrics(&self) -> &CoordinatorMetrics {
+        &self.metrics
+    }
+
+    /// Submit one sample; returns the channel the response arrives on.
+    pub fn submit(
+        &self,
+        task: &str,
+        budget: f32,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Response>> {
+        let entry = self.manifest.task(task)?;
+        let sample_dim: usize = entry.state_shape[1..].iter().product();
+        if input.len() != sample_dim {
+            return Err(Error::Coordinator(format!(
+                "task {task}: sample has {} values, state wants {sample_dim}",
+                input.len()
+            )));
+        }
+        let variant = select_variant(entry, budget, self.config.policy)
+            .ok_or_else(|| Error::Coordinator(format!("task {task} has no variants")))?;
+        let key: QueueKey = (task.to_string(), variant.name.clone());
+        let id = self.next_id.fetch_add(1, Relaxed);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut b = self.shared.batcher.lock().unwrap();
+            b.ensure_queue(&key, entry.batch());
+            b.push(
+                &key,
+                Pending {
+                    req: Request::new(id, task, budget, input),
+                    reply: tx,
+                },
+            );
+        }
+        self.metrics.requests.fetch_add(1, Relaxed);
+        self.shared.work.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and wait (convenience for examples/benches).
+    pub fn infer(&self, task: &str, budget: f32, input: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(task, budget, input)?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("engine dropped response".into()))
+    }
+
+    /// Pre-compile the variants the policy can choose for `task`, so first
+    /// requests don't pay PJRT compilation.
+    pub fn warmup(&self, task: &str) -> Result<()> {
+        let entry = self.manifest.task(task)?;
+        let handle = self._executor.handle();
+        for v in &entry.variants {
+            let key = format!("{task}/{}", v.name);
+            handle.load(&key, self.manifest.hlo_path(&v.hlo))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Relaxed);
+        self.shared.work.notify_all();
+        if let Some(j) = self.dispatcher.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn dispatcher_main(
+    shared: Arc<Shared>,
+    manifest: Arc<Manifest>,
+    metrics: Arc<CoordinatorMetrics>,
+    exec: ExecutorHandle,
+) {
+    let mut loaded: HashSet<String> = HashSet::new();
+    loop {
+        // collect ready work under the lock, run it outside
+        let batches: Vec<ReadyBatch> = {
+            let mut b = shared.batcher.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Relaxed) {
+                    return;
+                }
+                let now = Instant::now();
+                let ready = b.ready_batches(now);
+                if !ready.is_empty() {
+                    break ready;
+                }
+                let timeout = b
+                    .next_deadline()
+                    .map(|dl| dl.saturating_duration_since(now))
+                    .unwrap_or(Duration::from_millis(50));
+                let (guard, _) = shared
+                    .work
+                    .wait_timeout(b, timeout.max(Duration::from_micros(100)))
+                    .unwrap();
+                b = guard;
+            }
+        };
+        for batch in batches {
+            run_batch(&manifest, &metrics, &exec, &mut loaded, batch);
+        }
+    }
+}
+
+fn run_batch(
+    manifest: &Manifest,
+    metrics: &CoordinatorMetrics,
+    exec: &ExecutorHandle,
+    loaded: &mut HashSet<String>,
+    batch: ReadyBatch,
+) {
+    let (task_name, variant_name) = &batch.key;
+    let entry = match manifest.task(task_name) {
+        Ok(e) => e,
+        Err(e) => return fail_batch(batch, &e.to_string()),
+    };
+    let variant = match entry.variant(variant_name) {
+        Some(v) => v.clone(),
+        None => return fail_batch(batch, "variant vanished"),
+    };
+    let key = format!("{task_name}/{variant_name}");
+    if !loaded.contains(&key) {
+        let t0 = Instant::now();
+        if let Err(e) = exec.load(&key, manifest.hlo_path(&variant.hlo)) {
+            return fail_batch(batch, &e.to_string());
+        }
+        log_info!("compiled {key} in {:?}", t0.elapsed());
+        loaded.insert(key.clone());
+    }
+
+    let b_cap = entry.batch();
+    let sample_dim: usize = variant.in_shape[1..].iter().product();
+    let out_dim: usize = variant.out_shape[1..].iter().product();
+    let real = batch.items.len();
+
+    // assemble the padded batch input
+    let mut input = vec![0.0f32; b_cap * sample_dim];
+    for (i, p) in batch.items.iter().enumerate() {
+        input[i * sample_dim..(i + 1) * sample_dim].copy_from_slice(&p.req.input);
+    }
+    let queue_start = Instant::now();
+    for p in &batch.items {
+        metrics
+            .queue_latency
+            .record(queue_start.duration_since(p.req.t_submit));
+    }
+
+    let t_exec = Instant::now();
+    let outputs = match exec.run(&key, input, &variant.in_shape) {
+        Ok(o) => o,
+        Err(e) => return fail_batch(batch, &e.to_string()),
+    };
+    let exec_time = t_exec.elapsed();
+    metrics.exec_latency.record(exec_time);
+
+    let z = &outputs[0];
+    let nfe = if variant.returns_nfe && outputs.len() > 1 {
+        outputs[1].first().copied().unwrap_or(0.0) as u64
+    } else {
+        variant.nfe
+    };
+    metrics.record_batch(real, b_cap, nfe, variant.macs);
+    log_debug!("batch {key}: {real}/{b_cap} samples in {exec_time:?}");
+
+    for (i, p) in batch.items.into_iter().enumerate() {
+        let latency = p.req.t_submit.elapsed();
+        metrics.total_latency.record(latency);
+        metrics.responses.fetch_add(1, Relaxed);
+        let _ = p.reply.send(Response {
+            id: p.req.id,
+            output: z[i * out_dim..(i + 1) * out_dim].to_vec(),
+            variant: variant.name.clone(),
+            mape: variant.mape,
+            nfe,
+            latency,
+            batch_fill: real,
+        });
+    }
+}
+
+fn fail_batch(batch: ReadyBatch, msg: &str) {
+    crate::log_error!("batch {:?} failed: {msg}", batch.key);
+    // drop the reply senders: receivers see a disconnect error
+}

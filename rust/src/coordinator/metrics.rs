@@ -1,0 +1,90 @@
+//! Coordinator observability: request/batch counters, latency histograms,
+//! NFE/MAC accounting. All atomics — the hot path never locks to record.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Default)]
+pub struct CoordinatorMetrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    /// padded (wasted) slots across executed batches
+    pub padded_slots: AtomicU64,
+    /// total NFEs spent (per-sample NFE × real samples)
+    pub nfe_total: AtomicU64,
+    /// total MACs spent (per-sample × real samples)
+    pub macs_total: AtomicU64,
+    pub queue_latency: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
+    pub total_latency: LatencyHistogram,
+}
+
+impl CoordinatorMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, real: usize, capacity: usize, nfe: u64, macs: u64) {
+        self.batches.fetch_add(1, Relaxed);
+        self.padded_slots
+            .fetch_add((capacity - real) as u64, Relaxed);
+        self.nfe_total.fetch_add(nfe * real as u64, Relaxed);
+        self.macs_total.fetch_add(macs * real as u64, Relaxed);
+    }
+
+    /// Mean batch fill ratio (1.0 = always full).
+    pub fn fill_ratio(&self) -> f64 {
+        let b = self.batches.load(Relaxed);
+        let pad = self.padded_slots.load(Relaxed);
+        let served = self.responses.load(Relaxed);
+        if served + pad == 0 || b == 0 {
+            return 1.0;
+        }
+        served as f64 / (served + pad) as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} fill={:.2} \
+             queue_p50={:.0}µs exec_p50={:.0}µs total_p50={:.0}µs total_p99={:.0}µs \
+             nfe_total={} gmacs_total={:.2}",
+            self.requests.load(Relaxed),
+            self.responses.load(Relaxed),
+            self.batches.load(Relaxed),
+            self.fill_ratio(),
+            self.queue_latency.percentile_us(50.0),
+            self.exec_latency.percentile_us(50.0),
+            self.total_latency.percentile_us(50.0),
+            self.total_latency.percentile_us(99.0),
+            self.nfe_total.load(Relaxed),
+            self.macs_total.load(Relaxed) as f64 / 1e9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = CoordinatorMetrics::new();
+        m.responses.fetch_add(6, Relaxed);
+        m.record_batch(3, 4, 2, 100);
+        m.record_batch(3, 3, 2, 100);
+        assert_eq!(m.batches.load(Relaxed), 2);
+        assert_eq!(m.padded_slots.load(Relaxed), 1);
+        assert_eq!(m.nfe_total.load(Relaxed), 12);
+        assert!((m.fill_ratio() - 6.0 / 7.0).abs() < 1e-9);
+        assert!(m.report().contains("batches=2"));
+    }
+
+    #[test]
+    fn empty_metrics_report() {
+        let m = CoordinatorMetrics::new();
+        assert_eq!(m.fill_ratio(), 1.0);
+        assert!(m.report().contains("requests=0"));
+    }
+}

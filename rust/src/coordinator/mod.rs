@@ -1,0 +1,30 @@
+//! The serving coordinator — the paper's accuracy/compute Pareto front made
+//! operational.
+//!
+//! Callers submit inference requests with an **error budget** (max terminal
+//! MAPE vs the dopri5 reference). The [`policy`] picks the cheapest
+//! `(solver, K)` variant whose *measured* error satisfies the budget — with
+//! hypersolved variants on the front, tight budgets resolve to a fraction of
+//! the NFEs classical solvers would need (Fig. 3/4 of the paper, served
+//! live). The [`batcher`] coalesces requests per chosen variant up to the
+//! exported batch size under a latency deadline, and the [`engine`] executes
+//! batches on the PJRT executor thread.
+//!
+//! ```text
+//! client ──submit──► Engine ──policy──► per-variant queues (batcher)
+//!                                           │ full batch or deadline
+//!                                           ▼
+//!                                    PJRT executor thread ──► responses
+//! ```
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod policy;
+pub mod request;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig};
+pub use metrics::CoordinatorMetrics;
+pub use policy::{select_variant, Policy};
+pub use request::{Request, Response};

@@ -1,0 +1,186 @@
+//! Variant selection: cheapest solver that satisfies the error budget.
+//!
+//! The manifest carries, for every exported `(solver, K)` variant, the
+//! terminal MAPE *measured at export time* against dopri5(1e-6) on a held
+//! eval batch. Selection is a lookup over that table — the pareto front the
+//! paper plots (Fig. 3) is exactly the lower envelope this policy walks.
+
+use crate::runtime::manifest::{TaskEntry, Variant};
+
+/// Cost axis the policy minimises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// analytic MACs per sample (the paper's complexity measure, §4.1)
+    MinMacs,
+    /// vector-field evaluations
+    MinNfe,
+}
+
+/// Pick the cheapest variant with `mape <= budget`.
+///
+/// Guarantees (property-tested):
+/// * if any variant satisfies the budget, the result satisfies it;
+/// * otherwise the most accurate variant is returned (graceful degrade);
+/// * the chosen cost is monotone non-increasing in `budget`.
+pub fn select_variant<'a>(
+    task: &'a TaskEntry,
+    budget: f32,
+    policy: Policy,
+) -> Option<&'a Variant> {
+    let cost = |v: &Variant| -> u64 {
+        match policy {
+            Policy::MinMacs => v.macs,
+            Policy::MinNfe => v.nfe,
+        }
+    };
+    let eligible: Vec<&Variant> = task
+        .variants
+        .iter()
+        .filter(|v| v.mape <= budget as f64)
+        .collect();
+    if eligible.is_empty() {
+        // nothing satisfies the budget: return the most accurate variant
+        return task.variants.iter().min_by(|a, b| {
+            a.mape
+                .partial_cmp(&b.mape)
+                .unwrap()
+                .then_with(|| cost(a).cmp(&cost(b)))
+        });
+    }
+    eligible.into_iter().min_by(|a, b| {
+        cost(a)
+            .cmp(&cost(b))
+            .then(a.mape.partial_cmp(&b.mape).unwrap())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Variant;
+    use crate::util::propkit::{check, gen_range, prop_assert};
+
+    fn variant(name: &str, macs: u64, nfe: u64, mape: f64) -> Variant {
+        Variant {
+            name: name.into(),
+            solver: name.into(),
+            k: 1,
+            hyper: name.starts_with("hyper"),
+            hlo: format!("{name}.hlo.txt"),
+            nfe,
+            macs,
+            mape,
+            acc_drop: None,
+            in_shape: vec![4, 2],
+            out_shape: vec![4, 2],
+            returns_nfe: false,
+        }
+    }
+
+    fn task(variants: Vec<Variant>) -> TaskEntry {
+        TaskEntry {
+            name: "t".into(),
+            kind: "cnf".into(),
+            state_shape: vec![4, 2],
+            s_span: (0.0, 1.0),
+            weights: "w.json".into(),
+            field_hlo: "f.hlo.txt".into(),
+            mac_f: 100,
+            mac_g: 50,
+            delta: 0.01,
+            hyper_base: "heun".into(),
+            truth_acc: None,
+            variants,
+            data: Default::default(),
+        }
+    }
+
+    fn sample_task() -> TaskEntry {
+        task(vec![
+            variant("euler_k1", 100, 1, 0.30),
+            variant("heun_k1", 200, 2, 0.12),
+            variant("hyperheun_k1", 250, 2, 0.04),
+            variant("rk4_k4", 1600, 16, 0.002),
+            variant("dopri5", 2800, 28, 0.0001),
+        ])
+    }
+
+    #[test]
+    fn picks_cheapest_satisfying() {
+        let t = sample_task();
+        let v = select_variant(&t, 0.5, Policy::MinMacs).unwrap();
+        assert_eq!(v.name, "euler_k1"); // everything qualifies → cheapest
+        let v = select_variant(&t, 0.05, Policy::MinMacs).unwrap();
+        assert_eq!(v.name, "hyperheun_k1"); // the hypersolver wins the mid range
+        let v = select_variant(&t, 0.001, Policy::MinMacs).unwrap();
+        assert_eq!(v.name, "dopri5");
+    }
+
+    #[test]
+    fn degrades_to_most_accurate() {
+        let t = sample_task();
+        let v = select_variant(&t, 1e-9, Policy::MinMacs).unwrap();
+        assert_eq!(v.name, "dopri5");
+    }
+
+    #[test]
+    fn empty_task_gives_none() {
+        let t = task(vec![]);
+        assert!(select_variant(&t, 0.1, Policy::MinMacs).is_none());
+    }
+
+    #[test]
+    fn budget_satisfaction_property() {
+        check("selected satisfies budget when feasible", 100, |rng| {
+            let n = gen_range(rng, 1, 8);
+            let vs: Vec<Variant> = (0..n)
+                .map(|i| {
+                    variant(
+                        &format!("v{i}"),
+                        gen_range(rng, 1, 1000) as u64,
+                        gen_range(rng, 1, 64) as u64,
+                        rng.uniform(),
+                    )
+                })
+                .collect();
+            let t = task(vs.clone());
+            let budget = rng.uniform() as f32;
+            let chosen = select_variant(&t, budget, Policy::MinNfe).unwrap();
+            let feasible = vs.iter().any(|v| v.mape <= budget as f64);
+            if feasible {
+                prop_assert(
+                    chosen.mape <= budget as f64,
+                    format!("chose {} with mape {} > {budget}", chosen.name, chosen.mape),
+                )?;
+                // and nothing cheaper is feasible
+                for v in &vs {
+                    if v.mape <= budget as f64 && v.nfe < chosen.nfe {
+                        return Err(format!(
+                            "{} (nfe {}) was feasible and cheaper",
+                            v.name, v.nfe
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_in_budget_property() {
+        check("cost non-increasing in budget", 50, |rng| {
+            let t = sample_task();
+            let mut b1 = rng.uniform() as f32;
+            let mut b2 = rng.uniform() as f32;
+            if b1 > b2 {
+                std::mem::swap(&mut b1, &mut b2);
+            }
+            let c1 = select_variant(&t, b1, Policy::MinMacs).unwrap().macs;
+            let c2 = select_variant(&t, b2, Policy::MinMacs).unwrap().macs;
+            prop_assert(
+                c2 <= c1,
+                format!("budget {b1}->{c1} macs but {b2}->{c2}"),
+            )
+        });
+    }
+}

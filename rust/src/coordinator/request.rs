@@ -1,0 +1,62 @@
+//! Request/response types of the serving surface.
+
+use std::time::Instant;
+
+/// One inference request: a single sample for `task`, plus the accuracy
+/// budget the caller is willing to tolerate.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// task name, e.g. "cnf_rings"
+    pub task: String,
+    /// maximum acceptable terminal MAPE vs the dopri5 reference;
+    /// `f32::INFINITY` means "cheapest available"
+    pub budget: f32,
+    /// one flattened sample (task state dims without the batch dim)
+    pub input: Vec<f32>,
+    /// enqueue timestamp (set by the engine)
+    pub t_submit: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, task: &str, budget: f32, input: Vec<f32>) -> Request {
+        Request {
+            id,
+            task: task.to_string(),
+            budget,
+            input,
+            t_submit: Instant::now(),
+        }
+    }
+}
+
+/// The coordinator's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// flattened output sample
+    pub output: Vec<f32>,
+    /// which variant served it
+    pub variant: String,
+    /// that variant's measured MAPE (the bound the policy enforced)
+    pub mape: f64,
+    /// NFEs spent on this sample's batch (per sample)
+    pub nfe: u64,
+    /// end-to-end latency
+    pub latency: std::time::Duration,
+    /// how many real samples shared the executed batch
+    pub batch_fill: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = Request::new(7, "cnf_rings", 0.05, vec![1.0, 2.0]);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.task, "cnf_rings");
+        assert!(r.t_submit.elapsed().as_secs() < 1);
+    }
+}

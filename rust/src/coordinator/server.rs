@@ -1,0 +1,157 @@
+//! TCP JSON-lines serving front end.
+//!
+//! Protocol (one JSON object per line, both directions):
+//!
+//! ```text
+//! → {"task": "cnf_rings", "budget": 0.05, "input": [0.1, -0.7]}
+//! ← {"ok": true, "variant": "hyperheun_k1", "mape": 0.042,
+//!    "latency_us": 812, "output": [...]}
+//! → {"cmd": "metrics"}
+//! ← {"ok": true, "report": "..."}
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use crate::coordinator::engine::Engine;
+use crate::util::json::{self, Value};
+use crate::{log_info, Result};
+
+/// Serve `engine` on `addr` (e.g. "127.0.0.1:7878"). Blocks forever; one
+/// thread per connection (connection counts here are test/bench scale).
+pub fn serve(engine: Arc<Engine>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    serve_listener(engine, listener)
+}
+
+/// Serve on an already-bound listener (lets tests bind port 0 and read the
+/// ephemeral port back before serving).
+pub fn serve_listener(engine: Arc<Engine>, listener: TcpListener) -> Result<()> {
+    log_info!("listening on {:?}", listener.local_addr());
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let engine = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(&engine, stream) {
+                crate::log_debug!("connection closed: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(engine, &line);
+        writer.write_all(json::to_string(&reply).as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    crate::log_debug!("peer {peer:?} disconnected");
+    Ok(())
+}
+
+/// Process one request line (exposed for tests — no socket needed).
+pub fn handle_line(engine: &Engine, line: &str) -> Value {
+    match handle_line_inner(engine, line) {
+        Ok(v) => v,
+        Err(e) => json::obj(vec![
+            ("ok", Value::Bool(false)),
+            ("error", json::s(&e.to_string())),
+        ]),
+    }
+}
+
+fn handle_line_inner(engine: &Engine, line: &str) -> Result<Value> {
+    let req = json::parse(line)?;
+    if let Some(cmd) = req.get("cmd").and_then(Value::as_str) {
+        return match cmd {
+            "metrics" => Ok(json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("report", json::s(&engine.metrics().report())),
+            ])),
+            "tasks" => Ok(Value::Obj(
+                [
+                    ("ok".to_string(), Value::Bool(true)),
+                    (
+                        "tasks".to_string(),
+                        Value::Arr(
+                            engine
+                                .manifest()
+                                .tasks
+                                .keys()
+                                .map(|k| json::s(k))
+                                .collect(),
+                        ),
+                    ),
+                ]
+                .into_iter()
+                .collect(),
+            )),
+            other => Err(crate::Error::Coordinator(format!(
+                "unknown cmd {other:?}"
+            ))),
+        };
+    }
+    let task = req
+        .req("task")?
+        .as_str()
+        .ok_or_else(|| crate::Error::Coordinator("task must be a string".into()))?
+        .to_string();
+    let budget = req
+        .get("budget")
+        .and_then(Value::as_f32)
+        .unwrap_or(f32::INFINITY);
+    let (input, _) = req.req("input")?.as_f32_tensor()?;
+    let resp = engine.infer(&task, budget, input)?;
+    Ok(json::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("id", json::num(resp.id as f64)),
+        ("variant", json::s(&resp.variant)),
+        ("mape", json::num(resp.mape)),
+        ("nfe", json::num(resp.nfe as f64)),
+        ("latency_us", json::num(resp.latency.as_micros() as f64)),
+        ("batch_fill", json::num(resp.batch_fill as f64)),
+        ("output", json::arr_f32(&resp.output)),
+    ]))
+}
+
+/// Minimal blocking client for examples and integration tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            writer: stream.try_clone()?,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    pub fn request(&mut self, v: &Value) -> Result<Value> {
+        self.writer
+            .write_all(json::to_string(v).as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(&line)
+    }
+
+    pub fn infer(&mut self, task: &str, budget: f32, input: &[f32]) -> Result<Value> {
+        self.request(&json::obj(vec![
+            ("task", json::s(task)),
+            ("budget", json::num(budget as f64)),
+            ("input", json::arr_f32(input)),
+        ]))
+    }
+}

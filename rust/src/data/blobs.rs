@@ -1,0 +1,100 @@
+//! Raw f32/i32 artifact blob loading (`artifacts/data/*.bin` + the shapes
+//! recorded in the manifest).
+
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// A loaded blob: data + shape.
+#[derive(Clone, Debug)]
+pub struct Blob {
+    pub shape: Vec<usize>,
+    pub f32_data: Vec<f32>,
+}
+
+impl Blob {
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        Tensor::new(&self.shape, self.f32_data.clone())
+    }
+}
+
+/// Load little-endian f32s and validate against the expected shape.
+pub fn load_f32(path: &Path, shape: &[usize]) -> Result<Tensor> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Other(format!("read {}: {e}", path.display())))?;
+    if bytes.len() % 4 != 0 {
+        return Err(Error::Other(format!(
+            "{}: length {} not a multiple of 4",
+            path.display(),
+            bytes.len()
+        )));
+    }
+    let numel: usize = shape.iter().product();
+    if bytes.len() / 4 != numel {
+        return Err(Error::Shape(format!(
+            "{}: {} f32s on disk, shape {:?} wants {}",
+            path.display(),
+            bytes.len() / 4,
+            shape,
+            numel
+        )));
+    }
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Tensor::new(shape, data)
+}
+
+/// Load little-endian i32s.
+pub fn load_i32(path: &Path, len: usize) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Other(format!("read {}: {e}", path.display())))?;
+    if bytes.len() / 4 != len {
+        return Err(Error::Shape(format!(
+            "{}: {} i32s on disk, expected {len}",
+            path.display(),
+            bytes.len() / 4
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let dir = std::env::temp_dir().join("hsolve_blob_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let vals = [1.5f32, -2.25, 0.0, 1e-7];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = load_f32(&path, &[2, 2]).unwrap();
+        assert_eq!(t.data(), &vals);
+        assert!(load_f32(&path, &[3, 3]).is_err());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let dir = std::env::temp_dir().join("hsolve_blob_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("y.bin");
+        let vals = [7i32, -9, 0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(load_i32(&path, 3).unwrap(), vals);
+        assert!(load_i32(&path, 4).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_f32(Path::new("/nonexistent/x.bin"), &[1]).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! 2-D toy densities (pinwheel, rings, checkerboard, circles).
+//!
+//! Native ports of `compile/tasks/cnf.py::sample_density` — the CNF bench
+//! uses these to draw fresh evaluation sets without touching python. The
+//! PRNG differs from numpy's, so streams are not bit-identical to the
+//! python sampler; distributional equality is what the tests check.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+pub const DENSITIES: [&str; 4] = ["pinwheel", "rings", "checkerboard", "circles"];
+
+/// Draw `n` samples from a named density as an (n, 2) tensor.
+pub fn sample_density(name: &str, n: usize, rng: &mut Rng) -> Result<Tensor> {
+    let mut out = Vec::with_capacity(n * 2);
+    match name {
+        "pinwheel" => {
+            let (radial_std, tangential_std, num_classes, rate) = (0.3, 0.1, 5u64, 0.25);
+            for _ in 0..n {
+                let label = rng.below(num_classes) as f64;
+                let f0 = rng.normal() * radial_std + 1.0;
+                let f1 = rng.normal() * tangential_std;
+                let ang = 2.0 * std::f64::consts::PI * label / num_classes as f64
+                    + rate * f0.exp();
+                let (c, s) = (ang.cos(), ang.sin());
+                // rotate (f0, f1) by ang, scale 2 (matches the python einsum)
+                out.push((2.0 * (f0 * c + f1 * s)) as f32);
+                out.push((2.0 * (-f0 * s + f1 * c)) as f32);
+            }
+        }
+        "rings" => {
+            let radii = [1.0, 2.0, 3.0];
+            for _ in 0..n {
+                let r = radii[rng.below(3) as usize] + rng.normal() * 0.08;
+                let ang = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+                out.push((r * ang.cos()) as f32);
+                out.push((r * ang.sin()) as f32);
+            }
+        }
+        "checkerboard" => {
+            for _ in 0..n {
+                let x1 = rng.uniform_in(-3.0, 3.0);
+                let x2_ = rng.uniform_in(0.0, 1.5);
+                let offs = ((x1 / 1.5).floor().rem_euclid(2.0)) * 1.5;
+                let x2 = x2_ + offs - 1.5 * (rng.below(2) as f64) * 2.0;
+                out.push(x1 as f32);
+                out.push(x2 as f32);
+            }
+        }
+        "circles" => {
+            for _ in 0..n {
+                let kind = rng.uniform();
+                let ang = rng.uniform_in(0.0, 2.0 * std::f64::consts::PI);
+                let (x, y) = if kind < 0.4 {
+                    let r = 1.0 + rng.normal() * 0.06;
+                    (r * ang.cos(), r * ang.sin())
+                } else if kind < 0.8 {
+                    let r = 2.5 + rng.normal() * 0.06;
+                    (r * ang.cos(), r * ang.sin())
+                } else {
+                    let ci = rng.below(3) as f64;
+                    let base = 2.0 * std::f64::consts::PI * ci / 3.0
+                        + rng.normal() * 0.05;
+                    let rr = rng.uniform_in(1.0, 2.5);
+                    (rr * base.cos(), rr * base.sin())
+                };
+                out.push(x as f32);
+                out.push(y as f32);
+            }
+        }
+        _ => return Err(Error::Other(format!("unknown density {name:?}"))),
+    }
+    Tensor::new(&[n, 2], out)
+}
+
+/// 2-D histogram over [-lim, lim]² — sample-quality scoring for the CNF
+/// figures (normalised counts; L1 distance between histograms is the
+/// reported sample-quality metric).
+pub fn histogram2d(samples: &Tensor, bins: usize, lim: f32) -> Vec<f64> {
+    let n = samples.shape()[0];
+    let mut h = vec![0.0f64; bins * bins];
+    let width = 2.0 * lim / bins as f32;
+    for i in 0..n {
+        let x = samples.data()[i * 2];
+        let y = samples.data()[i * 2 + 1];
+        let bx = ((x + lim) / width).floor();
+        let by = ((y + lim) / width).floor();
+        if bx >= 0.0 && by >= 0.0 && (bx as usize) < bins && (by as usize) < bins {
+            h[by as usize * bins + bx as usize] += 1.0;
+        }
+    }
+    let total: f64 = h.iter().sum();
+    if total > 0.0 {
+        for v in &mut h {
+            *v /= total;
+        }
+    }
+    h
+}
+
+/// L1 distance between two normalised histograms (in [0, 2]).
+pub fn hist_l1(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// Render a normalised 2-D histogram as ascii shades — the Fig. 1
+/// qualitative view of CNF sample quality, terminal-friendly.
+pub fn density_ascii(hist: &[f64], bins: usize) -> String {
+    const SHADES: &[u8] = b" .:-=+*#%@";
+    let max = hist.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+    let mut out = String::with_capacity(bins * (bins + 1));
+    for row in (0..bins).rev() {
+        for col in 0..bins {
+            let v = hist[row * bins + col] / max;
+            let idx = ((v.sqrt()) * (SHADES.len() - 1) as f64).round() as usize;
+            out.push(SHADES[idx.min(SHADES.len() - 1)] as char);
+            out.push(SHADES[idx.min(SHADES.len() - 1)] as char);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_densities_sample() {
+        let mut rng = Rng::new(0);
+        for name in DENSITIES {
+            let t = sample_density(name, 500, &mut rng).unwrap();
+            assert_eq!(t.shape(), &[500, 2]);
+            assert!(t.data().iter().all(|x| x.is_finite()));
+            assert!(t.data().iter().all(|x| x.abs() < 12.0), "{name}");
+        }
+        assert!(sample_density("moons", 10, &mut rng).is_err());
+    }
+
+    #[test]
+    fn rings_radii_cluster() {
+        let mut rng = Rng::new(1);
+        let t = sample_density("rings", 2000, &mut rng).unwrap();
+        let mut near = 0;
+        for i in 0..2000 {
+            let r = (t.data()[2 * i].powi(2) + t.data()[2 * i + 1].powi(2)).sqrt();
+            let d = [1.0f32, 2.0, 3.0]
+                .iter()
+                .map(|c| (r - c).abs())
+                .fold(f32::INFINITY, f32::min);
+            if d < 0.3 {
+                near += 1;
+            }
+        }
+        assert!(near > 1900, "only {near}/2000 near a ring");
+    }
+
+    #[test]
+    fn density_ascii_renders() {
+        let mut rng = Rng::new(3);
+        let s = sample_density("rings", 1000, &mut rng).unwrap();
+        let art = density_ascii(&histogram2d(&s, 10, 4.0), 10);
+        assert_eq!(art.lines().count(), 10);
+        assert!(art.lines().all(|l| l.chars().count() == 20));
+        assert!(art.contains('@') || art.contains('%')); // has a hot bin
+    }
+
+    #[test]
+    fn histogram_normalised_and_sensitive() {
+        let mut rng = Rng::new(2);
+        let a = sample_density("rings", 3000, &mut rng).unwrap();
+        let b = sample_density("checkerboard", 3000, &mut rng).unwrap();
+        let ha = histogram2d(&a, 16, 4.0);
+        let hb = histogram2d(&b, 16, 4.0);
+        assert!((ha.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let same = hist_l1(&ha, &histogram2d(&sample_density("rings", 3000, &mut rng).unwrap(), 16, 4.0));
+        let diff = hist_l1(&ha, &hb);
+        assert!(diff > 3.0 * same, "same={same} diff={diff}");
+    }
+}

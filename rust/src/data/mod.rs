@@ -1,0 +1,11 @@
+//! Data substrates: 2-D toy densities, artifact blob loading, and the
+//! Poisson request-trace generator for the serving benches.
+
+pub mod blobs;
+pub mod densities;
+pub mod synthimg;
+pub mod workload;
+
+pub use blobs::{load_f32, load_i32, Blob};
+pub use densities::sample_density;
+pub use workload::{Trace, TraceEvent, WorkloadSpec};

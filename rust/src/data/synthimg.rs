@@ -1,0 +1,163 @@
+//! Native port of the synthetic image dataset (`compile/tasks/images.py`).
+//!
+//! Same generative family — class identity = (start angle, curvature,
+//! lobes) of a parametric stroke, gaussian bumps splatted along it,
+//! class-coded color + texture for the 3-channel variant. Streams are not
+//! bit-identical to numpy's (different PRNG); class structure is, which is
+//! what the tests check. Used by benches that want fresh evaluation data
+//! beyond the exported blobs.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+pub const HW: usize = 16;
+pub const N_CLASSES: usize = 10;
+
+/// Render one grayscale stroke image of class `c`.
+pub fn render_stroke(c: usize, rng: &mut Rng) -> [f32; HW * HW] {
+    let n_pts = 24;
+    let ang0 = 2.0 * std::f64::consts::PI * c as f64 / N_CLASSES as f64
+        + rng.normal() * 0.1;
+    let curv = 2.0 + 1.5 * ((c * 7) % N_CLASSES) as f64 / N_CLASSES as f64;
+    let lobes = 1 + (c % 3);
+    let cx = 0.5 + 0.06 * rng.normal();
+    let cy = 0.5 + 0.06 * rng.normal();
+
+    let mut img = [0.0f32; HW * HW];
+    let sig2 = 2.0 * 0.045f64 * 0.045;
+    for i in 0..n_pts {
+        let t = i as f64 / (n_pts - 1) as f64;
+        let r = 0.25 + 0.18 * (lobes as f64 * 2.0 * std::f64::consts::PI * t).sin();
+        let ang = ang0 + curv * t;
+        let px = cx + r * ang.cos();
+        let py = cy + r * ang.sin();
+        for y in 0..HW {
+            let fy = y as f64 / (HW - 1) as f64;
+            for x in 0..HW {
+                let fx = x as f64 / (HW - 1) as f64;
+                let d2 = (fx - px) * (fx - px) + (fy - py) * (fy - py);
+                img[y * HW + x] += (-d2 / sig2).exp() as f32;
+            }
+        }
+    }
+    let max = img.iter().cloned().fold(0.0f32, f32::max) + 1e-6;
+    for v in &mut img {
+        *v = *v / max + 0.05 * rng.normal() as f32;
+    }
+    img
+}
+
+/// Generate `n` samples: (images NCHW, labels). `channels` 1 (smnist-like)
+/// or 3 (scifar-like).
+pub fn make_dataset(
+    channels: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> Result<(Tensor, Vec<i32>)> {
+    if channels != 1 && channels != 3 {
+        return Err(Error::Other("channels must be 1 or 3".into()));
+    }
+    let plane = HW * HW;
+    let mut data = vec![0.0f32; n * channels * plane];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = rng.below(N_CLASSES as u64) as usize;
+        labels.push(c as i32);
+        let g = render_stroke(c, rng);
+        if channels == 1 {
+            data[i * plane..(i + 1) * plane].copy_from_slice(&g);
+        } else {
+            let mix = [
+                0.3 + 0.7 * ((c * 3) % 10) as f32 / 10.0,
+                0.3 + 0.7 * ((c * 7 + 2) % 10) as f32 / 10.0,
+                0.3 + 0.7 * ((c * 5 + 5) % 10) as f32 / 10.0,
+            ];
+            for k in 0..3 {
+                let base = (i * 3 + k) * plane;
+                for y in 0..HW {
+                    for x in 0..HW {
+                        let fx = x as f32 / (HW - 1) as f32 * 2.0 * std::f32::consts::PI;
+                        let fy = y as f32 / (HW - 1) as f32 * 2.0 * std::f32::consts::PI;
+                        let tex =
+                            0.15 * (fx * (1 + c % 4) as f32 + fy * (1 + c / 4) as f32).sin();
+                        data[base + y * HW + x] = mix[k] * g[y * HW + x]
+                            + tex
+                            + 0.05 * rng.normal() as f32;
+                    }
+                }
+            }
+        }
+    }
+    Ok((Tensor::new(&[n, channels, HW, HW], data)?, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_labels() {
+        let mut rng = Rng::new(0);
+        let (x, y) = make_dataset(1, 24, &mut rng).unwrap();
+        assert_eq!(x.shape(), &[24, 1, HW, HW]);
+        assert_eq!(y.len(), 24);
+        assert!(y.iter().all(|&l| (0..N_CLASSES as i32).contains(&l)));
+        assert!(x.data().iter().all(|v| v.is_finite()));
+        let (x3, _) = make_dataset(3, 4, &mut rng).unwrap();
+        assert_eq!(x3.shape(), &[4, 3, HW, HW]);
+        assert!(make_dataset(2, 4, &mut rng).is_err());
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // intra-class mean distance < inter-class template distance
+        let mut rng = Rng::new(1);
+        let mut means: Vec<Vec<f32>> = Vec::new();
+        let mut intra = 0.0f64;
+        for c in 0..3 {
+            let imgs: Vec<[f32; HW * HW]> =
+                (0..8).map(|_| render_stroke(c, &mut rng)).collect();
+            let mut mean = vec![0.0f32; HW * HW];
+            for img in &imgs {
+                for (m, v) in mean.iter_mut().zip(img.iter()) {
+                    *m += v / 8.0;
+                }
+            }
+            for img in &imgs {
+                let d: f32 = img
+                    .iter()
+                    .zip(&mean)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+                    .sqrt();
+                intra += d as f64 / 24.0;
+            }
+            means.push(mean);
+        }
+        let mut inter = 0.0f64;
+        let mut pairs = 0;
+        for i in 0..3 {
+            for j in (i + 1)..3 {
+                let d: f32 = means[i]
+                    .iter()
+                    .zip(&means[j])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f32>()
+                    .sqrt();
+                inter += d as f64;
+                pairs += 1;
+            }
+        }
+        inter /= pairs as f64;
+        assert!(inter > intra, "inter {inter} vs intra {intra}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let (a, la) = make_dataset(1, 8, &mut Rng::new(42)).unwrap();
+        let (b, lb) = make_dataset(1, 8, &mut Rng::new(42)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+}

@@ -1,0 +1,112 @@
+//! Serving workload generation: Poisson arrivals of inference requests with
+//! heterogeneous accuracy budgets — the trace the coordinator benches replay.
+
+use crate::util::prng::Rng;
+
+/// One request in a trace.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// arrival offset from trace start, seconds
+    pub at_s: f64,
+    /// task name (e.g. "cnf_rings")
+    pub task: String,
+    /// MAPE budget the response must satisfy
+    pub budget: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+/// Workload shape: arrival rate and the budget mixture.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// mean requests/second (Poisson)
+    pub rate: f64,
+    /// total requests
+    pub count: usize,
+    /// tasks to draw from (uniform)
+    pub tasks: Vec<String>,
+    /// (budget, weight) mixture, e.g. tight real-time vs loose batch jobs
+    pub budgets: Vec<(f32, f64)>,
+}
+
+impl WorkloadSpec {
+    pub fn generate(&self, rng: &mut Rng) -> Trace {
+        assert!(!self.tasks.is_empty() && !self.budgets.is_empty());
+        let total_w: f64 = self.budgets.iter().map(|(_, w)| w).sum();
+        let mut t = 0.0f64;
+        let mut events = Vec::with_capacity(self.count);
+        for _ in 0..self.count {
+            t += rng.exponential(self.rate);
+            let task = rng.choose(&self.tasks).clone();
+            let mut pick = rng.uniform() * total_w;
+            let mut budget = self.budgets[0].0;
+            for (b, w) in &self.budgets {
+                if pick < *w {
+                    budget = *b;
+                    break;
+                }
+                pick -= w;
+            }
+            events.push(TraceEvent {
+                at_s: t,
+                task,
+                budget,
+            });
+        }
+        Trace { events }
+    }
+}
+
+impl Trace {
+    pub fn duration_s(&self) -> f64 {
+        self.events.last().map(|e| e.at_s).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            rate: 100.0,
+            count: 1000,
+            tasks: vec!["a".into(), "b".into()],
+            budgets: vec![(0.05, 0.7), (0.2, 0.3)],
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_matches() {
+        let mut rng = Rng::new(0);
+        let trace = spec().generate(&mut rng);
+        assert_eq!(trace.events.len(), 1000);
+        for w in trace.events.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+        // mean inter-arrival ≈ 1/rate
+        let mean = trace.duration_s() / 1000.0;
+        assert!((mean - 0.01).abs() < 0.002, "mean={mean}");
+    }
+
+    #[test]
+    fn budget_mixture_respected() {
+        let mut rng = Rng::new(1);
+        let trace = spec().generate(&mut rng);
+        let tight = trace.events.iter().filter(|e| e.budget == 0.05).count();
+        let frac = tight as f64 / 1000.0;
+        assert!((frac - 0.7).abs() < 0.05, "tight fraction {frac}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = spec().generate(&mut Rng::new(9));
+        let b = spec().generate(&mut Rng::new(9));
+        assert_eq!(a.events.len(), b.events.len());
+        assert_eq!(a.events[5].task, b.events[5].task);
+        assert_eq!(a.events[5].at_s, b.events[5].at_s);
+    }
+}

@@ -1,0 +1,72 @@
+//! # Hypersolvers — fast continuous-depth model inference
+//!
+//! Rust + JAX + Pallas reproduction of *"Hypersolvers: Toward Fast
+//! Continuous-Depth Models"* (Poli & Massaroli et al., NeurIPS 2020).
+//!
+//! Architecture (see `DESIGN.md`):
+//!
+//! * **Layer 1/2 (build time)** — Pallas kernels + JAX Neural ODE models,
+//!   trained and AOT-lowered to HLO text by `python/compile/aot.py`.
+//!   Python never runs on the request path.
+//! * **Layer 3 (this crate)** — the serving coordinator: it loads the AOT
+//!   artifacts through PJRT ([`runtime`]), batches inference requests and
+//!   picks the cheapest `(solver, K)` variant that satisfies each
+//!   request's error budget ([`coordinator`]) — the paper's accuracy/compute
+//!   pareto front made operational.
+//!
+//! The crate also carries a complete *native* inference stack ([`tensor`],
+//! [`nn`], [`solvers`], [`ode`]) that evaluates the trained networks from
+//! exported weights without PJRT; the benches use it for dense parameter
+//! sweeps (every figure of the paper) and the tests use it to cross-validate
+//! the PJRT path numerically.
+//!
+//! The [`util`] module contains substrates this offline environment forced
+//! us to build from scratch: PRNG, JSON codec, CLI parsing, thread pool,
+//! a bench harness (`benchkit`) and a property-test harness (`propkit`).
+
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod nn;
+pub mod ode;
+pub mod runtime;
+pub mod solvers;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("shape error: {0}")]
+    Shape(String),
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Default artifacts directory, overridable via `HYPERSOLVERS_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("HYPERSOLVERS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            // crate root (works from tests/benches/examples alike)
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}

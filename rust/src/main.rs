@@ -1,0 +1,121 @@
+//! `hypersolverd` — the hypersolver serving daemon.
+//!
+//! Subcommands:
+//!   serve    run the coordinator + TCP JSON-lines server (default)
+//!   tasks    list artifact tasks and their variants
+//!   infer    one-shot inference from the command line
+//!
+//! Examples:
+//!   hypersolverd serve --addr 127.0.0.1:7878 --max-wait-ms 2
+//!   hypersolverd tasks
+//!   hypersolverd infer --task cnf_rings --budget 0.05 --input 0.3,-0.7
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
+use hypersolvers::runtime::Manifest;
+use hypersolvers::util::cli::Cli;
+
+fn main() {
+    let parsed = Cli::new("hypersolverd — hypersolver model serving daemon")
+        .opt("addr", "127.0.0.1:7878", "listen address for `serve`")
+        .opt("artifacts", "", "artifacts directory (default: ./artifacts)")
+        .opt("max-wait-ms", "2", "dynamic batching deadline in ms")
+        .opt("policy", "macs", "variant cost axis: macs | nfe")
+        .opt("task", "", "task for `infer`")
+        .opt("budget", "0.05", "MAPE budget for `infer`")
+        .opt("input", "", "comma-separated f32 sample for `infer`")
+        .parse_env();
+
+    let cmd = parsed
+        .positionals()
+        .first()
+        .map(String::as_str)
+        .unwrap_or("serve")
+        .to_string();
+
+    let mut config = EngineConfig {
+        max_wait: Duration::from_millis(parsed.get_usize("max-wait-ms") as u64),
+        policy: match parsed.get("policy").as_str() {
+            "nfe" => Policy::MinNfe,
+            _ => Policy::MinMacs,
+        },
+        ..Default::default()
+    };
+    if !parsed.get("artifacts").is_empty() {
+        config.artifacts_dir = parsed.get("artifacts").into();
+    }
+
+    let result = match cmd.as_str() {
+        "tasks" => cmd_tasks(&config),
+        "infer" => cmd_infer(
+            config,
+            &parsed.get("task"),
+            parsed.get_f64("budget") as f32,
+            &parsed.get("input"),
+        ),
+        "serve" => cmd_serve(config, &parsed.get("addr")),
+        other => {
+            eprintln!("unknown command {other:?} (serve | tasks | infer)");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_tasks(config: &EngineConfig) -> hypersolvers::Result<()> {
+    let manifest = Manifest::load(&config.artifacts_dir)?;
+    println!("artifacts: {} (stamp {})", manifest.dir.display(), manifest.stamp);
+    for (name, task) in &manifest.tasks {
+        println!(
+            "\n{name} [{}] state {:?}, MAC_f={} MAC_g={} δ={:.4}",
+            task.kind, task.state_shape, task.mac_f, task.mac_g, task.delta
+        );
+        for v in &task.variants {
+            println!(
+                "  {:<18} nfe={:<4} macs={:<9} mape={:.4}{}",
+                v.name,
+                v.nfe,
+                v.macs,
+                v.mape,
+                v.acc_drop
+                    .map(|d| format!(" acc_drop={d:.4}"))
+                    .unwrap_or_default()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_infer(
+    config: EngineConfig,
+    task: &str,
+    budget: f32,
+    input_csv: &str,
+) -> hypersolvers::Result<()> {
+    if task.is_empty() {
+        return Err(hypersolvers::Error::Other("--task is required".into()));
+    }
+    let input: Vec<f32> = input_csv
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse().unwrap_or(0.0))
+        .collect();
+    let engine = Engine::new(config)?;
+    let resp = engine.infer(task, budget, input)?;
+    println!(
+        "variant={} mape≤{:.4} nfe={} latency={:?}\noutput={:?}",
+        resp.variant, resp.mape, resp.nfe, resp.latency, resp.output
+    );
+    Ok(())
+}
+
+fn cmd_serve(config: EngineConfig, addr: &str) -> hypersolvers::Result<()> {
+    let engine = Arc::new(Engine::new(config)?);
+    println!("hypersolverd serving on {addr} — ctrl-c to stop");
+    server::serve(engine, addr)
+}

@@ -1,0 +1,215 @@
+//! Evaluation metrics: MAPE/MSE/accuracy, global truncation error, Pareto
+//! front extraction, and the MAC cost model (mirrors `compile/macs.py`).
+
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Mean absolute percentage error with the paper's small-denominator guard
+/// (identical to `compile/aot.py::mape` so rust and python report the same
+/// numbers on the same blobs).
+pub fn mape(pred: &Tensor, truth: &Tensor) -> Result<f64> {
+    if pred.shape() != truth.shape() {
+        return Err(Error::Shape(format!(
+            "mape shapes {:?} vs {:?}",
+            pred.shape(),
+            truth.shape()
+        )));
+    }
+    let mut acc = 0.0f64;
+    for (p, t) in pred.data().iter().zip(truth.data()) {
+        acc += ((p - t).abs() / (t.abs() + 1e-2)) as f64;
+    }
+    Ok(acc / pred.numel() as f64)
+}
+
+pub fn mse(pred: &Tensor, truth: &Tensor) -> Result<f64> {
+    if pred.shape() != truth.shape() {
+        return Err(Error::Shape("mse shape mismatch".into()));
+    }
+    let mut acc = 0.0f64;
+    for (p, t) in pred.data().iter().zip(truth.data()) {
+        let d = (p - t) as f64;
+        acc += d * d;
+    }
+    Ok(acc / pred.numel() as f64)
+}
+
+/// Mean per-sample L2 distance — the global truncation error E_k of the
+/// paper when applied at a mesh point.
+pub fn mean_l2(pred: &Tensor, truth: &Tensor) -> Result<f64> {
+    if pred.shape() != truth.shape() {
+        return Err(Error::Shape("mean_l2 shape mismatch".into()));
+    }
+    let b = pred.shape()[0];
+    let d = pred.numel() / b;
+    let mut acc = 0.0f64;
+    for i in 0..b {
+        let mut s = 0.0f64;
+        for j in 0..d {
+            let diff = (pred.data()[i * d + j] - truth.data()[i * d + j]) as f64;
+            s += diff * diff;
+        }
+        acc += s.sqrt();
+    }
+    Ok(acc / b as f64)
+}
+
+/// Classification accuracy of logits (B, C) against labels.
+pub fn accuracy(logits: &Tensor, labels: &[i32]) -> Result<f64> {
+    let preds = logits.argmax_rows()?;
+    if preds.len() != labels.len() {
+        return Err(Error::Shape("accuracy label count".into()));
+    }
+    let correct = preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| **p as i32 == **l)
+        .count();
+    Ok(correct as f64 / labels.len() as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Pareto fronts
+// ---------------------------------------------------------------------------
+
+/// A (cost, error) point with a label — one solver variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoPoint {
+    pub label: String,
+    pub cost: f64,
+    pub error: f64,
+}
+
+/// Extract the Pareto-efficient subset (no other point has both lower cost
+/// and lower error), sorted by cost.
+pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut sorted: Vec<ParetoPoint> = points.to_vec();
+    sorted.sort_by(|a, b| {
+        a.cost
+            .partial_cmp(&b.cost)
+            .unwrap()
+            .then(a.error.partial_cmp(&b.error).unwrap())
+    });
+    let mut front: Vec<ParetoPoint> = Vec::new();
+    let mut best_err = f64::INFINITY;
+    for p in sorted {
+        if p.error < best_err {
+            best_err = p.error;
+            front.push(p);
+        }
+    }
+    front
+}
+
+/// Does `a` dominate `b` (cheaper-or-equal AND more-accurate-or-equal, with
+/// at least one strict)?
+pub fn dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    (a.cost <= b.cost && a.error <= b.error) && (a.cost < b.cost || a.error < b.error)
+}
+
+// ---------------------------------------------------------------------------
+// MAC cost model (mirror of compile/macs.py)
+// ---------------------------------------------------------------------------
+
+/// Total MACs per sample of one fixed-step solve.
+pub fn solve_macs(mac_f: u64, mac_g: u64, stages: u64, steps: u64, hyper: bool) -> u64 {
+    let mut total = stages * steps * mac_f;
+    if hyper {
+        total += steps * mac_g;
+    }
+    total
+}
+
+/// Relative overhead O_r = 1 + MAC_g / (p · MAC_f) (paper §6).
+pub fn relative_overhead(mac_f: u64, mac_g: u64, order: u64) -> f64 {
+    1.0 + mac_g as f64 / (order as f64 * mac_f as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propkit::{check, gen_vec, prop_assert};
+
+    #[test]
+    fn mape_zero_for_identical() {
+        let t = Tensor::new(&[2, 2], vec![1.0, -2.0, 3.0, 0.5]).unwrap();
+        assert_eq!(mape(&t, &t).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn mape_known_value() {
+        let p = Tensor::new(&[1, 1], vec![1.1]).unwrap();
+        let t = Tensor::new(&[1, 1], vec![1.0]).unwrap();
+        let m = mape(&p, &t).unwrap();
+        assert!((m - 0.1 / 1.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Tensor::new(&[3, 2], vec![2.0, 1.0, 0.0, 5.0, 1.0, 0.0]).unwrap();
+        let acc = accuracy(&logits, &[0, 1, 1]).unwrap();
+        assert!((acc - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_l2_is_rowwise() {
+        let p = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 0.0]).unwrap();
+        let t = Tensor::new(&[2, 2], vec![0.0, 0.0, 0.0, 3.0]).unwrap();
+        assert!((mean_l2(&p, &t).unwrap() - 2.0).abs() < 1e-9); // (1+3)/2
+    }
+
+    #[test]
+    fn pareto_front_filters_dominated() {
+        let pts = vec![
+            ParetoPoint { label: "a".into(), cost: 1.0, error: 0.5 },
+            ParetoPoint { label: "b".into(), cost: 2.0, error: 0.6 }, // dominated
+            ParetoPoint { label: "c".into(), cost: 2.0, error: 0.2 },
+            ParetoPoint { label: "d".into(), cost: 4.0, error: 0.1 },
+        ];
+        let front = pareto_front(&pts);
+        let labels: Vec<&str> = front.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["a", "c", "d"]);
+    }
+
+    #[test]
+    fn pareto_front_property() {
+        check("front members are mutually non-dominating", 30, |rng| {
+            let n = 20;
+            let costs = gen_vec(rng, n, 1.0);
+            let errs = gen_vec(rng, n, 1.0);
+            let pts: Vec<ParetoPoint> = (0..n)
+                .map(|i| ParetoPoint {
+                    label: format!("p{i}"),
+                    cost: costs[i].abs() as f64,
+                    error: errs[i].abs() as f64,
+                })
+                .collect();
+            let front = pareto_front(&pts);
+            for a in &front {
+                for b in &front {
+                    if a.label != b.label && dominates(a, b) {
+                        return Err(format!("{} dominates {}", a.label, b.label));
+                    }
+                }
+            }
+            // every excluded point is dominated by some front member
+            for p in &pts {
+                if !front.iter().any(|f| f.label == p.label)
+                    && !front.iter().any(|f| dominates(f, p))
+                {
+                    return Err(format!("{} excluded but undominated", p.label));
+                }
+            }
+            prop_assert(!front.is_empty(), "empty front")
+        });
+    }
+
+    #[test]
+    fn overhead_shrinks_with_order() {
+        let o1 = relative_overhead(100, 50, 1);
+        let o4 = relative_overhead(100, 50, 4);
+        assert!((o1 - 1.5).abs() < 1e-12);
+        assert!(o4 < o1);
+        assert_eq!(solve_macs(100, 50, 2, 10, true), 2 * 10 * 100 + 10 * 50);
+    }
+}

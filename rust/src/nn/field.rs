@@ -1,0 +1,271 @@
+//! Vector fields and hypersolver nets reconstructed from exported weights.
+//!
+//! Mirrors `python/compile/fields.py`: MLP field with time features, DepthCat
+//! conv field, hyper MLP (input `[z, dz, eps, s]`) and hyper CNN (input
+//! `cat(z, dz) ⊕ DepthCat(s + eps)`).
+
+use crate::nn::layers::{Conv2d, Mlp, PRelu};
+use crate::ode::VectorField;
+use crate::solvers::HyperNet;
+use crate::tensor::Tensor;
+use crate::util::json::Value;
+use crate::{Error, Result};
+
+/// Depth (time) feature modes — must match `fields.time_features`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeMode {
+    /// raw s appended as one feature
+    Concat,
+    /// sin/cos(2πks), k = 1..3
+    Fourier3,
+}
+
+impl TimeMode {
+    pub fn from_name(name: &str) -> Result<TimeMode> {
+        match name {
+            "concat" => Ok(TimeMode::Concat),
+            "fourier3" => Ok(TimeMode::Fourier3),
+            _ => Err(Error::Json(format!("unknown time mode {name:?}"))),
+        }
+    }
+
+    pub fn dim(self) -> usize {
+        match self {
+            TimeMode::Concat => 1,
+            TimeMode::Fourier3 => 6,
+        }
+    }
+
+    pub fn features(self, s: f32) -> Vec<f32> {
+        match self {
+            TimeMode::Concat => vec![s],
+            TimeMode::Fourier3 => {
+                let mut out = Vec::with_capacity(6);
+                for k in 1..=3 {
+                    out.push((2.0 * std::f32::consts::PI * k as f32 * s).sin());
+                }
+                for k in 1..=3 {
+                    out.push((2.0 * std::f32::consts::PI * k as f32 * s).cos());
+                }
+                out
+            }
+        }
+    }
+}
+
+/// f(s, z) = MLP([z, timefeat(s)]) on (B, D) states.
+#[derive(Clone, Debug)]
+pub struct MlpField {
+    pub mlp: Mlp,
+    pub time_mode: TimeMode,
+}
+
+impl MlpField {
+    pub fn from_json(v: &Value) -> Result<MlpField> {
+        let time_mode = TimeMode::from_name(
+            v.req("time_mode")?
+                .as_str()
+                .ok_or_else(|| Error::Json("time_mode".into()))?,
+        )?;
+        Ok(MlpField {
+            mlp: Mlp::from_json(v.req("layers")?)?,
+            time_mode,
+        })
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.mlp.layers.last().unwrap().out_dim()
+    }
+}
+
+impl VectorField for MlpField {
+    fn eval(&self, s: f32, z: &Tensor) -> Tensor {
+        let b = z.shape()[0];
+        let feats = self.time_mode.features(s);
+        let fcols = feats.len();
+        let ft = Tensor::from_fn(&[b, fcols], |i| feats[i % fcols]);
+        let x = Tensor::hcat(&[z, &ft]).expect("hcat");
+        self.mlp.forward(&x).expect("mlp forward")
+    }
+
+    fn macs(&self) -> u64 {
+        self.mlp.macs()
+    }
+}
+
+/// DepthCat conv field on NCHW states (appendix C.2 shape).
+#[derive(Clone, Debug)]
+pub struct ConvField {
+    pub c1: Conv2d,
+    pub c2: Conv2d,
+    pub c3: Conv2d,
+}
+
+impl ConvField {
+    pub fn from_json(v: &Value) -> Result<ConvField> {
+        Ok(ConvField {
+            c1: Conv2d::from_json(v.req("c1")?)?,
+            c2: Conv2d::from_json(v.req("c2")?)?,
+            c3: Conv2d::from_json(v.req("c3")?)?,
+        })
+    }
+}
+
+impl VectorField for ConvField {
+    fn eval(&self, s: f32, z: &Tensor) -> Tensor {
+        let x = z.depth_cat(s).expect("depth_cat");
+        let x = self.c1.forward(&x).expect("c1").map(f32::tanh);
+        let x = x.depth_cat(s).expect("depth_cat");
+        let x = self.c2.forward(&x).expect("c2").map(f32::tanh);
+        self.c3.forward(&x).expect("c3")
+    }
+
+    fn macs(&self) -> u64 {
+        // H from runtime shape is unknown here; expose via macs_hw
+        0
+    }
+}
+
+impl ConvField {
+    pub fn macs_hw(&self, hw: usize) -> u64 {
+        self.c1.macs(hw) + self.c2.macs(hw) + self.c3.macs(hw)
+    }
+}
+
+/// g_ω for flat states: MLP over [z, dz, eps, s].
+#[derive(Clone, Debug)]
+pub struct HyperMlp {
+    pub mlp: Mlp,
+}
+
+impl HyperMlp {
+    pub fn from_json(v: &Value) -> Result<HyperMlp> {
+        Ok(HyperMlp {
+            mlp: Mlp::from_json(v.req("layers")?)?,
+        })
+    }
+}
+
+impl HyperNet for HyperMlp {
+    fn eval(&self, eps: f32, s: f32, z: &Tensor, dz: &Tensor) -> Tensor {
+        let b = z.shape()[0];
+        let eps_col = Tensor::full(&[b, 1], eps);
+        let s_col = Tensor::full(&[b, 1], s);
+        let x = Tensor::hcat(&[z, dz, &eps_col, &s_col]).expect("hcat");
+        self.mlp.forward(&x).expect("hyper mlp")
+    }
+
+    fn macs(&self) -> u64 {
+        self.mlp.macs()
+    }
+}
+
+/// g_ω for conv states: 2-layer PReLU CNN over cat(z, dz) ⊕ DepthCat(s+eps).
+#[derive(Clone, Debug)]
+pub struct HyperCnn {
+    pub c1: Conv2d,
+    pub p1: PRelu,
+    pub c2: Conv2d,
+}
+
+impl HyperCnn {
+    pub fn from_json(v: &Value) -> Result<HyperCnn> {
+        Ok(HyperCnn {
+            c1: Conv2d::from_json(v.req("c1")?)?,
+            p1: PRelu::from_json(v.req("p1")?)?,
+            c2: Conv2d::from_json(v.req("c2")?)?,
+        })
+    }
+
+    pub fn macs_hw(&self, hw: usize) -> u64 {
+        self.c1.macs(hw) + self.c2.macs(hw)
+    }
+
+    /// Channel-concat two NCHW tensors.
+    fn cat_channels(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let (ba, ca, h, w) = match a.shape() {
+            [b, c, h, w] => (*b, *c, *h, *w),
+            s => return Err(Error::Shape(format!("cat input {s:?}"))),
+        };
+        let cb = b.shape()[1];
+        let plane = h * w;
+        let mut out = Vec::with_capacity(ba * (ca + cb) * plane);
+        for bi in 0..ba {
+            out.extend_from_slice(&a.data()[bi * ca * plane..(bi + 1) * ca * plane]);
+            out.extend_from_slice(&b.data()[bi * cb * plane..(bi + 1) * cb * plane]);
+        }
+        Tensor::new(&[ba, ca + cb, h, w], out)
+    }
+}
+
+impl HyperNet for HyperCnn {
+    fn eval(&self, eps: f32, s: f32, z: &Tensor, dz: &Tensor) -> Tensor {
+        let x = Self::cat_channels(z, dz).expect("cat");
+        let x = x.depth_cat(s + eps).expect("depth_cat");
+        let x = self.p1.forward(&self.c1.forward(&x).expect("c1")).expect("p1");
+        self.c2.forward(&x).expect("c2")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn time_modes() {
+        assert_eq!(TimeMode::Concat.features(0.3), vec![0.3]);
+        let f = TimeMode::Fourier3.features(0.25);
+        assert_eq!(f.len(), 6);
+        assert!((f[0] - 1.0).abs() < 1e-6); // sin(π/2)
+        assert!(TimeMode::from_name("poly").is_err());
+    }
+
+    #[test]
+    fn mlp_field_time_dependence() {
+        let v = json::parse(
+            r#"{"type":"mlp_field","time_mode":"concat",
+                "layers":[{"w":[[1,0],[0,1],[1,1]],"b":[0,0],"act":"id"}]}"#,
+        )
+        .unwrap();
+        let field = MlpField::from_json(&v).unwrap();
+        let z = Tensor::new(&[1, 2], vec![1.0, 2.0]).unwrap();
+        // f(s, z) = [z0 + s, z1 + s]
+        let out = field.eval(0.5, &z);
+        assert_eq!(out.data(), &[1.5, 2.5]);
+        let out0 = field.eval(0.0, &z);
+        assert_eq!(out0.data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn hyper_mlp_input_layout() {
+        // weight picks out the eps column: g = eps for every output dim
+        let v = json::parse(
+            r#"{"layers":[{"w":[[0],[0],[0],[0],[1],[0]],"b":[0],"act":"id"}]}"#,
+        )
+        .unwrap();
+        let g = HyperMlp::from_json(&v).unwrap();
+        let z = Tensor::new(&[2, 2], vec![9.0; 4]).unwrap();
+        let out = g.eval(0.25, 0.7, &z, &z);
+        assert_eq!(out.shape(), &[2, 1]);
+        assert_eq!(out.data(), &[0.25, 0.25]);
+    }
+
+    #[test]
+    fn hyper_cnn_shapes() {
+        // aug=1: input channels 2*1+1 = 3
+        let v = json::parse(
+            r#"{"c1":{"w":[[[[1]],[[1]],[[1]]],[[[1]],[[1]],[[1]]]],"b":[0,0]},
+                "p1":{"alpha":[0.1,0.1]},
+                "c2":{"w":[[[[1]],[[1]]]],"b":[0]}}"#,
+        )
+        .unwrap();
+        let g = HyperCnn::from_json(&v).unwrap();
+        let z = Tensor::full(&[1, 1, 2, 2], 1.0);
+        let out = g.eval(0.1, 0.2, &z, &z);
+        assert_eq!(out.shape(), &[1, 1, 2, 2]);
+        // channels: z=1, dz=1, depth=0.3 → c1 out = 2.3 each (two filters),
+        // prelu no-op (positive), c2 sums → 4.6
+        assert!((out.data()[0] - 4.6).abs() < 1e-5);
+    }
+}

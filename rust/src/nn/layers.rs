@@ -1,0 +1,258 @@
+//! Primitive layers: dense, conv2d (SAME/stride-1), PReLU, activations.
+
+use crate::tensor::Tensor;
+use crate::util::json::Value;
+use crate::{Error, Result};
+
+/// Activation kinds matching `compile/kernels/ref.py::act`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Id,
+    Tanh,
+    Relu,
+    Softplus,
+}
+
+impl Act {
+    pub fn from_name(name: &str) -> Result<Act> {
+        match name {
+            "id" => Ok(Act::Id),
+            "tanh" => Ok(Act::Tanh),
+            "relu" => Ok(Act::Relu),
+            "softplus" => Ok(Act::Softplus),
+            _ => Err(Error::Json(format!("unknown activation {name:?}"))),
+        }
+    }
+
+    pub fn apply_scalar(self, x: f32) -> f32 {
+        match self {
+            Act::Id => x,
+            Act::Tanh => x.tanh(),
+            Act::Relu => x.max(0.0),
+            // log(1 + e^x), numerically stable
+            Act::Softplus => {
+                if x > 20.0 {
+                    x
+                } else if x < -20.0 {
+                    x.exp()
+                } else {
+                    x.exp().ln_1p()
+                }
+            }
+        }
+    }
+
+    pub fn apply(self, t: &Tensor) -> Tensor {
+        match self {
+            Act::Id => t.clone(),
+            _ => t.map(|x| self.apply_scalar(x)),
+        }
+    }
+}
+
+/// Dense layer y = act(x W + b); weights (in, out) row-major as exported.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Tensor,
+    pub b: Vec<f32>,
+    pub act: Act,
+}
+
+impl Linear {
+    pub fn from_json(v: &Value) -> Result<Linear> {
+        let (wdata, wshape) = v.req("w")?.as_f32_tensor()?;
+        if wshape.len() != 2 {
+            return Err(Error::Json(format!("linear w shape {wshape:?}")));
+        }
+        let (b, _) = v.req("b")?.as_f32_tensor()?;
+        let act = Act::from_name(v.req("act")?.as_str().unwrap_or("id"))?;
+        Ok(Linear {
+            w: Tensor::new(&wshape, wdata)?,
+            b,
+            act,
+        })
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let y = x.matmul(&self.w)?.add_bias_rows(&self.b)?;
+        Ok(self.act.apply(&y))
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w.shape()[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w.shape()[1]
+    }
+
+    /// MACs per sample.
+    pub fn macs(&self) -> u64 {
+        (self.in_dim() * self.out_dim()) as u64
+    }
+}
+
+/// 2-D conv, NCHW/OIHW, stride 1, SAME padding (the only conv exported).
+#[derive(Clone, Debug)]
+pub struct Conv2d {
+    pub w: Tensor,
+    pub b: Vec<f32>,
+}
+
+impl Conv2d {
+    pub fn from_json(v: &Value) -> Result<Conv2d> {
+        let (wdata, wshape) = v.req("w")?.as_f32_tensor()?;
+        if wshape.len() != 4 {
+            return Err(Error::Json(format!("conv w shape {wshape:?}")));
+        }
+        let (b, _) = v.req("b")?.as_f32_tensor()?;
+        Ok(Conv2d {
+            w: Tensor::new(&wshape, wdata)?,
+            b,
+        })
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        x.conv2d_same(&self.w, &self.b)
+    }
+
+    /// MACs per sample for an (H, W) input.
+    pub fn macs(&self, hw: usize) -> u64 {
+        let s = self.w.shape();
+        (s[0] * s[1] * s[2] * s[3] * hw * hw) as u64
+    }
+}
+
+/// Channelwise PReLU on NCHW tensors.
+#[derive(Clone, Debug)]
+pub struct PRelu {
+    pub alpha: Vec<f32>,
+}
+
+impl PRelu {
+    pub fn from_json(v: &Value) -> Result<PRelu> {
+        let (alpha, _) = v.req("alpha")?.as_f32_tensor()?;
+        Ok(PRelu { alpha })
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let (b, c, h, w) = match x.shape() {
+            [b, c, h, w] => (*b, *c, *h, *w),
+            s => return Err(Error::Shape(format!("prelu input {s:?}"))),
+        };
+        if c != self.alpha.len() {
+            return Err(Error::Shape("prelu channel mismatch".into()));
+        }
+        let plane = h * w;
+        let mut out = x.clone();
+        for bi in 0..b {
+            for ci in 0..c {
+                let a = self.alpha[ci];
+                let base = (bi * c + ci) * plane;
+                for v in &mut out.data_mut()[base..base + plane] {
+                    if *v < 0.0 {
+                        *v *= a;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// An MLP as a stack of [`Linear`]s.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+}
+
+impl Mlp {
+    pub fn from_json(v: &Value) -> Result<Mlp> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| Error::Json("mlp layers must be array".into()))?;
+        Ok(Mlp {
+            layers: arr.iter().map(Linear::from_json).collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let mut h = x.clone();
+        for l in &self.layers {
+            h = l.forward(&h)?;
+        }
+        Ok(h)
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(Linear::macs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn act_values() {
+        assert_eq!(Act::Relu.apply_scalar(-2.0), 0.0);
+        assert_eq!(Act::Relu.apply_scalar(3.0), 3.0);
+        assert!((Act::Tanh.apply_scalar(0.5) - 0.5f32.tanh()).abs() < 1e-7);
+        assert!((Act::Softplus.apply_scalar(0.0) - (2.0f32).ln()).abs() < 1e-6);
+        assert_eq!(Act::Softplus.apply_scalar(30.0), 30.0); // stable branch
+        assert!(Act::from_name("gelu").is_err());
+    }
+
+    #[test]
+    fn linear_from_json_and_forward() {
+        let v = json::parse(
+            r#"{"kind":"linear","w":[[1,0],[0,2]],"b":[0.5,-0.5],"act":"id"}"#,
+        )
+        .unwrap();
+        let l = Linear::from_json(&v).unwrap();
+        let x = Tensor::new(&[1, 2], vec![3.0, 4.0]).unwrap();
+        let y = l.forward(&x).unwrap();
+        assert_eq!(y.data(), &[3.5, 7.5]);
+        assert_eq!(l.macs(), 4);
+    }
+
+    #[test]
+    fn mlp_chains_activations() {
+        let v = json::parse(
+            r#"[{"w":[[100]],"b":[0],"act":"tanh"},{"w":[[2]],"b":[1],"act":"id"}]"#,
+        )
+        .unwrap();
+        let mlp = Mlp::from_json(&v).unwrap();
+        let y = mlp.forward(&Tensor::new(&[1, 1], vec![5.0]).unwrap()).unwrap();
+        assert!((y.data()[0] - 3.0).abs() < 1e-5); // tanh(500)≈1 → 2·1+1
+    }
+
+    #[test]
+    fn conv_from_json() {
+        let v = json::parse(r#"{"kind":"conv2d","w":[[[[1]]]],"b":[2]}"#).unwrap();
+        let c = Conv2d::from_json(&v).unwrap();
+        let x = Tensor::full(&[1, 1, 2, 2], 3.0);
+        let y = c.forward(&x).unwrap();
+        assert_eq!(y.data(), &[5.0, 5.0, 5.0, 5.0]);
+        assert_eq!(c.macs(16), 256);
+    }
+
+    #[test]
+    fn prelu_channelwise() {
+        let p = PRelu {
+            alpha: vec![0.5, 0.0],
+        };
+        let x = Tensor::new(&[1, 2, 1, 1], vec![-2.0, -2.0]).unwrap();
+        let y = p.forward(&x).unwrap();
+        assert_eq!(y.data(), &[-1.0, 0.0]);
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        let v = json::parse(r#"{"w":[[1,2],[3]],"b":[0],"act":"id"}"#).unwrap();
+        assert!(Linear::from_json(&v).is_err()); // ragged
+        let v = json::parse(r#"{"w":[1,2],"b":[0],"act":"id"}"#).unwrap();
+        assert!(Linear::from_json(&v).is_err()); // 1-d weights
+    }
+}

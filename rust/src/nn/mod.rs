@@ -1,0 +1,16 @@
+//! Native inference of the python-trained networks.
+//!
+//! Loads the weight JSON written by `python/compile/aot.py` and evaluates
+//! the exact same architectures (MLP fields with time features, DepthCat
+//! conv fields, hypersolver MLP/CNN nets, image h_x/h_y heads) on
+//! [`Tensor`]s. Numerics are cross-validated against both the JAX layer
+//! (via exported ground-truth blobs) and the PJRT field executables
+//! (integration tests).
+
+pub mod field;
+pub mod layers;
+pub mod model;
+
+pub use field::{ConvField, HyperCnn, HyperMlp, MlpField, TimeMode};
+pub use layers::{Act, Conv2d, Linear, PRelu};
+pub use model::{CnfModel, ImageModel, TrackingModel};

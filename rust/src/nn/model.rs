@@ -1,0 +1,151 @@
+//! Task-level models assembled from exported weight files.
+
+use std::path::Path;
+
+use crate::nn::field::{ConvField, HyperCnn, HyperMlp, MlpField};
+use crate::nn::layers::{Conv2d, Linear};
+use crate::tensor::Tensor;
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+/// CNF model (field + HyperHeun net) — `weights/cnf_<density>.json`.
+#[derive(Clone, Debug)]
+pub struct CnfModel {
+    pub field: MlpField,
+    pub hyper: HyperMlp,
+}
+
+impl CnfModel {
+    pub fn from_json(v: &Value) -> Result<CnfModel> {
+        Ok(CnfModel {
+            field: MlpField::from_json(v.req("field")?)?,
+            hyper: HyperMlp::from_json(v.req("hyper")?)?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<CnfModel> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+}
+
+/// Tracking model (Galerkin-flavoured field + trajectory-fitted HyperEuler).
+#[derive(Clone, Debug)]
+pub struct TrackingModel {
+    pub field: MlpField,
+    pub hyper: HyperMlp,
+}
+
+impl TrackingModel {
+    pub fn from_json(v: &Value) -> Result<TrackingModel> {
+        Ok(TrackingModel {
+            field: MlpField::from_json(v.req("field")?)?,
+            hyper: HyperMlp::from_json(v.req("hyper")?)?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<TrackingModel> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+}
+
+/// Image classification model: h_x augmenter, conv field, h_y head, and the
+/// HyperEuler (plus optionally HyperMidpoint) correction nets.
+#[derive(Clone, Debug)]
+pub struct ImageModel {
+    pub hw: usize,
+    pub in_ch: usize,
+    pub aug_ch: usize,
+    pub hx: Conv2d,
+    pub field: ConvField,
+    pub hy_conv: Conv2d,
+    pub hy_lin: Linear,
+    pub hyper: HyperCnn,
+    pub hyper_midpoint: Option<HyperCnn>,
+}
+
+impl ImageModel {
+    pub fn from_json(v: &Value) -> Result<ImageModel> {
+        Ok(ImageModel {
+            hw: v.req("hw")?.as_usize().ok_or_else(|| Error::Json("hw".into()))?,
+            in_ch: v
+                .req("in_ch")?
+                .as_usize()
+                .ok_or_else(|| Error::Json("in_ch".into()))?,
+            aug_ch: v
+                .req("aug_ch")?
+                .as_usize()
+                .ok_or_else(|| Error::Json("aug_ch".into()))?,
+            hx: Conv2d::from_json(v.req("hx")?)?,
+            field: ConvField::from_json(v.req("field")?)?,
+            hy_conv: Conv2d::from_json(v.req("hy_conv")?)?,
+            hy_lin: Linear::from_json(v.req("hy_lin")?)?,
+            hyper: HyperCnn::from_json(v.req("hyper")?)?,
+            hyper_midpoint: match v.get("hyper_midpoint") {
+                Some(hm) => Some(HyperCnn::from_json(hm)?),
+                None => None,
+            },
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ImageModel> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+
+    /// Input augmentation: images (B, in_ch, H, W) → state (B, aug, H, W).
+    pub fn hx(&self, x: &Tensor) -> Result<Tensor> {
+        self.hx.forward(x)
+    }
+
+    /// Readout: terminal state → logits (B, n_classes).
+    pub fn hy(&self, z: &Tensor) -> Result<Tensor> {
+        let feat = self.hy_conv.forward(z)?;
+        let b = feat.shape()[0];
+        let flat = feat.reshape(&[b, feat.numel() / b])?;
+        self.hy_lin.forward(&flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tiny_image_json() -> Value {
+        json::parse(
+            r#"{
+              "kind":"image","hw":2,"in_ch":1,"aug_ch":1,
+              "hx":{"w":[[[[1]]]],"b":[0]},
+              "field":{
+                "c1":{"w":[[[[1]],[[0]]]],"b":[0]},
+                "c2":{"w":[[[[1]],[[0]]]],"b":[0]},
+                "c3":{"w":[[[[0]]]],"b":[0]}},
+              "hy_conv":{"w":[[[[1]]]],"b":[0]},
+              "hy_lin":{"w":[[1,0],[0,1],[1,0],[0,1]],"b":[0,0],"act":"id"},
+              "hyper":{
+                "c1":{"w":[[[[0]],[[0]],[[0]]]],"b":[0]},
+                "p1":{"alpha":[0.1]},
+                "c2":{"w":[[[[0]]]],"b":[0]}}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn image_model_loads_and_runs() {
+        let m = ImageModel::from_json(&tiny_image_json()).unwrap();
+        assert_eq!(m.hw, 2);
+        assert!(m.hyper_midpoint.is_none());
+        let x = Tensor::full(&[3, 1, 2, 2], 1.0);
+        let z0 = m.hx(&x).unwrap();
+        assert_eq!(z0.shape(), &[3, 1, 2, 2]);
+        let logits = m.hy(&z0).unwrap();
+        assert_eq!(logits.shape(), &[3, 2]);
+    }
+
+    #[test]
+    fn missing_key_reports_name() {
+        let v = json::parse(r#"{"kind":"cnf"}"#).unwrap();
+        let err = CnfModel::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("field"));
+    }
+}

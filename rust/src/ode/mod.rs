@@ -1,0 +1,168 @@
+//! ODE abstractions and analytic test fields.
+//!
+//! [`VectorField`] is the interface the native solvers integrate. States are
+//! batched [`Tensor`]s (leading batch dim) so one trait serves the 2-D CNF
+//! states, the NCHW conv states, and the analytic fields used for solver
+//! order verification.
+
+use crate::tensor::Tensor;
+
+/// A (possibly time-dependent) vector field ż = f(s, z).
+pub trait VectorField {
+    fn eval(&self, s: f32, z: &Tensor) -> Tensor;
+
+    /// Analytic MACs per *sample* per evaluation (0 when meaningless).
+    fn macs(&self) -> u64 {
+        0
+    }
+}
+
+impl<F: Fn(f32, &Tensor) -> Tensor> VectorField for F {
+    fn eval(&self, s: f32, z: &Tensor) -> Tensor {
+        self(s, z)
+    }
+}
+
+/// ż = λ z (exact: z0 e^{λ s}) — the classic stability/accuracy probe.
+pub struct Decay {
+    pub lambda: f32,
+}
+
+impl VectorField for Decay {
+    fn eval(&self, _s: f32, z: &Tensor) -> Tensor {
+        z.scale(self.lambda)
+    }
+}
+
+impl Decay {
+    pub fn exact(&self, z0: &Tensor, s: f32) -> Tensor {
+        z0.scale((self.lambda * s).exp())
+    }
+}
+
+/// Planar rotation ż = A z with A = [[0, ω], [-ω, 0]]
+/// (exact: clockwise rotation by ωs). States are (B, 2).
+pub struct Rotation {
+    pub omega: f32,
+}
+
+impl VectorField for Rotation {
+    fn eval(&self, _s: f32, z: &Tensor) -> Tensor {
+        let b = z.shape()[0];
+        Tensor::from_fn(&[b, 2], |i| {
+            let (row, col) = (i / 2, i % 2);
+            let x = z.data()[row * 2];
+            let y = z.data()[row * 2 + 1];
+            if col == 0 {
+                self.omega * y
+            } else {
+                -self.omega * x
+            }
+        })
+    }
+}
+
+impl Rotation {
+    pub fn exact(&self, z0: &Tensor, s: f32) -> Tensor {
+        let (c, si) = ((self.omega * s).cos(), (self.omega * s).sin());
+        let b = z0.shape()[0];
+        Tensor::from_fn(&[b, 2], |i| {
+            let (row, col) = (i / 2, i % 2);
+            let x = z0.data()[row * 2];
+            let y = z0.data()[row * 2 + 1];
+            if col == 0 {
+                c * x + si * y
+            } else {
+                -si * x + c * y
+            }
+        })
+    }
+}
+
+/// Van der Pol oscillator (µ controls stiffness) — the adversarial /
+/// stiffness discussion of paper §B.2 needs a controllably stiff field.
+pub struct VanDerPol {
+    pub mu: f32,
+}
+
+impl VectorField for VanDerPol {
+    fn eval(&self, _s: f32, z: &Tensor) -> Tensor {
+        let b = z.shape()[0];
+        Tensor::from_fn(&[b, 2], |i| {
+            let (row, col) = (i / 2, i % 2);
+            let x = z.data()[row * 2];
+            let y = z.data()[row * 2 + 1];
+            if col == 0 {
+                y
+            } else {
+                self.mu * (1.0 - x * x) * y - x
+            }
+        })
+    }
+}
+
+/// Time-dependent field ż = cos(2πs)·1 (exact: z0 + sin(2πs)/2π) — catches
+/// solvers that mishandle stage times c_i.
+pub struct TimeCosine;
+
+impl VectorField for TimeCosine {
+    fn eval(&self, s: f32, z: &Tensor) -> Tensor {
+        let v = (2.0 * std::f32::consts::PI * s).cos();
+        Tensor::full(z.shape(), v)
+    }
+}
+
+impl TimeCosine {
+    pub fn exact(&self, z0: &Tensor, s: f32) -> Tensor {
+        let two_pi = 2.0 * std::f32::consts::PI;
+        let shift = (two_pi * s).sin() / two_pi;
+        z0.map(|x| x + shift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_field_and_exact() {
+        let f = Decay { lambda: -2.0 };
+        let z = Tensor::full(&[1, 3], 1.0);
+        let dz = f.eval(0.0, &z);
+        assert_eq!(dz.data(), &[-2.0, -2.0, -2.0]);
+        let e = f.exact(&z, 1.0);
+        assert!((e.data()[0] - (-2.0f32).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let f = Rotation { omega: 1.0 };
+        let z0 = Tensor::new(&[1, 2], vec![3.0, 4.0]).unwrap();
+        let z1 = f.exact(&z0, 0.73);
+        assert!((z1.frobenius_norm() - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rotation_field_orthogonal_to_state() {
+        let f = Rotation { omega: 2.0 };
+        let z = Tensor::new(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let dz = f.eval(0.0, &z);
+        let dot = z.data()[0] * dz.data()[0] + z.data()[1] * dz.data()[1];
+        assert!(dot.abs() < 1e-6);
+    }
+
+    #[test]
+    fn closure_is_a_field() {
+        let f = |_s: f32, z: &Tensor| z.scale(2.0);
+        let z = Tensor::full(&[2, 2], 1.0);
+        assert_eq!(f.eval(0.0, &z).data()[0], 2.0);
+    }
+
+    #[test]
+    fn time_cosine_exact() {
+        let f = TimeCosine;
+        let z0 = Tensor::zeros(&[1, 1]);
+        let e = f.exact(&z0, 0.25);
+        assert!((e.data()[0] - 1.0 / (2.0 * std::f32::consts::PI)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,219 @@
+//! The PJRT executor thread: owns the `!Send` XLA handles, serves execution
+//! requests over channels, compiles HLO lazily and caches executables.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+
+use crate::{Error, Result};
+
+/// A request to the executor thread.
+enum Msg {
+    /// Ensure the HLO at `path` is compiled under `key`.
+    Load {
+        key: String,
+        path: PathBuf,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    /// Execute `key` with f32 inputs (data, shape) pairs; reply with all f32
+    /// outputs flattened (tuple outputs decomposed in order).
+    Run {
+        key: String,
+        inputs: Vec<(Vec<f32>, Vec<usize>)>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the executor thread (cheaply cloneable).
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+/// The executor: spawn once, share the handle.
+pub struct Executor {
+    handle: ExecutorHandle,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn the executor thread and bring up the PJRT CPU client on it.
+    pub fn spawn() -> Result<Executor> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_main(rx, ready_tx))
+            .map_err(|e| Error::Other(format!("spawn executor: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Other("executor died at startup".into()))??;
+        Ok(Executor {
+            handle: ExecutorHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl ExecutorHandle {
+    /// Compile (or confirm cached) the HLO text file under `key`.
+    pub fn load(&self, key: &str, path: PathBuf) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Load {
+                key: key.to_string(),
+                path,
+                reply,
+            })
+            .map_err(|_| Error::Other("executor gone".into()))?;
+        rx.recv().map_err(|_| Error::Other("executor gone".into()))?
+    }
+
+    /// Execute `key` on a single flattened f32 input. Returns every output
+    /// leaf as a flat f32 vector (tuple outputs in declaration order).
+    /// Takes ownership of the buffer — no copy on the hot path.
+    pub fn run(&self, key: &str, input: Vec<f32>, in_shape: &[usize]) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Run {
+                key: key.to_string(),
+                inputs: vec![(input, in_shape.to_vec())],
+                reply,
+            })
+            .map_err(|_| Error::Other("executor gone".into()))?;
+        rx.recv().map_err(|_| Error::Other("executor gone".into()))?
+    }
+
+    /// Execute `key` with several (data, shape) f32 arguments.
+    pub fn run_multi(&self, key: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Run {
+                key: key.to_string(),
+                inputs: inputs
+                    .iter()
+                    .map(|(d, s)| (d.to_vec(), s.to_vec()))
+                    .collect(),
+                reply,
+            })
+            .map_err(|_| Error::Other("executor gone".into()))?;
+        rx.recv().map_err(|_| Error::Other("executor gone".into()))?
+    }
+}
+
+fn executor_main(rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.into()));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Load { key, path, reply } => {
+                let result = if cache.contains_key(&key) {
+                    Ok(())
+                } else {
+                    load_exe(&client, &path).map(|exe| {
+                        cache.insert(key, exe);
+                    })
+                };
+                let _ = reply.send(result);
+            }
+            Msg::Run { key, inputs, reply } => {
+                let result = match cache.get(&key) {
+                    None => Err(Error::Other(format!(
+                        "executable {key:?} not loaded"
+                    ))),
+                    Some(exe) => run_exe(exe, &inputs),
+                };
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    path: &std::path::Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| Error::Other("non-utf8 path".into()))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn run_exe(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[(Vec<f32>, Vec<usize>)],
+) -> Result<Vec<Vec<f32>>> {
+    let mut lits = Vec::with_capacity(inputs.len());
+    for (data, shape) in inputs {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lits.push(xla::Literal::vec1(data).reshape(&dims)?);
+    }
+    let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    // exports are tuple-rooted (return_tuple=True); decompose every leaf
+    let leaves = result.to_tuple()?;
+    let mut out = Vec::with_capacity(leaves.len());
+    for leaf in leaves {
+        // nfe counters come back as i32/i64; normalise everything to f32
+        let ty = leaf.ty()?;
+        let v: Vec<f32> = match ty {
+            xla::ElementType::F32 => leaf.to_vec::<f32>()?,
+            xla::ElementType::S32 => leaf
+                .to_vec::<i32>()?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            xla::ElementType::S64 => leaf
+                .to_vec::<i64>()?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+            other => {
+                let conv = leaf.convert(xla::PrimitiveType::F32)?;
+                let _ = other;
+                conv.to_vec::<f32>()?
+            }
+        };
+        out.push(v);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    // Executor tests that need artifacts live in rust/tests/ (integration);
+    // here we only verify error paths that don't require a PJRT client.
+
+    #[test]
+    fn handle_is_clone() {
+        fn assert_clone<T: Clone>() {}
+        assert_clone::<super::ExecutorHandle>();
+    }
+}

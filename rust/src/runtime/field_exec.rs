@@ -1,0 +1,65 @@
+//! A PJRT-backed [`VectorField`]: rust drives the (adaptive) stepping loop,
+//! XLA evaluates f.
+//!
+//! This is the hybrid mode of the architecture: the exported
+//! `<task>_field.hlo.txt` computes one f(s, z) evaluation for the task's
+//! batched state; [`crate::solvers::dopri5`] supplies the step-size control
+//! from the rust side. Slower per-eval than the fused full-solve
+//! executables (one host↔PJRT round trip per stage) but fully flexible —
+//! used for tolerance sweeps no fused export covers.
+
+use crate::ode::VectorField;
+use crate::runtime::exec::ExecutorHandle;
+use crate::tensor::Tensor;
+
+/// f(s, z) backed by a compiled field executable.
+pub struct PjrtField {
+    exec: ExecutorHandle,
+    key: String,
+    state_shape: Vec<usize>,
+    mac_f: u64,
+}
+
+impl PjrtField {
+    /// `key` must already be loaded in the executor. `state_shape` is the
+    /// exported batched state shape (leading batch dim).
+    pub fn new(exec: ExecutorHandle, key: &str, state_shape: &[usize], mac_f: u64) -> Self {
+        PjrtField {
+            exec,
+            key: key.to_string(),
+            state_shape: state_shape.to_vec(),
+            mac_f,
+        }
+    }
+}
+
+impl VectorField for PjrtField {
+    fn eval(&self, s: f32, z: &Tensor) -> Tensor {
+        // export signature: f(s: f32[1], z: state_shape) -> state_shape,
+        // fed as one flat buffer per argument
+        let outs = self
+            .exec
+            .run_two(&self.key, &[s], z.data(), &self.state_shape)
+            .expect("pjrt field eval");
+        Tensor::new(z.shape(), outs.into_iter().next().expect("one output"))
+            .expect("field output shape")
+    }
+
+    fn macs(&self) -> u64 {
+        self.mac_f
+    }
+}
+
+impl ExecutorHandle {
+    /// Execute a two-argument executable (scalar s + state z). Kept here so
+    /// `exec.rs` stays a generic single-input engine.
+    pub fn run_two(
+        &self,
+        key: &str,
+        s: &[f32],
+        z: &[f32],
+        z_shape: &[usize],
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        self.run_multi(key, &[(s, &[1]), (z, z_shape)])
+    }
+}

@@ -1,0 +1,266 @@
+//! `artifacts/manifest.json` — the registry of everything python exported.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+/// Reference to a raw data blob (shape + relative path).
+#[derive(Clone, Debug)]
+pub struct BlobRef {
+    pub path: String,
+    pub shape: Vec<usize>,
+}
+
+impl BlobRef {
+    fn from_json(v: &Value) -> Result<BlobRef> {
+        Ok(BlobRef {
+            path: v
+                .req("path")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("blob path".into()))?
+                .to_string(),
+            shape: v.req("shape")?.as_usize_vec()?,
+        })
+    }
+}
+
+/// One exported (solver, K) full-solve executable + its measured metrics.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub solver: String,
+    pub k: usize,
+    pub hyper: bool,
+    pub hlo: String,
+    pub nfe: u64,
+    /// analytic MACs per sample
+    pub macs: u64,
+    /// measured terminal MAPE vs dopri5(1e-6) on the eval batch
+    pub mape: f64,
+    /// accuracy drop vs dopri5 (image tasks only)
+    pub acc_drop: Option<f64>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    /// true when the executable returns (z, nfe) (the dopri5 export)
+    pub returns_nfe: bool,
+}
+
+impl Variant {
+    fn from_json(v: &Value) -> Result<Variant> {
+        Ok(Variant {
+            name: req_str(v, "name")?,
+            solver: req_str(v, "solver")?,
+            k: v.req("k")?.as_usize().unwrap_or(0),
+            hyper: v.req("hyper")?.as_bool().unwrap_or(false),
+            hlo: req_str(v, "hlo")?,
+            nfe: v.req("nfe")?.as_i64().unwrap_or(0) as u64,
+            macs: v.req("macs")?.as_i64().unwrap_or(0) as u64,
+            mape: v.req("mape")?.as_f64().unwrap_or(f64::NAN),
+            acc_drop: v.get("acc_drop").and_then(Value::as_f64),
+            in_shape: v.req("in_shape")?.as_usize_vec()?,
+            out_shape: v.req("out_shape")?.as_usize_vec()?,
+            returns_nfe: v.get("outputs").is_some(),
+        })
+    }
+}
+
+/// One task (cnf_<density>, img_<ds>, tracking).
+#[derive(Clone, Debug)]
+pub struct TaskEntry {
+    pub name: String,
+    pub kind: String,
+    pub state_shape: Vec<usize>,
+    pub s_span: (f32, f32),
+    pub weights: String,
+    pub field_hlo: String,
+    pub mac_f: u64,
+    pub mac_g: u64,
+    /// final residual-fitting loss δ of the hypersolver
+    pub delta: f64,
+    pub hyper_base: String,
+    pub truth_acc: Option<f64>,
+    pub variants: Vec<Variant>,
+    pub data: BTreeMap<String, BlobRef>,
+}
+
+impl TaskEntry {
+    pub fn variant(&self, name: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// The batch size every full-solve executable was exported at.
+    pub fn batch(&self) -> usize {
+        self.state_shape.first().copied().unwrap_or(1)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub stamp: String,
+    pub quick: bool,
+    pub tasks: BTreeMap<String, TaskEntry>,
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    Ok(v.req(key)?
+        .as_str()
+        .ok_or_else(|| Error::Manifest(format!("{key} must be a string")))?
+        .to_string())
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        if !path.exists() {
+            return Err(Error::Manifest(format!(
+                "{} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let root = json::parse_file(&path)?;
+        let mut tasks = BTreeMap::new();
+        let tobj = root
+            .req("tasks")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("tasks must be an object".into()))?;
+        for (name, tv) in tobj {
+            let span = tv.req("s_span")?;
+            let span = span
+                .as_arr()
+                .ok_or_else(|| Error::Manifest("s_span".into()))?;
+            let variants = tv
+                .req("variants")?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest("variants".into()))?
+                .iter()
+                .map(Variant::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let mut data = BTreeMap::new();
+            if let Some(Value::Obj(dm)) = tv.get("data") {
+                for (k, v) in dm {
+                    data.insert(k.clone(), BlobRef::from_json(v)?);
+                }
+            }
+            let macs = tv.req("macs")?;
+            tasks.insert(
+                name.clone(),
+                TaskEntry {
+                    name: name.clone(),
+                    kind: req_str(tv, "kind")?,
+                    state_shape: tv.req("state")?.req("shape")?.as_usize_vec()?,
+                    s_span: (
+                        span[0].as_f32().unwrap_or(0.0),
+                        span[1].as_f32().unwrap_or(1.0),
+                    ),
+                    weights: req_str(tv, "weights")?,
+                    field_hlo: req_str(tv, "field_hlo")?,
+                    mac_f: macs.req("field")?.as_i64().unwrap_or(0) as u64,
+                    mac_g: macs.req("hyper")?.as_i64().unwrap_or(0) as u64,
+                    delta: tv.req("delta")?.as_f64().unwrap_or(f64::NAN),
+                    hyper_base: req_str(tv, "hyper_base")?,
+                    truth_acc: tv.get("truth_acc").and_then(Value::as_f64),
+                    variants,
+                    data,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            stamp: req_str(&root, "stamp").unwrap_or_default(),
+            quick: root.get("quick").and_then(Value::as_bool).unwrap_or(false),
+            tasks,
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Manifest> {
+        Self::load(&crate::artifacts_dir())
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskEntry> {
+        self.tasks
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown task {name:?}")))
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    pub fn blob_path(&self, b: &BlobRef) -> PathBuf {
+        self.dir.join(&b.path)
+    }
+
+    pub fn weights_path(&self, task: &TaskEntry) -> PathBuf {
+        self.dir.join(&task.weights)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "stamp": "abc", "seed": 0, "quick": false,
+      "tasks": {
+        "cnf_rings": {
+          "kind": "cnf",
+          "state": {"shape": [256, 2]},
+          "s_span": [0.0, 1.0],
+          "weights": "weights/cnf_rings.json",
+          "field_hlo": "cnf_rings_field.hlo.txt",
+          "macs": {"field": 8512, "hyper": 4608},
+          "delta": 0.03,
+          "hyper_base": "heun",
+          "variants": [
+            {"name": "heun_k1", "solver": "heun", "k": 1, "hyper": false,
+             "hlo": "cnf_rings_heun_k1.hlo.txt", "nfe": 2, "macs": 17024,
+             "mape": 0.119, "in_shape": [256, 2], "out_shape": [256, 2]},
+            {"name": "dopri5", "solver": "dopri5", "k": 0, "hyper": false,
+             "hlo": "cnf_rings_dopri5.hlo.txt", "nfe": 28, "macs": 238336,
+             "mape": 0.0, "in_shape": [256, 2], "out_shape": [256, 2],
+             "outputs": ["z", "nfe"]}
+          ],
+          "data": {"z0": {"path": "data/cnf_rings_z0.bin", "shape": [256, 2]}}
+        }
+      }
+    }"#;
+
+    fn write_sample() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "hsolve_manifest_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = write_sample();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.stamp, "abc");
+        let t = m.task("cnf_rings").unwrap();
+        assert_eq!(t.kind, "cnf");
+        assert_eq!(t.batch(), 256);
+        assert_eq!(t.mac_f, 8512);
+        assert_eq!(t.variants.len(), 2);
+        let v = t.variant("heun_k1").unwrap();
+        assert_eq!(v.nfe, 2);
+        assert!(!v.returns_nfe);
+        assert!(t.variant("dopri5").unwrap().returns_nfe);
+        assert!(m.task("nope").is_err());
+        assert!(t.data.contains_key("z0"));
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

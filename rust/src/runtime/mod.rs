@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile, execute.
+//!
+//! The `xla` crate's handles wrap raw PJRT pointers and are `!Send`, so all
+//! PJRT state lives on one dedicated **executor thread** ([`exec::Executor`]);
+//! the rest of the system talks to it through channels. On this testbed
+//! (single-core CPU PJRT) that costs nothing and it keeps the coordinator's
+//! threading model independent of backend thread-safety.
+
+pub mod exec;
+pub mod field_exec;
+pub mod manifest;
+
+pub use exec::{Executor, ExecutorHandle};
+pub use manifest::{BlobRef, Manifest, TaskEntry, Variant};

@@ -1,0 +1,347 @@
+//! Explicit Butcher tableaus (paper eq. 3 / Fig. 5).
+
+use crate::{Error, Result};
+
+/// An explicit Runge-Kutta tableau. `a[i]` holds the i entries of stage i's
+/// row (strictly lower triangular).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tableau {
+    pub name: String,
+    pub a: Vec<Vec<f32>>,
+    pub b: Vec<f32>,
+    pub c: Vec<f32>,
+    pub order: u32,
+    /// Embedded lower-order weights (adaptive pairs only).
+    pub b_err: Option<Vec<f32>>,
+}
+
+impl Tableau {
+    pub fn stages(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Internal consistency: matching lengths, c_i = Σ_j a_ij, Σ b_i = 1.
+    pub fn validate(&self) -> Result<()> {
+        let p = self.stages();
+        if self.a.len() != p || self.c.len() != p {
+            return Err(Error::Other(format!(
+                "tableau {}: inconsistent stage counts",
+                self.name
+            )));
+        }
+        for (i, row) in self.a.iter().enumerate() {
+            if row.len() != i {
+                return Err(Error::Other(format!(
+                    "tableau {}: row {i} has {} entries",
+                    self.name,
+                    row.len()
+                )));
+            }
+            let rowsum: f32 = row.iter().sum();
+            if (rowsum - self.c[i]).abs() > 1e-5 {
+                return Err(Error::Other(format!(
+                    "tableau {}: c[{i}] != row sum",
+                    self.name
+                )));
+            }
+        }
+        let bsum: f32 = self.b.iter().sum();
+        if (bsum - 1.0).abs() > 1e-5 {
+            return Err(Error::Other(format!(
+                "tableau {}: b does not sum to 1",
+                self.name
+            )));
+        }
+        if let Some(be) = &self.b_err {
+            if be.len() != p {
+                return Err(Error::Other(format!(
+                    "tableau {}: b_err length",
+                    self.name
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn euler() -> Tableau {
+        Tableau {
+            name: "euler".into(),
+            a: vec![vec![]],
+            b: vec![1.0],
+            c: vec![0.0],
+            order: 1,
+            b_err: None,
+        }
+    }
+
+    pub fn midpoint() -> Tableau {
+        Tableau {
+            name: "midpoint".into(),
+            a: vec![vec![], vec![0.5]],
+            b: vec![0.0, 1.0],
+            c: vec![0.0, 0.5],
+            order: 2,
+            b_err: None,
+        }
+    }
+
+    pub fn heun() -> Tableau {
+        Tableau {
+            name: "heun".into(),
+            a: vec![vec![], vec![1.0]],
+            b: vec![0.5, 0.5],
+            c: vec![0.0, 1.0],
+            order: 2,
+            b_err: None,
+        }
+    }
+
+    pub fn rk4() -> Tableau {
+        Tableau {
+            name: "rk4".into(),
+            a: vec![vec![], vec![0.5], vec![0.0, 0.5], vec![0.0, 0.0, 1.0]],
+            b: vec![1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+            c: vec![0.0, 0.5, 0.5, 1.0],
+            order: 4,
+            b_err: None,
+        }
+    }
+
+    /// Second-order α family (Fig. 5 right): α = 0.5 is midpoint, α = 1 is
+    /// Heun.
+    pub fn alpha(alpha: f32) -> Result<Tableau> {
+        if alpha <= 0.0 {
+            return Err(Error::Other("alpha must be positive".into()));
+        }
+        Ok(Tableau {
+            name: format!("alpha{alpha}"),
+            a: vec![vec![], vec![alpha]],
+            b: vec![1.0 - 1.0 / (2.0 * alpha), 1.0 / (2.0 * alpha)],
+            c: vec![0.0, alpha],
+            order: 2,
+            b_err: None,
+        })
+    }
+
+    /// Ralston's second-order method (minimal error bound among 2-stage
+    /// explicit RK; equals the α family at α = 2/3).
+    pub fn ralston() -> Tableau {
+        Tableau {
+            name: "ralston".into(),
+            a: vec![vec![], vec![2.0 / 3.0]],
+            b: vec![0.25, 0.75],
+            c: vec![0.0, 2.0 / 3.0],
+            order: 2,
+            b_err: None,
+        }
+    }
+
+    /// Kutta's 3/8 rule (4th order, the other classic 4-stage tableau).
+    pub fn rk38() -> Tableau {
+        Tableau {
+            name: "rk38".into(),
+            a: vec![
+                vec![],
+                vec![1.0 / 3.0],
+                vec![-1.0 / 3.0, 1.0],
+                vec![1.0, -1.0, 1.0],
+            ],
+            b: vec![1.0 / 8.0, 3.0 / 8.0, 3.0 / 8.0, 1.0 / 8.0],
+            c: vec![0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0],
+            order: 4,
+            b_err: None,
+        }
+    }
+
+    /// Bogacki–Shampine 3(2) embedded pair (the `ode23` workhorse) — a
+    /// second adaptive method beside dopri5, used by the ablation benches.
+    pub fn bs32() -> Tableau {
+        Tableau {
+            name: "bs32".into(),
+            a: vec![
+                vec![],
+                vec![0.5],
+                vec![0.0, 0.75],
+                vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0],
+            ],
+            b: vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0],
+            c: vec![0.0, 0.5, 0.75, 1.0],
+            order: 3,
+            b_err: Some(vec![7.0 / 24.0, 0.25, 1.0 / 3.0, 0.125]),
+        }
+    }
+
+    /// Dormand-Prince 5(4) pair.
+    pub fn dopri5() -> Tableau {
+        Tableau {
+            name: "dopri5".into(),
+            a: vec![
+                vec![],
+                vec![1.0 / 5.0],
+                vec![3.0 / 40.0, 9.0 / 40.0],
+                vec![44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0],
+                vec![
+                    19372.0 / 6561.0,
+                    -25360.0 / 2187.0,
+                    64448.0 / 6561.0,
+                    -212.0 / 729.0,
+                ],
+                vec![
+                    9017.0 / 3168.0,
+                    -355.0 / 33.0,
+                    46732.0 / 5247.0,
+                    49.0 / 176.0,
+                    -5103.0 / 18656.0,
+                ],
+                vec![
+                    35.0 / 384.0,
+                    0.0,
+                    500.0 / 1113.0,
+                    125.0 / 192.0,
+                    -2187.0 / 6784.0,
+                    11.0 / 84.0,
+                ],
+            ],
+            b: vec![
+                35.0 / 384.0,
+                0.0,
+                500.0 / 1113.0,
+                125.0 / 192.0,
+                -2187.0 / 6784.0,
+                11.0 / 84.0,
+                0.0,
+            ],
+            c: vec![0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+            order: 5,
+            b_err: Some(vec![
+                5179.0 / 57600.0,
+                0.0,
+                7571.0 / 16695.0,
+                393.0 / 640.0,
+                -92097.0 / 339200.0,
+                187.0 / 2100.0,
+                1.0 / 40.0,
+            ]),
+        }
+    }
+
+    /// Resolve by name; `alphaX.Y` builds the α family.
+    pub fn by_name(name: &str) -> Result<Tableau> {
+        match name {
+            "euler" => Ok(Self::euler()),
+            "midpoint" => Ok(Self::midpoint()),
+            "heun" => Ok(Self::heun()),
+            "ralston" => Ok(Self::ralston()),
+            "rk4" => Ok(Self::rk4()),
+            "rk38" => Ok(Self::rk38()),
+            "bs32" => Ok(Self::bs32()),
+            "dopri5" => Ok(Self::dopri5()),
+            _ => {
+                if let Some(rest) = name.strip_prefix("alpha") {
+                    let a: f32 = rest
+                        .parse()
+                        .map_err(|_| Error::Other(format!("bad solver {name}")))?;
+                    Self::alpha(a)
+                } else {
+                    Err(Error::Other(format!("unknown solver {name:?}")))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all() -> Vec<Tableau> {
+        vec![
+            Tableau::euler(),
+            Tableau::midpoint(),
+            Tableau::heun(),
+            Tableau::ralston(),
+            Tableau::rk4(),
+            Tableau::rk38(),
+            Tableau::bs32(),
+            Tableau::alpha(0.3).unwrap(),
+            Tableau::dopri5(),
+        ]
+    }
+
+    #[test]
+    fn ralston_is_alpha_two_thirds() {
+        let r = Tableau::ralston();
+        let a = Tableau::alpha(2.0 / 3.0).unwrap();
+        for (x, y) in r.b.iter().zip(&a.b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bs32_embedded_sums_to_one() {
+        let s: f32 = Tableau::bs32().b_err.unwrap().iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fourth_order_condition_rk38() {
+        // Σ b_i c_i = 1/2 and Σ b_i c_i² = 1/3 for order ≥ 3
+        let t = Tableau::rk38();
+        let s1: f32 = t.b.iter().zip(&t.c).map(|(b, c)| b * c).sum();
+        let s2: f32 = t.b.iter().zip(&t.c).map(|(b, c)| b * c * c).sum();
+        assert!((s1 - 0.5).abs() < 1e-6);
+        assert!((s2 - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_tableaus_validate() {
+        for t in all() {
+            t.validate().unwrap_or_else(|e| panic!("{}: {e}", t.name));
+        }
+    }
+
+    #[test]
+    fn second_order_condition() {
+        for t in [Tableau::midpoint(), Tableau::heun(), Tableau::alpha(0.7).unwrap()] {
+            let s: f32 = t.b.iter().zip(&t.c).map(|(b, c)| b * c).sum();
+            assert!((s - 0.5).abs() < 1e-6, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn alpha_recovers_midpoint_and_heun() {
+        let mid = Tableau::alpha(0.5).unwrap();
+        assert_eq!(mid.b, Tableau::midpoint().b);
+        let heun = Tableau::alpha(1.0).unwrap();
+        assert_eq!(heun.b, Tableau::heun().b);
+    }
+
+    #[test]
+    fn dopri5_embedded_sums_to_one() {
+        let t = Tableau::dopri5();
+        let s: f32 = t.b_err.unwrap().iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for t in all() {
+            if !t.name.starts_with("alpha") {
+                assert_eq!(Tableau::by_name(&t.name).unwrap().b, t.b);
+            }
+        }
+        assert!((Tableau::by_name("alpha0.25").unwrap().c[1] - 0.25).abs() < 1e-6);
+        assert!(Tableau::by_name("adams").is_err());
+        assert!(Tableau::by_name("alpha0").is_err());
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut t = Tableau::rk4();
+        t.b[0] = 0.9;
+        assert!(t.validate().is_err());
+        let mut t2 = Tableau::rk4();
+        t2.c[1] = 0.7;
+        assert!(t2.validate().is_err());
+    }
+}

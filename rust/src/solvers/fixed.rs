@@ -1,0 +1,205 @@
+//! Fixed-step explicit RK integration over any [`VectorField`].
+
+use crate::ode::VectorField;
+use crate::solvers::butcher::Tableau;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Compute the stage derivatives r_1..r_p at (s, z).
+pub fn rk_stages<F: VectorField + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    s: f32,
+    z: &Tensor,
+    eps: f32,
+) -> Result<Vec<Tensor>> {
+    let mut stages: Vec<Tensor> = Vec::with_capacity(tab.stages());
+    for i in 0..tab.stages() {
+        let mut zi = z.clone();
+        for (j, &aij) in tab.a[i].iter().enumerate() {
+            if aij != 0.0 {
+                zi.axpy(eps * aij, &stages[j])?;
+            }
+        }
+        stages.push(f.eval(s + tab.c[i] * eps, &zi));
+    }
+    Ok(stages)
+}
+
+/// The update direction ψ = Σ b_i r_i (eq. 2).
+pub fn psi<F: VectorField + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    s: f32,
+    z: &Tensor,
+    eps: f32,
+) -> Result<Tensor> {
+    let stages = rk_stages(f, tab, s, z, eps)?;
+    combine(z.shape(), &stages, &tab.b)
+}
+
+/// Σ b_i r_i without the state added (helper shared with adaptive).
+pub(crate) fn combine(shape: &[usize], stages: &[Tensor], b: &[f32]) -> Result<Tensor> {
+    let mut acc = Tensor::zeros(shape);
+    for (bi, ri) in b.iter().zip(stages) {
+        if *bi != 0.0 {
+            acc.axpy(*bi, ri)?;
+        }
+    }
+    Ok(acc)
+}
+
+/// One explicit RK step.
+pub fn rk_step<F: VectorField + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    s: f32,
+    z: &Tensor,
+    eps: f32,
+) -> Result<Tensor> {
+    let mut out = z.clone();
+    out.axpy(eps, &psi(f, tab, s, z, eps)?)?;
+    Ok(out)
+}
+
+/// Integrate over `s_span` with K equal steps; returns the terminal state.
+/// NFE = stages × K.
+pub fn odeint_fixed<F: VectorField + ?Sized>(
+    f: &F,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    steps: usize,
+    tab: &Tableau,
+) -> Result<Tensor> {
+    assert!(steps > 0, "need at least one step");
+    let eps = (s_span.1 - s_span.0) / steps as f32;
+    let mut z = z0.clone();
+    for k in 0..steps {
+        let s = s_span.0 + k as f32 * eps;
+        z = rk_step(f, tab, s, &z, eps)?;
+    }
+    Ok(z)
+}
+
+/// As [`odeint_fixed`] but returns the full (K+1)-point trajectory.
+pub fn odeint_fixed_traj<F: VectorField + ?Sized>(
+    f: &F,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    steps: usize,
+    tab: &Tableau,
+) -> Result<Vec<Tensor>> {
+    let eps = (s_span.1 - s_span.0) / steps as f32;
+    let mut traj = Vec::with_capacity(steps + 1);
+    traj.push(z0.clone());
+    for k in 0..steps {
+        let s = s_span.0 + k as f32 * eps;
+        let next = rk_step(f, tab, s, traj.last().unwrap(), eps)?;
+        traj.push(next);
+    }
+    Ok(traj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::{Decay, Rotation, TimeCosine};
+    use crate::util::propkit::{check, gen_vec, prop_assert};
+
+    #[test]
+    fn euler_one_step_decay() {
+        let f = Decay { lambda: -1.0 };
+        let z0 = Tensor::full(&[1, 1], 1.0);
+        let z1 = odeint_fixed(&f, &z0, (0.0, 0.1), 1, &Tableau::euler()).unwrap();
+        assert!((z1.data()[0] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn convergence_orders_on_rotation() {
+        let f = Rotation { omega: 1.0 };
+        let z0 = Tensor::new(&[1, 2], vec![1.0, 0.0]).unwrap();
+        let exact = f.exact(&z0, 1.0);
+        for (tab, expected) in [
+            (Tableau::euler(), 1.0),
+            (Tableau::midpoint(), 2.0),
+            (Tableau::heun(), 2.0),
+            (Tableau::alpha(0.4).unwrap(), 2.0),
+            (Tableau::rk4(), 4.0),
+        ] {
+            let err_k =
+                |k: usize| -> f32 {
+                    odeint_fixed(&f, &z0, (0.0, 1.0), k, &tab)
+                        .unwrap()
+                        .sub(&exact)
+                        .unwrap()
+                        .frobenius_norm()
+                };
+            let (e8, e16) = (err_k(8), err_k(16));
+            if e16 > 5e-6 {
+                let order = (e8 / e16).log2();
+                assert!(
+                    order > expected - 0.6,
+                    "{}: order {order} (e8={e8}, e16={e16})",
+                    tab.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stage_times_respected() {
+        // TimeCosine is state-independent: only correct c_i give 2nd order.
+        // NB: integrate over a PARTIAL period — over the full period both
+        // left-Riemann and midpoint quadratures are spectrally exact.
+        let f = TimeCosine;
+        let z0 = Tensor::zeros(&[1, 1]);
+        let exact = f.exact(&z0, 0.25);
+        let e_mid = odeint_fixed(&f, &z0, (0.0, 0.25), 8, &Tableau::midpoint())
+            .unwrap()
+            .sub(&exact)
+            .unwrap()
+            .frobenius_norm();
+        let e_eul = odeint_fixed(&f, &z0, (0.0, 0.25), 8, &Tableau::euler())
+            .unwrap()
+            .sub(&exact)
+            .unwrap()
+            .frobenius_norm();
+        assert!(e_mid < e_eul * 0.51, "midpoint {e_mid} vs euler {e_eul}");
+    }
+
+    #[test]
+    fn trajectory_endpoints_match() {
+        let f = Rotation { omega: 2.0 };
+        let z0 = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let traj = odeint_fixed_traj(&f, &z0, (0.0, 1.0), 10, &Tableau::rk4()).unwrap();
+        assert_eq!(traj.len(), 11);
+        let direct = odeint_fixed(&f, &z0, (0.0, 1.0), 10, &Tableau::rk4()).unwrap();
+        assert_eq!(traj[10], direct);
+        assert_eq!(traj[0], z0);
+    }
+
+    #[test]
+    fn backward_integration_property() {
+        check("forward then backward returns to start", 20, |rng| {
+            let z0 = Tensor::new(&[1, 2], gen_vec(rng, 2, 1.0)).unwrap();
+            let f = Rotation { omega: 1.0 };
+            let z1 = odeint_fixed(&f, &z0, (0.0, 1.0), 32, &Tableau::rk4()).unwrap();
+            let back = odeint_fixed(&f, &z1, (1.0, 0.0), 32, &Tableau::rk4()).unwrap();
+            let err = back.sub(&z0).unwrap().frobenius_norm();
+            prop_assert(err < 1e-4, format!("round trip error {err}"))
+        });
+    }
+
+    #[test]
+    fn psi_times_eps_is_step() {
+        let f = Rotation { omega: 1.0 };
+        let z0 = Tensor::new(&[1, 2], vec![0.5, -0.5]).unwrap();
+        for tab in [Tableau::euler(), Tableau::heun(), Tableau::rk4()] {
+            let p = psi(&f, &tab, 0.0, &z0, 0.2).unwrap();
+            let mut manual = z0.clone();
+            manual.axpy(0.2, &p).unwrap();
+            let step = rk_step(&f, &tab, 0.0, &z0, 0.2).unwrap();
+            assert_eq!(manual, step);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Hypersolved stepping (paper eq. 5): z' = z + ε ψ + ε^{p+1} g_ω(ε, s, z, ż).
+
+use crate::ode::VectorField;
+use crate::solvers::butcher::Tableau;
+use crate::solvers::fixed::{combine, rk_stages};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// The hypersolver correction network g_ω. `dz` is the first RK stage
+/// f(s, z) (free for every explicit method since c_1 = 0), mirroring the
+/// appendix B.1 template input `cat(z, dz, ds)`.
+pub trait HyperNet {
+    fn eval(&self, eps: f32, s: f32, z: &Tensor, dz: &Tensor) -> Tensor;
+
+    /// Analytic MACs per sample per evaluation.
+    fn macs(&self) -> u64 {
+        0
+    }
+}
+
+impl<G: Fn(f32, f32, &Tensor, &Tensor) -> Tensor> HyperNet for G {
+    fn eval(&self, eps: f32, s: f32, z: &Tensor, dz: &Tensor) -> Tensor {
+        self(eps, s, z, dz)
+    }
+}
+
+/// One hypersolved step.
+pub fn hyper_step<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    g: &G,
+    tab: &Tableau,
+    s: f32,
+    z: &Tensor,
+    eps: f32,
+) -> Result<Tensor> {
+    let stages = rk_stages(f, tab, s, z, eps)?;
+    let direction = combine(z.shape(), &stages, &tab.b)?;
+    let corr = g.eval(eps, s, z, &stages[0]);
+    let mut out = z.clone();
+    out.axpy(eps, &direction)?;
+    out.axpy(eps.powi(tab.order as i32 + 1), &corr)?;
+    Ok(out)
+}
+
+/// Hypersolved fixed-step integration; terminal state.
+pub fn odeint_hyper<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    g: &G,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    steps: usize,
+    tab: &Tableau,
+) -> Result<Tensor> {
+    assert!(steps > 0);
+    let eps = (s_span.1 - s_span.0) / steps as f32;
+    let mut z = z0.clone();
+    for k in 0..steps {
+        let s = s_span.0 + k as f32 * eps;
+        z = hyper_step(f, g, tab, s, &z, eps)?;
+    }
+    Ok(z)
+}
+
+/// As [`odeint_hyper`] but returns the (K+1)-point trajectory.
+pub fn odeint_hyper_traj<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    g: &G,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    steps: usize,
+    tab: &Tableau,
+) -> Result<Vec<Tensor>> {
+    let eps = (s_span.1 - s_span.0) / steps as f32;
+    let mut traj = Vec::with_capacity(steps + 1);
+    traj.push(z0.clone());
+    for k in 0..steps {
+        let s = s_span.0 + k as f32 * eps;
+        let next = hyper_step(f, g, tab, s, traj.last().unwrap(), eps)?;
+        traj.push(next);
+    }
+    Ok(traj)
+}
+
+/// The residual of eq. (6): R = (z_{k+1} − z_k − ε ψ) / ε^{p+1}, computed
+/// from ground-truth checkpoints. Used by tests and the fig2 bench to relate
+/// a hypersolver's fit quality δ to its local error.
+pub fn residual<F: VectorField + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    s: f32,
+    zk: &Tensor,
+    zk1: &Tensor,
+    eps: f32,
+) -> Result<Tensor> {
+    let direction = crate::solvers::fixed::psi(f, tab, s, zk, eps)?;
+    let mut r = zk1.sub(zk)?;
+    r.axpy(-eps, &direction)?;
+    Ok(r.scale(1.0 / eps.powi(tab.order as i32 + 1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::Rotation;
+    use crate::solvers::fixed::odeint_fixed;
+
+    fn zero_g() -> impl HyperNet {
+        |_e: f32, _s: f32, z: &Tensor, _dz: &Tensor| Tensor::zeros(z.shape())
+    }
+
+    #[test]
+    fn zero_correction_equals_base() {
+        let f = Rotation { omega: 1.0 };
+        let z0 = Tensor::new(&[1, 2], vec![1.0, 0.0]).unwrap();
+        for tab in [Tableau::euler(), Tableau::heun()] {
+            let zh = odeint_hyper(&f, &zero_g(), &z0, (0.0, 1.0), 7, &tab).unwrap();
+            let zb = odeint_fixed(&f, &z0, (0.0, 1.0), 7, &tab).unwrap();
+            let err = zh.sub(&zb).unwrap().frobenius_norm();
+            assert!(err < 1e-6, "{}: {err}", tab.name);
+        }
+    }
+
+    #[test]
+    fn taylor_g_raises_euler_to_second_order() {
+        // For ż = Az, the ε² Taylor term is ½A²z; A² = -ω² I for rotation.
+        let omega = 1.0f32;
+        let f = Rotation { omega };
+        let g = move |_e: f32, _s: f32, z: &Tensor, _dz: &Tensor| {
+            z.scale(-0.5 * omega * omega)
+        };
+        let z0 = Tensor::new(&[1, 2], vec![1.0, 0.0]).unwrap();
+        let exact = f.exact(&z0, 1.0);
+        let err = |k: usize| {
+            odeint_hyper(&f, &g, &z0, (0.0, 1.0), k, &Tableau::euler())
+                .unwrap()
+                .sub(&exact)
+                .unwrap()
+                .frobenius_norm()
+        };
+        let (e8, e16) = (err(8), err(16));
+        let order = (e8 / e16).log2();
+        assert!(order > 1.6, "order {order} e8={e8} e16={e16}");
+        // and beats plain euler outright
+        let e_euler = odeint_fixed(&f, &z0, (0.0, 1.0), 8, &Tableau::euler())
+            .unwrap()
+            .sub(&exact)
+            .unwrap()
+            .frobenius_norm();
+        assert!(e8 < e_euler / 4.0);
+    }
+
+    #[test]
+    fn residual_of_exact_taylor_term() {
+        // residual of euler on rotation ≈ ½A²z + O(ε): check leading term
+        let f = Rotation { omega: 1.0 };
+        let z0 = Tensor::new(&[1, 2], vec![1.0, 0.0]).unwrap();
+        let eps = 0.01f32;
+        let z1 = f.exact(&z0, eps);
+        let r = residual(&f, &Tableau::euler(), 0.0, &z0, &z1, eps).unwrap();
+        // expected: ½ A² z = -½ z for ω=1
+        let expected = z0.scale(-0.5);
+        let err = r.sub(&expected).unwrap().frobenius_norm();
+        assert!(err < 0.05, "residual {:?} vs {:?}", r.data(), expected.data());
+    }
+
+    #[test]
+    fn trajectory_matches_terminal() {
+        let f = Rotation { omega: 1.0 };
+        let z0 = Tensor::new(&[1, 2], vec![0.0, 1.0]).unwrap();
+        let g = zero_g();
+        let traj =
+            odeint_hyper_traj(&f, &g, &z0, (0.0, 1.0), 5, &Tableau::heun()).unwrap();
+        let term = odeint_hyper(&f, &g, &z0, (0.0, 1.0), 5, &Tableau::heun()).unwrap();
+        assert_eq!(traj.len(), 6);
+        assert_eq!(*traj.last().unwrap(), term);
+    }
+}

@@ -1,0 +1,177 @@
+//! Adaptive hypersolver stepping (paper §6, "Beyond fixed-step explicit
+//! hypersolvers").
+//!
+//! The hypersolver's own correction term is (by Thm 1) an estimate of the
+//! base solver's local truncation error: ‖ε^{p+1} g_ω‖ ≈ e_k. That gives a
+//! *free* error estimate — no embedded second solution — so the standard
+//! accept/reject + PI controller machinery applies to the hypersolved
+//! scheme directly. The accepted update still ADDS the correction, so the
+//! scheme keeps the O(δ ε^{p+1}) local error while adapting ε to the
+//! dynamics.
+
+use crate::ode::VectorField;
+use crate::solvers::adaptive::{AdaptiveOpts, AdaptiveResult};
+use crate::solvers::butcher::Tableau;
+use crate::solvers::fixed::{combine, rk_stages};
+use crate::solvers::hyper::HyperNet;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Adaptive integration of the hypersolved scheme: the ε^{p+1}·g_ω term is
+/// both the error estimate (step control) and the applied correction.
+pub fn odeint_hyper_adaptive<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    g: &G,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    tab: &Tableau,
+    opts: &AdaptiveOpts,
+) -> Result<AdaptiveResult> {
+    let (s0, s1) = s_span;
+    let direction = if s1 >= s0 { 1.0f32 } else { -1.0 };
+    let span = (s1 - s0).abs();
+    if span == 0.0 {
+        return Ok(AdaptiveResult {
+            z: z0.clone(),
+            nfe: 0,
+            accepted: 0,
+            rejected: 0,
+        });
+    }
+    let exponent = -1.0 / (tab.order + 1) as f32;
+
+    let mut progress = 0.0f32;
+    let mut z = z0.clone();
+    let mut eps = span * opts.first_step_frac;
+    let (mut nfe, mut accepted, mut rejected) = (0u64, 0u64, 0u64);
+
+    for _ in 0..opts.max_steps {
+        if progress >= span * (1.0 - 1e-6) {
+            return Ok(AdaptiveResult {
+                z,
+                nfe,
+                accepted,
+                rejected,
+            });
+        }
+        let eps_c = eps.min(span - progress);
+        let s_abs = s0 + direction * progress;
+        let h = direction * eps_c;
+        let stages = rk_stages(f, tab, s_abs, &z, h)?;
+        nfe += tab.stages() as u64;
+        let psi = combine(z.shape(), &stages, &tab.b)?;
+        let corr = g.eval(h, s_abs, &z, &stages[0]);
+        let corr_scale = h.abs().powi(tab.order as i32 + 1);
+
+        // error estimate: the correction magnitude, in the mixed abs/rel norm
+        let mut z_new = z.clone();
+        z_new.axpy(h, &psi)?;
+        let err = {
+            let n = z_new.numel() as f32;
+            let mut acc = 0.0f64;
+            for i in 0..z_new.numel() {
+                let scale = opts.atol
+                    + opts.rtol * z_new.data()[i].abs().max(z.data()[i].abs());
+                let e = corr_scale * corr.data()[i] / scale;
+                acc += (e * e) as f64;
+            }
+            ((acc / n as f64) as f32).sqrt()
+        };
+
+        let accept = err <= 1.0;
+        let factor = (opts.safety * err.max(1e-10).powf(exponent))
+            .clamp(opts.min_factor, opts.max_factor);
+        eps = (eps_c * factor).clamp(1e-6 * span, span);
+        if accept {
+            // apply the correction on acceptance: hypersolved update (eq. 5)
+            z_new.axpy(direction.powi(tab.order as i32 + 1) * corr_scale, &corr)?;
+            z = z_new;
+            progress += eps_c;
+            accepted += 1;
+        } else {
+            rejected += 1;
+        }
+    }
+    Err(Error::Other(format!(
+        "hyper_adaptive: max_steps={} exhausted",
+        opts.max_steps
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::Rotation;
+    use crate::solvers::adaptive::dopri5;
+
+    #[test]
+    fn exact_taylor_g_integrates_accurately() {
+        let omega = 1.0f32;
+        let f = Rotation { omega };
+        // g = ½A²z: exact Euler residual leading term
+        let g = move |_e: f32, _s: f32, z: &Tensor, _dz: &Tensor| {
+            z.scale(-0.5 * omega * omega)
+        };
+        let z0 = Tensor::new(&[1, 2], vec![1.0, 0.0]).unwrap();
+        let r = odeint_hyper_adaptive(
+            &f,
+            &g,
+            &z0,
+            (0.0, 1.0),
+            &Tableau::euler(),
+            &AdaptiveOpts::with_tol(1e-4),
+        )
+        .unwrap();
+        let exact = f.exact(&z0, 1.0);
+        let err = r.z.sub(&exact).unwrap().frobenius_norm();
+        assert!(err < 5e-3, "err {err}");
+        assert!(r.accepted > 0);
+        // the estimator costs nothing: exactly 1 NFE per attempted step,
+        // vs dopri5's 7 (a 2nd-order scheme takes more steps on a smooth
+        // field, but each is 7x cheaper in f evaluations)
+        assert_eq!(r.nfe, r.accepted + r.rejected);
+        let d5 = dopri5(&f, &z0, (0.0, 1.0), &AdaptiveOpts::with_tol(1e-4)).unwrap();
+        let nfe_per_step_d5 = d5.nfe as f64 / (d5.accepted + d5.rejected) as f64;
+        assert_eq!(nfe_per_step_d5, 7.0);
+    }
+
+    #[test]
+    fn zero_g_accepts_everything() {
+        // with g ≡ 0 the error estimate is 0: every step accepted, max size
+        let f = Rotation { omega: 1.0 };
+        let g = |_e: f32, _s: f32, z: &Tensor, _dz: &Tensor| Tensor::zeros(z.shape());
+        let z0 = Tensor::new(&[1, 2], vec![1.0, 0.0]).unwrap();
+        let r = odeint_hyper_adaptive(
+            &f,
+            &g,
+            &z0,
+            (0.0, 1.0),
+            &Tableau::euler(),
+            &AdaptiveOpts::with_tol(1e-6),
+        )
+        .unwrap();
+        assert_eq!(r.rejected, 0);
+    }
+
+    #[test]
+    fn backward_span() {
+        let omega = 1.0f32;
+        let f = Rotation { omega };
+        let g = move |_e: f32, _s: f32, z: &Tensor, _dz: &Tensor| {
+            z.scale(-0.5 * omega * omega)
+        };
+        let z0 = Tensor::new(&[1, 2], vec![0.2, -0.9]).unwrap();
+        let fwd = odeint_hyper_adaptive(
+            &f, &g, &z0, (0.0, 1.0), &Tableau::euler(),
+            &AdaptiveOpts::with_tol(1e-5),
+        )
+        .unwrap();
+        let back = odeint_hyper_adaptive(
+            &f, &g, &fwd.z, (1.0, 0.0), &Tableau::euler(),
+            &AdaptiveOpts::with_tol(1e-5),
+        )
+        .unwrap();
+        let err = back.z.sub(&z0).unwrap().frobenius_norm();
+        assert!(err < 2e-2, "round trip {err}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Native Rust ODE solvers: Butcher tableaus, fixed-step integration,
+//! hypersolved stepping, and adaptive Dormand-Prince 5(4).
+//!
+//! These mirror `python/compile/solvers.py` exactly (same tableaus, same
+//! controller) — the cross-language agreement is itself under test — and
+//! serve three roles: (a) cross-validation of the JAX solvers, (b) the
+//! engine behind the dense parameter sweeps in the benches, and (c) the
+//! control loop for adaptive integration over PJRT-loaded fields
+//! (`runtime::field_exec`), where rust owns the stepping decisions and XLA
+//! only evaluates f.
+
+pub mod adaptive;
+pub mod butcher;
+pub mod fixed;
+pub mod hyper;
+pub mod hyper_adaptive;
+pub mod multistep;
+
+pub use adaptive::{adaptive, dopri5, AdaptiveOpts, AdaptiveResult};
+pub use butcher::Tableau;
+pub use fixed::{odeint_fixed, odeint_fixed_traj, psi, rk_step};
+pub use hyper::{hyper_step, odeint_hyper, odeint_hyper_traj, residual, HyperNet};
+pub use hyper_adaptive::odeint_hyper_adaptive;
+pub use multistep::{odeint_ab, odeint_abm, odeint_abm_plain, AbOrder};

@@ -1,0 +1,602 @@
+//! Minimal owned f32 tensor.
+//!
+//! Just enough n-d array to run the exported networks natively (dense
+//! matmul, SAME-padding 3×3 conv, elementwise ops) — the native path backs
+//! the benches' dense parameter sweeps so they don't pay a PJRT compile per
+//! (solver, K) point. Row-major, contiguous, f32 only.
+
+use crate::{Error, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {shape:?} needs {numel} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let numel = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..numel).map(|i| f(i)).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Result<Tensor> {
+        Tensor::new(shape, self.data.clone())
+    }
+
+    /// (rows, cols) view of a 2-D tensor.
+    fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [m, n] => Ok((*m, *n)),
+            s => Err(Error::Shape(format!("expected 2-d, got {s:?}"))),
+        }
+    }
+
+    // -- elementwise -------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        Ok(Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        })
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn scale(&self, k: f32) -> Tensor {
+        self.map(|x| k * x)
+    }
+
+    /// self += k * other, in place — the solver hot loop's axpy.
+    pub fn axpy(&mut self, k: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "axpy shape mismatch {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += k * b;
+        }
+        Ok(())
+    }
+
+    // -- linear algebra ----------------------------------------------------
+
+    /// Dense matmul (m,k) x (k,n) -> (m,n).
+    ///
+    /// ikj loop order (row-major friendly) with the N axis tiled so the
+    /// output strip stays L1-resident across the K loop — matters for the
+    /// wide-N products the im2col conv path generates (see EXPERIMENTS.md
+    /// §Perf).
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.dims2()?;
+        let (k2, n) = other.dims2()?;
+        if k != k2 {
+            return Err(Error::Shape(format!(
+                "matmul inner dim {k} vs {k2}"
+            )));
+        }
+        const N_BLK: usize = 1024; // 4 KiB output strip per row
+        let mut out = vec![0.0f32; m * n];
+        for jb in (0..n).step_by(N_BLK) {
+            let je = (jb + N_BLK).min(n);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out[i * n + jb..i * n + je];
+                for (kk, &a) in arow.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n + jb..kk * n + je];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Add a length-n bias row to every row of an (m, n) tensor.
+    pub fn add_bias_rows(&self, bias: &[f32]) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        if bias.len() != n {
+            return Err(Error::Shape(format!(
+                "bias len {} vs cols {n}",
+                bias.len()
+            )));
+        }
+        let mut out = self.data.clone();
+        for i in 0..m {
+            for j in 0..n {
+                out[i * n + j] += bias[j];
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Horizontally concatenate 2-D tensors (same row count).
+    pub fn hcat(parts: &[&Tensor]) -> Result<Tensor> {
+        let m = parts
+            .first()
+            .ok_or_else(|| Error::Shape("hcat of nothing".into()))?
+            .dims2()?
+            .0;
+        let mut widths = Vec::with_capacity(parts.len());
+        for p in parts {
+            let (pm, pn) = p.dims2()?;
+            if pm != m {
+                return Err(Error::Shape("hcat row mismatch".into()));
+            }
+            widths.push(pn);
+        }
+        let n: usize = widths.iter().sum();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let mut col = 0;
+            for (p, &w) in parts.iter().zip(&widths) {
+                out[i * n + col..i * n + col + w]
+                    .copy_from_slice(&p.data[i * w..(i + 1) * w]);
+                col += w;
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    // -- conv (NCHW, OIHW, stride 1, SAME padding) --------------------------
+
+    /// 2-D convolution matching `jax.lax.conv_general_dilated` with NCHW
+    /// input, OIHW weights, stride 1, SAME padding — the only conv the
+    /// exported models use.
+    ///
+    /// im2col + matmul: the patch matrix (B·H·W, Cin·kh·kw) is built once
+    /// and contracted against the reshaped weights, putting the whole
+    /// convolution on the (vectorised) matmul path. ~4× over the direct
+    /// loop nest on the image-task shapes (see EXPERIMENTS.md §Perf);
+    /// `conv2d_same_naive` keeps the reference implementation for the
+    /// property tests.
+    pub fn conv2d_same(&self, w: &Tensor, bias: &[f32]) -> Result<Tensor> {
+        let (b, cin, h, wd) = match self.shape.as_slice() {
+            [b, c, h, w] => (*b, *c, *h, *w),
+            s => return Err(Error::Shape(format!("conv input {s:?}"))),
+        };
+        let (cout, cin2, kh, kw) = match w.shape.as_slice() {
+            [o, i, kh, kw] => (*o, *i, *kh, *kw),
+            s => return Err(Error::Shape(format!("conv weight {s:?}"))),
+        };
+        if cin != cin2 {
+            return Err(Error::Shape(format!("conv channels {cin} vs {cin2}")));
+        }
+        if bias.len() != cout {
+            return Err(Error::Shape("conv bias length".into()));
+        }
+        let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+        let patch = cin * kh * kw;
+        let plane = h * wd;
+
+        // im2col, PATCH-MAJOR: row p of `cols` holds patch entry p for every
+        // output pixel (b-major). Writes are contiguous x-runs and the
+        // subsequent matmul (cout, patch) @ (patch, B·plane) streams the
+        // wide N axis through the vector units.
+        let n_pix = b * plane;
+        let mut cols = vec![0.0f32; patch * n_pix];
+        for ic in 0..cin {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    let p = (ic * kh + ky) * kw + kx;
+                    let prow = p * n_pix;
+                    for bi in 0..b {
+                        let ibase = (bi * cin + ic) * plane;
+                        let obase = prow + bi * plane;
+                        // y such that iy = y + ky - ph stays in [0, h)
+                        let y0 = ph.saturating_sub(ky);
+                        let y1 = (h + ph - ky).min(h);
+                        for y in y0..y1 {
+                            let iy = y + ky - ph;
+                            let x0 = pw.saturating_sub(kx);
+                            let x1 = (wd + pw - kx).min(wd);
+                            let src = ibase + iy * wd + (x0 + kx) - pw;
+                            let dst = obase + y * wd + x0;
+                            let len = x1 - x0;
+                            let (s, d) = (src, dst);
+                            cols[d..d + len]
+                                .copy_from_slice(&self.data[s..s + len]);
+                        }
+                    }
+                }
+            }
+        }
+
+        // (cout, patch) @ (patch, B·plane): OIHW weights flatten directly
+        // into the LHS.
+        let wt = Tensor::new(&[cout, patch], w.data.clone())?;
+        let cols_t = Tensor::new(&[patch, n_pix], cols)?;
+        let prod = wt.matmul(&cols_t)?; // (cout, B·plane)
+
+        // (cout, B·plane) → NCHW + bias (plane rows stay contiguous)
+        let mut out = vec![0.0f32; b * cout * plane];
+        for oc in 0..cout {
+            for bi in 0..b {
+                let src = oc * n_pix + bi * plane;
+                let dst = (bi * cout + oc) * plane;
+                let bias_v = bias[oc];
+                for i in 0..plane {
+                    out[dst + i] = prod.data[src + i] + bias_v;
+                }
+            }
+        }
+        Tensor::new(&[b, cout, h, wd], out)
+    }
+
+    /// Reference direct-loop convolution (kept for property-testing the
+    /// im2col path).
+    pub fn conv2d_same_naive(&self, w: &Tensor, bias: &[f32]) -> Result<Tensor> {
+        let (b, cin, h, wd) = match self.shape.as_slice() {
+            [b, c, h, w] => (*b, *c, *h, *w),
+            s => return Err(Error::Shape(format!("conv input {s:?}"))),
+        };
+        let (cout, cin2, kh, kw) = match w.shape.as_slice() {
+            [o, i, kh, kw] => (*o, *i, *kh, *kw),
+            s => return Err(Error::Shape(format!("conv weight {s:?}"))),
+        };
+        if cin != cin2 {
+            return Err(Error::Shape(format!(
+                "conv channels {cin} vs {cin2}"
+            )));
+        }
+        if bias.len() != cout {
+            return Err(Error::Shape("conv bias length".into()));
+        }
+        let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+        let mut out = vec![0.0f32; b * cout * h * wd];
+        for bi in 0..b {
+            for oc in 0..cout {
+                let obase = ((bi * cout) + oc) * h * wd;
+                for ic in 0..cin {
+                    let ibase = ((bi * cin) + ic) * h * wd;
+                    let wbase = ((oc * cin) + ic) * kh * kw;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let wv = w.data[wbase + ky * kw + kx];
+                            if wv == 0.0 {
+                                continue;
+                            }
+                            // input row range that keeps (y+ky-ph) in bounds
+                            let y0 = ph.saturating_sub(ky);
+                            let y1 = (h + ph - ky).min(h);
+                            for y in y0..y1 {
+                                let iy = y + ky - ph;
+                                let x0 = pw.saturating_sub(kx);
+                                let x1 = (wd + pw - kx).min(wd);
+                                let irow = ibase + iy * wd;
+                                let orow = obase + y * wd;
+                                for x in x0..x1 {
+                                    let ix = x + kx - pw;
+                                    out[orow + x] += wv * self.data[irow + ix];
+                                }
+                            }
+                        }
+                    }
+                }
+                let obase = ((bi * cout) + oc) * h * wd;
+                for v in &mut out[obase..obase + h * wd] {
+                    *v += bias[oc];
+                }
+            }
+        }
+        Tensor::new(&[b, cout, h, wd], out)
+    }
+
+    /// Append a constant-valued channel (the DepthCat op).
+    pub fn depth_cat(&self, value: f32) -> Result<Tensor> {
+        let (b, c, h, w) = match self.shape.as_slice() {
+            [b, c, h, w] => (*b, *c, *h, *w),
+            s => return Err(Error::Shape(format!("depth_cat input {s:?}"))),
+        };
+        let plane = h * w;
+        let mut out = Vec::with_capacity(b * (c + 1) * plane);
+        for bi in 0..b {
+            let base = bi * c * plane;
+            out.extend_from_slice(&self.data[base..base + c * plane]);
+            out.extend(std::iter::repeat(value).take(plane));
+        }
+        Tensor::new(&[b, c + 1, h, w], out)
+    }
+
+    // -- reductions ---------------------------------------------------------
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Row-wise argmax of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        let (m, n) = self.dims2()?;
+        Ok((0..m)
+            .map(|i| {
+                let row = &self.data[i * n..(i + 1) * n];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propkit::{check, gen_range, gen_vec, prop_assert_close};
+
+    #[test]
+    fn construct_and_shape_check() {
+        assert!(Tensor::new(&[2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(&[2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(Tensor::zeros(&[4]).numel(), 4);
+    }
+
+    #[test]
+    fn matmul_identity_property() {
+        check("A @ I == A", 50, |rng| {
+            let m = gen_range(rng, 1, 8);
+            let n = gen_range(rng, 1, 8);
+            let a = Tensor::new(&[m, n], gen_vec(rng, m * n, 1.0)).unwrap();
+            let prod = a.matmul(&Tensor::eye(n)).unwrap();
+            prop_assert_close(prod.data(), a.data(), 1e-6)
+        });
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_associativity_property() {
+        check("(AB)C == A(BC)", 30, |rng| {
+            let (m, k, n, p) = (
+                gen_range(rng, 1, 5),
+                gen_range(rng, 1, 5),
+                gen_range(rng, 1, 5),
+                gen_range(rng, 1, 5),
+            );
+            let a = Tensor::new(&[m, k], gen_vec(rng, m * k, 1.0)).unwrap();
+            let b = Tensor::new(&[k, n], gen_vec(rng, k * n, 1.0)).unwrap();
+            let c = Tensor::new(&[n, p], gen_vec(rng, n * p, 1.0)).unwrap();
+            let left = a.matmul(&b).unwrap().matmul(&c).unwrap();
+            let right = a.matmul(&b.matmul(&c).unwrap()).unwrap();
+            prop_assert_close(left.data(), right.data(), 1e-4)
+        });
+    }
+
+    #[test]
+    fn axpy_matches_scale_add() {
+        check("axpy == add(scale)", 40, |rng| {
+            let n = gen_range(rng, 1, 32);
+            let a = Tensor::new(&[n], gen_vec(rng, n, 1.0)).unwrap();
+            let b = Tensor::new(&[n], gen_vec(rng, n, 1.0)).unwrap();
+            let k = rng.normal_f32();
+            let mut via_axpy = a.clone();
+            via_axpy.axpy(k, &b).unwrap();
+            let via_ops = a.add(&b.scale(k)).unwrap();
+            prop_assert_close(via_axpy.data(), via_ops.data(), 1e-6)
+        });
+    }
+
+    #[test]
+    fn hcat_widths() {
+        let a = Tensor::new(&[2, 1], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![3.0, 4.0, 5.0, 6.0]).unwrap();
+        let c = Tensor::hcat(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.data(), &[1.0, 3.0, 4.0, 2.0, 5.0, 6.0]);
+        assert!(Tensor::hcat(&[]).is_err());
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 kernel with weight 1 == identity
+        let x = Tensor::new(&[1, 1, 3, 3], (1..=9).map(|v| v as f32).collect()).unwrap();
+        let w = Tensor::new(&[1, 1, 1, 1], vec![1.0]).unwrap();
+        let y = x.conv2d_same(&w, &[0.0]).unwrap();
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv2d_averaging_kernel_known() {
+        // 3x3 ones kernel on a constant image: interior = 9, corners = 4
+        let x = Tensor::full(&[1, 1, 4, 4], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let y = x.conv2d_same(&w, &[0.0]).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 4, 4]);
+        assert_eq!(y.data()[0], 4.0); // corner
+        assert_eq!(y.data()[5], 9.0); // interior
+    }
+
+    #[test]
+    fn conv2d_matches_naive_property() {
+        fn naive(x: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+            let (b, cin, h, wd) = (
+                x.shape()[0],
+                x.shape()[1],
+                x.shape()[2],
+                x.shape()[3],
+            );
+            let (cout, _, kh, kw) = (
+                w.shape()[0],
+                w.shape()[1],
+                w.shape()[2],
+                w.shape()[3],
+            );
+            let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
+            let mut out = Tensor::zeros(&[b, cout, h, wd]);
+            for bi in 0..b {
+                for oc in 0..cout {
+                    for y in 0..h {
+                        for xx in 0..wd {
+                            let mut acc = bias[oc];
+                            for ic in 0..cin {
+                                for ky in 0..kh {
+                                    for kx in 0..kw {
+                                        let iy = y as isize + ky as isize - ph as isize;
+                                        let ix = xx as isize + kx as isize - pw as isize;
+                                        if iy < 0
+                                            || ix < 0
+                                            || iy >= h as isize
+                                            || ix >= wd as isize
+                                        {
+                                            continue;
+                                        }
+                                        let xi = ((bi * cin + ic) * h
+                                            + iy as usize)
+                                            * wd
+                                            + ix as usize;
+                                        let wi = ((oc * cin + ic) * kh + ky) * kw
+                                            + kx;
+                                        acc += x.data()[xi] * w.data()[wi];
+                                    }
+                                }
+                            }
+                            out.data_mut()
+                                [((bi * cout + oc) * h + y) * wd + xx] = acc;
+                        }
+                    }
+                }
+            }
+            out
+        }
+        check("conv2d == naive", 20, |rng| {
+            let b = gen_range(rng, 1, 2);
+            let cin = gen_range(rng, 1, 3);
+            let cout = gen_range(rng, 1, 3);
+            let h = gen_range(rng, 3, 6);
+            let wd = gen_range(rng, 3, 6);
+            let x = Tensor::new(&[b, cin, h, wd], gen_vec(rng, b * cin * h * wd, 1.0))
+                .unwrap();
+            let w = Tensor::new(&[cout, cin, 3, 3], gen_vec(rng, cout * cin * 9, 1.0))
+                .unwrap();
+            let bias = gen_vec(rng, cout, 1.0);
+            let fast = x.conv2d_same(&w, &bias).unwrap();
+            let slow = naive(&x, &w, &bias);
+            prop_assert_close(fast.data(), slow.data(), 1e-4)?;
+            // the shipped direct-loop reference must agree too
+            let direct = x.conv2d_same_naive(&w, &bias).unwrap();
+            prop_assert_close(direct.data(), slow.data(), 1e-4)
+        });
+    }
+
+    #[test]
+    fn depth_cat_appends_channel() {
+        let x = Tensor::zeros(&[2, 3, 4, 4]);
+        let y = x.depth_cat(0.5).unwrap();
+        assert_eq!(y.shape(), &[2, 4, 4, 4]);
+        // last channel of each batch element is the constant
+        for bi in 0..2 {
+            let base = (bi * 4 + 3) * 16;
+            assert!(y.data()[base..base + 16].iter().all(|&v| v == 0.5));
+        }
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(&[2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 3.0]).unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[3, 3]);
+        assert!(a.add(&b).is_err());
+        assert!(a.matmul(&a).is_err());
+        assert!(Tensor::zeros(&[4]).argmax_rows().is_err());
+    }
+}

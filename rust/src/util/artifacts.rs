@@ -1,0 +1,46 @@
+//! Bench/example support: artifact loading with friendly failure modes.
+
+use crate::data::blobs;
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+
+/// Load the manifest or exit(0) with instructions — benches and examples
+/// should be runnable (as a no-op) on a checkout without artifacts.
+pub fn require_manifest() -> Manifest {
+    match Manifest::load_default() {
+        Ok(m) => {
+            if m.quick {
+                eprintln!(
+                    "WARNING: artifacts built with --quick — numbers are NOT \
+                     representative; run `make artifacts`"
+                );
+            }
+            m
+        }
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts` first");
+            std::process::exit(0);
+        }
+    }
+}
+
+/// Load a task data blob by key, panicking with context on failure.
+pub fn load_blob(m: &Manifest, task: &str, key: &str) -> Tensor {
+    let t = m
+        .task(task)
+        .unwrap_or_else(|e| panic!("task {task}: {e}"));
+    let b = t
+        .data
+        .get(key)
+        .unwrap_or_else(|| panic!("task {task} has no blob {key:?}"));
+    blobs::load_f32(&m.blob_path(b), &b.shape)
+        .unwrap_or_else(|e| panic!("blob {task}/{key}: {e}"))
+}
+
+/// Load labels (i32 blob).
+pub fn load_labels(m: &Manifest, task: &str, key: &str) -> Vec<i32> {
+    let t = m.task(task).unwrap();
+    let b = &t.data[key];
+    blobs::load_i32(&m.blob_path(b), b.shape.iter().product())
+        .unwrap_or_else(|e| panic!("labels {task}/{key}: {e}"))
+}

@@ -1,0 +1,221 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! mean/median/p95, and renders aligned tables — each paper figure's bench
+//! binary prints the same rows/series the paper reports.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One measured quantity.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub std_dev: Duration,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per measurement.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u64,
+    max_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(600),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(150),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    }
+
+    pub fn with_budget(measure_ms: u64) -> Self {
+        Bench {
+            measure: Duration::from_millis(measure_ms),
+            ..Default::default()
+        }
+    }
+
+    /// Measure `f`, auto-scaling iteration count. `f` must do one unit of
+    /// work per call; keep any setup outside.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // warmup + rate estimation
+        let wstart = Instant::now();
+        let mut warm_iters = 0u64;
+        while wstart.elapsed() < self.warmup || warm_iters < 2 {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / warm_iters as f64;
+        let target = ((self.measure.as_secs_f64() / per_iter.max(1e-9)) as u64)
+            .clamp(self.min_iters, self.max_iters);
+
+        // measurement: batch into ~20 samples for percentile stability
+        let samples = 20u64.min(target).max(1);
+        let batch = (target / samples).max(1);
+        let mut times: Vec<f64> = Vec::with_capacity(samples as usize);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / batch as f64);
+        }
+        Measurement {
+            name: name.to_string(),
+            iters: samples * batch,
+            mean: Duration::from_secs_f64(stats::mean(&times)),
+            median: Duration::from_secs_f64(stats::percentile(&times, 50.0)),
+            p95: Duration::from_secs_f64(stats::percentile(&times, 95.0)),
+            std_dev: Duration::from_secs_f64(stats::std_dev(&times)),
+        }
+    }
+}
+
+/// Aligned plain-text table writer for bench reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:<width$}", c, width = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// `fmt` helpers used across bench binaries.
+pub fn fmt_ms(d: Duration) -> String {
+    let ms = d.as_secs_f64() * 1e3;
+    if ms >= 100.0 {
+        format!("{ms:.0} ms")
+    } else if ms >= 1.0 {
+        format!("{ms:.2} ms")
+    } else {
+        format!("{:.1} µs", ms * 1e3)
+    }
+}
+
+pub fn fmt_sci(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if (0.001..10_000.0).contains(&x.abs()) {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.2e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let m = b.run("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean > Duration::ZERO);
+        assert!(m.p95 >= m.median || m.p95 > Duration::ZERO);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "NFE", "MAPE"]);
+        t.row(&["euler".into(), "2".into(), "0.3322".into()]);
+        t.row(&["hyperheun".into(), "2".into(), "0.0423".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("method"));
+        assert!(lines[2].starts_with("euler"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_sci(0.0), "0");
+        assert!(fmt_ms(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_ms(Duration::from_millis(250)).contains("ms"));
+        assert!(fmt_sci(1e-9).contains('e'));
+    }
+}

@@ -1,0 +1,219 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &str) -> Self {
+        Cli {
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Register `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{}\n\nusage: {prog} [options]\n\noptions:\n", self.about);
+        for o in &self.opts {
+            let tail = if o.is_flag {
+                String::new()
+            } else {
+                format!(" <v> (default {})", o.default.as_deref().unwrap_or(""))
+            };
+            s.push_str(&format!("  --{}{tail}\n        {}\n", o.name, o.help));
+        }
+        s.push_str("  --help\n        print this message\n");
+        s
+    }
+
+    /// Parse; on `--help` prints usage and exits. Errors on unknown options.
+    pub fn parse(mut self, args: &[String]) -> Result<Parsed, String> {
+        let prog = args.first().map(String::as_str).unwrap_or("prog");
+        let mut it = args.iter().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage(prog));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage(prog)))?
+                    .clone();
+                let value = if opt.is_flag {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| format!("--{name} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(a.clone());
+            }
+        }
+        Ok(Parsed {
+            opts: self.opts,
+            values: self.values,
+            positionals: self.positionals,
+        })
+    }
+
+    /// Parse from `std::env::args()`; print usage and exit on `--help`/error.
+    pub fn parse_env(self) -> Parsed {
+        let args: Vec<String> = std::env::args().collect();
+        match self.parse(&args) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with("unknown") { 2 } else { 0 });
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_default()
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).parse().unwrap_or_else(|_| {
+            panic!("--{name} expects an integer, got {:?}", self.get(name))
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name).parse().unwrap_or_else(|_| {
+            panic!("--{name} expects a number, got {:?}", self.get(name))
+        })
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.iter().map(|x| x.to_string()))
+            .collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test")
+            .opt("port", "7070", "listen port")
+            .opt("task", "cnf_rings", "task name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults() {
+        let p = cli().parse(&args(&[])).unwrap();
+        assert_eq!(p.get("port"), "7070");
+        assert_eq!(p.get_usize("port"), 7070);
+        assert!(!p.get_flag("verbose"));
+    }
+
+    #[test]
+    fn explicit_values_and_flags() {
+        let p = cli()
+            .parse(&args(&["--port", "9090", "--verbose", "--task=img_smnist"]))
+            .unwrap();
+        assert_eq!(p.get_usize("port"), 9090);
+        assert!(p.get_flag("verbose"));
+        assert_eq!(p.get("task"), "img_smnist");
+    }
+
+    #[test]
+    fn positionals() {
+        let p = cli().parse(&args(&["run", "--port", "1", "x"])).unwrap();
+        assert_eq!(p.positionals(), &["run".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&args(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&args(&["--port"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cli().parse(&args(&["--help"])).unwrap_err();
+        assert!(err.contains("--port"));
+        assert!(err.contains("listen port"));
+    }
+}

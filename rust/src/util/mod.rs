@@ -1,0 +1,12 @@
+//! Offline-environment substrates, built from scratch (no crates.io access
+//! beyond the vendored `xla` dependency chain — see DESIGN.md §3).
+
+pub mod artifacts;
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod propkit;
+pub mod stats;
+pub mod threadpool;

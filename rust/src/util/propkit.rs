@@ -1,0 +1,109 @@
+//! Property-test harness (proptest is not available offline).
+//!
+//! `check` runs a property over N generated cases; failures report the
+//! case's seed so it can be replayed deterministically:
+//!
+//! ```ignore
+//! propkit::check("matmul identity", 100, |rng| {
+//!     let t = random_tensor(rng, &[4, 4]);
+//!     prop_assert_close(&t.matmul(&Tensor::eye(4)).data, &t.data, 1e-6)
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`. Panics (test failure) on the first
+/// failing case, printing the replay seed.
+pub fn check<F: FnMut(&mut Rng) -> CaseResult>(name: &str, cases: u64, mut prop: F) {
+    let base_seed = env_seed().unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case}/{cases} \
+                 (replay with PROPKIT_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("PROPKIT_SEED").ok()?.parse().ok()
+}
+
+/// Assert two float slices are elementwise close.
+pub fn prop_assert_close(a: &[f32], b: &[f32], tol: f32) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let denom = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() / denom > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Assert a predicate with a formatted message on failure.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Uniform usize in [lo, hi] from the rng (generator helper).
+pub fn gen_range(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Random f32 vector with entries ~ N(0, scale).
+pub fn gen_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"bad\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("bad", 10, |rng| {
+            prop_assert(rng.uniform() < 2.0, "impossible")?;
+            Err("always fails".to_string())
+        });
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(prop_assert_close(&[1.0], &[1.0 + 1e-8], 1e-6).is_ok());
+        assert!(prop_assert_close(&[1.0], &[1.1], 1e-6).is_err());
+        assert!(prop_assert_close(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut rng = Rng::new(0);
+        for _ in 0..100 {
+            let v = gen_range(&mut rng, 3, 7);
+            assert!((3..=7).contains(&v));
+        }
+    }
+}

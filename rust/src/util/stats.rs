@@ -1,0 +1,157 @@
+//! Small statistics helpers: moments, percentiles, online latency histogram.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Percentile via linear interpolation on a sorted copy (q in [0, 100]).
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Fixed-bucket log-scale latency histogram (µs-granularity, thread-safe via
+/// atomics) used by the coordinator's metrics without locking the hot path.
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^{i+1}) microseconds
+    buckets: Vec<std::sync::atomic::AtomicU64>,
+    count: std::sync::atomic::AtomicU64,
+    sum_us: std::sync::atomic::AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: (0..40).map(|_| std::sync::atomic::AtomicU64::new(0)).collect(),
+            count: std::sync::atomic::AtomicU64::new(0),
+            sum_us: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_us.fetch_add(us, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(std::sync::atomic::Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate percentile from the log buckets (returns the bucket's
+    /// geometric midpoint in µs).
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q / 100.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Relaxed);
+            if acc >= target {
+                let lo = (1u64 << i) as f64;
+                return lo * std::f64::consts::SQRT_2;
+            }
+        }
+        (1u64 << (self.buckets.len() - 1)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.011);
+    }
+
+    #[test]
+    fn histogram_basic() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 4, 8] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 4);
+        assert!(h.mean_us() >= 1000.0);
+        let p50 = h.percentile_us(50.0);
+        assert!(p50 >= 1000.0 && p50 <= 4096.0 * 2.0, "{p50}");
+    }
+
+    #[test]
+    fn histogram_percentile_ordering() {
+        let h = LatencyHistogram::new();
+        for i in 0..1000u64 {
+            h.record(Duration::from_micros(10 + i));
+        }
+        assert!(h.percentile_us(99.0) >= h.percentile_us(50.0));
+    }
+}

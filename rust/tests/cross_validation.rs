@@ -1,0 +1,147 @@
+//! Cross-language validation: for EVERY task and EVERY fixed-step variant in
+//! the manifest, the native rust solve (weights JSON + rust solvers) must
+//! reproduce the python-side measured MAPE. One assertion per exported
+//! variant — ~60 parameterized checks over the whole artifact set.
+//!
+//! This is the strongest end-to-end invariant in the repo: it ties together
+//! the JAX solvers, the AOT weight export, the rust JSON/tensor/nn stack and
+//! the rust solvers in a single number per variant.
+
+use hypersolvers::data::blobs;
+use hypersolvers::metrics::mape;
+use hypersolvers::nn::{CnfModel, ImageModel, TrackingModel};
+use hypersolvers::ode::VectorField;
+use hypersolvers::runtime::{Manifest, TaskEntry};
+use hypersolvers::solvers::{
+    dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, HyperNet, Tableau,
+};
+use hypersolvers::tensor::Tensor;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load_default() {
+        Ok(m) if m.quick => {
+            eprintln!("SKIP: quick artifacts");
+            None
+        }
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn blob(m: &Manifest, task: &TaskEntry, key: &str) -> Tensor {
+    let b = &task.data[key];
+    blobs::load_f32(&m.blob_path(b), &b.shape).unwrap()
+}
+
+/// Tolerance: native f32 vs XLA f32 accumulate differently; the MAPE itself
+/// is an average so agreement is tight but not exact.
+const TOL: f64 = 5e-3;
+
+fn check_task(
+    m: &Manifest,
+    task: &TaskEntry,
+    field: &dyn VectorField,
+    hyper: &dyn HyperNet,
+    hyper_base: &Tableau,
+) -> (usize, Vec<String>) {
+    let z0 = blob(m, task, "z0");
+    let truth = blob(m, task, "truth");
+    let mut checked = 0;
+    let mut failures = Vec::new();
+    for v in &task.variants {
+        let zt = if v.solver == "dopri5" {
+            // match the tightest export tolerance (cnf/tracking use 1e-5)
+            dopri5(field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-5))
+                .map(|r| r.z)
+        } else if v.hyper {
+            odeint_hyper(field, hyper, &z0, task.s_span, v.k, hyper_base)
+        } else {
+            let tab = Tableau::by_name(&v.solver).unwrap();
+            odeint_fixed(field, &z0, task.s_span, v.k, &tab)
+        };
+        let zt = match zt {
+            Ok(z) => z,
+            Err(e) => {
+                failures.push(format!("{}/{}: solve failed: {e}", task.name, v.name));
+                continue;
+            }
+        };
+        let measured = mape(&zt, &truth).unwrap();
+        // dopri5 takes its own step sequence: only require "both tiny"
+        let ok = if v.solver == "dopri5" {
+            measured < 1e-2 && v.mape < 1e-2
+        } else {
+            (measured - v.mape).abs() < TOL
+        };
+        if !ok {
+            failures.push(format!(
+                "{}/{}: rust {measured:.5} vs python {:.5}",
+                task.name, v.name, v.mape
+            ));
+        }
+        checked += 1;
+    }
+    (checked, failures)
+}
+
+#[test]
+fn every_variant_matches_python_mape() {
+    let Some(m) = manifest() else { return };
+    let mut total = 0;
+    let mut all_failures = Vec::new();
+
+    for (name, task) in &m.tasks {
+        let (checked, failures) = match task.kind.as_str() {
+            "cnf" => {
+                let model = CnfModel::load(&m.weights_path(task)).unwrap();
+                check_task(&m, task, &model.field, &model.hyper, &Tableau::heun())
+            }
+            "tracking" => {
+                let model = TrackingModel::load(&m.weights_path(task)).unwrap();
+                check_task(&m, task, &model.field, &model.hyper, &Tableau::euler())
+            }
+            "image" => {
+                let model = ImageModel::load(&m.weights_path(task)).unwrap();
+                check_task(&m, task, &model.field, &model.hyper, &Tableau::euler())
+            }
+            other => panic!("unknown kind {other} for {name}"),
+        };
+        total += checked;
+        all_failures.extend(failures);
+    }
+    eprintln!("cross-validated {total} variants across {} tasks", m.tasks.len());
+    assert!(total >= 50, "expected a full variant grid, got {total}");
+    assert!(
+        all_failures.is_empty(),
+        "{} mismatches:\n{}",
+        all_failures.len(),
+        all_failures.join("\n")
+    );
+}
+
+#[test]
+fn hypersolver_dominates_base_at_low_nfe_everywhere() {
+    // The paper's headline, asserted across every task artifact: at the
+    // lowest exported NFE, the hypersolved variant beats its base solver.
+    let Some(m) = manifest() else { return };
+    for (name, task) in &m.tasks {
+        let base_name = &task.hyper_base;
+        let hypers: Vec<_> = task.variants.iter().filter(|v| v.hyper).collect();
+        let min_k = hypers.iter().map(|v| v.k).min().unwrap();
+        let hyper = hypers.iter().find(|v| v.k == min_k).unwrap();
+        let base = task
+            .variants
+            .iter()
+            .find(|v| !v.hyper && v.solver == *base_name && v.k == min_k)
+            .unwrap_or_else(|| panic!("{name}: no base variant at k={min_k}"));
+        assert!(
+            hyper.mape < base.mape,
+            "{name}: hyper {:.4} !< base {:.4} at K={min_k}",
+            hyper.mape,
+            base.mape
+        );
+    }
+}

@@ -1,0 +1,329 @@
+//! Integration tests over the real artifacts: PJRT round trip, native-vs-PJRT
+//! numeric agreement, coordinator end-to-end, TCP server protocol.
+//!
+//! Every test skips gracefully (with a loud message) when `make artifacts`
+//! has not been run, so `cargo test` stays green on a fresh checkout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
+use hypersolvers::data::blobs;
+use hypersolvers::metrics::{accuracy, mape};
+use hypersolvers::nn::{CnfModel, ImageModel, TrackingModel};
+use hypersolvers::runtime::{Executor, Manifest};
+use hypersolvers::solvers::{
+    dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, Tableau,
+};
+use hypersolvers::tensor::Tensor;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load_default() {
+        Ok(m) => {
+            if m.quick {
+                eprintln!("NOTE: artifacts were built with --quick; tolerances loosened");
+            }
+            Some(m)
+        }
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn load_blob(m: &Manifest, task: &str, key: &str) -> Tensor {
+    let t = m.task(task).unwrap();
+    let b = &t.data[key];
+    blobs::load_f32(&m.blob_path(b), &b.shape).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// PJRT round trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pjrt_full_solve_matches_manifest_mape() {
+    let Some(m) = manifest() else { return };
+    let exec = Executor::spawn().unwrap();
+    let h = exec.handle();
+    let task = m.task("cnf_rings").unwrap();
+    let z0 = load_blob(&m, "cnf_rings", "z0");
+    let truth = load_blob(&m, "cnf_rings", "truth");
+
+    for vname in ["heun_k1", "hyperheun_k1", "euler_k4"] {
+        let v = task.variant(vname).unwrap();
+        h.load(vname, m.hlo_path(&v.hlo)).unwrap();
+        let out = h.run(vname, z0.data().to_vec(), &v.in_shape).unwrap();
+        let zt = Tensor::new(&v.out_shape, out[0].clone()).unwrap();
+        let measured = mape(&zt, &truth).unwrap();
+        // rust-side MAPE must reproduce the python-side manifest number
+        assert!(
+            (measured - v.mape).abs() < 1e-3,
+            "{vname}: rust mape {measured} vs manifest {}",
+            v.mape
+        );
+    }
+}
+
+#[test]
+fn pjrt_dopri5_export_returns_nfe() {
+    let Some(m) = manifest() else { return };
+    let exec = Executor::spawn().unwrap();
+    let h = exec.handle();
+    let task = m.task("cnf_rings").unwrap();
+    let v = task.variant("dopri5").unwrap();
+    assert!(v.returns_nfe);
+    h.load("d5", m.hlo_path(&v.hlo)).unwrap();
+    let z0 = load_blob(&m, "cnf_rings", "z0");
+    let out = h.run("d5", z0.data().to_vec(), &v.in_shape).unwrap();
+    assert_eq!(out.len(), 2, "dopri5 export returns (z, nfe)");
+    let nfe = out[1][0] as u64;
+    assert!(nfe > 0 && nfe % 7 == 0, "nfe {nfe}");
+    let zt = Tensor::new(&v.out_shape, out[0].clone()).unwrap();
+    let truth = load_blob(&m, "cnf_rings", "truth");
+    assert!(mape(&zt, &truth).unwrap() < 0.01);
+}
+
+// ---------------------------------------------------------------------------
+// Native nn path vs PJRT / exported truth
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_cnf_field_matches_pjrt_solve() {
+    let Some(m) = manifest() else { return };
+    let task = m.task("cnf_rings").unwrap();
+    let model = CnfModel::load(&m.weights_path(task)).unwrap();
+    let z0 = load_blob(&m, "cnf_rings", "z0");
+
+    // native heun K=4 vs the exported heun_k4 executable
+    let native = odeint_fixed(&model.field, &z0, task.s_span, 4, &Tableau::heun()).unwrap();
+    let exec = Executor::spawn().unwrap();
+    let h = exec.handle();
+    let v = task.variant("heun_k4").unwrap();
+    h.load("h4", m.hlo_path(&v.hlo)).unwrap();
+    let out = h.run("h4", z0.data().to_vec(), &v.in_shape).unwrap();
+    let pjrt = Tensor::new(&v.out_shape, out[0].clone()).unwrap();
+    let diff = mape(&native, &pjrt).unwrap();
+    assert!(diff < 2e-3, "native vs pjrt mape {diff}");
+}
+
+#[test]
+fn native_hyperheun_beats_heun_at_2_nfe() {
+    let Some(m) = manifest() else { return };
+    if m.quick {
+        return; // quick-mode hypersolvers are untrained
+    }
+    for density in ["cnf_rings", "cnf_pinwheel", "cnf_checkerboard", "cnf_circles"] {
+        let task = m.task(density).unwrap();
+        let model = CnfModel::load(&m.weights_path(task)).unwrap();
+        let z0 = load_blob(&m, density, "z0");
+        let truth = load_blob(&m, density, "truth");
+        let heun =
+            odeint_fixed(&model.field, &z0, task.s_span, 1, &Tableau::heun()).unwrap();
+        let hyper = odeint_hyper(
+            &model.field,
+            &model.hyper,
+            &z0,
+            task.s_span,
+            1,
+            &Tableau::heun(),
+        )
+        .unwrap();
+        let m_heun = mape(&heun, &truth).unwrap();
+        let m_hyper = mape(&hyper, &truth).unwrap();
+        assert!(
+            m_hyper < m_heun,
+            "{density}: hyperheun {m_hyper} not better than heun {m_heun}"
+        );
+    }
+}
+
+#[test]
+fn native_dopri5_reaches_exported_truth() {
+    let Some(m) = manifest() else { return };
+    let task = m.task("cnf_rings").unwrap();
+    let model = CnfModel::load(&m.weights_path(task)).unwrap();
+    let z0 = load_blob(&m, "cnf_rings", "z0");
+    let truth = load_blob(&m, "cnf_rings", "truth");
+    let r = dopri5(&model.field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-6)).unwrap();
+    let err = mape(&r.z, &truth).unwrap();
+    assert!(err < 2e-3, "native dopri5 mape {err}");
+    assert!(r.nfe > 0);
+}
+
+#[test]
+fn native_image_model_accuracy() {
+    let Some(m) = manifest() else { return };
+    if m.quick {
+        return;
+    }
+    let task = m.task("img_smnist").unwrap();
+    let model = ImageModel::load(&m.weights_path(task)).unwrap();
+    let z0 = load_blob(&m, "img_smnist", "z0");
+    let yref = &task.data["y"];
+    let labels = blobs::load_i32(&m.blob_path(yref), yref.shape[0]).unwrap();
+
+    // rk4 K=4 native solve → logits → accuracy ≈ truth_acc from manifest
+    let zt = odeint_fixed(&model.field, &z0, task.s_span, 4, &Tableau::rk4()).unwrap();
+    let logits = model.hy(&zt).unwrap();
+    let acc = accuracy(&logits, &labels).unwrap();
+    let want = task.truth_acc.unwrap();
+    assert!(
+        (acc - want).abs() < 0.1,
+        "native acc {acc} vs manifest {want}"
+    );
+
+    // hypersolved euler K=2 must beat plain euler K=2 on accuracy
+    let ze = odeint_fixed(&model.field, &z0, task.s_span, 2, &Tableau::euler()).unwrap();
+    let zh = odeint_hyper(
+        &model.field,
+        &model.hyper,
+        &z0,
+        task.s_span,
+        2,
+        &Tableau::euler(),
+    )
+    .unwrap();
+    let acc_e = accuracy(&model.hy(&ze).unwrap(), &labels).unwrap();
+    let acc_h = accuracy(&model.hy(&zh).unwrap(), &labels).unwrap();
+    assert!(
+        acc_h >= acc_e,
+        "hypereuler acc {acc_h} < euler acc {acc_e} at K=2"
+    );
+}
+
+#[test]
+fn native_tracking_model_loads_and_improves() {
+    let Some(m) = manifest() else { return };
+    if m.quick {
+        return;
+    }
+    let task = m.task("tracking").unwrap();
+    let model = TrackingModel::load(&m.weights_path(task)).unwrap();
+    let z0 = load_blob(&m, "tracking", "z0");
+    let truth = load_blob(&m, "tracking", "truth");
+    let k = 10;
+    let eul = odeint_fixed(&model.field, &z0, task.s_span, k, &Tableau::euler()).unwrap();
+    let hyp = odeint_hyper(
+        &model.field,
+        &model.hyper,
+        &z0,
+        task.s_span,
+        k,
+        &Tableau::euler(),
+    )
+    .unwrap();
+    let m_e = mape(&eul, &truth).unwrap();
+    let m_h = mape(&hyp, &truth).unwrap();
+    assert!(m_h < m_e, "tracking: hyper {m_h} vs euler {m_e} at K={k}");
+}
+
+#[test]
+fn rust_driven_adaptive_over_pjrt_field() {
+    // the hybrid mode: rust dopri5 control loop, XLA field evaluations
+    let Some(m) = manifest() else { return };
+    let task = m.task("cnf_rings").unwrap();
+    let exec = Executor::spawn().unwrap();
+    let h = exec.handle();
+    h.load("field", m.hlo_path(&task.field_hlo)).unwrap();
+    let field = hypersolvers::runtime::field_exec::PjrtField::new(
+        h,
+        "field",
+        &task.state_shape,
+        task.mac_f,
+    );
+    let z0 = load_blob(&m, "cnf_rings", "z0");
+    let truth = load_blob(&m, "cnf_rings", "truth");
+    let r = dopri5(&field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-5)).unwrap();
+    let err = mape(&r.z, &truth).unwrap();
+    assert!(err < 5e-3, "hybrid dopri5 mape {err}");
+    assert!(r.nfe >= 7);
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_serves_mixed_budgets() {
+    let Some(m) = manifest() else { return };
+    drop(m);
+    let engine = Engine::new(EngineConfig {
+        max_wait: Duration::from_millis(1),
+        policy: Policy::MinMacs,
+        ..Default::default()
+    })
+    .unwrap();
+
+    // loose budget → cheap variant; tight → accurate variant
+    let loose = engine.infer("cnf_rings", 0.5, vec![0.3, -0.2]).unwrap();
+    let tight = engine.infer("cnf_rings", 1e-4, vec![0.3, -0.2]).unwrap();
+    assert!(loose.mape <= 0.5);
+    assert!(tight.mape <= 1e-4 || tight.variant == "dopri5");
+    assert_eq!(loose.output.len(), 2);
+    assert_eq!(tight.output.len(), 2);
+
+    // batch of concurrent submissions all get answers
+    let rxs: Vec<_> = (0..32)
+        .map(|i| {
+            engine
+                .submit("cnf_rings", 0.08, vec![0.01 * i as f32, -0.5])
+                .unwrap()
+        })
+        .collect();
+    let mut fills = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.mape <= 0.08);
+        fills.push(resp.batch_fill);
+    }
+    // dynamic batching really batched something
+    assert!(fills.iter().any(|&f| f > 1), "fills {fills:?}");
+    assert!(engine.metrics().responses.load(std::sync::atomic::Ordering::Relaxed) >= 34);
+}
+
+#[test]
+fn engine_rejects_bad_requests() {
+    let Some(_m) = manifest() else { return };
+    let engine = Engine::with_defaults().unwrap();
+    assert!(engine.submit("no_such_task", 0.1, vec![0.0]).is_err());
+    // wrong sample dimension
+    assert!(engine.submit("cnf_rings", 0.1, vec![0.0; 5]).is_err());
+}
+
+#[test]
+fn tcp_server_protocol() {
+    let Some(_m) = manifest() else { return };
+    let engine = Arc::new(Engine::with_defaults().unwrap());
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let engine = Arc::clone(&engine);
+        std::thread::spawn(move || {
+            let _ = server::serve_listener(engine, listener);
+        });
+    }
+    let mut client = server::Client::connect(&addr.to_string()).unwrap();
+
+    let tasks = client
+        .request(&hypersolvers::util::json::parse(r#"{"cmd":"tasks"}"#).unwrap())
+        .unwrap();
+    assert_eq!(tasks.get("ok").and_then(|v| v.as_bool()), Some(true));
+
+    let resp = client.infer("cnf_rings", 0.1, &[0.5, 0.5]).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp:?}");
+    let out = resp.get("output").unwrap().as_arr().unwrap();
+    assert_eq!(out.len(), 2);
+
+    let metrics = client
+        .request(&hypersolvers::util::json::parse(r#"{"cmd":"metrics"}"#).unwrap())
+        .unwrap();
+    assert!(metrics.get("report").unwrap().as_str().unwrap().contains("requests="));
+
+    // malformed request gets a JSON error, not a dropped connection
+    let bad = client
+        .request(&hypersolvers::util::json::parse(r#"{"task":"nope","input":[1]}"#).unwrap())
+        .unwrap();
+    assert_eq!(bad.get("ok").and_then(|v| v.as_bool()), Some(false));
+}

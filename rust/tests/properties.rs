@@ -1,0 +1,230 @@
+//! Extra cross-module property tests (no artifacts required): solver
+//! invariants on analytic fields, JSON round-trip fuzzing, workload/stats
+//! properties — the "failure injection / edge case" layer on top of the
+//! per-module unit tests.
+
+use hypersolvers::data::workload::WorkloadSpec;
+use hypersolvers::metrics::{mape, mean_l2};
+use hypersolvers::ode::{Decay, Rotation, VectorField};
+use hypersolvers::solvers::{
+    adaptive, dopri5, odeint_fixed, odeint_fixed_traj, AdaptiveOpts, Tableau,
+};
+use hypersolvers::tensor::Tensor;
+use hypersolvers::util::json::{self, Value};
+use hypersolvers::util::prng::Rng;
+use hypersolvers::util::propkit::{check, gen_range, gen_vec, prop_assert};
+use hypersolvers::util::stats;
+
+// ---------------------------------------------------------------------------
+// Solver invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rotation_norm_preserved_by_high_order_solvers() {
+    // ‖z(s)‖ is conserved by the rotation flow; rk4 at fine steps must
+    // track it to f32 precision for random initial conditions
+    check("rk4 preserves rotation norm", 25, |rng| {
+        let z0 = Tensor::new(&[1, 2], gen_vec(rng, 2, 2.0)).unwrap();
+        let f = Rotation { omega: 1.5 };
+        let z1 = odeint_fixed(&f, &z0, (0.0, 1.0), 32, &Tableau::rk4()).unwrap();
+        let drift = (z1.frobenius_norm() - z0.frobenius_norm()).abs();
+        prop_assert(
+            drift < 1e-4 * (1.0 + z0.frobenius_norm()),
+            format!("norm drift {drift}"),
+        )
+    });
+}
+
+#[test]
+fn step_doubling_halves_euler_error() {
+    check("euler error ~ 1/K", 20, |rng| {
+        let z0 = Tensor::new(&[1, 2], gen_vec(rng, 2, 1.0)).unwrap();
+        let f = Rotation { omega: 1.0 };
+        let exact = f.exact(&z0, 1.0);
+        let e = |k: usize| {
+            odeint_fixed(&f, &z0, (0.0, 1.0), k, &Tableau::euler())
+                .unwrap()
+                .sub(&exact)
+                .unwrap()
+                .frobenius_norm()
+        };
+        let (e16, e32) = (e(16), e(32));
+        if e32 < 1e-6 {
+            return Ok(()); // precision floor
+        }
+        let ratio = e16 / e32;
+        prop_assert(
+            ratio > 1.6 && ratio < 2.6,
+            format!("ratio {ratio} (e16={e16}, e32={e32})"),
+        )
+    });
+}
+
+#[test]
+fn adaptive_solvers_agree_across_pairs() {
+    // dopri5 and bs32 at tight tolerance must land on the same answer
+    check("dopri5 == bs32 at tol", 10, |rng| {
+        let z0 = Tensor::new(&[2, 2], gen_vec(rng, 4, 1.0)).unwrap();
+        let f = Rotation { omega: 2.0 };
+        let a = dopri5(&f, &z0, (0.0, 1.0), &AdaptiveOpts::with_tol(1e-6))
+            .unwrap();
+        let b = adaptive(
+            &f,
+            &z0,
+            (0.0, 1.0),
+            &Tableau::bs32(),
+            &AdaptiveOpts::with_tol(1e-6),
+        )
+        .unwrap();
+        let d = mean_l2(&a.z, &b.z).unwrap();
+        prop_assert(d < 1e-4, format!("disagreement {d}"))
+    });
+}
+
+#[test]
+fn trajectory_is_flow_composition() {
+    // z(s2) computed in one go equals continuing from z(s1) — group
+    // property of the numerical flow at matched meshes
+    check("flow composition", 20, |rng| {
+        let z0 = Tensor::new(&[1, 2], gen_vec(rng, 2, 1.0)).unwrap();
+        let f = Rotation { omega: 1.0 };
+        let tab = Tableau::heun();
+        let whole = odeint_fixed(&f, &z0, (0.0, 1.0), 8, &tab).unwrap();
+        let half = odeint_fixed(&f, &z0, (0.0, 0.5), 4, &tab).unwrap();
+        let rest = odeint_fixed(&f, &half, (0.5, 1.0), 4, &tab).unwrap();
+        let d = whole.sub(&rest).unwrap().frobenius_norm();
+        prop_assert(d < 1e-5, format!("composition gap {d}"))
+    });
+}
+
+#[test]
+fn trajectory_points_match_restarts() {
+    let f = Decay { lambda: -1.0 };
+    let z0 = Tensor::full(&[3, 2], 1.0);
+    let traj = odeint_fixed_traj(&f, &z0, (0.0, 1.0), 5, &Tableau::rk4()).unwrap();
+    for (i, z) in traj.iter().enumerate() {
+        let direct = if i == 0 {
+            z0.clone()
+        } else {
+            odeint_fixed(&f, &z0, (0.0, i as f32 / 5.0), i, &Tableau::rk4()).unwrap()
+        };
+        assert!(z.sub(&direct).unwrap().frobenius_norm() < 1e-5, "point {i}");
+    }
+}
+
+#[test]
+fn mape_is_scale_aware() {
+    check("mape grows with perturbation", 20, |rng| {
+        let n = gen_range(rng, 1, 16);
+        let t = Tensor::new(&[1, n], gen_vec(rng, n, 1.0)).unwrap();
+        let small = t.map(|x| x + 0.01);
+        let big = t.map(|x| x + 0.5);
+        let m_small = mape(&small, &t).unwrap();
+        let m_big = mape(&big, &t).unwrap();
+        prop_assert(m_small < m_big, format!("{m_small} !< {m_big}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON fuzz round-trip
+// ---------------------------------------------------------------------------
+
+fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.below(2) == 0),
+        2 => Value::Num((rng.normal() * 1e3).round() / 8.0),
+        3 => {
+            let n = rng.below(8);
+            Value::Str(
+                (0..n)
+                    .map(|_| {
+                        let c = rng.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect(),
+            )
+        }
+        4 => Value::Arr(
+            (0..rng.below(4)).map(|_| gen_value(rng, depth - 1)).collect(),
+        ),
+        _ => Value::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn json_fuzz_roundtrip() {
+    check("parse(to_string(v)) == v", 200, |rng| {
+        let v = gen_value(rng, 3);
+        let text = json::to_string(&v);
+        let back = json::parse(&text)
+            .map_err(|e| format!("reparse failed on {text:?}: {e}"))?;
+        prop_assert(back == v, format!("mismatch for {text}"))
+    });
+}
+
+#[test]
+fn json_rejects_mutations() {
+    // randomly truncating valid JSON must never panic (errors are fine)
+    check("no panic on truncation", 100, |rng| {
+        let v = gen_value(rng, 3);
+        let text = json::to_string(&v);
+        if text.len() > 1 {
+            let cut = 1 + rng.below(text.len() as u64 - 1) as usize;
+            let cut = (0..=cut).rev().find(|&c| text.is_char_boundary(c)).unwrap();
+            let _ = json::parse(&text[..cut]); // must not panic
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Workload & stats
+// ---------------------------------------------------------------------------
+
+#[test]
+fn workload_rate_scaling() {
+    check("duration ~ count/rate", 10, |rng| {
+        let rate = 10.0 + rng.uniform() * 1000.0;
+        let spec = WorkloadSpec {
+            rate,
+            count: 2000,
+            tasks: vec!["t".into()],
+            budgets: vec![(0.1, 1.0)],
+        };
+        let mut local = rng.fold_in(1);
+        let trace = spec.generate(&mut local);
+        let expected = 2000.0 / rate;
+        let actual = trace.duration_s();
+        prop_assert(
+            (actual - expected).abs() < 0.2 * expected,
+            format!("rate {rate}: duration {actual} vs {expected}"),
+        )
+    });
+}
+
+#[test]
+fn percentile_monotone_property() {
+    check("percentile monotone in q", 30, |rng| {
+        let n = gen_range(rng, 2, 100);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (p10, p50, p90) = (
+            stats::percentile(&xs, 10.0),
+            stats::percentile(&xs, 50.0),
+            stats::percentile(&xs, 90.0),
+        );
+        prop_assert(p10 <= p50 && p50 <= p90, format!("{p10} {p50} {p90}"))
+    });
+}
+
+#[test]
+fn field_macs_reported_consistently() {
+    // VectorField::macs default is 0; analytic fields keep that; the trait
+    // object path must not panic
+    let f: &dyn VectorField = &Rotation { omega: 1.0 };
+    assert_eq!(f.macs(), 0);
+}
