@@ -6,11 +6,23 @@
 //! request has waited `max_wait` — the standard dynamic batching policy of
 //! serving systems (vLLM/Triton style), applied at the ODE-solve level.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::{Request, Response};
+
+/// Assemble a padded batch input: `cap` rows of `dim` values, real samples
+/// first (row-major), remaining fill rows zeroed. Used by the engine right
+/// before handing a batch to the execution backend.
+pub fn pad_batch(samples: &[&[f32]], cap: usize, dim: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; cap * dim];
+    for (i, s) in samples.iter().enumerate().take(cap) {
+        let n = s.len().min(dim);
+        out[i * dim..i * dim + n].copy_from_slice(&s[..n]);
+    }
+    out
+}
 
 /// A request waiting in a queue, with its response channel.
 pub struct Pending {
@@ -62,31 +74,41 @@ impl Batcher {
         self.queues.values().map(VecDeque::len).sum()
     }
 
-    /// Pop every batch that is ready now (full, or oldest beyond deadline).
-    pub fn ready_batches(&mut self, now: Instant) -> Vec<ReadyBatch> {
-        let mut out = Vec::new();
-        for (key, q) in self.queues.iter_mut() {
-            let b = self.batch_sizes[key];
-            loop {
-                let flush = if q.len() >= b {
-                    true
-                } else if let Some(front) = q.front() {
-                    now.duration_since(front.req.t_submit) >= self.max_wait
-                } else {
-                    false
-                };
-                if !flush {
-                    break;
-                }
-                let take = q.len().min(b);
-                let items: Vec<Pending> = q.drain(..take).collect();
-                out.push(ReadyBatch {
-                    key: key.clone(),
-                    items,
-                });
+    /// Pop the single most-urgent ready batch (full, or oldest beyond
+    /// deadline) whose key is not in `busy`.
+    ///
+    /// This is the worker-pool pop: each dispatch worker takes one batch at
+    /// a time, and `busy` carries the keys currently executing on other
+    /// workers — per-queue affinity, so a queue's batches never run (or
+    /// complete) out of order while batches for *distinct* (task, variant)
+    /// queues execute concurrently.
+    pub fn pop_ready(&mut self, now: Instant, busy: &HashSet<QueueKey>) -> Option<ReadyBatch> {
+        let mut best: Option<(Instant, QueueKey)> = None;
+        for (key, q) in &self.queues {
+            if busy.contains(key) {
+                continue;
+            }
+            let front = match q.front() {
+                Some(p) => p,
+                None => continue,
+            };
+            let cap = self.batch_sizes[key];
+            let ready = q.len() >= cap
+                || now.duration_since(front.req.t_submit) >= self.max_wait;
+            if !ready {
+                continue;
+            }
+            let urgency = front.req.t_submit;
+            if best.as_ref().map(|(t, _)| urgency < *t).unwrap_or(true) {
+                best = Some((urgency, key.clone()));
             }
         }
-        out
+        let (_, key) = best?;
+        let cap = self.batch_sizes[&key];
+        let q = self.queues.get_mut(&key).expect("queue exists");
+        let take = q.len().min(cap);
+        let items: Vec<Pending> = q.drain(..take).collect();
+        Some(ReadyBatch { key, items })
     }
 
     /// Earliest deadline across all queues (None when idle) — drives the
@@ -95,6 +117,18 @@ impl Batcher {
         self.queues
             .values()
             .filter_map(|q| q.front().map(|p| p.req.t_submit + self.max_wait))
+            .min()
+    }
+
+    /// [`Self::next_deadline`] restricted to queues not in `busy`. Workers
+    /// wait on this: a busy queue's (already expired) deadline must not turn
+    /// the condvar wait into a spin — its completion `notify_all` is the
+    /// wake-up signal for that queue, not a timeout.
+    pub fn next_deadline_idle(&self, busy: &HashSet<QueueKey>) -> Option<Instant> {
+        self.queues
+            .iter()
+            .filter(|(k, _)| !busy.contains(*k))
+            .filter_map(|(_, q)| q.front().map(|p| p.req.t_submit + self.max_wait))
             .min()
     }
 }
@@ -124,10 +158,12 @@ mod tests {
             std::mem::forget(_rx);
             b.push(&key(), p);
         }
-        let ready = b.ready_batches(now);
-        // 7 queued, batch 3 → two full batches, one remains queued
-        assert_eq!(ready.len(), 2);
-        assert!(ready.iter().all(|r| r.items.len() == 3));
+        // 7 queued, batch 3 → two full batches pop, one item stays queued
+        // (not full, deadline far away)
+        let busy = HashSet::new();
+        assert_eq!(b.pop_ready(now, &busy).unwrap().items.len(), 3);
+        assert_eq!(b.pop_ready(now, &busy).unwrap().items.len(), 3);
+        assert!(b.pop_ready(now, &busy).is_none());
         assert_eq!(b.queued(), 1);
     }
 
@@ -139,9 +175,8 @@ mod tests {
         let (p, _rx) = pending(0, old);
         std::mem::forget(_rx);
         b.push(&key(), p);
-        let ready = b.ready_batches(Instant::now());
-        assert_eq!(ready.len(), 1);
-        assert_eq!(ready[0].items.len(), 1);
+        let batch = b.pop_ready(Instant::now(), &HashSet::new()).unwrap();
+        assert_eq!(batch.items.len(), 1);
         assert_eq!(b.queued(), 0);
     }
 
@@ -153,10 +188,213 @@ mod tests {
         let (p, _rx) = pending(0, now);
         std::mem::forget(_rx);
         b.push(&key(), p);
-        assert!(b.ready_batches(now).is_empty());
+        assert!(b.pop_ready(now, &HashSet::new()).is_none());
         assert_eq!(b.queued(), 1);
         let dl = b.next_deadline().unwrap();
         assert!(dl > now);
+    }
+
+    fn key_n(i: usize) -> QueueKey {
+        ("t".to_string(), format!("v{i}"))
+    }
+
+    #[test]
+    fn pop_ready_takes_one_batch_and_respects_busy() {
+        let mut b = Batcher::new(Duration::from_millis(1));
+        let now = Instant::now();
+        let old = now - Duration::from_secs(1);
+        for k in 0..2 {
+            b.ensure_queue(&key_n(k), 4);
+            for i in 0..4 {
+                let (p, _rx) = pending((k * 10 + i) as u64, old);
+                std::mem::forget(_rx);
+                b.push(&key_n(k), p);
+            }
+        }
+        // both queues full; with one busy, pop must return the other
+        let mut busy = HashSet::new();
+        busy.insert(key_n(0));
+        let batch = b.pop_ready(now, &busy).unwrap();
+        assert_eq!(batch.key, key_n(1));
+        assert_eq!(batch.items.len(), 4);
+        // now both keys busy → nothing poppable even though key 0 is full
+        busy.insert(key_n(1));
+        assert!(b.pop_ready(now, &busy).is_none());
+        busy.clear();
+        assert_eq!(b.pop_ready(now, &busy).unwrap().key, key_n(0));
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn next_deadline_idle_skips_busy_queues() {
+        let mut b = Batcher::new(Duration::from_millis(1));
+        let now = Instant::now();
+        b.ensure_queue(&key_n(0), 4);
+        b.ensure_queue(&key_n(1), 4);
+        // key 0: old item (expired deadline), key 1: fresh item
+        let (p, _rx) = pending(0, now - Duration::from_secs(1));
+        std::mem::forget(_rx);
+        b.push(&key_n(0), p);
+        let (p, _rx) = pending(1, now);
+        std::mem::forget(_rx);
+        b.push(&key_n(1), p);
+
+        let mut busy = HashSet::new();
+        busy.insert(key_n(0));
+        // with key 0 busy, the wait deadline must come from key 1 (future),
+        // not the already-expired key 0 front — no condvar spin
+        let idle = b.next_deadline_idle(&busy).unwrap();
+        assert!(idle > now);
+        assert_eq!(b.next_deadline_idle(&HashSet::new()), b.next_deadline());
+        busy.insert(key_n(1));
+        assert!(b.next_deadline_idle(&busy).is_none());
+    }
+
+    #[test]
+    fn batches_never_exceed_cap_property() {
+        use crate::util::propkit::{check, gen_range, prop_assert};
+        check("pop_ready batch ≤ cap", 50, |rng| {
+            let cap = gen_range(rng, 1, 6);
+            let n = gen_range(rng, 0, 30);
+            let mut b = Batcher::new(Duration::from_millis(1));
+            b.ensure_queue(&key(), cap);
+            let old = Instant::now() - Duration::from_secs(1);
+            for i in 0..n {
+                let (p, _rx) = pending(i as u64, old);
+                std::mem::forget(_rx);
+                b.push(&key(), p);
+            }
+            let busy = HashSet::new();
+            let mut popped = 0usize;
+            while let Some(batch) = b.pop_ready(Instant::now(), &busy) {
+                prop_assert(
+                    batch.items.len() <= cap,
+                    format!("batch {} > cap {cap}", batch.items.len()),
+                )?;
+                prop_assert(!batch.items.is_empty(), "empty batch")?;
+                popped += batch.items.len();
+            }
+            prop_assert(popped == n, format!("popped {popped} of {n}"))
+        });
+    }
+
+    #[test]
+    fn fifo_within_queue_property() {
+        use crate::util::propkit::{check, gen_range, prop_assert};
+        check("items within a queue stay FIFO", 40, |rng| {
+            let keys: Vec<QueueKey> = (0..3).map(key_n).collect();
+            let mut b = Batcher::new(Duration::from_millis(1));
+            for k in &keys {
+                b.ensure_queue(k, gen_range(rng, 1, 5));
+            }
+            let old = Instant::now() - Duration::from_secs(5);
+            let busy = HashSet::new();
+            let mut next_id = 0u64;
+            let mut drained: Vec<Vec<u64>> = vec![Vec::new(); keys.len()];
+            // interleave random pushes with random pops
+            for _ in 0..gen_range(rng, 5, 40) {
+                if rng.below(3) < 2 {
+                    let k = gen_range(rng, 0, keys.len() - 1);
+                    // ids are globally increasing, so per-key order is too
+                    let (p, _rx) = pending(next_id, old + Duration::from_micros(next_id));
+                    std::mem::forget(_rx);
+                    next_id += 1;
+                    b.push(&keys[k], p);
+                } else if let Some(batch) = b.pop_ready(Instant::now(), &busy) {
+                    let ki = keys.iter().position(|k| *k == batch.key).unwrap();
+                    drained[ki].extend(batch.items.iter().map(|p| p.req.id));
+                }
+            }
+            while let Some(batch) = b.pop_ready(Instant::now(), &busy) {
+                let ki = keys.iter().position(|k| *k == batch.key).unwrap();
+                drained[ki].extend(batch.items.iter().map(|p| p.req.id));
+            }
+            for (ki, ids) in drained.iter().enumerate() {
+                let mut sorted = ids.clone();
+                sorted.sort();
+                prop_assert(
+                    *ids == sorted,
+                    format!("queue {ki} drained out of order: {ids:?}"),
+                )?;
+            }
+            prop_assert(b.queued() == 0, "queue should drain")
+        });
+    }
+
+    #[test]
+    fn padding_fill_zeroed_property() {
+        use crate::util::propkit::{check, gen_range, gen_vec, prop_assert};
+        check("pad_batch zero-fills beyond real samples", 50, |rng| {
+            let cap = gen_range(rng, 1, 8);
+            let dim = gen_range(rng, 1, 6);
+            let real = gen_range(rng, 0, cap);
+            let samples: Vec<Vec<f32>> =
+                (0..real).map(|_| gen_vec(rng, dim, 1.0)).collect();
+            let refs: Vec<&[f32]> = samples.iter().map(Vec::as_slice).collect();
+            let out = pad_batch(&refs, cap, dim);
+            prop_assert(out.len() == cap * dim, "wrong padded length")?;
+            for (i, s) in samples.iter().enumerate() {
+                prop_assert(
+                    out[i * dim..(i + 1) * dim] == s[..],
+                    format!("row {i} corrupted"),
+                )?;
+            }
+            prop_assert(
+                out[real * dim..].iter().all(|&x| x == 0.0),
+                "padding rows not zeroed",
+            )
+        });
+    }
+
+    #[test]
+    fn next_deadline_monotone_under_pushes_property() {
+        use crate::util::propkit::{check, gen_range, prop_assert};
+        check("next_deadline: exact and push-monotone", 40, |rng| {
+            let wait = Duration::from_millis(10);
+            let keys: Vec<QueueKey> = (0..2).map(key_n).collect();
+            let mut b = Batcher::new(wait);
+            for k in &keys {
+                b.ensure_queue(k, gen_range(rng, 1, 4));
+            }
+            let base = Instant::now() - Duration::from_secs(60);
+            let busy = HashSet::new();
+            // mirror of every queue's front submit time
+            let mut fronts: Vec<VecDeque<Instant>> = vec![VecDeque::new(); keys.len()];
+            let mut t = 0u64;
+            for _ in 0..gen_range(rng, 3, 30) {
+                let prev = b.next_deadline();
+                let push = rng.below(3) < 2;
+                if push {
+                    let k = gen_range(rng, 0, keys.len() - 1);
+                    t += 1 + rng.below(1000);
+                    let at = base + Duration::from_micros(t);
+                    let (p, _rx) = pending(t, at);
+                    std::mem::forget(_rx);
+                    b.push(&keys[k], p);
+                    fronts[k].push_back(at);
+                    // pushing can only pull the deadline earlier or leave it
+                    if let (Some(prev), Some(now)) = (prev, b.next_deadline()) {
+                        prop_assert(now <= prev, "push moved deadline later")?;
+                    }
+                } else if let Some(batch) = b.pop_ready(base + Duration::from_secs(120), &busy) {
+                    let ki = keys.iter().position(|k| *k == batch.key).unwrap();
+                    for _ in 0..batch.items.len() {
+                        fronts[ki].pop_front();
+                    }
+                }
+                // invariant: deadline == min over fronts + max_wait
+                let want = fronts
+                    .iter()
+                    .filter_map(|q| q.front().copied())
+                    .min()
+                    .map(|f| f + wait);
+                prop_assert(
+                    b.next_deadline() == want,
+                    "deadline drifted from min-front + max_wait",
+                )?;
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -174,7 +412,11 @@ mod tests {
                 b.push(&key(), p);
             }
             // everything is past deadline → all must flush exactly once
-            let ready = b.ready_batches(Instant::now());
+            let busy = HashSet::new();
+            let mut ready = Vec::new();
+            while let Some(r) = b.pop_ready(Instant::now(), &busy) {
+                ready.push(r);
+            }
             let mut ids: Vec<u64> = ready
                 .iter()
                 .flat_map(|r| r.items.iter().map(|p| p.req.id))

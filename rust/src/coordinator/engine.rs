@@ -1,4 +1,13 @@
-//! The coordinator engine: policy → queues → dispatcher → PJRT executor.
+//! The coordinator engine: policy → queues → dispatch worker pool →
+//! pluggable execution backend.
+//!
+//! Dispatch runs on a small pool of workers, each pulling one ready batch
+//! at a time from the shared [`Batcher`]. A per-[`QueueKey`] affinity set
+//! guarantees that a queue's batches execute (and therefore respond) in
+//! FIFO order, while batches for *distinct* (task, variant) queues run
+//! concurrently — on the [`NativeBackend`](crate::runtime::NativeBackend)
+//! genuinely in parallel, on the PJRT backend pipelined up to the executor
+//! thread.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
@@ -6,11 +15,11 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{Batcher, Pending, QueueKey, ReadyBatch};
+use crate::coordinator::batcher::{pad_batch, Batcher, Pending, QueueKey, ReadyBatch};
 use crate::coordinator::metrics::CoordinatorMetrics;
 use crate::coordinator::policy::{select_variant, Policy};
 use crate::coordinator::request::{Request, Response};
-use crate::runtime::exec::{Executor, ExecutorHandle};
+use crate::runtime::backend::{BackendKind, ExecBackend};
 use crate::runtime::manifest::Manifest;
 use crate::{log_debug, log_info, Error, Result};
 
@@ -20,6 +29,10 @@ pub struct EngineConfig {
     /// dynamic batching deadline
     pub max_wait: Duration,
     pub policy: Policy,
+    /// which execution backend serves batches
+    pub backend: BackendKind,
+    /// dispatch worker count; 0 = auto (one per core, clamped to [2, 8])
+    pub workers: usize,
 }
 
 impl Default for EngineConfig {
@@ -28,54 +41,91 @@ impl Default for EngineConfig {
             artifacts_dir: crate::artifacts_dir(),
             max_wait: Duration::from_millis(2),
             policy: Policy::MinMacs,
+            backend: BackendKind::Pjrt,
+            workers: 0,
         }
     }
 }
 
+fn resolve_workers(configured: usize) -> usize {
+    if configured > 0 {
+        return configured;
+    }
+    thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(2)
+        .clamp(2, 8)
+}
+
+/// Queues + the affinity set, under one lock.
+struct DispatchState {
+    batcher: Batcher,
+    /// keys currently executing on some worker
+    inflight: HashSet<QueueKey>,
+}
+
 struct Shared {
-    batcher: Mutex<Batcher>,
+    state: Mutex<DispatchState>,
     work: Condvar,
     shutdown: AtomicBool,
 }
 
 /// The serving engine. `submit` is thread-safe; execution happens on the
-/// dispatcher + PJRT executor threads.
+/// dispatch worker pool against the configured backend.
 pub struct Engine {
     manifest: Arc<Manifest>,
     shared: Arc<Shared>,
     metrics: Arc<CoordinatorMetrics>,
+    backend: Arc<dyn ExecBackend>,
     next_id: AtomicU64,
-    dispatcher: Option<thread::JoinHandle<()>>,
-    // keep the executor alive (drops last: dispatcher uses its handle)
-    _executor: Executor,
+    workers: Vec<thread::JoinHandle<()>>,
     config: EngineConfig,
 }
 
 impl Engine {
     pub fn new(config: EngineConfig) -> Result<Engine> {
         let manifest = Arc::new(Manifest::load(&config.artifacts_dir)?);
-        let executor = Executor::spawn()?;
+        let backend: Arc<dyn ExecBackend> = Arc::from(config.backend.create()?);
         let shared = Arc::new(Shared {
-            batcher: Mutex::new(Batcher::new(config.max_wait)),
+            state: Mutex::new(DispatchState {
+                batcher: Batcher::new(config.max_wait),
+                inflight: HashSet::new(),
+            }),
             work: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
         let metrics = Arc::new(CoordinatorMetrics::new());
 
-        let dispatcher = {
-            let shared = Arc::clone(&shared);
-            let manifest = Arc::clone(&manifest);
-            let metrics = Arc::clone(&metrics);
-            let handle = executor.handle();
-            thread::Builder::new()
-                .name("hsolve-dispatcher".into())
-                .spawn(move || dispatcher_main(shared, manifest, metrics, handle))
-                .map_err(|e| Error::Coordinator(format!("spawn dispatcher: {e}")))?
-        };
+        let n = resolve_workers(config.workers);
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let spawned = {
+                let shared = Arc::clone(&shared);
+                let manifest = Arc::clone(&manifest);
+                let metrics = Arc::clone(&metrics);
+                let backend = Arc::clone(&backend);
+                thread::Builder::new()
+                    .name(format!("hsolve-dispatch-{i}"))
+                    .spawn(move || worker_main(shared, manifest, metrics, backend))
+            };
+            match spawned {
+                Ok(j) => workers.push(j),
+                Err(e) => {
+                    shared.shutdown.store(true, Relaxed);
+                    shared.work.notify_all();
+                    for j in workers {
+                        let _ = j.join();
+                    }
+                    return Err(Error::Coordinator(format!("spawn dispatch worker: {e}")));
+                }
+            }
+        }
 
         log_info!(
-            "engine up: {} tasks, policy {:?}, max_wait {:?}",
+            "engine up: {} tasks, backend {}, {} dispatch workers, policy {:?}, max_wait {:?}",
             manifest.tasks.len(),
+            backend.name(),
+            n,
             config.policy,
             config.max_wait
         );
@@ -83,9 +133,9 @@ impl Engine {
             manifest,
             shared,
             metrics,
+            backend,
             next_id: AtomicU64::new(1),
-            dispatcher: Some(dispatcher),
-            _executor: executor,
+            workers,
             config,
         })
     }
@@ -102,6 +152,20 @@ impl Engine {
         &self.metrics
     }
 
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// The active backend's name ("pjrt" | "native").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Dispatch worker count actually running.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Submit one sample; returns the channel the response arrives on.
     pub fn submit(
         &self,
@@ -110,6 +174,11 @@ impl Engine {
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Response>> {
         let entry = self.manifest.task(task)?;
+        if entry.state_shape.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "task {task}: manifest state shape is rank 0"
+            )));
+        }
         let sample_dim: usize = entry.state_shape[1..].iter().product();
         if input.len() != sample_dim {
             return Err(Error::Coordinator(format!(
@@ -123,9 +192,9 @@ impl Engine {
         let id = self.next_id.fetch_add(1, Relaxed);
         let (tx, rx) = mpsc::channel();
         {
-            let mut b = self.shared.batcher.lock().unwrap();
-            b.ensure_queue(&key, entry.batch());
-            b.push(
+            let mut s = self.shared.state.lock().unwrap();
+            s.batcher.ensure_queue(&key, entry.batch());
+            s.batcher.push(
                 &key,
                 Pending {
                     req: Request::new(id, task, budget, input),
@@ -145,14 +214,12 @@ impl Engine {
             .map_err(|_| Error::Coordinator("engine dropped response".into()))
     }
 
-    /// Pre-compile the variants the policy can choose for `task`, so first
-    /// requests don't pay PJRT compilation.
+    /// Prepare every variant of `task` on the backend (PJRT compilation /
+    /// native weight loading), so first requests don't pay it.
     pub fn warmup(&self, task: &str) -> Result<()> {
         let entry = self.manifest.task(task)?;
-        let handle = self._executor.handle();
         for v in &entry.variants {
-            let key = format!("{task}/{}", v.name);
-            handle.load(&key, self.manifest.hlo_path(&v.hlo))?;
+            self.backend.prepare(&self.manifest, entry, v)?;
         }
         Ok(())
     }
@@ -162,54 +229,90 @@ impl Drop for Engine {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Relaxed);
         self.shared.work.notify_all();
-        if let Some(j) = self.dispatcher.take() {
+        for j in self.workers.drain(..) {
             let _ = j.join();
         }
     }
 }
 
-fn dispatcher_main(
+/// Releases a claimed queue key when the batch finishes — on the normal
+/// path *and* on unwind, so a panicking backend can't leave its queue
+/// permanently marked in-flight (which would silently starve it).
+struct InflightGuard<'a> {
+    shared: &'a Shared,
+    metrics: &'a CoordinatorMetrics,
+    key: QueueKey,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.metrics.batch_finished();
+        match self.shared.state.lock() {
+            Ok(mut s) => {
+                s.inflight.remove(&self.key);
+            }
+            // the state lock is only poisoned if another worker died while
+            // batching; still release our key so the queue isn't starved
+            Err(poisoned) => {
+                poisoned.into_inner().inflight.remove(&self.key);
+            }
+        }
+        // releasing the key may make another batch of the same queue
+        // poppable; other workers might all be asleep on the condvar
+        self.shared.work.notify_all();
+    }
+}
+
+fn worker_main(
     shared: Arc<Shared>,
     manifest: Arc<Manifest>,
     metrics: Arc<CoordinatorMetrics>,
-    exec: ExecutorHandle,
+    backend: Arc<dyn ExecBackend>,
 ) {
-    let mut loaded: HashSet<String> = HashSet::new();
     loop {
-        // collect ready work under the lock, run it outside
-        let batches: Vec<ReadyBatch> = {
-            let mut b = shared.batcher.lock().unwrap();
+        // claim one ready batch under the lock, run it outside
+        let batch: ReadyBatch = {
+            let mut s = shared.state.lock().unwrap();
             loop {
                 if shared.shutdown.load(Relaxed) {
                     return;
                 }
                 let now = Instant::now();
-                let ready = b.ready_batches(now);
-                if !ready.is_empty() {
-                    break ready;
+                let state = &mut *s;
+                if let Some(batch) = state.batcher.pop_ready(now, &state.inflight) {
+                    state.inflight.insert(batch.key.clone());
+                    break batch;
                 }
-                let timeout = b
-                    .next_deadline()
+                // wait on non-busy queues only: a busy queue's expired
+                // deadline would clamp this to ~0 and spin; its completion
+                // notify_all is what wakes us for that queue
+                let timeout = state
+                    .batcher
+                    .next_deadline_idle(&state.inflight)
                     .map(|dl| dl.saturating_duration_since(now))
                     .unwrap_or(Duration::from_millis(50));
                 let (guard, _) = shared
                     .work
-                    .wait_timeout(b, timeout.max(Duration::from_micros(100)))
+                    .wait_timeout(s, timeout.max(Duration::from_micros(100)))
                     .unwrap();
-                b = guard;
+                s = guard;
             }
         };
-        for batch in batches {
-            run_batch(&manifest, &metrics, &exec, &mut loaded, batch);
-        }
+
+        let _guard = InflightGuard {
+            shared: &*shared,
+            metrics: &*metrics,
+            key: batch.key.clone(),
+        };
+        metrics.batch_started();
+        run_batch(&manifest, &metrics, backend.as_ref(), batch);
     }
 }
 
 fn run_batch(
     manifest: &Manifest,
     metrics: &CoordinatorMetrics,
-    exec: &ExecutorHandle,
-    loaded: &mut HashSet<String>,
+    backend: &dyn ExecBackend,
     batch: ReadyBatch,
 ) {
     let (task_name, variant_name) = &batch.key;
@@ -221,14 +324,8 @@ fn run_batch(
         Some(v) => v.clone(),
         None => return fail_batch(batch, "variant vanished"),
     };
-    let key = format!("{task_name}/{variant_name}");
-    if !loaded.contains(&key) {
-        let t0 = Instant::now();
-        if let Err(e) = exec.load(&key, manifest.hlo_path(&variant.hlo)) {
-            return fail_batch(batch, &e.to_string());
-        }
-        log_info!("compiled {key} in {:?}", t0.elapsed());
-        loaded.insert(key.clone());
+    if variant.in_shape.is_empty() || variant.out_shape.is_empty() {
+        return fail_batch(batch, "variant has rank-0 in/out shape");
     }
 
     let b_cap = entry.batch();
@@ -236,11 +333,25 @@ fn run_batch(
     let out_dim: usize = variant.out_shape[1..].iter().product();
     let real = batch.items.len();
 
-    // assemble the padded batch input
-    let mut input = vec![0.0f32; b_cap * sample_dim];
-    for (i, p) in batch.items.iter().enumerate() {
-        input[i * sample_dim..(i + 1) * sample_dim].copy_from_slice(&p.req.input);
+    // submit validated against the task's state shape; the variant's
+    // executable row dim must agree or padding would silently corrupt
+    // (image→logits exports take image-dim rows the state-dim submit
+    // surface doesn't produce yet)
+    if let Some(p) = batch.items.iter().find(|p| p.req.input.len() != sample_dim) {
+        let got = p.req.input.len();
+        return fail_batch(
+            batch,
+            &format!("sample has {got} values but variant row dim is {sample_dim}"),
+        );
     }
+
+    // assemble the padded batch input
+    let samples: Vec<&[f32]> = batch
+        .items
+        .iter()
+        .map(|p| p.req.input.as_slice())
+        .collect();
+    let input = pad_batch(&samples, b_cap, sample_dim);
     let queue_start = Instant::now();
     for p in &batch.items {
         metrics
@@ -249,29 +360,35 @@ fn run_batch(
     }
 
     let t_exec = Instant::now();
-    let outputs = match exec.run(&key, input, &variant.in_shape) {
+    let out = match backend.execute(manifest, entry, &variant, input) {
         Ok(o) => o,
         Err(e) => return fail_batch(batch, &e.to_string()),
     };
     let exec_time = t_exec.elapsed();
     metrics.exec_latency.record(exec_time);
 
-    let z = &outputs[0];
-    let nfe = if variant.returns_nfe && outputs.len() > 1 {
-        outputs[1].first().copied().unwrap_or(0.0) as u64
-    } else {
-        variant.nfe
-    };
+    let nfe = out.nfe.unwrap_or(variant.nfe);
+    if out.z.len() < real * out_dim {
+        // validate before recording: a short output produces no responses
+        // and must not count as a served batch in fill/NFE accounting
+        return fail_batch(
+            batch,
+            &format!(
+                "backend returned {} values, batch needs {}",
+                out.z.len(),
+                real * out_dim
+            ),
+        );
+    }
     metrics.record_batch(real, b_cap, nfe, variant.macs);
-    log_debug!("batch {key}: {real}/{b_cap} samples in {exec_time:?}");
-
+    log_debug!("batch {task_name}/{variant_name}: {real}/{b_cap} samples in {exec_time:?}");
     for (i, p) in batch.items.into_iter().enumerate() {
         let latency = p.req.t_submit.elapsed();
         metrics.total_latency.record(latency);
         metrics.responses.fetch_add(1, Relaxed);
         let _ = p.reply.send(Response {
             id: p.req.id,
-            output: z[i * out_dim..(i + 1) * out_dim].to_vec(),
+            output: out.z[i * out_dim..(i + 1) * out_dim].to_vec(),
             variant: variant.name.clone(),
             mape: variant.mape,
             nfe,
@@ -284,4 +401,23 @@ fn run_batch(
 fn fail_batch(batch: ReadyBatch, msg: &str) {
     crate::log_error!("batch {:?} failed: {msg}", batch.key);
     // drop the reply senders: receivers see a disconnect error
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_resolution_bounds() {
+        assert_eq!(resolve_workers(3), 3);
+        let auto = resolve_workers(0);
+        assert!((2..=8).contains(&auto), "auto workers {auto}");
+    }
+
+    #[test]
+    fn default_config_is_pjrt_auto() {
+        let c = EngineConfig::default();
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        assert_eq!(c.workers, 0);
+    }
 }

@@ -16,6 +16,14 @@ pub struct CoordinatorMetrics {
     pub nfe_total: AtomicU64,
     /// total MACs spent (per-sample × real samples)
     pub macs_total: AtomicU64,
+    /// batches executing right now across the dispatch worker pool
+    pub inflight_batches: AtomicU64,
+    /// high-water mark of concurrent batches; queue affinity means every
+    /// concurrent batch belongs to a distinct (task, variant) queue, so a
+    /// peak ≥ 2 demonstrates parallel dispatch (true parallel execution on
+    /// the native backend; on pjrt, pipelining into the serial executor
+    /// thread)
+    pub inflight_peak: AtomicU64,
     pub queue_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
     pub total_latency: LatencyHistogram,
@@ -34,6 +42,19 @@ impl CoordinatorMetrics {
         self.macs_total.fetch_add(macs * real as u64, Relaxed);
     }
 
+    /// Mark a batch execution starting; returns the current in-flight count
+    /// and maintains the concurrency peak.
+    pub fn batch_started(&self) -> u64 {
+        let now = self.inflight_batches.fetch_add(1, Relaxed) + 1;
+        self.inflight_peak.fetch_max(now, Relaxed);
+        now
+    }
+
+    /// Mark a batch execution finished.
+    pub fn batch_finished(&self) {
+        self.inflight_batches.fetch_sub(1, Relaxed);
+    }
+
     /// Mean batch fill ratio (1.0 = always full).
     pub fn fill_ratio(&self) -> f64 {
         let b = self.batches.load(Relaxed);
@@ -47,13 +68,14 @@ impl CoordinatorMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} responses={} batches={} fill={:.2} \
+            "requests={} responses={} batches={} fill={:.2} inflight_peak={} \
              queue_p50={:.0}µs exec_p50={:.0}µs total_p50={:.0}µs total_p99={:.0}µs \
              nfe_total={} gmacs_total={:.2}",
             self.requests.load(Relaxed),
             self.responses.load(Relaxed),
             self.batches.load(Relaxed),
             self.fill_ratio(),
+            self.inflight_peak.load(Relaxed),
             self.queue_latency.percentile_us(50.0),
             self.exec_latency.percentile_us(50.0),
             self.total_latency.percentile_us(50.0),
@@ -79,6 +101,20 @@ mod tests {
         assert_eq!(m.nfe_total.load(Relaxed), 12);
         assert!((m.fill_ratio() - 6.0 / 7.0).abs() < 1e-9);
         assert!(m.report().contains("batches=2"));
+    }
+
+    #[test]
+    fn inflight_gauge_tracks_peak() {
+        let m = CoordinatorMetrics::new();
+        assert_eq!(m.batch_started(), 1);
+        assert_eq!(m.batch_started(), 2);
+        m.batch_finished();
+        assert_eq!(m.batch_started(), 2);
+        m.batch_finished();
+        m.batch_finished();
+        assert_eq!(m.inflight_batches.load(Relaxed), 0);
+        assert_eq!(m.inflight_peak.load(Relaxed), 2);
+        assert!(m.report().contains("inflight_peak=2"));
     }
 
     #[test]

@@ -7,14 +7,19 @@
 //! hypersolved variants on the front, tight budgets resolve to a fraction of
 //! the NFEs classical solvers would need (Fig. 3/4 of the paper, served
 //! live). The [`batcher`] coalesces requests per chosen variant up to the
-//! exported batch size under a latency deadline, and the [`engine`] executes
-//! batches on the PJRT executor thread.
+//! exported batch size under a latency deadline, and the [`engine`]'s
+//! dispatch worker pool executes batches on a pluggable
+//! [`ExecBackend`](crate::runtime::ExecBackend) — PJRT over the AOT
+//! artifacts, or the native tensor/solver stack.
 //!
 //! ```text
 //! client ──submit──► Engine ──policy──► per-variant queues (batcher)
 //!                                           │ full batch or deadline
 //!                                           ▼
-//!                                    PJRT executor thread ──► responses
+//!                          dispatch workers (per-queue affinity)
+//!                               │                    │
+//!                               ▼                    ▼
+//!                        exec backend (pjrt | native) ──► responses
 //! ```
 
 pub mod batcher;

@@ -75,7 +75,13 @@ fn handle_line_inner(engine: &Engine, line: &str) -> Result<Value> {
         return match cmd {
             "metrics" => Ok(json::obj(vec![
                 ("ok", Value::Bool(true)),
+                ("backend", json::s(engine.backend_name())),
                 ("report", json::s(&engine.metrics().report())),
+            ])),
+            "backend" => Ok(json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("backend", json::s(engine.backend_name())),
+                ("workers", json::num(engine.worker_count() as f64)),
             ])),
             "tasks" => Ok(Value::Obj(
                 [

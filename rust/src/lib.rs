@@ -8,17 +8,21 @@
 //! * **Layer 1/2 (build time)** — Pallas kernels + JAX Neural ODE models,
 //!   trained and AOT-lowered to HLO text by `python/compile/aot.py`.
 //!   Python never runs on the request path.
-//! * **Layer 3 (this crate)** — the serving coordinator: it loads the AOT
-//!   artifacts through PJRT ([`runtime`]), batches inference requests and
-//!   picks the cheapest `(solver, K)` variant that satisfies each
-//!   request's error budget ([`coordinator`]) — the paper's accuracy/compute
-//!   pareto front made operational.
+//! * **Layer 3 (this crate)** — the serving coordinator: it batches
+//!   inference requests, picks the cheapest `(solver, K)` variant that
+//!   satisfies each request's error budget ([`coordinator`]) — the paper's
+//!   accuracy/compute pareto front made operational — and executes batches
+//!   on a worker pool against a pluggable execution backend
+//!   ([`runtime::ExecBackend`]): PJRT over the AOT artifacts, or the
+//!   native solver stack.
 //!
 //! The crate also carries a complete *native* inference stack ([`tensor`],
 //! [`nn`], [`solvers`], [`ode`]) that evaluates the trained networks from
-//! exported weights without PJRT; the benches use it for dense parameter
-//! sweeps (every figure of the paper) and the tests use it to cross-validate
-//! the PJRT path numerically.
+//! exported weights without PJRT; it backs the `native` serving backend
+//! (and with it the artifact-free engine test harness), the benches' dense
+//! parameter sweeps (every figure of the paper), and the numeric
+//! cross-validation of the PJRT path. See `rust/README.md` for the engine
+//! architecture and backend selection.
 //!
 //! The [`util`] module contains substrates this offline environment forced
 //! us to build from scratch: PRNG, JSON codec, CLI parsing, thread pool,
@@ -34,23 +38,46 @@ pub mod solvers;
 pub mod tensor;
 pub mod util;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled Display/Error impls — proc-macro
+/// crates like `thiserror` are not available offline).
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
-    #[error("manifest error: {0}")]
     Manifest(String),
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("shape error: {0}")]
     Shape(String),
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-    #[error("{0}")]
     Other(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

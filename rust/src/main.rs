@@ -7,6 +7,7 @@
 //!
 //! Examples:
 //!   hypersolverd serve --addr 127.0.0.1:7878 --max-wait-ms 2
+//!   hypersolverd serve --backend native --workers 4
 //!   hypersolverd tasks
 //!   hypersolverd infer --task cnf_rings --budget 0.05 --input 0.3,-0.7
 
@@ -14,7 +15,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
-use hypersolvers::runtime::Manifest;
+use hypersolvers::runtime::{BackendKind, Manifest};
 use hypersolvers::util::cli::Cli;
 
 fn main() {
@@ -23,6 +24,8 @@ fn main() {
         .opt("artifacts", "", "artifacts directory (default: ./artifacts)")
         .opt("max-wait-ms", "2", "dynamic batching deadline in ms")
         .opt("policy", "macs", "variant cost axis: macs | nfe")
+        .opt("backend", "pjrt", "execution backend: pjrt | native")
+        .opt("workers", "0", "dispatch workers (0 = auto)")
         .opt("task", "", "task for `infer`")
         .opt("budget", "0.05", "MAPE budget for `infer`")
         .opt("input", "", "comma-separated f32 sample for `infer`")
@@ -35,12 +38,21 @@ fn main() {
         .unwrap_or("serve")
         .to_string();
 
+    let backend = match BackendKind::from_name(&parsed.get("backend")) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
     let mut config = EngineConfig {
         max_wait: Duration::from_millis(parsed.get_usize("max-wait-ms") as u64),
         policy: match parsed.get("policy").as_str() {
             "nfe" => Policy::MinNfe,
             _ => Policy::MinMacs,
         },
+        backend,
+        workers: parsed.get_usize("workers"),
         ..Default::default()
     };
     if !parsed.get("artifacts").is_empty() {

@@ -1,0 +1,188 @@
+//! Pluggable execution backends: "how a (task, variant) batch executes" as
+//! a trait, so the coordinator is independent of whether batches run on the
+//! PJRT executor thread ([`PjrtBackend`]) or on the in-repo tensor/solver
+//! stack ([`crate::runtime::native::NativeBackend`]).
+//!
+//! The engine's dispatch workers share one backend behind an `Arc`, so
+//! implementations must be `Send + Sync`; the native backend executes
+//! concurrently, the PJRT backend serialises on its executor thread (the
+//! `!Send` XLA handles live there).
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use crate::runtime::exec::Executor;
+use crate::runtime::manifest::{Manifest, TaskEntry, Variant};
+use crate::{Error, Result};
+
+/// Output of one batched execution.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    /// Flattened terminal output, batch-major (`cap * out_dim` values; the
+    /// engine slices out the real samples).
+    pub z: Vec<f32>,
+    /// Measured NFE when the solve reports one (adaptive solvers); `None`
+    /// means "use the variant's static manifest count".
+    pub nfe: Option<u64>,
+}
+
+/// How one (task, variant) batch executes.
+pub trait ExecBackend: Send + Sync {
+    /// Short stable name ("pjrt" | "native") for logs/CLI/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Prepare the executable (compile HLO / load weights). Idempotent;
+    /// called by `Engine::warmup` and implicitly by `execute`.
+    fn prepare(&self, manifest: &Manifest, task: &TaskEntry, variant: &Variant) -> Result<()>;
+
+    /// Execute one padded batch: `input` is the row-major flattening of
+    /// `variant.in_shape` (padding rows zeroed).
+    fn execute(
+        &self,
+        manifest: &Manifest,
+        task: &TaskEntry,
+        variant: &Variant,
+        input: Vec<f32>,
+    ) -> Result<ExecOutput>;
+}
+
+/// Backend selector, threaded through `EngineConfig`, the `hypersolverd`
+/// CLI and the serving benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// In-repo tensor/solver stack; needs only `manifest.json` + weights.
+    Native,
+    /// AOT HLO executables on the PJRT executor thread; needs the full
+    /// artifacts directory and an XLA runtime.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn from_name(name: &str) -> Result<BackendKind> {
+        match name {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(Error::Other(format!(
+                "unknown backend {other:?} (native | pjrt)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Instantiate the backend (spawns the executor thread for PJRT).
+    pub fn create(self) -> Result<Box<dyn ExecBackend>> {
+        match self {
+            BackendKind::Native => Ok(Box::new(crate::runtime::native::NativeBackend::new())),
+            BackendKind::Pjrt => Ok(Box::new(PjrtBackend::spawn()?)),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// True when a PJRT client can actually be brought up — the runtime check
+/// that gates XLA-dependent tests and benches.
+pub fn pjrt_available() -> bool {
+    Executor::spawn().is_ok()
+}
+
+/// The PJRT path: the original executor-thread design behind the trait.
+/// Compilation state (which keys are loaded) is tracked here so `execute`
+/// can lazily prepare on first sight, exactly like the old dispatcher.
+pub struct PjrtBackend {
+    executor: Executor,
+    loaded: Mutex<HashSet<String>>,
+}
+
+impl PjrtBackend {
+    /// Spawn the executor thread; fails fast when no PJRT runtime exists.
+    pub fn spawn() -> Result<PjrtBackend> {
+        Ok(PjrtBackend {
+            executor: Executor::spawn()?,
+            loaded: Mutex::new(HashSet::new()),
+        })
+    }
+}
+
+fn exe_key(task: &TaskEntry, variant: &Variant) -> String {
+    format!("{}/{}", task.name, variant.name)
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&self, manifest: &Manifest, task: &TaskEntry, variant: &Variant) -> Result<()> {
+        let key = exe_key(task, variant);
+        if self.loaded.lock().unwrap().contains(&key) {
+            return Ok(());
+        }
+        self.executor
+            .handle()
+            .load(&key, manifest.hlo_path(&variant.hlo))?;
+        self.loaded.lock().unwrap().insert(key);
+        Ok(())
+    }
+
+    fn execute(
+        &self,
+        manifest: &Manifest,
+        task: &TaskEntry,
+        variant: &Variant,
+        input: Vec<f32>,
+    ) -> Result<ExecOutput> {
+        self.prepare(manifest, task, variant)?;
+        let key = exe_key(task, variant);
+        let outputs = self.executor.handle().run(&key, input, &variant.in_shape)?;
+        let mut leaves = outputs.into_iter();
+        let z = leaves
+            .next()
+            .ok_or_else(|| Error::Xla(format!("{key}: executable returned no outputs")))?;
+        let nfe = if variant.returns_nfe {
+            leaves
+                .next()
+                .and_then(|leaf| leaf.first().copied())
+                .map(|x| x as u64)
+        } else {
+            None
+        };
+        Ok(ExecOutput { z, nfe })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_round_trips_names() {
+        for kind in [BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::from_name(kind.name()).unwrap(), kind);
+            assert_eq!(format!("{kind}"), kind.name());
+        }
+        assert!(BackendKind::from_name("tpu").is_err());
+    }
+
+    #[test]
+    fn backends_are_object_safe_and_shareable() {
+        fn assert_send_sync<T: Send + Sync + ?Sized>() {}
+        assert_send_sync::<dyn ExecBackend>();
+    }
+
+    #[test]
+    fn native_kind_always_creates() {
+        let b = BackendKind::Native.create().unwrap();
+        assert_eq!(b.name(), "native");
+    }
+}

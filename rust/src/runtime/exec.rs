@@ -3,7 +3,7 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
 use crate::{Error, Result};
@@ -26,10 +26,22 @@ enum Msg {
     Shutdown,
 }
 
-/// Handle to the executor thread (cheaply cloneable).
+/// Handle to the executor thread (cheaply cloneable, `Send + Sync`: the
+/// sender sits behind a mutex so one handle can be shared by the engine's
+/// dispatch worker pool; requests still serialise on the executor thread).
 #[derive(Clone)]
 pub struct ExecutorHandle {
-    tx: mpsc::Sender<Msg>,
+    tx: Arc<Mutex<mpsc::Sender<Msg>>>,
+}
+
+impl ExecutorHandle {
+    fn send(&self, msg: Msg) -> Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| Error::Other("executor handle poisoned".into()))?
+            .send(msg)
+            .map_err(|_| Error::Other("executor gone".into()))
+    }
 }
 
 /// The executor: spawn once, share the handle.
@@ -51,7 +63,9 @@ impl Executor {
             .recv()
             .map_err(|_| Error::Other("executor died at startup".into()))??;
         Ok(Executor {
-            handle: ExecutorHandle { tx },
+            handle: ExecutorHandle {
+                tx: Arc::new(Mutex::new(tx)),
+            },
             join: Some(join),
         })
     }
@@ -63,7 +77,7 @@ impl Executor {
 
 impl Drop for Executor {
     fn drop(&mut self) {
-        let _ = self.handle.tx.send(Msg::Shutdown);
+        let _ = self.handle.send(Msg::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -74,13 +88,11 @@ impl ExecutorHandle {
     /// Compile (or confirm cached) the HLO text file under `key`.
     pub fn load(&self, key: &str, path: PathBuf) -> Result<()> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Load {
-                key: key.to_string(),
-                path,
-                reply,
-            })
-            .map_err(|_| Error::Other("executor gone".into()))?;
+        self.send(Msg::Load {
+            key: key.to_string(),
+            path,
+            reply,
+        })?;
         rx.recv().map_err(|_| Error::Other("executor gone".into()))?
     }
 
@@ -89,29 +101,25 @@ impl ExecutorHandle {
     /// Takes ownership of the buffer — no copy on the hot path.
     pub fn run(&self, key: &str, input: Vec<f32>, in_shape: &[usize]) -> Result<Vec<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Run {
-                key: key.to_string(),
-                inputs: vec![(input, in_shape.to_vec())],
-                reply,
-            })
-            .map_err(|_| Error::Other("executor gone".into()))?;
+        self.send(Msg::Run {
+            key: key.to_string(),
+            inputs: vec![(input, in_shape.to_vec())],
+            reply,
+        })?;
         rx.recv().map_err(|_| Error::Other("executor gone".into()))?
     }
 
     /// Execute `key` with several (data, shape) f32 arguments.
     pub fn run_multi(&self, key: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Run {
-                key: key.to_string(),
-                inputs: inputs
-                    .iter()
-                    .map(|(d, s)| (d.to_vec(), s.to_vec()))
-                    .collect(),
-                reply,
-            })
-            .map_err(|_| Error::Other("executor gone".into()))?;
+        self.send(Msg::Run {
+            key: key.to_string(),
+            inputs: inputs
+                .iter()
+                .map(|(d, s)| (d.to_vec(), s.to_vec()))
+                .collect(),
+            reply,
+        })?;
         rx.recv().map_err(|_| Error::Other("executor gone".into()))?
     }
 }
@@ -215,5 +223,12 @@ mod tests {
     fn handle_is_clone() {
         fn assert_clone<T: Clone>() {}
         assert_clone::<super::ExecutorHandle>();
+    }
+
+    #[test]
+    fn handle_is_send_sync() {
+        // the dispatch worker pool shares one handle across threads
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<super::ExecutorHandle>();
     }
 }

@@ -1,14 +1,23 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile, execute.
+//! Execution runtime: manifest loading plus the pluggable backends the
+//! coordinator dispatches to.
 //!
-//! The `xla` crate's handles wrap raw PJRT pointers and are `!Send`, so all
-//! PJRT state lives on one dedicated **executor thread** ([`exec::Executor`]);
-//! the rest of the system talks to it through channels. On this testbed
-//! (single-core CPU PJRT) that costs nothing and it keeps the coordinator's
-//! threading model independent of backend thread-safety.
+//! * [`backend`] defines the [`ExecBackend`] trait — "how does a (task,
+//!   variant) batch execute" — and the [`PjrtBackend`] implementation over
+//!   the AOT HLO artifacts.
+//! * [`native`] serves the same manifest variants with the in-repo
+//!   tensor/solver stack (no XLA, no artifacts beyond weights JSON).
+//! * The `xla` crate's handles wrap raw PJRT pointers and are `!Send`, so
+//!   all PJRT state lives on one dedicated **executor thread**
+//!   ([`exec::Executor`]); the rest of the system talks to it through
+//!   channels.
 
+pub mod backend;
 pub mod exec;
 pub mod field_exec;
 pub mod manifest;
+pub mod native;
 
+pub use backend::{pjrt_available, BackendKind, ExecBackend, ExecOutput, PjrtBackend};
 pub use exec::{Executor, ExecutorHandle};
 pub use manifest::{BlobRef, Manifest, TaskEntry, Variant};
+pub use native::NativeBackend;

@@ -1,0 +1,244 @@
+//! The native execution backend: serves manifest variants with the in-repo
+//! tensor/solver stack — no XLA runtime, no HLO artifacts, just
+//! `manifest.json` plus the exported weight JSON.
+//!
+//! For each task it loads the weights once (`nn::{CnfModel, TrackingModel,
+//! ImageModel}`), then instantiates the solver a variant names from its
+//! `(solver, k, hyper)` manifest fields and integrates with
+//! `odeint_fixed` / `odeint_hyper` / `dopri5` on the native [`Tensor`]
+//! path. This is what makes the full submit→batch→execute→respond pipeline
+//! exercisable in plain `cargo test` on any machine.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::nn::{CnfModel, ImageModel, TrackingModel};
+use crate::ode::VectorField;
+use crate::runtime::backend::{ExecBackend, ExecOutput};
+use crate::runtime::manifest::{Manifest, TaskEntry, Variant};
+use crate::solvers::{dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, HyperNet, Tableau};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// A task's weights, loaded once and shared across dispatch workers.
+enum NativeModel {
+    Cnf(CnfModel),
+    Tracking(TrackingModel),
+    Image(ImageModel),
+}
+
+impl NativeModel {
+    fn load(manifest: &Manifest, task: &TaskEntry) -> Result<NativeModel> {
+        let path = manifest.weights_path(task);
+        match task.kind.as_str() {
+            "cnf" => Ok(NativeModel::Cnf(CnfModel::load(&path)?)),
+            "tracking" => Ok(NativeModel::Tracking(TrackingModel::load(&path)?)),
+            "image" => Ok(NativeModel::Image(ImageModel::load(&path)?)),
+            other => Err(Error::Manifest(format!(
+                "native backend: unknown task kind {other:?} for {}",
+                task.name
+            ))),
+        }
+    }
+
+    fn field(&self) -> &dyn VectorField {
+        match self {
+            NativeModel::Cnf(m) => &m.field,
+            NativeModel::Tracking(m) => &m.field,
+            NativeModel::Image(m) => &m.field,
+        }
+    }
+
+    fn hyper(&self) -> &dyn HyperNet {
+        match self {
+            NativeModel::Cnf(m) => &m.hyper,
+            NativeModel::Tracking(m) => &m.hyper,
+            NativeModel::Image(m) => &m.hyper,
+        }
+    }
+}
+
+/// [`ExecBackend`] over the native solver stack. Model loading is cached
+/// per task; execution takes no lock, so batches for distinct queues run
+/// genuinely in parallel on the engine's worker pool.
+pub struct NativeBackend {
+    models: Mutex<HashMap<String, Arc<NativeModel>>>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend {
+            models: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn model(&self, manifest: &Manifest, task: &TaskEntry) -> Result<Arc<NativeModel>> {
+        if let Some(m) = self.models.lock().unwrap().get(&task.name) {
+            return Ok(Arc::clone(m));
+        }
+        // load outside the lock: weight files can be large, and another
+        // worker may be serving a different task meanwhile
+        let loaded = Arc::new(NativeModel::load(manifest, task)?);
+        let mut cache = self.models.lock().unwrap();
+        Ok(Arc::clone(
+            cache.entry(task.name.clone()).or_insert(loaded),
+        ))
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn prepare(&self, manifest: &Manifest, task: &TaskEntry, _variant: &Variant) -> Result<()> {
+        self.model(manifest, task).map(|_| ())
+    }
+
+    fn execute(
+        &self,
+        manifest: &Manifest,
+        task: &TaskEntry,
+        variant: &Variant,
+        input: Vec<f32>,
+    ) -> Result<ExecOutput> {
+        let model = self.model(manifest, task)?;
+        let x = Tensor::new(&variant.in_shape, input)?;
+
+        // image tasks may export image→logits executables: the manifest's
+        // state shape is the ODE-state shape, so an in_shape that differs
+        // from it means the batch arrives in image space and needs the
+        // learned h_x augmenter first
+        let z0 = match &*model {
+            NativeModel::Image(im) if variant.in_shape != task.state_shape => im.hx(&x)?,
+            _ => x,
+        };
+
+        let field = model.field();
+        let (zt, nfe) = if variant.solver == "dopri5" {
+            let r = dopri5(field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-5))?;
+            (r.z, Some(r.nfe))
+        } else if variant.hyper {
+            if variant.k == 0 {
+                return Err(Error::Manifest(format!(
+                    "variant {} has k=0 but is not adaptive",
+                    variant.name
+                )));
+            }
+            let base = Tableau::by_name(&task.hyper_base)?;
+            (
+                odeint_hyper(field, model.hyper(), &z0, task.s_span, variant.k, &base)?,
+                None,
+            )
+        } else {
+            if variant.k == 0 {
+                return Err(Error::Manifest(format!(
+                    "variant {} has k=0 but is not adaptive",
+                    variant.name
+                )));
+            }
+            let tab = Tableau::by_name(&variant.solver)?;
+            (odeint_fixed(field, &z0, task.s_span, variant.k, &tab)?, None)
+        };
+
+        // image readout when the export's output is logits, not state
+        let out = match &*model {
+            NativeModel::Image(im)
+                if variant.out_shape.len() == 2 && zt.shape().len() == 4 =>
+            {
+                im.hy(&zt)?
+            }
+            _ => zt,
+        };
+
+        let want: usize = variant.out_shape.iter().product();
+        if out.numel() != want {
+            return Err(Error::Shape(format!(
+                "native solve of {}/{} produced {} values, manifest out_shape {:?} wants {want}",
+                task.name,
+                variant.name,
+                out.numel(),
+                variant.out_shape
+            )));
+        }
+        Ok(ExecOutput {
+            z: out.into_data(),
+            nfe,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fixtures;
+
+    fn synth() -> (Manifest, NativeBackend) {
+        let dir = fixtures::temp_native_artifacts("native_unit", &[("cnf_t", 4)]).unwrap();
+        (Manifest::load(&dir).unwrap(), NativeBackend::new())
+    }
+
+    #[test]
+    fn serves_fixed_hyper_and_adaptive_variants() {
+        let (m, backend) = synth();
+        let task = m.task("cnf_t").unwrap();
+        let input: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
+        for v in &task.variants {
+            let out = backend
+                .execute(&m, task, v, input.clone())
+                .unwrap_or_else(|e| panic!("{}: {e}", v.name));
+            assert_eq!(out.z.len(), 8, "{}", v.name);
+            assert!(out.z.iter().all(|x| x.is_finite()), "{}", v.name);
+            if v.solver == "dopri5" {
+                assert!(out.nfe.unwrap() >= 7, "{}", v.name);
+            } else {
+                assert!(out.nfe.is_none(), "{}", v.name);
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_variants_distinct_outputs() {
+        // euler K=2 and dopri5 must disagree on a rotation-flavoured field
+        let (m, backend) = synth();
+        let task = m.task("cnf_t").unwrap();
+        let input: Vec<f32> = (0..8).map(|i| 0.3 + 0.2 * i as f32).collect();
+        let euler = backend
+            .execute(&m, task, task.variant("euler_k2").unwrap(), input.clone())
+            .unwrap();
+        let d5 = backend
+            .execute(&m, task, task.variant("dopri5").unwrap(), input)
+            .unwrap();
+        let diff: f32 = euler
+            .z
+            .iter()
+            .zip(&d5.z)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-4, "euler and dopri5 agreed suspiciously: {diff}");
+    }
+
+    #[test]
+    fn prepare_is_idempotent_and_caches() {
+        let (m, backend) = synth();
+        let task = m.task("cnf_t").unwrap();
+        let v = &task.variants[0];
+        backend.prepare(&m, task, v).unwrap();
+        backend.prepare(&m, task, v).unwrap();
+        assert_eq!(backend.models.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn wrong_input_size_is_an_error() {
+        let (m, backend) = synth();
+        let task = m.task("cnf_t").unwrap();
+        let v = &task.variants[0];
+        assert!(backend.execute(&m, task, v, vec![0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Synthetic native-only artifact sets — the substrate of the engine test
+//! harness that runs anywhere.
+//!
+//! Writes a `manifest.json` plus weight files that the
+//! [`crate::runtime::NativeBackend`] can serve with zero external
+//! dependencies: no `make artifacts`, no HLO, no PJRT. The synthetic task
+//! is a 2-D CNF-shaped system with a rotation-flavoured linear field
+//! (bounded trajectories, so every solver stays finite) and a small linear
+//! hypersolver correction, exported in the exact JSON schema
+//! `python/compile/aot.py` produces.
+
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// Field weights: dz0 = z1 + 0.1 s, dz1 = -z0 + 0.1 s (rotation + drift).
+const FIELD_JSON: &str = r#"{
+    "time_mode": "concat",
+    "layers": [
+      {"w": [[0.0, -1.0], [1.0, 0.0], [0.1, 0.1]], "b": [0.0, 0.0], "act": "id"}
+    ]
+  }"#;
+
+/// Hyper net g([z, dz, eps, s]) = 0.05 z — tiny but nonzero, so hypersolved
+/// variants are distinguishable from their base solver.
+const HYPER_JSON: &str = r#"{
+    "layers": [
+      {"w": [[0.05, 0.0], [0.0, 0.05], [0.0, 0.0], [0.0, 0.0], [0.0, 0.0], [0.0, 0.0]],
+       "b": [0.0, 0.0], "act": "id"}
+    ]
+  }"#;
+
+fn task_manifest_json(name: &str, batch: usize) -> String {
+    format!(
+        r#""{name}": {{
+      "kind": "cnf",
+      "state": {{"shape": [{batch}, 2]}},
+      "s_span": [0.0, 1.0],
+      "weights": "weights/{name}.json",
+      "field_hlo": "{name}_field.hlo.txt",
+      "macs": {{"field": 6, "hyper": 12}},
+      "delta": 0.01,
+      "hyper_base": "heun",
+      "variants": [
+        {{"name": "euler_k2", "solver": "euler", "k": 2, "hyper": false,
+          "hlo": "{name}_euler_k2.hlo.txt", "nfe": 2, "macs": 12,
+          "mape": 0.25, "in_shape": [{batch}, 2], "out_shape": [{batch}, 2]}},
+        {{"name": "heun_k2", "solver": "heun", "k": 2, "hyper": false,
+          "hlo": "{name}_heun_k2.hlo.txt", "nfe": 4, "macs": 24,
+          "mape": 0.08, "in_shape": [{batch}, 2], "out_shape": [{batch}, 2]}},
+        {{"name": "hyperheun_k2", "solver": "heun", "k": 2, "hyper": true,
+          "hlo": "{name}_hyperheun_k2.hlo.txt", "nfe": 4, "macs": 40,
+          "mape": 0.02, "in_shape": [{batch}, 2], "out_shape": [{batch}, 2]}},
+        {{"name": "dopri5", "solver": "dopri5", "k": 0, "hyper": false,
+          "hlo": "{name}_dopri5.hlo.txt", "nfe": 28, "macs": 200,
+          "mape": 0.0001, "outputs": ["z", "nfe"],
+          "in_shape": [{batch}, 2], "out_shape": [{batch}, 2]}}
+      ]
+    }}"#
+    )
+}
+
+/// Write `manifest.json` + weight files for cnf-style 2-D tasks into `dir`.
+/// `tasks` is a list of (task name, exported batch size). Each task gets
+/// four variants: euler_k2 / heun_k2 / hyperheun_k2 / dopri5.
+pub fn write_native_artifacts(dir: &Path, tasks: &[(&str, usize)]) -> Result<()> {
+    std::fs::create_dir_all(dir.join("weights"))?;
+    let mut entries = Vec::with_capacity(tasks.len());
+    for (name, batch) in tasks {
+        entries.push(task_manifest_json(name, *batch));
+        let weights = format!(
+            r#"{{"kind": "cnf", "field": {FIELD_JSON}, "hyper": {HYPER_JSON}}}"#
+        );
+        std::fs::write(dir.join("weights").join(format!("{name}.json")), weights)?;
+    }
+    let manifest = format!(
+        r#"{{
+  "version": 1, "stamp": "synthetic-native", "seed": 0, "quick": false,
+  "tasks": {{
+    {}
+  }}
+}}"#,
+        entries.join(",\n    ")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)?;
+    Ok(())
+}
+
+/// Create a fresh temp dir with synthetic artifacts and return its path.
+/// Every call gets a unique directory (pid + counter), so concurrent tests
+/// in one binary never race on the filesystem; `tag` just aids debugging.
+pub fn temp_native_artifacts(tag: &str, tasks: &[(&str, usize)]) -> Result<PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "hsolve_native_{tag}_{}_{}",
+        std::process::id(),
+        UNIQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir)?;
+    }
+    write_native_artifacts(&dir, tasks)?;
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    #[test]
+    fn synthetic_manifest_parses_and_models_load() {
+        let dir = temp_native_artifacts("fixtures_unit", &[("cnf_a", 4), ("cnf_b", 8)]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.tasks.len(), 2);
+        let a = m.task("cnf_a").unwrap();
+        assert_eq!(a.batch(), 4);
+        assert_eq!(a.variants.len(), 4);
+        assert!(a.variant("dopri5").unwrap().returns_nfe);
+        assert!(!a.variant("heun_k2").unwrap().returns_nfe);
+        assert!(a.variant("hyperheun_k2").unwrap().hyper);
+        // the weight files load as a CnfModel and the field has state dim 2
+        let model = crate::nn::CnfModel::load(&m.weights_path(a)).unwrap();
+        assert_eq!(model.field.state_dim(), 2);
+    }
+}

@@ -4,6 +4,7 @@
 pub mod artifacts;
 pub mod benchkit;
 pub mod cli;
+pub mod fixtures;
 pub mod json;
 pub mod logging;
 pub mod prng;

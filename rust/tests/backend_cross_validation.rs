@@ -1,0 +1,127 @@
+//! Backend cross-validation: for every variant in a (synthetic) manifest,
+//! the `NativeBackend`'s output must match the solver-level `odeint_*` /
+//! `dopri5` call made directly against the loaded weights — the backend adds
+//! routing, caching and shape plumbing, never numerics. When real artifacts
+//! and a PJRT client are present, the native output must also agree with
+//! the `PjrtBackend` within 1e-4; otherwise that half skips with a message.
+
+use hypersolvers::nn::CnfModel;
+use hypersolvers::runtime::{
+    pjrt_available, BackendKind, ExecBackend, Manifest, NativeBackend,
+};
+use hypersolvers::solvers::{dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, Tableau};
+use hypersolvers::tensor::Tensor;
+use hypersolvers::util::fixtures;
+
+#[test]
+fn native_backend_matches_solver_level_calls() {
+    let dir = fixtures::temp_native_artifacts("xval", &[("cnf_x", 4)]).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let task = m.task("cnf_x").unwrap();
+    let model = CnfModel::load(&m.weights_path(task)).unwrap();
+    let backend = NativeBackend::new();
+
+    let input: Vec<f32> = (0..8).map(|i| 0.25 * i as f32 - 0.9).collect();
+    let z0 = Tensor::new(&[4, 2], input.clone()).unwrap();
+
+    let mut checked = 0;
+    for v in &task.variants {
+        let direct = if v.solver == "dopri5" {
+            dopri5(&model.field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-5))
+                .unwrap()
+                .z
+        } else if v.hyper {
+            odeint_hyper(
+                &model.field,
+                &model.hyper,
+                &z0,
+                task.s_span,
+                v.k,
+                &Tableau::by_name(&task.hyper_base).unwrap(),
+            )
+            .unwrap()
+        } else {
+            odeint_fixed(
+                &model.field,
+                &z0,
+                task.s_span,
+                v.k,
+                &Tableau::by_name(&v.solver).unwrap(),
+            )
+            .unwrap()
+        };
+
+        let served = backend.execute(&m, task, v, input.clone()).unwrap();
+        assert_eq!(served.z.len(), direct.numel(), "{}", v.name);
+        for (i, (a, b)) in served.z.iter().zip(direct.data()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-6,
+                "{}: element {i} backend {a} vs direct {b}",
+                v.name
+            );
+        }
+        checked += 1;
+    }
+    assert_eq!(checked, 4, "expected the full synthetic variant grid");
+}
+
+#[test]
+fn native_backend_zero_padding_rows_stay_finite() {
+    // the engine zero-pads partial batches; the native solve must produce
+    // finite values for those rows too (they're sliced off, but a NaN there
+    // would poison shared reductions in other backends)
+    let dir = fixtures::temp_native_artifacts("xval_pad", &[("cnf_p", 4)]).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let task = m.task("cnf_p").unwrap();
+    let backend = NativeBackend::new();
+    let mut input = vec![0.0f32; 8];
+    input[0] = 0.7;
+    input[1] = -0.3; // one real sample, three zero rows
+    for v in &task.variants {
+        let out = backend.execute(&m, task, v, input.clone()).unwrap();
+        assert!(
+            out.z.iter().all(|x| x.is_finite()),
+            "{}: padded rows went non-finite",
+            v.name
+        );
+    }
+}
+
+#[test]
+fn native_matches_pjrt_when_artifacts_present() {
+    let m = match Manifest::load_default() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP (no artifacts for pjrt comparison): {e}");
+            return;
+        }
+    };
+    if !pjrt_available() {
+        eprintln!("SKIP: PJRT client unavailable (offline xla stub build)");
+        return;
+    }
+    let pjrt = BackendKind::Pjrt.create().unwrap();
+    let native = NativeBackend::new();
+    for (name, task) in &m.tasks {
+        if task.kind != "cnf" {
+            continue; // 2-D states keep the comparison cheap
+        }
+        let dim: usize = task.state_shape.iter().product();
+        let input: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
+        for v in &task.variants {
+            let a = pjrt.execute(&m, task, v, input.clone()).unwrap();
+            let b = native.execute(&m, task, v, input.clone()).unwrap();
+            assert_eq!(a.z.len(), b.z.len(), "{name}/{}", v.name);
+            if v.solver == "dopri5" {
+                continue; // adaptive paths take their own step sequences
+            }
+            for (i, (x, y)) in a.z.iter().zip(&b.z).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-4,
+                    "{name}/{}: element {i} pjrt {x} vs native {y}",
+                    v.name
+                );
+            }
+        }
+    }
+}

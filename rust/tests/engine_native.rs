@@ -1,0 +1,211 @@
+//! The engine test harness that runs anywhere: full submit→batch→execute→
+//! respond pipeline on the `NativeBackend`, with **no** artifacts directory
+//! and **no** PJRT runtime — synthetic manifest + weights are written to a
+//! temp dir by `util::fixtures`.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
+use hypersolvers::runtime::BackendKind;
+use hypersolvers::util::fixtures;
+use hypersolvers::util::json::{self, Value};
+
+fn native_engine(tag: &str, tasks: &[(&str, usize)], workers: usize) -> Engine {
+    let dir = fixtures::temp_native_artifacts(tag, tasks).unwrap();
+    Engine::new(EngineConfig {
+        artifacts_dir: dir,
+        max_wait: Duration::from_millis(1),
+        policy: Policy::MinMacs,
+        backend: BackendKind::Native,
+        workers,
+    })
+    .unwrap()
+}
+
+/// Run `f` on a helper thread and panic if it doesn't finish in `secs` —
+/// guards every test that could hang on a stuck worker join.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let t = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // finished or panicked — join to propagate any panic
+            t.join().unwrap();
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: test did not finish within {secs}s (worker pool hang?)");
+        }
+    }
+}
+
+#[test]
+fn native_engine_serves_end_to_end() {
+    with_watchdog(60, || {
+        let engine = native_engine("e2e", &[("cnf_a", 4)], 2);
+        assert_eq!(engine.backend_name(), "native");
+
+        // budget routing: loose → cheapest, mid → hypersolver, tight → dopri5
+        let loose = engine.infer("cnf_a", 0.5, vec![0.3, -0.2]).unwrap();
+        assert_eq!(loose.variant, "euler_k2");
+        let mid = engine.infer("cnf_a", 0.05, vec![0.3, -0.2]).unwrap();
+        assert_eq!(mid.variant, "hyperheun_k2");
+        let tight = engine.infer("cnf_a", 0.000001, vec![0.3, -0.2]).unwrap();
+        assert_eq!(tight.variant, "dopri5");
+        // the adaptive solve reports its measured NFE through the pipeline
+        assert!(tight.nfe >= 7, "dopri5 nfe {}", tight.nfe);
+        for r in [&loose, &mid, &tight] {
+            assert_eq!(r.output.len(), 2);
+            assert!(r.output.iter().all(|x| x.is_finite()));
+        }
+
+        // a burst batches: 8 submits, batch cap 4 → fills of 4
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                engine
+                    .submit("cnf_a", 0.5, vec![0.1 * i as f32, -0.5])
+                    .unwrap()
+            })
+            .collect();
+        let mut fills = Vec::new();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.output.len(), 2);
+            fills.push(resp.batch_fill);
+        }
+        assert!(fills.iter().any(|&f| f > 1), "never batched: {fills:?}");
+        assert!(engine.metrics().responses.load(Relaxed) >= 11);
+    });
+}
+
+#[test]
+fn native_engine_warmup_and_rejections() {
+    with_watchdog(60, || {
+        let engine = native_engine("reject", &[("cnf_a", 4)], 2);
+        engine.warmup("cnf_a").unwrap();
+        assert!(engine.warmup("no_such_task").is_err());
+        assert!(engine.submit("no_such_task", 0.1, vec![0.0]).is_err());
+        // wrong sample dimension
+        assert!(engine.submit("cnf_a", 0.1, vec![0.0; 5]).is_err());
+    });
+}
+
+#[test]
+fn worker_pool_stress_8_threads_100_submits() {
+    with_watchdog(120, || {
+        let engine = std::sync::Arc::new(native_engine(
+            "stress",
+            &[("cnf_a", 8), ("cnf_b", 8)],
+            4,
+        ));
+        assert_eq!(engine.worker_count(), 4);
+
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 100;
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let engine = std::sync::Arc::clone(&engine);
+            handles.push(thread::spawn(move || {
+                let budgets = [0.5f32, 0.05, 0.000001];
+                let mut rxs = Vec::with_capacity(PER_THREAD);
+                for i in 0..PER_THREAD {
+                    let task = if (t + i) % 2 == 0 { "cnf_a" } else { "cnf_b" };
+                    let budget = budgets[i % budgets.len()];
+                    let input = vec![0.01 * i as f32, -0.02 * t as f32];
+                    rxs.push(engine.submit(task, budget, input).unwrap());
+                }
+                rxs
+            }));
+        }
+
+        let mut receivers = Vec::with_capacity(THREADS * PER_THREAD);
+        for h in handles {
+            receivers.extend(h.join().unwrap());
+        }
+        assert_eq!(receivers.len(), THREADS * PER_THREAD);
+
+        // every receiver gets exactly one response with the right output dim
+        let mut responses = Vec::with_capacity(receivers.len());
+        for rx in &receivers {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("response lost");
+            assert_eq!(resp.output.len(), 2, "variant {}", resp.variant);
+            responses.push(resp);
+        }
+        let m = engine.metrics();
+        assert_eq!(m.requests.load(Relaxed), (THREADS * PER_THREAD) as u64);
+        assert_eq!(m.responses.load(Relaxed), (THREADS * PER_THREAD) as u64);
+        assert!(m.inflight_peak.load(Relaxed) >= 1);
+        // the gauge decrements just after the batch's last send — allow the
+        // workers a moment to step out of run_batch before checking for leaks
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while m.inflight_batches.load(Relaxed) != 0 && std::time::Instant::now() < deadline {
+            thread::yield_now();
+        }
+        assert_eq!(m.inflight_batches.load(Relaxed), 0, "batches leaked in-flight");
+
+        // Drop joins all workers without hanging (the watchdog is the net),
+        // and after it every channel is disconnected with nothing buffered —
+        // i.e. exactly one response was ever sent per request.
+        drop(engine);
+        for rx in &receivers {
+            assert!(matches!(
+                rx.try_recv(),
+                Err(mpsc::TryRecvError::Disconnected)
+            ));
+        }
+    });
+}
+
+#[test]
+fn drop_idle_engine_joins_quickly() {
+    with_watchdog(30, || {
+        let engine = native_engine("idle_drop", &[("cnf_a", 4)], 3);
+        drop(engine); // no traffic at all — workers must still wake and exit
+    });
+}
+
+#[test]
+fn server_protocol_over_native_backend() {
+    // the TCP front end logic, exercised via handle_line (no socket needed)
+    with_watchdog(60, || {
+        let engine = native_engine("server", &[("cnf_a", 4)], 2);
+
+        let tasks = server::handle_line(&engine, r#"{"cmd":"tasks"}"#);
+        assert_eq!(tasks.get("ok").and_then(Value::as_bool), Some(true));
+
+        let backend = server::handle_line(&engine, r#"{"cmd":"backend"}"#);
+        assert_eq!(
+            backend.get("backend").and_then(Value::as_str),
+            Some("native")
+        );
+        assert_eq!(backend.get("workers").and_then(Value::as_usize), Some(2));
+
+        let resp = server::handle_line(
+            &engine,
+            r#"{"task":"cnf_a","budget":0.5,"input":[0.5,0.5]}"#,
+        );
+        assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp:?}");
+        let out = resp.get("output").unwrap().as_arr().unwrap();
+        assert_eq!(out.len(), 2);
+
+        let metrics = server::handle_line(&engine, r#"{"cmd":"metrics"}"#);
+        assert_eq!(
+            metrics.get("backend").and_then(Value::as_str),
+            Some("native")
+        );
+        let report = metrics.get("report").unwrap().as_str().unwrap().to_string();
+        assert!(report.contains("requests="), "{report}");
+
+        // malformed request → JSON error, not a panic
+        let bad = server::handle_line(&engine, r#"{"task":"nope","input":[1]}"#);
+        assert_eq!(bad.get("ok").and_then(Value::as_bool), Some(false));
+        let _ = json::to_string(&bad);
+    });
+}

@@ -32,6 +32,19 @@ fn manifest() -> Option<Manifest> {
     }
 }
 
+/// Runtime gate for XLA-dependent tests: skips (loudly) when no PJRT client
+/// can be brought up — e.g. when the workspace builds against the offline
+/// `xla` stub crate. The native-backend pipeline tests live in
+/// `engine_native.rs` and run everywhere.
+fn pjrt() -> bool {
+    if hypersolvers::runtime::pjrt_available() {
+        true
+    } else {
+        eprintln!("SKIP: PJRT client unavailable (offline xla stub build)");
+        false
+    }
+}
+
 fn load_blob(m: &Manifest, task: &str, key: &str) -> Tensor {
     let t = m.task(task).unwrap();
     let b = &t.data[key];
@@ -45,6 +58,9 @@ fn load_blob(m: &Manifest, task: &str, key: &str) -> Tensor {
 #[test]
 fn pjrt_full_solve_matches_manifest_mape() {
     let Some(m) = manifest() else { return };
+    if !pjrt() {
+        return;
+    }
     let exec = Executor::spawn().unwrap();
     let h = exec.handle();
     let task = m.task("cnf_rings").unwrap();
@@ -69,6 +85,9 @@ fn pjrt_full_solve_matches_manifest_mape() {
 #[test]
 fn pjrt_dopri5_export_returns_nfe() {
     let Some(m) = manifest() else { return };
+    if !pjrt() {
+        return;
+    }
     let exec = Executor::spawn().unwrap();
     let h = exec.handle();
     let task = m.task("cnf_rings").unwrap();
@@ -92,6 +111,9 @@ fn pjrt_dopri5_export_returns_nfe() {
 #[test]
 fn native_cnf_field_matches_pjrt_solve() {
     let Some(m) = manifest() else { return };
+    if !pjrt() {
+        return;
+    }
     let task = m.task("cnf_rings").unwrap();
     let model = CnfModel::load(&m.weights_path(task)).unwrap();
     let z0 = load_blob(&m, "cnf_rings", "z0");
@@ -223,6 +245,9 @@ fn native_tracking_model_loads_and_improves() {
 fn rust_driven_adaptive_over_pjrt_field() {
     // the hybrid mode: rust dopri5 control loop, XLA field evaluations
     let Some(m) = manifest() else { return };
+    if !pjrt() {
+        return;
+    }
     let task = m.task("cnf_rings").unwrap();
     let exec = Executor::spawn().unwrap();
     let h = exec.handle();
@@ -249,6 +274,9 @@ fn rust_driven_adaptive_over_pjrt_field() {
 fn engine_serves_mixed_budgets() {
     let Some(m) = manifest() else { return };
     drop(m);
+    if !pjrt() {
+        return;
+    }
     let engine = Engine::new(EngineConfig {
         max_wait: Duration::from_millis(1),
         policy: Policy::MinMacs,
@@ -286,6 +314,9 @@ fn engine_serves_mixed_budgets() {
 #[test]
 fn engine_rejects_bad_requests() {
     let Some(_m) = manifest() else { return };
+    if !pjrt() {
+        return;
+    }
     let engine = Engine::with_defaults().unwrap();
     assert!(engine.submit("no_such_task", 0.1, vec![0.0]).is_err());
     // wrong sample dimension
@@ -295,6 +326,9 @@ fn engine_rejects_bad_requests() {
 #[test]
 fn tcp_server_protocol() {
     let Some(_m) = manifest() else { return };
+    if !pjrt() {
+        return;
+    }
     let engine = Arc::new(Engine::with_defaults().unwrap());
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();

@@ -1,0 +1,178 @@
+//! Offline stub of the `xla` crate (PJRT bindings).
+//!
+//! This environment has no XLA/PJRT runtime, so this crate provides the
+//! exact API surface `runtime/exec.rs` compiles against while making the
+//! unavailability explicit at runtime: [`PjRtClient::cpu`] returns an error,
+//! which the executor thread surfaces at spawn time. Everything downstream
+//! of a client (compilation, buffers, literals) is therefore unreachable in
+//! practice; those methods return errors defensively rather than panicking.
+//!
+//! Swapping in the real bindings is a one-line change in the workspace
+//! manifest — no source change in the main crate.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (stringly, `Display`-able).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+
+    fn stub() -> Error {
+        Error::new(
+            "PJRT runtime is not available in this offline build (xla stub \
+             crate) — use the native execution backend",
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a literal can carry (subset the serving layer handles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Primitive types accepted by [`Literal::convert`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Marker for element types [`Literal::to_vec`] can decode.
+pub trait NativeType: Sized {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// A host-side literal (stub: shape/data are never actually materialised).
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::stub())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::stub())
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(Error::stub())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::stub())
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// Parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub())
+    }
+}
+
+/// An XLA computation built from a proto.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub())
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub())
+    }
+}
+
+/// The PJRT client. In this stub, construction always fails — callers are
+/// expected to fall back to (or be configured for) the native backend.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("native execution backend"));
+    }
+
+    #[test]
+    fn literal_paths_error_not_panic() {
+        let l = Literal::vec1(&[1.0, 2.0]);
+        assert!(l.reshape(&[2]).is_err());
+        assert!(l.ty().is_err());
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.convert(PrimitiveType::F32).is_err());
+        assert!(l.to_tuple().is_err());
+    }
+}
