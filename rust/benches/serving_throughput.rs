@@ -14,6 +14,12 @@
 //!
 //! With `--backend native` the bench runs anywhere: if no artifacts exist,
 //! a synthetic two-task native fixture set is written to a temp dir.
+//!
+//! Besides the human-readable tables, the run is summarized to
+//! `BENCH_serving.json` (override the path with `BENCH_JSON`): per
+//! scenario p50/p95/p99 batch latency, achieved throughput, batch fill,
+//! NFE/request, and the worker-pool concurrency peak — machine-readable so
+//! successive PRs can diff serving performance.
 
 use std::sync::atomic::Ordering::Relaxed;
 use std::time::{Duration, Instant};
@@ -25,6 +31,7 @@ use hypersolvers::util::artifacts::require_manifest;
 use hypersolvers::util::benchkit::Table;
 use hypersolvers::util::cli::Cli;
 use hypersolvers::util::fixtures;
+use hypersolvers::util::json::{self, Value};
 use hypersolvers::util::prng::Rng;
 use hypersolvers::util::stats;
 
@@ -84,6 +91,8 @@ fn main() {
         "scenario", "reqs", "offered rps", "achieved rps", "p50 ms",
         "p99 ms", "fill", "NFE/req", "conc peak",
     ]);
+    let mut scenarios_json: Vec<Value> = Vec::new();
+    let mut resolved_workers = 0usize;
 
     for (scenario, budgets) in [
         ("mixed budgets", vec![(0.05f32, 0.6f64), (0.15, 0.3), (0.01, 0.1)]),
@@ -98,6 +107,7 @@ fn main() {
             workers: args.get_usize("workers"),
         })
         .unwrap();
+        resolved_workers = engine.worker_count();
         for t in &tasks {
             engine.warmup(t).unwrap();
         }
@@ -143,17 +153,35 @@ fn main() {
         let nfe_per_req = metrics.nfe_total.load(Relaxed) as f64
             / metrics.responses.load(Relaxed) as f64;
         let conc_peak = metrics.inflight_peak.load(Relaxed);
+        let achieved_rps = trace.events.len() as f64 / wall;
+        let (p50, p95, p99) = (
+            stats::percentile(&latencies, 50.0),
+            stats::percentile(&latencies, 95.0),
+            stats::percentile(&latencies, 99.0),
+        );
         table.row(&[
             scenario.into(),
             trace.events.len().to_string(),
             format!("{:.0}", spec.rate),
-            format!("{:.0}", trace.events.len() as f64 / wall),
-            format!("{:.2}", stats::percentile(&latencies, 50.0)),
-            format!("{:.2}", stats::percentile(&latencies, 99.0)),
+            format!("{achieved_rps:.0}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
             format!("{:.2}", metrics.fill_ratio()),
             format!("{nfe_per_req:.1}"),
             conc_peak.to_string(),
         ]);
+        scenarios_json.push(json::obj(vec![
+            ("scenario", json::s(scenario)),
+            ("requests", json::num(trace.events.len() as f64)),
+            ("offered_rps", json::num(spec.rate)),
+            ("throughput_rps", json::num(achieved_rps)),
+            ("p50_ms", json::num(p50)),
+            ("p95_ms", json::num(p95)),
+            ("p99_ms", json::num(p99)),
+            ("fill", json::num(metrics.fill_ratio())),
+            ("nfe_per_req", json::num(nfe_per_req)),
+            ("inflight_peak", json::num(conc_peak as f64)),
+        ]));
         println!("[{scenario}] {}", metrics.report());
         if conc_peak >= 2 {
             match backend {
@@ -176,4 +204,23 @@ fn main() {
          the policy routes everything it can to hypersolved variants. \
          'conc peak' ≥ 2 shows distinct queues overlapping on the pool."
     );
+
+    // machine-readable summary, so the bench trajectory is diffable PR over PR
+    let doc = json::obj(vec![
+        ("bench", json::s("serving_throughput")),
+        ("backend", json::s(&backend.to_string())),
+        ("workers", json::num(resolved_workers as f64)),
+        (
+            "requests_per_scenario",
+            json::num(args.get_usize("requests") as f64),
+        ),
+        ("offered_rate", json::num(args.get_f64("rate"))),
+        ("tasks", Value::Arr(tasks.iter().map(|t| json::s(t)).collect())),
+        ("scenarios", Value::Arr(scenarios_json)),
+    ]);
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
+    match std::fs::write(&path, json::to_string(&doc)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

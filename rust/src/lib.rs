@@ -24,6 +24,12 @@
 //! cross-validation of the PJRT path. See `rust/README.md` for the engine
 //! architecture and backend selection.
 //!
+//! The native stack's hot path is **allocation-free**: `_into`/`_inplace`
+//! kernels write into [`tensor::Workspace`]-pooled buffers, solvers step on
+//! a reusable [`solvers::RkWorkspace`], and the serving runtime holds one
+//! workspace per (task, variant) queue — zero steady-state heap traffic in
+//! the solver loop (see rust/README.md §"The workspace hot path").
+//!
 //! The [`util`] module contains substrates this offline environment forced
 //! us to build from scratch: PRNG, JSON codec, CLI parsing, thread pool,
 //! a bench harness (`benchkit`) and a property-test harness (`propkit`).

@@ -7,7 +7,7 @@
 use crate::nn::layers::{Conv2d, Mlp, PRelu};
 use crate::ode::VectorField;
 use crate::solvers::HyperNet;
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, Workspace};
 use crate::util::json::Value;
 use crate::{Error, Result};
 
@@ -37,17 +37,22 @@ impl TimeMode {
     }
 
     pub fn features(self, s: f32) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim()];
+        self.features_into(s, &mut out);
+        out
+    }
+
+    /// [`features`](Self::features) into a caller slice of length
+    /// [`dim`](Self::dim) — lets the hot path use a stack array.
+    pub fn features_into(self, s: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim());
         match self {
-            TimeMode::Concat => vec![s],
+            TimeMode::Concat => out[0] = s,
             TimeMode::Fourier3 => {
-                let mut out = Vec::with_capacity(6);
-                for k in 1..=3 {
-                    out.push((2.0 * std::f32::consts::PI * k as f32 * s).sin());
+                for k in 1..=3usize {
+                    out[k - 1] = (2.0 * std::f32::consts::PI * k as f32 * s).sin();
+                    out[k + 2] = (2.0 * std::f32::consts::PI * k as f32 * s).cos();
                 }
-                for k in 1..=3 {
-                    out.push((2.0 * std::f32::consts::PI * k as f32 * s).cos());
-                }
-                out
             }
         }
     }
@@ -88,6 +93,30 @@ impl VectorField for MlpField {
         self.mlp.forward(&x).expect("mlp forward")
     }
 
+    fn eval_into(&self, s: f32, z: &Tensor, out: &mut Tensor, ws: &mut Workspace) {
+        let (b, d) = (z.shape()[0], z.shape()[1]);
+        let fdim = self.time_mode.dim();
+        let mut feats = [0.0f32; 6]; // max dim() across modes
+        self.time_mode.features_into(s, &mut feats[..fdim]);
+        let w = d + fdim;
+        let mut x = ws.take_tensor(&[b, w]);
+        {
+            let xd = x.data_mut();
+            let zd = z.data();
+            for i in 0..b {
+                xd[i * w..i * w + d].copy_from_slice(&zd[i * d..(i + 1) * d]);
+                xd[i * w + d..(i + 1) * w].copy_from_slice(&feats[..fdim]);
+            }
+        }
+        if self.mlp.forward_into(&x, out, ws).is_err() {
+            // misbehaving export (e.g. final out_dim != state dim): hand
+            // the pure result through so the solver surfaces Err(Shape),
+            // as the pre-workspace path did
+            *out = self.mlp.forward(&x).expect("mlp forward");
+        }
+        ws.give_tensor(x);
+    }
+
     fn macs(&self) -> u64 {
         self.mlp.macs()
     }
@@ -118,6 +147,37 @@ impl VectorField for ConvField {
         let x = x.depth_cat(s).expect("depth_cat");
         let x = self.c2.forward(&x).expect("c2").map(f32::tanh);
         self.c3.forward(&x).expect("c3")
+    }
+
+    fn eval_into(&self, s: f32, z: &Tensor, out: &mut Tensor, ws: &mut Workspace) {
+        let (b, c, h, w) = match z.shape() {
+            [b, c, h, w] => (*b, *c, *h, *w),
+            s => panic!("conv field state {s:?}"),
+        };
+        let c1_out = self.c1.w.shape()[0];
+        let c2_out = self.c2.w.shape()[0];
+
+        let mut x0 = ws.take_tensor(&[b, c + 1, h, w]);
+        z.depth_cat_into(s, &mut x0).expect("depth_cat");
+        let mut a1 = ws.take_tensor(&[b, c1_out, h, w]);
+        self.c1.forward_into(&x0, &mut a1, ws).expect("c1");
+        a1.map_inplace(f32::tanh);
+        ws.give_tensor(x0);
+
+        let mut x1 = ws.take_tensor(&[b, c1_out + 1, h, w]);
+        a1.depth_cat_into(s, &mut x1).expect("depth_cat");
+        ws.give_tensor(a1);
+        let mut a2 = ws.take_tensor(&[b, c2_out, h, w]);
+        self.c2.forward_into(&x1, &mut a2, ws).expect("c2");
+        a2.map_inplace(f32::tanh);
+        ws.give_tensor(x1);
+
+        if self.c3.forward_into(&a2, out, ws).is_err() {
+            // wrong c3 output channels: pass the pure result through so
+            // the solver reports Err(Shape) instead of panicking a worker
+            *out = self.c3.forward(&a2).expect("c3");
+        }
+        ws.give_tensor(a2);
     }
 
     fn macs(&self) -> u64 {
@@ -153,6 +213,35 @@ impl HyperNet for HyperMlp {
         let s_col = Tensor::full(&[b, 1], s);
         let x = Tensor::hcat(&[z, dz, &eps_col, &s_col]).expect("hcat");
         self.mlp.forward(&x).expect("hyper mlp")
+    }
+
+    fn eval_into(
+        &self,
+        eps: f32,
+        s: f32,
+        z: &Tensor,
+        dz: &Tensor,
+        out: &mut Tensor,
+        ws: &mut Workspace,
+    ) {
+        let (b, d) = (z.shape()[0], z.shape()[1]);
+        let w = 2 * d + 2;
+        let mut x = ws.take_tensor(&[b, w]);
+        {
+            let xd = x.data_mut();
+            let (zd, dzd) = (z.data(), dz.data());
+            for i in 0..b {
+                xd[i * w..i * w + d].copy_from_slice(&zd[i * d..(i + 1) * d]);
+                xd[i * w + d..i * w + 2 * d].copy_from_slice(&dzd[i * d..(i + 1) * d]);
+                xd[i * w + 2 * d] = eps;
+                xd[i * w + 2 * d + 1] = s;
+            }
+        }
+        if self.mlp.forward_into(&x, out, ws).is_err() {
+            // wrong hyper out_dim: pure result through → solver Err(Shape)
+            *out = self.mlp.forward(&x).expect("hyper mlp");
+        }
+        ws.give_tensor(x);
     }
 
     fn macs(&self) -> u64 {
@@ -205,6 +294,47 @@ impl HyperNet for HyperCnn {
         let x = self.p1.forward(&self.c1.forward(&x).expect("c1")).expect("p1");
         self.c2.forward(&x).expect("c2")
     }
+
+    fn eval_into(
+        &self,
+        eps: f32,
+        s: f32,
+        z: &Tensor,
+        dz: &Tensor,
+        out: &mut Tensor,
+        ws: &mut Workspace,
+    ) {
+        let (b, c, h, w) = match z.shape() {
+            [b, c, h, w] => (*b, *c, *h, *w),
+            s => panic!("hyper cnn state {s:?}"),
+        };
+        let plane = h * w;
+        // cat(z, dz) ⊕ DepthCat(s + eps), assembled in one pass
+        let mut cat = ws.take_tensor(&[b, 2 * c + 1, h, w]);
+        {
+            let cd = cat.data_mut();
+            let (zd, dzd) = (z.data(), dz.data());
+            let stride = (2 * c + 1) * plane;
+            for bi in 0..b {
+                let base = bi * stride;
+                cd[base..base + c * plane]
+                    .copy_from_slice(&zd[bi * c * plane..(bi + 1) * c * plane]);
+                cd[base + c * plane..base + 2 * c * plane]
+                    .copy_from_slice(&dzd[bi * c * plane..(bi + 1) * c * plane]);
+                cd[base + 2 * c * plane..base + stride].fill(s + eps);
+            }
+        }
+        let c1_out = self.c1.w.shape()[0];
+        let mut a1 = ws.take_tensor(&[b, c1_out, h, w]);
+        self.c1.forward_into(&cat, &mut a1, ws).expect("c1");
+        ws.give_tensor(cat);
+        self.p1.forward_inplace(&mut a1).expect("p1");
+        if self.c2.forward_into(&a1, out, ws).is_err() {
+            // wrong c2 output channels: pure result through → solver Err
+            *out = self.c2.forward(&a1).expect("c2");
+        }
+        ws.give_tensor(a1);
+    }
 }
 
 #[cfg(test)]
@@ -252,6 +382,43 @@ mod tests {
     }
 
     #[test]
+    fn field_eval_into_matches_eval() {
+        let v = json::parse(
+            r#"{"type":"mlp_field","time_mode":"fourier3",
+                "layers":[{"w":[[0.5,0.1],[0.2,0.3],[0.1,0.0],[0.0,0.1],
+                                [0.2,0.2],[0.3,0.1],[0.1,0.3],[0.2,0.0]],
+                           "b":[0.05,-0.05],"act":"tanh"}]}"#,
+        )
+        .unwrap();
+        let field = MlpField::from_json(&v).unwrap();
+        let z = Tensor::new(&[2, 2], vec![0.4, -0.8, 1.2, 0.1]).unwrap();
+        let mut ws = Workspace::new();
+        for s in [0.0, 0.31, 0.9] {
+            let pure = field.eval(s, &z);
+            let mut out = Tensor::full(&[2, 2], f32::NAN);
+            field.eval_into(s, &z, &mut out, &mut ws);
+            assert_eq!(out.data(), pure.data(), "s={s}");
+        }
+    }
+
+    #[test]
+    fn hyper_mlp_eval_into_matches_eval() {
+        let v = json::parse(
+            r#"{"layers":[{"w":[[0.1],[0.2],[0.3],[0.4],[0.5],[0.6]],
+                           "b":[0.01],"act":"id"}]}"#,
+        )
+        .unwrap();
+        let g = HyperMlp::from_json(&v).unwrap();
+        let z = Tensor::new(&[2, 2], vec![1.0, -1.0, 0.5, 2.0]).unwrap();
+        let dz = Tensor::new(&[2, 2], vec![0.3, 0.7, -0.2, 0.9]).unwrap();
+        let mut ws = Workspace::new();
+        let pure = g.eval(0.125, 0.5, &z, &dz);
+        let mut out = Tensor::full(&[2, 1], f32::NAN);
+        g.eval_into(0.125, 0.5, &z, &dz, &mut out, &mut ws);
+        assert_eq!(out.data(), pure.data());
+    }
+
+    #[test]
     fn hyper_cnn_shapes() {
         // aug=1: input channels 2*1+1 = 3
         let v = json::parse(
@@ -267,5 +434,71 @@ mod tests {
         // channels: z=1, dz=1, depth=0.3 → c1 out = 2.3 each (two filters),
         // prelu no-op (positive), c2 sums → 4.6
         assert!((out.data()[0] - 4.6).abs() < 1e-5);
+
+        // the workspace path must agree bit-for-bit
+        let mut ws = Workspace::new();
+        let dz = Tensor::new(&[1, 1, 2, 2], vec![0.5, -0.5, 1.5, -1.5]).unwrap();
+        let pure = g.eval(0.1, 0.2, &z, &dz);
+        let mut into = Tensor::full(&[1, 1, 2, 2], f32::NAN);
+        g.eval_into(0.1, 0.2, &z, &dz, &mut into, &mut ws);
+        assert_eq!(into.data(), pure.data());
+    }
+
+    #[test]
+    fn conv_field_eval_into_matches_eval() {
+        // 2-channel state, 3x3 kernels, nontrivial weights
+        let mk_w = |cout: usize, cin: usize, seed: f32| -> String {
+            let mut s = String::from("[");
+            for oc in 0..cout {
+                if oc > 0 {
+                    s.push(',');
+                }
+                s.push('[');
+                for ic in 0..cin {
+                    if ic > 0 {
+                        s.push(',');
+                    }
+                    s.push('[');
+                    for ky in 0..3 {
+                        if ky > 0 {
+                            s.push(',');
+                        }
+                        s.push('[');
+                        for kx in 0..3 {
+                            if kx > 0 {
+                                s.push(',');
+                            }
+                            let v = seed
+                                * (1.0 + oc as f32 - 0.5 * ic as f32
+                                    + 0.25 * ky as f32
+                                    - 0.125 * kx as f32);
+                            s.push_str(&format!("{v}"));
+                        }
+                        s.push(']');
+                    }
+                    s.push(']');
+                }
+                s.push(']');
+            }
+            s.push(']');
+            s
+        };
+        let json_text = format!(
+            r#"{{"c1":{{"w":{},"b":[0.1,0.2]}},
+                "c2":{{"w":{},"b":[-0.1,0.05]}},
+                "c3":{{"w":{},"b":[0.0,0.0]}}}}"#,
+            mk_w(2, 3, 0.1),
+            mk_w(2, 3, -0.07),
+            mk_w(2, 2, 0.05),
+        );
+        let field = ConvField::from_json(&json::parse(&json_text).unwrap()).unwrap();
+        let z = Tensor::from_fn(&[2, 2, 4, 4], |i| (i as f32 * 0.37).sin());
+        let mut ws = Workspace::new();
+        for s in [0.0, 0.45] {
+            let pure = field.eval(s, &z);
+            let mut out = Tensor::full(&[2, 2, 4, 4], f32::NAN);
+            field.eval_into(s, &z, &mut out, &mut ws);
+            assert_eq!(out.data(), pure.data(), "s={s}");
+        }
     }
 }

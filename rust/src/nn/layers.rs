@@ -1,6 +1,11 @@
 //! Primitive layers: dense, conv2d (SAME/stride-1), PReLU, activations.
+//!
+//! Each layer has a `forward_into` / `forward_inplace` twin that writes
+//! into caller-provided storage ([`Workspace`]-drawn on the solver hot
+//! path); the pure `forward` APIs are thin wrappers, so both paths produce
+//! bit-identical values.
 
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, Workspace};
 use crate::util::json::Value;
 use crate::{Error, Result};
 
@@ -48,6 +53,13 @@ impl Act {
             _ => t.map(|x| self.apply_scalar(x)),
         }
     }
+
+    /// In-place [`apply`](Self::apply) (no-op for `Id`).
+    pub fn apply_inplace(self, t: &mut Tensor) {
+        if self != Act::Id {
+            t.map_inplace(|x| self.apply_scalar(x));
+        }
+    }
 }
 
 /// Dense layer y = act(x W + b); weights (in, out) row-major as exported.
@@ -74,8 +86,19 @@ impl Linear {
     }
 
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
-        let y = x.matmul(&self.w)?.add_bias_rows(&self.b)?;
-        Ok(self.act.apply(&y))
+        let mut out = Tensor::zeros(&[x.shape()[0], self.out_dim()]);
+        self.forward_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`forward`](Self::forward) writing into `out` (shape (B, out_dim),
+    /// fully overwritten). Needs no scratch: matmul, bias, and activation
+    /// all run on `out` directly.
+    pub fn forward_into(&self, x: &Tensor, out: &mut Tensor) -> Result<()> {
+        x.matmul_into(&self.w, out)?;
+        out.add_bias_rows_inplace(&self.b)?;
+        self.act.apply_inplace(out);
+        Ok(())
     }
 
     pub fn in_dim(&self) -> usize {
@@ -116,6 +139,12 @@ impl Conv2d {
         x.conv2d_same(&self.w, &self.b)
     }
 
+    /// [`forward`](Self::forward) writing into `out` (shape
+    /// (B, Cout, H, W)); im2col scratch comes from `ws`.
+    pub fn forward_into(&self, x: &Tensor, out: &mut Tensor, ws: &mut Workspace) -> Result<()> {
+        x.conv2d_same_into(&self.w, &self.b, out, ws)
+    }
+
     /// MACs per sample for an (H, W) input.
     pub fn macs(&self, hw: usize) -> u64 {
         let s = self.w.shape();
@@ -136,6 +165,13 @@ impl PRelu {
     }
 
     pub fn forward(&self, x: &Tensor) -> Result<Tensor> {
+        let mut out = x.clone();
+        self.forward_inplace(&mut out)?;
+        Ok(out)
+    }
+
+    /// In-place [`forward`](Self::forward).
+    pub fn forward_inplace(&self, x: &mut Tensor) -> Result<()> {
         let (b, c, h, w) = match x.shape() {
             [b, c, h, w] => (*b, *c, *h, *w),
             s => return Err(Error::Shape(format!("prelu input {s:?}"))),
@@ -144,19 +180,18 @@ impl PRelu {
             return Err(Error::Shape("prelu channel mismatch".into()));
         }
         let plane = h * w;
-        let mut out = x.clone();
         for bi in 0..b {
             for ci in 0..c {
                 let a = self.alpha[ci];
                 let base = (bi * c + ci) * plane;
-                for v in &mut out.data_mut()[base..base + plane] {
+                for v in &mut x.data_mut()[base..base + plane] {
                     if *v < 0.0 {
                         *v *= a;
                     }
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -182,6 +217,41 @@ impl Mlp {
             h = l.forward(&h)?;
         }
         Ok(h)
+    }
+
+    /// [`forward`](Self::forward) writing the last layer's output into
+    /// `out` (shape (B, last out_dim)); intermediate activations ping-pong
+    /// through `ws`, so a warm workspace makes the whole pass
+    /// allocation-free.
+    pub fn forward_into(&self, x: &Tensor, out: &mut Tensor, ws: &mut Workspace) -> Result<()> {
+        match self.layers.as_slice() {
+            [] => {
+                if out.shape() != x.shape() {
+                    return Err(Error::Shape(format!(
+                        "empty mlp out shape {:?} vs input {:?}",
+                        out.shape(),
+                        x.shape()
+                    )));
+                }
+                out.copy_from(x);
+                Ok(())
+            }
+            [only] => only.forward_into(x, out),
+            [first, mid @ .., last] => {
+                let b = x.shape()[0];
+                let mut cur = ws.take_tensor(&[b, first.out_dim()]);
+                first.forward_into(x, &mut cur)?;
+                for l in mid {
+                    let mut next = ws.take_tensor(&[b, l.out_dim()]);
+                    l.forward_into(&cur, &mut next)?;
+                    ws.give_tensor(cur);
+                    cur = next;
+                }
+                last.forward_into(&cur, out)?;
+                ws.give_tensor(cur);
+                Ok(())
+            }
+        }
     }
 
     pub fn macs(&self) -> u64 {
@@ -246,6 +316,40 @@ mod tests {
         let x = Tensor::new(&[1, 2, 1, 1], vec![-2.0, -2.0]).unwrap();
         let y = p.forward(&x).unwrap();
         assert_eq!(y.data(), &[-1.0, 0.0]);
+    }
+
+    #[test]
+    fn forward_into_matches_forward() {
+        let v = json::parse(
+            r#"[{"w":[[1.0,0.5],[0.25,2.0]],"b":[0.1,-0.1],"act":"tanh"},
+                {"w":[[1.5],[-0.5]],"b":[0.2],"act":"softplus"},
+                {"w":[[2.0,1.0]],"b":[0.0,0.3],"act":"id"}]"#,
+        )
+        .unwrap();
+        let mlp = Mlp::from_json(&v).unwrap();
+        let x = Tensor::new(&[3, 2], vec![0.5, -1.0, 2.0, 0.0, -0.25, 1.5]).unwrap();
+        let pure = mlp.forward(&x).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = Tensor::full(&[3, 2], f32::NAN);
+        mlp.forward_into(&x, &mut out, &mut ws).unwrap();
+        assert_eq!(out.data(), pure.data());
+        // second pass on a warm workspace: identical again, pool reused
+        let mut out2 = Tensor::full(&[3, 2], f32::NAN);
+        mlp.forward_into(&x, &mut out2, &mut ws).unwrap();
+        assert_eq!(out2.data(), pure.data());
+        assert_eq!(ws.pooled_tensors(), 2, "both intermediates returned");
+    }
+
+    #[test]
+    fn prelu_inplace_matches_forward() {
+        let p = PRelu {
+            alpha: vec![0.5, 2.0],
+        };
+        let x = Tensor::new(&[1, 2, 1, 2], vec![-2.0, 3.0, -1.0, -4.0]).unwrap();
+        let pure = p.forward(&x).unwrap();
+        let mut ip = x.clone();
+        p.forward_inplace(&mut ip).unwrap();
+        assert_eq!(ip.data(), pure.data());
     }
 
     #[test]

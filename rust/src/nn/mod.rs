@@ -12,5 +12,5 @@ pub mod layers;
 pub mod model;
 
 pub use field::{ConvField, HyperCnn, HyperMlp, MlpField, TimeMode};
-pub use layers::{Act, Conv2d, Linear, PRelu};
+pub use layers::{Act, Conv2d, Linear, Mlp, PRelu};
 pub use model::{CnfModel, ImageModel, TrackingModel};

@@ -5,11 +5,30 @@
 //! states, the NCHW conv states, and the analytic fields used for solver
 //! order verification.
 
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, Workspace};
 
 /// A (possibly time-dependent) vector field ż = f(s, z).
 pub trait VectorField {
     fn eval(&self, s: f32, z: &Tensor) -> Tensor;
+
+    /// Write f(s, z) into `out` (same shape as `z`, fully overwritten),
+    /// drawing any scratch from `ws`. The solver hot loop calls this; the
+    /// default falls back to [`eval`](Self::eval) — so external impls keep
+    /// compiling — and every field in this crate overrides it to run
+    /// allocation-free once `ws` is warm. Overrides must produce
+    /// bit-identical values to `eval` (`tests/workspace_parity.rs` checks).
+    fn eval_into(&self, s: f32, z: &Tensor, out: &mut Tensor, ws: &mut Workspace) {
+        let _ = ws;
+        let r = self.eval(s, z);
+        if r.shape() == out.shape() {
+            out.copy_from(&r);
+        } else {
+            // misbehaving eval (wrong output shape): hand the tensor
+            // through so the solver's own shape checks report Err, exactly
+            // as the pre-workspace implementation did
+            *out = r;
+        }
+    }
 
     /// Analytic MACs per *sample* per evaluation (0 when meaningless).
     fn macs(&self) -> u64 {
@@ -31,6 +50,11 @@ pub struct Decay {
 impl VectorField for Decay {
     fn eval(&self, _s: f32, z: &Tensor) -> Tensor {
         z.scale(self.lambda)
+    }
+
+    fn eval_into(&self, _s: f32, z: &Tensor, out: &mut Tensor, _ws: &mut Workspace) {
+        out.copy_from(z);
+        out.map_inplace(|x| self.lambda * x);
     }
 }
 
@@ -59,6 +83,19 @@ impl VectorField for Rotation {
                 -self.omega * x
             }
         })
+    }
+
+    fn eval_into(&self, _s: f32, z: &Tensor, out: &mut Tensor, _ws: &mut Workspace) {
+        assert_eq!(out.shape(), z.shape(), "eval_into shape mismatch");
+        let b = z.shape()[0];
+        let zd = z.data();
+        let od = out.data_mut();
+        for row in 0..b {
+            let x = zd[row * 2];
+            let y = zd[row * 2 + 1];
+            od[row * 2] = self.omega * y;
+            od[row * 2 + 1] = -self.omega * x;
+        }
     }
 }
 
@@ -99,6 +136,19 @@ impl VectorField for VanDerPol {
             }
         })
     }
+
+    fn eval_into(&self, _s: f32, z: &Tensor, out: &mut Tensor, _ws: &mut Workspace) {
+        assert_eq!(out.shape(), z.shape(), "eval_into shape mismatch");
+        let b = z.shape()[0];
+        let zd = z.data();
+        let od = out.data_mut();
+        for row in 0..b {
+            let x = zd[row * 2];
+            let y = zd[row * 2 + 1];
+            od[row * 2] = y;
+            od[row * 2 + 1] = self.mu * (1.0 - x * x) * y - x;
+        }
+    }
 }
 
 /// Time-dependent field ż = cos(2πs)·1 (exact: z0 + sin(2πs)/2π) — catches
@@ -109,6 +159,11 @@ impl VectorField for TimeCosine {
     fn eval(&self, s: f32, z: &Tensor) -> Tensor {
         let v = (2.0 * std::f32::consts::PI * s).cos();
         Tensor::full(z.shape(), v)
+    }
+
+    fn eval_into(&self, s: f32, z: &Tensor, out: &mut Tensor, _ws: &mut Workspace) {
+        assert_eq!(out.shape(), z.shape(), "eval_into shape mismatch");
+        out.fill((2.0 * std::f32::consts::PI * s).cos());
     }
 }
 
@@ -164,5 +219,30 @@ mod tests {
         let z0 = Tensor::zeros(&[1, 1]);
         let e = f.exact(&z0, 0.25);
         assert!((e.data()[0] - 1.0 / (2.0 * std::f32::consts::PI)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn eval_into_overrides_match_eval() {
+        let mut ws = Workspace::new();
+        let z = Tensor::new(&[2, 2], vec![0.3, -1.2, 2.5, 0.7]).unwrap();
+        let fields: Vec<Box<dyn VectorField>> = vec![
+            Box::new(Decay { lambda: -1.7 }),
+            Box::new(Rotation { omega: 2.3 }),
+            Box::new(VanDerPol { mu: 4.0 }),
+            Box::new(TimeCosine),
+        ];
+        for f in &fields {
+            for s in [0.0, 0.37, 1.0] {
+                let pure = f.eval(s, &z);
+                let mut out = Tensor::full(&[2, 2], f32::NAN);
+                f.eval_into(s, &z, &mut out, &mut ws);
+                assert_eq!(out.data(), pure.data());
+            }
+        }
+        // the closure impl exercises the default fallback
+        let g = |_s: f32, z: &Tensor| z.scale(2.0);
+        let mut out = Tensor::zeros(&[2, 2]);
+        g.eval_into(0.0, &z, &mut out, &mut ws);
+        assert_eq!(out.data(), g.eval(0.0, &z).data());
     }
 }

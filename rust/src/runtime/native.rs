@@ -16,7 +16,9 @@ use crate::nn::{CnfModel, ImageModel, TrackingModel};
 use crate::ode::VectorField;
 use crate::runtime::backend::{ExecBackend, ExecOutput};
 use crate::runtime::manifest::{Manifest, TaskEntry, Variant};
-use crate::solvers::{dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, HyperNet, Tableau};
+use crate::solvers::{
+    adaptive_ws, odeint_fixed_ws, odeint_hyper_ws, AdaptiveOpts, HyperNet, RkWorkspace, Tableau,
+};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -59,16 +61,35 @@ impl NativeModel {
 }
 
 /// [`ExecBackend`] over the native solver stack. Model loading is cached
-/// per task; execution takes no lock, so batches for distinct queues run
-/// genuinely in parallel on the engine's worker pool.
+/// per task; execution takes no global lock, so batches for distinct
+/// queues run genuinely in parallel on the engine's worker pool.
+///
+/// Each (task, variant) queue owns one [`RkWorkspace`] that persists
+/// across batches: after the first batch warms it, the solver loop runs
+/// with **zero steady-state heap allocation** (the engine's per-queue
+/// affinity means a queue's workspace mutex is uncontended — at most one
+/// worker executes a given queue at a time).
+/// Everything a (task, variant) queue holds across batches: its solver
+/// workspace and the (immutable) tableau, so steady-state batches rebuild
+/// neither.
+struct QueueState {
+    tab: Tableau,
+    ws: Mutex<RkWorkspace>,
+}
+
 pub struct NativeBackend {
     models: Mutex<HashMap<String, Arc<NativeModel>>>,
+    /// task name → variant name → the queue's persistent state. Nested so
+    /// the steady-state lookup borrows `&str`s instead of building a
+    /// `(String, String)` key per batch.
+    queues: Mutex<HashMap<String, HashMap<String, Arc<QueueState>>>>,
 }
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
         NativeBackend {
             models: Mutex::new(HashMap::new()),
+            queues: Mutex::new(HashMap::new()),
         }
     }
 
@@ -82,6 +103,37 @@ impl NativeBackend {
         let mut cache = self.models.lock().unwrap();
         Ok(Arc::clone(
             cache.entry(task.name.clone()).or_insert(loaded),
+        ))
+    }
+
+    /// The (task, variant) queue's persistent state (workspace + tableau).
+    /// The outer map lock is held only for the lookup (allocation-free
+    /// once the entry exists); the solve itself holds the per-queue mutex.
+    fn queue_state(&self, task: &TaskEntry, variant: &Variant) -> Result<Arc<QueueState>> {
+        let mut map = self.queues.lock().unwrap();
+        if let Some(qs) = map
+            .get(task.name.as_str())
+            .and_then(|m| m.get(variant.name.as_str()))
+        {
+            return Ok(Arc::clone(qs));
+        }
+        let tab = if variant.solver == "dopri5" {
+            Tableau::dopri5()
+        } else if variant.hyper {
+            Tableau::by_name(&task.hyper_base)?
+        } else {
+            Tableau::by_name(&variant.solver)?
+        };
+        Ok(Arc::clone(
+            map.entry(task.name.clone())
+                .or_default()
+                .entry(variant.name.clone())
+                .or_insert_with(|| {
+                    Arc::new(QueueState {
+                        tab,
+                        ws: Mutex::new(RkWorkspace::new()),
+                    })
+                }),
         ))
     }
 }
@@ -121,8 +173,17 @@ impl ExecBackend for NativeBackend {
         };
 
         let field = model.field();
+        let qs = self.queue_state(task, variant)?;
+        let mut ws = qs.ws.lock().unwrap();
         let (zt, nfe) = if variant.solver == "dopri5" {
-            let r = dopri5(field, &z0, task.s_span, &AdaptiveOpts::with_tol(1e-5))?;
+            let r = adaptive_ws(
+                field,
+                &z0,
+                task.s_span,
+                &qs.tab,
+                &AdaptiveOpts::with_tol(1e-5),
+                &mut ws,
+            )?;
             (r.z, Some(r.nfe))
         } else if variant.hyper {
             if variant.k == 0 {
@@ -131,9 +192,17 @@ impl ExecBackend for NativeBackend {
                     variant.name
                 )));
             }
-            let base = Tableau::by_name(&task.hyper_base)?;
             (
-                odeint_hyper(field, model.hyper(), &z0, task.s_span, variant.k, &base)?,
+                odeint_hyper_ws(
+                    field,
+                    model.hyper(),
+                    &z0,
+                    task.s_span,
+                    variant.k,
+                    &qs.tab,
+                    &mut ws,
+                )?
+                .clone(),
                 None,
             )
         } else {
@@ -143,9 +212,12 @@ impl ExecBackend for NativeBackend {
                     variant.name
                 )));
             }
-            let tab = Tableau::by_name(&variant.solver)?;
-            (odeint_fixed(field, &z0, task.s_span, variant.k, &tab)?, None)
+            (
+                odeint_fixed_ws(field, &z0, task.s_span, variant.k, &qs.tab, &mut ws)?.clone(),
+                None,
+            )
         };
+        drop(ws);
 
         // image readout when the export's output is logits, not state
         let out = match &*model {
@@ -240,5 +312,33 @@ mod tests {
         let task = m.task("cnf_t").unwrap();
         let v = &task.variants[0];
         assert!(backend.execute(&m, task, v, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn workspaces_persist_per_queue_and_results_stay_deterministic() {
+        let (m, backend) = synth();
+        let task = m.task("cnf_t").unwrap();
+        let input: Vec<f32> = (0..8).map(|i| 0.2 * i as f32 - 0.7).collect();
+        // repeat batches on every variant: one workspace per (task, variant),
+        // reused, and outputs identical batch over batch
+        for v in &task.variants {
+            let first = backend.execute(&m, task, v, input.clone()).unwrap();
+            for _ in 0..3 {
+                let again = backend.execute(&m, task, v, input.clone()).unwrap();
+                assert_eq!(again.z, first.z, "{} drifted across batches", v.name);
+            }
+        }
+        let ws_count: usize = backend
+            .queues
+            .lock()
+            .unwrap()
+            .values()
+            .map(HashMap::len)
+            .sum();
+        assert_eq!(
+            ws_count,
+            task.variants.len(),
+            "one workspace per (task, variant) queue"
+        );
     }
 }

@@ -8,7 +8,8 @@
 
 use crate::ode::VectorField;
 use crate::solvers::butcher::Tableau;
-use crate::solvers::fixed::{combine, rk_stages};
+use crate::solvers::fixed::{combine_into, rk_stages_core};
+use crate::solvers::workspace::RkWorkspace;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -59,13 +60,22 @@ pub struct AdaptiveResult {
 }
 
 /// RMS of the mixed abs/rel scaled error (max-free batch norm identical to
-/// the python implementation).
-fn err_norm(z_new: &Tensor, z_err: &Tensor, z_old: &Tensor, rtol: f32, atol: f32) -> f32 {
+/// the python implementation); `err_term(i)` supplies element i's raw
+/// error. Shared by the embedded-pair controller here and the
+/// hypersolver-correction controller in `hyper_adaptive`.
+pub(crate) fn scaled_err_rms(
+    z_new: &Tensor,
+    z_old: &Tensor,
+    rtol: f32,
+    atol: f32,
+    err_term: impl Fn(usize) -> f32,
+) -> f32 {
     let n = z_new.numel() as f32;
+    let (znew, zold) = (z_new.data(), z_old.data());
     let mut acc = 0.0f64;
-    for i in 0..z_new.numel() {
-        let scale = atol + rtol * z_new.data()[i].abs().max(z_old.data()[i].abs());
-        let e = z_err.data()[i] / scale;
+    for i in 0..znew.len() {
+        let scale = atol + rtol * znew[i].abs().max(zold[i].abs());
+        let e = err_term(i) / scale;
         acc += (e * e) as f64;
     }
     ((acc / n as f64) as f32).sqrt()
@@ -81,15 +91,46 @@ pub fn dopri5<F: VectorField + ?Sized>(
     adaptive(f, z0, s_span, &Tableau::dopri5(), opts)
 }
 
+/// [`dopri5`] on a caller-held workspace. Allocation-free per *step* once
+/// warm; per *solve* it still pays the `Tableau::dopri5()` construction
+/// (a dozen small vecs) plus the `AdaptiveResult.z` clone — callers who
+/// care should hold the tableau too and use [`adaptive_ws`].
+pub fn dopri5_ws<F: VectorField + ?Sized>(
+    f: &F,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    opts: &AdaptiveOpts,
+    ws: &mut RkWorkspace,
+) -> Result<AdaptiveResult> {
+    adaptive_ws(f, z0, s_span, &Tableau::dopri5(), opts, ws)
+}
+
 /// Adaptive integration with any embedded Runge-Kutta pair (`tab.b_err`
 /// must be present — dopri5, bs32, ...). Controller exponent adapts to the
-/// pair's order.
+/// pair's order. Wrapper over [`adaptive_ws`] with a throwaway workspace.
 pub fn adaptive<F: VectorField + ?Sized>(
     f: &F,
     z0: &Tensor,
     s_span: (f32, f32),
     tab: &Tableau,
     opts: &AdaptiveOpts,
+) -> Result<AdaptiveResult> {
+    let mut ws = RkWorkspace::new();
+    adaptive_ws(f, z0, s_span, tab, opts, &mut ws)
+}
+
+/// [`adaptive`] on a caller-held [`RkWorkspace`]. The accepted (5th-order)
+/// combination lives in `ws.acc`, the embedded one in `ws.acc2`, and the
+/// scaled error norm is folded in-flight — no error tensor is
+/// materialized, and the numerics match the historical allocating
+/// implementation bit-for-bit (same op order: (Σb − Σb̂), ×h, ÷scale).
+pub fn adaptive_ws<F: VectorField + ?Sized>(
+    f: &F,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    tab: &Tableau,
+    opts: &AdaptiveOpts,
+    ws: &mut RkWorkspace,
 ) -> Result<AdaptiveResult> {
     let b_err = tab
         .b_err
@@ -108,15 +149,17 @@ pub fn adaptive<F: VectorField + ?Sized>(
         });
     }
 
+    ws.ensure(z0.shape(), tab.stages());
+    ws.ensure_acc2();
+    ws.z_cur.copy_from(z0);
     let mut progress = 0.0f32; // in [0, span]
-    let mut z = z0.clone();
     let mut eps = span * opts.first_step_frac;
     let (mut nfe, mut accepted, mut rejected) = (0u64, 0u64, 0u64);
 
     for _ in 0..opts.max_steps {
         if progress >= span * (1.0 - 1e-6) {
             return Ok(AdaptiveResult {
-                z,
+                z: ws.state().clone(),
                 nfe,
                 accepted,
                 rejected,
@@ -124,24 +167,29 @@ pub fn adaptive<F: VectorField + ?Sized>(
         }
         let eps_c = eps.min(span - progress);
         let s_abs = s0 + direction * progress;
-        let stages = rk_stages(f, tab, s_abs, &z, direction * eps_c)?;
+        let h = direction * eps_c;
+        rk_stages_core(f, tab, s_abs, h, ws)?;
         nfe += tab.stages() as u64;
 
-        let acc5 = combine(z.shape(), &stages, &tab.b)?;
-        let acc4 = combine(z.shape(), &stages, b_err)?;
-        let mut z5 = z.clone();
-        z5.axpy(direction * eps_c, &acc5)?;
-        let mut z_err = acc5.sub(&acc4)?;
-        z_err = z_err.scale(direction * eps_c);
+        let p = tab.stages();
+        combine_into(&ws.stages[..p], &tab.b, &mut ws.acc)?;
+        combine_into(&ws.stages[..p], b_err, &mut ws.acc2)?;
+        ws.z_next.copy_from(&ws.z_cur);
+        ws.z_next.axpy(h, &ws.acc)?;
 
-        let err = err_norm(&z5, &z_err, &z, opts.rtol, opts.atol);
+        let err = {
+            let (a5, a4) = (ws.acc.data(), ws.acc2.data());
+            scaled_err_rms(&ws.z_next, &ws.z_cur, opts.rtol, opts.atol, |i| {
+                (a5[i] - a4[i]) * h
+            })
+        };
         let accept = err <= 1.0;
         let factor = (opts.safety * err.max(1e-10).powf(exponent))
             .clamp(opts.min_factor, opts.max_factor);
         eps = (eps_c * factor).clamp(1e-6 * span, span);
         if accept {
             progress += eps_c;
-            z = z5;
+            ws.swap();
             accepted += 1;
         } else {
             rejected += 1;

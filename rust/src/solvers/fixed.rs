@@ -1,9 +1,76 @@
 //! Fixed-step explicit RK integration over any [`VectorField`].
+//!
+//! The stepping machinery is written against [`RkWorkspace`]: stage
+//! derivatives, stage inputs, and the (current, next) state pair all live
+//! in reusable buffers and the field is evaluated through
+//! `VectorField::eval_into`, so the loop performs zero steady-state heap
+//! allocations. The original pure APIs (`rk_stages`, `psi`, `rk_step`,
+//! `odeint_fixed`) remain as thin wrappers that spin up a throwaway
+//! workspace — same signatures, bit-identical results.
 
 use crate::ode::VectorField;
 use crate::solvers::butcher::Tableau;
+use crate::solvers::workspace::RkWorkspace;
 use crate::tensor::Tensor;
 use crate::Result;
+
+/// Fill `ws.stages[..p]` with the stage derivatives r_1..r_p at
+/// (s, ws.z_cur). `ws` must be `ensure`d for the state shape and
+/// `tab.stages()`.
+pub(crate) fn rk_stages_core<F: VectorField + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    s: f32,
+    eps: f32,
+    ws: &mut RkWorkspace,
+) -> Result<()> {
+    for i in 0..tab.stages() {
+        ws.zi.copy_from(&ws.z_cur);
+        for (j, &aij) in tab.a[i].iter().enumerate() {
+            if aij != 0.0 {
+                ws.zi.axpy(eps * aij, &ws.stages[j])?;
+            }
+        }
+        f.eval_into(s + tab.c[i] * eps, &ws.zi, &mut ws.stages[i], &mut ws.scratch);
+    }
+    Ok(())
+}
+
+/// Σ b_i r_i into `out` (fully overwritten) — the workspace form of
+/// [`combine`], shared with the adaptive and hypersolved steppers.
+pub fn combine_into(stages: &[Tensor], b: &[f32], out: &mut Tensor) -> Result<()> {
+    out.fill(0.0);
+    for (bi, ri) in b.iter().zip(stages) {
+        if *bi != 0.0 {
+            out.axpy(*bi, ri)?;
+        }
+    }
+    Ok(())
+}
+
+/// Σ b_i r_i without the state added (allocating helper).
+pub(crate) fn combine(shape: &[usize], stages: &[Tensor], b: &[f32]) -> Result<Tensor> {
+    let mut acc = Tensor::zeros(shape);
+    combine_into(stages, b, &mut acc)?;
+    Ok(acc)
+}
+
+/// One explicit RK step on the workspace: advances `ws.z_cur` by ε·ψ.
+pub(crate) fn rk_step_core<F: VectorField + ?Sized>(
+    f: &F,
+    tab: &Tableau,
+    s: f32,
+    eps: f32,
+    ws: &mut RkWorkspace,
+) -> Result<()> {
+    rk_stages_core(f, tab, s, eps, ws)?;
+    let p = tab.stages();
+    combine_into(&ws.stages[..p], &tab.b, &mut ws.acc)?;
+    ws.z_next.copy_from(&ws.z_cur);
+    ws.z_next.axpy(eps, &ws.acc)?;
+    ws.swap();
+    Ok(())
+}
 
 /// Compute the stage derivatives r_1..r_p at (s, z).
 pub fn rk_stages<F: VectorField + ?Sized>(
@@ -13,17 +80,11 @@ pub fn rk_stages<F: VectorField + ?Sized>(
     z: &Tensor,
     eps: f32,
 ) -> Result<Vec<Tensor>> {
-    let mut stages: Vec<Tensor> = Vec::with_capacity(tab.stages());
-    for i in 0..tab.stages() {
-        let mut zi = z.clone();
-        for (j, &aij) in tab.a[i].iter().enumerate() {
-            if aij != 0.0 {
-                zi.axpy(eps * aij, &stages[j])?;
-            }
-        }
-        stages.push(f.eval(s + tab.c[i] * eps, &zi));
-    }
-    Ok(stages)
+    let mut ws = RkWorkspace::new();
+    ws.ensure(z.shape(), tab.stages());
+    ws.z_cur.copy_from(z);
+    rk_stages_core(f, tab, s, eps, &mut ws)?;
+    Ok(std::mem::take(&mut ws.stages))
 }
 
 /// The update direction ψ = Σ b_i r_i (eq. 2).
@@ -38,17 +99,6 @@ pub fn psi<F: VectorField + ?Sized>(
     combine(z.shape(), &stages, &tab.b)
 }
 
-/// Σ b_i r_i without the state added (helper shared with adaptive).
-pub(crate) fn combine(shape: &[usize], stages: &[Tensor], b: &[f32]) -> Result<Tensor> {
-    let mut acc = Tensor::zeros(shape);
-    for (bi, ri) in b.iter().zip(stages) {
-        if *bi != 0.0 {
-            acc.axpy(*bi, ri)?;
-        }
-    }
-    Ok(acc)
-}
-
 /// One explicit RK step.
 pub fn rk_step<F: VectorField + ?Sized>(
     f: &F,
@@ -57,9 +107,33 @@ pub fn rk_step<F: VectorField + ?Sized>(
     z: &Tensor,
     eps: f32,
 ) -> Result<Tensor> {
-    let mut out = z.clone();
-    out.axpy(eps, &psi(f, tab, s, z, eps)?)?;
-    Ok(out)
+    let mut ws = RkWorkspace::new();
+    ws.ensure(z.shape(), tab.stages());
+    ws.z_cur.copy_from(z);
+    rk_step_core(f, tab, s, eps, &mut ws)?;
+    Ok(ws.state().clone())
+}
+
+/// [`odeint_fixed`] on a caller-held workspace: the allocation-free entry
+/// point the runtime uses. Returns a borrow of the terminal state inside
+/// `ws` (clone it to keep it past the next solve).
+pub fn odeint_fixed_ws<'a, F: VectorField + ?Sized>(
+    f: &F,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    steps: usize,
+    tab: &Tableau,
+    ws: &'a mut RkWorkspace,
+) -> Result<&'a Tensor> {
+    assert!(steps > 0, "need at least one step");
+    let eps = (s_span.1 - s_span.0) / steps as f32;
+    ws.ensure(z0.shape(), tab.stages());
+    ws.z_cur.copy_from(z0);
+    for k in 0..steps {
+        let s = s_span.0 + k as f32 * eps;
+        rk_step_core(f, tab, s, eps, ws)?;
+    }
+    Ok(ws.state())
 }
 
 /// Integrate over `s_span` with K equal steps; returns the terminal state.
@@ -71,14 +145,8 @@ pub fn odeint_fixed<F: VectorField + ?Sized>(
     steps: usize,
     tab: &Tableau,
 ) -> Result<Tensor> {
-    assert!(steps > 0, "need at least one step");
-    let eps = (s_span.1 - s_span.0) / steps as f32;
-    let mut z = z0.clone();
-    for k in 0..steps {
-        let s = s_span.0 + k as f32 * eps;
-        z = rk_step(f, tab, s, &z, eps)?;
-    }
-    Ok(z)
+    let mut ws = RkWorkspace::new();
+    Ok(odeint_fixed_ws(f, z0, s_span, steps, tab, &mut ws)?.clone())
 }
 
 /// As [`odeint_fixed`] but returns the full (K+1)-point trajectory.
@@ -90,12 +158,15 @@ pub fn odeint_fixed_traj<F: VectorField + ?Sized>(
     tab: &Tableau,
 ) -> Result<Vec<Tensor>> {
     let eps = (s_span.1 - s_span.0) / steps as f32;
+    let mut ws = RkWorkspace::new();
+    ws.ensure(z0.shape(), tab.stages());
+    ws.z_cur.copy_from(z0);
     let mut traj = Vec::with_capacity(steps + 1);
     traj.push(z0.clone());
     for k in 0..steps {
         let s = s_span.0 + k as f32 * eps;
-        let next = rk_step(f, tab, s, traj.last().unwrap(), eps)?;
-        traj.push(next);
+        rk_step_core(f, tab, s, eps, &mut ws)?;
+        traj.push(ws.state().clone());
     }
     Ok(traj)
 }

@@ -1,9 +1,14 @@
 //! Hypersolved stepping (paper eq. 5): z' = z + ε ψ + ε^{p+1} g_ω(ε, s, z, ż).
+//!
+//! Like `fixed`, the stepping core runs on [`RkWorkspace`] buffers (the
+//! correction g_ω writes into `ws.corr` through `HyperNet::eval_into`);
+//! the pure APIs wrap it with a throwaway workspace.
 
 use crate::ode::VectorField;
 use crate::solvers::butcher::Tableau;
-use crate::solvers::fixed::{combine, rk_stages};
-use crate::tensor::Tensor;
+use crate::solvers::fixed::{combine_into, rk_stages_core};
+use crate::solvers::workspace::RkWorkspace;
+use crate::tensor::{Tensor, Workspace};
 use crate::Result;
 
 /// The hypersolver correction network g_ω. `dz` is the first RK stage
@@ -11,6 +16,30 @@ use crate::Result;
 /// appendix B.1 template input `cat(z, dz, ds)`.
 pub trait HyperNet {
     fn eval(&self, eps: f32, s: f32, z: &Tensor, dz: &Tensor) -> Tensor;
+
+    /// Write g_ω(ε, s, z, ż) into `out` (same shape as `z`, fully
+    /// overwritten), drawing scratch from `ws`. Default falls back to
+    /// [`eval`](Self::eval) so external impls keep compiling; overrides
+    /// must be bit-identical to `eval`.
+    fn eval_into(
+        &self,
+        eps: f32,
+        s: f32,
+        z: &Tensor,
+        dz: &Tensor,
+        out: &mut Tensor,
+        ws: &mut Workspace,
+    ) {
+        let _ = ws;
+        let r = self.eval(eps, s, z, dz);
+        if r.shape() == out.shape() {
+            out.copy_from(&r);
+        } else {
+            // wrong-shaped correction: pass it through so the solver's
+            // axpy shape check reports Err instead of panicking here
+            *out = r;
+        }
+    }
 
     /// Analytic MACs per sample per evaluation.
     fn macs(&self) -> u64 {
@@ -24,6 +53,28 @@ impl<G: Fn(f32, f32, &Tensor, &Tensor) -> Tensor> HyperNet for G {
     }
 }
 
+/// One hypersolved step on the workspace: advances `ws.z_cur` by
+/// ε·ψ + ε^{p+1}·g_ω.
+pub(crate) fn hyper_step_core<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    g: &G,
+    tab: &Tableau,
+    s: f32,
+    eps: f32,
+    ws: &mut RkWorkspace,
+) -> Result<()> {
+    ws.ensure_corr();
+    rk_stages_core(f, tab, s, eps, ws)?;
+    let p = tab.stages();
+    combine_into(&ws.stages[..p], &tab.b, &mut ws.acc)?;
+    g.eval_into(eps, s, &ws.z_cur, &ws.stages[0], &mut ws.corr, &mut ws.scratch);
+    ws.z_next.copy_from(&ws.z_cur);
+    ws.z_next.axpy(eps, &ws.acc)?;
+    ws.z_next.axpy(eps.powi(tab.order as i32 + 1), &ws.corr)?;
+    ws.swap();
+    Ok(())
+}
+
 /// One hypersolved step.
 pub fn hyper_step<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     f: &F,
@@ -33,13 +84,33 @@ pub fn hyper_step<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     z: &Tensor,
     eps: f32,
 ) -> Result<Tensor> {
-    let stages = rk_stages(f, tab, s, z, eps)?;
-    let direction = combine(z.shape(), &stages, &tab.b)?;
-    let corr = g.eval(eps, s, z, &stages[0]);
-    let mut out = z.clone();
-    out.axpy(eps, &direction)?;
-    out.axpy(eps.powi(tab.order as i32 + 1), &corr)?;
-    Ok(out)
+    let mut ws = RkWorkspace::new();
+    ws.ensure(z.shape(), tab.stages());
+    ws.z_cur.copy_from(z);
+    hyper_step_core(f, g, tab, s, eps, &mut ws)?;
+    Ok(ws.state().clone())
+}
+
+/// [`odeint_hyper`] on a caller-held workspace (allocation-free once warm).
+/// Returns a borrow of the terminal state inside `ws`.
+pub fn odeint_hyper_ws<'a, F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    g: &G,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    steps: usize,
+    tab: &Tableau,
+    ws: &'a mut RkWorkspace,
+) -> Result<&'a Tensor> {
+    assert!(steps > 0);
+    let eps = (s_span.1 - s_span.0) / steps as f32;
+    ws.ensure(z0.shape(), tab.stages());
+    ws.z_cur.copy_from(z0);
+    for k in 0..steps {
+        let s = s_span.0 + k as f32 * eps;
+        hyper_step_core(f, g, tab, s, eps, ws)?;
+    }
+    Ok(ws.state())
 }
 
 /// Hypersolved fixed-step integration; terminal state.
@@ -51,14 +122,8 @@ pub fn odeint_hyper<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     steps: usize,
     tab: &Tableau,
 ) -> Result<Tensor> {
-    assert!(steps > 0);
-    let eps = (s_span.1 - s_span.0) / steps as f32;
-    let mut z = z0.clone();
-    for k in 0..steps {
-        let s = s_span.0 + k as f32 * eps;
-        z = hyper_step(f, g, tab, s, &z, eps)?;
-    }
-    Ok(z)
+    let mut ws = RkWorkspace::new();
+    Ok(odeint_hyper_ws(f, g, z0, s_span, steps, tab, &mut ws)?.clone())
 }
 
 /// As [`odeint_hyper`] but returns the (K+1)-point trajectory.
@@ -71,12 +136,15 @@ pub fn odeint_hyper_traj<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     tab: &Tableau,
 ) -> Result<Vec<Tensor>> {
     let eps = (s_span.1 - s_span.0) / steps as f32;
+    let mut ws = RkWorkspace::new();
+    ws.ensure(z0.shape(), tab.stages());
+    ws.z_cur.copy_from(z0);
     let mut traj = Vec::with_capacity(steps + 1);
     traj.push(z0.clone());
     for k in 0..steps {
         let s = s_span.0 + k as f32 * eps;
-        let next = hyper_step(f, g, tab, s, traj.last().unwrap(), eps)?;
-        traj.push(next);
+        hyper_step_core(f, g, tab, s, eps, &mut ws)?;
+        traj.push(ws.state().clone());
     }
     Ok(traj)
 }

@@ -10,15 +10,17 @@
 //! dynamics.
 
 use crate::ode::VectorField;
-use crate::solvers::adaptive::{AdaptiveOpts, AdaptiveResult};
+use crate::solvers::adaptive::{scaled_err_rms, AdaptiveOpts, AdaptiveResult};
 use crate::solvers::butcher::Tableau;
-use crate::solvers::fixed::{combine, rk_stages};
+use crate::solvers::fixed::{combine_into, rk_stages_core};
 use crate::solvers::hyper::HyperNet;
+use crate::solvers::workspace::RkWorkspace;
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
 /// Adaptive integration of the hypersolved scheme: the ε^{p+1}·g_ω term is
 /// both the error estimate (step control) and the applied correction.
+/// Wrapper over [`odeint_hyper_adaptive_ws`] with a throwaway workspace.
 pub fn odeint_hyper_adaptive<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     f: &F,
     g: &G,
@@ -26,6 +28,21 @@ pub fn odeint_hyper_adaptive<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     s_span: (f32, f32),
     tab: &Tableau,
     opts: &AdaptiveOpts,
+) -> Result<AdaptiveResult> {
+    let mut ws = RkWorkspace::new();
+    odeint_hyper_adaptive_ws(f, g, z0, s_span, tab, opts, &mut ws)
+}
+
+/// [`odeint_hyper_adaptive`] on a caller-held workspace (allocation-free
+/// per step once warm).
+pub fn odeint_hyper_adaptive_ws<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    g: &G,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    tab: &Tableau,
+    opts: &AdaptiveOpts,
+    ws: &mut RkWorkspace,
 ) -> Result<AdaptiveResult> {
     let (s0, s1) = s_span;
     let direction = if s1 >= s0 { 1.0f32 } else { -1.0 };
@@ -40,15 +57,17 @@ pub fn odeint_hyper_adaptive<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     }
     let exponent = -1.0 / (tab.order + 1) as f32;
 
+    ws.ensure(z0.shape(), tab.stages());
+    ws.ensure_corr();
+    ws.z_cur.copy_from(z0);
     let mut progress = 0.0f32;
-    let mut z = z0.clone();
     let mut eps = span * opts.first_step_frac;
     let (mut nfe, mut accepted, mut rejected) = (0u64, 0u64, 0u64);
 
     for _ in 0..opts.max_steps {
         if progress >= span * (1.0 - 1e-6) {
             return Ok(AdaptiveResult {
-                z,
+                z: ws.state().clone(),
                 nfe,
                 accepted,
                 rejected,
@@ -57,25 +76,21 @@ pub fn odeint_hyper_adaptive<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
         let eps_c = eps.min(span - progress);
         let s_abs = s0 + direction * progress;
         let h = direction * eps_c;
-        let stages = rk_stages(f, tab, s_abs, &z, h)?;
+        rk_stages_core(f, tab, s_abs, h, ws)?;
         nfe += tab.stages() as u64;
-        let psi = combine(z.shape(), &stages, &tab.b)?;
-        let corr = g.eval(h, s_abs, &z, &stages[0]);
+        let p = tab.stages();
+        combine_into(&ws.stages[..p], &tab.b, &mut ws.acc)?;
+        g.eval_into(h, s_abs, &ws.z_cur, &ws.stages[0], &mut ws.corr, &mut ws.scratch);
         let corr_scale = h.abs().powi(tab.order as i32 + 1);
 
         // error estimate: the correction magnitude, in the mixed abs/rel norm
-        let mut z_new = z.clone();
-        z_new.axpy(h, &psi)?;
+        ws.z_next.copy_from(&ws.z_cur);
+        ws.z_next.axpy(h, &ws.acc)?;
         let err = {
-            let n = z_new.numel() as f32;
-            let mut acc = 0.0f64;
-            for i in 0..z_new.numel() {
-                let scale = opts.atol
-                    + opts.rtol * z_new.data()[i].abs().max(z.data()[i].abs());
-                let e = corr_scale * corr.data()[i] / scale;
-                acc += (e * e) as f64;
-            }
-            ((acc / n as f64) as f32).sqrt()
+            let corr = ws.corr.data();
+            scaled_err_rms(&ws.z_next, &ws.z_cur, opts.rtol, opts.atol, |i| {
+                corr_scale * corr[i]
+            })
         };
 
         let accept = err <= 1.0;
@@ -84,8 +99,9 @@ pub fn odeint_hyper_adaptive<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
         eps = (eps_c * factor).clamp(1e-6 * span, span);
         if accept {
             // apply the correction on acceptance: hypersolved update (eq. 5)
-            z_new.axpy(direction.powi(tab.order as i32 + 1) * corr_scale, &corr)?;
-            z = z_new;
+            ws.z_next
+                .axpy(direction.powi(tab.order as i32 + 1) * corr_scale, &ws.corr)?;
+            ws.swap();
             progress += eps_c;
             accepted += 1;
         } else {

@@ -8,6 +8,12 @@
 //! control loop for adaptive integration over PJRT-loaded fields
 //! (`runtime::field_exec`), where rust owns the stepping decisions and XLA
 //! only evaluates f.
+//!
+//! All stepping runs on reusable [`RkWorkspace`] buffers; the `*_ws` entry
+//! points expose that to callers who hold a workspace across solves (the
+//! serving runtime keeps one per queue), while the original pure APIs wrap
+//! them with a throwaway workspace — same signatures, bit-identical
+//! results, zero steady-state allocation on the `_ws` path.
 
 pub mod adaptive;
 pub mod butcher;
@@ -15,10 +21,16 @@ pub mod fixed;
 pub mod hyper;
 pub mod hyper_adaptive;
 pub mod multistep;
+pub mod workspace;
 
-pub use adaptive::{adaptive, dopri5, AdaptiveOpts, AdaptiveResult};
+pub use adaptive::{adaptive, adaptive_ws, dopri5, dopri5_ws, AdaptiveOpts, AdaptiveResult};
 pub use butcher::Tableau;
-pub use fixed::{odeint_fixed, odeint_fixed_traj, psi, rk_step};
-pub use hyper::{hyper_step, odeint_hyper, odeint_hyper_traj, residual, HyperNet};
-pub use hyper_adaptive::odeint_hyper_adaptive;
+pub use fixed::{
+    combine_into, odeint_fixed, odeint_fixed_traj, odeint_fixed_ws, psi, rk_stages, rk_step,
+};
+pub use hyper::{
+    hyper_step, odeint_hyper, odeint_hyper_traj, odeint_hyper_ws, residual, HyperNet,
+};
+pub use hyper_adaptive::{odeint_hyper_adaptive, odeint_hyper_adaptive_ws};
 pub use multistep::{odeint_ab, odeint_abm, odeint_abm_plain, AbOrder};
+pub use workspace::RkWorkspace;

@@ -60,7 +60,11 @@ pub fn odeint_ab<F: VectorField + ?Sized>(
     for k in 0..steps {
         let s = s_span.0 + k as f32 * eps;
         if history.len() < p {
-            // bootstrap with RK4; record the derivative at the new point
+            // bootstrap with RK4; record the derivative at the new point.
+            // rk_step spins up a throwaway RkWorkspace, but this runs at
+            // most (p-1) times per solve — the steady-state AB loop below
+            // is plain axpy. Porting the history ring to a caller-held
+            // workspace is a ROADMAP open item.
             z = rk_step(f, &rk4, s, &z, eps)?;
             history.insert(0, f.eval(s + eps, &z));
             continue;

@@ -1,0 +1,156 @@
+//! [`RkWorkspace`] — the solver loop's reusable state.
+//!
+//! One workspace holds everything an explicit RK / hypersolved / adaptive
+//! integration needs per step: the stage-derivative buffers, the
+//! stage-input state, the ψ accumulators, the hypersolver correction, a
+//! double-buffered (current, next) state pair, and a nested
+//! [`Workspace`](crate::tensor::Workspace) the vector field and hyper net
+//! draw their layer activations from. Allocation happens only in
+//! [`ensure`](RkWorkspace::ensure) when the state shape or stage count
+//! changes; a warm workspace makes the whole solver loop allocation-free
+//! (asserted by `tests/alloc_free.rs` with a counting global allocator).
+//!
+//! The runtime keeps one of these per (task, variant) queue and reuses it
+//! across batches; the pure solver APIs spin up a throwaway one per call.
+
+use crate::tensor::{Tensor, Workspace};
+
+/// Reusable buffers for the RK-family solver loops. See the module docs.
+#[derive(Debug)]
+pub struct RkWorkspace {
+    /// Stage derivatives r_1..r_p.
+    pub(crate) stages: Vec<Tensor>,
+    /// Stage input z + ε Σ a_ij r_j.
+    pub(crate) zi: Tensor,
+    /// ψ accumulator (Σ b_i r_i).
+    pub(crate) acc: Tensor,
+    /// Second accumulator (embedded-pair Σ b̂_i r_i in adaptive solvers).
+    pub(crate) acc2: Tensor,
+    /// Hypersolver correction g_ω output.
+    pub(crate) corr: Tensor,
+    /// Current state (the integration result lives here between steps).
+    pub(crate) z_cur: Tensor,
+    /// Next state (swapped with `z_cur` after each accepted step).
+    pub(crate) z_next: Tensor,
+    /// Scratch pool for `eval_into` / `forward_into` intermediates.
+    pub(crate) scratch: Workspace,
+    shape: Vec<usize>,
+    n_stages: usize,
+    ready: bool,
+}
+
+impl Default for RkWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RkWorkspace {
+    /// An empty workspace; buffers are sized lazily by
+    /// [`ensure`](Self::ensure) on first use.
+    pub fn new() -> RkWorkspace {
+        let empty = || Tensor::zeros(&[0]);
+        RkWorkspace {
+            stages: Vec::new(),
+            zi: empty(),
+            acc: empty(),
+            acc2: empty(),
+            corr: empty(),
+            z_cur: empty(),
+            z_next: empty(),
+            scratch: Workspace::new(),
+            shape: Vec::new(),
+            n_stages: 0,
+            ready: false,
+        }
+    }
+
+    /// Size every core buffer for states of `shape` and `n_stages` RK
+    /// stages. No-op (and allocation-free) when already sized — the
+    /// steady-state path. Buffer contents after a resize are zeros; after
+    /// a no-op they are whatever the last solve left, which every user
+    /// overwrites. `acc2`/`corr` are lazy (see [`ensure_acc2`](Self::ensure_acc2)
+    /// / [`ensure_corr`](Self::ensure_corr)) so fixed-step non-hyper queues
+    /// don't carry two dead state-sized buffers each.
+    pub fn ensure(&mut self, shape: &[usize], n_stages: usize) {
+        if self.ready
+            && self.shape == shape
+            && self.n_stages == n_stages
+            // a failed solve over a misbehaving external field (wrong-shape
+            // eval) can leave a stage buffer off-shape; heal it here
+            && self.stages.iter().all(|st| st.shape() == shape)
+        {
+            return;
+        }
+        self.stages = (0..n_stages).map(|_| Tensor::zeros(shape)).collect();
+        self.zi = Tensor::zeros(shape);
+        self.acc = Tensor::zeros(shape);
+        self.acc2 = Tensor::zeros(&[0]);
+        self.corr = Tensor::zeros(&[0]);
+        self.z_cur = Tensor::zeros(shape);
+        self.z_next = Tensor::zeros(shape);
+        self.shape = shape.to_vec();
+        self.n_stages = n_stages;
+        self.ready = true;
+    }
+
+    /// Size the embedded-pair accumulator (adaptive solvers only). No-op
+    /// slice compare once sized — safe to call per solve.
+    pub(crate) fn ensure_acc2(&mut self) {
+        if self.acc2.shape() != self.shape.as_slice() {
+            self.acc2 = Tensor::zeros(&self.shape);
+        }
+    }
+
+    /// Size the hypersolver-correction buffer (hyper solvers only). No-op
+    /// slice compare once sized — safe to call per step.
+    pub(crate) fn ensure_corr(&mut self) {
+        if self.corr.shape() != self.shape.as_slice() {
+            self.corr = Tensor::zeros(&self.shape);
+        }
+    }
+
+    /// The current integration state (the result after a `_ws` solve).
+    pub fn state(&self) -> &Tensor {
+        &self.z_cur
+    }
+
+    /// Promote `z_next` to the current state (post-step / on acceptance).
+    pub(crate) fn swap(&mut self) {
+        std::mem::swap(&mut self.z_cur, &mut self.z_next);
+    }
+
+    /// The nested tensor scratch pool (exposed for tests/introspection).
+    pub fn scratch(&mut self) -> &mut Workspace {
+        &mut self.scratch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ensure_is_idempotent_and_resizes() {
+        let mut ws = RkWorkspace::new();
+        ws.ensure(&[2, 3], 4);
+        assert_eq!(ws.stages.len(), 4);
+        assert_eq!(ws.z_cur.shape(), &[2, 3]);
+        let ptr = ws.z_cur.data().as_ptr();
+        ws.ensure(&[2, 3], 4); // no-op
+        assert_eq!(ws.z_cur.data().as_ptr(), ptr, "no reallocation");
+        ws.ensure(&[5], 2); // resize
+        assert_eq!(ws.stages.len(), 2);
+        assert_eq!(ws.z_cur.shape(), &[5]);
+    }
+
+    #[test]
+    fn swap_exchanges_state_buffers() {
+        let mut ws = RkWorkspace::new();
+        ws.ensure(&[2], 1);
+        ws.z_cur.fill(1.0);
+        ws.z_next.fill(2.0);
+        ws.swap();
+        assert_eq!(ws.state().data(), &[2.0, 2.0]);
+    }
+}

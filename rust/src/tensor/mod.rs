@@ -4,8 +4,164 @@
 //! matmul, SAME-padding 3×3 conv, elementwise ops) — the native path backs
 //! the benches' dense parameter sweeps so they don't pay a PJRT compile per
 //! (solver, K) point. Row-major, contiguous, f32 only.
+//!
+//! Every allocating kernel has an `_into` / `_inplace` twin that writes
+//! into caller-provided storage (usually drawn from a [`Workspace`]); the
+//! pure APIs are thin wrappers over those twins, so the two paths are
+//! bit-identical by construction. The solver hot loop runs entirely on the
+//! `_into` layer — see `solvers::RkWorkspace`.
 
+use std::sync::{Arc, Mutex};
+
+use crate::util::threadpool::ThreadPool;
 use crate::{Error, Result};
+
+pub mod workspace;
+
+pub use workspace::Workspace;
+
+/// Pool used by [`gemm_into`] for row-block parallel matmuls, when
+/// registered. Kept behind a mutex so registration can happen at runtime
+/// (daemon startup, benches); the per-matmul cost is one uncontended
+/// lock + `Arc` clone, only paid above the size threshold.
+static MATMUL_POOL: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
+
+/// Mul-adds below which a matmul never tries the pool: at ~64K FLOPs the
+/// dispatch overhead (boxed closures + channel) is already amortized ~100×.
+const PAR_MIN_MACS: usize = 1 << 16;
+
+/// Register a thread pool for large matmuls. Row-block parallelism keeps
+/// each output row's accumulation order unchanged, so results are
+/// **bit-identical** to the serial path.
+///
+/// Pass a *dedicated* pool: a pool whose own jobs perform matmuls would
+/// deadlock waiting for itself. Small products (< ~64K mul-adds) never use
+/// the pool; note that parallel dispatch itself allocates, so hot loops
+/// that must stay allocation-free should keep their products small or
+/// leave this unset.
+pub fn set_matmul_pool(pool: Arc<ThreadPool>) {
+    *MATMUL_POOL.lock().unwrap() = Some(pool);
+}
+
+/// Undo [`set_matmul_pool`]; in-flight matmuls keep their `Arc` and finish.
+pub fn clear_matmul_pool() {
+    *MATMUL_POOL.lock().unwrap() = None;
+}
+
+/// `out = a @ b` for row-major `a` (m, k), `b` (k, n). Fully overwrites
+/// `out` (stale contents are fine). The single gemm entry point: `matmul`,
+/// `matmul_into`, and the im2col conv all funnel here, so their numerics
+/// are identical by construction.
+pub(crate) fn gemm_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m >= 2 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        let pool = MATMUL_POOL.lock().unwrap().clone();
+        if let Some(pool) = pool {
+            if pool.workers() > 1 {
+                gemm_parallel(a, b, m, k, n, out, &pool);
+                return;
+            }
+        }
+    }
+    gemm_rows(a, b, m, k, n, out);
+}
+
+/// Serial gemm over `m` rows: ikj loop order with the N axis tiled so the
+/// output strip stays L1-resident across the K loop — matters for the
+/// wide-N products the im2col conv path generates (see EXPERIMENTS.md
+/// §Perf).
+fn gemm_rows(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    const N_BLK: usize = 1024; // 4 KiB output strip per row
+    out.fill(0.0);
+    for jb in (0..n).step_by(N_BLK) {
+        let je = (jb + N_BLK).min(n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n + jb..i * n + je];
+            // Zero-skip is hoisted to a per-row density check: a branch per
+            // element in the hottest loop pessimizes dense weights, but
+            // genuinely sparse rows (pruned exports, one-hot probes) still
+            // skip. The O(k) scan is noise next to the O(k·blk) inner loop.
+            let zeros = arow.iter().filter(|&&x| x == 0.0).count();
+            if zeros * 4 >= k {
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n + jb..kk * n + je];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            } else {
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &b[kk * n + jb..kk * n + je];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Raw-pointer handoff for the row-block jobs. Each job owns a disjoint
+/// range of `out` rows and only reads `a`/`b`.
+struct SendConst(*const f32);
+unsafe impl Send for SendConst {}
+struct SendMut(*mut f32);
+unsafe impl Send for SendMut {}
+
+/// Parallel gemm over row blocks. Each job computes rows [i0, i0+rows)
+/// exactly as the serial path would, so results are bit-identical.
+fn gemm_parallel(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pool: &ThreadPool,
+) {
+    let chunks = pool.workers().min(m);
+    let rows_per = m.div_ceil(chunks);
+    let (tx, rx) = std::sync::mpsc::channel::<()>();
+    // One base pointer per slice, taken ONCE: deriving every block pointer
+    // from the same provenance root (rather than re-borrowing `out` per
+    // block) keeps the already-dispatched pointers valid under Stacked
+    // Borrows.
+    let a_base = a.as_ptr();
+    let b_base = b.as_ptr();
+    let out_base = out.as_mut_ptr();
+    let mut jobs = 0usize;
+    let mut i0 = 0usize;
+    while i0 < m {
+        let rows = rows_per.min(m - i0);
+        let ap = SendConst(unsafe { a_base.add(i0 * k) });
+        let bp = SendConst(b_base);
+        let op = SendMut(unsafe { out_base.add(i0 * n) });
+        let tx = tx.clone();
+        pool.execute(move || {
+            // SAFETY: the caller blocks on `rx` below until every job has
+            // signalled, so `a`, `b`, and `out` outlive this closure; the
+            // out row blocks are disjoint by construction, and the gemm
+            // body cannot panic (pure in-bounds arithmetic).
+            let a = unsafe { std::slice::from_raw_parts(ap.0, rows * k) };
+            let b = unsafe { std::slice::from_raw_parts(bp.0, k * n) };
+            let o = unsafe { std::slice::from_raw_parts_mut(op.0, rows * n) };
+            gemm_rows(a, b, rows, k, n, o);
+            let _ = tx.send(());
+        });
+        jobs += 1;
+        i0 += rows;
+    }
+    drop(tx);
+    for _ in 0..jobs {
+        rx.recv().expect("gemm worker died");
+    }
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
@@ -99,6 +255,29 @@ impl Tensor {
         }
     }
 
+    /// In-place [`map`](Self::map).
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Overwrite with `src`'s contents. Panics on shape mismatch (the
+    /// workspace layer guarantees matching shapes by construction).
+    pub fn copy_from(&mut self, src: &Tensor) {
+        assert_eq!(
+            self.shape, src.shape,
+            "copy_from shape mismatch {:?} vs {:?}",
+            self.shape, src.shape
+        );
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Set every element to `v`.
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
     fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Tensor> {
         if self.shape != other.shape {
             return Err(Error::Shape(format!(
@@ -145,43 +324,44 @@ impl Tensor {
 
     // -- linear algebra ----------------------------------------------------
 
-    /// Dense matmul (m,k) x (k,n) -> (m,n).
-    ///
-    /// ikj loop order (row-major friendly) with the N axis tiled so the
-    /// output strip stays L1-resident across the K loop — matters for the
-    /// wide-N products the im2col conv path generates (see EXPERIMENTS.md
-    /// §Perf).
+    /// Dense matmul (m,k) x (k,n) -> (m,n). Wrapper over
+    /// [`matmul_into`](Self::matmul_into) (see [`gemm_into`] for the loop
+    /// structure and the optional row-block parallelism).
     pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, _) = self.dims2()?;
+        let (_, n) = other.dims2()?;
+        let mut out = Tensor::zeros(&[m, n]);
+        self.matmul_into(other, &mut out)?;
+        Ok(out)
+    }
+
+    /// `out = self @ other`, fully overwriting `out` (stale contents are
+    /// fine). `out` must already have shape (m, n).
+    pub fn matmul_into(&self, other: &Tensor, out: &mut Tensor) -> Result<()> {
         let (m, k) = self.dims2()?;
         let (k2, n) = other.dims2()?;
         if k != k2 {
+            return Err(Error::Shape(format!("matmul inner dim {k} vs {k2}")));
+        }
+        if out.shape != [m, n] {
             return Err(Error::Shape(format!(
-                "matmul inner dim {k} vs {k2}"
+                "matmul_into out shape {:?}, want [{m}, {n}]",
+                out.shape
             )));
         }
-        const N_BLK: usize = 1024; // 4 KiB output strip per row
-        let mut out = vec![0.0f32; m * n];
-        for jb in (0..n).step_by(N_BLK) {
-            let je = (jb + N_BLK).min(n);
-            for i in 0..m {
-                let arow = &self.data[i * k..(i + 1) * k];
-                let orow = &mut out[i * n + jb..i * n + je];
-                for (kk, &a) in arow.iter().enumerate() {
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let brow = &other.data[kk * n + jb..kk * n + je];
-                    for (o, &b) in orow.iter_mut().zip(brow) {
-                        *o += a * b;
-                    }
-                }
-            }
-        }
-        Tensor::new(&[m, n], out)
+        gemm_into(&self.data, &other.data, m, k, n, &mut out.data);
+        Ok(())
     }
 
     /// Add a length-n bias row to every row of an (m, n) tensor.
     pub fn add_bias_rows(&self, bias: &[f32]) -> Result<Tensor> {
+        let mut out = self.clone();
+        out.add_bias_rows_inplace(bias)?;
+        Ok(out)
+    }
+
+    /// In-place [`add_bias_rows`](Self::add_bias_rows).
+    pub fn add_bias_rows_inplace(&mut self, bias: &[f32]) -> Result<()> {
         let (m, n) = self.dims2()?;
         if bias.len() != n {
             return Err(Error::Shape(format!(
@@ -189,13 +369,13 @@ impl Tensor {
                 bias.len()
             )));
         }
-        let mut out = self.data.clone();
         for i in 0..m {
-            for j in 0..n {
-                out[i * n + j] += bias[j];
+            let row = &mut self.data[i * n..(i + 1) * n];
+            for (v, &bv) in row.iter_mut().zip(bias) {
+                *v += bv;
             }
         }
-        Tensor::new(&[m, n], out)
+        Ok(())
     }
 
     /// Horizontally concatenate 2-D tensors (same row count).
@@ -237,8 +417,35 @@ impl Tensor {
     /// convolution on the (vectorised) matmul path. ~4× over the direct
     /// loop nest on the image-task shapes (see EXPERIMENTS.md §Perf);
     /// `conv2d_same_naive` keeps the reference implementation for the
-    /// property tests.
+    /// property tests. Wrapper over
+    /// [`conv2d_same_into`](Self::conv2d_same_into) with a throwaway
+    /// workspace.
     pub fn conv2d_same(&self, w: &Tensor, bias: &[f32]) -> Result<Tensor> {
+        let (b, h, wd) = match self.shape.as_slice() {
+            [b, _, h, w] => (*b, *h, *w),
+            s => return Err(Error::Shape(format!("conv input {s:?}"))),
+        };
+        let cout = match w.shape.as_slice() {
+            [o, _, _, _] => *o,
+            s => return Err(Error::Shape(format!("conv weight {s:?}"))),
+        };
+        let mut out = Tensor::zeros(&[b, cout, h, wd]);
+        let mut ws = Workspace::new();
+        self.conv2d_same_into(w, bias, &mut out, &mut ws)?;
+        Ok(out)
+    }
+
+    /// [`conv2d_same`](Self::conv2d_same) writing into `out` (shape
+    /// (B, Cout, H, W), fully overwritten), with the im2col patch matrix
+    /// and the product drawn from `ws` — the conv path's only heap traffic,
+    /// gone once the workspace is warm.
+    pub fn conv2d_same_into(
+        &self,
+        w: &Tensor,
+        bias: &[f32],
+        out: &mut Tensor,
+        ws: &mut Workspace,
+    ) -> Result<()> {
         let (b, cin, h, wd) = match self.shape.as_slice() {
             [b, c, h, w] => (*b, *c, *h, *w),
             s => return Err(Error::Shape(format!("conv input {s:?}"))),
@@ -253,6 +460,13 @@ impl Tensor {
         if bias.len() != cout {
             return Err(Error::Shape("conv bias length".into()));
         }
+        if out.shape != [b, cout, h, wd] {
+            return Err(Error::Shape(format!(
+                "conv2d_same_into out shape {:?}, want {:?}",
+                out.shape,
+                [b, cout, h, wd]
+            )));
+        }
         let (ph, pw) = ((kh - 1) / 2, (kw - 1) / 2);
         let patch = cin * kh * kw;
         let plane = h * wd;
@@ -260,9 +474,11 @@ impl Tensor {
         // im2col, PATCH-MAJOR: row p of `cols` holds patch entry p for every
         // output pixel (b-major). Writes are contiguous x-runs and the
         // subsequent matmul (cout, patch) @ (patch, B·plane) streams the
-        // wide N axis through the vector units.
+        // wide N axis through the vector units. The buffer is pooled, so it
+        // must be re-zeroed: padding cells are never written below.
         let n_pix = b * plane;
-        let mut cols = vec![0.0f32; patch * n_pix];
+        let mut cols = ws.take_buf(patch * n_pix);
+        cols.fill(0.0);
         for ic in 0..cin {
             for ky in 0..kh {
                 for kx in 0..kw {
@@ -292,23 +508,23 @@ impl Tensor {
 
         // (cout, patch) @ (patch, B·plane): OIHW weights flatten directly
         // into the LHS.
-        let wt = Tensor::new(&[cout, patch], w.data.clone())?;
-        let cols_t = Tensor::new(&[patch, n_pix], cols)?;
-        let prod = wt.matmul(&cols_t)?; // (cout, B·plane)
+        let mut prod = ws.take_buf(cout * n_pix);
+        gemm_into(&w.data, &cols, cout, patch, n_pix, &mut prod);
 
         // (cout, B·plane) → NCHW + bias (plane rows stay contiguous)
-        let mut out = vec![0.0f32; b * cout * plane];
         for oc in 0..cout {
             for bi in 0..b {
                 let src = oc * n_pix + bi * plane;
                 let dst = (bi * cout + oc) * plane;
                 let bias_v = bias[oc];
                 for i in 0..plane {
-                    out[dst + i] = prod.data[src + i] + bias_v;
+                    out.data[dst + i] = prod[src + i] + bias_v;
                 }
             }
         }
-        Tensor::new(&[b, cout, h, wd], out)
+        ws.give_buf(cols);
+        ws.give_buf(prod);
+        Ok(())
     }
 
     /// Reference direct-loop convolution (kept for property-testing the
@@ -376,14 +592,34 @@ impl Tensor {
             [b, c, h, w] => (*b, *c, *h, *w),
             s => return Err(Error::Shape(format!("depth_cat input {s:?}"))),
         };
-        let plane = h * w;
-        let mut out = Vec::with_capacity(b * (c + 1) * plane);
-        for bi in 0..b {
-            let base = bi * c * plane;
-            out.extend_from_slice(&self.data[base..base + c * plane]);
-            out.extend(std::iter::repeat(value).take(plane));
+        let mut out = Tensor::zeros(&[b, c + 1, h, w]);
+        self.depth_cat_into(value, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`depth_cat`](Self::depth_cat) writing into `out` (shape
+    /// (B, C+1, H, W), fully overwritten).
+    pub fn depth_cat_into(&self, value: f32, out: &mut Tensor) -> Result<()> {
+        let (b, c, h, w) = match self.shape.as_slice() {
+            [b, c, h, w] => (*b, *c, *h, *w),
+            s => return Err(Error::Shape(format!("depth_cat input {s:?}"))),
+        };
+        if out.shape != [b, c + 1, h, w] {
+            return Err(Error::Shape(format!(
+                "depth_cat_into out shape {:?}, want {:?}",
+                out.shape,
+                [b, c + 1, h, w]
+            )));
         }
-        Tensor::new(&[b, c + 1, h, w], out)
+        let plane = h * w;
+        for bi in 0..b {
+            let src = bi * c * plane;
+            let dst = bi * (c + 1) * plane;
+            out.data[dst..dst + c * plane]
+                .copy_from_slice(&self.data[src..src + c * plane]);
+            out.data[dst + c * plane..dst + (c + 1) * plane].fill(value);
+        }
+        Ok(())
     }
 
     // -- reductions ---------------------------------------------------------
@@ -598,5 +834,148 @@ mod tests {
         assert!(a.add(&b).is_err());
         assert!(a.matmul(&a).is_err());
         assert!(Tensor::zeros(&[4]).argmax_rows().is_err());
+    }
+
+    #[test]
+    fn matmul_into_matches_pure_and_overwrites_stale() {
+        check("matmul_into == matmul", 40, |rng| {
+            let (m, k, n) = (
+                gen_range(rng, 1, 7),
+                gen_range(rng, 1, 7),
+                gen_range(rng, 1, 7),
+            );
+            let a = Tensor::new(&[m, k], gen_vec(rng, m * k, 1.0)).unwrap();
+            let b = Tensor::new(&[k, n], gen_vec(rng, k * n, 1.0)).unwrap();
+            let pure = a.matmul(&b).unwrap();
+            // stale garbage in out must not leak through
+            let mut out = Tensor::full(&[m, n], f32::NAN);
+            a.matmul_into(&b, &mut out).unwrap();
+            if out.data() != pure.data() {
+                return Err("matmul_into diverged from matmul".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_into_shape_checked() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[3, 4]);
+        let mut bad = Tensor::zeros(&[2, 5]);
+        assert!(a.matmul_into(&b, &mut bad).is_err());
+    }
+
+    #[test]
+    fn sparse_rows_still_skip_dense_rows_exact() {
+        // a row that's mostly zeros and a dense row must both agree with a
+        // plain triple loop
+        let a = Tensor::new(
+            &[2, 4],
+            vec![0.0, 0.0, 0.0, 2.0, 1.0, -1.0, 0.5, 0.25],
+        )
+        .unwrap();
+        let b = Tensor::new(
+            &[4, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+        )
+        .unwrap();
+        let c = a.matmul(&b).unwrap();
+        let mut want = vec![0.0f32; 4];
+        for i in 0..2 {
+            for j in 0..2 {
+                for kk in 0..4 {
+                    want[i * 2 + j] += a.data()[i * 4 + kk] * b.data()[kk * 2 + j];
+                }
+            }
+        }
+        assert_eq!(c.data(), &want[..]);
+    }
+
+    #[test]
+    fn parallel_matmul_bit_identical() {
+        use crate::util::threadpool::ThreadPool;
+        use std::sync::Arc;
+        // big enough to clear PAR_MIN_MACS: 64*64*64 = 262144 mul-adds
+        let mut rng = crate::util::prng::Rng::new(11);
+        let a = Tensor::new(&[64, 64], gen_vec(&mut rng, 64 * 64, 1.0)).unwrap();
+        let b = Tensor::new(&[64, 64], gen_vec(&mut rng, 64 * 64, 1.0)).unwrap();
+        let serial = a.matmul(&b).unwrap();
+        set_matmul_pool(Arc::new(ThreadPool::new(4)));
+        let parallel = a.matmul(&b).unwrap();
+        clear_matmul_pool();
+        assert_eq!(serial.data(), parallel.data());
+    }
+
+    #[test]
+    fn inplace_twins_match_pure() {
+        check("inplace == pure", 40, |rng| {
+            let (m, n) = (gen_range(rng, 1, 6), gen_range(rng, 1, 6));
+            let t = Tensor::new(&[m, n], gen_vec(rng, m * n, 1.0)).unwrap();
+            let bias = gen_vec(rng, n, 1.0);
+
+            let mut ip = t.clone();
+            ip.add_bias_rows_inplace(&bias).unwrap();
+            if ip.data() != t.add_bias_rows(&bias).unwrap().data() {
+                return Err("add_bias_rows_inplace diverged".into());
+            }
+
+            let mut mp = t.clone();
+            mp.map_inplace(|x| x.tanh());
+            if mp.data() != t.map(|x| x.tanh()).data() {
+                return Err("map_inplace diverged".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn copy_from_and_fill() {
+        let src = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut dst = Tensor::zeros(&[2, 2]);
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        dst.fill(-1.5);
+        assert!(dst.data().iter().all(|&v| v == -1.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "copy_from shape mismatch")]
+    fn copy_from_panics_on_shape_mismatch() {
+        let src = Tensor::zeros(&[2, 2]);
+        let mut dst = Tensor::zeros(&[4]);
+        dst.copy_from(&src);
+    }
+
+    #[test]
+    fn conv_and_depth_cat_into_match_pure_with_reused_workspace() {
+        // one workspace across varied shapes: catches stale-buffer bugs
+        let mut ws = Workspace::new();
+        check("conv2d_same_into == conv2d_same", 15, |rng| {
+            let b = gen_range(rng, 1, 2);
+            let cin = gen_range(rng, 1, 3);
+            let cout = gen_range(rng, 1, 3);
+            let h = gen_range(rng, 3, 6);
+            let wd = gen_range(rng, 3, 6);
+            let x = Tensor::new(&[b, cin, h, wd], gen_vec(rng, b * cin * h * wd, 1.0))
+                .unwrap();
+            let w = Tensor::new(&[cout, cin, 3, 3], gen_vec(rng, cout * cin * 9, 1.0))
+                .unwrap();
+            let bias = gen_vec(rng, cout, 1.0);
+            let pure = x.conv2d_same(&w, &bias).unwrap();
+            let mut out = Tensor::full(&[b, cout, h, wd], f32::NAN);
+            x.conv2d_same_into(&w, &bias, &mut out, &mut ws).unwrap();
+            if out.data() != pure.data() {
+                return Err("conv2d_same_into diverged".into());
+            }
+
+            let cat = x.depth_cat(0.75).unwrap();
+            let mut cat_out = Tensor::full(&[b, cin + 1, h, wd], f32::NAN);
+            x.depth_cat_into(0.75, &mut cat_out).unwrap();
+            if cat_out.data() != cat.data() {
+                return Err("depth_cat_into diverged".into());
+            }
+            Ok(())
+        });
+        assert!(ws.pooled_bufs() > 0, "conv returned its scratch to the pool");
     }
 }

@@ -1,0 +1,145 @@
+//! Reusable scratch buffers for the allocation-free numeric hot path.
+//!
+//! A [`Workspace`] is a pool of [`Tensor`]s keyed by shape plus raw `f32`
+//! buffers keyed by length. The `_into` kernels and the `nn` forward paths
+//! draw their intermediates from one of these instead of the global
+//! allocator, so a solver loop that reuses a workspace performs **zero
+//! steady-state heap allocations**: every `take_*` after warmup pops a
+//! previously returned buffer, and every `give_*` pushes it back into a
+//! pool whose backing `Vec` capacity is already established.
+//!
+//! Contract: buffers come back with **stale contents** — callers must fully
+//! overwrite them (every `_into` kernel in this crate does). Not returning
+//! a buffer (e.g. on an error path) is safe; the pool simply re-allocates
+//! on the next miss.
+
+use std::collections::HashMap;
+
+use crate::tensor::Tensor;
+
+/// Shape-keyed scratch-buffer pool. See the module docs for the contract.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    tensors: HashMap<Vec<usize>, Vec<Tensor>>,
+    bufs: HashMap<usize, Vec<Vec<f32>>>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace {
+            tensors: HashMap::new(),
+            bufs: HashMap::new(),
+        }
+    }
+
+    /// Pop a tensor of exactly `shape` from the pool, or allocate one on a
+    /// miss. Contents are arbitrary (zeroed only on the first allocation).
+    pub fn take_tensor(&mut self, shape: &[usize]) -> Tensor {
+        if let Some(pool) = self.tensors.get_mut(shape) {
+            if let Some(t) = pool.pop() {
+                return t;
+            }
+        }
+        Tensor::zeros(shape)
+    }
+
+    /// Return a tensor to the pool for its shape.
+    // contains_key + get_mut instead of entry(): entry() would force a
+    // `shape.to_vec()` key allocation on EVERY give, not just first insert.
+    #[allow(clippy::map_entry)]
+    pub fn give_tensor(&mut self, t: Tensor) {
+        if self.tensors.contains_key(t.shape()) {
+            self.tensors.get_mut(t.shape()).unwrap().push(t);
+        } else {
+            self.tensors.insert(t.shape().to_vec(), vec![t]);
+        }
+    }
+
+    /// Pop a raw buffer of exactly `len` elements (contents arbitrary).
+    pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
+        if let Some(pool) = self.bufs.get_mut(&len) {
+            if let Some(b) = pool.pop() {
+                debug_assert_eq!(b.len(), len);
+                return b;
+            }
+        }
+        vec![0.0; len]
+    }
+
+    /// Return a raw buffer to the pool for its length.
+    pub fn give_buf(&mut self, b: Vec<f32>) {
+        let len = b.len();
+        self.bufs.entry(len).or_default().push(b);
+    }
+
+    /// Number of tensors currently parked in the pool (test introspection).
+    pub fn pooled_tensors(&self) -> usize {
+        self.tensors.values().map(Vec::len).sum()
+    }
+
+    /// Number of raw buffers currently parked in the pool.
+    pub fn pooled_bufs(&self) -> usize {
+        self.bufs.values().map(Vec::len).sum()
+    }
+
+    /// Drop every pooled buffer (frees the memory; the pool stays usable).
+    pub fn clear(&mut self) {
+        self.tensors.clear();
+        self.bufs.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_roundtrip_reuses_storage() {
+        let mut ws = Workspace::new();
+        let mut t = ws.take_tensor(&[2, 3]);
+        t.data_mut()[0] = 7.0;
+        let ptr = t.data().as_ptr();
+        ws.give_tensor(t);
+        assert_eq!(ws.pooled_tensors(), 1);
+        let t2 = ws.take_tensor(&[2, 3]);
+        assert_eq!(t2.data().as_ptr(), ptr, "same backing storage reused");
+        assert_eq!(t2.data()[0], 7.0, "contents are stale by contract");
+        assert_eq!(ws.pooled_tensors(), 0);
+    }
+
+    #[test]
+    fn distinct_shapes_pool_separately() {
+        let mut ws = Workspace::new();
+        let a = ws.take_tensor(&[4]);
+        let b = ws.take_tensor(&[2, 2]);
+        ws.give_tensor(a);
+        ws.give_tensor(b);
+        // same numel, different shape: each take must match its own shape
+        assert_eq!(ws.take_tensor(&[4]).shape(), &[4]);
+        assert_eq!(ws.take_tensor(&[2, 2]).shape(), &[2, 2]);
+    }
+
+    #[test]
+    fn raw_bufs_pool_by_len() {
+        let mut ws = Workspace::new();
+        let b = ws.take_buf(16);
+        assert_eq!(b.len(), 16);
+        let ptr = b.as_ptr();
+        ws.give_buf(b);
+        assert_eq!(ws.pooled_bufs(), 1);
+        assert_eq!(ws.take_buf(16).as_ptr(), ptr);
+        assert_ne!(ws.take_buf(8).len(), 16);
+    }
+
+    #[test]
+    fn clear_empties_pools() {
+        let mut ws = Workspace::new();
+        let t = ws.take_tensor(&[3]);
+        ws.give_tensor(t);
+        let b = ws.take_buf(5);
+        ws.give_buf(b);
+        ws.clear();
+        assert_eq!(ws.pooled_tensors(), 0);
+        assert_eq!(ws.pooled_bufs(), 0);
+    }
+}

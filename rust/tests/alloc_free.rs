@@ -1,0 +1,206 @@
+//! Proof of the allocation-free hot path: a counting global allocator
+//! wraps `System`, and a warm [`RkWorkspace`] solve must perform **zero**
+//! heap allocations — not "few", zero — for `odeint_fixed_ws` and
+//! `odeint_hyper_ws`, and O(1) per solve (the single result clone) for
+//! `dopri5_ws`, independent of step count.
+//!
+//! Everything lives in ONE `#[test]` on purpose: the counter is global, so
+//! concurrent tests in the same binary would pollute each other's windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use hypersolvers::nn::layers::Mlp;
+use hypersolvers::nn::{Act, HyperMlp, Linear, MlpField, TimeMode};
+use hypersolvers::ode::Rotation;
+use hypersolvers::solvers::{
+    adaptive_ws, dopri5_ws, odeint_fixed_ws, odeint_hyper_ws, AdaptiveOpts, RkWorkspace, Tableau,
+};
+use hypersolvers::tensor::Tensor;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The fixtures' 2-D rotation-flavoured field (dz = [z1 + 0.1s, -z0 + 0.1s])
+/// as a real exported-architecture MLP, built without JSON so the test has
+/// no parse-time noise.
+fn fixture_field() -> MlpField {
+    MlpField {
+        mlp: Mlp {
+            layers: vec![Linear {
+                w: Tensor::new(&[3, 2], vec![0.0, -1.0, 1.0, 0.0, 0.1, 0.1]).unwrap(),
+                b: vec![0.0, 0.0],
+                act: Act::Id,
+            }],
+        },
+        time_mode: TimeMode::Concat,
+    }
+}
+
+/// g([z, dz, eps, s]) = 0.05 z through a genuine two-layer hyper MLP.
+fn fixture_hyper() -> HyperMlp {
+    HyperMlp {
+        mlp: Mlp {
+            layers: vec![
+                Linear {
+                    w: Tensor::new(
+                        &[6, 2],
+                        vec![
+                            0.05, 0.0, 0.0, 0.05, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0,
+                        ],
+                    )
+                    .unwrap(),
+                    b: vec![0.0, 0.0],
+                    act: Act::Id,
+                },
+                Linear {
+                    w: Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap(),
+                    b: vec![0.0, 0.0],
+                    act: Act::Id,
+                },
+            ],
+        },
+    }
+}
+
+#[test]
+fn warm_solver_loops_do_not_touch_the_allocator() {
+    let z0 = Tensor::new(&[4, 2], (0..8).map(|i| 0.1 * i as f32 - 0.3).collect()).unwrap();
+    let heun = Tableau::heun();
+    let rk4 = Tableau::rk4();
+
+    // --- odeint_fixed_ws over an analytic field: exactly 0 allocations ---
+    let rot = Rotation { omega: 1.4 };
+    let mut ws = RkWorkspace::new();
+    let warm = odeint_fixed_ws(&rot, &z0, (0.0, 1.0), 64, &rk4, &mut ws)
+        .unwrap()
+        .clone();
+    let before = allocs();
+    {
+        let result = odeint_fixed_ws(&rot, &z0, (0.0, 1.0), 64, &rk4, &mut ws).unwrap();
+        std::hint::black_box(result.data());
+    }
+    let fixed_allocs = allocs() - before;
+    assert_eq!(
+        fixed_allocs, 0,
+        "odeint_fixed_ws (analytic field, 64 rk4 steps) allocated {fixed_allocs} times"
+    );
+    assert_eq!(
+        warm,
+        odeint_fixed_ws(&rot, &z0, (0.0, 1.0), 64, &rk4, &mut ws)
+            .unwrap()
+            .clone(),
+        "hot path result drifted"
+    );
+
+    // --- odeint_fixed_ws over a real MLP field: exactly 0 allocations ---
+    let field = fixture_field();
+    let mut ws = RkWorkspace::new();
+    for _ in 0..2 {
+        let _ = odeint_fixed_ws(&field, &z0, (0.0, 1.0), 32, &heun, &mut ws).unwrap();
+    }
+    let before = allocs();
+    {
+        let result = odeint_fixed_ws(&field, &z0, (0.0, 1.0), 32, &heun, &mut ws).unwrap();
+        std::hint::black_box(result.data());
+    }
+    let mlp_allocs = allocs() - before;
+    assert_eq!(
+        mlp_allocs, 0,
+        "odeint_fixed_ws (MLP field, 32 heun steps) allocated {mlp_allocs} times"
+    );
+
+    // --- odeint_hyper_ws (field + hyper net): exactly 0 allocations ---
+    let g = fixture_hyper();
+    let mut ws = RkWorkspace::new();
+    for _ in 0..2 {
+        let _ = odeint_hyper_ws(&field, &g, &z0, (0.0, 1.0), 32, &heun, &mut ws).unwrap();
+    }
+    let before = allocs();
+    {
+        let result = odeint_hyper_ws(&field, &g, &z0, (0.0, 1.0), 32, &heun, &mut ws).unwrap();
+        std::hint::black_box(result.data());
+    }
+    let hyper_allocs = allocs() - before;
+    assert_eq!(
+        hyper_allocs, 0,
+        "odeint_hyper_ws (MLP field + hyper, 32 heun steps) allocated {hyper_allocs} times"
+    );
+
+    // --- step count must not change the allocation count (per-step = 0) ---
+    let mut ws = RkWorkspace::new();
+    let _ = odeint_hyper_ws(&field, &g, &z0, (0.0, 1.0), 4, &heun, &mut ws).unwrap();
+    let before = allocs();
+    let _ = odeint_hyper_ws(&field, &g, &z0, (0.0, 1.0), 4, &heun, &mut ws).unwrap();
+    let short = allocs() - before;
+    let before = allocs();
+    let _ = odeint_hyper_ws(&field, &g, &z0, (0.0, 1.0), 256, &heun, &mut ws).unwrap();
+    let long = allocs() - before;
+    assert_eq!(
+        short, long,
+        "allocation count scales with steps: {short} @ K=4 vs {long} @ K=256"
+    );
+
+    // --- adaptive stepping: O(1) per solve (the AdaptiveResult.z clone),
+    // not O(steps). Asserted through adaptive_ws with a caller-held
+    // tableau; the dopri5_ws convenience wrapper additionally rebuilds
+    // Tableau::dopri5() per call (~a dozen small one-off allocations), so
+    // it is checked for step-count independence rather than a fixed count.
+    let opts = AdaptiveOpts::with_tol(1e-4);
+    let dp = Tableau::dopri5();
+    let mut ws = RkWorkspace::new();
+    for _ in 0..2 {
+        let _ = adaptive_ws(&field, &z0, (0.0, 1.0), &dp, &opts, &mut ws).unwrap();
+    }
+    let before = allocs();
+    let r = adaptive_ws(&field, &z0, (0.0, 1.0), &dp, &opts, &mut ws).unwrap();
+    let adaptive_allocs = allocs() - before;
+    assert!(r.accepted >= 1);
+    assert!(
+        adaptive_allocs <= 2,
+        "adaptive_ws allocated {adaptive_allocs} times (want ≤ 2: the result clone)"
+    );
+
+    // dopri5_ws wrapper: per-call cost is constant regardless of tolerance-
+    // driven step count (loose tol ~few steps vs tight tol ~many steps)
+    let _ = dopri5_ws(&field, &z0, (0.0, 1.0), &opts, &mut ws).unwrap();
+    let before = allocs();
+    let _ = dopri5_ws(&field, &z0, (0.0, 1.0), &AdaptiveOpts::with_tol(1e-2), &mut ws).unwrap();
+    let loose = allocs() - before;
+    let before = allocs();
+    let _ = dopri5_ws(&field, &z0, (0.0, 1.0), &AdaptiveOpts::with_tol(1e-6), &mut ws).unwrap();
+    let tight = allocs() - before;
+    assert_eq!(
+        loose, tight,
+        "dopri5_ws allocation count scales with step count: {loose} vs {tight}"
+    );
+}

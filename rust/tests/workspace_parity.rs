@@ -1,0 +1,262 @@
+//! Workspace hot-path parity: every `_into` / in-place / `_ws` entry point
+//! must be **bit-identical** to its pure counterpart, across random shapes
+//! and with workspaces reused (dirty) between calls. This is the contract
+//! that lets the runtime serve from reusable buffers without changing a
+//! single output bit relative to the original allocating implementation.
+
+use hypersolvers::nn::layers::Mlp;
+use hypersolvers::nn::{Act, HyperMlp, Linear, MlpField, TimeMode};
+use hypersolvers::ode::{Rotation, VanDerPol, VectorField};
+use hypersolvers::solvers::{
+    adaptive, adaptive_ws, dopri5, dopri5_ws, odeint_fixed, odeint_fixed_traj, odeint_fixed_ws,
+    odeint_hyper, odeint_hyper_adaptive, odeint_hyper_adaptive_ws, odeint_hyper_ws, psi, rk_step,
+    AdaptiveOpts, HyperNet, RkWorkspace, Tableau,
+};
+use hypersolvers::tensor::{Tensor, Workspace};
+use hypersolvers::util::propkit::{check, gen_range, gen_vec, prop_assert};
+use hypersolvers::util::prng::Rng;
+
+fn random_linear(rng: &mut Rng, din: usize, dout: usize, act: Act) -> Linear {
+    Linear {
+        w: Tensor::new(&[din, dout], gen_vec(rng, din * dout, 0.5)).unwrap(),
+        b: gen_vec(rng, dout, 0.5),
+        act,
+    }
+}
+
+/// A random (d → d) field MLP with time-concat input, as the exporter
+/// produces.
+fn random_field(rng: &mut Rng, d: usize, hidden: usize) -> MlpField {
+    MlpField {
+        mlp: Mlp {
+            layers: vec![
+                random_linear(rng, d + 1, hidden, Act::Tanh),
+                random_linear(rng, hidden, d, Act::Id),
+            ],
+        },
+        time_mode: TimeMode::Concat,
+    }
+}
+
+/// A random hyper net over [z, dz, eps, s].
+fn random_hyper(rng: &mut Rng, d: usize, hidden: usize) -> HyperMlp {
+    HyperMlp {
+        mlp: Mlp {
+            layers: vec![
+                random_linear(rng, 2 * d + 2, hidden, Act::Tanh),
+                random_linear(rng, hidden, d, Act::Id),
+            ],
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// kernel parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matmul_into_bit_identical_with_dirty_workspace_tensors() {
+    let mut ws = Workspace::new();
+    check("matmul_into == matmul (pooled out)", 40, |rng| {
+        let (m, k, n) = (
+            gen_range(rng, 1, 9),
+            gen_range(rng, 1, 9),
+            gen_range(rng, 1, 9),
+        );
+        let a = Tensor::new(&[m, k], gen_vec(rng, m * k, 1.0)).unwrap();
+        let b = Tensor::new(&[k, n], gen_vec(rng, k * n, 1.0)).unwrap();
+        // the out tensor cycles through the pool carrying stale contents
+        let mut out = ws.take_tensor(&[m, n]);
+        a.matmul_into(&b, &mut out).unwrap();
+        let same = out.data() == a.matmul(&b).unwrap().data();
+        ws.give_tensor(out);
+        prop_assert(same, "matmul_into diverged from matmul")
+    });
+}
+
+#[test]
+fn mlp_and_field_eval_into_bit_identical_across_random_nets() {
+    let mut ws = Workspace::new();
+    check("eval_into == eval (random nets)", 25, |rng| {
+        let d = gen_range(rng, 1, 4);
+        let hidden = gen_range(rng, 1, 6);
+        let b = gen_range(rng, 1, 5);
+        let field = random_field(rng, d, hidden);
+        let z = Tensor::new(&[b, d], gen_vec(rng, b * d, 1.0)).unwrap();
+        let s = rng.normal_f32();
+        let pure = field.eval(s, &z);
+        let mut out = ws.take_tensor(&[b, d]);
+        field.eval_into(s, &z, &mut out, &mut ws);
+        let same = out.data() == pure.data();
+        ws.give_tensor(out);
+        prop_assert(same, "MlpField::eval_into diverged")?;
+
+        let g = random_hyper(rng, d, hidden);
+        let dz = field.eval(s, &z);
+        let gp = g.eval(0.125, s, &z, &dz);
+        let mut gout = ws.take_tensor(&[b, d]);
+        g.eval_into(0.125, s, &z, &dz, &mut gout, &mut ws);
+        let same = gout.data() == gp.data();
+        ws.give_tensor(gout);
+        prop_assert(same, "HyperMlp::eval_into diverged")
+    });
+}
+
+// ---------------------------------------------------------------------------
+// solver parity: _ws entry points vs pure wrappers, reused workspace
+// ---------------------------------------------------------------------------
+
+#[test]
+fn odeint_fixed_ws_reused_across_shapes_and_tableaus() {
+    let mut ws = RkWorkspace::new();
+    check("odeint_fixed_ws == odeint_fixed", 20, |rng| {
+        let b = gen_range(rng, 1, 4);
+        let z0 = Tensor::new(&[b, 2], gen_vec(rng, b * 2, 1.0)).unwrap();
+        let f = Rotation { omega: 1.3 };
+        for tab in [Tableau::euler(), Tableau::heun(), Tableau::rk4()] {
+            let k = gen_range(rng, 1, 9);
+            let pure = odeint_fixed(&f, &z0, (0.0, 1.0), k, &tab).unwrap();
+            let via_ws = odeint_fixed_ws(&f, &z0, (0.0, 1.0), k, &tab, &mut ws)
+                .unwrap()
+                .clone();
+            prop_assert(
+                via_ws == pure,
+                format!("{} k={k}: ws result diverged", tab.name),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn solver_results_identical_for_override_and_fallback_eval_into() {
+    // a field with a hand-written eval_into vs the same dynamics through a
+    // closure (which uses the default eval_into fallback): every solver
+    // must produce the same bits either way
+    let mut rng = Rng::new(42);
+    let d = 2;
+    let field = random_field(&mut rng, d, 5);
+    let field_ref = &field;
+    let closure = move |s: f32, z: &Tensor| field_ref.eval(s, z);
+    let z0 = Tensor::new(&[3, d], gen_vec(&mut rng, 3 * d, 1.0)).unwrap();
+
+    for k in [1usize, 3, 7] {
+        for tab in [Tableau::euler(), Tableau::heun(), Tableau::rk4()] {
+            let a = odeint_fixed(&field, &z0, (0.0, 1.0), k, &tab).unwrap();
+            let b = odeint_fixed(&closure, &z0, (0.0, 1.0), k, &tab).unwrap();
+            assert_eq!(a, b, "{} k={k}", tab.name);
+        }
+    }
+    let opts = AdaptiveOpts::with_tol(1e-5);
+    let a = dopri5(&field, &z0, (0.0, 1.0), &opts).unwrap();
+    let b = dopri5(&closure, &z0, (0.0, 1.0), &opts).unwrap();
+    assert_eq!(a.z, b.z);
+    assert_eq!((a.nfe, a.accepted, a.rejected), (b.nfe, b.accepted, b.rejected));
+}
+
+#[test]
+fn hyper_ws_and_adaptive_ws_match_pure() {
+    let mut rng = Rng::new(7);
+    let d = 2;
+    let field = random_field(&mut rng, d, 4);
+    let g = random_hyper(&mut rng, d, 4);
+    let z0 = Tensor::new(&[2, d], gen_vec(&mut rng, 2 * d, 1.0)).unwrap();
+    let mut ws = RkWorkspace::new();
+
+    for k in [1usize, 4, 9] {
+        for tab in [Tableau::euler(), Tableau::heun()] {
+            let pure = odeint_hyper(&field, &g, &z0, (0.0, 1.0), k, &tab).unwrap();
+            let via = odeint_hyper_ws(&field, &g, &z0, (0.0, 1.0), k, &tab, &mut ws)
+                .unwrap()
+                .clone();
+            assert_eq!(via, pure, "hyper {} k={k}", tab.name);
+        }
+    }
+
+    let opts = AdaptiveOpts::with_tol(1e-4);
+    let pure = dopri5(&field, &z0, (0.0, 1.0), &opts).unwrap();
+    let via = dopri5_ws(&field, &z0, (0.0, 1.0), &opts, &mut ws).unwrap();
+    assert_eq!(via.z, pure.z);
+    assert_eq!(via.nfe, pure.nfe);
+    assert_eq!(via.accepted, pure.accepted);
+    assert_eq!(via.rejected, pure.rejected);
+
+    let pure = adaptive(&field, &z0, (0.0, 1.0), &Tableau::bs32(), &opts).unwrap();
+    let via = adaptive_ws(&field, &z0, (0.0, 1.0), &Tableau::bs32(), &opts, &mut ws).unwrap();
+    assert_eq!(via.z, pure.z);
+
+    let pure =
+        odeint_hyper_adaptive(&field, &g, &z0, (0.0, 1.0), &Tableau::euler(), &opts).unwrap();
+    let via = odeint_hyper_adaptive_ws(
+        &field,
+        &g,
+        &z0,
+        (0.0, 1.0),
+        &Tableau::euler(),
+        &opts,
+        &mut ws,
+    )
+    .unwrap();
+    assert_eq!(via.z, pure.z);
+    assert_eq!(via.nfe, pure.nfe);
+}
+
+#[test]
+fn wrappers_against_handrolled_reference_loop() {
+    // regression anchor: the historical allocating implementation, inlined
+    // here, must keep agreeing with the workspace-backed public APIs
+    fn reference_odeint<F: VectorField>(
+        f: &F,
+        z0: &Tensor,
+        span: (f32, f32),
+        steps: usize,
+        tab: &Tableau,
+    ) -> Tensor {
+        let eps = (span.1 - span.0) / steps as f32;
+        let mut z = z0.clone();
+        for k in 0..steps {
+            let s = span.0 + k as f32 * eps;
+            // stages
+            let mut stages: Vec<Tensor> = Vec::new();
+            for i in 0..tab.stages() {
+                let mut zi = z.clone();
+                for (j, &aij) in tab.a[i].iter().enumerate() {
+                    if aij != 0.0 {
+                        zi.axpy(eps * aij, &stages[j]).unwrap();
+                    }
+                }
+                stages.push(f.eval(s + tab.c[i] * eps, &zi));
+            }
+            // psi
+            let mut acc = Tensor::zeros(z.shape());
+            for (bi, ri) in tab.b.iter().zip(&stages) {
+                if *bi != 0.0 {
+                    acc.axpy(*bi, ri).unwrap();
+                }
+            }
+            z.axpy(eps, &acc).unwrap();
+        }
+        z
+    }
+
+    let f = VanDerPol { mu: 1.5 };
+    let z0 = Tensor::new(&[2, 2], vec![1.0, 0.3, -0.4, 0.8]).unwrap();
+    for tab in [Tableau::euler(), Tableau::midpoint(), Tableau::rk4()] {
+        let want = reference_odeint(&f, &z0, (0.0, 1.0), 16, &tab);
+        let got = odeint_fixed(&f, &z0, (0.0, 1.0), 16, &tab).unwrap();
+        assert_eq!(got, want, "{}", tab.name);
+    }
+
+    // psi / rk_step consistency survives the rewrite
+    let p = psi(&f, &Tableau::heun(), 0.2, &z0, 0.1).unwrap();
+    let mut manual = z0.clone();
+    manual.axpy(0.1, &p).unwrap();
+    assert_eq!(manual, rk_step(&f, &Tableau::heun(), 0.2, &z0, 0.1).unwrap());
+
+    // trajectory endpoints equal terminal solve
+    let traj = odeint_fixed_traj(&f, &z0, (0.0, 1.0), 8, &Tableau::rk4()).unwrap();
+    assert_eq!(
+        traj.last().unwrap(),
+        &odeint_fixed(&f, &z0, (0.0, 1.0), 8, &Tableau::rk4()).unwrap()
+    );
+}
