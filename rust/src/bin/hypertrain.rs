@@ -1,0 +1,278 @@
+//! `hypertrain` — in-repo hypersolver training by residual fitting.
+//!
+//! Trains g_ω for a vector field (analytic, or the MLP field of an
+//! existing weights export), then writes a servable artifact set
+//! (`manifest.json` + `weights/<task>.json`) and self-verifies the
+//! train→serialize→serve loop by executing the trained variant through
+//! the native backend.
+//!
+//! Examples:
+//!   hypertrain --field vdp --mu 1.0 --solver euler --k 8 --out artifacts-vdp
+//!   hypertrain --weights artifacts/weights/cnf_rings.json --solver heun \
+//!       --density rings --steps 4000
+//!   hypertrain --field vdp --steps 400 --batch 64 --hidden 16,16 --bench
+//!
+//! After training:
+//!   hypersolverd serve --backend native --artifacts artifacts-vdp
+
+use std::path::Path;
+use std::sync::Arc;
+
+use hypersolvers::nn::{AnalyticField, CnfModel, FieldNet};
+use hypersolvers::tensor;
+use hypersolvers::train::{
+    export_trained, serve_check, train_hypersolver, FineRef, StateSampler, TrainConfig,
+};
+use hypersolvers::util::cli::Cli;
+use hypersolvers::util::json::{self, Value};
+use hypersolvers::util::threadpool::ThreadPool;
+use hypersolvers::Result;
+
+fn main() {
+    let parsed = Cli::new("hypertrain — residual-fitting trainer for hypersolver nets")
+        .opt("field", "vdp", "analytic field: vdp | rotation | decay")
+        .opt("mu", "1.0", "Van der Pol stiffness (with --field vdp)")
+        .opt("omega", "1.0", "rotation rate (with --field rotation)")
+        .opt("lambda", "-1.0", "decay rate (with --field decay)")
+        .opt("weights", "", "train for an existing weights JSON's field instead")
+        .opt("solver", "euler", "base tableau: euler | heun | midpoint | rk4 | alpha<x>")
+        .opt("k", "8", "serving step count (ε = span / k)")
+        .opt("span", "0,1", "integration span s0,s1")
+        .opt("steps", "2000", "max optimizer steps")
+        .opt("batch", "128", "minibatch size")
+        .opt("lr", "0.003", "peak learning rate (cosine decay, linear warmup)")
+        .opt("warmup", "50", "warmup steps")
+        .opt("hidden", "32,32", "hidden widths of g_ω (comma-separated)")
+        .opt("seed", "7", "PRNG seed")
+        .opt("substeps", "8", "RK4 substeps of the fine one-step reference")
+        .opt("fine-tol", "0", "use dopri5(tol) as the fine reference when > 0")
+        .opt("box", "2", "sample states uniform in [-box, box]^dim")
+        .opt("density", "", "sample states from a data density (rings, pinwheel, ...)")
+        .opt("eval-every", "100", "validation cadence (steps)")
+        .opt("patience", "6", "early stop after this many flat evaluations")
+        .opt("stop-at", "0", "stop once the one-step improvement factor reaches this")
+        .opt("out", "artifacts-trained", "artifact directory to write")
+        .opt("task", "", "exported task name (default: the field name)")
+        .opt("export-batch", "16", "batch size stamped into the exported manifest")
+        .opt("matmul-threads", "0", "dedicated row-block matmul pool size (0 = off)")
+        .flag("bench", "write BENCH_train.json (path override: BENCH_JSON env)")
+        .flag("quiet", "suppress per-evaluation loss lines")
+        .parse_env();
+
+    let mm = parsed.get_usize("matmul-threads");
+    if mm > 0 {
+        tensor::set_matmul_pool(Arc::new(ThreadPool::new(mm)));
+        println!("matmul pool: {mm} workers");
+    }
+
+    let field_name = parsed.get("field");
+    let field = match load_field(&parsed.get("weights"), &field_name, &parsed) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    let span = match parse_span(&parsed.get("span")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let hidden = match parse_usize_list(&parsed.get("hidden")) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let fine_tol = parsed.get_f64("fine-tol") as f32;
+    let density = parsed.get("density");
+    let boxr = parsed.get_f64("box") as f32;
+    let cfg = TrainConfig {
+        solver: parsed.get("solver"),
+        hidden,
+        steps: parsed.get_usize("steps"),
+        batch: parsed.get_usize("batch"),
+        lr: parsed.get_f64("lr") as f32,
+        warmup: parsed.get_usize("warmup"),
+        seed: parsed.get_usize("seed") as u64,
+        s_span: span,
+        k: parsed.get_usize("k"),
+        fine: if fine_tol > 0.0 {
+            FineRef::Dopri5Tol(fine_tol)
+        } else {
+            FineRef::Rk4Substeps(parsed.get_usize("substeps"))
+        },
+        sampler: if density.is_empty() {
+            StateSampler::UniformBox {
+                lo: -boxr,
+                hi: boxr,
+                dim: field.state_dim(),
+            }
+        } else {
+            StateSampler::Density(density)
+        },
+        eval_every: parsed.get_usize("eval-every"),
+        patience: parsed.get_usize("patience"),
+        stop_at_improvement: parsed.get_f64("stop-at") as f32,
+        log: !parsed.get_flag("quiet"),
+        ..TrainConfig::default()
+    };
+    // default task name: the analytic field's name, or for --weights the
+    // source file's stem + "_retrained" (NOT the unrelated --field default,
+    // and never the original task name — merging into the source artifacts
+    // dir must not silently replace the original entry)
+    let task = if !parsed.get("task").is_empty() {
+        parsed.get("task")
+    } else if !parsed.get("weights").is_empty() {
+        let stem = Path::new(&parsed.get("weights"))
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("weights")
+            .to_string();
+        format!("{stem}_retrained")
+    } else {
+        field_name
+    };
+
+    if let Err(e) = run(
+        &field,
+        &cfg,
+        &task,
+        Path::new(&parsed.get("out")),
+        parsed.get_usize("export-batch"),
+        parsed.get_flag("bench"),
+    ) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(
+    field: &FieldNet,
+    cfg: &TrainConfig,
+    task: &str,
+    out: &Path,
+    export_batch: usize,
+    bench: bool,
+) -> Result<()> {
+    println!(
+        "training g_ω: base {} K={} over [{}, {}], {} max steps, batch {}",
+        cfg.solver, cfg.k, cfg.s_span.0, cfg.s_span.1, cfg.steps, cfg.batch
+    );
+    let (g, report) = train_hypersolver(field, cfg)?;
+    println!(
+        "\ntrained in {:.2}s ({:.0} steps/s, {} steps): val loss {:.6}",
+        report.wall_secs, report.steps_per_sec, report.steps_run, report.best_val_loss
+    );
+    println!(
+        "held-out one-step residual: base {:.3e} → hyper {:.3e} ({:.1}× better)",
+        report.err_base, report.err_hyper, report.improvement
+    );
+
+    let weights_path = export_trained(out, task, field, &g, cfg, &report, export_batch)?;
+    println!("wrote {} + {}/manifest.json", weights_path.display(), out.display());
+
+    // self-verify the loop: reload through the manifest, execute every
+    // variant through the native backend, and require the hypersolved
+    // variant to beat the plain base solver against the served dopri5
+    // reference — the same criterion tests/train_e2e.rs pins
+    let (d_hyper, d_plain) = serve_check(out, task, cfg, export_batch)?;
+    println!(
+        "serve check: ‖hyper − dopri5‖ = {d_hyper:.4}, ‖plain − dopri5‖ = {d_plain:.4}"
+    );
+
+    if bench {
+        let doc = json::obj(vec![
+            ("bench", json::s("hypertrain")),
+            ("task", json::s(task)),
+            ("solver", json::s(&cfg.solver)),
+            ("k", json::num(cfg.k as f64)),
+            ("steps_run", json::num(report.steps_run as f64)),
+            ("final_loss", json::num(report.final_loss as f64)),
+            ("best_val_loss", json::num(report.best_val_loss as f64)),
+            ("err_base", json::num(report.err_base as f64)),
+            ("err_hyper", json::num(report.err_hyper as f64)),
+            (
+                "residual_improvement_vs_base",
+                json::num(report.improvement as f64),
+            ),
+            ("wall_secs", json::num(report.wall_secs)),
+            ("steps_per_sec", json::num(report.steps_per_sec)),
+            ("serve_dist_hyper", json::num(d_hyper as f64)),
+            ("serve_dist_plain", json::num(d_plain as f64)),
+            (
+                "history",
+                Value::Arr(
+                    report
+                        .history
+                        .iter()
+                        .map(|(s, l)| {
+                            Value::Arr(vec![json::num(*s as f64), json::num(*l as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_train.json".into());
+        std::fs::write(&path, json::to_string(&doc))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn load_field(weights: &str, field: &str, parsed: &hypersolvers::util::cli::Parsed) -> Result<FieldNet> {
+    if !weights.is_empty() {
+        let model = CnfModel::load(Path::new(weights))?;
+        return Ok(model.field);
+    }
+    let f = match field {
+        "vdp" | "vanderpol" => AnalyticField::VanDerPol {
+            mu: parsed.get_f64("mu") as f32,
+        },
+        "rotation" => AnalyticField::Rotation {
+            omega: parsed.get_f64("omega") as f32,
+        },
+        "decay" => AnalyticField::Decay {
+            lambda: parsed.get_f64("lambda") as f32,
+        },
+        other => {
+            return Err(hypersolvers::Error::Other(format!(
+                "unknown field {other:?} (vdp | rotation | decay, or --weights)"
+            )))
+        }
+    };
+    Ok(FieldNet::Analytic(f))
+}
+
+fn parse_span(s: &str) -> Result<(f32, f32)> {
+    let parts: std::result::Result<Vec<f32>, _> =
+        s.split(',').map(|x| x.trim().parse::<f32>()).collect();
+    match parts.as_deref() {
+        Ok([a, b]) => Ok((*a, *b)),
+        _ => Err(hypersolvers::Error::Other(format!(
+            "--span expects two comma-separated numbers (s0,s1), got {s:?}"
+        ))),
+    }
+}
+
+/// Comma-separated widths; an empty string means no hidden layers (a
+/// purely linear g_ω), but any unparsable token is an error — silently
+/// dropping it would train a different architecture than asked for.
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|x| {
+            x.trim().parse::<usize>().map_err(|_| {
+                hypersolvers::Error::Other(format!(
+                    "--hidden expects comma-separated integers, got {x:?} in {s:?}"
+                ))
+            })
+        })
+        .collect()
+}

@@ -30,6 +30,12 @@
 //! workspace per (task, variant) queue — zero steady-state heap traffic in
 //! the solver loop (see rust/README.md §"The workspace hot path").
 //!
+//! The [`train`] module closes the paper's loop *inside* the repo: it fits
+//! hypersolver nets by residual regression (hand-rolled reverse-mode
+//! gradients + Adam over the same `_ws` kernels that serve), and exports
+//! weights the native backend loads unchanged — see the `hypertrain`
+//! binary and rust/README.md §"Training hypersolvers in-repo".
+//!
 //! The [`util`] module contains substrates this offline environment forced
 //! us to build from scratch: PRNG, JSON codec, CLI parsing, thread pool,
 //! a bench harness (`benchkit`) and a property-test harness (`propkit`).
@@ -42,6 +48,7 @@ pub mod ode;
 pub mod runtime;
 pub mod solvers;
 pub mod tensor;
+pub mod train;
 pub mod util;
 
 /// Crate-wide error type (hand-rolled Display/Error impls — proc-macro

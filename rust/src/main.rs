@@ -26,6 +26,11 @@ fn main() {
         .opt("policy", "macs", "variant cost axis: macs | nfe")
         .opt("backend", "pjrt", "execution backend: pjrt | native")
         .opt("workers", "0", "dispatch workers (0 = auto)")
+        .opt(
+            "matmul-threads",
+            "0",
+            "dedicated row-block matmul pool for large gemms (0 = off)",
+        )
         .opt("task", "", "task for `infer`")
         .opt("budget", "0.05", "MAPE budget for `infer`")
         .opt("input", "", "comma-separated f32 sample for `infer`")
@@ -37,6 +42,18 @@ fn main() {
         .map(String::as_str)
         .unwrap_or("serve")
         .to_string();
+
+    // Optional dedicated pool for row-block-parallel gemms (bit-identical
+    // results; see tensor::set_matmul_pool). Off by default: the small CNF
+    // shapes never clear the size threshold, but the image-task convs and
+    // hypertrain's wide hidden layers do.
+    let matmul_threads = parsed.get_usize("matmul-threads");
+    if matmul_threads > 0 {
+        hypersolvers::tensor::set_matmul_pool(Arc::new(
+            hypersolvers::util::threadpool::ThreadPool::new(matmul_threads),
+        ));
+        eprintln!("matmul pool: {matmul_threads} workers");
+    }
 
     let backend = match BackendKind::from_name(&parsed.get("backend")) {
         Ok(b) => b,

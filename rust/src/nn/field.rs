@@ -8,7 +8,7 @@ use crate::nn::layers::{Conv2d, Mlp, PRelu};
 use crate::ode::VectorField;
 use crate::solvers::HyperNet;
 use crate::tensor::{Tensor, Workspace};
-use crate::util::json::Value;
+use crate::util::json::{self, Value};
 use crate::{Error, Result};
 
 /// Depth (time) feature modes — must match `fields.time_features`.
@@ -26,6 +26,14 @@ impl TimeMode {
             "concat" => Ok(TimeMode::Concat),
             "fourier3" => Ok(TimeMode::Fourier3),
             _ => Err(Error::Json(format!("unknown time mode {name:?}"))),
+        }
+    }
+
+    /// The name [`from_name`](Self::from_name) parses.
+    pub fn name(self) -> &'static str {
+        match self {
+            TimeMode::Concat => "concat",
+            TimeMode::Fourier3 => "fourier3",
         }
     }
 
@@ -58,6 +66,72 @@ impl TimeMode {
     }
 }
 
+/// Assemble the [`MlpField`] input rows `[z, timefeat(s)]` into `x`
+/// (B, d + mode.dim()), fully overwritten. The single definition of the
+/// field feature layout: `MlpField::eval_into` (serving) and `train::grad`
+/// (training) both call this, so the two sides cannot drift apart.
+pub fn field_input_into(mode: TimeMode, s: f32, z: &Tensor, x: &mut Tensor) -> Result<()> {
+    let (b, d) = match z.shape() {
+        [b, d] => (*b, *d),
+        sh => return Err(Error::Shape(format!("field input state {sh:?}"))),
+    };
+    let fdim = mode.dim();
+    let w = d + fdim;
+    if x.shape() != [b, w] {
+        return Err(Error::Shape(format!(
+            "field_input_into out shape {:?}, want {:?}",
+            x.shape(),
+            [b, w]
+        )));
+    }
+    let mut feats = [0.0f32; 6]; // max dim() across modes
+    mode.features_into(s, &mut feats[..fdim]);
+    let xd = x.data_mut();
+    let zd = z.data();
+    for i in 0..b {
+        xd[i * w..i * w + d].copy_from_slice(&zd[i * d..(i + 1) * d]);
+        xd[i * w + d..(i + 1) * w].copy_from_slice(&feats[..fdim]);
+    }
+    Ok(())
+}
+
+/// Assemble the [`HyperMlp`] input rows `[z, dz, eps, s]` into `x`
+/// (B, 2d + 2), fully overwritten. Like [`field_input_into`], this is the
+/// single definition of the hyper feature layout, shared by
+/// `HyperMlp::eval_into` and the trainer.
+pub fn hyper_input_into(
+    eps: f32,
+    s: f32,
+    z: &Tensor,
+    dz: &Tensor,
+    x: &mut Tensor,
+) -> Result<()> {
+    let (b, d) = match z.shape() {
+        [b, d] => (*b, *d),
+        sh => return Err(Error::Shape(format!("hyper input state {sh:?}"))),
+    };
+    if dz.shape() != z.shape() {
+        return Err(Error::Shape("hyper input dz shape".into()));
+    }
+    let w = 2 * d + 2;
+    if x.shape() != [b, w] {
+        return Err(Error::Shape(format!(
+            "hyper_input_into out shape {:?}, want {:?}",
+            x.shape(),
+            [b, w]
+        )));
+    }
+    let xd = x.data_mut();
+    let (zd, dzd) = (z.data(), dz.data());
+    for i in 0..b {
+        xd[i * w..i * w + d].copy_from_slice(&zd[i * d..(i + 1) * d]);
+        xd[i * w + d..i * w + 2 * d].copy_from_slice(&dzd[i * d..(i + 1) * d]);
+        xd[i * w + 2 * d] = eps;
+        xd[i * w + 2 * d + 1] = s;
+    }
+    Ok(())
+}
+
 /// f(s, z) = MLP([z, timefeat(s)]) on (B, D) states.
 #[derive(Clone, Debug)]
 pub struct MlpField {
@@ -81,6 +155,15 @@ impl MlpField {
     pub fn state_dim(&self) -> usize {
         self.mlp.layers.last().unwrap().out_dim()
     }
+
+    /// Export as the weights-JSON object [`from_json`](Self::from_json)
+    /// parses.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("time_mode", json::s(self.time_mode.name())),
+            ("layers", self.mlp.to_json()),
+        ])
+    }
 }
 
 impl VectorField for MlpField {
@@ -95,19 +178,8 @@ impl VectorField for MlpField {
 
     fn eval_into(&self, s: f32, z: &Tensor, out: &mut Tensor, ws: &mut Workspace) {
         let (b, d) = (z.shape()[0], z.shape()[1]);
-        let fdim = self.time_mode.dim();
-        let mut feats = [0.0f32; 6]; // max dim() across modes
-        self.time_mode.features_into(s, &mut feats[..fdim]);
-        let w = d + fdim;
-        let mut x = ws.take_tensor(&[b, w]);
-        {
-            let xd = x.data_mut();
-            let zd = z.data();
-            for i in 0..b {
-                xd[i * w..i * w + d].copy_from_slice(&zd[i * d..(i + 1) * d]);
-                xd[i * w + d..(i + 1) * w].copy_from_slice(&feats[..fdim]);
-            }
-        }
+        let mut x = ws.take_tensor(&[b, d + self.time_mode.dim()]);
+        field_input_into(self.time_mode, s, z, &mut x).expect("field input assembly");
         if self.mlp.forward_into(&x, out, ws).is_err() {
             // misbehaving export (e.g. final out_dim != state dim): hand
             // the pure result through so the solver surfaces Err(Shape),
@@ -204,6 +276,27 @@ impl HyperMlp {
             mlp: Mlp::from_json(v.req("layers")?)?,
         })
     }
+
+    /// Export as the weights-JSON object [`from_json`](Self::from_json)
+    /// parses — what `train::export_trained` writes.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![("layers", self.mlp.to_json())])
+    }
+
+    /// Total trainable scalars (delegates to the [`Mlp`] flat view).
+    pub fn param_count(&self) -> usize {
+        self.mlp.param_count()
+    }
+
+    /// Append every parameter to `out` in flat-view order.
+    pub fn write_params(&self, out: &mut Vec<f32>) {
+        self.mlp.write_params(out)
+    }
+
+    /// Overwrite all parameters from a flat view; returns scalars consumed.
+    pub fn read_params(&mut self, src: &[f32]) -> usize {
+        self.mlp.read_params(src)
+    }
 }
 
 impl HyperNet for HyperMlp {
@@ -225,18 +318,8 @@ impl HyperNet for HyperMlp {
         ws: &mut Workspace,
     ) {
         let (b, d) = (z.shape()[0], z.shape()[1]);
-        let w = 2 * d + 2;
-        let mut x = ws.take_tensor(&[b, w]);
-        {
-            let xd = x.data_mut();
-            let (zd, dzd) = (z.data(), dz.data());
-            for i in 0..b {
-                xd[i * w..i * w + d].copy_from_slice(&zd[i * d..(i + 1) * d]);
-                xd[i * w + d..i * w + 2 * d].copy_from_slice(&dzd[i * d..(i + 1) * d]);
-                xd[i * w + 2 * d] = eps;
-                xd[i * w + 2 * d + 1] = s;
-            }
-        }
+        let mut x = ws.take_tensor(&[b, 2 * d + 2]);
+        hyper_input_into(eps, s, z, dz, &mut x).expect("hyper input assembly");
         if self.mlp.forward_into(&x, out, ws).is_err() {
             // wrong hyper out_dim: pure result through → solver Err(Shape)
             *out = self.mlp.forward(&x).expect("hyper mlp");

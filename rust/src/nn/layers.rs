@@ -6,7 +6,7 @@
 //! bit-identical values.
 
 use crate::tensor::{Tensor, Workspace};
-use crate::util::json::Value;
+use crate::util::json::{self, Value};
 use crate::{Error, Result};
 
 /// Activation kinds matching `compile/kernels/ref.py::act`.
@@ -26,6 +26,43 @@ impl Act {
             "relu" => Ok(Act::Relu),
             "softplus" => Ok(Act::Softplus),
             _ => Err(Error::Json(format!("unknown activation {name:?}"))),
+        }
+    }
+
+    /// The name [`from_name`](Self::from_name) parses — the serialization
+    /// round trip.
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::Id => "id",
+            Act::Tanh => "tanh",
+            Act::Relu => "relu",
+            Act::Softplus => "softplus",
+        }
+    }
+
+    /// d act/dx at pre-activation `pre`, with `post = act(pre)` supplied so
+    /// tanh can use the cheaper 1 − y² form. Backs the reverse-mode passes
+    /// in `train::grad` (finite-difference-checked there).
+    pub fn grad_scalar(self, pre: f32, post: f32) -> f32 {
+        match self {
+            Act::Id => 1.0,
+            Act::Tanh => 1.0 - post * post,
+            Act::Relu => {
+                if pre > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            // σ(x), numerically stable on both tails
+            Act::Softplus => {
+                if pre >= 0.0 {
+                    1.0 / (1.0 + (-pre).exp())
+                } else {
+                    let e = pre.exp();
+                    e / (1.0 + e)
+                }
+            }
         }
     }
 
@@ -113,6 +150,51 @@ impl Linear {
     pub fn macs(&self) -> u64 {
         (self.in_dim() * self.out_dim()) as u64
     }
+
+    // -- trainable-parameter flat view (w row-major, then b) ---------------
+
+    /// Number of trainable scalars.
+    pub fn param_count(&self) -> usize {
+        self.w.numel() + self.b.len()
+    }
+
+    /// Append every parameter to `out` in flat-view order.
+    pub fn write_params(&self, out: &mut Vec<f32>) {
+        out.extend_from_slice(self.w.data());
+        out.extend_from_slice(&self.b);
+    }
+
+    /// Overwrite parameters from the head of a flat view; returns the
+    /// number of scalars consumed. Panics if `src` is shorter than
+    /// [`param_count`](Self::param_count) (the optimizer sizes its buffers
+    /// from the same count, so a mismatch is a caller bug).
+    pub fn read_params(&mut self, src: &[f32]) -> usize {
+        let nw = self.w.numel();
+        let nb = self.b.len();
+        self.w.data_mut().copy_from_slice(&src[..nw]);
+        self.b.copy_from_slice(&src[nw..nw + nb]);
+        nw + nb
+    }
+
+    /// Export as the weights-JSON object [`from_json`](Self::from_json)
+    /// parses (nested `w` rows, `b`, activation name).
+    pub fn to_json(&self) -> Value {
+        let (din, dout) = (self.in_dim(), self.out_dim());
+        let rows = (0..din)
+            .map(|i| {
+                Value::Arr(
+                    (0..dout)
+                        .map(|j| Value::Num(self.w.data()[i * dout + j] as f64))
+                        .collect(),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("w", Value::Arr(rows)),
+            ("b", json::arr_f32(&self.b)),
+            ("act", json::s(self.act.name())),
+        ])
+    }
 }
 
 /// 2-D conv, NCHW/OIHW, stride 1, SAME padding (the only conv exported).
@@ -149,6 +231,27 @@ impl Conv2d {
     pub fn macs(&self, hw: usize) -> u64 {
         let s = self.w.shape();
         (s[0] * s[1] * s[2] * s[3] * hw * hw) as u64
+    }
+
+    /// Number of trainable scalars (w then b — the flat-view order).
+    pub fn param_count(&self) -> usize {
+        self.w.numel() + self.b.len()
+    }
+
+    /// Append every parameter to `out` in flat-view order.
+    pub fn write_params(&self, out: &mut Vec<f32>) {
+        out.extend_from_slice(self.w.data());
+        out.extend_from_slice(&self.b);
+    }
+
+    /// Overwrite parameters from the head of a flat view; returns scalars
+    /// consumed (see [`Linear::read_params`] for the length contract).
+    pub fn read_params(&mut self, src: &[f32]) -> usize {
+        let nw = self.w.numel();
+        let nb = self.b.len();
+        self.w.data_mut().copy_from_slice(&src[..nw]);
+        self.b.copy_from_slice(&src[nw..nw + nb]);
+        nw + nb
     }
 }
 
@@ -192,6 +295,24 @@ impl PRelu {
             }
         }
         Ok(())
+    }
+
+    /// Number of trainable scalars (the per-channel slopes).
+    pub fn param_count(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// Append every parameter to `out`.
+    pub fn write_params(&self, out: &mut Vec<f32>) {
+        out.extend_from_slice(&self.alpha);
+    }
+
+    /// Overwrite parameters from the head of a flat view; returns scalars
+    /// consumed.
+    pub fn read_params(&mut self, src: &[f32]) -> usize {
+        let n = self.alpha.len();
+        self.alpha.copy_from_slice(&src[..n]);
+        n
     }
 }
 
@@ -256,6 +377,35 @@ impl Mlp {
 
     pub fn macs(&self) -> u64 {
         self.layers.iter().map(Linear::macs).sum()
+    }
+
+    /// Total trainable scalars across all layers.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(Linear::param_count).sum()
+    }
+
+    /// Append every parameter to `out`, layer by layer (each layer in
+    /// [`Linear::write_params`] order) — the canonical flat-view layout the
+    /// trainer's optimizer and `train::grad::MlpGrads::write_flat` share.
+    pub fn write_params(&self, out: &mut Vec<f32>) {
+        for l in &self.layers {
+            l.write_params(out);
+        }
+    }
+
+    /// Overwrite all parameters from a flat view; returns scalars consumed.
+    pub fn read_params(&mut self, src: &[f32]) -> usize {
+        let mut off = 0;
+        for l in &mut self.layers {
+            off += l.read_params(&src[off..]);
+        }
+        off
+    }
+
+    /// Export as the weights-JSON array [`from_json`](Self::from_json)
+    /// parses.
+    pub fn to_json(&self) -> Value {
+        Value::Arr(self.layers.iter().map(Linear::to_json).collect())
     }
 }
 
@@ -350,6 +500,67 @@ mod tests {
         let mut ip = x.clone();
         p.forward_inplace(&mut ip).unwrap();
         assert_eq!(ip.data(), pure.data());
+    }
+
+    #[test]
+    fn act_grad_matches_finite_difference() {
+        for act in [Act::Id, Act::Tanh, Act::Relu, Act::Softplus] {
+            for &x in &[-3.0f32, -0.7, 0.4, 2.5, 15.0] {
+                let h = 1e-3f32;
+                let fd =
+                    (act.apply_scalar(x + h) - act.apply_scalar(x - h)) / (2.0 * h);
+                let an = act.grad_scalar(x, act.apply_scalar(x));
+                assert!(
+                    (an - fd).abs() < 1e-3,
+                    "{:?} at {x}: analytic {an} vs fd {fd}",
+                    act
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_json_roundtrip_preserves_forward() {
+        let v = json::parse(
+            r#"[{"w":[[0.5,-1.25],[2.0,0.125]],"b":[0.1,-0.2],"act":"tanh"},
+                {"w":[[1.5],[-0.75]],"b":[0.25],"act":"softplus"}]"#,
+        )
+        .unwrap();
+        let mlp = Mlp::from_json(&v).unwrap();
+        let back = Mlp::from_json(&json::parse(&json::to_string(&mlp.to_json())).unwrap())
+            .unwrap();
+        let x = Tensor::new(&[2, 2], vec![0.3, -1.1, 2.0, 0.4]).unwrap();
+        assert_eq!(
+            mlp.forward(&x).unwrap().data(),
+            back.forward(&x).unwrap().data(),
+            "serialization round trip must be bit-exact on f32 weights"
+        );
+    }
+
+    #[test]
+    fn flat_param_views_roundtrip() {
+        let v = json::parse(
+            r#"[{"w":[[1,2],[3,4]],"b":[5,6],"act":"id"},
+                {"w":[[7],[8]],"b":[9],"act":"relu"}]"#,
+        )
+        .unwrap();
+        let mut mlp = Mlp::from_json(&v).unwrap();
+        assert_eq!(mlp.param_count(), 9);
+        let mut flat = Vec::new();
+        mlp.write_params(&mut flat);
+        assert_eq!(flat, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        let doubled: Vec<f32> = flat.iter().map(|x| 2.0 * x).collect();
+        assert_eq!(mlp.read_params(&doubled), 9);
+        let mut back = Vec::new();
+        mlp.write_params(&mut back);
+        assert_eq!(back, doubled);
+
+        let mut p = PRelu {
+            alpha: vec![0.25, 0.5],
+        };
+        assert_eq!(p.param_count(), 2);
+        assert_eq!(p.read_params(&[1.0, 2.0, 99.0]), 2);
+        assert_eq!(p.alpha, vec![1.0, 2.0]);
     }
 
     #[test]

@@ -11,6 +11,8 @@ pub mod field;
 pub mod layers;
 pub mod model;
 
-pub use field::{ConvField, HyperCnn, HyperMlp, MlpField, TimeMode};
+pub use field::{
+    field_input_into, hyper_input_into, ConvField, HyperCnn, HyperMlp, MlpField, TimeMode,
+};
 pub use layers::{Act, Conv2d, Linear, Mlp, PRelu};
-pub use model::{CnfModel, ImageModel, TrackingModel};
+pub use model::{AnalyticField, CnfModel, FieldNet, ImageModel, TrackingModel};

@@ -4,27 +4,177 @@ use std::path::Path;
 
 use crate::nn::field::{ConvField, HyperCnn, HyperMlp, MlpField};
 use crate::nn::layers::{Conv2d, Linear};
-use crate::tensor::Tensor;
+use crate::ode::{Decay, Rotation, VanDerPol, VectorField};
+use crate::tensor::{Tensor, Workspace};
 use crate::util::json::{self, Value};
 use crate::{Error, Result};
+
+/// An analytic vector field referenced (rather than exported) from a
+/// weights file: `{"analytic": {"name": "vdp", "mu": 1.0}}`. The in-Rust
+/// trainer (`train`) writes these so a hypersolver fitted against e.g. Van
+/// der Pol round-trips through the same weights JSON + manifest the native
+/// serving backend loads — no MLP distillation of a closed-form field.
+#[derive(Clone, Copy, Debug)]
+pub enum AnalyticField {
+    VanDerPol { mu: f32 },
+    Rotation { omega: f32 },
+    Decay { lambda: f32 },
+}
+
+impl AnalyticField {
+    pub fn from_json(v: &Value) -> Result<AnalyticField> {
+        let name = v
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| Error::Json("analytic field name".into()))?;
+        let param = |key: &str, default: f32| {
+            v.get(key).and_then(Value::as_f32).unwrap_or(default)
+        };
+        match name {
+            "vdp" | "vanderpol" => Ok(AnalyticField::VanDerPol {
+                mu: param("mu", 1.0),
+            }),
+            "rotation" => Ok(AnalyticField::Rotation {
+                omega: param("omega", 1.0),
+            }),
+            "decay" => Ok(AnalyticField::Decay {
+                lambda: param("lambda", -1.0),
+            }),
+            other => Err(Error::Json(format!("unknown analytic field {other:?}"))),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match *self {
+            AnalyticField::VanDerPol { mu } => json::obj(vec![
+                ("name", json::s("vdp")),
+                ("mu", json::num(mu as f64)),
+            ]),
+            AnalyticField::Rotation { omega } => json::obj(vec![
+                ("name", json::s("rotation")),
+                ("omega", json::num(omega as f64)),
+            ]),
+            AnalyticField::Decay { lambda } => json::obj(vec![
+                ("name", json::s("decay")),
+                ("lambda", json::num(lambda as f64)),
+            ]),
+        }
+    }
+
+    /// State dimensionality the field integrates (all three are planar —
+    /// `Decay` acts elementwise but is exported as a 2-D task).
+    pub fn state_dim(&self) -> usize {
+        2
+    }
+}
+
+impl VectorField for AnalyticField {
+    fn eval(&self, s: f32, z: &Tensor) -> Tensor {
+        match *self {
+            AnalyticField::VanDerPol { mu } => VanDerPol { mu }.eval(s, z),
+            AnalyticField::Rotation { omega } => Rotation { omega }.eval(s, z),
+            AnalyticField::Decay { lambda } => Decay { lambda }.eval(s, z),
+        }
+    }
+
+    fn eval_into(&self, s: f32, z: &Tensor, out: &mut Tensor, ws: &mut Workspace) {
+        match *self {
+            AnalyticField::VanDerPol { mu } => VanDerPol { mu }.eval_into(s, z, out, ws),
+            AnalyticField::Rotation { omega } => {
+                Rotation { omega }.eval_into(s, z, out, ws)
+            }
+            AnalyticField::Decay { lambda } => Decay { lambda }.eval_into(s, z, out, ws),
+        }
+    }
+
+    fn macs(&self) -> u64 {
+        // a handful of flops per sample; report the dominant term
+        4
+    }
+}
+
+/// A CNF task's field as loaded from the weights file: an exported MLP
+/// (the python path) or an analytic reference (the in-Rust trainer's
+/// export). Both serve identically through [`VectorField`].
+#[derive(Clone, Debug)]
+pub enum FieldNet {
+    Mlp(MlpField),
+    Analytic(AnalyticField),
+}
+
+impl FieldNet {
+    pub fn from_json(v: &Value) -> Result<FieldNet> {
+        if let Some(a) = v.get("analytic") {
+            Ok(FieldNet::Analytic(AnalyticField::from_json(a)?))
+        } else {
+            Ok(FieldNet::Mlp(MlpField::from_json(v)?))
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            FieldNet::Mlp(f) => f.to_json(),
+            FieldNet::Analytic(a) => json::obj(vec![("analytic", a.to_json())]),
+        }
+    }
+
+    pub fn state_dim(&self) -> usize {
+        match self {
+            FieldNet::Mlp(f) => f.state_dim(),
+            FieldNet::Analytic(a) => a.state_dim(),
+        }
+    }
+}
+
+impl VectorField for FieldNet {
+    fn eval(&self, s: f32, z: &Tensor) -> Tensor {
+        match self {
+            FieldNet::Mlp(f) => f.eval(s, z),
+            FieldNet::Analytic(a) => a.eval(s, z),
+        }
+    }
+
+    fn eval_into(&self, s: f32, z: &Tensor, out: &mut Tensor, ws: &mut Workspace) {
+        match self {
+            FieldNet::Mlp(f) => f.eval_into(s, z, out, ws),
+            FieldNet::Analytic(a) => a.eval_into(s, z, out, ws),
+        }
+    }
+
+    fn macs(&self) -> u64 {
+        match self {
+            FieldNet::Mlp(f) => VectorField::macs(f),
+            FieldNet::Analytic(a) => VectorField::macs(a),
+        }
+    }
+}
 
 /// CNF model (field + HyperHeun net) — `weights/cnf_<density>.json`.
 #[derive(Clone, Debug)]
 pub struct CnfModel {
-    pub field: MlpField,
+    pub field: FieldNet,
     pub hyper: HyperMlp,
 }
 
 impl CnfModel {
     pub fn from_json(v: &Value) -> Result<CnfModel> {
         Ok(CnfModel {
-            field: MlpField::from_json(v.req("field")?)?,
+            field: FieldNet::from_json(v.req("field")?)?,
             hyper: HyperMlp::from_json(v.req("hyper")?)?,
         })
     }
 
     pub fn load(path: &Path) -> Result<CnfModel> {
         Self::from_json(&json::parse_file(path)?)
+    }
+
+    /// Export as the full weights file [`load`](Self::load) parses.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kind", json::s("cnf")),
+            ("field", self.field.to_json()),
+            ("hyper", self.hyper.to_json()),
+        ])
     }
 }
 
@@ -147,5 +297,45 @@ mod tests {
         let v = json::parse(r#"{"kind":"cnf"}"#).unwrap();
         let err = CnfModel::from_json(&v).unwrap_err();
         assert!(err.to_string().contains("field"));
+    }
+
+    #[test]
+    fn analytic_field_roundtrip_and_eval() {
+        let v = json::parse(r#"{"analytic": {"name": "vdp", "mu": 2.5}}"#).unwrap();
+        let f = FieldNet::from_json(&v).unwrap();
+        assert_eq!(f.state_dim(), 2);
+        let z = Tensor::new(&[1, 2], vec![0.5, -1.0]).unwrap();
+        let dz = f.eval(0.0, &z);
+        // vdp: dx = y, dy = mu (1 - x²) y - x
+        assert!((dz.data()[0] - (-1.0)).abs() < 1e-6);
+        assert!((dz.data()[1] - (2.5 * 0.75 * -1.0 - 0.5)).abs() < 1e-5);
+        // serialization round trip preserves the field exactly
+        let back =
+            FieldNet::from_json(&json::parse(&json::to_string(&f.to_json())).unwrap())
+                .unwrap();
+        assert_eq!(back.eval(0.0, &z).data(), dz.data());
+        // eval_into agrees with eval
+        let mut ws = Workspace::new();
+        let mut out = Tensor::full(&[1, 2], f32::NAN);
+        f.eval_into(0.0, &z, &mut out, &mut ws);
+        assert_eq!(out.data(), dz.data());
+    }
+
+    #[test]
+    fn unknown_analytic_field_rejected() {
+        let v = json::parse(r#"{"analytic": {"name": "lorenz"}}"#).unwrap();
+        assert!(FieldNet::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn mlp_weights_still_parse_as_field_net() {
+        let v = json::parse(
+            r#"{"time_mode":"concat",
+                "layers":[{"w":[[1,0],[0,1],[0,0]],"b":[0,0],"act":"id"}]}"#,
+        )
+        .unwrap();
+        let f = FieldNet::from_json(&v).unwrap();
+        assert!(matches!(f, FieldNet::Mlp(_)));
+        assert_eq!(f.state_dim(), 2);
     }
 }

@@ -43,6 +43,7 @@ impl<F: Fn(f32, &Tensor) -> Tensor> VectorField for F {
 }
 
 /// ż = λ z (exact: z0 e^{λ s}) — the classic stability/accuracy probe.
+#[derive(Clone, Copy, Debug)]
 pub struct Decay {
     pub lambda: f32,
 }
@@ -66,6 +67,7 @@ impl Decay {
 
 /// Planar rotation ż = A z with A = [[0, ω], [-ω, 0]]
 /// (exact: clockwise rotation by ωs). States are (B, 2).
+#[derive(Clone, Copy, Debug)]
 pub struct Rotation {
     pub omega: f32,
 }
@@ -118,6 +120,7 @@ impl Rotation {
 
 /// Van der Pol oscillator (µ controls stiffness) — the adversarial /
 /// stiffness discussion of paper §B.2 needs a controllably stiff field.
+#[derive(Clone, Copy, Debug)]
 pub struct VanDerPol {
     pub mu: f32,
 }
@@ -153,6 +156,7 @@ impl VectorField for VanDerPol {
 
 /// Time-dependent field ż = cos(2πs)·1 (exact: z0 + sin(2πs)/2π) — catches
 /// solvers that mishandle stage times c_i.
+#[derive(Clone, Copy, Debug)]
 pub struct TimeCosine;
 
 impl VectorField for TimeCosine {

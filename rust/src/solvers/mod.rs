@@ -32,5 +32,7 @@ pub use hyper::{
     hyper_step, odeint_hyper, odeint_hyper_traj, odeint_hyper_ws, residual, HyperNet,
 };
 pub use hyper_adaptive::{odeint_hyper_adaptive, odeint_hyper_adaptive_ws};
-pub use multistep::{odeint_ab, odeint_abm, odeint_abm_plain, AbOrder};
+pub use multistep::{
+    odeint_ab, odeint_ab_ws, odeint_abm, odeint_abm_plain, odeint_abm_ws, AbOrder,
+};
 pub use workspace::RkWorkspace;

@@ -7,13 +7,27 @@
 //! (ABM) regardless of order — a different point on the NFE/accuracy plane
 //! than the RK family, which the ablation bench contrasts against the
 //! hypersolved variants.
+//!
+//! Like the RK family, the stepping cores run on [`RkWorkspace`] buffers:
+//! the derivative history lives in a ring over the workspace's stage slots
+//! (slots 0..4 stay reserved for the RK4 bootstrap, the ring sits above
+//! them), so the stepping loop itself is allocation-free on a warm
+//! workspace. Each `_ws` call still constructs the RK4 bootstrap tableau
+//! (a dozen tiny vecs) — per *solve*, not per step. The original pure APIs
+//! wrap the `_ws` entry points with a throwaway workspace — same
+//! signatures, bit-identical results.
 
 use crate::ode::VectorField;
 use crate::solvers::butcher::Tableau;
-use crate::solvers::fixed::rk_step;
+use crate::solvers::fixed::rk_step_core;
 use crate::solvers::hyper::HyperNet;
+use crate::solvers::workspace::RkWorkspace;
 use crate::tensor::Tensor;
 use crate::Result;
+
+/// Stage slots used by the RK4 bootstrap; the multistep history ring
+/// occupies the slots above this.
+const BOOT_SLOTS: usize = 4;
 
 /// Adams-Bashforth order (2 or 3 supported).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,8 +53,66 @@ impl AbOrder {
     }
 }
 
+/// [`odeint_ab`] on a caller-held workspace: stepping is allocation-free
+/// once `ws` is warm (the per-solve `Tableau::rk4()` bootstrap
+/// construction is the remaining heap traffic). The derivative history is
+/// a ring over `ws.stages[4..4+p]`, rotated by index — no buffer
+/// shuffling, no reallocation. Returns a borrow of the terminal state
+/// inside `ws`.
+pub fn odeint_ab_ws<'a, F: VectorField + ?Sized>(
+    f: &F,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    steps: usize,
+    order: AbOrder,
+    ws: &'a mut RkWorkspace,
+) -> Result<&'a Tensor> {
+    let p = order.steps();
+    assert!(steps >= p, "need at least {p} steps");
+    let eps = (s_span.1 - s_span.0) / steps as f32;
+    let rk4 = Tableau::rk4();
+    let coeffs = order.coeffs();
+
+    ws.ensure(z0.shape(), BOOT_SLOTS + p);
+    ws.z_cur.copy_from(z0);
+    // ring position of the newest derivative; slot(j) holds the j-th newest
+    let mut head = 0usize;
+    let slot = |head: usize, j: usize| BOOT_SLOTS + (head + p - j) % p;
+    f.eval_into(s_span.0, &ws.z_cur, &mut ws.stages[BOOT_SLOTS], &mut ws.scratch);
+    let mut filled = 1usize;
+
+    for k in 0..steps {
+        let s = s_span.0 + k as f32 * eps;
+        let last = k + 1 == steps;
+        if filled < p {
+            // bootstrap with RK4 (standard practice); record the
+            // derivative at the new point into the next ring slot
+            rk_step_core(f, &rk4, s, eps, ws)?;
+            head = (head + 1) % p;
+            if !last {
+                f.eval_into(s + eps, &ws.z_cur, &mut ws.stages[slot(head, 0)], &mut ws.scratch);
+            }
+            filled += 1;
+            continue;
+        }
+        // AB step: z ← z + ε Σ_j c_j f_{newest−j}
+        ws.z_next.copy_from(&ws.z_cur);
+        for (j, c) in coeffs.iter().enumerate() {
+            ws.z_next.axpy(eps * c, &ws.stages[slot(head, j)])?;
+        }
+        ws.swap();
+        head = (head + 1) % p;
+        // the derivative at the terminal point is never consumed — skip it
+        if !last {
+            f.eval_into(s + eps, &ws.z_cur, &mut ws.stages[slot(head, 0)], &mut ws.scratch);
+        }
+    }
+    Ok(ws.state())
+}
+
 /// Fixed-step Adams-Bashforth integration. Bootstraps the multistep history
-/// with RK4 steps (standard practice), then runs at 1 NFE/step.
+/// with RK4 steps, then runs at 1 NFE/step. Thin wrapper over
+/// [`odeint_ab_ws`] with a throwaway workspace — bit-identical results.
 pub fn odeint_ab<F: VectorField + ?Sized>(
     f: &F,
     z0: &Tensor,
@@ -48,36 +120,72 @@ pub fn odeint_ab<F: VectorField + ?Sized>(
     steps: usize,
     order: AbOrder,
 ) -> Result<Tensor> {
-    assert!(steps >= order.steps(), "need at least {} steps", order.steps());
+    let mut ws = RkWorkspace::new();
+    Ok(odeint_ab_ws(f, z0, s_span, steps, order, &mut ws)?.clone())
+}
+
+// ABM history slots above the bootstrap range.
+const FP: usize = BOOT_SLOTS; // f at the previous point
+const FC: usize = BOOT_SLOTS + 1; // f at the current point
+const FPRED: usize = BOOT_SLOTS + 2; // f at the predicted point
+
+/// [`odeint_abm`] on a caller-held workspace (stepping allocation-free
+/// once warm; the per-solve bootstrap tableau construction is the
+/// remaining heap traffic). The predictor state lives in `ws.zi` (free
+/// outside `rk_stages_core`), the f history in dedicated stage slots
+/// swapped by index, and the optional hypersolver correction in
+/// `ws.corr`. Returns a borrow of the terminal state.
+pub fn odeint_abm_ws<'a, F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    z0: &Tensor,
+    s_span: (f32, f32),
+    steps: usize,
+    hyper: Option<&G>,
+    ws: &'a mut RkWorkspace,
+) -> Result<&'a Tensor> {
+    assert!(steps >= 2);
     let eps = (s_span.1 - s_span.0) / steps as f32;
     let rk4 = Tableau::rk4();
-    let coeffs = order.coeffs();
-    let p = order.steps();
 
-    // history[0] = f at current step, history[1] = one step back, ...
-    let mut z = z0.clone();
-    let mut history: Vec<Tensor> = vec![f.eval(s_span.0, &z)];
+    ws.ensure(z0.shape(), BOOT_SLOTS + 3);
+    if hyper.is_some() {
+        ws.ensure_corr();
+    }
+    ws.z_cur.copy_from(z0);
+    f.eval_into(s_span.0, &ws.z_cur, &mut ws.stages[FC], &mut ws.scratch);
+    let mut booted = false;
+
     for k in 0..steps {
         let s = s_span.0 + k as f32 * eps;
-        if history.len() < p {
-            // bootstrap with RK4; record the derivative at the new point.
-            // rk_step spins up a throwaway RkWorkspace, but this runs at
-            // most (p-1) times per solve — the steady-state AB loop below
-            // is plain axpy. Porting the history ring to a caller-held
-            // workspace is a ROADMAP open item.
-            z = rk_step(f, &rk4, s, &z, eps)?;
-            history.insert(0, f.eval(s + eps, &z));
+        if !booted {
+            // bootstrap one RK4 step; shift the history
+            rk_step_core(f, &rk4, s, eps, ws)?;
+            ws.stages.swap(FP, FC);
+            f.eval_into(s + eps, &ws.z_cur, &mut ws.stages[FC], &mut ws.scratch);
+            booted = true;
             continue;
         }
-        let mut step = z.clone();
-        for (c, fk) in coeffs.iter().zip(history.iter()) {
-            step.axpy(eps * c, fk)?;
+        // predict: AB2 (+ optional hypersolver correction, order 2)
+        ws.zi.copy_from(&ws.z_cur);
+        ws.zi.axpy(eps * 1.5, &ws.stages[FC])?;
+        ws.zi.axpy(-eps * 0.5, &ws.stages[FP])?;
+        if let Some(g) = hyper {
+            g.eval_into(eps, s, &ws.z_cur, &ws.stages[FC], &mut ws.corr, &mut ws.scratch);
+            ws.zi.axpy(eps.powi(3), &ws.corr)?;
         }
-        z = step;
-        history.insert(0, f.eval(s + eps, &z));
-        history.truncate(p);
+        // evaluate at the predicted point, correct with AM2 (trapezoid)
+        f.eval_into(s + eps, &ws.zi, &mut ws.stages[FPRED], &mut ws.scratch);
+        ws.z_next.copy_from(&ws.z_cur);
+        ws.z_next.axpy(eps * 0.5, &ws.stages[FC])?;
+        ws.z_next.axpy(eps * 0.5, &ws.stages[FPRED])?;
+        ws.swap();
+        ws.stages.swap(FP, FC);
+        // the derivative at the terminal point is never consumed — skip it
+        if k + 1 < steps {
+            f.eval_into(s + eps, &ws.z_cur, &mut ws.stages[FC], &mut ws.scratch);
+        }
     }
-    Ok(z)
+    Ok(ws.state())
 }
 
 /// Adams-Bashforth-Moulton predictor-corrector (PECE): AB2 predicts, the
@@ -85,6 +193,7 @@ pub fn odeint_ab<F: VectorField + ?Sized>(
 ///
 /// When `hyper` is given, its output corrects the *predictor* with the
 /// ε^{p+1}-scaled term of eq. (5) — the §6 predictor-corrector hypersolver.
+/// Thin wrapper over [`odeint_abm_ws`] — bit-identical results.
 pub fn odeint_abm<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     f: &F,
     z0: &Tensor,
@@ -92,43 +201,8 @@ pub fn odeint_abm<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
     steps: usize,
     hyper: Option<&G>,
 ) -> Result<Tensor> {
-    assert!(steps >= 2);
-    let eps = (s_span.1 - s_span.0) / steps as f32;
-    let rk4 = Tableau::rk4();
-
-    let mut z = z0.clone();
-    let mut f_prev: Option<Tensor> = None;
-    let mut f_curr = f.eval(s_span.0, &z);
-    for k in 0..steps {
-        let s = s_span.0 + k as f32 * eps;
-        match &f_prev {
-            None => {
-                // bootstrap one RK4 step
-                let z_next = rk_step(f, &rk4, s, &z, eps)?;
-                f_prev = Some(f_curr);
-                f_curr = f.eval(s + eps, &z_next);
-                z = z_next;
-            }
-            Some(fp) => {
-                // predict: AB2 (+ optional hypersolver correction, order 2)
-                let mut pred = z.clone();
-                pred.axpy(eps * 1.5, &f_curr)?;
-                pred.axpy(-eps * 0.5, fp)?;
-                if let Some(g) = hyper {
-                    let corr = g.eval(eps, s, &z, &f_curr);
-                    pred.axpy(eps.powi(3), &corr)?;
-                }
-                // evaluate at the predicted point, correct with AM2
-                let f_pred = f.eval(s + eps, &pred);
-                let mut corr = z.clone();
-                corr.axpy(eps * 0.5, &f_curr)?;
-                corr.axpy(eps * 0.5, &f_pred)?;
-                f_prev = Some(std::mem::replace(&mut f_curr, f.eval(s + eps, &corr)));
-                z = corr;
-            }
-        }
-    }
-    Ok(z)
+    let mut ws = RkWorkspace::new();
+    Ok(odeint_abm_ws(f, z0, s_span, steps, hyper, &mut ws)?.clone())
 }
 
 /// Convenience: ABM without a hypersolver.
@@ -212,6 +286,41 @@ mod tests {
         let e1 = err(&odeint_abm(&f, &z0, (0.0, 1.0), 16, Some(&g)).unwrap(), &exact);
         let e2 = err(&odeint_abm(&f, &z0, (0.0, 1.0), 32, Some(&g)).unwrap(), &exact);
         assert!((e1 / e2).log2() > 1.5, "order {}", (e1 / e2).log2());
+    }
+
+    #[test]
+    fn warm_workspace_reuse_is_bit_identical_to_pure() {
+        // one workspace across solvers, orders, and step counts: results
+        // must match the pure wrappers bit for bit, with buffers reused
+        let (f, z0, _) = setup();
+        let g = |_e: f32, _s: f32, z: &Tensor, _dz: &Tensor| z.scale(-0.5);
+        let mut ws = RkWorkspace::new();
+        for steps in [4usize, 9, 16] {
+            for order in [AbOrder::Two, AbOrder::Three] {
+                let pure = odeint_ab(&f, &z0, (0.0, 1.0), steps, order).unwrap();
+                let w = odeint_ab_ws(&f, &z0, (0.0, 1.0), steps, order, &mut ws)
+                    .unwrap()
+                    .clone();
+                assert_eq!(pure.data(), w.data(), "ab {order:?} K={steps}");
+            }
+            let pure = odeint_abm_plain(&f, &z0, (0.0, 1.0), steps).unwrap();
+            let w = odeint_abm_ws(
+                &f,
+                &z0,
+                (0.0, 1.0),
+                steps,
+                None::<&fn(f32, f32, &Tensor, &Tensor) -> Tensor>,
+                &mut ws,
+            )
+            .unwrap()
+            .clone();
+            assert_eq!(pure.data(), w.data(), "abm K={steps}");
+            let pure_h = odeint_abm(&f, &z0, (0.0, 1.0), steps, Some(&g)).unwrap();
+            let w_h = odeint_abm_ws(&f, &z0, (0.0, 1.0), steps, Some(&g), &mut ws)
+                .unwrap()
+                .clone();
+            assert_eq!(pure_h.data(), w_h.data(), "hyper abm K={steps}");
+        }
     }
 
     #[test]

@@ -353,6 +353,111 @@ impl Tensor {
         Ok(())
     }
 
+    /// `out = selfᵀ @ other` for `self` (m, k), `other` (m, n) → out (k, n)
+    /// — the dW term of the dense-layer backward pass (xᵀ · dy). The
+    /// transpose is materialized into a workspace buffer so the product
+    /// runs through [`gemm_into`], inheriting the same numerics (and the
+    /// optional row-block parallelism) as every other matmul in the crate.
+    pub fn matmul_tn_into(
+        &self,
+        other: &Tensor,
+        out: &mut Tensor,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let (m, k) = self.dims2()?;
+        let (m2, n) = other.dims2()?;
+        if m != m2 {
+            return Err(Error::Shape(format!("matmul_tn rows {m} vs {m2}")));
+        }
+        if out.shape != [k, n] {
+            return Err(Error::Shape(format!(
+                "matmul_tn_into out shape {:?}, want [{k}, {n}]",
+                out.shape
+            )));
+        }
+        let mut at = ws.take_buf(k * m);
+        for i in 0..m {
+            for j in 0..k {
+                at[j * m + i] = self.data[i * k + j];
+            }
+        }
+        gemm_into(&at, &other.data, k, m, n, &mut out.data);
+        ws.give_buf(at);
+        Ok(())
+    }
+
+    /// Pure wrapper over [`matmul_tn_into`](Self::matmul_tn_into).
+    pub fn matmul_tn(&self, other: &Tensor) -> Result<Tensor> {
+        let (_, k) = self.dims2()?;
+        let (_, n) = other.dims2()?;
+        let mut out = Tensor::zeros(&[k, n]);
+        let mut ws = Workspace::new();
+        self.matmul_tn_into(other, &mut out, &mut ws)?;
+        Ok(out)
+    }
+
+    /// `out = self @ otherᵀ` for `self` (m, k), `other` (n, k) → out (m, n)
+    /// — the dX term of the dense-layer backward pass (dy · Wᵀ). Like
+    /// [`matmul_tn_into`](Self::matmul_tn_into), funnels through
+    /// [`gemm_into`] via a materialized transpose.
+    pub fn matmul_nt_into(
+        &self,
+        other: &Tensor,
+        out: &mut Tensor,
+        ws: &mut Workspace,
+    ) -> Result<()> {
+        let (m, k) = self.dims2()?;
+        let (n, k2) = other.dims2()?;
+        if k != k2 {
+            return Err(Error::Shape(format!("matmul_nt inner dim {k} vs {k2}")));
+        }
+        if out.shape != [m, n] {
+            return Err(Error::Shape(format!(
+                "matmul_nt_into out shape {:?}, want [{m}, {n}]",
+                out.shape
+            )));
+        }
+        let mut bt = ws.take_buf(k * n);
+        for j in 0..n {
+            for i in 0..k {
+                bt[i * n + j] = other.data[j * k + i];
+            }
+        }
+        gemm_into(&self.data, &bt, m, k, n, &mut out.data);
+        ws.give_buf(bt);
+        Ok(())
+    }
+
+    /// Pure wrapper over [`matmul_nt_into`](Self::matmul_nt_into).
+    pub fn matmul_nt(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, _) = self.dims2()?;
+        let (n, _) = other.dims2()?;
+        let mut out = Tensor::zeros(&[m, n]);
+        let mut ws = Workspace::new();
+        self.matmul_nt_into(other, &mut out, &mut ws)?;
+        Ok(out)
+    }
+
+    /// Column sums of an (m, n) tensor into `out` (length n, fully
+    /// overwritten) — the bias gradient of the dense layer.
+    pub fn col_sums_into(&self, out: &mut [f32]) -> Result<()> {
+        let (m, n) = self.dims2()?;
+        if out.len() != n {
+            return Err(Error::Shape(format!(
+                "col_sums_into out len {} vs cols {n}",
+                out.len()
+            )));
+        }
+        out.fill(0.0);
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        Ok(())
+    }
+
     /// Add a length-n bias row to every row of an (m, n) tensor.
     pub fn add_bias_rows(&self, bias: &[f32]) -> Result<Tensor> {
         let mut out = self.clone();
@@ -904,6 +1009,63 @@ mod tests {
         let parallel = a.matmul(&b).unwrap();
         clear_matmul_pool();
         assert_eq!(serial.data(), parallel.data());
+    }
+
+    #[test]
+    fn transposed_matmuls_match_explicit_transpose() {
+        fn transpose(t: &Tensor) -> Tensor {
+            let (m, n) = (t.shape()[0], t.shape()[1]);
+            Tensor::from_fn(&[n, m], |i| {
+                let (r, c) = (i / m, i % m);
+                t.data()[c * n + r]
+            })
+        }
+        check("tn/nt == transpose + matmul", 40, |rng| {
+            let (m, k, n) = (
+                gen_range(rng, 1, 7),
+                gen_range(rng, 1, 7),
+                gen_range(rng, 1, 7),
+            );
+            let a = Tensor::new(&[m, k], gen_vec(rng, m * k, 1.0)).unwrap();
+            let b = Tensor::new(&[m, n], gen_vec(rng, m * n, 1.0)).unwrap();
+            let c = Tensor::new(&[n, k], gen_vec(rng, n * k, 1.0)).unwrap();
+            // tn: aᵀ b == transpose(a) @ b, bit-identical (same gemm)
+            let tn = a.matmul_tn(&b).unwrap();
+            let tn_ref = transpose(&a).matmul(&b).unwrap();
+            if tn.data() != tn_ref.data() {
+                return Err("matmul_tn diverged from transpose+matmul".into());
+            }
+            // nt: a cᵀ == a @ transpose(c)
+            let nt = a.matmul_nt(&c).unwrap();
+            let nt_ref = a.matmul(&transpose(&c)).unwrap();
+            if nt.data() != nt_ref.data() {
+                return Err("matmul_nt diverged from transpose+matmul".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transposed_matmuls_shape_checked_and_overwrite_stale() {
+        let a = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = Tensor::new(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let mut ws = Workspace::new();
+        let mut out = Tensor::full(&[3, 2], f32::NAN);
+        a.matmul_tn_into(&b, &mut out, &mut ws).unwrap();
+        assert!(out.data().iter().all(|v| v.is_finite()));
+        let mut bad = Tensor::zeros(&[2, 2]);
+        assert!(a.matmul_tn_into(&b, &mut bad, &mut ws).is_err());
+        assert!(b.matmul_nt_into(&a, &mut bad, &mut ws).is_err()); // inner 2 vs 3
+    }
+
+    #[test]
+    fn col_sums_known_values() {
+        let t = Tensor::new(&[2, 3], vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0]).unwrap();
+        let mut out = vec![f32::NAN; 3];
+        t.col_sums_into(&mut out).unwrap();
+        assert_eq!(out, vec![11.0, 22.0, 33.0]);
+        let mut short = vec![0.0; 2];
+        assert!(t.col_sums_into(&mut short).is_err());
     }
 
     #[test]

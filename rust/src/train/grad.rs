@@ -1,0 +1,453 @@
+//! Hand-rolled reverse-mode backward passes for the hypernet forward stack.
+//!
+//! Deliberately small: the trainer needs d(loss)/d(params) of an [`Mlp`]
+//! (the `HyperMlp` g_ω stack) plus the input-assembly adjoints — the hyper
+//! `[z, dz, eps, s]` concat and the [`TimeMode`] feature concat — and the
+//! [`PRelu`] channelwise backward for the conv hypernets. No tape, no
+//! graph: the forward pass records per-layer activations in a reusable
+//! [`MlpCache`], and the backward walks the layers in reverse with three
+//! kernels (activation grad, `matmul_tn`, `matmul_nt`).
+//!
+//! Every kernel writes into caller-held buffers, drawing scratch from a
+//! [`Workspace`], so a warm training step performs zero steady-state heap
+//! allocations — the same discipline as the solver hot path. Every
+//! backward is verified against central finite differences in
+//! `tests/train_grad_check.rs`.
+
+use crate::nn::{Act, Linear, Mlp, PRelu, TimeMode};
+use crate::tensor::{Tensor, Workspace};
+use crate::{Error, Result};
+
+/// Per-layer forward activations recorded for the backward pass: `xs[i]`
+/// is layer i's input (`xs[0]` the network input, `xs[L]` the output) and
+/// `pres[i]` its pre-activation. Buffers are sized lazily and reused
+/// across steps; a warm cache makes [`mlp_forward_cached`] allocation-free.
+#[derive(Debug, Default)]
+pub struct MlpCache {
+    xs: Vec<Tensor>,
+    pres: Vec<Tensor>,
+}
+
+impl MlpCache {
+    pub fn new() -> MlpCache {
+        MlpCache::default()
+    }
+
+    /// Size the cache for `mlp` at batch `b`. No-op (and allocation-free)
+    /// when already sized — the steady-state path.
+    fn ensure(&mut self, mlp: &Mlp, b: usize) {
+        let l = mlp.layers.len();
+        let sized = self.xs.len() == l + 1
+            && self.xs[0].shape() == [b, mlp.layers[0].in_dim()]
+            && mlp
+                .layers
+                .iter()
+                .enumerate()
+                .all(|(i, lr)| self.xs[i + 1].shape() == [b, lr.out_dim()]);
+        if sized {
+            return;
+        }
+        self.xs = std::iter::once(mlp.layers[0].in_dim())
+            .chain(mlp.layers.iter().map(Linear::out_dim))
+            .map(|d| Tensor::zeros(&[b, d]))
+            .collect();
+        self.pres = mlp
+            .layers
+            .iter()
+            .map(|lr| Tensor::zeros(&[b, lr.out_dim()]))
+            .collect();
+    }
+
+    /// The cached forward's output (valid after [`mlp_forward_cached`]).
+    pub fn output(&self) -> &Tensor {
+        self.xs.last().expect("forward before output")
+    }
+}
+
+/// Parameter gradients mirroring an [`Mlp`]'s layout (per-layer dW + db);
+/// [`write_flat`](Self::write_flat) matches `Mlp::write_params` order, so
+/// the optimizer's flat views line up by construction.
+#[derive(Debug, Default)]
+pub struct MlpGrads {
+    pub dw: Vec<Tensor>,
+    pub db: Vec<Vec<f32>>,
+}
+
+impl MlpGrads {
+    pub fn new() -> MlpGrads {
+        MlpGrads::default()
+    }
+
+    fn ensure(&mut self, mlp: &Mlp) {
+        let sized = self.dw.len() == mlp.layers.len()
+            && mlp
+                .layers
+                .iter()
+                .enumerate()
+                .all(|(i, l)| self.dw[i].shape() == l.w.shape());
+        if sized {
+            return;
+        }
+        self.dw = mlp
+            .layers
+            .iter()
+            .map(|l| Tensor::zeros(l.w.shape()))
+            .collect();
+        self.db = mlp.layers.iter().map(|l| vec![0.0; l.b.len()]).collect();
+    }
+
+    /// Append every gradient to `out` in `Mlp::write_params` order.
+    pub fn write_flat(&self, out: &mut Vec<f32>) {
+        for (dw, db) in self.dw.iter().zip(&self.db) {
+            out.extend_from_slice(dw.data());
+            out.extend_from_slice(db);
+        }
+    }
+}
+
+/// Forward pass recording per-layer activations. Bit-identical to
+/// `Mlp::forward` — same matmul/bias/activation kernels in the same order,
+/// only the intermediates are kept instead of discarded.
+pub fn mlp_forward_cached(mlp: &Mlp, x: &Tensor, cache: &mut MlpCache) -> Result<()> {
+    if mlp.layers.is_empty() {
+        return Err(Error::Shape("cannot train an empty mlp".into()));
+    }
+    let b = x.shape()[0];
+    if x.shape() != [b, mlp.layers[0].in_dim()] {
+        return Err(Error::Shape(format!(
+            "mlp_forward_cached input {:?}, layer 0 wants width {}",
+            x.shape(),
+            mlp.layers[0].in_dim()
+        )));
+    }
+    cache.ensure(mlp, b);
+    cache.xs[0].copy_from(x);
+    for (i, l) in mlp.layers.iter().enumerate() {
+        let (head, tail) = cache.xs.split_at_mut(i + 1);
+        let x_in = &head[i];
+        let x_out = &mut tail[0];
+        let pre = &mut cache.pres[i];
+        x_in.matmul_into(&l.w, pre)?;
+        pre.add_bias_rows_inplace(&l.b)?;
+        x_out.copy_from(pre);
+        l.act.apply_inplace(x_out);
+    }
+    Ok(())
+}
+
+/// `du *= act'(pre)` elementwise; `post = act(pre)` is supplied so tanh can
+/// use the 1 − y² form without recomputing the forward.
+pub fn act_backward_inplace(
+    act: Act,
+    pre: &Tensor,
+    post: &Tensor,
+    du: &mut Tensor,
+) -> Result<()> {
+    if pre.shape() != du.shape() || post.shape() != du.shape() {
+        return Err(Error::Shape(format!(
+            "act_backward shapes pre {:?} / post {:?} / du {:?}",
+            pre.shape(),
+            post.shape(),
+            du.shape()
+        )));
+    }
+    if act == Act::Id {
+        return Ok(());
+    }
+    let (p, y) = (pre.data(), post.data());
+    for (i, d) in du.data_mut().iter_mut().enumerate() {
+        *d *= act.grad_scalar(p[i], y[i]);
+    }
+    Ok(())
+}
+
+/// Reverse pass over a cached forward: given `dout = ∂L/∂y` at the output,
+/// overwrite `grads` with the parameter gradients and, when `dx` is
+/// `Some`, the input adjoint ∂L/∂x. Scratch comes from `ws`; a warm call
+/// allocates nothing.
+pub fn mlp_backward(
+    mlp: &Mlp,
+    cache: &MlpCache,
+    dout: &Tensor,
+    grads: &mut MlpGrads,
+    mut dx: Option<&mut Tensor>,
+    ws: &mut Workspace,
+) -> Result<()> {
+    let l = mlp.layers.len();
+    if cache.xs.len() != l + 1 {
+        return Err(Error::Shape("mlp_backward: cache does not match mlp".into()));
+    }
+    grads.ensure(mlp);
+    let b = cache.xs[0].shape()[0];
+    // adjoint of the current layer's output, walked backwards
+    let mut dcur = ws.take_tensor(dout.shape());
+    dcur.copy_from(dout);
+    for (i, layer) in mlp.layers.iter().enumerate().rev() {
+        act_backward_inplace(layer.act, &cache.pres[i], &cache.xs[i + 1], &mut dcur)?;
+        cache.xs[i].matmul_tn_into(&dcur, &mut grads.dw[i], ws)?;
+        dcur.col_sums_into(&mut grads.db[i])?;
+        if i > 0 {
+            let mut dprev = ws.take_tensor(&[b, layer.in_dim()]);
+            dcur.matmul_nt_into(&layer.w, &mut dprev, ws)?;
+            ws.give_tensor(dcur);
+            dcur = dprev;
+        } else if let Some(dx) = dx.as_deref_mut() {
+            dcur.matmul_nt_into(&layer.w, dx, ws)?;
+        }
+    }
+    ws.give_tensor(dcur);
+    Ok(())
+}
+
+/// Channelwise PReLU backward on NCHW tensors: `dy` is rewritten in place
+/// to `∂L/∂x = dy ⊙ (x ≥ 0 ? 1 : α_c)` and `dalpha` (length C, fully
+/// overwritten) collects `Σ_{x<0} dy · x`. Matches the strict `x < 0.0`
+/// branch of `PRelu::forward_inplace`.
+pub fn prelu_backward(
+    p: &PRelu,
+    x: &Tensor,
+    dy: &mut Tensor,
+    dalpha: &mut [f32],
+) -> Result<()> {
+    let (b, c, h, w) = match x.shape() {
+        [b, c, h, w] => (*b, *c, *h, *w),
+        s => return Err(Error::Shape(format!("prelu_backward input {s:?}"))),
+    };
+    if dy.shape() != x.shape() {
+        return Err(Error::Shape("prelu_backward dy shape".into()));
+    }
+    if c != p.alpha.len() || dalpha.len() != c {
+        return Err(Error::Shape("prelu_backward channel mismatch".into()));
+    }
+    dalpha.fill(0.0);
+    let plane = h * w;
+    let xd = x.data();
+    let dyd = dy.data_mut();
+    for bi in 0..b {
+        for ci in 0..c {
+            let a = p.alpha[ci];
+            let base = (bi * c + ci) * plane;
+            let mut da = 0.0f32;
+            for k in base..base + plane {
+                let xv = xd[k];
+                if xv < 0.0 {
+                    da += dyd[k] * xv;
+                    dyd[k] *= a;
+                }
+            }
+            dalpha[ci] += da;
+        }
+    }
+    Ok(())
+}
+
+// The input-assembly forward passes live in `nn::field` — ONE definition
+// of the feature layouts, called by both `HyperMlp::eval_into` /
+// `MlpField::eval_into` (serving) and the trainer, so the two sides cannot
+// drift apart. Re-exported here so the adjoints below sit next to their
+// forwards.
+pub use crate::nn::field::{field_input_into, hyper_input_into};
+
+/// Adjoint of [`hyper_input_into`]: scatter the input-row adjoint `dx`
+/// (B, 2d + 2) back into `dz_adj` / `ddz_adj` (B, d, fully overwritten).
+/// The eps/s columns are dropped — they are scalars broadcast per batch,
+/// data rather than parameters.
+pub fn hyper_input_backward(
+    dx: &Tensor,
+    dz_adj: &mut Tensor,
+    ddz_adj: &mut Tensor,
+) -> Result<()> {
+    let (b, d) = match dz_adj.shape() {
+        [b, d] => (*b, *d),
+        sh => return Err(Error::Shape(format!("hyper adjoint state {sh:?}"))),
+    };
+    let w = 2 * d + 2;
+    if dx.shape() != [b, w] || ddz_adj.shape() != [b, d] {
+        return Err(Error::Shape("hyper_input_backward shapes".into()));
+    }
+    let xd = dx.data();
+    {
+        let zd = dz_adj.data_mut();
+        for i in 0..b {
+            zd[i * d..(i + 1) * d].copy_from_slice(&xd[i * w..i * w + d]);
+        }
+    }
+    let dzd = ddz_adj.data_mut();
+    for i in 0..b {
+        dzd[i * d..(i + 1) * d].copy_from_slice(&xd[i * w + d..i * w + 2 * d]);
+    }
+    Ok(())
+}
+
+/// Adjoint of the [`TimeMode`] feature concat: copy the leading d columns
+/// of `dx` into `dz_adj` (fully overwritten), dropping the time-feature
+/// block (s is data, not a parameter).
+pub fn field_input_backward(mode: TimeMode, dx: &Tensor, dz_adj: &mut Tensor) -> Result<()> {
+    let (b, d) = match dz_adj.shape() {
+        [b, d] => (*b, *d),
+        sh => return Err(Error::Shape(format!("field adjoint state {sh:?}"))),
+    };
+    let w = d + mode.dim();
+    if dx.shape() != [b, w] {
+        return Err(Error::Shape(format!(
+            "field_input_backward dx {:?}, want {:?}",
+            dx.shape(),
+            [b, w]
+        )));
+    }
+    let xd = dx.data();
+    let zd = dz_adj.data_mut();
+    for i in 0..b {
+        zd[i * d..(i + 1) * d].copy_from_slice(&xd[i * w..i * w + d]);
+    }
+    Ok(())
+}
+
+/// Mean-squared-error loss L = mean((y − t)²) over all B·D entries,
+/// accumulated in f64; writes `∂L/∂y = 2 (y − t) / (B·D)` into `dy`.
+pub fn mse_loss_grad(y: &Tensor, target: &Tensor, dy: &mut Tensor) -> Result<f32> {
+    if y.shape() != target.shape() || dy.shape() != y.shape() {
+        return Err(Error::Shape(format!(
+            "mse shapes y {:?} / target {:?} / dy {:?}",
+            y.shape(),
+            target.shape(),
+            dy.shape()
+        )));
+    }
+    let n = y.numel() as f32;
+    let (yd, td) = (y.data(), target.data());
+    let dyd = dy.data_mut();
+    let mut acc = 0.0f64;
+    for i in 0..yd.len() {
+        let e = yd[i] - td[i];
+        acc += (e as f64) * (e as f64);
+        dyd[i] = 2.0 * e / n;
+    }
+    Ok((acc / n as f64) as f32)
+}
+
+/// [`mse_loss_grad`] without the gradient — validation-loss evaluation.
+pub fn mse_loss(y: &Tensor, target: &Tensor) -> Result<f32> {
+    if y.shape() != target.shape() {
+        return Err(Error::Shape(format!(
+            "mse shapes y {:?} / target {:?}",
+            y.shape(),
+            target.shape()
+        )));
+    }
+    let mut acc = 0.0f64;
+    for (&a, &b) in y.data().iter().zip(target.data()) {
+        let e = (a - b) as f64;
+        acc += e * e;
+    }
+    Ok((acc / y.numel() as f64) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tiny_mlp() -> Mlp {
+        Mlp::from_json(
+            &json::parse(
+                r#"[{"w":[[0.5,-0.25],[0.75,1.0]],"b":[0.1,-0.1],"act":"tanh"},
+                    {"w":[[1.5],[-0.5]],"b":[0.2],"act":"id"}]"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn cached_forward_matches_plain_forward() {
+        let mlp = tiny_mlp();
+        let x = Tensor::new(&[3, 2], vec![0.3, -1.0, 2.0, 0.1, -0.4, 0.9]).unwrap();
+        let pure = mlp.forward(&x).unwrap();
+        let mut cache = MlpCache::new();
+        mlp_forward_cached(&mlp, &x, &mut cache).unwrap();
+        assert_eq!(cache.output().data(), pure.data());
+        // warm second pass: same result, same buffers
+        let ptr = cache.output().data().as_ptr();
+        mlp_forward_cached(&mlp, &x, &mut cache).unwrap();
+        assert_eq!(cache.output().data(), pure.data());
+        assert_eq!(cache.output().data().as_ptr(), ptr, "cache reused");
+    }
+
+    #[test]
+    fn zero_dout_means_zero_grads() {
+        let mlp = tiny_mlp();
+        let x = Tensor::new(&[2, 2], vec![0.5, -0.5, 1.0, 0.25]).unwrap();
+        let mut cache = MlpCache::new();
+        mlp_forward_cached(&mlp, &x, &mut cache).unwrap();
+        let dout = Tensor::zeros(&[2, 1]);
+        let mut grads = MlpGrads::new();
+        let mut ws = Workspace::new();
+        let mut dx = Tensor::full(&[2, 2], f32::NAN);
+        mlp_backward(&mlp, &cache, &dout, &mut grads, Some(&mut dx), &mut ws).unwrap();
+        let mut flat = Vec::new();
+        grads.write_flat(&mut flat);
+        assert_eq!(flat.len(), mlp.param_count());
+        assert!(flat.iter().all(|&g| g == 0.0));
+        assert!(dx.data().iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn hyper_input_assembly_matches_eval_layout() {
+        // a weight that picks out each input column in turn shows the
+        // assembled layout is [z, dz, eps, s]
+        let z = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let dz = Tensor::new(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        let mut x = Tensor::full(&[2, 6], f32::NAN);
+        hyper_input_into(0.25, 0.75, &z, &dz, &mut x).unwrap();
+        assert_eq!(
+            x.data(),
+            &[1.0, 2.0, 5.0, 6.0, 0.25, 0.75, 3.0, 4.0, 7.0, 8.0, 0.25, 0.75]
+        );
+        // adjoint scatters the z / dz blocks back and drops eps / s
+        let dx = Tensor::from_fn(&[2, 6], |i| i as f32);
+        let mut dz_adj = Tensor::zeros(&[2, 2]);
+        let mut ddz_adj = Tensor::zeros(&[2, 2]);
+        hyper_input_backward(&dx, &mut dz_adj, &mut ddz_adj).unwrap();
+        assert_eq!(dz_adj.data(), &[0.0, 1.0, 6.0, 7.0]);
+        assert_eq!(ddz_adj.data(), &[2.0, 3.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn field_input_assembly_and_adjoint() {
+        let z = Tensor::new(&[1, 2], vec![3.0, -2.0]).unwrap();
+        let mut x = Tensor::full(&[1, 3], f32::NAN);
+        field_input_into(TimeMode::Concat, 0.5, &z, &mut x).unwrap();
+        assert_eq!(x.data(), &[3.0, -2.0, 0.5]);
+        let dx = Tensor::new(&[1, 3], vec![10.0, 20.0, 30.0]).unwrap();
+        let mut dz = Tensor::zeros(&[1, 2]);
+        field_input_backward(TimeMode::Concat, &dx, &mut dz).unwrap();
+        assert_eq!(dz.data(), &[10.0, 20.0]);
+    }
+
+    #[test]
+    fn mse_loss_and_grad_known_values() {
+        let y = Tensor::new(&[1, 2], vec![1.0, 3.0]).unwrap();
+        let t = Tensor::new(&[1, 2], vec![0.0, 1.0]).unwrap();
+        let mut dy = Tensor::zeros(&[1, 2]);
+        let loss = mse_loss_grad(&y, &t, &mut dy).unwrap();
+        assert!((loss - 2.5).abs() < 1e-6); // (1 + 4) / 2
+        assert_eq!(dy.data(), &[1.0, 2.0]); // 2e/n
+        assert!((mse_loss(&y, &t).unwrap() - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prelu_backward_known_values() {
+        let p = PRelu {
+            alpha: vec![0.5, 2.0],
+        };
+        let x = Tensor::new(&[1, 2, 1, 2], vec![-2.0, 3.0, -1.0, 4.0]).unwrap();
+        let mut dy = Tensor::new(&[1, 2, 1, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let mut dalpha = vec![f32::NAN; 2];
+        prelu_backward(&p, &x, &mut dy, &mut dalpha).unwrap();
+        // dx: negatives scaled by alpha_c, positives untouched
+        assert_eq!(dy.data(), &[0.5, 1.0, 2.0, 1.0]);
+        // dalpha: sum of dy·x over negative entries, per channel
+        assert_eq!(dalpha, vec![-2.0, -1.0]);
+    }
+}

@@ -1,0 +1,608 @@
+//! The residual-fitting training loop: minibatch Adam on g_ω with loss
+//! logging, early stopping, and export of the trained weights in the exact
+//! JSON + manifest format the native serving backend loads — so a freshly
+//! trained hypersolver is immediately servable by `hypersolverd
+//! --backend native --artifacts <out>`.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::nn::{Act, CnfModel, FieldNet, HyperMlp, Linear, Mlp};
+use crate::ode::VectorField;
+use crate::solvers::{dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, HyperNet, Tableau};
+use crate::tensor::{Tensor, Workspace};
+use crate::train::grad::{
+    hyper_input_into, mlp_backward, mlp_forward_cached, mse_loss, mse_loss_grad, MlpCache,
+    MlpGrads,
+};
+use crate::train::optim::{Adam, AdamCfg, CosineSchedule};
+use crate::train::residual::{
+    one_step_errors, FineRef, ResidualBatch, ResidualGen, StateSampler,
+};
+use crate::util::json::{self, Value};
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+/// Everything the trainer needs to know. Defaults are sized for the
+/// analytic 2-D fields (seconds of wall time); the CLI overrides from
+/// flags.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Base tableau name ("euler", "heun", "midpoint", ...).
+    pub solver: String,
+    /// Hidden widths of g_ω (tanh); the output layer is linear.
+    pub hidden: Vec<usize>,
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    /// Linear LR warmup steps (cosine decay after).
+    pub warmup: usize,
+    pub seed: u64,
+    /// Serving span; ε = (s₁ − s₀) / k.
+    pub s_span: (f32, f32),
+    /// Serving step count the net is trained for.
+    pub k: usize,
+    pub fine: FineRef,
+    pub sampler: StateSampler,
+    /// Validation cadence (steps).
+    pub eval_every: usize,
+    pub eval_batch: usize,
+    /// Early stop after this many evaluations without relative improvement
+    /// `min_rel_improve` on the validation loss.
+    pub patience: usize,
+    pub min_rel_improve: f32,
+    /// Stop as soon as the held-out one-step improvement factor reaches
+    /// this (0 disables) — bounds training time when the target is a
+    /// fixed acceptance bar rather than convergence.
+    pub stop_at_improvement: f32,
+    /// Print a loss line per evaluation.
+    pub log: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            solver: "euler".into(),
+            hidden: vec![32, 32],
+            steps: 2000,
+            batch: 128,
+            lr: 3e-3,
+            warmup: 50,
+            seed: 7,
+            s_span: (0.0, 1.0),
+            k: 8,
+            fine: FineRef::Rk4Substeps(8),
+            sampler: StateSampler::UniformBox {
+                lo: -2.0,
+                hi: 2.0,
+                dim: 2,
+            },
+            eval_every: 100,
+            eval_batch: 256,
+            patience: 6,
+            min_rel_improve: 5e-3,
+            stop_at_improvement: 0.0,
+            log: false,
+        }
+    }
+}
+
+/// What a training run produced, beyond the net itself.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub steps_run: usize,
+    /// Last minibatch loss.
+    pub final_loss: f32,
+    /// Best validation loss (the exported weights are this checkpoint).
+    pub best_val_loss: f32,
+    /// Held-out one-step error of the plain base solver / the hypersolved
+    /// step — the acceptance criterion's improvement factor.
+    pub improvement: f32,
+    pub err_base: f32,
+    pub err_hyper: f32,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+    /// (step, validation loss) pairs at each evaluation.
+    pub history: Vec<(usize, f32)>,
+}
+
+/// Initialize g_ω for `state_dim`-dimensional states: input `[z, dz, eps,
+/// s]` (2d + 2), tanh hidden layers, linear output scaled small so the
+/// hypersolved step starts indistinguishable from the base solver (the
+/// correction enters as ε^{p+1} g).
+pub fn init_hyper_mlp(state_dim: usize, hidden: &[usize], rng: &mut Rng) -> HyperMlp {
+    let mut dims = Vec::with_capacity(hidden.len() + 2);
+    dims.push(2 * state_dim + 2);
+    dims.extend_from_slice(hidden);
+    dims.push(state_dim);
+    let mut layers = Vec::with_capacity(dims.len() - 1);
+    for li in 0..dims.len() - 1 {
+        let (din, dout) = (dims[li], dims[li + 1]);
+        let last = li == dims.len() - 2;
+        // LeCun normal for hidden layers; the output layer starts ~100×
+        // smaller so early steps of Adam refine rather than destabilize
+        let scale = if last {
+            0.01 / (din as f32).sqrt()
+        } else {
+            1.0 / (din as f32).sqrt()
+        };
+        let w = Tensor::new(
+            &[din, dout],
+            (0..din * dout).map(|_| rng.normal_f32() * scale).collect(),
+        )
+        .expect("init weight shape");
+        layers.push(Linear {
+            w,
+            b: vec![0.0; dout],
+            act: if last { Act::Id } else { Act::Tanh },
+        });
+    }
+    HyperMlp {
+        mlp: Mlp { layers },
+    }
+}
+
+/// Train a [`HyperMlp`] for `f` by residual fitting. Returns the best
+/// (early-stopped) checkpoint and a report.
+pub fn train_hypersolver<F: VectorField + ?Sized>(
+    f: &F,
+    cfg: &TrainConfig,
+) -> Result<(HyperMlp, TrainReport)> {
+    if cfg.k == 0
+        || cfg.steps == 0
+        || cfg.batch == 0
+        || cfg.eval_every == 0
+        || cfg.eval_batch == 0
+    {
+        return Err(Error::Other(
+            "train config: k, steps, batch, eval_every, eval_batch must be > 0".into(),
+        ));
+    }
+    let tab = Tableau::by_name(&cfg.solver)?;
+    if tab.b_err.is_some() {
+        return Err(Error::Other(
+            "train the hypersolver for a fixed-step base solver, not an adaptive pair"
+                .into(),
+        ));
+    }
+    let d = cfg.sampler.dim();
+    let mut rng = Rng::new(cfg.seed);
+    let mut g = init_hyper_mlp(d, &cfg.hidden, &mut rng);
+    let span = cfg.s_span.1 - cfg.s_span.0;
+    if span <= 0.0 {
+        return Err(Error::Other("train config: s_span must be increasing".into()));
+    }
+    let eps = span / cfg.k as f32;
+    // train on s values whose reference step stays inside the span
+    let s_range = (cfg.s_span.0, (cfg.s_span.1 - eps).max(cfg.s_span.0));
+    let mut gen = ResidualGen::new(f, tab.clone(), cfg.fine);
+
+    // fixed validation batch from an independent stream
+    let mut vrng = rng.fold_in(0x5EED_DA7A);
+    let mut val = ResidualBatch::new();
+    gen.fill(&cfg.sampler, cfg.eval_batch, s_range, eps, &mut vrng, &mut val)?;
+    let mut val_x = Tensor::zeros(&[cfg.eval_batch, 2 * d + 2]);
+    hyper_input_into(val.eps, val.s, &val.z, &val.dz, &mut val_x)?;
+    let mut val_cache = MlpCache::new();
+    // held-out states for the improvement metric (distinct stream again)
+    let mut hrng = rng.fold_in(0xBEEF_CAFE);
+    let held_z = cfg.sampler.sample(cfg.eval_batch, &mut hrng)?;
+    let held_s = cfg.s_span.0 + 0.5 * (span - eps).max(0.0);
+
+    let n = g.param_count();
+    let mut params = Vec::with_capacity(n);
+    g.write_params(&mut params);
+    let mut flat_grads: Vec<f32> = Vec::with_capacity(n);
+    let mut adam = Adam::new(
+        n,
+        AdamCfg {
+            lr: cfg.lr,
+            ..AdamCfg::default()
+        },
+    );
+    let sched = CosineSchedule {
+        base_lr: cfg.lr,
+        min_lr: cfg.lr * 0.01,
+        warmup: cfg.warmup,
+        total: cfg.steps,
+    };
+
+    let mut batch = ResidualBatch::new();
+    let mut x = Tensor::zeros(&[cfg.batch, 2 * d + 2]);
+    let mut dy = Tensor::zeros(&[cfg.batch, d]);
+    let mut cache = MlpCache::new();
+    let mut grads = MlpGrads::new();
+    let mut ws = Workspace::new();
+
+    let mut best = f32::INFINITY;
+    let mut best_params = params.clone();
+    let mut bad_evals = 0usize;
+    let mut history = Vec::new();
+    let mut final_loss = f32::NAN;
+    let mut steps_run = 0usize;
+    let t0 = Instant::now();
+
+    for step in 0..cfg.steps {
+        steps_run = step + 1;
+        gen.fill(&cfg.sampler, cfg.batch, s_range, eps, &mut rng, &mut batch)?;
+        hyper_input_into(batch.eps, batch.s, &batch.z, &batch.dz, &mut x)?;
+        mlp_forward_cached(&g.mlp, &x, &mut cache)?;
+        final_loss = mse_loss_grad(cache.output(), &batch.target, &mut dy)?;
+        mlp_backward(&g.mlp, &cache, &dy, &mut grads, None, &mut ws)?;
+        flat_grads.clear();
+        grads.write_flat(&mut flat_grads);
+        adam.step(&mut params, &flat_grads, sched.lr(step));
+        g.read_params(&params);
+
+        if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            mlp_forward_cached(&g.mlp, &val_x, &mut val_cache)?;
+            let vloss = mse_loss(val_cache.output(), &val.target)?;
+            history.push((step + 1, vloss));
+            if cfg.log {
+                println!(
+                    "step {:>6}  train {final_loss:<12.6}  val {vloss:<12.6}  lr {:.5}",
+                    step + 1,
+                    sched.lr(step)
+                );
+            }
+            if vloss < best * (1.0 - cfg.min_rel_improve) {
+                best = vloss;
+                best_params.copy_from_slice(&params);
+                bad_evals = 0;
+            } else {
+                bad_evals += 1;
+                if bad_evals >= cfg.patience {
+                    if cfg.log {
+                        println!("early stop: no val improvement for {bad_evals} evals");
+                    }
+                    break;
+                }
+            }
+            if cfg.stop_at_improvement > 0.0 {
+                let (eb, eh) =
+                    one_step_errors(f, &g, &tab, cfg.fine, &held_z, held_s, eps)?;
+                if eh > 0.0 && eb / eh >= cfg.stop_at_improvement {
+                    if cfg.log {
+                        println!(
+                            "early stop: improvement {:.1}× ≥ target {:.1}×",
+                            eb / eh,
+                            cfg.stop_at_improvement
+                        );
+                    }
+                    // keep the *current* params (they hit the bar), and
+                    // make the reported/exported δ describe those weights
+                    best = vloss;
+                    best_params.copy_from_slice(&params);
+                    break;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    params.copy_from_slice(&best_params);
+    g.read_params(&params);
+    let (err_base, err_hyper) = one_step_errors(f, &g, &tab, cfg.fine, &held_z, held_s, eps)?;
+    let report = TrainReport {
+        steps_run,
+        final_loss,
+        best_val_loss: best,
+        improvement: if err_hyper > 0.0 {
+            err_base / err_hyper
+        } else {
+            f32::INFINITY
+        },
+        err_base,
+        err_hyper,
+        wall_secs: wall,
+        steps_per_sec: steps_run as f64 / wall.max(1e-9),
+        history,
+    };
+    Ok((g, report))
+}
+
+// Exported `mape` fields use `metrics::mape` — the crate-canonical
+// (python-identical) measurement — so natively trained manifests route
+// through the budget policy on the same scale as python-exported ones.
+
+/// Name of the plain base-solver variant a config exports — the single
+/// source of truth shared by [`export_trained`], [`serve_check`], and
+/// anything that wants to address the variant by name.
+pub fn base_variant_name(cfg: &TrainConfig) -> String {
+    format!("{}_k{}", cfg.solver, cfg.k)
+}
+
+/// Name of the hypersolved variant a config exports.
+pub fn hyper_variant_name(cfg: &TrainConfig) -> String {
+    format!("hyper{}_k{}", cfg.solver, cfg.k)
+}
+
+/// Write a servable artifact set into `dir`: `manifest.json` plus
+/// `weights/<task>.json` holding the field (MLP weights or analytic
+/// reference) and the trained hypersolver — the exact schema
+/// `runtime::Manifest::load` + `nn::CnfModel::load` parse, so
+/// `NativeBackend` serves the result unchanged. Exports three variants:
+/// the plain base solver at k, the hypersolved base at k, and dopri5.
+/// Returns the weights path.
+pub fn export_trained(
+    dir: &Path,
+    task: &str,
+    field: &FieldNet,
+    g: &HyperMlp,
+    cfg: &TrainConfig,
+    report: &TrainReport,
+    export_batch: usize,
+) -> Result<PathBuf> {
+    let tab = Tableau::by_name(&cfg.solver)?;
+    let d = field.state_dim();
+    // measure terminal MAPE of each exported variant against tight dopri5
+    let mut mrng = Rng::new(cfg.seed ^ 0x00AA_00AA);
+    let z0 = cfg.sampler.sample(export_batch, &mut mrng)?;
+    let truth = dopri5(field, &z0, cfg.s_span, &AdaptiveOpts::with_tol(1e-6))?.z;
+    let plain = odeint_fixed(field, &z0, cfg.s_span, cfg.k, &tab)?;
+    let hyped = odeint_hyper(field, g, &z0, cfg.s_span, cfg.k, &tab)?;
+    let mape_plain = crate::metrics::mape(&plain, &truth)? as f32;
+    let mape_hyper = crate::metrics::mape(&hyped, &truth)? as f32;
+    // measure the dopri5 variant at the tolerance NativeBackend actually
+    // serves it at (1e-5), against the tighter truth — no fabricated
+    // numbers in the manifest, the budget policy routes on these
+    let served_d5 = dopri5(field, &z0, cfg.s_span, &AdaptiveOpts::with_tol(1e-5))?;
+    let mape_d5 = crate::metrics::mape(&served_d5.z, &truth)? as f32;
+
+    // refuse to export numbers the JSON layer cannot round-trip (inf/NaN
+    // from a diverged run would make the artifact set unloadable, failing
+    // far away from the real cause) — and diverged weights with them
+    for (what, v) in [
+        ("validation loss (delta)", report.best_val_loss),
+        ("plain-variant mape", mape_plain),
+        ("hyper-variant mape", mape_hyper),
+        ("dopri5-variant mape", mape_d5),
+    ] {
+        if !v.is_finite() {
+            return Err(Error::Other(format!(
+                "export: {what} is {v} — training or evaluation diverged; \
+                 refusing to write an unloadable artifact set"
+            )));
+        }
+    }
+
+    let model = CnfModel {
+        field: field.clone(),
+        hyper: g.clone(),
+    };
+    std::fs::create_dir_all(dir.join("weights"))?;
+    let weights_rel = format!("weights/{task}.json");
+    let weights_path = dir.join(&weights_rel);
+    std::fs::write(&weights_path, json::to_string(&model.to_json()))?;
+
+    let shape = |b: usize| Value::Arr(vec![json::num(b as f64), json::num(d as f64)]);
+    let stages = tab.stages() as u64;
+    let mac_f = VectorField::macs(field);
+    let mac_g = g.macs();
+    let variant = |name: &str, solver: &str, k: usize, hyper: bool, nfe: u64, macs: u64,
+                   mape: f32, adaptive: bool| {
+        let mut fields = vec![
+            ("name", json::s(name)),
+            ("solver", json::s(solver)),
+            ("k", json::num(k as f64)),
+            ("hyper", Value::Bool(hyper)),
+            // no HLO exists for natively trained tasks; the native backend
+            // never reads it, and the pjrt backend fails loudly on the
+            // missing file rather than silently serving the wrong thing
+            ("hlo", json::s(&format!("{task}_{name}.hlo.txt"))),
+            ("nfe", json::num(nfe as f64)),
+            ("macs", json::num(macs as f64)),
+            ("mape", json::num(mape as f64)),
+            ("in_shape", shape(export_batch)),
+            ("out_shape", shape(export_batch)),
+        ];
+        if adaptive {
+            fields.push(("outputs", Value::Arr(vec![json::s("z"), json::s("nfe")])));
+        }
+        json::obj(fields)
+    };
+    let base_name = base_variant_name(cfg);
+    let hyper_name = hyper_variant_name(cfg);
+    let k64 = cfg.k as u64;
+    let variants = Value::Arr(vec![
+        variant(&base_name, &cfg.solver, cfg.k, false, stages * k64,
+                stages * k64 * mac_f, mape_plain, false),
+        variant(&hyper_name, &cfg.solver, cfg.k, true, stages * k64,
+                k64 * (stages * mac_f + mac_g), mape_hyper, false),
+        variant("dopri5", "dopri5", 0, false, served_d5.nfe,
+                served_d5.nfe * mac_f, mape_d5, true),
+    ]);
+
+    let task_obj = json::obj(vec![
+        ("kind", json::s("cnf")),
+        (
+            "state",
+            json::obj(vec![("shape", shape(export_batch))]),
+        ),
+        (
+            "s_span",
+            Value::Arr(vec![
+                json::num(cfg.s_span.0 as f64),
+                json::num(cfg.s_span.1 as f64),
+            ]),
+        ),
+        ("weights", json::s(&weights_rel)),
+        ("field_hlo", json::s(&format!("{task}_field.hlo.txt"))),
+        (
+            "macs",
+            json::obj(vec![
+                ("field", json::num(mac_f as f64)),
+                ("hyper", json::num(mac_g as f64)),
+            ]),
+        ),
+        ("delta", json::num(report.best_val_loss as f64)),
+        ("hyper_base", json::s(&cfg.solver)),
+        ("variants", variants),
+    ]);
+    // merge into an existing manifest rather than clobbering it: the
+    // same-name task entry is replaced, while other tasks AND any
+    // top-level metadata a previous exporter wrote (stamp, seed, ...)
+    // are preserved; the hypertrain defaults fill only missing keys.
+    // A present-but-unparsable manifest is an error, not a silent
+    // restart — overwriting it would drop every other task it listed.
+    let manifest_path = dir.join("manifest.json");
+    let mut root: std::collections::BTreeMap<String, Value> = if manifest_path.exists() {
+        json::parse_file(&manifest_path)?
+            .as_obj()
+            .cloned()
+            .ok_or_else(|| {
+                Error::Other(format!(
+                    "existing {} is not a JSON object; refusing to overwrite it",
+                    manifest_path.display()
+                ))
+            })?
+    } else {
+        Default::default()
+    };
+    let mut tasks = root
+        .get("tasks")
+        .and_then(Value::as_obj)
+        .cloned()
+        .unwrap_or_default();
+    tasks.insert(task.to_string(), task_obj);
+    root.insert("tasks".into(), Value::Obj(tasks));
+    root.entry("version".into()).or_insert(json::num(1.0));
+    root.entry("stamp".into()).or_insert(json::s("hypertrain-native"));
+    root.entry("seed".into()).or_insert(json::num(cfg.seed as f64));
+    root.entry("quick".into()).or_insert(Value::Bool(false));
+    std::fs::write(manifest_path, json::to_string(&Value::Obj(root)))?;
+    Ok(weights_path)
+}
+
+/// Verify the train→serialize→serve loop on an exported artifacts dir:
+/// reload through [`Manifest::load`], execute every variant of `task`
+/// through a fresh [`NativeBackend`] on sampled inputs, check all outputs
+/// are finite, and require the hypersolved variant to land closer to the
+/// served dopri5 reference than the plain base solver. Returns
+/// `(d_hyper, d_plain)` — the L2 distances to the served reference.
+///
+/// This is the acceptance criterion itself: the `hypertrain` binary and
+/// `tests/train_e2e.rs` both call it, so the CLI's self-check cannot
+/// drift from what the test pins.
+///
+/// [`Manifest::load`]: crate::runtime::Manifest::load
+/// [`NativeBackend`]: crate::runtime::NativeBackend
+pub fn serve_check(
+    dir: &Path,
+    task: &str,
+    cfg: &TrainConfig,
+    export_batch: usize,
+) -> Result<(f32, f32)> {
+    use crate::runtime::{ExecBackend, Manifest, NativeBackend};
+    let manifest = Manifest::load(dir)?;
+    let entry = manifest.task(task)?;
+    let backend = NativeBackend::new();
+    let mut rng = Rng::new(cfg.seed ^ 0x5E12_7E57);
+    let input = cfg.sampler.sample(export_batch, &mut rng)?.into_data();
+    let mut outputs = std::collections::BTreeMap::new();
+    for v in &entry.variants {
+        let o = backend.execute(&manifest, entry, v, input.clone())?;
+        if o.z.iter().any(|x| !x.is_finite()) {
+            return Err(Error::Other(format!(
+                "serve check: variant {} produced non-finite output",
+                v.name
+            )));
+        }
+        outputs.insert(v.name.clone(), o.z);
+    }
+    let dist = |a: &[f32], b: &[f32]| -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f32>()
+            .sqrt()
+    };
+    fn pick<'a>(
+        outputs: &'a std::collections::BTreeMap<String, Vec<f32>>,
+        name: &str,
+    ) -> Result<&'a Vec<f32>> {
+        outputs
+            .get(name)
+            .ok_or_else(|| Error::Other(format!("serve check: no {name:?} variant served")))
+    }
+    let truth = pick(&outputs, "dopri5")?;
+    let d_hyper = dist(pick(&outputs, &hyper_variant_name(cfg))?, truth);
+    let d_plain = dist(pick(&outputs, &base_variant_name(cfg))?, truth);
+    if d_hyper >= d_plain {
+        return Err(Error::Other(format!(
+            "serve check failed: served hypersolver ({d_hyper}) is no better than \
+             the plain base solver ({d_plain})"
+        )));
+    }
+    Ok((d_hyper, d_plain))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_small_output_layer() {
+        let mut rng = Rng::new(3);
+        let g = init_hyper_mlp(2, &[16, 8], &mut rng);
+        assert_eq!(g.mlp.layers.len(), 3);
+        assert_eq!(g.mlp.layers[0].in_dim(), 6);
+        assert_eq!(g.mlp.layers[0].out_dim(), 16);
+        assert_eq!(g.mlp.layers[2].out_dim(), 2);
+        assert_eq!(g.mlp.layers[0].act, Act::Tanh);
+        assert_eq!(g.mlp.layers[2].act, Act::Id);
+        // the output layer starts near zero: g ≈ 0 → hyper step ≈ base step
+        let norm_last = g.mlp.layers[2].w.frobenius_norm();
+        let norm_first = g.mlp.layers[0].w.frobenius_norm();
+        assert!(norm_last < norm_first * 0.1, "{norm_last} vs {norm_first}");
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let f = crate::ode::Rotation { omega: 1.0 };
+        let mut cfg = TrainConfig {
+            steps: 0,
+            ..TrainConfig::default()
+        };
+        assert!(train_hypersolver(&f, &cfg).is_err());
+        cfg.steps = 10;
+        cfg.solver = "dopri5".into();
+        assert!(train_hypersolver(&f, &cfg).is_err(), "adaptive base rejected");
+        cfg.solver = "nope".into();
+        assert!(train_hypersolver(&f, &cfg).is_err());
+    }
+
+    #[test]
+    fn short_training_run_reduces_validation_loss() {
+        // tiny smoke: a linear-ish field, few steps — loss must drop and
+        // the report must be self-consistent. The real quality gate lives
+        // in tests/train_e2e.rs.
+        let f = crate::ode::Rotation { omega: 1.0 };
+        let cfg = TrainConfig {
+            steps: 150,
+            batch: 32,
+            hidden: vec![12],
+            eval_every: 25,
+            eval_batch: 64,
+            fine: FineRef::Rk4Substeps(4),
+            sampler: StateSampler::UniformBox {
+                lo: -1.5,
+                hi: 1.5,
+                dim: 2,
+            },
+            ..TrainConfig::default()
+        };
+        let (g, report) = train_hypersolver(&f, &cfg).unwrap();
+        assert_eq!(g.mlp.layers.last().unwrap().out_dim(), 2);
+        assert!(report.steps_run > 0 && report.steps_run <= 150);
+        assert!(report.history.len() >= 2);
+        let first = report.history.first().unwrap().1;
+        let lastv = report.best_val_loss;
+        assert!(
+            lastv < first,
+            "validation loss did not drop: {first} -> {lastv}"
+        );
+        assert!(report.err_base > 0.0 && report.err_hyper > 0.0);
+        assert!(report.steps_per_sec > 0.0);
+    }
+}

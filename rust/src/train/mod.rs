@@ -1,0 +1,41 @@
+//! In-Rust hypersolver training: residual fitting with hand-rolled
+//! reverse-mode gradients, Adam, and weights export.
+//!
+//! This closes the paper's training loop (§3, eq. 7–8) inside the repo:
+//! sample states, compute the base solver's local truncation residual
+//! against a fine one-step reference, regress g_ω onto it — all on the
+//! crate's own `_ws` solver kernels and [`tensor::Workspace`]-pooled
+//! buffers, so training inherits the serving stack's allocation-free
+//! discipline and its exact numerics (the net trains against the very
+//! kernels that will serve it).
+//!
+//! * [`grad`] — reverse-mode backward passes for the hypernet forward
+//!   stack (Linear/Mlp, activations, PReLU, input-assembly concats),
+//!   finite-difference-checked in `tests/train_grad_check.rs`.
+//! * [`residual`] — minibatch (s, z, ε) ↦ R(s, z, ε) target generation.
+//! * [`optim`] — Adam + cosine LR schedule over flat parameter views.
+//! * `loop` — the training loop (loss logging, early stopping) and
+//!   [`export_trained`], which writes the weights JSON + manifest the
+//!   native serving backend loads unchanged.
+//!
+//! The `hypertrain` binary wires this to the command line; see
+//! rust/README.md §"Training hypersolvers in-repo".
+//!
+//! [`tensor::Workspace`]: crate::tensor::Workspace
+
+pub mod grad;
+pub mod r#loop;
+pub mod optim;
+pub mod residual;
+
+pub use grad::{
+    act_backward_inplace, field_input_backward, field_input_into, hyper_input_backward,
+    hyper_input_into, mlp_backward, mlp_forward_cached, mse_loss, mse_loss_grad,
+    prelu_backward, MlpCache, MlpGrads,
+};
+pub use optim::{Adam, AdamCfg, CosineSchedule};
+pub use r#loop::{
+    base_variant_name, export_trained, hyper_variant_name, init_hyper_mlp, serve_check,
+    train_hypersolver, TrainConfig, TrainReport,
+};
+pub use residual::{one_step_errors, FineRef, ResidualBatch, ResidualGen, StateSampler};

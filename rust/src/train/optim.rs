@@ -1,0 +1,150 @@
+//! Adam and a cosine learning-rate schedule over flat parameter views.
+//!
+//! The optimizer is deliberately layout-agnostic: it sees one `&mut [f32]`
+//! of parameters and one `&[f32]` of gradients in the same order
+//! (`Mlp::write_params` / `MlpGrads::write_flat` agree by construction).
+//! State (first/second moments) lives in two preallocated vectors, so a
+//! step allocates nothing.
+
+/// Adam hyperparameters (Kingma & Ba defaults, plus optional decoupled
+/// weight decay).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamCfg {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamCfg {
+    fn default() -> Self {
+        AdamCfg {
+            lr: 3e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+        }
+    }
+}
+
+/// Adam state over `n` flat parameters.
+#[derive(Debug)]
+pub struct Adam {
+    pub cfg: AdamCfg,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n: usize, cfg: AdamCfg) -> Adam {
+        Adam {
+            cfg,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    /// Steps taken so far.
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// One update with learning rate `lr` (the schedule's output — `cfg.lr`
+    /// is only the default passed around in configs). `params` and `grads`
+    /// must be the length this state was built for.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.m.len(), "adam: params length");
+        assert_eq!(grads.len(), self.m.len(), "adam: grads length");
+        self.t += 1;
+        let (b1, b2) = (self.cfg.beta1, self.cfg.beta2);
+        // bias corrections in f64: beta^t underflows f32 late in training
+        let bc1 = 1.0 - (b1 as f64).powi(self.t as i32);
+        let bc2 = 1.0 - (b2 as f64).powi(self.t as i32);
+        let (bc1, bc2) = (bc1 as f32, bc2 as f32);
+        let wd = lr * self.cfg.weight_decay;
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let m_hat = self.m[i] / bc1;
+            let v_hat = self.v[i] / bc2;
+            // decoupled (AdamW) decay: applied outside the moment path so
+            // high-gradient weights are not under-regularized
+            params[i] -= lr * m_hat / (v_hat.sqrt() + self.cfg.eps) + wd * params[i];
+        }
+    }
+}
+
+/// Cosine decay from `base_lr` to `min_lr` over `total` steps, with linear
+/// warmup over the first `warmup` steps.
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub base_lr: f32,
+    pub min_lr: f32,
+    pub warmup: usize,
+    pub total: usize,
+}
+
+impl CosineSchedule {
+    pub fn lr(&self, step: usize) -> f32 {
+        if self.warmup > 0 && step < self.warmup {
+            return self.base_lr * (step + 1) as f32 / self.warmup as f32;
+        }
+        let span = self.total.saturating_sub(self.warmup).max(1);
+        let p = ((step - self.warmup.min(step)) as f32 / span as f32).min(1.0);
+        self.min_lr
+            + 0.5 * (self.base_lr - self.min_lr) * (1.0 + (std::f32::consts::PI * p).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_a_quadratic() {
+        // L(θ) = Σ (θ_i − c_i)², gradient 2(θ − c)
+        let c = [3.0f32, -1.5, 0.25];
+        let mut theta = [0.0f32; 3];
+        let mut adam = Adam::new(3, AdamCfg::default());
+        for _ in 0..2000 {
+            let grads: Vec<f32> =
+                theta.iter().zip(&c).map(|(&t, &ci)| 2.0 * (t - ci)).collect();
+            adam.step(&mut theta, &grads, 0.05);
+        }
+        for (t, ci) in theta.iter().zip(&c) {
+            assert!((t - ci).abs() < 1e-2, "{t} vs {ci}");
+        }
+        assert_eq!(adam.t(), 2000);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, the very first step has magnitude ≈ lr
+        let mut theta = [0.0f32];
+        let mut adam = Adam::new(1, AdamCfg::default());
+        adam.step(&mut theta, &[0.37], 0.01);
+        assert!((theta[0].abs() - 0.01).abs() < 1e-4, "{}", theta[0]);
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints_and_warmup() {
+        let s = CosineSchedule {
+            base_lr: 1.0,
+            min_lr: 0.1,
+            warmup: 10,
+            total: 110,
+        };
+        assert!(s.lr(0) < 0.2); // warming up
+        assert!((s.lr(9) - 1.0).abs() < 1e-6); // warmup done
+        assert!((s.lr(110) - 0.1).abs() < 1e-6); // fully decayed
+        assert!((s.lr(10_000) - 0.1).abs() < 1e-6); // clamped past total
+        // midpoint sits midway
+        let mid = s.lr(10 + 50);
+        assert!((mid - 0.55).abs() < 1e-2, "{mid}");
+    }
+}

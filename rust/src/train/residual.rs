@@ -1,0 +1,365 @@
+//! Residual-target minibatches for hypersolver training (paper §3, eq. 7–8).
+//!
+//! For a base solver ψ of order p, the local truncation residual at
+//! (s, z, ε) is
+//!
+//! ```text
+//! R(s, z, ε) = (Φ(s, z, ε) − z − ε ψ(s, z, ε)) / ε^{p+1}
+//! ```
+//!
+//! where Φ is a fine one-step reference flow (RK4 with substeps, or
+//! tight-tolerance dopri5). Regressing g_ω onto R is exactly what makes
+//! the hypersolved step z + εψ + ε^{p+1} g_ω track Φ to the fit error δ —
+//! the paper's residual-fitting objective, and the same residual
+//! `solvers::hyper::residual` measures from ground-truth checkpoints.
+//!
+//! All stepping runs on the `_ws` kernels over generator-held
+//! [`RkWorkspace`]s: warm target generation performs no solver-side heap
+//! allocation on the RK4 path (dopri5 pays its usual per-solve result
+//! clone).
+
+use crate::data::densities;
+use crate::ode::VectorField;
+use crate::solvers::fixed::{combine_into, rk_stages_core};
+use crate::solvers::workspace::RkWorkspace;
+use crate::solvers::{
+    adaptive_ws, hyper_step, odeint_fixed_ws, rk_step, AdaptiveOpts, HyperNet, Tableau,
+};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+/// Where training states are drawn from.
+#[derive(Clone, Debug)]
+pub enum StateSampler {
+    /// Uniform in `[lo, hi]^dim` — the default for analytic fields, whose
+    /// interesting dynamics live in a known box.
+    UniformBox { lo: f32, hi: f32, dim: usize },
+    /// One of the `data::densities` toy 2-D densities (pinwheel, rings,
+    /// checkerboard, circles) — matches the CNF tasks' base distributions.
+    Density(String),
+}
+
+impl StateSampler {
+    pub fn dim(&self) -> usize {
+        match self {
+            StateSampler::UniformBox { dim, .. } => *dim,
+            StateSampler::Density(_) => 2,
+        }
+    }
+
+    /// Fill `out` (shape (n, dim)) with fresh samples. The box sampler
+    /// writes in place; the density sampler draws through
+    /// [`densities::sample_density`] (which allocates its result) and
+    /// copies.
+    pub fn sample_into(&self, out: &mut Tensor, rng: &mut Rng) -> Result<()> {
+        let (n, d) = match out.shape() {
+            [n, d] => (*n, *d),
+            s => return Err(Error::Shape(format!("sample_into out {s:?}"))),
+        };
+        if d != self.dim() {
+            return Err(Error::Shape(format!(
+                "sampler dim {} vs out cols {d}",
+                self.dim()
+            )));
+        }
+        match self {
+            StateSampler::UniformBox { lo, hi, .. } => {
+                for v in out.data_mut() {
+                    *v = rng.uniform_in(*lo as f64, *hi as f64) as f32;
+                }
+                Ok(())
+            }
+            StateSampler::Density(name) => {
+                let s = densities::sample_density(name, n, rng)?;
+                out.copy_from(&s);
+                Ok(())
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`sample_into`](Self::sample_into).
+    pub fn sample(&self, n: usize, rng: &mut Rng) -> Result<Tensor> {
+        let mut out = Tensor::zeros(&[n, self.dim()]);
+        self.sample_into(&mut out, rng)?;
+        Ok(out)
+    }
+}
+
+/// The fine one-step reference flow Φ.
+#[derive(Clone, Copy, Debug)]
+pub enum FineRef {
+    /// RK4 with this many equal substeps over `[s, s + ε]` — cheap,
+    /// deterministic NFE, error O((ε/m)⁴).
+    Rk4Substeps(usize),
+    /// Adaptive dopri5 at this tolerance — slower but self-validating on
+    /// stiff regions.
+    Dopri5Tol(f32),
+}
+
+/// One regression minibatch. (s, ε) are shared across the batch — the
+/// hypernet takes scalar time/step inputs, exactly as it is evaluated
+/// inside `hyper_step_core` at serving time.
+#[derive(Debug)]
+pub struct ResidualBatch {
+    pub s: f32,
+    pub eps: f32,
+    /// States z (B, D).
+    pub z: Tensor,
+    /// First stage dz = f(s, z) (B, D) — the hypernet's second input block.
+    pub dz: Tensor,
+    /// Residual targets R (B, D).
+    pub target: Tensor,
+}
+
+impl ResidualBatch {
+    /// An empty batch; buffers are sized on the first
+    /// [`ResidualGen::fill`].
+    pub fn new() -> ResidualBatch {
+        ResidualBatch {
+            s: 0.0,
+            eps: 0.0,
+            z: Tensor::zeros(&[0]),
+            dz: Tensor::zeros(&[0]),
+            target: Tensor::zeros(&[0]),
+        }
+    }
+}
+
+impl Default for ResidualBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Residual-batch generator for a (field, base tableau) pair, holding the
+/// solver workspaces that make repeated target computation allocation-free.
+pub struct ResidualGen<'a, F: VectorField + ?Sized> {
+    f: &'a F,
+    pub tab: Tableau,
+    fine: FineRef,
+    rk4: Tableau,
+    d5: Tableau,
+    base_ws: RkWorkspace,
+    fine_ws: RkWorkspace,
+}
+
+impl<'a, F: VectorField + ?Sized> ResidualGen<'a, F> {
+    pub fn new(f: &'a F, tab: Tableau, fine: FineRef) -> ResidualGen<'a, F> {
+        ResidualGen {
+            f,
+            tab,
+            fine,
+            rk4: Tableau::rk4(),
+            d5: Tableau::dopri5(),
+            base_ws: RkWorkspace::new(),
+            fine_ws: RkWorkspace::new(),
+        }
+    }
+
+    /// Sample `n` states, draw s uniformly from `[s_lo, s_hi]`, and fill
+    /// `batch` with states, first stages, and residual targets at step
+    /// size `eps`. `batch`'s buffers are resized on first use and reused
+    /// after.
+    pub fn fill(
+        &mut self,
+        sampler: &StateSampler,
+        n: usize,
+        s_range: (f32, f32),
+        eps: f32,
+        rng: &mut Rng,
+        batch: &mut ResidualBatch,
+    ) -> Result<()> {
+        let d = sampler.dim();
+        if batch.z.shape() != [n, d] {
+            batch.z = Tensor::zeros(&[n, d]);
+            batch.dz = Tensor::zeros(&[n, d]);
+            batch.target = Tensor::zeros(&[n, d]);
+        }
+        sampler.sample_into(&mut batch.z, rng)?;
+        batch.s = rng.uniform_in(s_range.0 as f64, s_range.1 as f64) as f32;
+        batch.eps = eps;
+        let (s, eps) = (batch.s, batch.eps);
+        self.targets_for(&batch.z, s, eps, &mut batch.dz, &mut batch.target)
+    }
+
+    /// Compute dz = f(s, z) and the residual target R for given states,
+    /// fully overwriting `dz` and `target` (both (B, D)).
+    pub fn targets_for(
+        &mut self,
+        z: &Tensor,
+        s: f32,
+        eps: f32,
+        dz: &mut Tensor,
+        target: &mut Tensor,
+    ) -> Result<()> {
+        if eps <= 0.0 {
+            return Err(Error::Other("residual targets need eps > 0".into()));
+        }
+        let f = self.f;
+        let p = self.tab.stages();
+        // base direction ψ (into base_ws.acc) and first stage dz
+        self.base_ws.ensure(z.shape(), p);
+        self.base_ws.z_cur.copy_from(z);
+        rk_stages_core(f, &self.tab, s, eps, &mut self.base_ws)?;
+        combine_into(&self.base_ws.stages[..p], &self.tab.b, &mut self.base_ws.acc)?;
+        dz.copy_from(&self.base_ws.stages[0]);
+        // fine reference Φ(s, z, ε)
+        match self.fine {
+            FineRef::Rk4Substeps(m) => {
+                let zf =
+                    odeint_fixed_ws(f, z, (s, s + eps), m.max(1), &self.rk4, &mut self.fine_ws)?;
+                target.copy_from(zf);
+            }
+            FineRef::Dopri5Tol(tol) => {
+                let r = adaptive_ws(
+                    f,
+                    z,
+                    (s, s + eps),
+                    &self.d5,
+                    &AdaptiveOpts::with_tol(tol),
+                    &mut self.fine_ws,
+                )?;
+                target.copy_from(&r.z);
+            }
+        }
+        // R = (Φ − z − ε ψ) / ε^{p+1}, in place
+        target.axpy(-1.0, z)?;
+        target.axpy(-eps, &self.base_ws.acc)?;
+        let scale = 1.0 / eps.powi(self.tab.order as i32 + 1);
+        target.map_inplace(|x| x * scale);
+        Ok(())
+    }
+}
+
+/// Mean per-sample L2 one-step errors of the plain base step and the
+/// hypersolved step against the fine reference, on states `z` at (s, ε):
+/// `(err_base, err_hyper)`. This is the held-out acceptance metric — a
+/// trained g_ω should push `err_hyper` well below `err_base`.
+pub fn one_step_errors<F: VectorField + ?Sized, G: HyperNet + ?Sized>(
+    f: &F,
+    g: &G,
+    tab: &Tableau,
+    fine: FineRef,
+    z: &Tensor,
+    s: f32,
+    eps: f32,
+) -> Result<(f32, f32)> {
+    let b = z.shape()[0] as f32;
+    let zf = match fine {
+        FineRef::Rk4Substeps(m) => {
+            crate::solvers::odeint_fixed(f, z, (s, s + eps), m.max(1), &Tableau::rk4())?
+        }
+        FineRef::Dopri5Tol(tol) => {
+            crate::solvers::dopri5(f, z, (s, s + eps), &AdaptiveOpts::with_tol(tol))?.z
+        }
+    };
+    let base = rk_step(f, tab, s, z, eps)?;
+    let hyp = hyper_step(f, g, tab, s, z, eps)?;
+    let err = |a: &Tensor| -> Result<f32> {
+        Ok(a.sub(&zf)?.frobenius_norm() / b.sqrt())
+    };
+    Ok((err(&base)?, err(&hyp)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::Rotation;
+
+    #[test]
+    fn samplers_produce_finite_states_of_right_shape() {
+        let mut rng = Rng::new(5);
+        let boxs = StateSampler::UniformBox {
+            lo: -2.0,
+            hi: 2.0,
+            dim: 3,
+        };
+        let t = boxs.sample(64, &mut rng).unwrap();
+        assert_eq!(t.shape(), &[64, 3]);
+        assert!(t.data().iter().all(|v| v.is_finite() && v.abs() <= 2.0));
+        let den = StateSampler::Density("rings".into());
+        let t = den.sample(32, &mut rng).unwrap();
+        assert_eq!(t.shape(), &[32, 2]);
+        assert!(StateSampler::Density("nope".into()).sample(4, &mut rng).is_err());
+    }
+
+    #[test]
+    fn residual_target_matches_solver_residual_definition() {
+        // the generator's target must agree with solvers::hyper::residual
+        // computed from the same fine checkpoint
+        let f = Rotation { omega: 1.0 };
+        let tab = Tableau::euler();
+        let mut gen = ResidualGen::new(&f, tab.clone(), FineRef::Rk4Substeps(16));
+        let z = Tensor::new(&[2, 2], vec![1.0, 0.0, -0.5, 0.75]).unwrap();
+        let (s, eps) = (0.2f32, 0.1f32);
+        let mut dz = Tensor::zeros(&[2, 2]);
+        let mut target = Tensor::zeros(&[2, 2]);
+        gen.targets_for(&z, s, eps, &mut dz, &mut target).unwrap();
+        let zf = crate::solvers::odeint_fixed(&f, &z, (s, s + eps), 16, &Tableau::rk4())
+            .unwrap();
+        let want = crate::solvers::residual(&f, &tab, s, &z, &zf, eps).unwrap();
+        let diff = target.sub(&want).unwrap().frobenius_norm();
+        assert!(diff < 1e-5, "generator target vs residual(): {diff}");
+        // dz is the first stage f(s, z)
+        let want_dz = f.eval(s, &z);
+        assert_eq!(dz.data(), want_dz.data());
+    }
+
+    #[test]
+    fn euler_residual_on_rotation_approximates_taylor_term() {
+        // for ż = Az, R → ½A²z = −½ω²z as ε → 0
+        let f = Rotation { omega: 1.0 };
+        let mut gen = ResidualGen::new(&f, Tableau::euler(), FineRef::Dopri5Tol(1e-8));
+        let z = Tensor::new(&[1, 2], vec![1.0, 0.0]).unwrap();
+        let mut dz = Tensor::zeros(&[1, 2]);
+        let mut target = Tensor::zeros(&[1, 2]);
+        gen.targets_for(&z, 0.0, 0.01, &mut dz, &mut target).unwrap();
+        let expected = z.scale(-0.5);
+        let err = target.sub(&expected).unwrap().frobenius_norm();
+        assert!(err < 0.05, "residual {:?}", target.data());
+    }
+
+    #[test]
+    fn fill_resizes_once_and_reuses() {
+        let f = Rotation { omega: 1.0 };
+        let mut gen = ResidualGen::new(&f, Tableau::euler(), FineRef::Rk4Substeps(4));
+        let sampler = StateSampler::UniformBox {
+            lo: -1.0,
+            hi: 1.0,
+            dim: 2,
+        };
+        let mut rng = Rng::new(1);
+        let mut batch = ResidualBatch::new();
+        gen.fill(&sampler, 8, (0.0, 0.9), 0.1, &mut rng, &mut batch)
+            .unwrap();
+        assert_eq!(batch.z.shape(), &[8, 2]);
+        assert!(batch.s >= 0.0 && batch.s <= 0.9);
+        let ptr = batch.target.data().as_ptr();
+        gen.fill(&sampler, 8, (0.0, 0.9), 0.1, &mut rng, &mut batch)
+            .unwrap();
+        assert_eq!(batch.target.data().as_ptr(), ptr, "buffers reused");
+        assert!(batch.target.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn one_step_errors_zero_hyper_equals_base() {
+        let f = Rotation { omega: 1.0 };
+        let g = |_e: f32, _s: f32, z: &Tensor, _dz: &Tensor| Tensor::zeros(z.shape());
+        let z = Tensor::new(&[4, 2], vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.5, 0.3, -0.7])
+            .unwrap();
+        let (eb, eh) = one_step_errors(
+            &f,
+            &g,
+            &Tableau::euler(),
+            FineRef::Rk4Substeps(8),
+            &z,
+            0.0,
+            0.125,
+        )
+        .unwrap();
+        assert!((eb - eh).abs() < 1e-7, "{eb} vs {eh}");
+        assert!(eb > 0.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! End-to-end train → serialize → serve: residual-fit a HyperMlp on Van der
+//! Pol, assert the trained hypersolver's one-step residual beats plain
+//! Euler by ≥ 5× on held-out states, export the weights JSON + manifest,
+//! and serve all variants through the native backend — the full loop the
+//! `hypertrain` CLI automates, pinned as a test so it cannot rot.
+
+use std::path::PathBuf;
+
+use hypersolvers::nn::{AnalyticField, FieldNet};
+use hypersolvers::runtime::Manifest;
+use hypersolvers::solvers::Tableau;
+use hypersolvers::train::{
+    base_variant_name, export_trained, hyper_variant_name, one_step_errors, serve_check,
+    train_hypersolver, FineRef, StateSampler, TrainConfig,
+};
+use hypersolvers::util::prng::Rng;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "hsolve_train_e2e_{tag}_{}",
+        std::process::id()
+    ));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    dir
+}
+
+#[test]
+fn trained_hypereuler_beats_euler_5x_and_serves_natively() {
+    let field = FieldNet::Analytic(AnalyticField::VanDerPol { mu: 1.0 });
+    let cfg = TrainConfig {
+        solver: "euler".into(),
+        hidden: vec![32, 32],
+        steps: 4000,
+        batch: 128,
+        lr: 3e-3,
+        warmup: 50,
+        seed: 11,
+        s_span: (0.0, 1.0),
+        k: 8,
+        fine: FineRef::Rk4Substeps(8),
+        sampler: StateSampler::UniformBox {
+            lo: -2.0,
+            hi: 2.0,
+            dim: 2,
+        },
+        eval_every: 100,
+        eval_batch: 256,
+        patience: 12,
+        min_rel_improve: 5e-3,
+        // stop as soon as the bar is comfortably cleared — bounds test time
+        stop_at_improvement: 8.0,
+        log: false,
+    };
+    let (g, report) = train_hypersolver(&field, &cfg).unwrap();
+    assert!(
+        report.improvement >= 5.0,
+        "trained hypersolver only {:.2}× better than euler (base {:.3e}, hyper {:.3e}) \
+         after {} steps",
+        report.improvement,
+        report.err_base,
+        report.err_hyper,
+        report.steps_run
+    );
+
+    // independent held-out check, fresh states and several s values
+    let eps = 1.0 / cfg.k as f32;
+    let mut rng = Rng::new(999);
+    let tab = Tableau::euler();
+    let (mut sum_base, mut sum_hyper) = (0.0f32, 0.0f32);
+    for (i, s) in [0.0f32, 0.3, 0.6, 0.875].into_iter().enumerate() {
+        let z = cfg.sampler.sample(128, &mut rng).unwrap();
+        let (eb, eh) =
+            one_step_errors(&field, &g, &tab, cfg.fine, &z, s, eps).unwrap();
+        assert!(eb.is_finite() && eh.is_finite(), "s={s} i={i}");
+        sum_base += eb;
+        sum_hyper += eh;
+    }
+    assert!(
+        sum_base >= 5.0 * sum_hyper,
+        "held-out residual across s values: base {sum_base:.3e} vs hyper {sum_hyper:.3e}"
+    );
+
+    // export and serve the whole variant family through the native backend
+    let dir = temp_dir("vdp");
+    export_trained(&dir, "vdp", &field, &g, &cfg, &report, 16).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let task = manifest.task("vdp").unwrap();
+    assert_eq!(task.hyper_base, "euler");
+    assert!((task.delta as f32 - report.best_val_loss).abs() < 1e-6);
+    let hyper_variant = task.variant(&hyper_variant_name(&cfg)).unwrap();
+    assert!(hyper_variant.hyper);
+    // the measured manifest mapes must rank hyper above plain
+    let plain_variant = task.variant(&base_variant_name(&cfg)).unwrap();
+    assert!(
+        hyper_variant.mape < plain_variant.mape,
+        "exported mape: hyper {} vs plain {}",
+        hyper_variant.mape,
+        plain_variant.mape
+    );
+
+    // the canonical train→serialize→serve criterion, shared with the
+    // hypertrain binary: errors if any served output is non-finite or the
+    // hypersolved variant is no closer to the served dopri5 than plain
+    let (d_hyper, d_plain) = serve_check(&dir, "vdp", &cfg, 16).unwrap();
+    assert!(d_hyper < d_plain);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trained_weights_roundtrip_through_cnf_model() {
+    // a much shorter run: the exported JSON must reload into a CnfModel
+    // whose hypernet evaluates bit-identically to the trained one
+    let field = FieldNet::Analytic(AnalyticField::Rotation { omega: 1.0 });
+    let cfg = TrainConfig {
+        steps: 120,
+        batch: 32,
+        hidden: vec![8],
+        eval_every: 40,
+        eval_batch: 64,
+        fine: FineRef::Rk4Substeps(4),
+        sampler: StateSampler::UniformBox {
+            lo: -1.5,
+            hi: 1.5,
+            dim: 2,
+        },
+        seed: 3,
+        ..TrainConfig::default()
+    };
+    use hypersolvers::ode::VectorField;
+    use hypersolvers::solvers::HyperNet;
+    let (g, report) = train_hypersolver(&field, &cfg).unwrap();
+    let dir = temp_dir("roundtrip");
+    let weights = export_trained(&dir, "rot", &field, &g, &cfg, &report, 4).unwrap();
+    let model = hypersolvers::nn::CnfModel::load(&weights).unwrap();
+    let z = hypersolvers::tensor::Tensor::new(&[2, 2], vec![0.5, -0.25, 1.0, 0.75])
+        .unwrap();
+    let dz = field.eval(0.0, &z);
+    let before = g.eval(0.125, 0.5, &z, &dz);
+    let after = model.hyper.eval(0.125, 0.5, &z, &dz);
+    assert_eq!(before.data(), after.data(), "weights JSON round trip drifted");
+    // and the reloaded field is the same analytic reference
+    assert_eq!(
+        field.eval(0.3, &z).data(),
+        model.field.eval(0.3, &z).data()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

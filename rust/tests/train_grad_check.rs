@@ -1,0 +1,342 @@
+//! Finite-difference verification of every backward kernel in `train::grad`.
+//!
+//! Each analytic gradient is checked against central differences
+//! (L(θ+h) − L(θ−h)) / 2h on random shapes to 1e-3 relative (propkit's
+//! close-compare uses max(1, |a|, |b|) as the denominator, so the bound is
+//! absolute for sub-unit gradients and relative above). Smooth activations
+//! (tanh / softplus / id) are sampled randomly; the kinked ones (relu,
+//! prelu) get cases constructed so no perturbation crosses the kink —
+//! central differences are meaningless at the kink itself.
+
+use hypersolvers::nn::{Act, Linear, Mlp, PRelu, TimeMode};
+use hypersolvers::tensor::{Tensor, Workspace};
+use hypersolvers::train::{
+    field_input_backward, field_input_into, hyper_input_backward, hyper_input_into,
+    mlp_backward, mlp_forward_cached, mse_loss, mse_loss_grad, prelu_backward, MlpCache,
+    MlpGrads,
+};
+use hypersolvers::util::prng::Rng;
+use hypersolvers::util::propkit::{check, gen_range, gen_vec, prop_assert_close};
+
+const FD_H: f32 = 1e-2;
+const TOL: f32 = 1e-3;
+
+fn random_linear(rng: &mut Rng, din: usize, dout: usize, act: Act) -> Linear {
+    Linear {
+        w: Tensor::new(&[din, dout], gen_vec(rng, din * dout, 0.5)).unwrap(),
+        b: gen_vec(rng, dout, 0.2),
+        act,
+    }
+}
+
+/// Random MLP over smooth activations (the kinked relu path gets its own
+/// constructed case below).
+fn random_smooth_mlp(rng: &mut Rng) -> Mlp {
+    let n_layers = gen_range(rng, 1, 3);
+    let mut dims = Vec::with_capacity(n_layers + 1);
+    for _ in 0..=n_layers {
+        dims.push(gen_range(rng, 1, 4));
+    }
+    let acts = [Act::Tanh, Act::Softplus, Act::Id];
+    let layers = (0..n_layers)
+        .map(|i| {
+            let act = if i == n_layers - 1 {
+                Act::Id
+            } else {
+                *rng.choose(&acts)
+            };
+            random_linear(rng, dims[i], dims[i + 1], act)
+        })
+        .collect();
+    Mlp { layers }
+}
+
+fn loss_of(mlp: &Mlp, x: &Tensor, t: &Tensor) -> f32 {
+    mse_loss(&mlp.forward(x).unwrap(), t).unwrap()
+}
+
+/// Analytic parameter + input gradients of mse(mlp(x), t).
+fn analytic_grads(mlp: &Mlp, x: &Tensor, t: &Tensor) -> (Vec<f32>, Tensor) {
+    let mut cache = MlpCache::new();
+    mlp_forward_cached(mlp, x, &mut cache).unwrap();
+    let mut dy = Tensor::zeros(t.shape());
+    mse_loss_grad(cache.output(), t, &mut dy).unwrap();
+    let mut grads = MlpGrads::new();
+    let mut ws = Workspace::new();
+    let mut dx = Tensor::zeros(x.shape());
+    mlp_backward(mlp, &cache, &dy, &mut grads, Some(&mut dx), &mut ws).unwrap();
+    let mut flat = Vec::new();
+    grads.write_flat(&mut flat);
+    (flat, dx)
+}
+
+/// Central differences over the flat parameter view.
+fn fd_param_grads(mlp: &Mlp, x: &Tensor, t: &Tensor) -> Vec<f32> {
+    let mut probe = mlp.clone();
+    let mut params = Vec::new();
+    probe.write_params(&mut params);
+    let mut out = Vec::with_capacity(params.len());
+    for i in 0..params.len() {
+        let orig = params[i];
+        params[i] = orig + FD_H;
+        probe.read_params(&params);
+        let lp = loss_of(&probe, x, t);
+        params[i] = orig - FD_H;
+        probe.read_params(&params);
+        let lm = loss_of(&probe, x, t);
+        params[i] = orig;
+        out.push((lp - lm) / (2.0 * FD_H));
+    }
+    probe.read_params(&params);
+    out
+}
+
+/// Central differences over the input entries.
+fn fd_input_grads(mlp: &Mlp, x: &Tensor, t: &Tensor) -> Vec<f32> {
+    let mut probe = x.clone();
+    (0..x.numel())
+        .map(|i| {
+            let orig = probe.data()[i];
+            probe.data_mut()[i] = orig + FD_H;
+            let lp = loss_of(mlp, &probe, t);
+            probe.data_mut()[i] = orig - FD_H;
+            let lm = loss_of(mlp, &probe, t);
+            probe.data_mut()[i] = orig;
+            (lp - lm) / (2.0 * FD_H)
+        })
+        .collect()
+}
+
+#[test]
+fn mlp_param_gradients_match_central_differences() {
+    check("mlp dW/db == central differences", 25, |rng| {
+        let mlp = random_smooth_mlp(rng);
+        let b = gen_range(rng, 1, 3);
+        let x = Tensor::new(&[b, mlp.layers[0].in_dim()],
+                            gen_vec(rng, b * mlp.layers[0].in_dim(), 1.0)).unwrap();
+        let dout = mlp.layers.last().unwrap().out_dim();
+        let t = Tensor::new(&[b, dout], gen_vec(rng, b * dout, 1.0)).unwrap();
+        let (analytic, _) = analytic_grads(&mlp, &x, &t);
+        let fd = fd_param_grads(&mlp, &x, &t);
+        prop_assert_close(&analytic, &fd, TOL)
+    });
+}
+
+#[test]
+fn mlp_input_gradients_match_central_differences() {
+    check("mlp dX == central differences", 25, |rng| {
+        let mlp = random_smooth_mlp(rng);
+        let b = gen_range(rng, 1, 3);
+        let x = Tensor::new(&[b, mlp.layers[0].in_dim()],
+                            gen_vec(rng, b * mlp.layers[0].in_dim(), 1.0)).unwrap();
+        let dout = mlp.layers.last().unwrap().out_dim();
+        let t = Tensor::new(&[b, dout], gen_vec(rng, b * dout, 1.0)).unwrap();
+        let (_, dx) = analytic_grads(&mlp, &x, &t);
+        let fd = fd_input_grads(&mlp, &x, &t);
+        prop_assert_close(dx.data(), &fd, TOL)
+    });
+}
+
+#[test]
+fn relu_gradients_away_from_the_kink() {
+    // constructed so every pre-activation stays ≥ 0.3 from zero: an FD step
+    // of 1e-2 on any single parameter or input moves a pre-activation by at
+    // most ~2e-2, so no branch flips mid-difference
+    let mlp = Mlp {
+        layers: vec![
+            Linear {
+                w: Tensor::new(&[2, 2], vec![1.0, -0.8, 0.6, 1.2]).unwrap(),
+                b: vec![0.5, -0.4],
+                act: Act::Relu,
+            },
+            Linear {
+                w: Tensor::new(&[2, 1], vec![0.9, -1.1]).unwrap(),
+                b: vec![0.3],
+                act: Act::Id,
+            },
+        ],
+    };
+    let x = Tensor::new(&[2, 2], vec![1.0, 1.5, -1.2, 0.8]).unwrap();
+    let t = Tensor::new(&[2, 1], vec![0.25, -0.5]).unwrap();
+    let (analytic, dx) = analytic_grads(&mlp, &x, &t);
+    let fd = fd_param_grads(&mlp, &x, &t);
+    prop_assert_close(&analytic, &fd, TOL).unwrap();
+    let fd_x = fd_input_grads(&mlp, &x, &t);
+    prop_assert_close(dx.data(), &fd_x, TOL).unwrap();
+}
+
+#[test]
+fn prelu_gradients_match_central_differences() {
+    // loss = Σ r ⊙ prelu(x): dL/dy = r exactly, so the kernel under test is
+    // isolated. Inputs are pushed ≥ 0.25 away from the kink.
+    check("prelu dalpha/dx == central differences", 25, |rng| {
+        let (b, c, h, w) = (
+            gen_range(rng, 1, 2),
+            gen_range(rng, 1, 3),
+            gen_range(rng, 1, 3),
+            gen_range(rng, 1, 3),
+        );
+        let p = PRelu {
+            alpha: gen_vec(rng, c, 0.5),
+        };
+        let n = b * c * h * w;
+        let x = Tensor::new(
+            &[b, c, h, w],
+            gen_vec(rng, n, 1.0)
+                .into_iter()
+                .map(|v| if v >= 0.0 { v + 0.25 } else { v - 0.25 })
+                .collect(),
+        )
+        .unwrap();
+        let r = gen_vec(rng, n, 1.0);
+        let loss = |p: &PRelu, x: &Tensor| -> f32 {
+            let y = p.forward(x).unwrap();
+            y.data().iter().zip(&r).map(|(a, b)| a * b).sum()
+        };
+        // analytic
+        let mut dy = Tensor::new(x.shape(), r.clone()).unwrap();
+        let mut dalpha = vec![0.0f32; c];
+        prelu_backward(&p, &x, &mut dy, &mut dalpha).unwrap();
+        // fd over alpha
+        let mut probe = p.clone();
+        let fd_alpha: Vec<f32> = (0..c)
+            .map(|ci| {
+                let orig = probe.alpha[ci];
+                probe.alpha[ci] = orig + FD_H;
+                let lp = loss(&probe, &x);
+                probe.alpha[ci] = orig - FD_H;
+                let lm = loss(&probe, &x);
+                probe.alpha[ci] = orig;
+                (lp - lm) / (2.0 * FD_H)
+            })
+            .collect();
+        prop_assert_close(&dalpha, &fd_alpha, TOL)?;
+        // fd over inputs (h small enough not to cross the 0.25 margin)
+        let mut px = x.clone();
+        let fd_x: Vec<f32> = (0..n)
+            .map(|i| {
+                let orig = px.data()[i];
+                px.data_mut()[i] = orig + 1e-3;
+                let lp = loss(&p, &px);
+                px.data_mut()[i] = orig - 1e-3;
+                let lm = loss(&p, &px);
+                px.data_mut()[i] = orig;
+                (lp - lm) / 2e-3
+            })
+            .collect();
+        prop_assert_close(dy.data(), &fd_x, TOL)
+    });
+}
+
+#[test]
+fn hyper_input_adjoint_matches_central_differences() {
+    // full pipeline: L(z, dz) = mse(mlp([z, dz, eps, s]), t) — the adjoint
+    // must chain mlp_backward's dX through hyper_input_backward
+    check("hyper concat adjoint == central differences", 15, |rng| {
+        let d = gen_range(rng, 1, 3);
+        let b = gen_range(rng, 1, 3);
+        let mut mlp = random_smooth_mlp(rng);
+        // force matching in/out dims for the assembled input
+        let out0 = mlp.layers[0].out_dim();
+        mlp.layers[0] = random_linear(rng, 2 * d + 2, out0, Act::Tanh);
+        let last_in = mlp.layers.last().unwrap().in_dim();
+        *mlp.layers.last_mut().unwrap() = random_linear(rng, last_in, d, Act::Id);
+        let z = Tensor::new(&[b, d], gen_vec(rng, b * d, 1.0)).unwrap();
+        let dz = Tensor::new(&[b, d], gen_vec(rng, b * d, 1.0)).unwrap();
+        let t = Tensor::new(&[b, d], gen_vec(rng, b * d, 1.0)).unwrap();
+        let (eps, s) = (0.125f32, 0.4f32);
+        let loss = |z: &Tensor, dz: &Tensor| -> f32 {
+            let mut x = Tensor::zeros(&[b, 2 * d + 2]);
+            hyper_input_into(eps, s, z, dz, &mut x).unwrap();
+            loss_of(&mlp, &x, &t)
+        };
+        // analytic
+        let mut x = Tensor::zeros(&[b, 2 * d + 2]);
+        hyper_input_into(eps, s, &z, &dz, &mut x).unwrap();
+        let (_, dx) = analytic_grads(&mlp, &x, &t);
+        let mut dz_adj = Tensor::zeros(&[b, d]);
+        let mut ddz_adj = Tensor::zeros(&[b, d]);
+        hyper_input_backward(&dx, &mut dz_adj, &mut ddz_adj).unwrap();
+        // fd over z and dz
+        let fd_over = |which_z: bool| -> Vec<f32> {
+            let mut pz = z.clone();
+            let mut pdz = dz.clone();
+            let n = b * d;
+            (0..n)
+                .map(|i| {
+                    let buf = if which_z {
+                        pz.data_mut()
+                    } else {
+                        pdz.data_mut()
+                    };
+                    let orig = buf[i];
+                    buf[i] = orig + FD_H;
+                    let lp = loss(&pz, &pdz);
+                    let buf = if which_z {
+                        pz.data_mut()
+                    } else {
+                        pdz.data_mut()
+                    };
+                    let lm_at = orig - FD_H;
+                    buf[i] = lm_at;
+                    let lm = loss(&pz, &pdz);
+                    let buf = if which_z {
+                        pz.data_mut()
+                    } else {
+                        pdz.data_mut()
+                    };
+                    buf[i] = orig;
+                    (lp - lm) / (2.0 * FD_H)
+                })
+                .collect()
+        };
+        prop_assert_close(dz_adj.data(), &fd_over(true), TOL)?;
+        prop_assert_close(ddz_adj.data(), &fd_over(false), TOL)
+    });
+}
+
+#[test]
+fn field_input_adjoint_matches_central_differences() {
+    // L(z) = mse(mlp([z, timefeat(s)]), t) for both time modes
+    check("time-feature concat adjoint == central differences", 15, |rng| {
+        for mode in [TimeMode::Concat, TimeMode::Fourier3] {
+            let d = gen_range(rng, 1, 3);
+            let b = gen_range(rng, 1, 3);
+            let width = d + mode.dim();
+            let hidden = gen_range(rng, 1, 4);
+            let mlp = Mlp {
+                layers: vec![
+                    random_linear(rng, width, hidden, Act::Tanh),
+                    random_linear(rng, hidden, d, Act::Id),
+                ],
+            };
+            let z = Tensor::new(&[b, d], gen_vec(rng, b * d, 1.0)).unwrap();
+            let t = Tensor::new(&[b, d], gen_vec(rng, b * d, 1.0)).unwrap();
+            let s = 0.3f32;
+            let loss = |z: &Tensor| -> f32 {
+                let mut x = Tensor::zeros(&[b, width]);
+                field_input_into(mode, s, z, &mut x).unwrap();
+                loss_of(&mlp, &x, &t)
+            };
+            let mut x = Tensor::zeros(&[b, width]);
+            field_input_into(mode, s, &z, &mut x).unwrap();
+            let (_, dx) = analytic_grads(&mlp, &x, &t);
+            let mut dz_adj = Tensor::zeros(&[b, d]);
+            field_input_backward(mode, &dx, &mut dz_adj).unwrap();
+            let mut pz = z.clone();
+            let fd: Vec<f32> = (0..b * d)
+                .map(|i| {
+                    let orig = pz.data()[i];
+                    pz.data_mut()[i] = orig + FD_H;
+                    let lp = loss(&pz);
+                    pz.data_mut()[i] = orig - FD_H;
+                    let lm = loss(&pz);
+                    pz.data_mut()[i] = orig;
+                    (lp - lm) / (2.0 * FD_H)
+                })
+                .collect();
+            prop_assert_close(dz_adj.data(), &fd, TOL)?;
+        }
+        Ok(())
+    });
+}
