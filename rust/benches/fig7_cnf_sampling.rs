@@ -18,7 +18,8 @@ use hypersolvers::solvers::{
     dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, Tableau,
 };
 use hypersolvers::util::artifacts::{load_blob, require_manifest};
-use hypersolvers::util::benchkit::{Bench, Table};
+use hypersolvers::util::benchkit::{self, Bench, Table};
+use hypersolvers::util::json::{self, Value};
 
 const DENSITIES: [&str; 4] = [
     "cnf_pinwheel",
@@ -35,6 +36,7 @@ fn main() {
         "density", "method", "NFE", "MAPE vs dopri5", "hist L1 vs data",
         "ms/batch", "speedup",
     ]);
+    let mut rows_json: Vec<Value> = Vec::new();
 
     for density in DENSITIES {
         let task = m.task(density).unwrap();
@@ -82,6 +84,18 @@ fn main() {
                 format!("{:.3}", t.mean_ms()),
                 format!("{:.1}x", t_d5.mean_ms() / t.mean_ms()),
             ]);
+            rows_json.push(json::obj(vec![
+                ("density", json::s(short)),
+                ("method", json::s(name)),
+                ("nfe", json::num(nfe as f64)),
+                ("mape_vs_dopri5", json::num(mp)),
+                ("hist_l1_vs_data", json::num(hl1)),
+                ("ms_per_batch", json::num(t.mean_ms())),
+                (
+                    "speedup_vs_dopri5",
+                    json::num(t_d5.mean_ms() / t.mean_ms()),
+                ),
+            ]));
         }
     }
     table.print();
@@ -89,6 +103,11 @@ fn main() {
         "\npaper: hypersolved CNF sampling in 2 NFE matches dopri5 quality \
          while Heun at 2 NFE fails"
     );
+    let doc = benchkit::bench_doc("fig7_cnf_sampling", vec![("rows", Value::Arr(rows_json))]);
+    match benchkit::write_bench_json("BENCH_fig7_cnf.json", &doc) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench JSON: {e}"),
+    }
 
     // Fig. 1 qualitative: side-by-side density renders for one density
     let density = "cnf_pinwheel";

@@ -3,15 +3,21 @@
 //! The same sweep as Fig. 3 but with NFE on the cost axis (the appendix
 //! variant). Kept as its own bench so `cargo bench` regenerates every
 //! figure one-to-one; the dense K grid here is finer than Fig. 3's.
+//! Key numbers are also emitted through the shared benchkit JSON schema
+//! (`BENCH_fig9_pareto.json`), with the front extracted by the exact
+//! non-dominated-set rule of `pareto::front`.
 
-use hypersolvers::metrics::{mape, pareto_front, ParetoPoint};
+use hypersolvers::metrics::{mape, ParetoPoint};
 use hypersolvers::nn::ImageModel;
+use hypersolvers::pareto::front_of;
 use hypersolvers::solvers::{odeint_fixed, odeint_hyper, Tableau};
 use hypersolvers::util::artifacts::{load_blob, require_manifest};
-use hypersolvers::util::benchkit::Table;
+use hypersolvers::util::benchkit::{self, Table};
+use hypersolvers::util::json::{self, Value};
 
 fn main() {
     let m = require_manifest();
+    let mut datasets_json: Vec<Value> = Vec::new();
     for ds in ["img_smnist", "img_scifar"] {
         let task = m.task(ds).unwrap();
         let model = ImageModel::load(&m.weights_path(task)).unwrap();
@@ -55,7 +61,8 @@ fn main() {
             table.row(&row);
         }
         table.print();
-        let front = pareto_front(&points);
+        let front_idx = front_of(&points, |p| (p.cost, p.error));
+        let front: Vec<&ParetoPoint> = front_idx.iter().map(|&i| &points[i]).collect();
         println!(
             "front: {}",
             front
@@ -72,5 +79,37 @@ fn main() {
             "hypereuler holds {low_nfe_hyper} of the front points at NFE<=8 \
              (paper: dominant at low NFE)"
         );
+        datasets_json.push(json::obj(vec![
+            ("dataset", json::s(ds)),
+            (
+                "points",
+                Value::Arr(
+                    points
+                        .iter()
+                        .map(|p| {
+                            json::obj(vec![
+                                ("label", json::s(&p.label)),
+                                ("nfe", json::num(p.cost)),
+                                ("mape", json::num(p.error)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "front",
+                Value::Arr(front.iter().map(|p| json::s(&p.label)).collect()),
+            ),
+            (
+                "hyper_front_points_low_nfe",
+                json::num(low_nfe_hyper as f64),
+            ),
+        ]));
+    }
+
+    let doc = benchkit::bench_doc("fig9_pareto_nfe", vec![("datasets", Value::Arr(datasets_json))]);
+    match benchkit::write_bench_json("BENCH_fig9_pareto.json", &doc) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench JSON: {e}"),
     }
 }

@@ -22,18 +22,21 @@
 //! successive PRs can diff serving performance.
 
 use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hypersolvers::coordinator::{Engine, EngineConfig, Policy};
 use hypersolvers::data::workload::WorkloadSpec;
 use hypersolvers::runtime::{BackendKind, Manifest};
+use hypersolvers::tensor;
 use hypersolvers::util::artifacts::require_manifest;
-use hypersolvers::util::benchkit::Table;
+use hypersolvers::util::benchkit::{self, Table};
 use hypersolvers::util::cli::Cli;
 use hypersolvers::util::fixtures;
 use hypersolvers::util::json::{self, Value};
 use hypersolvers::util::prng::Rng;
 use hypersolvers::util::stats;
+use hypersolvers::util::threadpool::ThreadPool;
 
 fn main() {
     let args = Cli::new("serving_throughput — coordinator under Poisson load")
@@ -41,6 +44,12 @@ fn main() {
         .opt("workers", "0", "dispatch workers (0 = auto)")
         .opt("requests", "2000", "requests per scenario")
         .opt("rate", "2000", "offered requests/second")
+        .opt(
+            "matmul-threads",
+            "0",
+            "when > 0, rerun every scenario with the row-block matmul pool at \
+             this size and emit paired off/on rows",
+        )
         .parse_env();
 
     let backend = match BackendKind::from_name(&args.get("backend")) {
@@ -88,17 +97,47 @@ fn main() {
     );
 
     let mut table = Table::new(&[
-        "scenario", "reqs", "offered rps", "achieved rps", "p50 ms",
+        "scenario", "mm", "reqs", "offered rps", "achieved rps", "p50 ms",
         "p99 ms", "fill", "NFE/req", "conc peak",
     ]);
     let mut scenarios_json: Vec<Value> = Vec::new();
     let mut resolved_workers = 0usize;
+    let mut headline: Option<(f64, f64)> = None; // mixed-budget (p50, rps), pool off
 
-    for (scenario, budgets) in [
+    // paired matmul-pool modes: 0 (off) always, plus --matmul-threads on.
+    // Only the native backend runs batches through tensor::gemm_into —
+    // pairing a PJRT run would double the bench to measure pure noise.
+    let mm = args.get_usize("matmul-threads");
+    let pool_modes: Vec<usize> = if mm > 0 && matches!(backend, BackendKind::Native) {
+        vec![0, mm]
+    } else {
+        if mm > 0 {
+            eprintln!(
+                "--matmul-threads ignored: the {backend} backend never reaches \
+                 the row-block matmul pool"
+            );
+        }
+        vec![0]
+    };
+
+    let scenario_defs = [
         ("mixed budgets", vec![(0.05f32, 0.6f64), (0.15, 0.3), (0.01, 0.1)]),
         ("tight only (dopri5-ish)", vec![(0.0005, 1.0)]),
         ("loose only", vec![(0.3, 1.0)]),
-    ] {
+    ];
+    let mut runs: Vec<(&str, &Vec<(f32, f64)>, usize)> = Vec::new();
+    for (s, b) in &scenario_defs {
+        for &m in &pool_modes {
+            runs.push((*s, b, m));
+        }
+    }
+
+    for (scenario, budgets, mode) in runs {
+        if mode > 0 {
+            tensor::set_matmul_pool(Arc::new(ThreadPool::new(mode)));
+        } else {
+            tensor::clear_matmul_pool();
+        }
         let engine = Engine::new(EngineConfig {
             artifacts_dir: artifacts_dir.clone(),
             max_wait: Duration::from_millis(2),
@@ -116,7 +155,7 @@ fn main() {
             rate: args.get_f64("rate"),
             count: args.get_usize("requests"),
             tasks: tasks.clone(),
-            budgets,
+            budgets: budgets.clone(),
         };
         let trace = spec.generate(&mut Rng::new(7));
         let mut rng = Rng::new(8);
@@ -161,6 +200,7 @@ fn main() {
         );
         table.row(&[
             scenario.into(),
+            mode.to_string(),
             trace.events.len().to_string(),
             format!("{:.0}", spec.rate),
             format!("{achieved_rps:.0}"),
@@ -172,6 +212,7 @@ fn main() {
         ]);
         scenarios_json.push(json::obj(vec![
             ("scenario", json::s(scenario)),
+            ("matmul_threads", json::num(mode as f64)),
             ("requests", json::num(trace.events.len() as f64)),
             ("offered_rps", json::num(spec.rate)),
             ("throughput_rps", json::num(achieved_rps)),
@@ -182,7 +223,10 @@ fn main() {
             ("nfe_per_req", json::num(nfe_per_req)),
             ("inflight_peak", json::num(conc_peak as f64)),
         ]));
-        println!("[{scenario}] {}", metrics.report());
+        if scenario == "mixed budgets" && mode == 0 {
+            headline = Some((p50, achieved_rps));
+        }
+        println!("[{scenario}] mm={mode} {}", metrics.report());
         if conc_peak >= 2 {
             match backend {
                 BackendKind::Native => println!(
@@ -197,6 +241,7 @@ fn main() {
             }
         }
     }
+    tensor::clear_matmul_pool();
     println!();
     table.print();
     println!(
@@ -205,22 +250,39 @@ fn main() {
          'conc peak' ≥ 2 shows distinct queues overlapping on the pool."
     );
 
-    // machine-readable summary, so the bench trajectory is diffable PR over PR
-    let doc = json::obj(vec![
-        ("bench", json::s("serving_throughput")),
-        ("backend", json::s(&backend.to_string())),
-        ("workers", json::num(resolved_workers as f64)),
-        (
-            "requests_per_scenario",
-            json::num(args.get_usize("requests") as f64),
-        ),
-        ("offered_rate", json::num(args.get_f64("rate"))),
-        ("tasks", Value::Arr(tasks.iter().map(|t| json::s(t)).collect())),
-        ("scenarios", Value::Arr(scenarios_json)),
-    ]);
-    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
-    match std::fs::write(&path, json::to_string(&doc)) {
-        Ok(()) => println!("\nwrote {path}"),
-        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    // machine-readable summary in the shared bench schema, so the bench
+    // trajectory is diffable PR over PR
+    let doc = benchkit::bench_doc(
+        "serving_throughput",
+        vec![
+            ("backend", json::s(&backend.to_string())),
+            ("workers", json::num(resolved_workers as f64)),
+            (
+                "requests_per_scenario",
+                json::num(args.get_usize("requests") as f64),
+            ),
+            ("offered_rate", json::num(args.get_f64("rate"))),
+            ("matmul_threads", json::num(mm as f64)),
+            ("tasks", Value::Arr(tasks.iter().map(|t| json::s(t)).collect())),
+            ("scenarios", Value::Arr(scenarios_json)),
+        ],
+    );
+    match benchkit::write_bench_json("BENCH_serving.json", &doc) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench JSON: {e}"),
+    }
+    if let Some((p50, rps)) = headline {
+        let entry = benchkit::bench_doc(
+            "serving_throughput",
+            vec![
+                ("backend", json::s(&backend.to_string())),
+                ("mixed_p50_ms", json::num(p50)),
+                ("mixed_throughput_rps", json::num(rps)),
+            ],
+        );
+        match benchkit::append_trajectory(entry) {
+            Ok(path) => println!("appended to {}", path.display()),
+            Err(e) => eprintln!("failed to append bench trajectory: {e}"),
+        }
     }
 }

@@ -1,0 +1,245 @@
+//! `hyperbench` — the Pareto evaluation pipeline as a CLI.
+//!
+//! Grid config → hypersolver training → kernel sweeps (box + trajectory
+//! states) → grid-wide artifact export → serve-path sweep → Pareto fronts
+//! → `BENCH_pareto.json` (shared bench schema) + a `BENCH_trajectory.json`
+//! entry + human-readable tables.
+//!
+//! Examples:
+//!   hyperbench                                   # full grid, vdp/rotation/mlp64
+//!   hyperbench --tasks vdp --ks 1,2,4,8 --hyper-k 4
+//!   hyperbench --smoke                           # CI grid + assertions
+//!
+//! `--smoke` runs the CI-sized grid on VanDerPol and **asserts** that the
+//! trained HyperEuler point (a) lands on the NFE-vs-error Pareto front
+//! ahead of same-NFE Euler (and Midpoint when on the grid) in the kernel
+//! sweep over trajectory states, and (b) beats the same-NFE classical
+//! variants through the full serve path while costing less wall-clock
+//! than the tightest served dopri5. Exit code 1 when any claim fails.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hypersolvers::pareto::{
+    check_same_nfe_dominance, pareto_doc, render_plane, run_pipeline,
+    serve_speedup_vs_tightest_dopri5, trajectory_entry, GridConfig, TaskSpec,
+};
+use hypersolvers::tensor;
+use hypersolvers::util::benchkit;
+use hypersolvers::util::cli::{self, Cli};
+use hypersolvers::util::threadpool::ThreadPool;
+use hypersolvers::Result;
+
+fn main() {
+    let parsed = Cli::new(
+        "hyperbench — solver×step×tolerance×task Pareto sweeps over the \
+         kernel and serve paths",
+    )
+    .opt(
+        "tasks",
+        "vdp,rotation,mlp64",
+        "comma list: vdp | rotation | decay | mlp64 (synthetic MLP field)",
+    )
+    .opt("solvers", "euler,midpoint,rk4", "classical fixed-step tableaus")
+    .opt("ks", "1,2,4,8,16,32", "step counts of the fixed-step axis")
+    .opt("tols", "1e-2,1e-3,1e-5", "dopri5 tolerances of the adaptive axis")
+    .opt("hyper-base", "euler", "base tableau of the trained hypersolver")
+    .opt("hyper-k", "8", "step count the hypersolver is trained and swept at")
+    .opt("batch", "256", "states per sweep batch (also the serve batch)")
+    .opt("seed", "7", "PRNG seed")
+    .opt("span", "0,1", "integration span s0,s1")
+    .opt("box", "2", "initial-state box half-width")
+    .opt("ref-tol", "1e-7", "dopri5 tolerance of the error reference")
+    .opt("measure-ms", "150", "benchkit budget per grid cell (ms)")
+    .opt("train-steps", "4000", "max residual-fitting steps per task")
+    .opt("hidden", "16,16", "hidden widths of g_ω")
+    .opt("stop-at", "8", "early-stop at this one-step improvement factor")
+    .opt(
+        "artifacts-out",
+        "",
+        "serve-path artifact dir (default: a fresh temp dir; the export is \
+         directly servable by hypersolverd --backend native)",
+    )
+    .opt("matmul-threads", "0", "row-block matmul pool size (0 = off)")
+    .flag(
+        "smoke",
+        "CI grid on VanDerPol + hard assertions (ignores the grid-shape flags)",
+    )
+    .flag("quiet", "suppress per-task progress lines")
+    .parse_env();
+
+    let mm = parsed.get_usize("matmul-threads");
+    if mm > 0 {
+        tensor::set_matmul_pool(Arc::new(ThreadPool::new(mm)));
+        println!("matmul pool: {mm} workers");
+    }
+
+    if let Err(e) = run(&parsed) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(parsed: &hypersolvers::util::cli::Parsed) -> Result<()> {
+    let smoke = parsed.get_flag("smoke");
+    let quiet = parsed.get_flag("quiet");
+    let grid = if smoke {
+        GridConfig {
+            seed: parsed.get_usize("seed") as u64,
+            log: !quiet,
+            ..GridConfig::smoke()
+        }
+    } else {
+        GridConfig {
+            solvers: cli::parse_list(&parsed.get("solvers")),
+            ks: cli::parse_usize_list("--ks", &parsed.get("ks"))?,
+            tols: cli::parse_f32_list("--tols", &parsed.get("tols"))?,
+            hyper_base: parsed.get("hyper-base"),
+            hyper_k: parsed.get_usize("hyper-k"),
+            batch: parsed.get_usize("batch"),
+            seed: parsed.get_usize("seed") as u64,
+            span: cli::parse_span("--span", &parsed.get("span"))?,
+            sample_box: parsed.get_f64("box") as f32,
+            ref_tol: parsed.get_f64("ref-tol") as f32,
+            measure_ms: parsed.get_usize("measure-ms") as u64,
+            train_steps: parsed.get_usize("train-steps"),
+            train_hidden: cli::parse_usize_list("--hidden", &parsed.get("hidden"))?,
+            train_stop_at: parsed.get_f64("stop-at") as f32,
+            log: !quiet,
+            ..GridConfig::standard()
+        }
+    };
+    grid.validate()?;
+
+    let task_names = if smoke {
+        vec!["vdp".to_string()]
+    } else {
+        cli::parse_list(&parsed.get("tasks"))
+    };
+    let mut tasks = Vec::with_capacity(task_names.len());
+    for name in &task_names {
+        tasks.push(resolve_task(name, grid.seed)?);
+    }
+
+    let artifacts_dir = {
+        let out = parsed.get("artifacts-out");
+        if out.is_empty() {
+            temp_artifacts_dir()?
+        } else {
+            PathBuf::from(out)
+        }
+    };
+    println!(
+        "hyperbench: {} task(s), {} solvers × {} ks + hyper{}_k{} + {} tols → {}",
+        tasks.len(),
+        grid.solvers.len(),
+        grid.ks.len(),
+        grid.hyper_base,
+        grid.hyper_k,
+        grid.tols.len(),
+        artifacts_dir.display()
+    );
+
+    let reports = run_pipeline(&grid, &tasks, &artifacts_dir)?;
+
+    for r in &reports {
+        println!();
+        println!("{}", render_plane(&format!("[{}] kernel, box states", r.task), &r.kernel_box));
+        println!(
+            "{}",
+            render_plane(&format!("[{}] kernel, trajectory states", r.task), &r.kernel_traj)
+        );
+        println!("{}", render_plane(&format!("[{}] serve path (native)", r.task), &r.serve));
+        if let Some(sp) = serve_speedup_vs_tightest_dopri5(&r.serve, &grid) {
+            println!(
+                "[{}] served hyper{}_k{} runs {sp:.1}× faster than the tightest \
+                 served dopri5",
+                r.task, grid.hyper_base, grid.hyper_k
+            );
+        }
+    }
+
+    let doc = pareto_doc(&grid, &reports);
+    let path = benchkit::write_bench_json("BENCH_pareto.json", &doc)?;
+    println!("\nwrote {}", path.display());
+    let tpath = benchkit::append_trajectory(trajectory_entry(&grid, &reports))?;
+    println!("appended to {}", tpath.display());
+    println!("serve artifacts kept at {}", artifacts_dir.display());
+
+    if smoke {
+        assert_smoke(&grid, &reports)?;
+        println!("SMOKE OK: HyperEuler on the NFE front ahead of Euler, and ahead through the serve path");
+    }
+    Ok(())
+}
+
+/// The CI assertions: the paper's claim on the tiny grid, checked hard.
+fn assert_smoke(
+    grid: &GridConfig,
+    reports: &[hypersolvers::pareto::TaskReport],
+) -> Result<()> {
+    use hypersolvers::Error;
+    for r in reports {
+        // kernel plane, trajectory states (the distribution g trained on)
+        let chk = check_same_nfe_dominance(&r.kernel_traj, grid)?;
+        if !chk.dominates_same_nfe_euler() {
+            return Err(Error::Other(format!(
+                "[{}] smoke: {} (err {:.3e}) does not beat same-NFE euler ({:?})",
+                r.task, chk.hyper_label, chk.err_hyper, chk.err_euler
+            )));
+        }
+        if chk.err_midpoint.is_some() && !chk.dominates_same_nfe_midpoint() {
+            return Err(Error::Other(format!(
+                "[{}] smoke: {} (err {:.3e}) does not beat same-NFE midpoint ({:?})",
+                r.task, chk.hyper_label, chk.err_hyper, chk.err_midpoint
+            )));
+        }
+        if !chk.on_nfe_front {
+            return Err(Error::Other(format!(
+                "[{}] smoke: {} is not on the NFE-vs-error front",
+                r.task, chk.hyper_label
+            )));
+        }
+        // serve plane: same-NFE error ranking survives the full serve
+        // path, and the hyper variant undercuts the tightest dopri5 wall
+        let schk = check_same_nfe_dominance(&r.serve, grid)?;
+        if !schk.dominates_same_nfe_euler() {
+            return Err(Error::Other(format!(
+                "[{}] smoke: served {} (err {:.3e}) does not beat same-NFE euler ({:?})",
+                r.task, schk.hyper_label, schk.err_hyper, schk.err_euler
+            )));
+        }
+        match serve_speedup_vs_tightest_dopri5(&r.serve, grid) {
+            Some(sp) if sp > 1.0 => {}
+            other => {
+                return Err(Error::Other(format!(
+                    "[{}] smoke: served hyper point is not faster than the \
+                     tightest dopri5 (speedup {other:?})",
+                    r.task
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+fn resolve_task(name: &str, seed: u64) -> Result<TaskSpec> {
+    match name {
+        "mlp64" => Ok(TaskSpec::synthetic_mlp("mlp64", &[64, 64], seed)),
+        "mlp16" => Ok(TaskSpec::synthetic_mlp("mlp16", &[16, 16], seed)),
+        other => TaskSpec::analytic(other),
+    }
+}
+
+fn temp_artifacts_dir() -> Result<PathBuf> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "hyperbench_artifacts_{}_{}",
+        std::process::id(),
+        UNIQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+

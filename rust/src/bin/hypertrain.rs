@@ -18,13 +18,18 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use hypersolvers::nn::{AnalyticField, CnfModel, FieldNet};
-use hypersolvers::tensor;
+use hypersolvers::nn::{AnalyticField, CnfModel, FieldNet, HyperMlp};
+use hypersolvers::solvers::Tableau;
+use hypersolvers::tensor::{self, Tensor, Workspace};
 use hypersolvers::train::{
-    export_trained, serve_check, train_hypersolver, FineRef, StateSampler, TrainConfig,
+    export_trained, hyper_input_into, mlp_backward, mlp_forward_cached, mse_loss_grad,
+    serve_check, train_hypersolver, FineRef, MlpCache, MlpGrads, ResidualBatch, ResidualGen,
+    StateSampler, TrainConfig,
 };
-use hypersolvers::util::cli::Cli;
+use hypersolvers::util::benchkit::{self, Bench};
+use hypersolvers::util::cli::{self, Cli};
 use hypersolvers::util::json::{self, Value};
+use hypersolvers::util::prng::Rng;
 use hypersolvers::util::threadpool::ThreadPool;
 use hypersolvers::Result;
 
@@ -48,6 +53,11 @@ fn main() {
         .opt("fine-tol", "0", "use dopri5(tol) as the fine reference when > 0")
         .opt("box", "2", "sample states uniform in [-box, box]^dim")
         .opt("density", "", "sample states from a data density (rings, pinwheel, ...)")
+        .flag(
+            "sample-traj",
+            "draw training states along base-solver trajectories of the field \
+             (the paper's CNF setup)",
+        )
         .opt("eval-every", "100", "validation cadence (steps)")
         .opt("patience", "6", "early stop after this many flat evaluations")
         .opt("stop-at", "0", "stop once the one-step improvement factor reaches this")
@@ -74,14 +84,14 @@ fn main() {
         }
     };
 
-    let span = match parse_span(&parsed.get("span")) {
+    let span = match cli::parse_span("--span", &parsed.get("span")) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("error: {e}");
             std::process::exit(2);
         }
     };
-    let hidden = match parse_usize_list(&parsed.get("hidden")) {
+    let hidden = match cli::parse_usize_list("--hidden", &parsed.get("hidden")) {
         Ok(h) => h,
         Err(e) => {
             eprintln!("error: {e}");
@@ -91,6 +101,11 @@ fn main() {
     let fine_tol = parsed.get_f64("fine-tol") as f32;
     let density = parsed.get("density");
     let boxr = parsed.get_f64("box") as f32;
+    let sample_traj = parsed.get_flag("sample-traj");
+    if sample_traj && !density.is_empty() {
+        eprintln!("error: --sample-traj and --density are mutually exclusive");
+        std::process::exit(2);
+    }
     let cfg = TrainConfig {
         solver: parsed.get("solver"),
         hidden,
@@ -106,7 +121,16 @@ fn main() {
         } else {
             FineRef::Rk4Substeps(parsed.get_usize("substeps"))
         },
-        sampler: if density.is_empty() {
+        sampler: if sample_traj {
+            StateSampler::Trajectory {
+                lo: -boxr,
+                hi: boxr,
+                dim: field.state_dim(),
+                solver: parsed.get("solver"),
+                k: parsed.get_usize("k").max(1),
+                span,
+            }
+        } else if density.is_empty() {
             StateSampler::UniformBox {
                 lo: -boxr,
                 hi: boxr,
@@ -145,6 +169,7 @@ fn main() {
         Path::new(&parsed.get("out")),
         parsed.get_usize("export-batch"),
         parsed.get_flag("bench"),
+        mm,
     ) {
         eprintln!("error: {e}");
         std::process::exit(1);
@@ -158,6 +183,7 @@ fn run(
     out: &Path,
     export_batch: usize,
     bench: bool,
+    matmul_threads: usize,
 ) -> Result<()> {
     println!(
         "training g_ω: base {} K={} over [{}, {}], {} max steps, batch {}",
@@ -186,8 +212,10 @@ fn run(
     );
 
     if bench {
-        let doc = json::obj(vec![
-            ("bench", json::s("hypertrain")),
+        // paired matmul-pool measurement: the gemm-heavy training step
+        // core timed with the row-block pool off and on, so BENCH JSON
+        // records what --matmul-threads actually buys on this config
+        let mut fields: Vec<(&str, Value)> = vec![
             ("task", json::s(task)),
             ("solver", json::s(&cfg.solver)),
             ("k", json::num(cfg.k as f64)),
@@ -216,12 +244,74 @@ fn run(
                         .collect(),
                 ),
             ),
-        ]);
-        let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_train.json".into());
-        std::fs::write(&path, json::to_string(&doc))?;
-        println!("wrote {path}");
+            ("matmul_threads", json::num(matmul_threads as f64)),
+        ];
+        let matmul_pair = if matmul_threads > 0 {
+            tensor::clear_matmul_pool();
+            let off = time_train_step(field, &g, cfg)?;
+            tensor::set_matmul_pool(Arc::new(ThreadPool::new(matmul_threads)));
+            let on = time_train_step(field, &g, cfg)?;
+            println!(
+                "matmul pool on the training-step core: off {off:.3} ms, \
+                 on({matmul_threads}) {on:.3} ms ({:.2}× speedup)",
+                off / on.max(1e-9)
+            );
+            Some(json::obj(vec![
+                ("threads", json::num(matmul_threads as f64)),
+                ("step_ms_pool_off", json::num(off)),
+                ("step_ms_pool_on", json::num(on)),
+                ("speedup", json::num(off / on.max(1e-9))),
+            ]))
+        } else {
+            None
+        };
+        if let Some(pair) = matmul_pair {
+            fields.push(("matmul", pair));
+        }
+        let doc = benchkit::bench_doc("hypertrain", fields);
+        let path = benchkit::write_bench_json("BENCH_train.json", &doc)?;
+        println!("wrote {}", path.display());
+        let traj = benchkit::bench_doc(
+            "hypertrain",
+            vec![
+                ("task", json::s(task)),
+                ("improvement", json::num(report.improvement as f64)),
+                ("err_hyper", json::num(report.err_hyper as f64)),
+                ("steps_per_sec", json::num(report.steps_per_sec)),
+            ],
+        );
+        let tpath = benchkit::append_trajectory(traj)?;
+        println!("appended to {}", tpath.display());
     }
     Ok(())
+}
+
+/// Mean ms of one gemm-heavy training-step core (cached forward + loss
+/// grad + reverse pass) on the trained net — the paired measurement behind
+/// the `matmul` rows in `BENCH_train.json`. Target generation happens once
+/// outside the timed loop, so the measurement isolates the matmul stack.
+fn time_train_step(field: &FieldNet, g: &HyperMlp, cfg: &TrainConfig) -> Result<f64> {
+    let tab = Tableau::by_name(&cfg.solver)?;
+    let d = cfg.sampler.dim();
+    let span = cfg.s_span.1 - cfg.s_span.0;
+    let eps = span / cfg.k.max(1) as f32;
+    let mut gen = ResidualGen::new(field, tab, cfg.fine);
+    let mut rng = Rng::new(cfg.seed ^ 0x00B4_1C00);
+    let mut batch = ResidualBatch::new();
+    let s_range = (cfg.s_span.0, (cfg.s_span.1 - eps).max(cfg.s_span.0));
+    gen.fill(&cfg.sampler, cfg.batch, s_range, eps, &mut rng, &mut batch)?;
+    let mut x = Tensor::zeros(&[cfg.batch, 2 * d + 2]);
+    hyper_input_into(batch.eps, batch.s, &batch.z, &batch.dz, &mut x)?;
+    let mut dy = Tensor::zeros(&[cfg.batch, d]);
+    let mut cache = MlpCache::new();
+    let mut grads = MlpGrads::new();
+    let mut ws = Workspace::new();
+    let m = Bench::quick().run("train_step", || {
+        mlp_forward_cached(&g.mlp, &x, &mut cache).unwrap();
+        mse_loss_grad(cache.output(), &batch.target, &mut dy).unwrap();
+        mlp_backward(&g.mlp, &cache, &dy, &mut grads, None, &mut ws).unwrap();
+    });
+    Ok(m.mean_ms())
 }
 
 fn load_field(weights: &str, field: &str, parsed: &hypersolvers::util::cli::Parsed) -> Result<FieldNet> {
@@ -248,31 +338,3 @@ fn load_field(weights: &str, field: &str, parsed: &hypersolvers::util::cli::Pars
     Ok(FieldNet::Analytic(f))
 }
 
-fn parse_span(s: &str) -> Result<(f32, f32)> {
-    let parts: std::result::Result<Vec<f32>, _> =
-        s.split(',').map(|x| x.trim().parse::<f32>()).collect();
-    match parts.as_deref() {
-        Ok([a, b]) => Ok((*a, *b)),
-        _ => Err(hypersolvers::Error::Other(format!(
-            "--span expects two comma-separated numbers (s0,s1), got {s:?}"
-        ))),
-    }
-}
-
-/// Comma-separated widths; an empty string means no hidden layers (a
-/// purely linear g_ω), but any unparsable token is an error — silently
-/// dropping it would train a different architecture than asked for.
-fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
-    if s.trim().is_empty() {
-        return Ok(Vec::new());
-    }
-    s.split(',')
-        .map(|x| {
-            x.trim().parse::<usize>().map_err(|_| {
-                hypersolvers::Error::Other(format!(
-                    "--hidden expects comma-separated integers, got {x:?} in {s:?}"
-                ))
-            })
-        })
-        .collect()
-}

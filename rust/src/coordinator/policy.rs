@@ -70,6 +70,7 @@ mod tests {
             nfe,
             macs,
             mape,
+            tol: None,
             acc_drop: None,
             in_shape: vec![4, 2],
             out_shape: vec![4, 2],

@@ -36,6 +36,14 @@
 //! weights the native backend loads unchanged — see the `hypertrain`
 //! binary and rust/README.md §"Training hypersolvers in-repo".
 //!
+//! The [`pareto`] module *measures* the paper's headline claim end to end:
+//! the `hyperbench` binary sweeps a (solver × step-count/tolerance × task)
+//! grid through the `_ws` kernels and the native serve path, extracts
+//! dominance-correct Pareto fronts, and emits `BENCH_pareto.json` plus a
+//! rolling `BENCH_trajectory.json` — the repo's permanent bench
+//! trajectory (rust/README.md §"Pareto evaluation & the bench
+//! trajectory").
+//!
 //! The [`util`] module contains substrates this offline environment forced
 //! us to build from scratch: PRNG, JSON codec, CLI parsing, thread pool,
 //! a bench harness (`benchkit`) and a property-test harness (`propkit`).
@@ -45,6 +53,7 @@ pub mod data;
 pub mod metrics;
 pub mod nn;
 pub mod ode;
+pub mod pareto;
 pub mod runtime;
 pub mod solvers;
 pub mod tensor;

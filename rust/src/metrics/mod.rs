@@ -80,31 +80,22 @@ pub struct ParetoPoint {
     pub error: f64,
 }
 
-/// Extract the Pareto-efficient subset (no other point has both lower cost
-/// and lower error), sorted by cost.
+/// Extract the Pareto-efficient subset, sorted by cost. Delegates to
+/// [`crate::pareto::front`] so the whole crate — these labeled
+/// convenience points, the fig benches, and the sweep subsystem — shares
+/// ONE dominance rule (the exact non-dominated set: equal-(cost, error)
+/// ties kept, equal-error-higher-cost dropped).
 pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
-    let mut sorted: Vec<ParetoPoint> = points.to_vec();
-    sorted.sort_by(|a, b| {
-        a.cost
-            .partial_cmp(&b.cost)
-            .unwrap()
-            .then(a.error.partial_cmp(&b.error).unwrap())
-    });
-    let mut front: Vec<ParetoPoint> = Vec::new();
-    let mut best_err = f64::INFINITY;
-    for p in sorted {
-        if p.error < best_err {
-            best_err = p.error;
-            front.push(p);
-        }
-    }
-    front
+    crate::pareto::front::front_of(points, |p| (p.cost, p.error))
+        .into_iter()
+        .map(|i| points[i].clone())
+        .collect()
 }
 
 /// Does `a` dominate `b` (cheaper-or-equal AND more-accurate-or-equal, with
-/// at least one strict)?
+/// at least one strict)? Same rule as [`crate::pareto::front::dominates`].
 pub fn dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
-    (a.cost <= b.cost && a.error <= b.error) && (a.cost < b.cost || a.error < b.error)
+    crate::pareto::front::dominates((a.cost, a.error), (b.cost, b.error))
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,112 @@
+//! Dominance-correct Pareto-front extraction.
+//!
+//! The front is the *exact* non-dominated subset: a point survives iff no
+//! other point is at-most-equal on both axes and strictly better on at
+//! least one. This is stricter bookkeeping than a plain best-so-far scan —
+//! equal-(cost, error) duplicates are mutually non-dominating and all
+//! belong on the front, while an equal-error point at strictly higher
+//! cost is dominated and must go. `tests/pareto_front.rs` pins this
+//! definition against a brute-force O(n²) reference.
+
+/// Does `a` dominate `b` on (cost, error)? No worse on both axes, strictly
+/// better on at least one.
+pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Indices of the exact non-dominated subset of `points`, in the stable
+/// order (cost asc, error asc, original index asc). Points with a
+/// non-finite coordinate are never on the front (and never dominate —
+/// they are skipped entirely).
+pub fn non_dominated(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len())
+        .filter(|&i| points[i].0.is_finite() && points[i].1.is_finite())
+        .collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .partial_cmp(&points[b].0)
+            .unwrap()
+            .then(points[a].1.partial_cmp(&points[b].1).unwrap())
+            .then(a.cmp(&b))
+    });
+    // one scan over cost groups: a point survives iff it ties the minimum
+    // error within its own cost group AND that minimum is strictly below
+    // every strictly-cheaper point's error
+    let mut out = Vec::new();
+    let mut best_cheaper = f64::INFINITY;
+    let mut i = 0;
+    while i < idx.len() {
+        let cost = points[idx[i]].0;
+        let mut j = i;
+        while j < idx.len() && points[idx[j]].0 == cost {
+            j += 1;
+        }
+        // sorted by error within the group, so the group minimum is first
+        let group_min = points[idx[i]].1;
+        if group_min < best_cheaper {
+            for &p in &idx[i..j] {
+                if points[p].1 == group_min {
+                    out.push(p);
+                }
+            }
+            best_cheaper = group_min;
+        }
+        i = j;
+    }
+    out
+}
+
+/// [`non_dominated`] over arbitrary items via a (cost, error) projection.
+pub fn front_of<T>(items: &[T], key: impl Fn(&T) -> (f64, f64)) -> Vec<usize> {
+    let pts: Vec<(f64, f64)> = items.iter().map(&key).collect();
+    non_dominated(&pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_definition() {
+        assert!(dominates((1.0, 1.0), (2.0, 1.0)));
+        assert!(dominates((1.0, 1.0), (1.0, 2.0)));
+        assert!(dominates((1.0, 1.0), (2.0, 2.0)));
+        assert!(!dominates((1.0, 1.0), (1.0, 1.0)), "ties do not dominate");
+        assert!(!dominates((1.0, 2.0), (2.0, 1.0)), "trade-offs do not dominate");
+    }
+
+    #[test]
+    fn keeps_exactly_the_non_dominated_set() {
+        let pts = vec![
+            (1.0, 0.5),
+            (2.0, 0.6), // dominated by (2.0, 0.2)
+            (2.0, 0.2),
+            (4.0, 0.1),
+            (3.0, 0.5), // dominated by (1.0, 0.5): equal error, higher cost
+        ];
+        assert_eq!(non_dominated(&pts), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn equal_points_are_mutually_non_dominating() {
+        let pts = vec![(1.0, 0.5), (1.0, 0.5), (0.5, 0.9)];
+        assert_eq!(non_dominated(&pts), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn non_finite_points_are_ignored() {
+        let pts = vec![(f64::NAN, 0.0), (1.0, f64::INFINITY), (2.0, 0.3)];
+        assert_eq!(non_dominated(&pts), vec![2]);
+    }
+
+    #[test]
+    fn front_of_projects() {
+        struct P {
+            c: f64,
+            e: f64,
+        }
+        let items = vec![P { c: 1.0, e: 1.0 }, P { c: 2.0, e: 2.0 }];
+        assert_eq!(front_of(&items, |p| (p.c, p.e)), vec![0]);
+    }
+}

@@ -1,0 +1,316 @@
+//! The sweep grid: which (solver × step-count/tolerance × task × state
+//! distribution) cells the Pareto evaluation visits, plus the training
+//! budget of the hypersolver point.
+//!
+//! One [`GridConfig`] drives the whole pipeline — kernel sweeps, the
+//! serve-path artifact export, the serve sweep, and the residual-fitting
+//! run that produces the trained HyperEuler point — so a `BENCH_pareto.json`
+//! is reproducible from its embedded grid block plus the seed.
+
+use crate::nn::{Act, AnalyticField, FieldNet, Linear, Mlp, MlpField, TimeMode};
+use crate::solvers::Tableau;
+use crate::tensor::Tensor;
+use crate::train::StateSampler;
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+/// One task of the sweep: a named vector field. All tasks are CNF-shaped
+/// (planar states), matching the serving stack's `cnf` task kind.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: String,
+    pub field: FieldNet,
+}
+
+impl TaskSpec {
+    /// The paper's analytic reference fields: `vdp` | `rotation` | `decay`.
+    pub fn analytic(name: &str) -> Result<TaskSpec> {
+        let (name, field) = match name {
+            "vdp" | "vanderpol" => ("vdp", AnalyticField::VanDerPol { mu: 1.0 }),
+            "rotation" => ("rotation", AnalyticField::Rotation { omega: 1.0 }),
+            "decay" => ("decay", AnalyticField::Decay { lambda: -1.0 }),
+            other => {
+                return Err(Error::Other(format!(
+                    "unknown analytic task {other:?} (vdp | rotation | decay)"
+                )))
+            }
+        };
+        Ok(TaskSpec {
+            name: name.to_string(),
+            field: FieldNet::Analytic(field),
+        })
+    }
+
+    /// A seeded synthetic MLP field: tanh hidden layers bound the field
+    /// magnitude (so every solver stays finite over the span) and the
+    /// last layer's weights are scaled down to keep |f| ≈ O(1). Its cost
+    /// profile — thousands of MACs per evaluation — is the regime where
+    /// hypersolvers win *wall-clock*, complementing the ~free analytic
+    /// fields where only the NFE axis is interesting (paper §6's relative
+    /// overhead argument).
+    pub fn synthetic_mlp(name: &str, hidden: &[usize], seed: u64) -> TaskSpec {
+        let mut rng = Rng::new(seed ^ 0x517E_F1E1D);
+        let state_dim = 2usize;
+        let mut dims = Vec::with_capacity(hidden.len() + 2);
+        dims.push(state_dim + TimeMode::Concat.dim());
+        dims.extend_from_slice(hidden);
+        dims.push(state_dim);
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        for li in 0..dims.len() - 1 {
+            let (din, dout) = (dims[li], dims[li + 1]);
+            let last = li == dims.len() - 2;
+            let scale = if last {
+                0.5 / (din as f32).sqrt()
+            } else {
+                1.0 / (din as f32).sqrt()
+            };
+            let w = Tensor::new(
+                &[din, dout],
+                (0..din * dout).map(|_| rng.normal_f32() * scale).collect(),
+            )
+            .expect("synthetic field weight shape");
+            layers.push(Linear {
+                w,
+                b: vec![0.0; dout],
+                act: if last { Act::Id } else { Act::Tanh },
+            });
+        }
+        TaskSpec {
+            name: name.to_string(),
+            field: FieldNet::Mlp(MlpField {
+                mlp: Mlp { layers },
+                time_mode: TimeMode::Concat,
+            }),
+        }
+    }
+}
+
+/// The full sweep grid + hypersolver training budget.
+#[derive(Clone, Debug)]
+pub struct GridConfig {
+    /// Classical fixed-step tableaus swept at every k in `ks`.
+    pub solvers: Vec<String>,
+    pub ks: Vec<usize>,
+    /// dopri5 tolerances — the adaptive axis of the grid.
+    pub tols: Vec<f32>,
+    /// Base tableau of the trained hypersolver point.
+    pub hyper_base: String,
+    /// Step count the hypersolver is trained at and swept at.
+    pub hyper_k: usize,
+    /// States per sweep batch (also the exported serve batch).
+    pub batch: usize,
+    pub seed: u64,
+    pub span: (f32, f32),
+    /// Initial-state box half-width for both samplers.
+    pub sample_box: f32,
+    /// Mesh resolution of the trajectory state sampler.
+    pub traj_mesh_k: usize,
+    /// Checkpoints of the trajectory-error metric; a fixed-step method
+    /// reports it only when `traj_checkpoints` divides its k.
+    pub traj_checkpoints: usize,
+    /// Tolerance of the tight dopri5 error reference.
+    pub ref_tol: f32,
+    /// benchkit measurement budget per grid cell (ms).
+    pub measure_ms: u64,
+    /// Residual-fitting budget of the hypersolver point.
+    pub train_steps: usize,
+    pub train_hidden: Vec<usize>,
+    /// Early-stop once the held-out one-step improvement reaches this.
+    pub train_stop_at: f32,
+    /// Print training/sweep progress lines.
+    pub log: bool,
+}
+
+impl GridConfig {
+    /// The full paper-scale grid (minutes of wall time per task).
+    pub fn standard() -> GridConfig {
+        GridConfig {
+            solvers: vec!["euler".into(), "midpoint".into(), "rk4".into()],
+            ks: vec![1, 2, 4, 8, 16, 32],
+            tols: vec![1e-2, 1e-3, 1e-5],
+            hyper_base: "euler".into(),
+            hyper_k: 8,
+            batch: 256,
+            seed: 7,
+            span: (0.0, 1.0),
+            sample_box: 2.0,
+            traj_mesh_k: 16,
+            traj_checkpoints: 4,
+            ref_tol: 1e-7,
+            measure_ms: 150,
+            train_steps: 4000,
+            train_hidden: vec![16, 16],
+            train_stop_at: 8.0,
+            log: true,
+        }
+    }
+
+    /// A CI-sized grid (seconds): tiny k axis, short training, quick
+    /// timing budgets. The hypersolver trains at k=2, where both same-NFE
+    /// rivals (euler k=2, midpoint k=1) are far off — the smoke
+    /// assertions hold with wide margins.
+    pub fn smoke() -> GridConfig {
+        GridConfig {
+            solvers: vec!["euler".into(), "midpoint".into()],
+            ks: vec![1, 2, 4],
+            tols: vec![1e-3, 1e-5],
+            hyper_k: 2,
+            batch: 64,
+            traj_mesh_k: 8,
+            traj_checkpoints: 2,
+            measure_ms: 40,
+            train_steps: 1500,
+            train_hidden: vec![8],
+            train_stop_at: 4.0,
+            ..GridConfig::standard()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.solvers.is_empty() || self.ks.is_empty() {
+            return Err(Error::Other("grid: solvers and ks must be non-empty".into()));
+        }
+        if self.ks.contains(&0) || self.hyper_k == 0 {
+            return Err(Error::Other("grid: step counts must be > 0".into()));
+        }
+        if self.batch == 0 || self.traj_checkpoints == 0 || self.traj_mesh_k == 0 {
+            return Err(Error::Other(
+                "grid: batch, traj_checkpoints, traj_mesh_k must be > 0".into(),
+            ));
+        }
+        if self.span.1 <= self.span.0 {
+            return Err(Error::Other("grid: span must be increasing".into()));
+        }
+        let bad_tol = |t: f32| t <= 0.0 || t.is_nan();
+        if bad_tol(self.ref_tol) || self.tols.iter().any(|t| bad_tol(*t)) {
+            return Err(Error::Other("grid: tolerances must be > 0".into()));
+        }
+        for name in self.solvers.iter().chain(std::iter::once(&self.hyper_base)) {
+            let tab = Tableau::by_name(name)?;
+            if tab.b_err.is_some() {
+                return Err(Error::Other(format!(
+                    "grid: {name} is an adaptive pair; the fixed-step axis \
+                     takes fixed-step tableaus (the tolerance axis covers \
+                     adaptive solvers)"
+                )));
+            }
+        }
+        // duplicate axis values would export manifest variants with
+        // identical names, which every later lookup silently aliases —
+        // reject here instead of producing a corrupted BENCH_pareto.json.
+        // (Distinct literals like 1e-3 and 0.001 collide as the same f32
+        // and therefore the same variant label; value equality catches
+        // exactly that.)
+        fn has_dup<T: PartialEq>(xs: &[T]) -> bool {
+            xs.iter()
+                .enumerate()
+                .any(|(i, x)| xs[..i].contains(x))
+        }
+        if has_dup(&self.solvers) || has_dup(&self.ks) || has_dup(&self.tols) {
+            return Err(Error::Other(
+                "grid: duplicate solver, k, or tolerance values".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Uniform-box state sampler over `[-sample_box, sample_box]^dim`.
+    pub fn box_sampler(&self, dim: usize) -> StateSampler {
+        StateSampler::UniformBox {
+            lo: -self.sample_box,
+            hi: self.sample_box,
+            dim,
+        }
+    }
+
+    /// Trajectory state sampler: states along `hyper_base` trajectories of
+    /// the field (the paper's CNF serving distribution) — shared between
+    /// the sweep and `train::residual`.
+    pub fn traj_sampler(&self, dim: usize) -> StateSampler {
+        StateSampler::Trajectory {
+            lo: -self.sample_box,
+            hi: self.sample_box,
+            dim,
+            solver: self.hyper_base.clone(),
+            k: self.traj_mesh_k,
+            span: self.span,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::VectorField;
+
+    #[test]
+    fn analytic_tasks_resolve_and_unknown_rejected() {
+        for name in ["vdp", "rotation", "decay"] {
+            let t = TaskSpec::analytic(name).unwrap();
+            assert_eq!(t.name, name);
+            assert_eq!(t.field.state_dim(), 2);
+        }
+        assert_eq!(TaskSpec::analytic("vanderpol").unwrap().name, "vdp");
+        assert!(TaskSpec::analytic("nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_mlp_field_is_bounded_and_seeded() {
+        let t = TaskSpec::synthetic_mlp("mlp16", &[16, 16], 7);
+        assert_eq!(t.field.state_dim(), 2);
+        // seeded determinism
+        let t2 = TaskSpec::synthetic_mlp("mlp16", &[16, 16], 7);
+        let z = Tensor::new(&[3, 2], vec![0.5, -1.0, 2.0, 0.0, -1.5, 1.5]).unwrap();
+        assert_eq!(t.field.eval(0.3, &z).data(), t2.field.eval(0.3, &z).data());
+        // tanh hidden + scaled-down output layer keep |f| O(1): the bound
+        // is Σ|w_out| per coordinate, comfortably below 16
+        let dz = t.field.eval(0.0, &z);
+        assert!(dz.data().iter().all(|v| v.is_finite() && v.abs() < 16.0));
+        // a different seed gives a different field
+        let t3 = TaskSpec::synthetic_mlp("mlp16", &[16, 16], 8);
+        assert_ne!(t.field.eval(0.3, &z).data(), t3.field.eval(0.3, &z).data());
+    }
+
+    #[test]
+    fn grid_validation() {
+        assert!(GridConfig::standard().validate().is_ok());
+        assert!(GridConfig::smoke().validate().is_ok());
+        let mut g = GridConfig::smoke();
+        g.ks = vec![];
+        assert!(g.validate().is_err());
+        let mut g = GridConfig::smoke();
+        g.solvers = vec!["dopri5".into()];
+        assert!(g.validate().is_err(), "adaptive pair on the fixed-step axis");
+        let mut g = GridConfig::smoke();
+        g.span = (1.0, 0.0);
+        assert!(g.validate().is_err());
+        let mut g = GridConfig::smoke();
+        g.tols = vec![0.0];
+        assert!(g.validate().is_err());
+        let mut g = GridConfig::smoke();
+        g.ks = vec![1, 2, 2];
+        assert!(g.validate().is_err(), "duplicate k would alias variant names");
+        let mut g = GridConfig::smoke();
+        g.tols = vec![1e-3, 0.001];
+        assert!(g.validate().is_err(), "tolerances colliding as f32 rejected");
+    }
+
+    #[test]
+    fn samplers_share_the_grid_geometry() {
+        let g = GridConfig::smoke();
+        match g.box_sampler(2) {
+            StateSampler::UniformBox { lo, hi, dim } => {
+                assert_eq!((lo, hi, dim), (-g.sample_box, g.sample_box, 2));
+            }
+            other => panic!("unexpected sampler {other:?}"),
+        }
+        match g.traj_sampler(2) {
+            StateSampler::Trajectory { solver, k, span, .. } => {
+                assert_eq!(solver, g.hyper_base);
+                assert_eq!(k, g.traj_mesh_k);
+                assert_eq!(span, g.span);
+            }
+            other => panic!("unexpected sampler {other:?}"),
+        }
+    }
+}

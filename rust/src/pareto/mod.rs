@@ -1,0 +1,43 @@
+//! The Pareto evaluation subsystem — the repo's measurement backbone for
+//! the paper's headline claim (accuracy-vs-NFE/wall-clock pareto
+//! efficiency, §4 figs. 3/9).
+//!
+//! A [`GridConfig`] names a (solver × step-count/tolerance × task × state
+//! distribution) grid; the pipeline trains the hypersolver point by
+//! residual fitting ([`crate::train`]), sweeps every cell through the
+//! allocation-free `_ws` solver kernels *and* through the full
+//! [`NativeBackend`] serve path, computes terminal/trajectory error
+//! against a tight-tolerance dopri5 reference, extracts dominance-correct
+//! Pareto fronts, and emits one `BENCH_pareto.json` in the shared
+//! [`benchkit`](crate::util::benchkit) schema (plus a rolling
+//! `BENCH_trajectory.json` entry, so successive PRs accumulate a bench
+//! trajectory). The `hyperbench` binary drives it; `--smoke` runs a
+//! CI-sized grid and asserts the trained HyperEuler lands on the NFE
+//! front ahead of Euler.
+//!
+//! * [`grid`] — the grid config, task specs (analytic + synthetic MLP
+//!   fields), and the shared state samplers.
+//! * [`sweep`] — kernel and serve sweeps plus the grid-wide artifact
+//!   exporter ([`sweep::write_sweep_artifacts`]).
+//! * [`front`] — exact non-dominated-set extraction.
+//! * [`report`] — the pipeline, the JSON document, dominance checks, and
+//!   table rendering.
+//!
+//! [`NativeBackend`]: crate::runtime::NativeBackend
+//! [`GridConfig`]: grid::GridConfig
+
+pub mod front;
+pub mod grid;
+pub mod report;
+pub mod sweep;
+
+pub use front::{dominates, front_of, non_dominated};
+pub use grid::{GridConfig, TaskSpec};
+pub use report::{
+    check_same_nfe_dominance, pareto_doc, render_plane, run_pipeline,
+    serve_speedup_vs_tightest_dopri5, trajectory_entry, DominanceCheck, TaskReport,
+    TrainSummary,
+};
+pub use sweep::{
+    kernel_sweep, method_label, serve_sweep, write_sweep_artifacts, SweepPoint,
+};

@@ -1,0 +1,498 @@
+//! The pipeline (train → sweep → export → serve-sweep), the unified
+//! `BENCH_pareto.json` document, human-readable tables, and the dominance
+//! checks the smoke mode and the end-to-end test assert.
+
+use std::path::Path;
+
+use crate::pareto::front::front_of;
+use crate::pareto::grid::{GridConfig, TaskSpec};
+use crate::pareto::sweep::{
+    kernel_sweep, method_label, serve_sweep, write_sweep_artifacts, SweepPoint,
+};
+use crate::runtime::Manifest;
+use crate::train::{train_hypersolver, FineRef, TrainConfig};
+use crate::util::benchkit::{self, Table};
+use crate::util::json::{self, Value};
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+/// What training the task's hypersolver point produced.
+#[derive(Clone, Debug)]
+pub struct TrainSummary {
+    pub steps_run: usize,
+    /// Held-out one-step improvement factor over the base solver.
+    pub improvement: f32,
+    pub err_base: f32,
+    pub err_hyper: f32,
+    /// Best validation loss δ (exported as the manifest `delta`).
+    pub delta: f32,
+    pub wall_secs: f64,
+}
+
+/// Everything the pipeline measured for one task.
+#[derive(Clone, Debug)]
+pub struct TaskReport {
+    pub task: String,
+    /// Kernel sweep on box-uniform states.
+    pub kernel_box: Vec<SweepPoint>,
+    /// Kernel sweep on trajectory-sampled states (the serving
+    /// distribution g was trained for).
+    pub kernel_traj: Vec<SweepPoint>,
+    /// Full serve-path sweep through `NativeBackend`.
+    pub serve: Vec<SweepPoint>,
+    pub train: TrainSummary,
+}
+
+/// Train the hypersolver point and run every sweep for every task,
+/// exporting the servable grid artifacts into `artifacts_dir` (tasks
+/// merge into one manifest — `hypersolverd serve --backend native
+/// --artifacts <dir>` works on the result).
+pub fn run_pipeline(
+    grid: &GridConfig,
+    tasks: &[TaskSpec],
+    artifacts_dir: &Path,
+) -> Result<Vec<TaskReport>> {
+    grid.validate()?;
+    if tasks.is_empty() {
+        return Err(Error::Other("pareto pipeline: no tasks".into()));
+    }
+    let mut reports = Vec::with_capacity(tasks.len());
+    for (ti, spec) in tasks.iter().enumerate() {
+        let d = spec.field.state_dim();
+        let traj_sampler = grid.traj_sampler(d);
+        let cfg = TrainConfig {
+            solver: grid.hyper_base.clone(),
+            hidden: grid.train_hidden.clone(),
+            steps: grid.train_steps,
+            seed: grid.seed.wrapping_add(ti as u64 * 7919),
+            s_span: grid.span,
+            k: grid.hyper_k,
+            fine: FineRef::Rk4Substeps(8),
+            sampler: traj_sampler.clone(),
+            stop_at_improvement: grid.train_stop_at,
+            log: grid.log,
+            ..TrainConfig::default()
+        };
+        if grid.log {
+            println!(
+                "[{}] training hyper{} at k={} ({} max steps, hidden {:?})",
+                spec.name, grid.hyper_base, grid.hyper_k, grid.train_steps, grid.train_hidden
+            );
+        }
+        let (g, treport) = train_hypersolver(&spec.field, &cfg)?;
+        if grid.log {
+            println!(
+                "[{}] trained in {:.1}s: one-step improvement {:.1}× \
+                 (base {:.3e} → hyper {:.3e})",
+                spec.name,
+                treport.wall_secs,
+                treport.improvement,
+                treport.err_base,
+                treport.err_hyper
+            );
+        }
+
+        // sweep batches: one box draw, one trajectory draw, same stream
+        let mut rng = Rng::new(grid.seed ^ 0xA11C_E5ED).fold_in(ti as u64);
+        let z_box = grid.box_sampler(d).sample_for(&spec.field, grid.batch, &mut rng)?;
+        let z_traj = traj_sampler.sample_for(&spec.field, grid.batch, &mut rng)?;
+        let kernel_box = kernel_sweep(&spec.name, &spec.field, &g, grid, &z_box, "box")?;
+        let kernel_traj =
+            kernel_sweep(&spec.name, &spec.field, &g, grid, &z_traj, "trajectory")?;
+
+        write_sweep_artifacts(
+            artifacts_dir,
+            &spec.name,
+            &spec.field,
+            &g,
+            grid,
+            treport.best_val_loss,
+            &kernel_box,
+        )?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let serve = serve_sweep(&manifest, &spec.name, grid)?;
+        if grid.log {
+            println!("[{}] swept {} kernel cells × 2 state sets + {} serve variants",
+                spec.name, kernel_box.len(), serve.len());
+        }
+
+        reports.push(TaskReport {
+            task: spec.name.clone(),
+            kernel_box,
+            kernel_traj,
+            serve,
+            train: TrainSummary {
+                steps_run: treport.steps_run,
+                improvement: treport.improvement,
+                err_base: treport.err_base,
+                err_hyper: treport.err_hyper,
+                delta: treport.best_val_loss,
+                wall_secs: treport.wall_secs,
+            },
+        });
+    }
+    Ok(reports)
+}
+
+// ---------------------------------------------------------------------------
+// JSON document (shared benchkit schema)
+// ---------------------------------------------------------------------------
+
+fn point_json(p: &SweepPoint) -> Value {
+    let mut fields = vec![
+        ("label", json::s(&p.label)),
+        ("solver", json::s(&p.solver)),
+        ("k", json::num(p.k as f64)),
+        ("hyper", Value::Bool(p.hyper)),
+        ("nfe", json::num(p.nfe)),
+        ("g_evals", json::num(p.g_evals as f64)),
+        ("err", json::num(p.err)),
+        ("mape", json::num(p.mape)),
+        ("wall_us", json::num(p.wall_us)),
+    ];
+    if let Some(t) = p.tol {
+        fields.push(("tol", json::num(t as f64)));
+    }
+    if let Some(e) = p.err_traj {
+        fields.push(("err_traj", json::num(e)));
+    }
+    json::obj(fields)
+}
+
+fn labels_json(points: &[SweepPoint], idx: &[usize]) -> Value {
+    Value::Arr(idx.iter().map(|&i| json::s(&points[i].label)).collect())
+}
+
+/// One Pareto plane: its points plus the extracted fronts on both cost
+/// axes (field NFE, measured wall-clock).
+fn plane_json(points: &[SweepPoint], states: &str) -> Value {
+    let nfe_front = front_of(points, |p| (p.nfe, p.err));
+    let wall_front = front_of(points, |p| (p.wall_us, p.err));
+    json::obj(vec![
+        ("states", json::s(states)),
+        ("points", Value::Arr(points.iter().map(point_json).collect())),
+        ("front_nfe", labels_json(points, &nfe_front)),
+        ("front_wall", labels_json(points, &wall_front)),
+    ])
+}
+
+fn task_json(r: &TaskReport) -> Value {
+    json::obj(vec![
+        ("task", json::s(&r.task)),
+        (
+            "train",
+            json::obj(vec![
+                ("steps_run", json::num(r.train.steps_run as f64)),
+                ("improvement", json::num(r.train.improvement as f64)),
+                ("err_base", json::num(r.train.err_base as f64)),
+                ("err_hyper", json::num(r.train.err_hyper as f64)),
+                ("delta", json::num(r.train.delta as f64)),
+                ("wall_secs", json::num(r.train.wall_secs)),
+            ]),
+        ),
+        ("kernel_box", plane_json(&r.kernel_box, "box")),
+        ("kernel_trajectory", plane_json(&r.kernel_traj, "trajectory")),
+        ("serve", plane_json(&r.serve, "box")),
+    ])
+}
+
+fn grid_json(grid: &GridConfig) -> Value {
+    json::obj(vec![
+        (
+            "solvers",
+            Value::Arr(grid.solvers.iter().map(|s| json::s(s)).collect()),
+        ),
+        (
+            "ks",
+            Value::Arr(grid.ks.iter().map(|&k| json::num(k as f64)).collect()),
+        ),
+        (
+            "tols",
+            Value::Arr(grid.tols.iter().map(|&t| json::num(t as f64)).collect()),
+        ),
+        ("hyper_base", json::s(&grid.hyper_base)),
+        ("hyper_k", json::num(grid.hyper_k as f64)),
+        ("batch", json::num(grid.batch as f64)),
+        ("seed", json::num(grid.seed as f64)),
+        (
+            "span",
+            Value::Arr(vec![
+                json::num(grid.span.0 as f64),
+                json::num(grid.span.1 as f64),
+            ]),
+        ),
+        ("sample_box", json::num(grid.sample_box as f64)),
+        ("traj_mesh_k", json::num(grid.traj_mesh_k as f64)),
+        ("traj_checkpoints", json::num(grid.traj_checkpoints as f64)),
+        ("ref_tol", json::num(grid.ref_tol as f64)),
+        ("train_steps", json::num(grid.train_steps as f64)),
+        (
+            "train_hidden",
+            Value::Arr(
+                grid.train_hidden
+                    .iter()
+                    .map(|&h| json::num(h as f64))
+                    .collect(),
+            ),
+        ),
+        ("train_stop_at", json::num(grid.train_stop_at as f64)),
+    ])
+}
+
+/// The complete `BENCH_pareto.json` document in the shared bench schema.
+pub fn pareto_doc(grid: &GridConfig, reports: &[TaskReport]) -> Value {
+    benchkit::bench_doc(
+        "hyperbench_pareto",
+        vec![
+            ("grid", grid_json(grid)),
+            ("tasks", Value::Arr(reports.iter().map(task_json).collect())),
+        ],
+    )
+}
+
+/// Headline numbers for the rolling bench trajectory: per task, where the
+/// trained hypersolver landed relative to its same-NFE rivals and how its
+/// serve-path wall-clock compares to the tightest dopri5 variant.
+pub fn trajectory_entry(grid: &GridConfig, reports: &[TaskReport]) -> Value {
+    let tasks: Vec<Value> = reports
+        .iter()
+        .map(|r| {
+            let chk = check_same_nfe_dominance(&r.kernel_traj, grid).ok();
+            let mut fields = vec![
+                ("task", json::s(&r.task)),
+                ("improvement", json::num(r.train.improvement as f64)),
+            ];
+            if let Some(c) = chk {
+                fields.push(("err_hyper", json::num(c.err_hyper)));
+                if let Some(e) = c.err_euler {
+                    fields.push(("err_euler_same_nfe", json::num(e)));
+                }
+                if let Some(e) = c.err_midpoint {
+                    fields.push(("err_midpoint_same_nfe", json::num(e)));
+                }
+                fields.push(("hyper_on_nfe_front", Value::Bool(c.on_nfe_front)));
+            }
+            if let Some(sp) = serve_speedup_vs_tightest_dopri5(&r.serve, grid) {
+                fields.push(("serve_speedup_vs_dopri5", json::num(sp)));
+            }
+            json::obj(fields)
+        })
+        .collect();
+    benchkit::bench_doc("hyperbench_pareto", vec![("tasks", Value::Arr(tasks))])
+}
+
+// ---------------------------------------------------------------------------
+// Dominance checks (smoke mode + e2e test)
+// ---------------------------------------------------------------------------
+
+/// Where the trained hypersolver point stands against its same-field-NFE
+/// classical rivals on one Pareto plane.
+#[derive(Clone, Debug)]
+pub struct DominanceCheck {
+    pub hyper_label: String,
+    pub err_hyper: f64,
+    /// Error of euler at the same field NFE, when that cell is on the grid.
+    pub err_euler: Option<f64>,
+    /// Error of midpoint at the same field NFE, when on the grid.
+    pub err_midpoint: Option<f64>,
+    /// Is the hyper point a member of the NFE-vs-error Pareto front?
+    pub on_nfe_front: bool,
+}
+
+impl DominanceCheck {
+    /// Strictly better than euler at equal field NFE (same cost axis
+    /// value → strictly lower error = dominance).
+    pub fn dominates_same_nfe_euler(&self) -> bool {
+        self.err_euler.map(|e| self.err_hyper < e).unwrap_or(false)
+    }
+
+    pub fn dominates_same_nfe_midpoint(&self) -> bool {
+        self.err_midpoint.map(|e| self.err_hyper < e).unwrap_or(false)
+    }
+}
+
+/// Locate the trained hyper point in `points` and compare it to the
+/// classical cells at the same field NFE.
+pub fn check_same_nfe_dominance(
+    points: &[SweepPoint],
+    grid: &GridConfig,
+) -> Result<DominanceCheck> {
+    let hyper_label = method_label(&grid.hyper_base, grid.hyper_k, true, None);
+    let hp = points
+        .iter()
+        .find(|p| p.label == hyper_label)
+        .ok_or_else(|| Error::Other(format!("no {hyper_label} point in the sweep")))?;
+    let same_nfe = |p: &&SweepPoint| !p.hyper && p.tol.is_none() && p.nfe == hp.nfe;
+    let err_euler = points
+        .iter()
+        .find(|p| same_nfe(p) && p.solver == "euler")
+        .map(|p| p.err);
+    let err_midpoint = points
+        .iter()
+        .find(|p| same_nfe(p) && p.solver == "midpoint")
+        .map(|p| p.err);
+    let front = front_of(points, |p| (p.nfe, p.err));
+    let on_nfe_front = front.iter().any(|&i| points[i].label == hyper_label);
+    Ok(DominanceCheck {
+        hyper_label,
+        err_hyper: hp.err,
+        err_euler,
+        err_midpoint,
+        on_nfe_front,
+    })
+}
+
+/// Serve-path wall-clock of the tightest dopri5 variant divided by the
+/// hyper variant's — the paper's end-to-end speedup headline.
+pub fn serve_speedup_vs_tightest_dopri5(
+    serve: &[SweepPoint],
+    grid: &GridConfig,
+) -> Option<f64> {
+    let hyper_label = method_label(&grid.hyper_base, grid.hyper_k, true, None);
+    let hp = serve.iter().find(|p| p.label == hyper_label)?;
+    let d5 = serve
+        .iter()
+        .filter(|p| p.tol.is_some())
+        .min_by(|a, b| a.tol.unwrap().partial_cmp(&b.tol.unwrap()).unwrap())?;
+    Some(d5.wall_us / hp.wall_us.max(1e-9))
+}
+
+// ---------------------------------------------------------------------------
+// Human-readable rendering
+// ---------------------------------------------------------------------------
+
+/// Aligned table of one Pareto plane, front membership marked per axis.
+pub fn render_plane(title: &str, points: &[SweepPoint]) -> String {
+    let nfe_front = front_of(points, |p| (p.nfe, p.err));
+    let wall_front = front_of(points, |p| (p.wall_us, p.err));
+    let mut t = Table::new(&[
+        "method", "NFE", "g", "err", "err_traj", "wall µs", "front(NFE)", "front(wall)",
+    ]);
+    for (i, p) in points.iter().enumerate() {
+        t.row(&[
+            p.label.clone(),
+            format!("{:.0}", p.nfe),
+            p.g_evals.to_string(),
+            benchkit::fmt_sci(p.err),
+            p.err_traj.map(benchkit::fmt_sci).unwrap_or_else(|| "-".into()),
+            format!("{:.1}", p.wall_us),
+            if nfe_front.contains(&i) { "*".into() } else { String::new() },
+            if wall_front.contains(&i) { "*".into() } else { String::new() },
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(label: &str, solver: &str, k: usize, hyper: bool, nfe: f64, err: f64) -> SweepPoint {
+        SweepPoint {
+            task: "t".into(),
+            states: "box".into(),
+            label: label.into(),
+            solver: solver.into(),
+            k,
+            tol: None,
+            hyper,
+            nfe,
+            g_evals: if hyper { k as u64 } else { 0 },
+            err,
+            mape: err,
+            err_traj: None,
+            wall_us: 1.0,
+        }
+    }
+
+    fn smoke_grid() -> GridConfig {
+        GridConfig::smoke()
+    }
+
+    #[test]
+    fn dominance_check_reads_same_nfe_rivals() {
+        let grid = smoke_grid(); // hyper_k = 2, base euler
+        let points = vec![
+            pt("euler_k1", "euler", 1, false, 1.0, 0.9),
+            pt("euler_k2", "euler", 2, false, 2.0, 0.5),
+            pt("midpoint_k1", "midpoint", 1, false, 2.0, 0.4),
+            pt("hypereuler_k2", "euler", 2, true, 2.0, 0.05),
+        ];
+        let c = check_same_nfe_dominance(&points, &grid).unwrap();
+        assert_eq!(c.hyper_label, "hypereuler_k2");
+        assert_eq!(c.err_euler, Some(0.5));
+        assert_eq!(c.err_midpoint, Some(0.4));
+        assert!(c.dominates_same_nfe_euler());
+        assert!(c.dominates_same_nfe_midpoint());
+        assert!(c.on_nfe_front);
+        // a worse hyper point loses front membership and dominance
+        let mut worse = points.clone();
+        worse[3].err = 0.95;
+        let c = check_same_nfe_dominance(&worse, &grid).unwrap();
+        assert!(!c.dominates_same_nfe_euler());
+        assert!(!c.on_nfe_front);
+        // a missing hyper point is an error, not a silent pass
+        assert!(check_same_nfe_dominance(&points[..3], &grid).is_err());
+    }
+
+    #[test]
+    fn serve_speedup_picks_tightest_tolerance() {
+        let grid = smoke_grid();
+        let mut d5a = pt("dopri5_1e-3", "dopri5", 0, false, 30.0, 1e-3);
+        d5a.tol = Some(1e-3);
+        d5a.wall_us = 50.0;
+        let mut d5b = pt("dopri5_1e-5", "dopri5", 0, false, 80.0, 1e-5);
+        d5b.tol = Some(1e-5);
+        d5b.wall_us = 200.0;
+        let mut hp = pt("hypereuler_k2", "euler", 2, true, 2.0, 0.05);
+        hp.wall_us = 10.0;
+        let serve = vec![d5a, hp, d5b];
+        let sp = serve_speedup_vs_tightest_dopri5(&serve, &grid).unwrap();
+        assert!((sp - 20.0).abs() < 1e-9, "tightest is 1e-5 at 200µs: {sp}");
+    }
+
+    #[test]
+    fn doc_round_trips_and_carries_fronts() {
+        let grid = smoke_grid();
+        let report = TaskReport {
+            task: "vdp".into(),
+            kernel_box: vec![
+                pt("euler_k2", "euler", 2, false, 2.0, 0.5),
+                pt("hypereuler_k2", "euler", 2, true, 2.0, 0.05),
+            ],
+            kernel_traj: vec![pt("euler_k2", "euler", 2, false, 2.0, 0.6)],
+            serve: vec![pt("euler_k2", "euler", 2, false, 2.0, 0.5)],
+            train: TrainSummary {
+                steps_run: 10,
+                improvement: 5.0,
+                err_base: 0.5,
+                err_hyper: 0.1,
+                delta: 0.01,
+                wall_secs: 1.0,
+            },
+        };
+        let doc = pareto_doc(&grid, &[report]);
+        let back = json::parse(&json::to_string(&doc)).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("hyperbench_pareto"));
+        let tasks = back.get("tasks").unwrap().as_arr().unwrap();
+        let plane = tasks[0].get("kernel_box").unwrap();
+        let front = plane.get("front_nfe").unwrap().as_arr().unwrap();
+        // hyper dominates euler at equal NFE → it alone is the front
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].as_str(), Some("hypereuler_k2"));
+        assert!(tasks[0].get("train").unwrap().get("improvement").is_some());
+        // the grid block makes the run reproducible
+        assert!(back.get("grid").unwrap().get("seed").is_some());
+    }
+
+    #[test]
+    fn plane_renders_with_front_markers() {
+        let points = vec![
+            pt("euler_k2", "euler", 2, false, 2.0, 0.5),
+            pt("hypereuler_k2", "euler", 2, true, 2.0, 0.05),
+        ];
+        let s = render_plane("kernel (box)", &points);
+        assert!(s.contains("hypereuler_k2"));
+        assert!(s.contains("front(NFE)"));
+    }
+}

@@ -1,0 +1,445 @@
+//! The sweep engine: run every grid cell through the `_ws` solver kernels
+//! (NFE-vs-error, kernel wall-clock) and through the full `NativeBackend`
+//! serve path (true end-to-end wall-clock), against a tight-tolerance
+//! dopri5 reference.
+//!
+//! Cost-axis semantics, pinned here once: `nfe` counts **field**
+//! evaluations (the paper's cost model — hypersolvers spend the same field
+//! NFE as their base solver and pay `g_evals` extra hypernet calls, which
+//! are recorded separately), `wall_us` is measured mean wall-clock per
+//! batch. At equal NFE a hypersolver necessarily pays g on the wall-clock
+//! axis; its wall-clock wins show up against the *higher-NFE classical
+//! configurations that reach its accuracy* — most visibly on expensive
+//! (MLP) fields, exactly the paper's §6 overhead argument.
+
+use std::path::Path;
+
+use crate::metrics::{mape, mean_l2};
+use crate::nn::{CnfModel, FieldNet, HyperMlp};
+use crate::ode::VectorField;
+use crate::pareto::grid::GridConfig;
+use crate::runtime::{ExecBackend, Manifest, NativeBackend};
+use crate::solvers::{
+    adaptive_ws, odeint_fixed_traj, odeint_fixed_ws, odeint_hyper_traj, odeint_hyper_ws,
+    AdaptiveOpts, HyperNet, RkWorkspace, Tableau,
+};
+use crate::tensor::Tensor;
+use crate::util::benchkit::Bench;
+use crate::util::json::{self, Value};
+use crate::util::prng::Rng;
+use crate::{Error, Result};
+
+/// One measured grid cell — a single point of a Pareto plane.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub task: String,
+    /// State distribution the batch was drawn from: "box" | "trajectory".
+    pub states: String,
+    /// Canonical cell label (also the serve-path variant name).
+    pub label: String,
+    pub solver: String,
+    /// Step count (0 for adaptive cells).
+    pub k: usize,
+    /// Tolerance of an adaptive cell.
+    pub tol: Option<f32>,
+    pub hyper: bool,
+    /// Field evaluations per sample (measured for adaptive cells).
+    pub nfe: f64,
+    /// Hypernet evaluations per sample (0 for classical cells).
+    pub g_evals: u64,
+    /// Terminal mean per-sample L2 error vs the tight reference.
+    pub err: f64,
+    /// Terminal MAPE vs the tight reference (the manifest metric).
+    pub mape: f64,
+    /// Mean checkpoint error along the trajectory, when the cell's mesh
+    /// contains the checkpoints.
+    pub err_traj: Option<f64>,
+    /// Mean wall-clock per batch solve (µs).
+    pub wall_us: f64,
+}
+
+/// The canonical label of a grid cell; doubles as the exported serve-path
+/// variant name, so kernel and serve points join on it.
+pub fn method_label(solver: &str, k: usize, hyper: bool, tol: Option<f32>) -> String {
+    if let Some(t) = tol {
+        format!("dopri5_{t:e}")
+    } else if hyper {
+        format!("hyper{solver}_k{k}")
+    } else {
+        format!("{solver}_k{k}")
+    }
+}
+
+/// Tight reference states at the `c` trajectory checkpoints (the last one
+/// is the terminal state), integrated segment-to-segment so every
+/// checkpoint is itself reference-accurate.
+fn reference_checkpoints<F: VectorField + ?Sized>(
+    f: &F,
+    z0: &Tensor,
+    grid: &GridConfig,
+    ws: &mut RkWorkspace,
+) -> Result<Vec<Tensor>> {
+    let c = grid.traj_checkpoints;
+    let d5 = Tableau::dopri5();
+    let opts = AdaptiveOpts::with_tol(grid.ref_tol);
+    let (s0, s1) = grid.span;
+    let mut out = Vec::with_capacity(c);
+    let mut cur = z0.clone();
+    for j in 1..=c {
+        let t0 = s0 + (s1 - s0) * (j - 1) as f32 / c as f32;
+        let t1 = s0 + (s1 - s0) * j as f32 / c as f32;
+        cur = adaptive_ws(f, &cur, (t0, t1), &d5, &opts, ws)?.z;
+        out.push(cur.clone());
+    }
+    Ok(out)
+}
+
+/// Mean checkpoint error of a (k+1)-point fixed-step trajectory against
+/// the reference checkpoints; `None` when the mesh misses the checkpoints.
+fn traj_error(traj: &[Tensor], ref_ckpts: &[Tensor]) -> Result<Option<f64>> {
+    let c = ref_ckpts.len();
+    let k = traj.len() - 1;
+    if k == 0 || k % c != 0 {
+        return Ok(None);
+    }
+    let mut acc = 0.0;
+    for j in 1..=c {
+        acc += mean_l2(&traj[j * k / c], &ref_ckpts[j - 1])?;
+    }
+    Ok(Some(acc / c as f64))
+}
+
+/// Sweep every grid cell at the solver-kernel level on the batch `z0`
+/// (drawn from the `states` distribution): classical fixed-step methods ×
+/// ks, the trained hypersolver at its k, and dopri5 across the tolerance
+/// axis. Errors are against a dopri5(`ref_tol`) reference; wall-clock is
+/// benchkit-measured on the allocation-free `_ws` kernels with a warm
+/// workspace.
+pub fn kernel_sweep<F, G>(
+    task: &str,
+    f: &F,
+    g: &G,
+    grid: &GridConfig,
+    z0: &Tensor,
+    states: &str,
+) -> Result<Vec<SweepPoint>>
+where
+    F: VectorField + ?Sized,
+    G: HyperNet + ?Sized,
+{
+    grid.validate()?;
+    let mut ws = RkWorkspace::new();
+    let ref_ckpts = reference_checkpoints(f, z0, grid, &mut ws)?;
+    let zref = ref_ckpts.last().expect("at least one checkpoint").clone();
+    let bench = Bench::with_budget(grid.measure_ms);
+    let span = grid.span;
+    let mut out = Vec::new();
+
+    // classical fixed-step axis
+    for solver in &grid.solvers {
+        let tab = Tableau::by_name(solver)?;
+        for &k in &grid.ks {
+            let label = method_label(solver, k, false, None);
+            let traj = odeint_fixed_traj(f, z0, span, k, &tab)?;
+            let zt = traj.last().expect("terminal state");
+            let err_traj = traj_error(&traj, &ref_ckpts)?;
+            let m = bench.run(&label, || {
+                odeint_fixed_ws(f, z0, span, k, &tab, &mut ws).unwrap();
+            });
+            out.push(SweepPoint {
+                task: task.to_string(),
+                states: states.to_string(),
+                label,
+                solver: solver.clone(),
+                k,
+                tol: None,
+                hyper: false,
+                nfe: (tab.stages() * k) as f64,
+                g_evals: 0,
+                err: mean_l2(zt, &zref)?,
+                mape: mape(zt, &zref)?,
+                err_traj,
+                wall_us: m.mean_us(),
+            });
+        }
+    }
+
+    // the trained hypersolver point
+    {
+        let tab = Tableau::by_name(&grid.hyper_base)?;
+        let k = grid.hyper_k;
+        let label = method_label(&grid.hyper_base, k, true, None);
+        let traj = odeint_hyper_traj(f, g, z0, span, k, &tab)?;
+        let zt = traj.last().expect("terminal state");
+        let err_traj = traj_error(&traj, &ref_ckpts)?;
+        let m = bench.run(&label, || {
+            odeint_hyper_ws(f, g, z0, span, k, &tab, &mut ws).unwrap();
+        });
+        out.push(SweepPoint {
+            task: task.to_string(),
+            states: states.to_string(),
+            label,
+            solver: grid.hyper_base.clone(),
+            k,
+            tol: None,
+            hyper: true,
+            nfe: (tab.stages() * k) as f64,
+            g_evals: k as u64,
+            err: mean_l2(zt, &zref)?,
+            mape: mape(zt, &zref)?,
+            err_traj,
+            wall_us: m.mean_us(),
+        });
+    }
+
+    // adaptive tolerance axis
+    let d5 = Tableau::dopri5();
+    for &tol in &grid.tols {
+        let label = method_label("dopri5", 0, false, Some(tol));
+        let opts = AdaptiveOpts::with_tol(tol);
+        let r = adaptive_ws(f, z0, span, &d5, &opts, &mut ws)?;
+        let m = bench.run(&label, || {
+            adaptive_ws(f, z0, span, &d5, &opts, &mut ws).unwrap();
+        });
+        out.push(SweepPoint {
+            task: task.to_string(),
+            states: states.to_string(),
+            label,
+            solver: "dopri5".into(),
+            k: 0,
+            tol: Some(tol),
+            hyper: false,
+            nfe: r.nfe as f64,
+            g_evals: 0,
+            err: mean_l2(&r.z, &zref)?,
+            mape: mape(&r.z, &zref)?,
+            err_traj: None,
+            wall_us: m.mean_us(),
+        });
+    }
+    Ok(out)
+}
+
+/// Write a servable artifact set covering the *whole* grid for `task`:
+/// `weights/<task>.json` (field + trained hypersolver, the exact schema
+/// `CnfModel::load` parses) plus a manifest whose variants are every grid
+/// cell — classical solvers × ks, the hypersolved point, and one dopri5
+/// variant per tolerance (pinned via the manifest `tol` field). Variant
+/// `mape`/`nfe` are stamped from the box-states kernel sweep, so the
+/// manifest carries measured numbers, not placeholders. Merges into an
+/// existing manifest the way `train::export_trained` does.
+pub fn write_sweep_artifacts(
+    dir: &Path,
+    task: &str,
+    field: &FieldNet,
+    g: &HyperMlp,
+    grid: &GridConfig,
+    delta: f32,
+    kernel_box: &[SweepPoint],
+) -> Result<()> {
+    let model = CnfModel {
+        field: field.clone(),
+        hyper: g.clone(),
+    };
+    std::fs::create_dir_all(dir.join("weights"))?;
+    let weights_rel = format!("weights/{task}.json");
+    std::fs::write(dir.join(&weights_rel), json::to_string(&model.to_json()))?;
+
+    let d = field.state_dim();
+    let batch = grid.batch;
+    let shape = || {
+        Value::Arr(vec![json::num(batch as f64), json::num(d as f64)])
+    };
+    let mac_f = VectorField::macs(field);
+    let mac_g = HyperNet::macs(g);
+    let find = |label: &str| -> Result<&SweepPoint> {
+        kernel_box
+            .iter()
+            .find(|p| p.label == label)
+            .ok_or_else(|| Error::Other(format!("no kernel measurement for {label}")))
+    };
+
+    let variant = |label: &str,
+                   solver: &str,
+                   k: usize,
+                   hyper: bool,
+                   nfe: u64,
+                   macs: u64,
+                   mape: f64,
+                   tol: Option<f32>| {
+        let mut fields = vec![
+            ("name", json::s(label)),
+            ("solver", json::s(solver)),
+            ("k", json::num(k as f64)),
+            ("hyper", Value::Bool(hyper)),
+            // no HLO exists for sweep exports; only the pjrt backend reads
+            // it, and it fails loudly on the missing file
+            ("hlo", json::s(&format!("{task}_{label}.hlo.txt"))),
+            ("nfe", json::num(nfe as f64)),
+            ("macs", json::num(macs as f64)),
+            ("mape", json::num(mape)),
+            ("in_shape", shape()),
+            ("out_shape", shape()),
+        ];
+        if let Some(t) = tol {
+            fields.push(("tol", json::num(t as f64)));
+            fields.push(("outputs", Value::Arr(vec![json::s("z"), json::s("nfe")])));
+        }
+        json::obj(fields)
+    };
+
+    let mut variants = Vec::new();
+    for solver in &grid.solvers {
+        let tab = Tableau::by_name(solver)?;
+        for &k in &grid.ks {
+            let label = method_label(solver, k, false, None);
+            let p = find(&label)?;
+            let nfe = (tab.stages() * k) as u64;
+            variants.push(variant(&label, solver, k, false, nfe, nfe * mac_f, p.mape, None));
+        }
+    }
+    {
+        let tab = Tableau::by_name(&grid.hyper_base)?;
+        let k = grid.hyper_k;
+        let label = method_label(&grid.hyper_base, k, true, None);
+        let p = find(&label)?;
+        let nfe = (tab.stages() * k) as u64;
+        let macs = k as u64 * (tab.stages() as u64 * mac_f + mac_g);
+        variants.push(variant(&label, &grid.hyper_base, k, true, nfe, macs, p.mape, None));
+    }
+    for &tol in &grid.tols {
+        let label = method_label("dopri5", 0, false, Some(tol));
+        let p = find(&label)?;
+        let nfe = p.nfe as u64;
+        variants.push(variant(&label, "dopri5", 0, false, nfe, nfe * mac_f, p.mape, Some(tol)));
+    }
+
+    let task_obj = json::obj(vec![
+        ("kind", json::s("cnf")),
+        ("state", json::obj(vec![("shape", shape())])),
+        (
+            "s_span",
+            Value::Arr(vec![
+                json::num(grid.span.0 as f64),
+                json::num(grid.span.1 as f64),
+            ]),
+        ),
+        ("weights", json::s(&weights_rel)),
+        ("field_hlo", json::s(&format!("{task}_field.hlo.txt"))),
+        (
+            "macs",
+            json::obj(vec![
+                ("field", json::num(mac_f as f64)),
+                ("hyper", json::num(mac_g as f64)),
+            ]),
+        ),
+        ("delta", json::num(delta as f64)),
+        ("hyper_base", json::s(&grid.hyper_base)),
+        ("variants", Value::Arr(variants)),
+    ]);
+
+    // merge into an existing manifest (multiple tasks share one sweep
+    // artifacts dir) — the shared exporter semantics live in
+    // runtime::manifest
+    crate::runtime::manifest::merge_task_into_manifest(
+        dir,
+        task,
+        task_obj,
+        "hyperbench-sweep",
+        grid.seed,
+    )?;
+    Ok(())
+}
+
+/// Sweep every exported variant of `task` through the **full serve path**:
+/// `NativeBackend::execute` per batch (model lookup, input tensor build,
+/// per-queue workspace, output clone — everything a served request pays),
+/// benchkit-timed, with errors against a dopri5(`ref_tol`) reference on
+/// the same inputs. Inputs are drawn box-uniform from the grid seed, so
+/// kernel and serve sweeps are reproducible from the same config.
+pub fn serve_sweep(
+    manifest: &Manifest,
+    task: &str,
+    grid: &GridConfig,
+) -> Result<Vec<SweepPoint>> {
+    grid.validate()?;
+    let entry = manifest.task(task)?;
+    let model = CnfModel::load(&manifest.weights_path(entry))?;
+    let batch = entry.batch();
+    let d: usize = entry.state_shape[1..].iter().product();
+
+    let mut rng = Rng::new(grid.seed ^ 0x5E12_BEAC);
+    let z0 = grid.box_sampler(d).sample_for(&model.field, batch, &mut rng)?;
+    let mut ws = RkWorkspace::new();
+    let zref = adaptive_ws(
+        &model.field,
+        &z0,
+        entry.s_span,
+        &Tableau::dopri5(),
+        &AdaptiveOpts::with_tol(grid.ref_tol),
+        &mut ws,
+    )?
+    .z;
+
+    let backend = NativeBackend::new();
+    let input = z0.into_data();
+    let bench = Bench::with_budget(grid.measure_ms);
+    let mut out = Vec::new();
+    for v in &entry.variants {
+        backend.prepare(manifest, entry, v)?;
+        let o = backend.execute(manifest, entry, v, input.clone())?;
+        let zt = Tensor::new(&[batch, d], o.z)?;
+        let m = bench.run(&v.name, || {
+            backend.execute(manifest, entry, v, input.clone()).unwrap();
+        });
+        out.push(SweepPoint {
+            task: task.to_string(),
+            states: "box".into(),
+            label: v.name.clone(),
+            solver: v.solver.clone(),
+            k: v.k,
+            tol: v.tol.map(|t| t as f32),
+            hyper: v.hyper,
+            nfe: o.nfe.map(|n| n as f64).unwrap_or(v.nfe as f64),
+            g_evals: if v.hyper { v.k as u64 } else { 0 },
+            err: mean_l2(&zt, &zref)?,
+            mape: mape(&zt, &zref)?,
+            err_traj: None,
+            wall_us: m.mean_us(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_join_kernel_and_serve() {
+        assert_eq!(method_label("euler", 8, false, None), "euler_k8");
+        assert_eq!(method_label("euler", 8, true, None), "hypereuler_k8");
+        assert_eq!(method_label("dopri5", 0, false, Some(1e-3)), "dopri5_1e-3");
+        assert_eq!(method_label("dopri5", 0, false, Some(1e-5)), "dopri5_1e-5");
+        // and the hyper label matches the trainer's variant naming
+        let cfg = crate::train::TrainConfig {
+            solver: "euler".into(),
+            k: 8,
+            ..crate::train::TrainConfig::default()
+        };
+        assert_eq!(method_label("euler", 8, true, None), crate::train::hyper_variant_name(&cfg));
+    }
+
+    #[test]
+    fn traj_error_requires_matching_mesh() {
+        let t = |v: f32| Tensor::full(&[1, 2], v);
+        let ref_ckpts = vec![t(1.0), t(2.0)];
+        // k=4, c=2: checkpoints at mesh indices 2 and 4
+        let traj = vec![t(0.0), t(0.5), t(1.0), t(1.5), t(2.0)];
+        let e = traj_error(&traj, &ref_ckpts).unwrap().unwrap();
+        assert!(e.abs() < 1e-12);
+        // k=3 misses the checkpoints
+        let traj3 = vec![t(0.0), t(1.0), t(1.5), t(2.0)];
+        assert!(traj_error(&traj3, &ref_ckpts).unwrap().is_none());
+    }
+}

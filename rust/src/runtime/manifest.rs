@@ -39,6 +39,10 @@ pub struct Variant {
     pub macs: u64,
     /// measured terminal MAPE vs dopri5(1e-6) on the eval batch
     pub mape: f64,
+    /// adaptive tolerance of a dopri5 variant; `None` means the backend's
+    /// default (1e-5). Lets one manifest expose a whole tolerance axis
+    /// (the pareto sweep's adaptive grid) as distinct variants.
+    pub tol: Option<f64>,
     /// accuracy drop vs dopri5 (image tasks only)
     pub acc_drop: Option<f64>,
     pub in_shape: Vec<usize>,
@@ -58,6 +62,15 @@ impl Variant {
             nfe: v.req("nfe")?.as_i64().unwrap_or(0) as u64,
             macs: v.req("macs")?.as_i64().unwrap_or(0) as u64,
             mape: v.req("mape")?.as_f64().unwrap_or(f64::NAN),
+            // a present-but-non-numeric tol must fail loudly: silently
+            // falling back to the backend default would serve (and
+            // measure) the wrong tolerance with no diagnostic
+            tol: match v.get("tol") {
+                None => None,
+                Some(t) => Some(t.as_f64().ok_or_else(|| {
+                    Error::Manifest("variant tol must be a number".into())
+                })?),
+            },
             acc_drop: v.get("acc_drop").and_then(Value::as_f64),
             in_shape: v.req("in_shape")?.as_usize_vec()?,
             out_shape: v.req("out_shape")?.as_usize_vec()?,
@@ -200,6 +213,60 @@ impl Manifest {
     }
 }
 
+/// Merge one task entry into `<dir>/manifest.json`, creating the file
+/// with the given defaults when absent. The same-name task is replaced
+/// while other tasks AND any top-level metadata a previous exporter wrote
+/// (stamp, seed, ...) are preserved; a present-but-unparsable manifest is
+/// an error, not a silent restart — overwriting it would drop every other
+/// task it listed. This is the single definition of exporter merge
+/// semantics, shared by `train::export_trained` and
+/// `pareto::write_sweep_artifacts` so they cannot drift from the schema
+/// [`Manifest::load`] parses.
+pub fn merge_task_into_manifest(
+    dir: &Path,
+    task: &str,
+    task_obj: Value,
+    default_stamp: &str,
+    default_seed: u64,
+) -> Result<()> {
+    let manifest_path = dir.join("manifest.json");
+    let mut root: BTreeMap<String, Value> = if manifest_path.exists() {
+        json::parse_file(&manifest_path)?
+            .as_obj()
+            .cloned()
+            .ok_or_else(|| {
+                Error::Manifest(format!(
+                    "existing {} is not a JSON object; refusing to overwrite it",
+                    manifest_path.display()
+                ))
+            })?
+    } else {
+        Default::default()
+    };
+    // a `tasks` key that exists but is not an object is the same silent
+    // data loss the root-level check guards against — refuse, don't
+    // restart the task map
+    let mut tasks = match root.get("tasks") {
+        None => BTreeMap::new(),
+        Some(t) => t.as_obj().cloned().ok_or_else(|| {
+            Error::Manifest(format!(
+                "existing {} has a non-object `tasks` value; refusing to \
+                 overwrite it",
+                manifest_path.display()
+            ))
+        })?,
+    };
+    tasks.insert(task.to_string(), task_obj);
+    root.insert("tasks".into(), Value::Obj(tasks));
+    root.entry("version".into()).or_insert(json::num(1.0));
+    root.entry("stamp".into()).or_insert(json::s(default_stamp));
+    root.entry("seed".into())
+        .or_insert(json::num(default_seed as f64));
+    root.entry("quick".into()).or_insert(Value::Bool(false));
+    std::fs::write(manifest_path, json::to_string(&Value::Obj(root)))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,7 +289,7 @@ mod tests {
              "mape": 0.119, "in_shape": [256, 2], "out_shape": [256, 2]},
             {"name": "dopri5", "solver": "dopri5", "k": 0, "hyper": false,
              "hlo": "cnf_rings_dopri5.hlo.txt", "nfe": 28, "macs": 238336,
-             "mape": 0.0, "in_shape": [256, 2], "out_shape": [256, 2],
+             "mape": 0.0, "tol": 0.001, "in_shape": [256, 2], "out_shape": [256, 2],
              "outputs": ["z", "nfe"]}
           ],
           "data": {"z0": {"path": "data/cnf_rings_z0.bin", "shape": [256, 2]}}
@@ -253,9 +320,61 @@ mod tests {
         let v = t.variant("heun_k1").unwrap();
         assert_eq!(v.nfe, 2);
         assert!(!v.returns_nfe);
-        assert!(t.variant("dopri5").unwrap().returns_nfe);
+        assert_eq!(v.tol, None);
+        let d5 = t.variant("dopri5").unwrap();
+        assert!(d5.returns_nfe);
+        assert_eq!(d5.tol, Some(0.001));
         assert!(m.task("nope").is_err());
         assert!(t.data.contains_key("z0"));
+    }
+
+    #[test]
+    fn non_numeric_tol_is_rejected() {
+        let dir = std::env::temp_dir().join(format!(
+            "hsolve_manifest_badtol_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = SAMPLE.replace("\"tol\": 0.001", "\"tol\": \"0.001\"");
+        assert!(bad.contains("\"tol\": \"0.001\""), "replacement applied");
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("tol"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_preserves_other_tasks_and_metadata() {
+        let dir = std::env::temp_dir().join(format!(
+            "hsolve_manifest_merge_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let task_obj = json::parse(
+            r#"{"kind": "cnf", "state": {"shape": [4, 2]}, "s_span": [0, 1],
+                "weights": "weights/extra.json", "field_hlo": "x.hlo.txt",
+                "macs": {"field": 1, "hyper": 1}, "delta": 0.5,
+                "hyper_base": "euler", "variants": []}"#,
+        )
+        .unwrap();
+        merge_task_into_manifest(&dir, "extra", task_obj, "new-stamp", 99).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.tasks.len(), 2, "existing task preserved");
+        assert!(m.task("cnf_rings").is_ok());
+        assert!(m.task("extra").is_ok());
+        // pre-existing top-level metadata wins over the defaults
+        assert_eq!(m.stamp, "abc");
+        // corrupt manifest refuses instead of clobbering
+        std::fs::write(dir.join("manifest.json"), "[1, 2]").unwrap();
+        let obj = json::parse(r#"{"kind": "cnf"}"#).unwrap();
+        assert!(merge_task_into_manifest(&dir, "t", obj, "s", 0).is_err());
+        // ... and so does a corrupt `tasks` value inside a valid root
+        std::fs::write(dir.join("manifest.json"), r#"{"tasks": [1]}"#).unwrap();
+        let obj = json::parse(r#"{"kind": "cnf"}"#).unwrap();
+        assert!(merge_task_into_manifest(&dir, "t", obj, "s", 0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -176,12 +176,15 @@ impl ExecBackend for NativeBackend {
         let qs = self.queue_state(task, variant)?;
         let mut ws = qs.ws.lock().unwrap();
         let (zt, nfe) = if variant.solver == "dopri5" {
+            // the manifest may pin a per-variant tolerance (the pareto
+            // sweep's adaptive axis); default matches the historical 1e-5
+            let tol = variant.tol.map(|t| t as f32).unwrap_or(1e-5);
             let r = adaptive_ws(
                 field,
                 &z0,
                 task.s_span,
                 &qs.tab,
-                &AdaptiveOpts::with_tol(1e-5),
+                &AdaptiveOpts::with_tol(tol),
                 &mut ws,
             )?;
             (r.z, Some(r.nfe))
@@ -304,6 +307,32 @@ mod tests {
         backend.prepare(&m, task, v).unwrap();
         backend.prepare(&m, task, v).unwrap();
         assert_eq!(backend.models.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn variant_tolerance_drives_adaptive_effort() {
+        // the same dopri5 variant at a looser manifest tol must spend
+        // fewer NFE; distinct names keep the per-queue workspaces apart
+        let (m, backend) = synth();
+        let task = m.task("cnf_t").unwrap();
+        let input: Vec<f32> = (0..8).map(|i| 0.1 * i as f32 - 0.3).collect();
+        let base = task.variant("dopri5").unwrap();
+        let mut tight = base.clone();
+        tight.name = "dopri5_tight".into();
+        tight.tol = Some(1e-7);
+        let mut loose = base.clone();
+        loose.name = "dopri5_loose".into();
+        loose.tol = Some(1e-2);
+        let nfe_tight = backend
+            .execute(&m, task, &tight, input.clone())
+            .unwrap()
+            .nfe
+            .unwrap();
+        let nfe_loose = backend.execute(&m, task, &loose, input).unwrap().nfe.unwrap();
+        assert!(
+            nfe_tight > nfe_loose,
+            "tol 1e-7 spent {nfe_tight} NFE vs 1e-2's {nfe_loose}"
+        );
     }
 
     #[test]

@@ -186,7 +186,7 @@ pub fn train_hypersolver<F: VectorField + ?Sized>(
     let mut val_cache = MlpCache::new();
     // held-out states for the improvement metric (distinct stream again)
     let mut hrng = rng.fold_in(0xBEEF_CAFE);
-    let held_z = cfg.sampler.sample(cfg.eval_batch, &mut hrng)?;
+    let held_z = cfg.sampler.sample_for(f, cfg.eval_batch, &mut hrng)?;
     let held_s = cfg.s_span.0 + 0.5 * (span - eps).max(0.0);
 
     let n = g.param_count();
@@ -337,7 +337,7 @@ pub fn export_trained(
     let d = field.state_dim();
     // measure terminal MAPE of each exported variant against tight dopri5
     let mut mrng = Rng::new(cfg.seed ^ 0x00AA_00AA);
-    let z0 = cfg.sampler.sample(export_batch, &mut mrng)?;
+    let z0 = cfg.sampler.sample_for(field, export_batch, &mut mrng)?;
     let truth = dopri5(field, &z0, cfg.s_span, &AdaptiveOpts::with_tol(1e-6))?.z;
     let plain = odeint_fixed(field, &z0, cfg.s_span, cfg.k, &tab)?;
     let hyped = odeint_hyper(field, g, &z0, cfg.s_span, cfg.k, &tab)?;
@@ -439,38 +439,15 @@ pub fn export_trained(
         ("hyper_base", json::s(&cfg.solver)),
         ("variants", variants),
     ]);
-    // merge into an existing manifest rather than clobbering it: the
-    // same-name task entry is replaced, while other tasks AND any
-    // top-level metadata a previous exporter wrote (stamp, seed, ...)
-    // are preserved; the hypertrain defaults fill only missing keys.
-    // A present-but-unparsable manifest is an error, not a silent
-    // restart — overwriting it would drop every other task it listed.
-    let manifest_path = dir.join("manifest.json");
-    let mut root: std::collections::BTreeMap<String, Value> = if manifest_path.exists() {
-        json::parse_file(&manifest_path)?
-            .as_obj()
-            .cloned()
-            .ok_or_else(|| {
-                Error::Other(format!(
-                    "existing {} is not a JSON object; refusing to overwrite it",
-                    manifest_path.display()
-                ))
-            })?
-    } else {
-        Default::default()
-    };
-    let mut tasks = root
-        .get("tasks")
-        .and_then(Value::as_obj)
-        .cloned()
-        .unwrap_or_default();
-    tasks.insert(task.to_string(), task_obj);
-    root.insert("tasks".into(), Value::Obj(tasks));
-    root.entry("version".into()).or_insert(json::num(1.0));
-    root.entry("stamp".into()).or_insert(json::s("hypertrain-native"));
-    root.entry("seed".into()).or_insert(json::num(cfg.seed as f64));
-    root.entry("quick".into()).or_insert(Value::Bool(false));
-    std::fs::write(manifest_path, json::to_string(&Value::Obj(root)))?;
+    // merge into an existing manifest rather than clobbering it — the
+    // shared exporter semantics live in runtime::manifest
+    crate::runtime::manifest::merge_task_into_manifest(
+        dir,
+        task,
+        task_obj,
+        "hypertrain-native",
+        cfg.seed,
+    )?;
     Ok(weights_path)
 }
 
@@ -498,7 +475,14 @@ pub fn serve_check(
     let entry = manifest.task(task)?;
     let backend = NativeBackend::new();
     let mut rng = Rng::new(cfg.seed ^ 0x5E12_7E57);
-    let input = cfg.sampler.sample(export_batch, &mut rng)?.into_data();
+    // the sampler may integrate trajectories of the field (paper CNF
+    // setup), so reload it from the exported weights — which doubles as a
+    // check that the serialized artifact parses back
+    let model = crate::nn::CnfModel::load(&manifest.weights_path(entry))?;
+    let input = cfg
+        .sampler
+        .sample_for(&model.field, export_batch, &mut rng)?
+        .into_data();
     let mut outputs = std::collections::BTreeMap::new();
     for v in &entry.variants {
         let o = backend.execute(&manifest, entry, v, input.clone())?;

@@ -23,7 +23,8 @@ use crate::ode::VectorField;
 use crate::solvers::fixed::{combine_into, rk_stages_core};
 use crate::solvers::workspace::RkWorkspace;
 use crate::solvers::{
-    adaptive_ws, hyper_step, odeint_fixed_ws, rk_step, AdaptiveOpts, HyperNet, Tableau,
+    adaptive_ws, hyper_step, odeint_fixed_traj, odeint_fixed_ws, rk_step, AdaptiveOpts,
+    HyperNet, Tableau,
 };
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
@@ -38,6 +39,22 @@ pub enum StateSampler {
     /// One of the `data::densities` toy 2-D densities (pinwheel, rings,
     /// checkerboard, circles) — matches the CNF tasks' base distributions.
     Density(String),
+    /// States drawn *along base-solver trajectories of the field* — the
+    /// paper's CNF setup, matching the distribution the net actually sees
+    /// when serving long spans. Initial states are uniform in
+    /// `[lo, hi]^dim`, integrated with the named fixed-step tableau in `k`
+    /// equal steps over `span`; rows are drawn uniformly (with
+    /// replacement) from the pooled mesh states. Deterministic given the
+    /// `Rng`; needs the field — use
+    /// [`sample_into_for`](Self::sample_into_for).
+    Trajectory {
+        lo: f32,
+        hi: f32,
+        dim: usize,
+        solver: String,
+        k: usize,
+        span: (f32, f32),
+    },
 }
 
 impl StateSampler {
@@ -45,13 +62,15 @@ impl StateSampler {
         match self {
             StateSampler::UniformBox { dim, .. } => *dim,
             StateSampler::Density(_) => 2,
+            StateSampler::Trajectory { dim, .. } => *dim,
         }
     }
 
     /// Fill `out` (shape (n, dim)) with fresh samples. The box sampler
     /// writes in place; the density sampler draws through
     /// [`densities::sample_density`] (which allocates its result) and
-    /// copies.
+    /// copies. The trajectory sampler needs the field and errors here —
+    /// use [`sample_into_for`](Self::sample_into_for).
     pub fn sample_into(&self, out: &mut Tensor, rng: &mut Rng) -> Result<()> {
         let (n, d) = match out.shape() {
             [n, d] => (*n, *d),
@@ -75,7 +94,59 @@ impl StateSampler {
                 out.copy_from(&s);
                 Ok(())
             }
+            StateSampler::Trajectory { .. } => Err(Error::Other(
+                "trajectory sampling needs the vector field — call \
+                 sample_into_for(f, ...)"
+                    .into(),
+            )),
         }
+    }
+
+    /// [`sample_into`](Self::sample_into) with the field available, which
+    /// every variant supports (box/density ignore `f`).
+    pub fn sample_into_for<F: VectorField + ?Sized>(
+        &self,
+        f: &F,
+        out: &mut Tensor,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let (lo, hi, dim, solver, k, span) = match self {
+            StateSampler::Trajectory {
+                lo,
+                hi,
+                dim,
+                solver,
+                k,
+                span,
+            } => (lo, hi, dim, solver, k, span),
+            other => return other.sample_into(out, rng),
+        };
+        let (n, d) = match out.shape() {
+            [n, d] => (*n, *d),
+            s => return Err(Error::Shape(format!("sample_into_for out {s:?}"))),
+        };
+        if d != *dim {
+            return Err(Error::Shape(format!("sampler dim {dim} vs out cols {d}")));
+        }
+        if *k == 0 {
+            return Err(Error::Other("trajectory sampler needs k > 0".into()));
+        }
+        let tab = Tableau::by_name(solver)?;
+        // each trajectory yields k+1 mesh states; spread the batch over
+        // enough independent trajectories that rows decorrelate
+        let n_traj = ((n + k) / (k + 1)).max(1);
+        let mut z0 = Tensor::zeros(&[n_traj, d]);
+        for v in z0.data_mut() {
+            *v = rng.uniform_in(*lo as f64, *hi as f64) as f32;
+        }
+        let traj = odeint_fixed_traj(f, &z0, *span, *k, &tab)?;
+        let od = out.data_mut();
+        for i in 0..n {
+            let t = rng.below(*k as u64 + 1) as usize;
+            let j = rng.below(n_traj as u64) as usize;
+            od[i * d..(i + 1) * d].copy_from_slice(&traj[t].data()[j * d..(j + 1) * d]);
+        }
+        Ok(())
     }
 
     /// Allocating convenience wrapper over
@@ -83,6 +154,19 @@ impl StateSampler {
     pub fn sample(&self, n: usize, rng: &mut Rng) -> Result<Tensor> {
         let mut out = Tensor::zeros(&[n, self.dim()]);
         self.sample_into(&mut out, rng)?;
+        Ok(out)
+    }
+
+    /// Allocating convenience wrapper over
+    /// [`sample_into_for`](Self::sample_into_for).
+    pub fn sample_for<F: VectorField + ?Sized>(
+        &self,
+        f: &F,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Result<Tensor> {
+        let mut out = Tensor::zeros(&[n, self.dim()]);
+        self.sample_into_for(f, &mut out, rng)?;
         Ok(out)
     }
 }
@@ -177,7 +261,7 @@ impl<'a, F: VectorField + ?Sized> ResidualGen<'a, F> {
             batch.dz = Tensor::zeros(&[n, d]);
             batch.target = Tensor::zeros(&[n, d]);
         }
-        sampler.sample_into(&mut batch.z, rng)?;
+        sampler.sample_into_for(self.f, &mut batch.z, rng)?;
         batch.s = rng.uniform_in(s_range.0 as f64, s_range.1 as f64) as f32;
         batch.eps = eps;
         let (s, eps) = (batch.s, batch.eps);
@@ -283,6 +367,66 @@ mod tests {
         let t = den.sample(32, &mut rng).unwrap();
         assert_eq!(t.shape(), &[32, 2]);
         assert!(StateSampler::Density("nope".into()).sample(4, &mut rng).is_err());
+    }
+
+    #[test]
+    fn trajectory_sampler_draws_mesh_states_deterministically() {
+        let f = Rotation { omega: 1.0 };
+        let sampler = StateSampler::Trajectory {
+            lo: -1.0,
+            hi: 1.0,
+            dim: 2,
+            solver: "euler".into(),
+            k: 8,
+            span: (0.0, 1.0),
+        };
+        assert_eq!(sampler.dim(), 2);
+        // field-less entry point refuses (it cannot integrate)
+        let mut rng = Rng::new(3);
+        assert!(sampler.sample(16, &mut rng).is_err());
+        // seeded determinism: same seed → identical draw, new seed differs
+        let a = sampler.sample_for(&f, 48, &mut Rng::new(42)).unwrap();
+        let b = sampler.sample_for(&f, 48, &mut Rng::new(42)).unwrap();
+        assert_eq!(a.data(), b.data());
+        let c = sampler.sample_for(&f, 48, &mut Rng::new(43)).unwrap();
+        assert_ne!(a.data(), c.data());
+        // rotation preserves norms exactly and euler inflates them only
+        // slightly (factor (1+ε²ω²)^{k/2} ≈ 1.07), so every mesh state
+        // stays well inside twice the initial box radius
+        assert!(a
+            .data()
+            .chunks(2)
+            .all(|z| (z[0] * z[0] + z[1] * z[1]).sqrt() <= 2.0 * 2.0f32.sqrt()));
+        // box samplers keep working through the field-aware entry point
+        let boxs = StateSampler::UniformBox {
+            lo: -1.0,
+            hi: 1.0,
+            dim: 2,
+        };
+        let d = boxs.sample_for(&f, 8, &mut Rng::new(1)).unwrap();
+        let e = boxs.sample(8, &mut Rng::new(1)).unwrap();
+        assert_eq!(d.data(), e.data());
+    }
+
+    #[test]
+    fn trajectory_sampler_feeds_residual_generation() {
+        // the ResidualGen draws through the field-aware path, so training
+        // on trajectory states works end to end
+        let f = Rotation { omega: 1.0 };
+        let mut gen = ResidualGen::new(&f, Tableau::euler(), FineRef::Rk4Substeps(4));
+        let sampler = StateSampler::Trajectory {
+            lo: -1.0,
+            hi: 1.0,
+            dim: 2,
+            solver: "euler".into(),
+            k: 4,
+            span: (0.0, 1.0),
+        };
+        let mut rng = Rng::new(9);
+        let mut batch = ResidualBatch::new();
+        gen.fill(&sampler, 16, (0.0, 0.9), 0.1, &mut rng, &mut batch).unwrap();
+        assert_eq!(batch.z.shape(), &[16, 2]);
+        assert!(batch.target.data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -3,9 +3,19 @@
 //! Auto-calibrates iteration counts to a target measurement time, reports
 //! mean/median/p95, and renders aligned tables — each paper figure's bench
 //! binary prints the same rows/series the paper reports.
+//!
+//! Besides the measurement/table machinery, this module owns the **shared
+//! bench JSON schema**: every `BENCH_*.json` the repo emits
+//! (`BENCH_serving.json`, `BENCH_train.json`, `BENCH_pareto.json`, the fig
+//! bench exports) goes through [`bench_doc`] + [`write_bench_json`], so
+//! they all carry the same `bench`/`schema`/`stamp` envelope, and
+//! [`append_trajectory`] accumulates headline numbers per run into one
+//! rolling `BENCH_trajectory.json` — the per-PR bench trajectory.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use crate::util::json::{self, Value};
 use crate::util::stats;
 
 /// One measured quantity.
@@ -155,6 +165,81 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared bench JSON schema + the bench trajectory
+// ---------------------------------------------------------------------------
+
+/// Version tag stamped into every bench JSON document.
+pub const BENCH_SCHEMA: &str = "bench.v1";
+
+/// Wrap bench-specific `fields` in the shared envelope: `bench` (the
+/// emitting binary's name), `schema` ([`BENCH_SCHEMA`]), and `stamp` (the
+/// `BENCH_STAMP` env var when set — CI stamps the commit here — else
+/// `"dev"`). Callers add only their own payload keys.
+pub fn bench_doc(bench: &str, fields: Vec<(&str, Value)>) -> Value {
+    let stamp = std::env::var("BENCH_STAMP").unwrap_or_else(|_| "dev".into());
+    let mut all = vec![
+        ("bench", json::s(bench)),
+        ("schema", json::s(BENCH_SCHEMA)),
+        ("stamp", json::s(&stamp)),
+    ];
+    all.extend(fields);
+    json::obj(all)
+}
+
+/// Write a bench document to `default_path`. `BENCH_JSON` overrides the
+/// full path — meant for single-bench invocations (the convention the
+/// serving/train benches established). `BENCH_DIR` instead redirects the
+/// *directory* while keeping each bench's own file name, so a multi-bench
+/// sweep (`cargo bench`) cannot collapse several documents onto one path,
+/// last writer winning. Returns the path written.
+pub fn write_bench_json(default_path: &str, doc: &Value) -> crate::Result<PathBuf> {
+    let path = match std::env::var("BENCH_JSON") {
+        Ok(p) => PathBuf::from(p),
+        Err(_) => match std::env::var("BENCH_DIR") {
+            Ok(d) => PathBuf::from(d).join(default_path),
+            Err(_) => PathBuf::from(default_path),
+        },
+    };
+    std::fs::write(&path, json::to_string(doc))?;
+    Ok(path)
+}
+
+/// Append one entry to the rolling bench trajectory
+/// (`BENCH_trajectory.json`, overridable with `BENCH_TRAJECTORY`). The
+/// file holds a JSON array ordered oldest → newest so successive PRs'
+/// headline numbers can be diffed in one place. A missing file starts a
+/// new trajectory; a present-but-unparsable file is an error — appending
+/// over it would destroy the recorded history.
+pub fn append_trajectory(entry: Value) -> crate::Result<PathBuf> {
+    let path = PathBuf::from(
+        std::env::var("BENCH_TRAJECTORY").unwrap_or_else(|_| "BENCH_trajectory.json".into()),
+    );
+    append_trajectory_at(&path, entry)?;
+    Ok(path)
+}
+
+/// [`append_trajectory`] to an explicit path (no env involved) — also what
+/// tests use, so they never race on the process-global env var.
+pub fn append_trajectory_at(path: &std::path::Path, entry: Value) -> crate::Result<()> {
+    let mut entries: Vec<Value> = if path.exists() {
+        json::parse_file(&path)?
+            .as_arr()
+            .ok_or_else(|| {
+                crate::Error::Json(format!(
+                    "{} is not a JSON array; refusing to append over it",
+                    path.display()
+                ))
+            })?
+            .to_vec()
+    } else {
+        Vec::new()
+    };
+    entries.push(entry);
+    std::fs::write(path, json::to_string(&Value::Arr(entries)))?;
+    Ok(())
+}
+
 /// `fmt` helpers used across bench binaries.
 pub fn fmt_ms(d: Duration) -> String {
     let ms = d.as_secs_f64() * 1e3;
@@ -209,6 +294,39 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(&["a"]);
         t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn bench_doc_has_envelope() {
+        let doc = bench_doc("unit_bench", vec![("answer", json::num(42.0))]);
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("unit_bench"));
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some(BENCH_SCHEMA));
+        assert!(doc.get("stamp").unwrap().as_str().is_some());
+        assert_eq!(doc.get("answer").unwrap().as_f64(), Some(42.0));
+        // and it round-trips through the JSON layer
+        let back = json::parse(&json::to_string(&doc)).unwrap();
+        assert_eq!(back, doc);
+    }
+
+    #[test]
+    fn trajectory_appends_and_rejects_corrupt() {
+        // exercise the append logic on an explicit temp path — no
+        // process-global env mutation, so concurrent tests cannot race
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("hsolve_traj_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        append_trajectory_at(&path, bench_doc("a", vec![])).unwrap();
+        append_trajectory_at(&path, bench_doc("b", vec![])).unwrap();
+        let v = json::parse_file(&path).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("bench").unwrap().as_str(), Some("a"));
+        assert_eq!(arr[1].get("bench").unwrap().as_str(), Some("b"));
+        // corrupt (non-array) file: refuse, and leave the file untouched
+        std::fs::write(&path, "{\"not\": \"an array\"}").unwrap();
+        assert!(append_trajectory_at(&path, bench_doc("c", vec![])).is_err());
+        assert!(json::parse_file(&path).unwrap().as_obj().is_some());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Tiny CLI argument parser (clap is not available offline).
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
-//! arguments; generates usage text from registered options.
+//! arguments; generates usage text from registered options — plus the
+//! shared comma-list/span value parsers every binary uses.
 
 use std::collections::BTreeMap;
 
@@ -159,6 +160,62 @@ impl Parsed {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared value parsers (comma lists, spans)
+// ---------------------------------------------------------------------------
+
+/// Comma-separated strings; empty tokens dropped.
+pub fn parse_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|x| x.trim().to_string())
+        .filter(|x| !x.is_empty())
+        .collect()
+}
+
+/// Comma-separated numbers; a fully-empty string means an empty list, but
+/// any unparsable or empty *interior* token is an error (`what` names the
+/// flag, `noun` the expected kind) — silently dropping a token (e.g. the
+/// `16,,8` typo) would run a different config than asked for.
+fn parse_num_list<T: std::str::FromStr>(
+    what: &str,
+    noun: &str,
+    s: &str,
+) -> crate::Result<Vec<T>> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|x| {
+            x.trim().parse::<T>().map_err(|_| {
+                crate::Error::Other(format!(
+                    "{what} expects comma-separated {noun}, got {x:?} in {s:?}"
+                ))
+            })
+        })
+        .collect()
+}
+
+/// Comma-separated integers (see [`parse_num_list`] semantics).
+pub fn parse_usize_list(what: &str, s: &str) -> crate::Result<Vec<usize>> {
+    parse_num_list(what, "integers", s)
+}
+
+/// Comma-separated floats (see [`parse_num_list`] semantics).
+pub fn parse_f32_list(what: &str, s: &str) -> crate::Result<Vec<f32>> {
+    parse_num_list(what, "numbers", s)
+}
+
+/// An `s0,s1` span.
+pub fn parse_span(what: &str, s: &str) -> crate::Result<(f32, f32)> {
+    let parts: Result<Vec<f32>, _> = s.split(',').map(|x| x.trim().parse::<f32>()).collect();
+    match parts.as_deref() {
+        Ok([a, b]) => Ok((*a, *b)),
+        _ => Err(crate::Error::Other(format!(
+            "{what} expects two comma-separated numbers (s0,s1), got {s:?}"
+        ))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,5 +272,22 @@ mod tests {
         let err = cli().parse(&args(&["--help"])).unwrap_err();
         assert!(err.contains("--port"));
         assert!(err.contains("listen port"));
+    }
+
+    #[test]
+    fn value_parsers() {
+        assert_eq!(parse_list("a, b,,c"), vec!["a", "b", "c"]);
+        assert!(parse_list("").is_empty());
+        assert_eq!(parse_usize_list("--ks", "1, 2,8").unwrap(), vec![1, 2, 8]);
+        assert!(parse_usize_list("--ks", "").unwrap().is_empty());
+        let err = parse_usize_list("--ks", "1,x").unwrap_err();
+        assert!(err.to_string().contains("--ks"));
+        // an interior empty token is a typo, not a value to drop
+        assert!(parse_usize_list("--ks", "1,,2").is_err());
+        assert_eq!(parse_f32_list("--tols", "1e-3,0.5").unwrap(), vec![1e-3, 0.5]);
+        assert!(parse_f32_list("--tols", "nope").is_err());
+        assert_eq!(parse_span("--span", "0, 1.5").unwrap(), (0.0, 1.5));
+        assert!(parse_span("--span", "1").is_err());
+        assert!(parse_span("--span", "1,2,3").is_err());
     }
 }

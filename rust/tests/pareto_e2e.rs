@@ -1,0 +1,145 @@
+//! End-to-end Pareto pipeline: train a HyperEuler on VanDerPol, sweep the
+//! grid through the `_ws` kernels and the full native serve path, and
+//! assert the paper's headline claim on the produced `BENCH_pareto.json`
+//! data:
+//!
+//! * kernel NFE-vs-error: the trained HyperEuler point strictly beats
+//!   Euler AND Midpoint at the same field NFE and is a member of the
+//!   NFE-vs-error Pareto front (so same-NFE Euler is dominated off it);
+//! * serve-path wall-clock-vs-error: the served HyperEuler variant keeps
+//!   that same-NFE error win through the full backend path, is undominated
+//!   by its same-NFE rivals on the wall-clock plane, and costs less
+//!   wall-clock than the tightest served dopri5 (the end-to-end speedup);
+//! * the manifest `tol` axis actually drives the served adaptive solver.
+//!
+//! The grid pins the hypersolver at k=2 (ε = 0.5), where both same-NFE
+//! rivals (euler k=2, midpoint k=1) are far off the reference — the
+//! assertions hold with wide margins even for a modestly trained g.
+
+use std::path::PathBuf;
+
+use hypersolvers::pareto::{
+    check_same_nfe_dominance, dominates, pareto_doc, run_pipeline,
+    serve_speedup_vs_tightest_dopri5, GridConfig, TaskSpec,
+};
+use hypersolvers::util::json;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "hsolve_pareto_e2e_{tag}_{}",
+        std::process::id()
+    ));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn trained_hypereuler_dominates_same_nfe_rivals_on_both_planes() {
+    let grid = GridConfig {
+        solvers: vec!["euler".into(), "midpoint".into()],
+        ks: vec![1, 2, 4],
+        tols: vec![1e-3, 1e-5],
+        hyper_base: "euler".into(),
+        hyper_k: 2,
+        batch: 64,
+        seed: 11,
+        span: (0.0, 1.0),
+        sample_box: 2.0,
+        traj_mesh_k: 8,
+        traj_checkpoints: 2,
+        ref_tol: 1e-7,
+        measure_ms: 30,
+        train_steps: 2500,
+        train_hidden: vec![8],
+        train_stop_at: 5.0,
+        log: false,
+    };
+    let tasks = vec![TaskSpec::analytic("vdp").unwrap()];
+    let dir = temp_dir("vdp");
+    let reports = run_pipeline(&grid, &tasks, &dir).unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert!(r.train.improvement > 1.0, "training helped at all: {:?}", r.train);
+
+    // ---- kernel plane, trajectory states (the trained distribution) ----
+    let chk = check_same_nfe_dominance(&r.kernel_traj, &grid).unwrap();
+    assert!(
+        chk.dominates_same_nfe_euler(),
+        "kernel: {} err {:.3e} vs same-NFE euler {:?}",
+        chk.hyper_label,
+        chk.err_hyper,
+        chk.err_euler
+    );
+    assert!(
+        chk.dominates_same_nfe_midpoint(),
+        "kernel: {} err {:.3e} vs same-NFE midpoint {:?}",
+        chk.hyper_label,
+        chk.err_hyper,
+        chk.err_midpoint
+    );
+    assert!(chk.on_nfe_front, "kernel: {} off the NFE front", chk.hyper_label);
+    // the box-states plane agrees on the euler comparison (the trained
+    // correction generalizes off its training distribution)
+    let boxchk = check_same_nfe_dominance(&r.kernel_box, &grid).unwrap();
+    assert!(boxchk.dominates_same_nfe_euler(), "box plane: {boxchk:?}");
+
+    // ---- serve plane: the full backend path ----
+    let schk = check_same_nfe_dominance(&r.serve, &grid).unwrap();
+    assert!(schk.dominates_same_nfe_euler(), "serve: {schk:?}");
+    assert!(schk.dominates_same_nfe_midpoint(), "serve: {schk:?}");
+    let hyper = r.serve.iter().find(|p| p.label == "hypereuler_k2").unwrap();
+    let euler = r.serve.iter().find(|p| p.label == "euler_k2").unwrap();
+    let midpoint = r.serve.iter().find(|p| p.label == "midpoint_k1").unwrap();
+    // wall-clock plane: neither same-NFE rival dominates the hyper point
+    // (they are strictly less accurate, so dominance would need them to
+    // be at least as accurate — pin it explicitly)
+    assert!(!dominates((euler.wall_us, euler.err), (hyper.wall_us, hyper.err)));
+    assert!(!dominates((midpoint.wall_us, midpoint.err), (hyper.wall_us, hyper.err)));
+    // end-to-end speedup vs the tightest served dopri5
+    let sp = serve_speedup_vs_tightest_dopri5(&r.serve, &grid).unwrap();
+    assert!(sp > 1.0, "served hyper slower than tight dopri5: {sp:.2}×");
+    // the manifest tol axis drives the served adaptive solver
+    let d5_loose = r.serve.iter().find(|p| p.label == "dopri5_1e-3").unwrap();
+    let d5_tight = r.serve.iter().find(|p| p.label == "dopri5_1e-5").unwrap();
+    assert!(
+        d5_tight.nfe > d5_loose.nfe,
+        "served dopri5 NFE ignored the manifest tol: {} vs {}",
+        d5_tight.nfe,
+        d5_loose.nfe
+    );
+    assert!(d5_tight.err <= d5_loose.err * 1.5, "tight tol should not be less accurate");
+
+    // ---- the document round-trips with the fronts in place ----
+    let doc = pareto_doc(&grid, &reports);
+    let path = dir.join("BENCH_pareto.json");
+    std::fs::write(&path, json::to_string(&doc)).unwrap();
+    let back = json::parse_file(&path).unwrap();
+    assert_eq!(back.get("bench").unwrap().as_str(), Some("hyperbench_pareto"));
+    assert_eq!(back.get("schema").unwrap().as_str(), Some("bench.v1"));
+    let task = &back.get("tasks").unwrap().as_arr().unwrap()[0];
+    let front: Vec<&str> = task
+        .get("kernel_trajectory")
+        .unwrap()
+        .get("front_nfe")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap())
+        .collect();
+    assert!(
+        front.contains(&"hypereuler_k2"),
+        "front_nfe in the JSON misses the hyper point: {front:?}"
+    );
+    assert!(
+        !front.contains(&"euler_k2"),
+        "same-NFE euler should be dominated off the front: {front:?}"
+    );
+    // the exported artifacts stay natively servable
+    assert!(dir.join("manifest.json").exists());
+    assert!(dir.join("weights/vdp.json").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,195 @@
+//! Property tests for the Pareto subsystem's correctness-critical pieces:
+//! the extracted front must be *exactly* the non-dominated set (checked
+//! against a brute-force O(n²) reference, with deliberate ties), the
+//! trajectory state sampler must be seeded-deterministic, and one sweep
+//! grid cell must agree with a direct solver call bit-for-bit.
+
+use hypersolvers::ode::{Rotation, VanDerPol};
+use hypersolvers::pareto::{
+    dominates, kernel_sweep, method_label, non_dominated, GridConfig,
+};
+use hypersolvers::solvers::{adaptive, AdaptiveOpts, Tableau};
+use hypersolvers::tensor::Tensor;
+use hypersolvers::train::StateSampler;
+use hypersolvers::util::propkit::{check, gen_vec, prop_assert};
+use hypersolvers::util::prng::Rng;
+
+/// Brute-force non-dominated set: keep i iff no j dominates it.
+fn brute_force_front(pts: &[(f64, f64)]) -> Vec<usize> {
+    let mut kept: Vec<usize> = (0..pts.len())
+        .filter(|&i| {
+            pts[i].0.is_finite()
+                && pts[i].1.is_finite()
+                && !pts.iter().enumerate().any(|(j, &q)| {
+                    j != i && q.0.is_finite() && q.1.is_finite() && dominates(q, pts[i])
+                })
+        })
+        .collect();
+    kept.sort_by(|&a, &b| {
+        pts[a]
+            .0
+            .partial_cmp(&pts[b].0)
+            .unwrap()
+            .then(pts[a].1.partial_cmp(&pts[b].1).unwrap())
+            .then(a.cmp(&b))
+    });
+    kept
+}
+
+#[test]
+fn front_is_exactly_the_non_dominated_set() {
+    check("front == brute-force non-dominated set", 120, |rng| {
+        let n = 3 + (rng.below(30) as usize);
+        // quantize to a coarse lattice so equal-cost / equal-error /
+        // fully-duplicate ties occur often
+        let xs = gen_vec(rng, n, 1.0);
+        let ys = gen_vec(rng, n, 1.0);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|i| {
+                (
+                    (xs[i].abs() * 4.0).round() as f64 / 4.0,
+                    (ys[i].abs() * 4.0).round() as f64 / 4.0,
+                )
+            })
+            .collect();
+        let fast = non_dominated(&pts);
+        let brute = brute_force_front(&pts);
+        if fast != brute {
+            return Err(format!("scan {fast:?} != brute {brute:?} on {pts:?}"));
+        }
+        // stable order: (cost, err, idx) ascending
+        for w in fast.windows(2) {
+            let (a, b) = (pts[w[0]], pts[w[1]]);
+            let ord = a
+                .0
+                .partial_cmp(&b.0)
+                .unwrap()
+                .then(a.1.partial_cmp(&b.1).unwrap())
+                .then(w[0].cmp(&w[1]));
+            if ord != std::cmp::Ordering::Less {
+                return Err(format!("unstable order {:?} then {:?}", w[0], w[1]));
+            }
+        }
+        prop_assert(!fast.is_empty() || pts.is_empty(), "empty front")
+    });
+}
+
+#[test]
+fn front_never_keeps_dominated_never_drops_undominated() {
+    check("membership invariants", 80, |rng| {
+        let n = 2 + (rng.below(20) as usize);
+        let xs = gen_vec(rng, n, 2.0);
+        let ys = gen_vec(rng, n, 2.0);
+        let pts: Vec<(f64, f64)> = (0..n)
+            .map(|i| (xs[i].abs() as f64, ys[i].abs() as f64))
+            .collect();
+        let front = non_dominated(&pts);
+        for &i in &front {
+            for (j, &q) in pts.iter().enumerate() {
+                if j != i && dominates(q, pts[i]) {
+                    return Err(format!("kept {i} dominated by {j}"));
+                }
+            }
+        }
+        for i in 0..n {
+            if !front.contains(&i)
+                && !pts
+                    .iter()
+                    .enumerate()
+                    .any(|(j, &q)| j != i && dominates(q, pts[i]))
+            {
+                return Err(format!("dropped undominated {i}"));
+            }
+        }
+        prop_assert(true, "ok")
+    });
+}
+
+#[test]
+fn trajectory_sampler_is_seed_deterministic() {
+    let f = VanDerPol { mu: 1.0 };
+    let sampler = StateSampler::Trajectory {
+        lo: -2.0,
+        hi: 2.0,
+        dim: 2,
+        solver: "euler".into(),
+        k: 8,
+        span: (0.0, 1.0),
+    };
+    check("same seed → same draw", 20, |rng| {
+        let seed = rng.next_u64();
+        let a = sampler.sample_for(&f, 32, &mut Rng::new(seed)).unwrap();
+        let b = sampler.sample_for(&f, 32, &mut Rng::new(seed)).unwrap();
+        prop_assert(a.data() == b.data(), "seeded draws diverged")
+    });
+    // consuming the stream advances it — consecutive draws differ
+    let mut rng = Rng::new(5);
+    let a = sampler.sample_for(&f, 32, &mut rng).unwrap();
+    let b = sampler.sample_for(&f, 32, &mut rng).unwrap();
+    assert_ne!(a.data(), b.data());
+}
+
+#[test]
+fn sweep_cell_matches_direct_solver_call() {
+    // one grid cell (euler, k=4) must agree with computing the same
+    // number directly: same reference construction, same solver call,
+    // same metric — bit-for-bit, since both run identical code paths
+    let f = Rotation { omega: 1.0 };
+    let grid = GridConfig {
+        solvers: vec!["euler".into()],
+        ks: vec![4],
+        tols: vec![],
+        hyper_k: 4,
+        batch: 8,
+        traj_checkpoints: 4,
+        measure_ms: 10,
+        ..GridConfig::smoke()
+    };
+    let zero_g = |_e: f32, _s: f32, z: &Tensor, _dz: &Tensor| Tensor::zeros(z.shape());
+    let mut rng = Rng::new(3);
+    let z0 = grid.box_sampler(2).sample_for(&f, grid.batch, &mut rng).unwrap();
+    let points = kernel_sweep("rot", &f, &zero_g, &grid, &z0, "box").unwrap();
+
+    let cell = points
+        .iter()
+        .find(|p| p.label == method_label("euler", 4, false, None))
+        .expect("euler_k4 swept");
+    assert_eq!(cell.nfe, 4.0);
+    assert!(cell.err_traj.is_some(), "k=4 mesh contains the 4 checkpoints");
+
+    // reference exactly as the sweep builds it: segment-to-segment tight
+    // dopri5 at the checkpoint times
+    let c = grid.traj_checkpoints;
+    let mut cur = z0.clone();
+    for j in 1..=c {
+        let t0 = (j - 1) as f32 / c as f32;
+        let t1 = j as f32 / c as f32;
+        cur = adaptive(
+            &f,
+            &cur,
+            (t0, t1),
+            &Tableau::dopri5(),
+            &AdaptiveOpts::with_tol(grid.ref_tol),
+        )
+        .unwrap()
+        .z;
+    }
+    let direct = hypersolvers::solvers::odeint_fixed(&f, &z0, (0.0, 1.0), 4, &Tableau::euler())
+        .unwrap();
+    let want_err = hypersolvers::metrics::mean_l2(&direct, &cur).unwrap();
+    assert!(
+        (cell.err - want_err).abs() <= 1e-12,
+        "sweep err {} vs direct {}",
+        cell.err,
+        want_err
+    );
+    assert!(cell.wall_us > 0.0);
+
+    // the zero-correction hypersolver point equals its base solver
+    let hyper = points
+        .iter()
+        .find(|p| p.label == method_label("euler", 4, true, None))
+        .expect("hypereuler_k4 swept");
+    assert!((hyper.err - cell.err).abs() <= 1e-9);
+    assert_eq!(hyper.g_evals, 4);
+}
