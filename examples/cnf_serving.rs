@@ -91,8 +91,8 @@ fn main() {
     let mut latencies = Vec::with_capacity(pending.len());
     let mut outputs: std::collections::BTreeMap<String, Vec<f32>> = Default::default();
     let mut variant_counts: std::collections::BTreeMap<String, usize> = Default::default();
-    for (task, rx) in pending {
-        let resp = rx.recv().expect("response");
+    for (task, handle) in pending {
+        let resp = handle.wait().expect("response");
         latencies.push(resp.latency.as_secs_f64() * 1e3);
         outputs.entry(task).or_default().extend(&resp.output);
         *variant_counts.entry(resp.variant).or_default() += 1;

@@ -1,11 +1,16 @@
-//! Serving bench (ours) — the coordinator under a Poisson workload.
+//! Serving bench (ours) — the coordinator under a Poisson workload, plus
+//! pipelined-client scenarios over the real TCP/API-v1 surface.
 //!
 //! This is the deployment story the paper's introduction motivates: tight
 //! inference-time constraints. A Poisson trace of CNF sampling requests with
 //! a mixed budget profile is replayed against the engine; reported:
 //! throughput, latency percentiles, batch fill, NFE spent per request, and
 //! the worker-pool concurrency peak (with per-queue affinity, every
-//! concurrent batch belongs to a distinct (task, variant) queue).
+//! concurrent batch belongs to a distinct (task, variant) queue). The
+//! pipelined scenarios then drive a single TCP connection with a window of
+//! in-flight v1 requests (single- and full-batch multi-sample), matching
+//! out-of-order completions by id — the serving path external callers
+//! actually see.
 //!
 //! ```bash
 //! cargo bench --bench serving_throughput -- --backend native --workers 4
@@ -17,15 +22,18 @@
 //!
 //! Besides the human-readable tables, the run is summarized to
 //! `BENCH_serving.json` (override the path with `BENCH_JSON`): per
-//! scenario p50/p95/p99 batch latency, achieved throughput, batch fill,
-//! NFE/request, and the worker-pool concurrency peak — machine-readable so
-//! successive PRs can diff serving performance.
+//! scenario p50/p95/p99 latency, achieved throughput, batch fill, NFE/req,
+//! and the worker-pool concurrency peak — machine-readable so successive
+//! PRs can diff serving performance.
 
+use std::collections::HashMap;
+use std::net::TcpListener;
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use hypersolvers::coordinator::{Engine, EngineConfig, Policy};
+use hypersolvers::api::v1::{InferReply, InferRequest};
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
 use hypersolvers::data::workload::WorkloadSpec;
 use hypersolvers::runtime::{BackendKind, Manifest};
 use hypersolvers::tensor;
@@ -44,6 +52,16 @@ fn main() {
         .opt("workers", "0", "dispatch workers (0 = auto)")
         .opt("requests", "2000", "requests per scenario")
         .opt("rate", "2000", "offered requests/second")
+        .opt(
+            "pipeline-requests",
+            "600",
+            "requests per pipelined TCP scenario",
+        )
+        .opt(
+            "pipeline-window",
+            "32",
+            "in-flight requests on the pipelined connection",
+        )
         .opt(
             "matmul-threads",
             "0",
@@ -89,6 +107,10 @@ fn main() {
         .iter()
         .map(|t| manifest.task(t).unwrap().state_shape[1..].iter().product())
         .collect();
+    let caps: Vec<usize> = tasks
+        .iter()
+        .map(|t| manifest.task(t).unwrap().batch())
+        .collect();
 
     println!(
         "backend={backend}  tasks={tasks:?}  requests={} rate={}",
@@ -103,6 +125,14 @@ fn main() {
     let mut scenarios_json: Vec<Value> = Vec::new();
     let mut resolved_workers = 0usize;
     let mut headline: Option<(f64, f64)> = None; // mixed-budget (p50, rps), pool off
+
+    let engine_config = |workers: usize| EngineConfig {
+        artifacts_dir: artifacts_dir.clone(),
+        max_wait: Duration::from_millis(2),
+        policy: Policy::MinMacs,
+        backend,
+        workers,
+    };
 
     // paired matmul-pool modes: 0 (off) always, plus --matmul-threads on.
     // Only the native backend runs batches through tensor::gemm_into —
@@ -138,14 +168,7 @@ fn main() {
         } else {
             tensor::clear_matmul_pool();
         }
-        let engine = Engine::new(EngineConfig {
-            artifacts_dir: artifacts_dir.clone(),
-            max_wait: Duration::from_millis(2),
-            policy: Policy::MinMacs,
-            backend,
-            workers: args.get_usize("workers"),
-        })
-        .unwrap();
+        let engine = Engine::new(engine_config(args.get_usize("workers"))).unwrap();
         resolved_workers = engine.worker_count();
         for t in &tasks {
             engine.warmup(t).unwrap();
@@ -183,8 +206,8 @@ fn main() {
             pending.push(engine.submit(&ev.task, ev.budget, input).unwrap());
         }
         let mut latencies = Vec::with_capacity(pending.len());
-        for rx in pending {
-            let resp = rx.recv().unwrap();
+        for handle in pending {
+            let resp = handle.wait().unwrap();
             latencies.push(resp.latency.as_secs_f64() * 1e3);
         }
         let wall = t0.elapsed().as_secs_f64();
@@ -212,6 +235,7 @@ fn main() {
         ]);
         scenarios_json.push(json::obj(vec![
             ("scenario", json::s(scenario)),
+            ("mode", json::s("inproc_poisson")),
             ("matmul_threads", json::num(mode as f64)),
             ("requests", json::num(trace.events.len() as f64)),
             ("offered_rps", json::num(spec.rate)),
@@ -242,12 +266,131 @@ fn main() {
         }
     }
     tensor::clear_matmul_pool();
+
+    // ---- pipelined TCP scenarios: the API v1 surface over a socket ----
+    //
+    // One connection, `window` requests in flight, completions matched by
+    // id (possibly out of order). ×1 sends classic single-sample requests;
+    // ×B sends full-batch multi-sample requests (each fills an executable
+    // batch by itself — the high-throughput client shape).
+    let pip_requests = args.get_usize("pipeline-requests");
+    let window = args.get_usize("pipeline-window").max(1);
+    for &full_batch in &[false, true] {
+        let samples_label = if full_batch { "×B" } else { "×1" };
+        let scenario = format!("pipelined tcp {samples_label}");
+        let engine = Arc::new(Engine::new(engine_config(args.get_usize("workers"))).unwrap());
+        for t in &tasks {
+            engine.warmup(t).unwrap();
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        {
+            let engine = Arc::clone(&engine);
+            std::thread::spawn(move || {
+                let _ = server::serve_listener(engine, listener);
+            });
+        }
+        let mut client = server::Client::connect(&addr).unwrap();
+
+        let mut rng = Rng::new(9);
+        let make_req = |i: usize, rng: &mut Rng| -> InferRequest {
+            let ti = i % tasks.len();
+            let samples = if full_batch { caps[ti] } else { 1 };
+            let dim = dims[ti];
+            let input: Vec<f32> = (0..samples * dim).map(|_| rng.normal_f32()).collect();
+            InferRequest::batch(&tasks[ti], 0.05, samples, input)
+        };
+
+        let t0 = Instant::now();
+        let mut sent_at: HashMap<u64, Instant> = HashMap::with_capacity(window);
+        let mut latencies: Vec<f64> = Vec::with_capacity(pip_requests);
+        let mut rows_done = 0usize;
+        let mut next = 0usize;
+        while next < pip_requests.min(window) {
+            let id = client.send(&make_req(next, &mut rng)).unwrap();
+            sent_at.insert(id, Instant::now());
+            next += 1;
+        }
+        while latencies.len() < pip_requests {
+            let reply = client.recv_reply().unwrap();
+            let id = reply.id().expect("reply without id");
+            let at = sent_at.remove(&id).expect("unmatched reply id");
+            latencies.push(at.elapsed().as_secs_f64() * 1e3);
+            match reply {
+                InferReply::Ok(r) => rows_done += r.samples,
+                InferReply::Err(e) => panic!("pipelined request failed: {}", e.error),
+            }
+            if next < pip_requests {
+                let id = client.send(&make_req(next, &mut rng)).unwrap();
+                sent_at.insert(id, Instant::now());
+                next += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(sent_at.is_empty(), "unanswered ids: {}", sent_at.len());
+
+        let metrics = engine.metrics();
+        let nfe_per_req = metrics.nfe_total.load(Relaxed) as f64
+            / metrics.responses.load(Relaxed) as f64;
+        let conc_peak = metrics.inflight_peak.load(Relaxed);
+        let achieved_rps = pip_requests as f64 / wall;
+        let (p50, p95, p99) = (
+            stats::percentile(&latencies, 50.0),
+            stats::percentile(&latencies, 95.0),
+            stats::percentile(&latencies, 99.0),
+        );
+        table.row(&[
+            scenario.clone(),
+            "0".into(),
+            pip_requests.to_string(),
+            "-".into(),
+            format!("{achieved_rps:.0}"),
+            format!("{p50:.2}"),
+            format!("{p99:.2}"),
+            format!("{:.2}", metrics.fill_ratio()),
+            format!("{nfe_per_req:.1}"),
+            conc_peak.to_string(),
+        ]);
+        scenarios_json.push(json::obj(vec![
+            ("scenario", json::s(&scenario)),
+            ("mode", json::s("tcp_pipelined")),
+            ("matmul_threads", json::num(0.0)),
+            ("requests", json::num(pip_requests as f64)),
+            ("window", json::num(window as f64)),
+            // aligned with the envelope's "tasks" array — requests
+            // alternate tasks, and ×B uses each task's own batch cap
+            (
+                "samples_per_req_by_task",
+                Value::Arr(
+                    caps.iter()
+                        .map(|&c| json::num(if full_batch { c as f64 } else { 1.0 }))
+                        .collect(),
+                ),
+            ),
+            ("rows", json::num(rows_done as f64)),
+            ("throughput_rps", json::num(achieved_rps)),
+            ("throughput_rows_per_s", json::num(rows_done as f64 / wall)),
+            ("p50_ms", json::num(p50)),
+            ("p95_ms", json::num(p95)),
+            ("p99_ms", json::num(p99)),
+            ("fill", json::num(metrics.fill_ratio())),
+            ("nfe_per_req", json::num(nfe_per_req)),
+            ("inflight_peak", json::num(conc_peak as f64)),
+        ]));
+        println!(
+            "[{scenario}] window={window} rows={rows_done} {}",
+            metrics.report()
+        );
+    }
+
     println!();
     table.print();
     println!(
         "\nmixed-budget NFE/req should sit far below the tight-only scenario: \
          the policy routes everything it can to hypersolved variants. \
-         'conc peak' ≥ 2 shows distinct queues overlapping on the pool."
+         'conc peak' ≥ 2 shows distinct queues overlapping on the pool. The \
+         pipelined tcp rows measure the external API v1 surface (one \
+         connection, {window} in flight, id-matched completions)."
     );
 
     // machine-readable summary in the shared bench schema, so the bench

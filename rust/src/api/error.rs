@@ -1,0 +1,175 @@
+//! Stable machine-readable error codes of the serving API.
+//!
+//! Every error that crosses the API boundary — wire lines, `Engine::submit`
+//! rejections, batch-execution failures — carries one of these codes next
+//! to its human-readable message, so clients can branch on `code` without
+//! parsing prose. The code strings are part of the v1 wire contract:
+//! **never rename one**; add new variants instead.
+
+use std::fmt;
+
+/// The closed set of machine-readable error codes (`code` field on every
+/// error line). Wire strings are snake_case and frozen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorCode {
+    /// Malformed request: bad JSON, wrong field type, unsupported
+    /// protocol version, non-numeric `budget`/`deadline_us`, unknown
+    /// `policy` axis.
+    BadRequest,
+    /// `task` names no manifest entry.
+    UnknownTask,
+    /// A pinned `variant` names no variant of the task.
+    UnknownVariant,
+    /// Input shape disagrees with the task's state shape (wrong sample
+    /// dim, zero samples, or more samples than the executable batch).
+    ShapeMismatch,
+    /// The request's `deadline_us` elapsed before its batch dispatched;
+    /// the request was dropped without executing (fail-fast).
+    DeadlineExceeded,
+    /// `cmd` names no server command.
+    UnknownCmd,
+    /// The execution backend failed the batch.
+    ExecFailed,
+    /// Server-side invariant violation (manifest drift, short backend
+    /// output, dropped channels).
+    Internal,
+}
+
+impl ErrorCode {
+    /// Every code, for exhaustive protocol tests.
+    pub const ALL: [ErrorCode; 8] = [
+        ErrorCode::BadRequest,
+        ErrorCode::UnknownTask,
+        ErrorCode::UnknownVariant,
+        ErrorCode::ShapeMismatch,
+        ErrorCode::DeadlineExceeded,
+        ErrorCode::UnknownCmd,
+        ErrorCode::ExecFailed,
+        ErrorCode::Internal,
+    ];
+
+    /// The frozen wire string.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownTask => "unknown_task",
+            ErrorCode::UnknownVariant => "unknown_variant",
+            ErrorCode::ShapeMismatch => "shape_mismatch",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::UnknownCmd => "unknown_cmd",
+            ErrorCode::ExecFailed => "exec_failed",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn from_wire(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.into_iter().find(|c| c.as_str() == s)
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A coded API error: stable `code` + human `message`. This is what the
+/// engine's completion channel and every error line carry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ApiError {
+        ApiError {
+            code,
+            message: message.into(),
+        }
+    }
+
+    pub fn bad_request(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::BadRequest, m)
+    }
+
+    pub fn unknown_task(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::UnknownTask, m)
+    }
+
+    pub fn unknown_variant(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::UnknownVariant, m)
+    }
+
+    pub fn shape_mismatch(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::ShapeMismatch, m)
+    }
+
+    pub fn deadline_exceeded(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::DeadlineExceeded, m)
+    }
+
+    pub fn unknown_cmd(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::UnknownCmd, m)
+    }
+
+    pub fn exec_failed(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::ExecFailed, m)
+    }
+
+    pub fn internal(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::Internal, m)
+    }
+
+    /// Map a crate-level execution error onto the API code space (batch
+    /// failures surfaced through the completion channel).
+    pub fn from_engine(e: &crate::Error) -> ApiError {
+        match e {
+            crate::Error::Shape(m) => ApiError::shape_mismatch(m.clone()),
+            other => ApiError::exec_failed(other.to_string()),
+        }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<ApiError> for crate::Error {
+    fn from(e: ApiError) -> crate::Error {
+        crate::Error::Coordinator(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_round_trip_their_wire_strings() {
+        for c in ErrorCode::ALL {
+            assert_eq!(ErrorCode::from_wire(c.as_str()), Some(c));
+        }
+        assert_eq!(ErrorCode::from_wire("no_such_code"), None);
+    }
+
+    #[test]
+    fn display_carries_code_and_message() {
+        let e = ApiError::deadline_exceeded("waited 5000µs");
+        assert_eq!(e.to_string(), "deadline_exceeded: waited 5000µs");
+        let ce: crate::Error = e.into();
+        assert!(ce.to_string().contains("deadline_exceeded"));
+    }
+
+    #[test]
+    fn engine_errors_map_onto_codes() {
+        let shape = ApiError::from_engine(&crate::Error::Shape("2 vs 3".into()));
+        assert_eq!(shape.code, ErrorCode::ShapeMismatch);
+        let other = ApiError::from_engine(&crate::Error::Other("boom".into()));
+        assert_eq!(other.code, ErrorCode::ExecFailed);
+    }
+}

@@ -1,0 +1,19 @@
+//! The versioned serving API — the single definition of the wire and
+//! in-process contract.
+//!
+//! * [`error`] — the stable machine-readable [`ErrorCode`] space and the
+//!   coded [`ApiError`] every failure path carries.
+//! * [`v1`] — the typed [`v1::InferRequest`]/[`v1::InferResponse`] structs
+//!   and the JSON-lines codec (v1 lines tagged `"v": 1`; legacy v0 lines
+//!   still decoded and answered with a deprecation notice).
+//!
+//! The TCP server ([`crate::coordinator::server`]), the pipelined
+//! [`Client`](crate::coordinator::server::Client), and the Pareto serve
+//! sweep ([`crate::pareto::sweep::serve_sweep`]) all speak through this
+//! module — there is no second copy of the protocol anywhere. See
+//! rust/README.md §"Serving API v1" for the schema tables.
+
+pub mod error;
+pub mod v1;
+
+pub use error::{ApiError, ErrorCode};

@@ -1,0 +1,637 @@
+//! Serving API **v1**: the typed request/response structs and the one
+//! JSON-lines codec shared by the server, the client, and the Pareto
+//! sweeps. Nothing else in the crate encodes or decodes wire lines.
+//!
+//! One JSON object per line, both directions. A v1 request:
+//!
+//! ```text
+//! {"v": 1, "id": 7, "task": "cnf_rings", "budget": 0.05,
+//!  "input": [[0.1, -0.7], [0.3, 0.2]],            // [B, dims]
+//!  "policy": "nfe", "variant": "hypereuler_k2", "deadline_us": 5000}
+//! ```
+//!
+//! and its (possibly out-of-order — correlate by `id`) response:
+//!
+//! ```text
+//! {"v": 1, "ok": true, "id": 7, "variant": "hypereuler_k2",
+//!  "mape": 0.042, "nfe": 2, "latency_us": 812, "batch_fill": 4,
+//!  "output": [[...], [...]]}
+//! ```
+//!
+//! Errors are `{"v": 1, "ok": false, "id": 7, "code": "...", "error":
+//! "..."}` with a stable [`ErrorCode`] string. Optional request fields:
+//! `id` (client correlation id, echoed; engine-assigned when absent),
+//! `budget` (absent = cheapest available), `policy` (`"nfe" | "macs"`,
+//! overrides the engine default axis), `variant` (pin an exact variant,
+//! bypassing the policy), `deadline_us` (fail fast with
+//! `deadline_exceeded` if the request has not *dispatched* within this
+//! many µs — an execution already in flight is never cancelled).
+//!
+//! **Versioning:** every v1 line carries `"v": 1`. A line without `"v"`
+//! is a legacy v0 request (single flat sample, no id/policy/variant/
+//! deadline); it is still answered, in the v0 response shape, with an
+//! added `deprecation` notice. Any other `"v"` value is rejected with
+//! `bad_request`. Parsing is strict in every version: a present field of
+//! the wrong type (e.g. `"budget": "0.05"`) is `bad_request`, never a
+//! silent default.
+
+use crate::api::error::{ApiError, ErrorCode};
+use crate::coordinator::policy::Policy;
+use crate::coordinator::request::Response;
+use crate::util::json::{self, Value};
+
+/// The protocol version this module speaks.
+pub const VERSION: u64 = 1;
+
+/// Notice attached to every answered v0 line.
+pub const DEPRECATION: &str =
+    "v0 single-sample lines are deprecated; send {\"v\": 1, ...} (see rust/README.md, API v1)";
+
+/// A typed inference request — the in-process form of a v1 wire line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    /// Client-chosen correlation id. `None` lets the server assign (and
+    /// echo) the engine id.
+    pub id: Option<u64>,
+    pub task: String,
+    /// Rows of the request batch.
+    pub samples: usize,
+    /// Values per row.
+    pub dims: usize,
+    /// Row-major `[samples, dims]` payload.
+    pub input: Vec<f32>,
+    /// Max acceptable terminal MAPE; `f32::INFINITY` = cheapest available.
+    pub budget: f32,
+    /// Per-request override of the engine's cost axis.
+    pub policy: Option<Policy>,
+    /// Pin an exact variant, bypassing the budget policy.
+    pub variant: Option<String>,
+    /// Fail fast with `deadline_exceeded` if not dispatched in time.
+    pub deadline_us: Option<u64>,
+}
+
+impl InferRequest {
+    /// A single-sample request (the common case).
+    pub fn single(task: &str, budget: f32, sample: Vec<f32>) -> InferRequest {
+        let dims = sample.len();
+        InferRequest {
+            id: None,
+            task: task.to_string(),
+            samples: 1,
+            dims,
+            input: sample,
+            budget,
+            policy: None,
+            variant: None,
+            deadline_us: None,
+        }
+    }
+
+    /// A multi-sample request over a row-major `[samples, dims]` payload.
+    ///
+    /// # Panics
+    /// If `input.len()` is not a positive multiple of `samples` — silently
+    /// truncating a ragged payload would violate the module's
+    /// loud-over-lossy contract.
+    pub fn batch(task: &str, budget: f32, samples: usize, input: Vec<f32>) -> InferRequest {
+        assert!(
+            samples > 0 && !input.is_empty() && input.len() % samples == 0,
+            "InferRequest::batch: {} values do not split into {samples} equal rows",
+            input.len()
+        );
+        let dims = input.len() / samples;
+        InferRequest {
+            id: None,
+            task: task.to_string(),
+            samples,
+            dims,
+            input,
+            budget,
+            policy: None,
+            variant: None,
+            deadline_us: None,
+        }
+    }
+
+    /// The engine-level submission options this request carries — the one
+    /// mapping from wire fields to
+    /// [`SubmitOptions`](crate::coordinator::SubmitOptions), so server
+    /// paths cannot drift apart field by field.
+    pub fn submit_options(&self) -> crate::coordinator::SubmitOptions {
+        crate::coordinator::SubmitOptions {
+            policy: self.policy,
+            variant: self.variant.clone(),
+            deadline: self.deadline_us.map(std::time::Duration::from_micros),
+        }
+    }
+}
+
+/// A typed success reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferResponse {
+    /// The correlation id (client-chosen when given, engine id otherwise).
+    pub id: u64,
+    pub variant: String,
+    pub mape: f64,
+    pub nfe: u64,
+    pub latency_us: u64,
+    /// Real rows in the executed batch (how well batching worked).
+    pub batch_fill: usize,
+    pub samples: usize,
+    pub dims: usize,
+    /// Row-major `[samples, dims]` output.
+    pub output: Vec<f32>,
+}
+
+/// A typed error reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorReply {
+    pub id: Option<u64>,
+    pub error: ApiError,
+}
+
+/// One decoded reply line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferReply {
+    Ok(InferResponse),
+    Err(ErrorReply),
+}
+
+impl InferReply {
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            InferReply::Ok(r) => Some(r.id),
+            InferReply::Err(e) => e.id,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strict field readers
+// ---------------------------------------------------------------------------
+
+fn field_u64(v: &Value, key: &str) -> Result<Option<u64>, ApiError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => {
+            let n = x.as_f64().ok_or_else(|| {
+                ApiError::bad_request(format!("{key} must be a number"))
+            })?;
+            if !(n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53)) {
+                return Err(ApiError::bad_request(format!(
+                    "{key} must be a non-negative integer, got {n}"
+                )));
+            }
+            Ok(Some(n as u64))
+        }
+    }
+}
+
+fn field_str(v: &Value, key: &str) -> Result<Option<&str>, ApiError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(s)),
+        Some(_) => Err(ApiError::bad_request(format!("{key} must be a string"))),
+    }
+}
+
+/// Best-effort read of a line's `id` field with the same validation the
+/// codec applies — for echoing ids on lines that failed to decode (an
+/// invalid id yields `None`, never a second definition of validity).
+pub fn peek_id(v: &Value) -> Option<u64> {
+    field_u64(v, "id").ok().flatten()
+}
+
+/// Wire version of a line: `None` "v" key → 0; `1` → 1; else rejected.
+pub fn wire_version(v: &Value) -> Result<u8, ApiError> {
+    match v.get("v") {
+        None => Ok(0),
+        Some(x) => match x.as_f64() {
+            Some(n) if n == VERSION as f64 => Ok(1),
+            _ => Err(ApiError::bad_request(format!(
+                "unsupported protocol version {x:?} (this server speaks v{VERSION} \
+                 and legacy v0 lines)"
+            ))),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request codec
+// ---------------------------------------------------------------------------
+
+/// Decode one request line (already parsed to a [`Value`]); returns the
+/// typed request plus the wire version it arrived in (0 or 1), so the
+/// reply can be encoded in the same dialect. Strict: any present field of
+/// the wrong type or value is a [`ErrorCode::BadRequest`].
+pub fn decode_request(v: &Value) -> Result<(InferRequest, u8), ApiError> {
+    let version = wire_version(v)?;
+    if v.as_obj().is_none() {
+        return Err(ApiError::bad_request("request must be a JSON object"));
+    }
+    let task = field_str(v, "task")?
+        .ok_or_else(|| ApiError::bad_request("missing task"))?
+        .to_string();
+
+    let input_v = v
+        .get("input")
+        .ok_or_else(|| ApiError::bad_request("missing input"))?;
+    let (input, shape) = input_v
+        .as_f32_tensor()
+        .map_err(|e| ApiError::bad_request(format!("input must be a numeric array: {e}")))?;
+    let (samples, dims) = match shape.len() {
+        1 => (1, shape[0]),
+        2 => (shape[0], shape[1]),
+        r => {
+            return Err(ApiError::bad_request(format!(
+                "input must be [dims] or [samples, dims], got rank {r}"
+            )))
+        }
+    };
+    if samples == 0 || dims == 0 {
+        return Err(ApiError::bad_request("input has no samples"));
+    }
+    if version == 0 && shape.len() != 1 {
+        return Err(ApiError::bad_request(
+            "v0 lines carry one flat sample; send {\"v\": 1, ...} for multi-sample input",
+        ));
+    }
+
+    let budget = match v.get("budget") {
+        None => f32::INFINITY,
+        Some(b) => {
+            let b = b.as_f64().ok_or_else(|| {
+                ApiError::bad_request("budget must be a number (e.g. 0.05, not \"0.05\")")
+            })?;
+            if b.is_nan() {
+                return Err(ApiError::bad_request("budget must not be NaN"));
+            }
+            b as f32
+        }
+    };
+
+    // the v1-only fields: on v0 lines they are ignored entirely, exactly
+    // as the pre-v1 server (which read only task/budget/input) did — a
+    // legacy client whose lines carry extraneous keys must keep working
+    let (id, policy, variant, deadline_us) = if version == 1 {
+        let policy = match field_str(v, "policy")? {
+            None => None,
+            Some("nfe") => Some(Policy::MinNfe),
+            Some("macs") => Some(Policy::MinMacs),
+            Some(other) => {
+                return Err(ApiError::bad_request(format!(
+                    "policy must be \"nfe\" or \"macs\", got {other:?}"
+                )))
+            }
+        };
+        (
+            field_u64(v, "id")?,
+            policy,
+            field_str(v, "variant")?.map(str::to_string),
+            field_u64(v, "deadline_us")?,
+        )
+    } else {
+        (None, None, None, None)
+    };
+
+    Ok((
+        InferRequest {
+            id,
+            task,
+            samples,
+            dims,
+            input,
+            budget,
+            policy,
+            variant,
+            deadline_us,
+        },
+        version,
+    ))
+}
+
+/// Encode a request as a v1 wire line. An infinite budget is omitted
+/// (absent = cheapest, the wire convention); input is always nested
+/// `[samples, dims]`.
+pub fn encode_request(r: &InferRequest) -> Value {
+    let mut fields = vec![
+        ("v", json::num(VERSION as f64)),
+        ("task", json::s(&r.task)),
+        ("input", rows_value(&r.input, r.samples, r.dims)),
+    ];
+    if let Some(id) = r.id {
+        fields.push(("id", json::num(id as f64)));
+    }
+    if r.budget.is_finite() {
+        fields.push(("budget", json::num(r.budget as f64)));
+    }
+    if let Some(p) = r.policy {
+        let s = match p {
+            Policy::MinNfe => "nfe",
+            Policy::MinMacs => "macs",
+        };
+        fields.push(("policy", json::s(s)));
+    }
+    if let Some(vn) = &r.variant {
+        fields.push(("variant", json::s(vn)));
+    }
+    if let Some(d) = r.deadline_us {
+        fields.push(("deadline_us", json::num(d as f64)));
+    }
+    json::obj(fields)
+}
+
+fn rows_value(data: &[f32], samples: usize, dims: usize) -> Value {
+    Value::Arr(
+        (0..samples)
+            .map(|i| json::arr_f32(&data[i * dims..(i + 1) * dims]))
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Response codec
+// ---------------------------------------------------------------------------
+
+/// Build the typed reply from an engine [`Response`] plus the request
+/// metadata the engine does not carry (correlation id, row count). The
+/// output row width is derived from the response itself — variants may
+/// legitimately have `out_dim != in_dim` (image→logits exports), so the
+/// request's input dims must never be used to slice the output.
+pub fn response_from_engine(id: u64, samples: usize, r: &Response) -> InferResponse {
+    let dims = if samples > 0 {
+        r.output.len() / samples
+    } else {
+        0
+    };
+    InferResponse {
+        id,
+        variant: r.variant.clone(),
+        mape: r.mape,
+        nfe: r.nfe,
+        latency_us: r.latency.as_micros() as u64,
+        batch_fill: r.batch_fill,
+        samples,
+        dims,
+        output: r.output.clone(),
+    }
+}
+
+/// Encode a success reply in the given wire dialect: v1 nests the output
+/// as `[samples, dims]`; v0 reproduces the legacy flat shape and adds the
+/// `deprecation` notice.
+pub fn encode_response(r: &InferResponse, version: u8) -> Value {
+    if version == 0 {
+        return json::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("id", json::num(r.id as f64)),
+            ("variant", json::s(&r.variant)),
+            ("mape", json::num(r.mape)),
+            ("nfe", json::num(r.nfe as f64)),
+            ("latency_us", json::num(r.latency_us as f64)),
+            ("batch_fill", json::num(r.batch_fill as f64)),
+            ("output", json::arr_f32(&r.output)),
+            ("deprecation", json::s(DEPRECATION)),
+        ]);
+    }
+    json::obj(vec![
+        ("v", json::num(VERSION as f64)),
+        ("ok", Value::Bool(true)),
+        ("id", json::num(r.id as f64)),
+        ("variant", json::s(&r.variant)),
+        ("mape", json::num(r.mape)),
+        ("nfe", json::num(r.nfe as f64)),
+        ("latency_us", json::num(r.latency_us as f64)),
+        ("batch_fill", json::num(r.batch_fill as f64)),
+        ("output", rows_value(&r.output, r.samples, r.dims)),
+    ])
+}
+
+/// Encode an error reply. Both dialects carry `code` + `error`; v1 adds
+/// the version tag and echoes the id when one is known.
+pub fn encode_error(id: Option<u64>, e: &ApiError, version: u8) -> Value {
+    let mut fields = Vec::with_capacity(5);
+    if version != 0 {
+        fields.push(("v", json::num(VERSION as f64)));
+    }
+    fields.push(("ok", Value::Bool(false)));
+    if let Some(id) = id {
+        fields.push(("id", json::num(id as f64)));
+    }
+    fields.push(("code", json::s(e.code.as_str())));
+    fields.push(("error", json::s(&e.message)));
+    json::obj(fields)
+}
+
+/// Decode one reply line into the typed form (client side). Unknown
+/// `code` strings degrade to [`ErrorCode::Internal`] with the original
+/// string kept in the message.
+pub fn decode_reply(v: &Value) -> Result<InferReply, ApiError> {
+    let ok = v
+        .get("ok")
+        .and_then(Value::as_bool)
+        .ok_or_else(|| ApiError::bad_request("reply missing ok"))?;
+    let id = field_u64(v, "id")?;
+    if !ok {
+        let code_s = field_str(v, "code")?.unwrap_or("internal");
+        let message = field_str(v, "error")?.unwrap_or("").to_string();
+        let error = match ErrorCode::from_wire(code_s) {
+            Some(code) => ApiError::new(code, message),
+            None => ApiError::internal(format!("unknown error code {code_s:?}: {message}")),
+        };
+        return Ok(InferReply::Err(ErrorReply { id, error }));
+    }
+    let id = id.ok_or_else(|| ApiError::bad_request("ok reply missing id"))?;
+    let (output, shape) = v
+        .get("output")
+        .ok_or_else(|| ApiError::bad_request("ok reply missing output"))?
+        .as_f32_tensor()
+        .map_err(|e| ApiError::bad_request(format!("reply output: {e}")))?;
+    let (samples, dims) = match shape.len() {
+        1 => (1, shape[0]),
+        2 => (shape[0], shape[1]),
+        r => {
+            return Err(ApiError::bad_request(format!(
+                "reply output has rank {r}"
+            )))
+        }
+    };
+    Ok(InferReply::Ok(InferResponse {
+        id,
+        variant: field_str(v, "variant")?.unwrap_or("").to_string(),
+        mape: v.get("mape").and_then(Value::as_f64).unwrap_or(f64::NAN),
+        nfe: field_u64(v, "nfe")?.unwrap_or(0),
+        latency_us: field_u64(v, "latency_us")?.unwrap_or(0),
+        batch_fill: field_u64(v, "batch_fill")?.unwrap_or(0) as usize,
+        samples,
+        dims,
+        output,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_request_encodes_to_the_golden_line() {
+        // budget/input values are dyadic (exact in f32 AND f64), so the
+        // widened f64 prints exactly these digits
+        let mut r = InferRequest::batch("cnf_a", 0.25, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        r.id = Some(7);
+        r.policy = Some(Policy::MinNfe);
+        r.variant = Some("euler_k2".into());
+        r.deadline_us = Some(5000);
+        // BTreeMap ordering makes the wire line deterministic — golden
+        assert_eq!(
+            json::to_string(&encode_request(&r)),
+            r#"{"budget":0.25,"deadline_us":5000,"id":7,"input":[[1,2],[3,4]],"policy":"nfe","task":"cnf_a","v":1,"variant":"euler_k2"}"#
+        );
+    }
+
+    #[test]
+    fn v1_request_round_trips() {
+        let mut r = InferRequest::batch("t", 0.1, 3, vec![0.5; 6]);
+        r.id = Some(3);
+        r.deadline_us = Some(100);
+        let (back, version) = decode_request(&encode_request(&r)).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(back, r);
+        // infinite budget is omitted on the wire and restored on decode
+        let r = InferRequest::single("t", f32::INFINITY, vec![1.0]);
+        let enc = encode_request(&r);
+        assert!(enc.get("budget").is_none());
+        let (back, _) = decode_request(&enc).unwrap();
+        assert_eq!(back.budget, f32::INFINITY);
+    }
+
+    #[test]
+    #[should_panic(expected = "do not split")]
+    fn ragged_batch_constructor_panics_loudly() {
+        // 7 values cannot split into 3 rows — truncating silently would
+        // serve a wrong batch with no error anywhere
+        let _ = InferRequest::batch("t", 0.1, 3, vec![0.0; 7]);
+    }
+
+    #[test]
+    fn peek_id_shares_the_codec_validation() {
+        let v = json::parse(r#"{"id":7,"task":3}"#).unwrap();
+        assert_eq!(peek_id(&v), Some(7));
+        // invalid ids yield None under the same rules decode_request uses
+        for line in [r#"{"id":-1}"#, r#"{"id":1.5}"#, r#"{"id":"7"}"#, r#"{}"#] {
+            assert_eq!(peek_id(&json::parse(line).unwrap()), None, "{line}");
+        }
+    }
+
+    #[test]
+    fn v0_lines_decode_as_version_zero() {
+        let v = json::parse(r#"{"task":"cnf_a","budget":0.5,"input":[0.3,-0.2]}"#).unwrap();
+        let (r, version) = decode_request(&v).unwrap();
+        assert_eq!(version, 0);
+        assert_eq!(r.samples, 1);
+        assert_eq!(r.dims, 2);
+        assert_eq!(r.input, vec![0.3, -0.2]);
+        assert!(r.id.is_none() && r.policy.is_none() && r.deadline_us.is_none());
+        // v0 cannot carry multi-sample input
+        let v = json::parse(r#"{"task":"t","input":[[1,2],[3,4]]}"#).unwrap();
+        assert_eq!(decode_request(&v).unwrap_err().code, ErrorCode::BadRequest);
+        // v1-only fields on a v0 line are IGNORED (the pre-v1 server read
+        // only task/budget/input), never honored and never rejected —
+        // even when their values would be invalid in v1
+        let v = json::parse(
+            r#"{"task":"t","input":[1,2],"policy":"speed","variant":7,
+                "deadline_us":-1,"id":"x"}"#,
+        )
+        .unwrap();
+        let (r, version) = decode_request(&v).unwrap();
+        assert_eq!(version, 0);
+        assert!(r.id.is_none() && r.policy.is_none());
+        assert!(r.variant.is_none() && r.deadline_us.is_none());
+    }
+
+    #[test]
+    fn strict_fields_reject_loudly() {
+        let bad = [
+            // the historical silent footgun: a string budget served the
+            // cheapest variant; now it is a loud bad_request
+            r#"{"v":1,"task":"t","budget":"0.05","input":[1]}"#,
+            r#"{"v":1,"task":"t","budget":null,"input":[1]}"#,
+            r#"{"v":1,"task":"t","policy":"speed","input":[1]}"#,
+            r#"{"v":1,"task":"t","policy":3,"input":[1]}"#,
+            r#"{"v":1,"task":"t","deadline_us":"5","input":[1]}"#,
+            r#"{"v":1,"task":"t","deadline_us":-3,"input":[1]}"#,
+            r#"{"v":1,"task":"t","deadline_us":1.5,"input":[1]}"#,
+            r#"{"v":1,"task":"t","id":-1,"input":[1]}"#,
+            r#"{"v":1,"task":"t","variant":7,"input":[1]}"#,
+            r#"{"v":1,"task":"t","input":[[1,2],[3]]}"#,
+            r#"{"v":1,"task":"t","input":[[[1]]]}"#,
+            r#"{"v":1,"task":"t","input":[]}"#,
+            r#"{"v":1,"task":"t","input":["a"]}"#,
+            r#"{"v":1,"input":[1]}"#,
+            r#"{"v":1,"task":3,"input":[1]}"#,
+            r#"{"v":2,"task":"t","input":[1]}"#,
+            r#"{"v":"1","task":"t","input":[1]}"#,
+        ];
+        for line in bad {
+            let v = json::parse(line).unwrap();
+            let e = decode_request(&v).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{line} -> {e}");
+        }
+    }
+
+    #[test]
+    fn response_round_trips_both_dialects() {
+        let r = InferResponse {
+            id: 9,
+            variant: "hypereuler_k2".into(),
+            mape: 0.04,
+            nfe: 2,
+            latency_us: 812,
+            batch_fill: 4,
+            samples: 2,
+            dims: 2,
+            output: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let v1 = encode_response(&r, 1);
+        assert_eq!(v1.get("v").and_then(Value::as_f64), Some(1.0));
+        match decode_reply(&v1).unwrap() {
+            InferReply::Ok(back) => assert_eq!(back, r),
+            other => panic!("{other:?}"),
+        }
+        // v0: flat output + deprecation notice, no version tag
+        let v0 = encode_response(&r, 0);
+        assert!(v0.get("v").is_none());
+        assert_eq!(v0.get("deprecation").and_then(Value::as_str), Some(DEPRECATION));
+        let flat = v0.get("output").unwrap().as_arr().unwrap();
+        assert_eq!(flat.len(), 4);
+        assert!(flat[0].as_f64().is_some());
+    }
+
+    #[test]
+    fn errors_round_trip_every_code() {
+        for code in ErrorCode::ALL {
+            let e = ApiError::new(code, format!("details of {code}"));
+            for version in [0u8, 1] {
+                let enc = encode_error(Some(5), &e, version);
+                assert_eq!(enc.get("ok").and_then(Value::as_bool), Some(false));
+                assert_eq!(enc.get("code").and_then(Value::as_str), Some(code.as_str()));
+                match decode_reply(&enc).unwrap() {
+                    InferReply::Err(back) => {
+                        assert_eq!(back.id, Some(5));
+                        assert_eq!(back.error, e);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+        // unknown code degrades to internal but keeps the string
+        let v = json::parse(r#"{"ok":false,"code":"weird","error":"x"}"#).unwrap();
+        match decode_reply(&v).unwrap() {
+            InferReply::Err(back) => {
+                assert_eq!(back.error.code, ErrorCode::Internal);
+                assert!(back.error.message.contains("weird"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! `benchgate` — the bench-trajectory regression gate.
+//!
+//! Reads the rolling `BENCH_trajectory.json` (oldest → newest, one entry
+//! per bench run; see `util::benchkit::append_trajectory`), diffs the
+//! newest entry of every bench stream against the previous one, and exits
+//! non-zero on a regression:
+//!
+//! * serving p50 (`serving_throughput.mixed_p50_ms`) growing past
+//!   `--p50-slack ×` the previous run;
+//! * the trained hypersolver dropping off the NFE Pareto front
+//!   (`hyperbench_pareto.tasks[*].hyper_on_nfe_front` true → false);
+//! * the serve-path speedup vs the tightest dopri5 collapsing below 1×.
+//!
+//! CI restores the previous run's trajectory via actions/cache before the
+//! benches run, so the file genuinely accumulates and this diff is
+//! commit-over-commit. A missing file (first run / cold cache) passes with
+//! a note — there is nothing to regress against yet.
+//!
+//! ```bash
+//! benchgate                                   # ./BENCH_trajectory.json
+//! benchgate --trajectory path.json --p50-slack 1.75
+//! ```
+
+use hypersolvers::util::benchkit;
+use hypersolvers::util::cli::Cli;
+use hypersolvers::util::json;
+
+fn main() {
+    let args = Cli::new("benchgate — diff the bench trajectory and fail on regressions")
+        .opt(
+            "trajectory",
+            "BENCH_trajectory.json",
+            "rolling trajectory file (BENCH_TRAJECTORY env also honored)",
+        )
+        .opt(
+            "p50-slack",
+            "1.75",
+            "allowed serving-p50 growth factor run-over-run (wall clock on \
+             shared runners is noisy; keep this generous)",
+        )
+        .parse_env();
+
+    let path = std::env::var("BENCH_TRAJECTORY")
+        .unwrap_or_else(|_| args.get("trajectory"));
+    let slack = args.get_f64("p50-slack");
+    if !(slack.is_finite() && slack >= 1.0) {
+        eprintln!("error: --p50-slack must be a finite factor ≥ 1, got {slack}");
+        std::process::exit(2);
+    }
+
+    let path = std::path::Path::new(&path);
+    if !path.exists() {
+        println!(
+            "benchgate: {} does not exist — first run, nothing to gate",
+            path.display()
+        );
+        return;
+    }
+    let entries = match json::parse_file(path) {
+        Ok(v) => match v.as_arr() {
+            Some(a) => a.to_vec(),
+            None => {
+                eprintln!(
+                    "error: {} is not a JSON array of trajectory entries",
+                    path.display()
+                );
+                std::process::exit(2);
+            }
+        },
+        Err(e) => {
+            eprintln!("error: parse {}: {e}", path.display());
+            std::process::exit(2);
+        }
+    };
+
+    println!(
+        "benchgate: {} entries in {}, p50 slack {slack}×",
+        entries.len(),
+        path.display()
+    );
+    let report = benchkit::trajectory_gate(&entries, slack);
+    for line in &report.checks {
+        println!("  ok  {line}");
+    }
+    for line in &report.regressions {
+        println!("  FAIL {line}");
+    }
+    if !report.passed() {
+        eprintln!(
+            "benchgate: {} regression(s) against the previous run",
+            report.regressions.len()
+        );
+        std::process::exit(1);
+    }
+    println!("benchgate: no regressions");
+}

@@ -2,32 +2,47 @@
 //! deadline.
 //!
 //! The exported executables have a fixed batch dimension B, so a batch is
-//! (a) full when B samples are queued, or (b) forced when the oldest queued
+//! (a) full when B *rows* are queued (a request may carry several rows —
+//! the v1 multi-sample surface), or (b) forced when the oldest queued
 //! request has waited `max_wait` — the standard dynamic batching policy of
-//! serving systems (vLLM/Triton style), applied at the ODE-solve level.
+//! serving systems (vLLM/Triton style), applied at the ODE-solve level. A
+//! request carrying its own `deadline` pulls the queue's flush point
+//! earlier, so fail-fast deadline checks happen at dispatch time rather
+//! than after a full `max_wait`.
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{CompletionSender, Request};
 
-/// Assemble a padded batch input: `cap` rows of `dim` values, real samples
-/// first (row-major), remaining fill rows zeroed. Used by the engine right
-/// before handing a batch to the execution backend.
+/// How far ahead of a request's deadline its queue is flushed, covering
+/// the condvar wake-up + pop + batch assembly so dispatch starts before
+/// the deadline passes (see [`Batcher::flush_at`]). Generous enough for
+/// a loaded scheduler; still small against real serving deadlines.
+pub const DEADLINE_FLUSH_MARGIN: Duration = Duration::from_millis(2);
+
+/// Assemble a padded batch input: `cap` rows of `dim` values. Each slice
+/// contributes `len / dim` consecutive rows (a multi-sample request is one
+/// contiguous row block); remaining fill rows are zeroed. Used by the
+/// engine right before handing a batch to the execution backend.
 pub fn pad_batch(samples: &[&[f32]], cap: usize, dim: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; cap * dim];
-    for (i, s) in samples.iter().enumerate().take(cap) {
-        let n = s.len().min(dim);
-        out[i * dim..i * dim + n].copy_from_slice(&s[..n]);
+    let mut off = 0usize;
+    for s in samples {
+        if off >= out.len() {
+            break;
+        }
+        let n = s.len().min(out.len() - off);
+        out[off..off + n].copy_from_slice(&s[..n]);
+        off += n;
     }
     out
 }
 
-/// A request waiting in a queue, with its response channel.
+/// A request waiting in a queue, with its completion channel.
 pub struct Pending {
     pub req: Request,
-    pub reply: mpsc::Sender<Response>,
+    pub done: CompletionSender,
 }
 
 /// Queue key: (task, variant) — requests routed to the same executable batch
@@ -40,11 +55,37 @@ pub struct ReadyBatch {
     pub items: Vec<Pending>,
 }
 
+/// Queue depth snapshot for one (task, variant) queue.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueueDepth {
+    pub task: String,
+    pub variant: String,
+    /// queued requests
+    pub requests: usize,
+    /// queued rows (a request may carry several)
+    pub rows: usize,
+}
+
+/// One (task, variant) queue with O(1) readiness bookkeeping: the row
+/// count is maintained incrementally, and queues that carry no explicit
+/// per-request deadlines (the common case) derive their flush point from
+/// the front item alone — the readiness scan under the engine lock stays
+/// O(#queues), not O(#queued requests).
+struct Queue {
+    items: VecDeque<Pending>,
+    /// executable batch capacity, in rows
+    cap: usize,
+    /// total queued rows (maintained on push/pop)
+    rows: usize,
+    /// queued requests carrying an explicit deadline; only queues with
+    /// deadline users pay the O(len) flush-point scan
+    deadline_count: usize,
+}
+
 /// Per-variant FIFO queues with deadline tracking. Not internally
 /// synchronised — the engine wraps it in a mutex and a condvar.
 pub struct Batcher {
-    queues: HashMap<QueueKey, VecDeque<Pending>>,
-    batch_sizes: HashMap<QueueKey, usize>,
+    queues: HashMap<QueueKey, Queue>,
     max_wait: Duration,
 }
 
@@ -52,49 +93,109 @@ impl Batcher {
     pub fn new(max_wait: Duration) -> Batcher {
         Batcher {
             queues: HashMap::new(),
-            batch_sizes: HashMap::new(),
             max_wait,
         }
     }
 
     /// Register the executable batch size for a queue (first sight).
     pub fn ensure_queue(&mut self, key: &QueueKey, batch_size: usize) {
-        self.batch_sizes.entry(key.clone()).or_insert(batch_size);
-        self.queues.entry(key.clone()).or_default();
+        self.queues.entry(key.clone()).or_insert_with(|| Queue {
+            items: VecDeque::new(),
+            cap: batch_size,
+            rows: 0,
+            deadline_count: 0,
+        });
     }
 
     pub fn push(&mut self, key: &QueueKey, p: Pending) {
-        self.queues
-            .get_mut(key)
-            .expect("ensure_queue before push")
-            .push_back(p);
+        let q = self.queues.get_mut(key).expect("ensure_queue before push");
+        q.rows += p.req.samples;
+        q.deadline_count += usize::from(p.req.deadline.is_some());
+        q.items.push_back(p);
     }
 
+    /// Queued requests across all queues.
     pub fn queued(&self) -> usize {
-        self.queues.values().map(VecDeque::len).sum()
+        self.queues.values().map(|q| q.items.len()).sum()
     }
 
-    /// Pop the single most-urgent ready batch (full, or oldest beyond
-    /// deadline) whose key is not in `busy`.
+    /// Queued rows across all queues.
+    pub fn queued_rows(&self) -> usize {
+        self.queues.values().map(|q| q.rows).sum()
+    }
+
+    /// Per-queue depth snapshot, sorted by (task, variant) so callers get
+    /// a deterministic report (the `cmd:"metrics"` surface).
+    pub fn depths(&self) -> Vec<QueueDepth> {
+        let mut out: Vec<QueueDepth> = self
+            .queues
+            .iter()
+            .map(|(k, q)| QueueDepth {
+                task: k.0.clone(),
+                variant: k.1.clone(),
+                requests: q.items.len(),
+                rows: q.rows,
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.task, &a.variant).cmp(&(&b.task, &b.variant)));
+        out
+    }
+
+    /// When this request must be flushed: its `max_wait` point, pulled
+    /// earlier by an explicit per-request deadline. The deadline pull
+    /// lands [`DEADLINE_FLUSH_MARGIN`] *before* the deadline itself, so a
+    /// request whose deadline precedes the batching wait still dispatches
+    /// in time and executes — the deadline is a usable latency SLO, not
+    /// just a failure timer. (A deadline already within the margin of
+    /// `t_submit` flushes immediately and fails fast at dispatch.)
+    fn flush_at(&self, p: &Pending) -> Instant {
+        let wait_dl = p.req.t_submit + self.max_wait;
+        match p.req.deadline {
+            Some(d) => {
+                let early = d
+                    .checked_sub(DEADLINE_FLUSH_MARGIN)
+                    .map(|e| e.max(p.req.t_submit))
+                    .unwrap_or(p.req.t_submit);
+                wait_dl.min(early)
+            }
+            None => wait_dl,
+        }
+    }
+
+    /// Earliest flush point of a queue (None when empty). O(1) when no
+    /// queued request carries a deadline: items arrive in submit order, so
+    /// the front holds the earliest `t_submit + max_wait`.
+    fn queue_flush_deadline(&self, q: &Queue) -> Option<Instant> {
+        if q.deadline_count == 0 {
+            return q.items.front().map(|p| p.req.t_submit + self.max_wait);
+        }
+        q.items.iter().map(|p| self.flush_at(p)).min()
+    }
+
+    /// Pop the single most-urgent ready batch (rows full, or a flush
+    /// deadline passed) whose key is not in `busy`.
     ///
     /// This is the worker-pool pop: each dispatch worker takes one batch at
     /// a time, and `busy` carries the keys currently executing on other
     /// workers — per-queue affinity, so a queue's batches never run (or
     /// complete) out of order while batches for *distinct* (task, variant)
-    /// queues execute concurrently.
+    /// queues execute concurrently. Requests are never split: the drain
+    /// stops before a request whose rows would overflow the cap.
     pub fn pop_ready(&mut self, now: Instant, busy: &HashSet<QueueKey>) -> Option<ReadyBatch> {
         let mut best: Option<(Instant, QueueKey)> = None;
         for (key, q) in &self.queues {
             if busy.contains(key) {
                 continue;
             }
-            let front = match q.front() {
+            let front = match q.items.front() {
                 Some(p) => p,
                 None => continue,
             };
-            let cap = self.batch_sizes[key];
-            let ready = q.len() >= cap
-                || now.duration_since(front.req.t_submit) >= self.max_wait;
+            let ready = q.rows >= q.cap
+                || self
+                    .queue_flush_deadline(q)
+                    .map(|d| now >= d)
+                    .unwrap_or(false);
             if !ready {
                 continue;
             }
@@ -104,19 +205,33 @@ impl Batcher {
             }
         }
         let (_, key) = best?;
-        let cap = self.batch_sizes[&key];
         let q = self.queues.get_mut(&key).expect("queue exists");
-        let take = q.len().min(cap);
-        let items: Vec<Pending> = q.drain(..take).collect();
+        let cap = q.cap;
+        let mut items: Vec<Pending> = Vec::new();
+        let mut rows = 0usize;
+        while let Some(p) = q.items.front() {
+            let r = p.req.samples.max(1);
+            if !items.is_empty() && rows + r > cap {
+                break;
+            }
+            rows += r;
+            let p = q.items.pop_front().expect("front exists");
+            q.rows -= p.req.samples;
+            q.deadline_count -= usize::from(p.req.deadline.is_some());
+            items.push(p);
+            if rows >= cap {
+                break;
+            }
+        }
         Some(ReadyBatch { key, items })
     }
 
-    /// Earliest deadline across all queues (None when idle) — drives the
-    /// engine's condvar timeout.
+    /// Earliest flush deadline across all queues (None when idle) —
+    /// drives the engine's condvar timeout.
     pub fn next_deadline(&self) -> Option<Instant> {
         self.queues
             .values()
-            .filter_map(|q| q.front().map(|p| p.req.t_submit + self.max_wait))
+            .filter_map(|q| self.queue_flush_deadline(q))
             .min()
     }
 
@@ -128,7 +243,7 @@ impl Batcher {
         self.queues
             .iter()
             .filter(|(k, _)| !busy.contains(*k))
-            .filter_map(|(_, q)| q.front().map(|p| p.req.t_submit + self.max_wait))
+            .filter_map(|(_, q)| self.queue_flush_deadline(q))
             .min()
     }
 }
@@ -136,12 +251,22 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Completion;
+    use std::sync::mpsc;
 
-    fn pending(id: u64, at: Instant) -> (Pending, mpsc::Receiver<Response>) {
+    fn pending(id: u64, at: Instant) -> (Pending, mpsc::Receiver<Completion>) {
+        pending_rows(id, at, 1)
+    }
+
+    fn pending_rows(
+        id: u64,
+        at: Instant,
+        rows: usize,
+    ) -> (Pending, mpsc::Receiver<Completion>) {
         let (tx, rx) = mpsc::channel();
-        let mut req = Request::new(id, "t", 0.1, vec![0.0]);
+        let mut req = Request::new(id, "t", 0.1, vec![0.0; rows], rows);
         req.t_submit = at;
-        (Pending { req, reply: tx }, rx)
+        (Pending { req, done: tx }, rx)
     }
 
     fn key() -> QueueKey {
@@ -165,6 +290,79 @@ mod tests {
         assert_eq!(b.pop_ready(now, &busy).unwrap().items.len(), 3);
         assert!(b.pop_ready(now, &busy).is_none());
         assert_eq!(b.queued(), 1);
+    }
+
+    #[test]
+    fn multi_row_requests_fill_by_rows_and_never_split() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        b.ensure_queue(&key(), 4);
+        let now = Instant::now();
+        // rows: 2 + 1 + 2 + 3 = 8; cap 4
+        for (i, rows) in [(0u64, 2usize), (1, 1), (2, 2), (3, 3)] {
+            let (p, _rx) = pending_rows(i, now, rows);
+            std::mem::forget(_rx);
+            b.push(&key(), p);
+        }
+        let busy = HashSet::new();
+        // first pop: 2 + 1 = 3 rows, then the 2-row request would overflow
+        let batch = b.pop_ready(now, &busy).unwrap();
+        assert_eq!(
+            batch.items.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        // second pop needs rows: 2 + 3 = 5 ≥ cap, ready; takes the 2-row
+        // request alone (3 more would overflow)
+        let batch = b.pop_ready(now, &busy).unwrap();
+        assert_eq!(
+            batch.items.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![2]
+        );
+        // last request alone: 3 rows < cap 4, deadline far → not ready
+        assert!(b.pop_ready(now, &busy).is_none());
+        assert_eq!(b.queued(), 1);
+        assert_eq!(b.queued_rows(), 3);
+    }
+
+    #[test]
+    fn request_deadline_pulls_the_flush_earlier() {
+        let mut b = Batcher::new(Duration::from_secs(60));
+        b.ensure_queue(&key(), 64);
+        let now = Instant::now();
+        let (mut p, _rx) = pending(0, now);
+        std::mem::forget(_rx);
+        p.req.deadline = Some(now + Duration::from_millis(5));
+        b.push(&key(), p);
+        // not ready yet; flush point is margin-before-deadline, not max_wait
+        assert!(b.pop_ready(now, &HashSet::new()).is_none());
+        let dl = b.next_deadline().unwrap();
+        assert_eq!(dl, now + Duration::from_millis(5) - DEADLINE_FLUSH_MARGIN);
+        // the batch pops BEFORE the deadline passes, so dispatch can start
+        // on time (the deadline is an SLO, not just a failure timer)
+        let at_flush = dl + Duration::from_micros(1);
+        assert!(at_flush < now + Duration::from_millis(5));
+        assert_eq!(
+            b.pop_ready(at_flush, &HashSet::new()).unwrap().items.len(),
+            1
+        );
+    }
+
+    #[test]
+    fn depths_report_per_queue_requests_and_rows() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        let ka = ("a".to_string(), "v".to_string());
+        let kb = ("b".to_string(), "v".to_string());
+        b.ensure_queue(&ka, 8);
+        b.ensure_queue(&kb, 8);
+        let now = Instant::now();
+        for (i, rows) in [(0u64, 2usize), (1, 3)] {
+            let (p, _rx) = pending_rows(i, now, rows);
+            std::mem::forget(_rx);
+            b.push(&ka, p);
+        }
+        let d = b.depths();
+        assert_eq!(d.len(), 2);
+        assert_eq!((d[0].task.as_str(), d[0].requests, d[0].rows), ("a", 2, 5));
+        assert_eq!((d[1].task.as_str(), d[1].requests, d[1].rows), ("b", 0, 0));
     }
 
     #[test]
@@ -253,28 +451,36 @@ mod tests {
     #[test]
     fn batches_never_exceed_cap_property() {
         use crate::util::propkit::{check, gen_range, prop_assert};
-        check("pop_ready batch ≤ cap", 50, |rng| {
+        check("pop_ready batch rows ≤ cap", 50, |rng| {
             let cap = gen_range(rng, 1, 6);
             let n = gen_range(rng, 0, 30);
             let mut b = Batcher::new(Duration::from_millis(1));
             b.ensure_queue(&key(), cap);
             let old = Instant::now() - Duration::from_secs(1);
+            let mut total_rows = 0usize;
             for i in 0..n {
-                let (p, _rx) = pending(i as u64, old);
+                // rows within [1, cap] — the engine rejects larger requests
+                let rows = gen_range(rng, 1, cap);
+                total_rows += rows;
+                let (p, _rx) = pending_rows(i as u64, old, rows);
                 std::mem::forget(_rx);
                 b.push(&key(), p);
             }
             let busy = HashSet::new();
             let mut popped = 0usize;
+            let mut popped_rows = 0usize;
             while let Some(batch) = b.pop_ready(Instant::now(), &busy) {
-                prop_assert(
-                    batch.items.len() <= cap,
-                    format!("batch {} > cap {cap}", batch.items.len()),
-                )?;
+                let rows: usize = batch.items.iter().map(|p| p.req.samples).sum();
+                prop_assert(rows <= cap, format!("batch rows {rows} > cap {cap}"))?;
                 prop_assert(!batch.items.is_empty(), "empty batch")?;
                 popped += batch.items.len();
+                popped_rows += rows;
             }
-            prop_assert(popped == n, format!("popped {popped} of {n}"))
+            prop_assert(popped == n, format!("popped {popped} of {n}"))?;
+            prop_assert(
+                popped_rows == total_rows,
+                format!("rows {popped_rows} of {total_rows}"),
+            )
         });
     }
 
@@ -324,7 +530,7 @@ mod tests {
     #[test]
     fn padding_fill_zeroed_property() {
         use crate::util::propkit::{check, gen_range, gen_vec, prop_assert};
-        check("pad_batch zero-fills beyond real samples", 50, |rng| {
+        check("pad_batch zero-fills beyond real rows", 50, |rng| {
             let cap = gen_range(rng, 1, 8);
             let dim = gen_range(rng, 1, 6);
             let real = gen_range(rng, 0, cap);
@@ -344,6 +550,15 @@ mod tests {
                 "padding rows not zeroed",
             )
         });
+    }
+
+    #[test]
+    fn pad_batch_packs_multi_row_blocks_contiguously() {
+        // a 2-row request followed by a 1-row request, cap 4
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0];
+        let out = pad_batch(&[&a[..], &b[..]], 4, 2);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -382,7 +597,8 @@ mod tests {
                         fronts[ki].pop_front();
                     }
                 }
-                // invariant: deadline == min over fronts + max_wait
+                // invariant (no per-request deadlines in this test):
+                // deadline == min over fronts + max_wait
                 let want = fronts
                     .iter()
                     .filter_map(|q| q.front().copied())

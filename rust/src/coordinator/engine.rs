@@ -1,6 +1,16 @@
 //! The coordinator engine: policy → queues → dispatch worker pool →
 //! pluggable execution backend.
 //!
+//! Submission is **non-blocking**: [`Engine::submit`] enqueues a request
+//! (single- or multi-sample) and returns a [`SubmitHandle`] immediately;
+//! completions are delivered id-correlated on a channel, so one caller can
+//! keep many requests in flight ([`Engine::submit_with`] lets any number
+//! of submissions share one completion channel — the pipelined server
+//! loop). [`Engine::infer`] remains the thin blocking wrapper. Every
+//! rejection and failure carries a stable [`ApiError`] code; a request
+//! with a deadline fails fast with `deadline_exceeded` when its batch
+//! dispatches too late.
+//!
 //! Dispatch runs on a small pool of workers, each pulling one ready batch
 //! at a time from the shared [`Batcher`]. A per-[`QueueKey`] affinity set
 //! guarantees that a queue's batches execute (and therefore respond) in
@@ -15,10 +25,13 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{pad_batch, Batcher, Pending, QueueKey, ReadyBatch};
+use crate::api::ApiError;
+use crate::coordinator::batcher::{
+    pad_batch, Batcher, Pending, QueueDepth, QueueKey, ReadyBatch,
+};
 use crate::coordinator::metrics::CoordinatorMetrics;
 use crate::coordinator::policy::{select_variant, Policy};
-use crate::coordinator::request::{Request, Response};
+use crate::coordinator::request::{Completion, CompletionSender, Request, Response};
 use crate::runtime::backend::{BackendKind, ExecBackend};
 use crate::runtime::manifest::Manifest;
 use crate::{log_debug, log_info, Error, Result};
@@ -44,6 +57,64 @@ impl Default for EngineConfig {
             backend: BackendKind::Pjrt,
             workers: 0,
         }
+    }
+}
+
+/// Per-request submission options of the v1 surface. `Default` reproduces
+/// the classic behavior: engine policy axis, budget-selected variant, no
+/// deadline.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    /// Override the engine's cost axis for this request.
+    pub policy: Option<Policy>,
+    /// Pin an exact variant, bypassing the budget policy.
+    pub variant: Option<String>,
+    /// Fail fast with `deadline_exceeded` if the request has not been
+    /// dispatched within this duration of submission.
+    pub deadline: Option<Duration>,
+}
+
+/// A non-blocking submission: the engine id plus the completion channel.
+/// Drop it to ignore the response (the engine never blocks on it).
+#[derive(Debug)]
+pub struct SubmitHandle {
+    id: u64,
+    rx: mpsc::Receiver<Completion>,
+}
+
+impl SubmitHandle {
+    /// The engine-assigned submission id (what [`Completion::id`] carries).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the completion arrives. An engine shut down before
+    /// responding surfaces as an `internal` error.
+    pub fn wait(&self) -> std::result::Result<Response, ApiError> {
+        match self.rx.recv() {
+            Ok(c) => c.result,
+            Err(_) => Err(ApiError::internal("engine dropped the response channel")),
+        }
+    }
+
+    /// [`Self::wait`] with a timeout; `None` means the timeout elapsed
+    /// (the request is still in flight).
+    pub fn wait_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Option<std::result::Result<Response, ApiError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(c) => Some(c.result),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(ApiError::internal("engine dropped the response channel")))
+            }
+        }
+    }
+
+    /// The raw completion receiver (tests that assert channel lifecycle).
+    pub fn receiver(&self) -> &mpsc::Receiver<Completion> {
+        &self.rx
     }
 }
 
@@ -166,52 +237,116 @@ impl Engine {
         self.workers.len()
     }
 
-    /// Submit one sample; returns the channel the response arrives on.
+    /// Snapshot of per-(task, variant) queue depths (the `cmd:"metrics"`
+    /// surface).
+    pub fn queue_depths(&self) -> Vec<QueueDepth> {
+        self.shared.state.lock().unwrap().batcher.depths()
+    }
+
+    /// Submit a request whose completion is delivered on `done`, tagged
+    /// with the returned engine id — the pipelined path: any number of
+    /// in-flight submissions can share one channel. `input` is row-major
+    /// `[samples, dims]`; validation, policy selection and enqueueing all
+    /// happen before this returns, so a returned id is a guarantee that
+    /// exactly one [`Completion`] will be attempted for it (success,
+    /// structured error, or — only if the engine is dropped first —
+    /// channel disconnect).
+    pub fn submit_with(
+        &self,
+        task: &str,
+        budget: f32,
+        input: Vec<f32>,
+        samples: usize,
+        opts: &SubmitOptions,
+        done: CompletionSender,
+    ) -> std::result::Result<u64, ApiError> {
+        let entry = self
+            .manifest
+            .task(task)
+            .map_err(|e| ApiError::unknown_task(e.to_string()))?;
+        if entry.state_shape.is_empty() {
+            return Err(ApiError::internal(format!(
+                "task {task}: manifest state shape is rank 0"
+            )));
+        }
+        if samples == 0 {
+            return Err(ApiError::shape_mismatch(format!(
+                "task {task}: request carries zero samples"
+            )));
+        }
+        let sample_dim: usize = entry.state_shape[1..].iter().product();
+        if input.len() != samples * sample_dim {
+            return Err(ApiError::shape_mismatch(format!(
+                "task {task}: {samples} sample(s) × state dim {sample_dim} wants \
+                 {} values, got {}",
+                samples * sample_dim,
+                input.len()
+            )));
+        }
+        let b_cap = entry.batch();
+        if samples > b_cap {
+            return Err(ApiError::shape_mismatch(format!(
+                "task {task}: request has {samples} samples but the exported \
+                 executables take batches of {b_cap}; split the request"
+            )));
+        }
+        let variant = match &opts.variant {
+            Some(name) => entry.variant(name).ok_or_else(|| {
+                ApiError::unknown_variant(format!(
+                    "task {task} has no variant {name:?}"
+                ))
+            })?,
+            None => {
+                let axis = opts.policy.unwrap_or(self.config.policy);
+                select_variant(entry, budget, axis).ok_or_else(|| {
+                    ApiError::internal(format!("task {task} has no variants"))
+                })?
+            }
+        };
+        let key: QueueKey = (task.to_string(), variant.name.clone());
+        let id = self.next_id.fetch_add(1, Relaxed);
+        let mut req = Request::new(id, task, budget, input, samples);
+        let t0 = req.t_submit;
+        req.deadline = opts.deadline.map(|d| t0 + d);
+        {
+            let mut s = self.shared.state.lock().unwrap();
+            s.batcher.ensure_queue(&key, entry.batch());
+            s.batcher.push(&key, Pending { req, done });
+        }
+        self.metrics.requests.fetch_add(1, Relaxed);
+        self.shared.work.notify_one();
+        Ok(id)
+    }
+
+    /// Non-blocking submit with per-request options; returns a handle
+    /// owning its completion channel.
+    pub fn submit_opts(
+        &self,
+        task: &str,
+        budget: f32,
+        input: Vec<f32>,
+        samples: usize,
+        opts: &SubmitOptions,
+    ) -> std::result::Result<SubmitHandle, ApiError> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.submit_with(task, budget, input, samples, opts, tx)?;
+        Ok(SubmitHandle { id, rx })
+    }
+
+    /// Submit one single-sample request (the classic surface).
     pub fn submit(
         &self,
         task: &str,
         budget: f32,
         input: Vec<f32>,
-    ) -> Result<mpsc::Receiver<Response>> {
-        let entry = self.manifest.task(task)?;
-        if entry.state_shape.is_empty() {
-            return Err(Error::Coordinator(format!(
-                "task {task}: manifest state shape is rank 0"
-            )));
-        }
-        let sample_dim: usize = entry.state_shape[1..].iter().product();
-        if input.len() != sample_dim {
-            return Err(Error::Coordinator(format!(
-                "task {task}: sample has {} values, state wants {sample_dim}",
-                input.len()
-            )));
-        }
-        let variant = select_variant(entry, budget, self.config.policy)
-            .ok_or_else(|| Error::Coordinator(format!("task {task} has no variants")))?;
-        let key: QueueKey = (task.to_string(), variant.name.clone());
-        let id = self.next_id.fetch_add(1, Relaxed);
-        let (tx, rx) = mpsc::channel();
-        {
-            let mut s = self.shared.state.lock().unwrap();
-            s.batcher.ensure_queue(&key, entry.batch());
-            s.batcher.push(
-                &key,
-                Pending {
-                    req: Request::new(id, task, budget, input),
-                    reply: tx,
-                },
-            );
-        }
-        self.metrics.requests.fetch_add(1, Relaxed);
-        self.shared.work.notify_one();
-        Ok(rx)
+    ) -> std::result::Result<SubmitHandle, ApiError> {
+        self.submit_opts(task, budget, input, 1, &SubmitOptions::default())
     }
 
-    /// Submit and wait (convenience for examples/benches).
+    /// Submit and wait — the thin blocking wrapper over [`Self::submit`].
     pub fn infer(&self, task: &str, budget: f32, input: Vec<f32>) -> Result<Response> {
-        let rx = self.submit(task, budget, input)?;
-        rx.recv()
-            .map_err(|_| Error::Coordinator("engine dropped response".into()))
+        let handle = self.submit(task, budget, input).map_err(Error::from)?;
+        handle.wait().map_err(Error::from)
     }
 
     /// Prepare every variant of `task` on the backend (PJRT compilation /
@@ -309,51 +444,118 @@ fn worker_main(
     }
 }
 
+/// Deliver one completion; a closed receiver just means the caller
+/// stopped listening.
+fn complete(
+    metrics: &CoordinatorMetrics,
+    p: Pending,
+    result: std::result::Result<Response, ApiError>,
+) {
+    if result.is_err() {
+        metrics.failures.fetch_add(1, Relaxed);
+    }
+    let _ = p.done.send(Completion {
+        id: p.req.id,
+        result,
+    });
+}
+
+fn fail_items(metrics: &CoordinatorMetrics, key: &QueueKey, items: Vec<Pending>, err: ApiError) {
+    crate::log_error!("batch {key:?} failed: {err}");
+    for p in items {
+        complete(metrics, p, Err(err.clone()));
+    }
+}
+
 fn run_batch(
     manifest: &Manifest,
     metrics: &CoordinatorMetrics,
     backend: &dyn ExecBackend,
     batch: ReadyBatch,
 ) {
-    let (task_name, variant_name) = &batch.key;
-    let entry = match manifest.task(task_name) {
+    let ReadyBatch { key, items } = batch;
+    let entry = match manifest.task(&key.0) {
         Ok(e) => e,
-        Err(e) => return fail_batch(batch, &e.to_string()),
+        Err(e) => {
+            return fail_items(metrics, &key, items, ApiError::unknown_task(e.to_string()))
+        }
     };
-    let variant = match entry.variant(variant_name) {
+    let variant = match entry.variant(&key.1) {
         Some(v) => v.clone(),
-        None => return fail_batch(batch, "variant vanished"),
+        None => {
+            return fail_items(
+                metrics,
+                &key,
+                items,
+                ApiError::internal("variant vanished from the manifest"),
+            )
+        }
     };
     if variant.in_shape.is_empty() || variant.out_shape.is_empty() {
-        return fail_batch(batch, "variant has rank-0 in/out shape");
+        return fail_items(
+            metrics,
+            &key,
+            items,
+            ApiError::internal("variant has rank-0 in/out shape"),
+        );
     }
 
     let b_cap = entry.batch();
     let sample_dim: usize = variant.in_shape[1..].iter().product();
     let out_dim: usize = variant.out_shape[1..].iter().product();
-    let real = batch.items.len();
+
+    // fail-fast deadlines: a request whose deadline passed before this
+    // dispatch gets a structured deadline_exceeded error and never
+    // executes (an in-flight execute is never cancelled, by contract)
+    let now = Instant::now();
+    let mut live: Vec<Pending> = Vec::with_capacity(items.len());
+    for p in items {
+        match p.req.deadline {
+            Some(d) if now >= d => {
+                metrics.deadline_misses.fetch_add(1, Relaxed);
+                let waited = now.duration_since(p.req.t_submit).as_micros();
+                let err = ApiError::deadline_exceeded(format!(
+                    "request waited {waited}µs, past its deadline, before its \
+                     batch dispatched"
+                ));
+                complete(metrics, p, Err(err));
+            }
+            _ => live.push(p),
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let items = live;
 
     // submit validated against the task's state shape; the variant's
     // executable row dim must agree or padding would silently corrupt
     // (image→logits exports take image-dim rows the state-dim submit
     // surface doesn't produce yet)
-    if let Some(p) = batch.items.iter().find(|p| p.req.input.len() != sample_dim) {
+    if let Some(p) = items
+        .iter()
+        .find(|p| p.req.input.len() != p.req.samples * sample_dim)
+    {
         let got = p.req.input.len();
-        return fail_batch(
-            batch,
-            &format!("sample has {got} values but variant row dim is {sample_dim}"),
+        let rows = p.req.samples;
+        return fail_items(
+            metrics,
+            &key,
+            items,
+            ApiError::shape_mismatch(format!(
+                "request has {got} values over {rows} row(s) but variant row \
+                 dim is {sample_dim}"
+            )),
         );
     }
 
-    // assemble the padded batch input
-    let samples: Vec<&[f32]> = batch
-        .items
-        .iter()
-        .map(|p| p.req.input.as_slice())
-        .collect();
-    let input = pad_batch(&samples, b_cap, sample_dim);
+    // assemble the padded batch input: each request is one contiguous
+    // row block, fill rows zeroed
+    let rows: usize = items.iter().map(|p| p.req.samples).sum();
+    let inputs: Vec<&[f32]> = items.iter().map(|p| p.req.input.as_slice()).collect();
+    let input = pad_batch(&inputs, b_cap, sample_dim);
     let queue_start = Instant::now();
-    for p in &batch.items {
+    for p in &items {
         metrics
             .queue_latency
             .record(queue_start.duration_since(p.req.t_submit));
@@ -362,45 +564,46 @@ fn run_batch(
     let t_exec = Instant::now();
     let out = match backend.execute(manifest, entry, &variant, input) {
         Ok(o) => o,
-        Err(e) => return fail_batch(batch, &e.to_string()),
+        Err(e) => return fail_items(metrics, &key, items, ApiError::from_engine(&e)),
     };
     let exec_time = t_exec.elapsed();
     metrics.exec_latency.record(exec_time);
 
     let nfe = out.nfe.unwrap_or(variant.nfe);
-    if out.z.len() < real * out_dim {
+    if out.z.len() < rows * out_dim {
         // validate before recording: a short output produces no responses
         // and must not count as a served batch in fill/NFE accounting
-        return fail_batch(
-            batch,
-            &format!(
-                "backend returned {} values, batch needs {}",
-                out.z.len(),
-                real * out_dim
-            ),
+        let got = out.z.len();
+        return fail_items(
+            metrics,
+            &key,
+            items,
+            ApiError::internal(format!(
+                "backend returned {got} values, batch needs {}",
+                rows * out_dim
+            )),
         );
     }
-    metrics.record_batch(real, b_cap, nfe, variant.macs);
-    log_debug!("batch {task_name}/{variant_name}: {real}/{b_cap} samples in {exec_time:?}");
-    for (i, p) in batch.items.into_iter().enumerate() {
+    metrics.record_batch(rows, b_cap, nfe, variant.macs);
+    log_debug!("batch {}/{}: {rows}/{b_cap} rows in {exec_time:?}", key.0, key.1);
+    let mut off = 0usize;
+    for p in items {
+        let n = p.req.samples * out_dim;
         let latency = p.req.t_submit.elapsed();
         metrics.total_latency.record(latency);
         metrics.responses.fetch_add(1, Relaxed);
-        let _ = p.reply.send(Response {
+        let resp = Response {
             id: p.req.id,
-            output: out.z[i * out_dim..(i + 1) * out_dim].to_vec(),
+            output: out.z[off..off + n].to_vec(),
             variant: variant.name.clone(),
             mape: variant.mape,
             nfe,
             latency,
-            batch_fill: real,
-        });
+            batch_fill: rows,
+        };
+        off += n;
+        complete(metrics, p, Ok(resp));
     }
-}
-
-fn fail_batch(batch: ReadyBatch, msg: &str) {
-    crate::log_error!("batch {:?} failed: {msg}", batch.key);
-    // drop the reply senders: receivers see a disconnect error
 }
 
 #[cfg(test)]
@@ -419,5 +622,11 @@ mod tests {
         let c = EngineConfig::default();
         assert_eq!(c.backend, BackendKind::Pjrt);
         assert_eq!(c.workers, 0);
+    }
+
+    #[test]
+    fn default_submit_options_are_classic() {
+        let o = SubmitOptions::default();
+        assert!(o.policy.is_none() && o.variant.is_none() && o.deadline.is_none());
     }
 }

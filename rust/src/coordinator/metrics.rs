@@ -7,14 +7,23 @@ use crate::util::stats::LatencyHistogram;
 
 #[derive(Default)]
 pub struct CoordinatorMetrics {
+    /// accepted submissions (a multi-sample request counts once)
     pub requests: AtomicU64,
+    /// successful completions delivered
     pub responses: AtomicU64,
+    /// completions delivered as structured errors (deadline misses
+    /// included — they are also counted separately below)
+    pub failures: AtomicU64,
+    /// requests failed fast because their deadline passed before dispatch
+    pub deadline_misses: AtomicU64,
     pub batches: AtomicU64,
+    /// real rows executed across all batches
+    pub rows: AtomicU64,
     /// padded (wasted) slots across executed batches
     pub padded_slots: AtomicU64,
-    /// total NFEs spent (per-sample NFE × real samples)
+    /// total NFEs spent (per-sample NFE × real rows)
     pub nfe_total: AtomicU64,
-    /// total MACs spent (per-sample × real samples)
+    /// total MACs spent (per-sample × real rows)
     pub macs_total: AtomicU64,
     /// batches executing right now across the dispatch worker pool
     pub inflight_batches: AtomicU64,
@@ -34,12 +43,13 @@ impl CoordinatorMetrics {
         Self::default()
     }
 
-    pub fn record_batch(&self, real: usize, capacity: usize, nfe: u64, macs: u64) {
+    pub fn record_batch(&self, real_rows: usize, capacity: usize, nfe: u64, macs: u64) {
         self.batches.fetch_add(1, Relaxed);
+        self.rows.fetch_add(real_rows as u64, Relaxed);
         self.padded_slots
-            .fetch_add((capacity - real) as u64, Relaxed);
-        self.nfe_total.fetch_add(nfe * real as u64, Relaxed);
-        self.macs_total.fetch_add(macs * real as u64, Relaxed);
+            .fetch_add(capacity.saturating_sub(real_rows) as u64, Relaxed);
+        self.nfe_total.fetch_add(nfe * real_rows as u64, Relaxed);
+        self.macs_total.fetch_add(macs * real_rows as u64, Relaxed);
     }
 
     /// Mark a batch execution starting; returns the current in-flight count
@@ -55,25 +65,28 @@ impl CoordinatorMetrics {
         self.inflight_batches.fetch_sub(1, Relaxed);
     }
 
-    /// Mean batch fill ratio (1.0 = always full).
+    /// Mean batch fill ratio over rows (1.0 = always full).
     pub fn fill_ratio(&self) -> f64 {
-        let b = self.batches.load(Relaxed);
+        let rows = self.rows.load(Relaxed);
         let pad = self.padded_slots.load(Relaxed);
-        let served = self.responses.load(Relaxed);
-        if served + pad == 0 || b == 0 {
+        if rows + pad == 0 {
             return 1.0;
         }
-        served as f64 / (served + pad) as f64
+        rows as f64 / (rows + pad) as f64
     }
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} responses={} batches={} fill={:.2} inflight_peak={} \
+            "requests={} responses={} failures={} deadline_misses={} batches={} \
+             rows={} fill={:.2} inflight_peak={} \
              queue_p50={:.0}µs exec_p50={:.0}µs total_p50={:.0}µs total_p99={:.0}µs \
              nfe_total={} gmacs_total={:.2}",
             self.requests.load(Relaxed),
             self.responses.load(Relaxed),
+            self.failures.load(Relaxed),
+            self.deadline_misses.load(Relaxed),
             self.batches.load(Relaxed),
+            self.rows.load(Relaxed),
             self.fill_ratio(),
             self.inflight_peak.load(Relaxed),
             self.queue_latency.percentile_us(50.0),
@@ -93,10 +106,10 @@ mod tests {
     #[test]
     fn batch_accounting() {
         let m = CoordinatorMetrics::new();
-        m.responses.fetch_add(6, Relaxed);
         m.record_batch(3, 4, 2, 100);
         m.record_batch(3, 3, 2, 100);
         assert_eq!(m.batches.load(Relaxed), 2);
+        assert_eq!(m.rows.load(Relaxed), 6);
         assert_eq!(m.padded_slots.load(Relaxed), 1);
         assert_eq!(m.nfe_total.load(Relaxed), 12);
         assert!((m.fill_ratio() - 6.0 / 7.0).abs() < 1e-9);
@@ -122,5 +135,6 @@ mod tests {
         let m = CoordinatorMetrics::new();
         assert_eq!(m.fill_ratio(), 1.0);
         assert!(m.report().contains("requests=0"));
+        assert!(m.report().contains("deadline_misses=0"));
     }
 }

@@ -12,14 +12,19 @@
 //! [`ExecBackend`](crate::runtime::ExecBackend) — PJRT over the AOT
 //! artifacts, or the native tensor/solver stack.
 //!
+//! The caller-facing contract is the versioned API in [`crate::api`]:
+//! typed multi-sample requests, non-blocking [`Engine::submit`] with
+//! id-correlated completions (many in flight per caller), per-request
+//! policy/variant/deadline options, and stable error codes end to end.
+//!
 //! ```text
 //! client ──submit──► Engine ──policy──► per-variant queues (batcher)
-//!                                           │ full batch or deadline
+//!                                           │ rows full or deadline
 //!                                           ▼
 //!                          dispatch workers (per-queue affinity)
 //!                               │                    │
 //!                               ▼                    ▼
-//!                        exec backend (pjrt | native) ──► responses
+//!                        exec backend (pjrt | native) ──► completions (by id)
 //! ```
 
 pub mod batcher;
@@ -29,7 +34,7 @@ pub mod policy;
 pub mod request;
 pub mod server;
 
-pub use engine::{Engine, EngineConfig};
+pub use engine::{Engine, EngineConfig, SubmitHandle, SubmitOptions};
 pub use metrics::CoordinatorMetrics;
 pub use policy::{select_variant, Policy};
-pub use request::{Request, Response};
+pub use request::{Completion, CompletionSender, Request, Response};

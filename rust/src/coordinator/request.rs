@@ -1,9 +1,12 @@
 //! Request/response types of the serving surface.
 
+use std::sync::mpsc;
 use std::time::Instant;
 
-/// One inference request: a single sample for `task`, plus the accuracy
-/// budget the caller is willing to tolerate.
+use crate::api::ApiError;
+
+/// One inference request: a batch of `samples` rows for `task`, plus the
+/// accuracy budget the caller is willing to tolerate.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
@@ -12,20 +15,28 @@ pub struct Request {
     /// maximum acceptable terminal MAPE vs the dopri5 reference;
     /// `f32::INFINITY` means "cheapest available"
     pub budget: f32,
-    /// one flattened sample (task state dims without the batch dim)
+    /// row-major `[samples, dims]` payload (dims = task state dims
+    /// without the batch dim)
     pub input: Vec<f32>,
+    /// rows carried by this request (1 for the classic single-sample case)
+    pub samples: usize,
     /// enqueue timestamp (set by the engine)
     pub t_submit: Instant,
+    /// fail fast with `deadline_exceeded` if the request has not been
+    /// dispatched to the backend by this instant (`None` = no deadline)
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
-    pub fn new(id: u64, task: &str, budget: f32, input: Vec<f32>) -> Request {
+    pub fn new(id: u64, task: &str, budget: f32, input: Vec<f32>, samples: usize) -> Request {
         Request {
             id,
             task: task.to_string(),
             budget,
             input,
+            samples,
             t_submit: Instant::now(),
+            deadline: None,
         }
     }
 }
@@ -34,7 +45,7 @@ impl Request {
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    /// flattened output sample
+    /// flattened row-major `[samples, dims]` output
     pub output: Vec<f32>,
     /// which variant served it
     pub variant: String,
@@ -44,9 +55,23 @@ pub struct Response {
     pub nfe: u64,
     /// end-to-end latency
     pub latency: std::time::Duration,
-    /// how many real samples shared the executed batch
+    /// how many real rows shared the executed batch
     pub batch_fill: usize,
 }
+
+/// One finished submission, delivered on the completion channel the
+/// caller handed to [`Engine::submit_with`](crate::coordinator::Engine::submit_with).
+/// `id` is the engine-assigned submission id, so many in-flight requests
+/// can share one channel and still be correlated.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub result: Result<Response, ApiError>,
+}
+
+/// The channel completions arrive on. One sender clone travels with each
+/// queued request; the engine never blocks on it.
+pub type CompletionSender = mpsc::Sender<Completion>;
 
 #[cfg(test)]
 mod tests {
@@ -54,9 +79,25 @@ mod tests {
 
     #[test]
     fn request_construction() {
-        let r = Request::new(7, "cnf_rings", 0.05, vec![1.0, 2.0]);
+        let r = Request::new(7, "cnf_rings", 0.05, vec![1.0, 2.0], 1);
         assert_eq!(r.id, 7);
         assert_eq!(r.task, "cnf_rings");
+        assert_eq!(r.samples, 1);
+        assert!(r.deadline.is_none());
         assert!(r.t_submit.elapsed().as_secs() < 1);
+    }
+
+    #[test]
+    fn completions_share_a_channel_by_id() {
+        let (tx, rx) = mpsc::channel();
+        for id in [3u64, 1, 2] {
+            tx.send(Completion {
+                id,
+                result: Err(ApiError::internal("test")),
+            })
+            .unwrap();
+        }
+        let ids: Vec<u64> = rx.try_iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![3, 1, 2]);
     }
 }

@@ -1,22 +1,39 @@
-//! TCP JSON-lines serving front end.
+//! TCP JSON-lines serving front end — a thin pipelined shell over the
+//! typed protocol in [`crate::api::v1`].
 //!
-//! Protocol (one JSON object per line, both directions):
+//! One JSON object per line, both directions. Requests on a connection are
+//! submitted to the engine **as they arrive** (nothing blocks the reader),
+//! and responses are written back as their batches complete — possibly out
+//! of order; clients correlate by `id`. A single connection can therefore
+//! keep any number of multi-sample requests in flight (see
+//! [`Client::infer_pipelined`]).
 //!
 //! ```text
-//! → {"task": "cnf_rings", "budget": 0.05, "input": [0.1, -0.7]}
-//! ← {"ok": true, "variant": "hyperheun_k1", "mape": 0.042,
-//!    "latency_us": 812, "output": [...]}
+//! → {"v": 1, "id": 7, "task": "cnf_rings", "budget": 0.05,
+//!    "input": [[0.1, -0.7], [0.3, 0.2]]}
+//! ← {"v": 1, "ok": true, "id": 7, "variant": "hyperheun_k1", ...}
 //! → {"cmd": "metrics"}
-//! ← {"ok": true, "report": "..."}
+//! ← {"ok": true, "report": "...", "queues": [...]}
 //! ```
+//!
+//! Legacy v0 lines (no `"v"` key, one flat sample) are still answered, in
+//! the v0 response shape plus a `deprecation` notice. The full schema,
+//! error codes and versioning policy live in rust/README.md §"Serving API
+//! v1"; apart from the deliberately-legacy [`Client::infer`] v0 helper,
+//! every line this module reads or writes goes through the `api::v1`
+//! codec — there is no second copy of the protocol.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 
+use crate::api::v1::{self, InferReply, InferRequest};
+use crate::api::ApiError;
 use crate::coordinator::engine::Engine;
+use crate::coordinator::request::Completion;
 use crate::util::json::{self, Value};
-use crate::{log_info, Result};
+use crate::{log_info, Error, Result};
 
 /// Serve `engine` on `addr` (e.g. "127.0.0.1:7878"). Blocks forever; one
 /// thread per connection (connection counts here are test/bench scale).
@@ -41,98 +58,273 @@ pub fn serve_listener(engine: Arc<Engine>, listener: TcpListener) -> Result<()> 
     Ok(())
 }
 
+/// What the connection remembers about an in-flight submission, keyed by
+/// engine id: how to encode its completion.
+struct PendingMeta {
+    /// wire dialect the request arrived in (0 | 1)
+    version: u8,
+    /// client-chosen correlation id (engine id echoed when absent)
+    client_id: Option<u64>,
+    /// request row count (the output row width comes from the response —
+    /// variants may have out_dim != in_dim)
+    samples: usize,
+}
+
+fn write_line(writer: &Mutex<TcpStream>, v: &Value) -> std::io::Result<()> {
+    let mut s = json::to_string(v);
+    s.push('\n');
+    let mut w = writer.lock().unwrap();
+    w.write_all(s.as_bytes())
+}
+
 fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let pending: Arc<Mutex<HashMap<u64, PendingMeta>>> = Arc::new(Mutex::new(HashMap::new()));
+    let (done_tx, done_rx) = mpsc::channel::<Completion>();
+
+    // completion pump: encodes finished submissions (in whatever order the
+    // engine completes them) and writes them back; exits once the reader
+    // has hung up AND every in-flight request completed (all senders gone)
+    let pump = {
+        let writer = Arc::clone(&writer);
+        let pending = Arc::clone(&pending);
+        std::thread::spawn(move || {
+            for c in done_rx {
+                let meta = match pending.lock().unwrap().remove(&c.id) {
+                    Some(m) => m,
+                    None => continue, // reader vanished mid-registration
+                };
+                let line = completion_line(&meta, c);
+                if write_line(&writer, &line).is_err() {
+                    return; // peer gone; stop draining
+                }
+            }
+        })
+    };
+
     let reader = BufReader::new(stream);
+    let mut read_err: Option<Error> = None;
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                read_err = Some(e.into());
+                break;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = handle_line(engine, &line);
-        writer.write_all(json::to_string(&reply).as_bytes())?;
-        writer.write_all(b"\n")?;
+        if let Some(reply) = handle_pipelined(engine, &line, &done_tx, &pending) {
+            if write_line(&writer, &reply).is_err() {
+                break;
+            }
+        }
     }
+    drop(done_tx);
+    let _ = pump.join();
     crate::log_debug!("peer {peer:?} disconnected");
-    Ok(())
-}
-
-/// Process one request line (exposed for tests — no socket needed).
-pub fn handle_line(engine: &Engine, line: &str) -> Value {
-    match handle_line_inner(engine, line) {
-        Ok(v) => v,
-        Err(e) => json::obj(vec![
-            ("ok", Value::Bool(false)),
-            ("error", json::s(&e.to_string())),
-        ]),
+    match read_err {
+        Some(e) => Err(e),
+        None => Ok(()),
     }
 }
 
-fn handle_line_inner(engine: &Engine, line: &str) -> Result<Value> {
-    let req = json::parse(line)?;
-    if let Some(cmd) = req.get("cmd").and_then(Value::as_str) {
-        return match cmd {
-            "metrics" => Ok(json::obj(vec![
+fn completion_line(meta: &PendingMeta, c: Completion) -> Value {
+    let id = meta.client_id.unwrap_or(c.id);
+    match c.result {
+        Ok(resp) => v1::encode_response(
+            &v1::response_from_engine(id, meta.samples, &resp),
+            meta.version,
+        ),
+        Err(e) => v1::encode_error(Some(id), &e, meta.version),
+    }
+}
+
+/// Process one request line on the pipelined path. Returns an immediate
+/// reply for command lines and rejected submissions; accepted submissions
+/// return `None` — their reply arrives later via the completion pump.
+fn handle_pipelined(
+    engine: &Engine,
+    line: &str,
+    done: &mpsc::Sender<Completion>,
+    pending: &Mutex<HashMap<u64, PendingMeta>>,
+) -> Option<Value> {
+    let v = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return Some(v1::encode_error(
+                None,
+                &ApiError::bad_request(format!("invalid JSON: {e}")),
+                1,
+            ))
+        }
+    };
+    if v.get("cmd").is_some() {
+        return Some(handle_cmd(engine, &v));
+    }
+    let version_guess = v1::wire_version(&v).unwrap_or(1);
+    let (req, version) = match v1::decode_request(&v) {
+        Ok(x) => x,
+        Err(e) => {
+            // best-effort id echo so pipelined clients can still correlate
+            return Some(v1::encode_error(v1::peek_id(&v), &e, version_guess));
+        }
+    };
+    if version == 0 {
+        // legacy v0 clients have no client-chosen ids and relied on the
+        // old server's strict request→reply order; serve them
+        // synchronously on the reader thread so that guarantee holds
+        // (only v1 lines pipeline)
+        return Some(serve_blocking(engine, req, 0));
+    }
+    let opts = req.submit_options();
+    let InferRequest {
+        id: client_id,
+        task,
+        samples,
+        input,
+        budget,
+        ..
+    } = req;
+    // the pending lock is held across submit_with so the completion pump
+    // cannot observe a finished id before its meta is registered
+    let mut map = pending.lock().unwrap();
+    match engine.submit_with(&task, budget, input, samples, &opts, done.clone()) {
+        Ok(engine_id) => {
+            map.insert(
+                engine_id,
+                PendingMeta {
+                    version,
+                    client_id,
+                    samples,
+                },
+            );
+            None
+        }
+        Err(e) => Some(v1::encode_error(client_id, &e, version)),
+    }
+}
+
+/// Submit one decoded request and block for its reply, encoded in
+/// `version`'s dialect — the synchronous serve used by [`handle_line`]
+/// and by v0 lines on pipelined connections.
+fn serve_blocking(engine: &Engine, req: InferRequest, version: u8) -> Value {
+    let opts = req.submit_options();
+    let InferRequest {
+        id: client_id,
+        task,
+        samples,
+        input,
+        budget,
+        ..
+    } = req;
+    let handle = match engine.submit_opts(&task, budget, input, samples, &opts) {
+        Ok(h) => h,
+        Err(e) => return v1::encode_error(client_id, &e, version),
+    };
+    let id = client_id.unwrap_or(handle.id());
+    match handle.wait() {
+        Ok(resp) => v1::encode_response(&v1::response_from_engine(id, samples, &resp), version),
+        Err(e) => v1::encode_error(Some(id), &e, version),
+    }
+}
+
+/// Handle a `{"cmd": ...}` line. Every error carries a stable `code`.
+pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
+    let cmd = match req.get("cmd").and_then(Value::as_str) {
+        Some(c) => c,
+        None => {
+            return v1::encode_error(
+                None,
+                &ApiError::bad_request("cmd must be a string"),
+                1,
+            )
+        }
+    };
+    match cmd {
+        "metrics" => {
+            let queues: Vec<Value> = engine
+                .queue_depths()
+                .into_iter()
+                .map(|d| {
+                    json::obj(vec![
+                        ("task", json::s(&d.task)),
+                        ("variant", json::s(&d.variant)),
+                        ("requests", json::num(d.requests as f64)),
+                        ("rows", json::num(d.rows as f64)),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
                 ("ok", Value::Bool(true)),
                 ("backend", json::s(engine.backend_name())),
                 ("report", json::s(&engine.metrics().report())),
-            ])),
-            "backend" => Ok(json::obj(vec![
-                ("ok", Value::Bool(true)),
-                ("backend", json::s(engine.backend_name())),
-                ("workers", json::num(engine.worker_count() as f64)),
-            ])),
-            "tasks" => Ok(Value::Obj(
-                [
-                    ("ok".to_string(), Value::Bool(true)),
-                    (
-                        "tasks".to_string(),
-                        Value::Arr(
-                            engine
-                                .manifest()
-                                .tasks
-                                .keys()
-                                .map(|k| json::s(k))
-                                .collect(),
-                        ),
-                    ),
-                ]
-                .into_iter()
-                .collect(),
-            )),
-            other => Err(crate::Error::Coordinator(format!(
-                "unknown cmd {other:?}"
-            ))),
-        };
+                ("queues", Value::Arr(queues)),
+            ])
+        }
+        "backend" => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("backend", json::s(engine.backend_name())),
+            ("workers", json::num(engine.worker_count() as f64)),
+        ]),
+        "tasks" => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            (
+                "tasks",
+                Value::Arr(
+                    engine
+                        .manifest()
+                        .tasks
+                        .keys()
+                        .map(|k| json::s(k))
+                        .collect(),
+                ),
+            ),
+        ]),
+        // command errors use the v1 error shape (the version tag is how
+        // clients branch); only v0-dialect *infer* replies omit it
+        other => v1::encode_error(
+            None,
+            &ApiError::unknown_cmd(format!("unknown cmd {other:?}")),
+            1,
+        ),
     }
-    let task = req
-        .req("task")?
-        .as_str()
-        .ok_or_else(|| crate::Error::Coordinator("task must be a string".into()))?
-        .to_string();
-    let budget = req
-        .get("budget")
-        .and_then(Value::as_f32)
-        .unwrap_or(f32::INFINITY);
-    let (input, _) = req.req("input")?.as_f32_tensor()?;
-    let resp = engine.infer(&task, budget, input)?;
-    Ok(json::obj(vec![
-        ("ok", Value::Bool(true)),
-        ("id", json::num(resp.id as f64)),
-        ("variant", json::s(&resp.variant)),
-        ("mape", json::num(resp.mape)),
-        ("nfe", json::num(resp.nfe as f64)),
-        ("latency_us", json::num(resp.latency.as_micros() as f64)),
-        ("batch_fill", json::num(resp.batch_fill as f64)),
-        ("output", json::arr_f32(&resp.output)),
-    ]))
 }
 
-/// Minimal blocking client for examples and integration tests.
+/// Process one request line synchronously (exposed for tests and one-shot
+/// callers — no socket, no pipelining): decode in whatever dialect the
+/// line arrived, submit, wait, encode. The pipelined connection loop is
+/// the production path.
+pub fn handle_line(engine: &Engine, line: &str) -> Value {
+    let v = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return v1::encode_error(
+                None,
+                &ApiError::bad_request(format!("invalid JSON: {e}")),
+                1,
+            )
+        }
+    };
+    if v.get("cmd").is_some() {
+        return handle_cmd(engine, &v);
+    }
+    let version_guess = v1::wire_version(&v).unwrap_or(1);
+    let (req, version) = match v1::decode_request(&v) {
+        Ok(x) => x,
+        Err(e) => return v1::encode_error(v1::peek_id(&v), &e, version_guess),
+    };
+    serve_blocking(engine, req, version)
+}
+
+/// Blocking + pipelined client over the typed protocol — examples,
+/// integration tests, and the serving bench's TCP scenarios.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    next_id: u64,
 }
 
 impl Client {
@@ -141,23 +333,105 @@ impl Client {
         Ok(Client {
             writer: stream.try_clone()?,
             reader: BufReader::new(stream),
+            next_id: 1,
         })
     }
 
-    pub fn request(&mut self, v: &Value) -> Result<Value> {
-        self.writer
-            .write_all(json::to_string(v).as_bytes())?;
+    fn write_value(&mut self, v: &Value) -> Result<()> {
+        self.writer.write_all(json::to_string(v).as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn read_value(&mut self) -> Result<Value> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(Error::Coordinator("server closed the connection".into()));
+        }
         json::parse(&line)
     }
 
+    /// Raw line round trip (command lines, protocol experiments).
+    pub fn request(&mut self, v: &Value) -> Result<Value> {
+        self.write_value(v)?;
+        self.read_value()
+    }
+
+    /// Legacy **v0** single-sample request — kept for the deprecated-path
+    /// tests; new code should use [`Self::infer_v1`].
     pub fn infer(&mut self, task: &str, budget: f32, input: &[f32]) -> Result<Value> {
         self.request(&json::obj(vec![
             ("task", json::s(task)),
             ("budget", json::num(budget as f64)),
             ("input", json::arr_f32(input)),
         ]))
+    }
+
+    /// Send one typed v1 request without waiting. Assigns (and returns)
+    /// a connection-unique id when the request doesn't carry one.
+    pub fn send(&mut self, req: &InferRequest) -> Result<u64> {
+        let id = match req.id {
+            Some(i) => {
+                self.next_id = self.next_id.max(i + 1);
+                i
+            }
+            None => {
+                let i = self.next_id;
+                self.next_id += 1;
+                i
+            }
+        };
+        let mut r = req.clone();
+        r.id = Some(id);
+        self.write_value(&v1::encode_request(&r))?;
+        Ok(id)
+    }
+
+    /// Read and decode the next reply line (any in-flight id).
+    pub fn recv_reply(&mut self) -> Result<InferReply> {
+        let v = self.read_value()?;
+        v1::decode_reply(&v).map_err(Error::from)
+    }
+
+    /// Send one v1 request and wait for **its** reply.
+    pub fn infer_v1(&mut self, req: &InferRequest) -> Result<InferReply> {
+        let id = self.send(req)?;
+        let reply = self.recv_reply()?;
+        if reply.id() != Some(id) {
+            return Err(Error::Coordinator(format!(
+                "reply id {:?} does not match request id {id} (other requests \
+                 in flight? use infer_pipelined)",
+                reply.id()
+            )));
+        }
+        Ok(reply)
+    }
+
+    /// The pipelined loop: send **all** requests, then await all replies,
+    /// matching out-of-order completions by id. Returns replies in request
+    /// order. Requests carrying explicit ids must be unique.
+    pub fn infer_pipelined(&mut self, reqs: &[InferRequest]) -> Result<Vec<InferReply>> {
+        let mut ids = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            ids.push(self.send(r)?);
+        }
+        let mut by_id: HashMap<u64, InferReply> = HashMap::with_capacity(ids.len());
+        while by_id.len() < ids.len() {
+            let reply = self.recv_reply()?;
+            match reply.id() {
+                Some(id) if ids.contains(&id) && !by_id.contains_key(&id) => {
+                    by_id.insert(id, reply);
+                }
+                other => {
+                    return Err(Error::Coordinator(format!(
+                        "unmatched reply id {other:?} on the pipelined connection"
+                    )))
+                }
+            }
+        }
+        Ok(ids
+            .iter()
+            .map(|id| by_id.remove(id).expect("collected above"))
+            .collect())
     }
 }

@@ -48,6 +48,7 @@
 //! us to build from scratch: PRNG, JSON codec, CLI parsing, thread pool,
 //! a bench harness (`benchkit`) and a property-test harness (`propkit`).
 
+pub mod api;
 pub mod coordinator;
 pub mod data;
 pub mod metrics;

@@ -10,11 +10,15 @@
 //!   hypersolverd serve --backend native --workers 4
 //!   hypersolverd tasks
 //!   hypersolverd infer --task cnf_rings --budget 0.05 --input 0.3,-0.7
+//!   hypersolverd infer --task cnf_rings --variant dopri5 --input 0.3,-0.7 \
+//!       --deadline-us 5000
+//!
+//! The TCP wire protocol is API v1 (see rust/README.md §"Serving API v1").
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy, SubmitOptions};
 use hypersolvers::runtime::{BackendKind, Manifest};
 use hypersolvers::util::cli::Cli;
 
@@ -34,6 +38,12 @@ fn main() {
         .opt("task", "", "task for `infer`")
         .opt("budget", "0.05", "MAPE budget for `infer`")
         .opt("input", "", "comma-separated f32 sample for `infer`")
+        .opt("variant", "", "pin an exact variant for `infer` (bypasses the policy)")
+        .opt(
+            "deadline-us",
+            "0",
+            "fail `infer` fast with deadline_exceeded after this many µs (0 = none)",
+        )
         .parse_env();
 
     let cmd = parsed
@@ -83,6 +93,8 @@ fn main() {
             &parsed.get("task"),
             parsed.get_f64("budget") as f32,
             &parsed.get("input"),
+            &parsed.get("variant"),
+            parsed.get_usize("deadline-us") as u64,
         ),
         "serve" => cmd_serve(config, &parsed.get("addr")),
         other => {
@@ -125,6 +137,8 @@ fn cmd_infer(
     task: &str,
     budget: f32,
     input_csv: &str,
+    variant: &str,
+    deadline_us: u64,
 ) -> hypersolvers::Result<()> {
     if task.is_empty() {
         return Err(hypersolvers::Error::Other("--task is required".into()));
@@ -135,7 +149,16 @@ fn cmd_infer(
         .map(|s| s.trim().parse().unwrap_or(0.0))
         .collect();
     let engine = Engine::new(config)?;
-    let resp = engine.infer(task, budget, input)?;
+    let opts = SubmitOptions {
+        policy: None,
+        variant: (!variant.is_empty()).then(|| variant.to_string()),
+        deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
+    };
+    let resp = engine
+        .submit_opts(task, budget, input, 1, &opts)
+        .map_err(|e| hypersolvers::Error::Other(format!("[{}] {}", e.code, e.message)))?
+        .wait()
+        .map_err(|e| hypersolvers::Error::Other(format!("[{}] {}", e.code, e.message)))?;
     println!(
         "variant={} mape≤{:.4} nfe={} latency={:?}\noutput={:?}",
         resp.variant, resp.mape, resp.nfe, resp.latency, resp.output

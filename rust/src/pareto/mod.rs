@@ -5,8 +5,10 @@
 //! A [`GridConfig`] names a (solver × step-count/tolerance × task × state
 //! distribution) grid; the pipeline trains the hypersolver point by
 //! residual fitting ([`crate::train`]), sweeps every cell through the
-//! allocation-free `_ws` solver kernels *and* through the full
-//! [`NativeBackend`] serve path, computes terminal/trajectory error
+//! allocation-free `_ws` solver kernels *and* through the full serving
+//! coordinator (a native-backend [`Engine`] via `Engine::submit` with the
+//! variant pinned — batching/queueing included), computes
+//! terminal/trajectory error
 //! against a tight-tolerance dopri5 reference, extracts dominance-correct
 //! Pareto fronts, and emits one `BENCH_pareto.json` in the shared
 //! [`benchkit`](crate::util::benchkit) schema (plus a rolling
@@ -23,7 +25,7 @@
 //! * [`report`] — the pipeline, the JSON document, dominance checks, and
 //!   table rendering.
 //!
-//! [`NativeBackend`]: crate::runtime::NativeBackend
+//! [`Engine`]: crate::coordinator::Engine
 //! [`GridConfig`]: grid::GridConfig
 
 pub mod front;

@@ -38,7 +38,8 @@ pub struct TaskReport {
     /// Kernel sweep on trajectory-sampled states (the serving
     /// distribution g was trained for).
     pub kernel_traj: Vec<SweepPoint>,
-    /// Full serve-path sweep through `NativeBackend`.
+    /// Full serve-path sweep through the coordinator (`Engine::submit`,
+    /// native backend).
     pub serve: Vec<SweepPoint>,
     pub train: TrainSummary,
 }

@@ -1,7 +1,9 @@
 //! The sweep engine: run every grid cell through the `_ws` solver kernels
-//! (NFE-vs-error, kernel wall-clock) and through the full `NativeBackend`
-//! serve path (true end-to-end wall-clock), against a tight-tolerance
-//! dopri5 reference.
+//! (NFE-vs-error, kernel wall-clock) and through the full serving
+//! coordinator — `Engine::submit` with the variant pinned, so the
+//! wall-clock plane includes the engine's batching/queueing/dispatch
+//! (true end-to-end wall-clock) — against a tight-tolerance dopri5
+//! reference.
 //!
 //! Cost-axis semantics, pinned here once: `nfe` counts **field**
 //! evaluations (the paper's cost model — hypersolvers spend the same field
@@ -13,12 +15,14 @@
 //! (MLP) fields, exactly the paper's §6 overhead argument.
 
 use std::path::Path;
+use std::time::Duration;
 
+use crate::coordinator::{Engine, EngineConfig, Policy, SubmitOptions};
 use crate::metrics::{mape, mean_l2};
 use crate::nn::{CnfModel, FieldNet, HyperMlp};
 use crate::ode::VectorField;
 use crate::pareto::grid::GridConfig;
-use crate::runtime::{ExecBackend, Manifest, NativeBackend};
+use crate::runtime::{BackendKind, Manifest};
 use crate::solvers::{
     adaptive_ws, odeint_fixed_traj, odeint_fixed_ws, odeint_hyper_traj, odeint_hyper_ws,
     AdaptiveOpts, HyperNet, RkWorkspace, Tableau,
@@ -351,12 +355,17 @@ pub fn write_sweep_artifacts(
     Ok(())
 }
 
-/// Sweep every exported variant of `task` through the **full serve path**:
-/// `NativeBackend::execute` per batch (model lookup, input tensor build,
-/// per-queue workspace, output clone — everything a served request pays),
-/// benchkit-timed, with errors against a dopri5(`ref_tol`) reference on
-/// the same inputs. Inputs are drawn box-uniform from the grid seed, so
-/// kernel and serve sweeps are reproducible from the same config.
+/// Sweep every exported variant of `task` through the **full serve
+/// path**: a native-backend [`Engine`] is brought up over the exported
+/// artifacts and each variant is measured via `Engine::submit` with the
+/// variant pinned — one full-batch multi-sample request per solve, so the
+/// wall-clock includes everything a served request pays: submission,
+/// queueing, the dispatch worker hand-off, batching, backend execution,
+/// and completion delivery (the coordinator's real batching/queueing
+/// effects, not just `NativeBackend::execute`). Errors are measured
+/// against a dopri5(`ref_tol`) reference on the same inputs; inputs are
+/// drawn box-uniform from the grid seed, so kernel and serve sweeps are
+/// reproducible from the same config.
 pub fn serve_sweep(
     manifest: &Manifest,
     task: &str,
@@ -381,16 +390,37 @@ pub fn serve_sweep(
     )?
     .z;
 
-    let backend = NativeBackend::new();
+    // the measured serve plane: the coordinator route, not a bare backend.
+    // A full-batch request fills its queue instantly (rows == cap), so the
+    // per-solve wall-clock is submit → dispatch → execute → complete.
+    let engine = Engine::new(EngineConfig {
+        artifacts_dir: manifest.dir.clone(),
+        max_wait: Duration::from_millis(2),
+        policy: Policy::MinMacs,
+        backend: BackendKind::Native,
+        workers: 2,
+    })?;
+    engine.warmup(task)?;
+
     let input = z0.into_data();
     let bench = Bench::with_budget(grid.measure_ms);
     let mut out = Vec::new();
     for v in &entry.variants {
-        backend.prepare(manifest, entry, v)?;
-        let o = backend.execute(manifest, entry, v, input.clone())?;
-        let zt = Tensor::new(&[batch, d], o.z)?;
+        let opts = SubmitOptions {
+            variant: Some(v.name.clone()),
+            ..SubmitOptions::default()
+        };
+        let submit_once = || -> Result<crate::coordinator::Response> {
+            engine
+                .submit_opts(task, f32::INFINITY, input.clone(), batch, &opts)
+                .map_err(Error::from)?
+                .wait()
+                .map_err(Error::from)
+        };
+        let first = submit_once()?;
+        let zt = Tensor::new(&[batch, d], first.output.clone())?;
         let m = bench.run(&v.name, || {
-            backend.execute(manifest, entry, v, input.clone()).unwrap();
+            submit_once().expect("serve sweep submission failed");
         });
         out.push(SweepPoint {
             task: task.to_string(),
@@ -400,7 +430,7 @@ pub fn serve_sweep(
             k: v.k,
             tol: v.tol.map(|t| t as f32),
             hyper: v.hyper,
-            nfe: o.nfe.map(|n| n as f64).unwrap_or(v.nfe as f64),
+            nfe: first.nfe as f64,
             g_evals: if v.hyper { v.k as u64 } else { 0 },
             err: mean_l2(&zt, &zref)?,
             mape: mape(&zt, &zref)?,

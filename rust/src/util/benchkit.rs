@@ -240,6 +240,129 @@ pub fn append_trajectory_at(path: &std::path::Path, entry: Value) -> crate::Resu
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Trajectory gate: diff the newest entry of each bench stream against the
+// previous one and flag regressions (CI restores the prior run's
+// trajectory file, so the diff is commit-over-commit)
+// ---------------------------------------------------------------------------
+
+/// Outcome of gating a trajectory: human-readable check lines plus the
+/// regressions found (empty = gate passes).
+#[derive(Debug, Default)]
+pub struct GateReport {
+    pub checks: Vec<String>,
+    pub regressions: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+fn entry_f64(v: &Value, key: &str) -> Option<f64> {
+    v.get(key).and_then(Value::as_f64)
+}
+
+/// Diff the last two entries of every bench stream in a
+/// `BENCH_trajectory.json` array (ordered oldest → newest). Gated today:
+///
+/// * `serving_throughput.mixed_p50_ms` — newest must stay within
+///   `p50_slack ×` of the previous run (wall-clock on shared runners is
+///   noisy; pick a generous slack);
+/// * `hyperbench_pareto.tasks[*].hyper_on_nfe_front` — NFE-front
+///   membership must never flip true → false;
+/// * `hyperbench_pareto.tasks[*].serve_speedup_vs_dopri5` — a speedup
+///   that was > 1 must not drop to ≤ 1 (the end-to-end win vanishing).
+///
+/// Streams with fewer than two entries just record a baseline note.
+pub fn trajectory_gate(entries: &[Value], p50_slack: f64) -> GateReport {
+    let mut report = GateReport::default();
+    // group by bench stream, preserving order
+    let mut streams: Vec<(String, Vec<&Value>)> = Vec::new();
+    for e in entries {
+        let name = e
+            .get("bench")
+            .and_then(Value::as_str)
+            .unwrap_or("<unnamed>")
+            .to_string();
+        match streams.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, v)) => v.push(e),
+            None => streams.push((name, vec![e])),
+        }
+    }
+    for (name, stream) in &streams {
+        if stream.len() < 2 {
+            report
+                .checks
+                .push(format!("[{name}] first entry recorded; nothing to diff"));
+            continue;
+        }
+        let prev = stream[stream.len() - 2];
+        let newest = stream[stream.len() - 1];
+        if name.as_str() == "serving_throughput" {
+            match (entry_f64(prev, "mixed_p50_ms"), entry_f64(newest, "mixed_p50_ms")) {
+                (Some(p), Some(n)) if p > 0.0 => {
+                    let line = format!(
+                        "[{name}] mixed-budget serving p50: {p:.3} → {n:.3} ms \
+                         (allowed ≤ {:.3})",
+                        p * p50_slack
+                    );
+                    if n > p * p50_slack {
+                        report.regressions.push(format!("{line} — REGRESSED"));
+                    } else {
+                        report.checks.push(line);
+                    }
+                }
+                _ => report
+                    .checks
+                    .push(format!("[{name}] no mixed_p50_ms pair to diff")),
+            }
+        }
+        if name.as_str() == "hyperbench_pareto" {
+            let tasks_of = |v: &Value| -> Vec<Value> {
+                v.get("tasks")
+                    .and_then(Value::as_arr)
+                    .map(|a| a.to_vec())
+                    .unwrap_or_default()
+            };
+            for nt in tasks_of(newest) {
+                let Some(task) = nt.get("task").and_then(Value::as_str).map(String::from)
+                else {
+                    continue;
+                };
+                let pt = tasks_of(prev)
+                    .into_iter()
+                    .find(|p| p.get("task").and_then(Value::as_str) == Some(task.as_str()));
+                let Some(pt) = pt else { continue };
+                let front = |v: &Value| v.get("hyper_on_nfe_front").and_then(Value::as_bool);
+                if let (Some(was), Some(is)) = (front(&pt), front(&nt)) {
+                    let line =
+                        format!("[{name}/{task}] hyper on NFE front: {was} → {is}");
+                    if was && !is {
+                        report.regressions.push(format!("{line} — REGRESSED"));
+                    } else {
+                        report.checks.push(line);
+                    }
+                }
+                let speed = |v: &Value| entry_f64(v, "serve_speedup_vs_dopri5");
+                if let (Some(was), Some(is)) = (speed(&pt), speed(&nt)) {
+                    let line = format!(
+                        "[{name}/{task}] serve speedup vs tight dopri5: \
+                         {was:.2}× → {is:.2}×"
+                    );
+                    if was > 1.0 && is <= 1.0 {
+                        report.regressions.push(format!("{line} — REGRESSED"));
+                    } else {
+                        report.checks.push(line);
+                    }
+                }
+            }
+        }
+    }
+    report
+}
+
 /// `fmt` helpers used across bench binaries.
 pub fn fmt_ms(d: Duration) -> String {
     let ms = d.as_secs_f64() * 1e3;
@@ -327,6 +450,59 @@ mod tests {
         assert!(append_trajectory_at(&path, bench_doc("c", vec![])).is_err());
         assert!(json::parse_file(&path).unwrap().as_obj().is_some());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trajectory_gate_diffs_last_two_per_stream() {
+        let serving = |p50: f64| {
+            json::obj(vec![
+                ("bench", json::s("serving_throughput")),
+                ("mixed_p50_ms", json::num(p50)),
+            ])
+        };
+        let pareto = |front: bool, speedup: f64| {
+            json::obj(vec![
+                ("bench", json::s("hyperbench_pareto")),
+                (
+                    "tasks",
+                    Value::Arr(vec![json::obj(vec![
+                        ("task", json::s("vdp")),
+                        ("hyper_on_nfe_front", Value::Bool(front)),
+                        ("serve_speedup_vs_dopri5", json::num(speedup)),
+                    ])]),
+                ),
+            ])
+        };
+        // healthy: p50 within slack, front stays, speedup stays > 1
+        let entries = vec![serving(2.0), pareto(true, 5.0), serving(2.2), pareto(true, 4.0)];
+        let r = trajectory_gate(&entries, 1.5);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.checks.iter().any(|c| c.contains("serving p50")));
+
+        // p50 blows the slack → regression
+        let entries = vec![serving(2.0), serving(4.0)];
+        let r = trajectory_gate(&entries, 1.5);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("REGRESSED"), "{:?}", r.regressions);
+
+        // front membership flipping off → regression, even with p50 fine
+        let entries = vec![pareto(true, 5.0), pareto(false, 5.0)];
+        assert!(!trajectory_gate(&entries, 1.5).passed());
+        // speedup collapsing through 1.0 → regression
+        let entries = vec![pareto(true, 5.0), pareto(true, 0.8)];
+        assert!(!trajectory_gate(&entries, 1.5).passed());
+        // only the LAST TWO entries of a stream are compared: an ancient
+        // regression two runs back does not keep failing the gate once a
+        // healthy pair follows (false→true front is a recovery, and a
+        // speedup that was ≤ 1 may grow freely)
+        let entries = vec![pareto(true, 5.0), pareto(false, 0.5), pareto(true, 3.0)];
+        assert!(trajectory_gate(&entries, 1.5).passed());
+
+        // single entries per stream: baseline only, passes
+        let entries = vec![serving(2.0), pareto(true, 5.0)];
+        let r = trajectory_gate(&entries, 1.5);
+        assert!(r.passed());
+        assert!(r.checks.iter().all(|c| c.contains("nothing to diff")));
     }
 
     #[test]

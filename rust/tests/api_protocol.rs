@@ -1,0 +1,277 @@
+//! Protocol tests for `api::v1`: golden wire lines, v0 back-compat, every
+//! error code over the wire, and a pipelined TCP integration test (N
+//! requests in flight on one connection, out-of-order completion, ids all
+//! matched) against the artifact-free native engine.
+
+use std::net::TcpListener;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use hypersolvers::api::v1::{self, InferReply, InferRequest, InferResponse};
+use hypersolvers::api::{ApiError, ErrorCode};
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
+use hypersolvers::runtime::BackendKind;
+use hypersolvers::util::fixtures;
+use hypersolvers::util::json::{self, Value};
+
+fn native_engine(tag: &str, tasks: &[(&str, usize)], max_wait: Duration) -> Engine {
+    let dir = fixtures::temp_native_artifacts(tag, tasks).unwrap();
+    Engine::new(EngineConfig {
+        artifacts_dir: dir,
+        max_wait,
+        policy: Policy::MinMacs,
+        backend: BackendKind::Native,
+        workers: 2,
+    })
+    .unwrap()
+}
+
+/// Watchdog for the socket tests: a wedged server would otherwise hang
+/// `cargo test` forever on a blocking read.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let t = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: protocol test did not finish within {secs}s")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden lines: the exact bytes of the v1 dialect
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_v1_request_line() {
+    // dyadic values only: the wire widens f32 → f64, and a non-dyadic
+    // f32 like 0.1 would print its full f64 expansion
+    let mut req = InferRequest::batch("cnf_rings", 0.25, 2, vec![0.5, -0.75, 0.25, 1.5]);
+    req.id = Some(7);
+    req.policy = Some(Policy::MinNfe);
+    req.deadline_us = Some(5000);
+    assert_eq!(
+        json::to_string(&v1::encode_request(&req)),
+        r#"{"budget":0.25,"deadline_us":5000,"id":7,"input":[[0.5,-0.75],[0.25,1.5]],"policy":"nfe","task":"cnf_rings","v":1}"#
+    );
+}
+
+#[test]
+fn golden_v1_response_line() {
+    let resp = InferResponse {
+        id: 7,
+        variant: "hyperheun_k2".into(),
+        mape: 0.02,
+        nfe: 4,
+        latency_us: 812,
+        batch_fill: 4,
+        samples: 2,
+        dims: 2,
+        output: vec![1.0, 2.0, 3.0, 4.0],
+    };
+    assert_eq!(
+        json::to_string(&v1::encode_response(&resp, 1)),
+        r#"{"batch_fill":4,"id":7,"latency_us":812,"mape":0.02,"nfe":4,"ok":true,"output":[[1,2],[3,4]],"v":1,"variant":"hyperheun_k2"}"#
+    );
+}
+
+#[test]
+fn golden_v1_error_line() {
+    let e = ApiError::deadline_exceeded("too slow");
+    assert_eq!(
+        json::to_string(&v1::encode_error(Some(9), &e, 1)),
+        r#"{"code":"deadline_exceeded","error":"too slow","id":9,"ok":false,"v":1}"#
+    );
+    // v0 dialect: no version tag, code still present
+    assert_eq!(
+        json::to_string(&v1::encode_error(None, &ApiError::unknown_cmd("nope"), 0)),
+        r#"{"code":"unknown_cmd","error":"nope","ok":false}"#
+    );
+}
+
+#[test]
+fn every_error_code_round_trips_the_wire() {
+    for code in ErrorCode::ALL {
+        let e = ApiError::new(code, format!("m-{code}"));
+        let line = json::to_string(&v1::encode_error(Some(3), &e, 1));
+        let back = json::parse(&line).unwrap();
+        match v1::decode_reply(&back).unwrap() {
+            InferReply::Err(err) => {
+                assert_eq!(err.id, Some(3));
+                assert_eq!(err.error.code, code);
+                assert_eq!(err.error.message, format!("m-{code}"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}
+
+#[test]
+fn v0_and_v1_lines_decode_to_the_same_typed_request() {
+    let v0 = json::parse(r#"{"task":"t","budget":0.1,"input":[0.5,-0.5]}"#).unwrap();
+    let v1l = json::parse(r#"{"v":1,"task":"t","budget":0.1,"input":[0.5,-0.5]}"#).unwrap();
+    let (r0, ver0) = v1::decode_request(&v0).unwrap();
+    let (r1, ver1) = v1::decode_request(&v1l).unwrap();
+    assert_eq!(ver0, 0);
+    assert_eq!(ver1, 1);
+    assert_eq!(r0, r1);
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined TCP integration
+// ---------------------------------------------------------------------------
+
+fn spawn_server(engine: Engine) -> (Arc<Engine>, String) {
+    let engine = Arc::new(engine);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    {
+        let engine = Arc::clone(&engine);
+        thread::spawn(move || {
+            let _ = server::serve_listener(engine, listener);
+        });
+    }
+    (engine, addr)
+}
+
+#[test]
+fn pipelined_connection_matches_n_inflight_ids() {
+    with_watchdog(120, || {
+        let engine = native_engine(
+            "pipe",
+            &[("cnf_a", 4), ("cnf_b", 4)],
+            Duration::from_millis(1),
+        );
+        let (engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+
+        // N=16 in flight on one connection: mixed tasks (so batches land
+        // on distinct queues and can complete out of order), mixed budgets
+        // (distinct variants even within a task), mixed row counts, and a
+        // couple of guaranteed-immediate error replies interleaved
+        let mut reqs: Vec<InferRequest> = Vec::new();
+        for i in 0..16u64 {
+            let task = if i % 2 == 0 { "cnf_a" } else { "cnf_b" };
+            let budget = [0.5f32, 0.05, 1e-6][(i % 3) as usize];
+            let samples = 1 + (i as usize % 3); // 1..=3 rows, cap is 4
+            let input: Vec<f32> = (0..samples * 2)
+                .map(|j| 0.05 * (i as f32) - 0.03 * j as f32)
+                .collect();
+            let mut r = InferRequest::batch(task, budget, samples, input);
+            r.id = Some(100 + i);
+            reqs.push(r);
+        }
+        // two bad requests mid-pipeline: unknown task and a wrong shape
+        let mut bad_task = InferRequest::single("no_such_task", 0.5, vec![0.0, 0.0]);
+        bad_task.id = Some(900);
+        reqs.insert(5, bad_task);
+        let mut bad_shape = InferRequest::single("cnf_a", 0.5, vec![0.0; 5]);
+        bad_shape.id = Some(901);
+        reqs.insert(11, bad_shape);
+
+        let replies = client.infer_pipelined(&reqs).unwrap();
+        assert_eq!(replies.len(), reqs.len());
+        // the two poisoned requests must come back as errors (not be
+        // silently served), in their request-order slots
+        assert!(matches!(&replies[5], InferReply::Err(_)), "{:?}", replies[5]);
+        assert!(matches!(&replies[11], InferReply::Err(_)), "{:?}", replies[11]);
+        for (req, reply) in reqs.iter().zip(&replies) {
+            assert_eq!(reply.id(), req.id, "replies re-ordered by id");
+            match (req.id, reply) {
+                (Some(900), InferReply::Err(e)) => {
+                    assert_eq!(e.error.code, ErrorCode::UnknownTask)
+                }
+                (Some(901), InferReply::Err(e)) => {
+                    assert_eq!(e.error.code, ErrorCode::ShapeMismatch)
+                }
+                (_, InferReply::Ok(r)) => {
+                    assert_eq!(r.samples, req.samples, "row count echoed");
+                    assert_eq!(r.dims, 2);
+                    assert_eq!(r.output.len(), req.samples * 2);
+                    assert!(r.output.iter().all(|x| x.is_finite()));
+                    assert!(r.latency_us > 0);
+                }
+                (id, other) => panic!("request {id:?} got {other:?}"),
+            }
+        }
+
+        // a legacy v0 line on the same (still-pipelined) connection is
+        // answered in the v0 dialect with the deprecation notice
+        let v0 = client.infer("cnf_a", 0.5, &[0.5, 0.5]).unwrap();
+        assert_eq!(v0.get("ok").and_then(Value::as_bool), Some(true), "{v0:?}");
+        assert!(v0.get("deprecation").is_some());
+        assert!(v0.get("v").is_none());
+
+        // and a typed v1 single round trip still works afterwards
+        match client
+            .infer_v1(&InferRequest::single("cnf_b", 0.05, vec![0.1, 0.2]))
+            .unwrap()
+        {
+            InferReply::Ok(r) => assert_eq!(r.variant, "hyperheun_k2"),
+            other => panic!("{other:?}"),
+        }
+
+        let m = engine.metrics();
+        assert!(
+            m.responses.load(std::sync::atomic::Ordering::Relaxed) >= 18,
+            "{}",
+            m.report()
+        );
+    });
+}
+
+#[test]
+fn deadline_exceeded_travels_the_wire_with_its_code() {
+    with_watchdog(60, || {
+        // cap 4 + long max_wait: a lone request only flushes at its own
+        // deadline → structured deadline_exceeded reply
+        let engine = native_engine(
+            "pipe_deadline",
+            &[("cnf_a", 4)],
+            Duration::from_millis(500),
+        );
+        let (_engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+        let mut req = InferRequest::single("cnf_a", 0.5, vec![0.1, 0.2]);
+        req.deadline_us = Some(1);
+        match client.infer_v1(&req).unwrap() {
+            InferReply::Err(e) => {
+                assert_eq!(e.error.code, ErrorCode::DeadlineExceeded, "{}", e.error)
+            }
+            other => panic!("expected deadline_exceeded, got {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn protocol_version_negotiation_rejects_unknown_versions() {
+    with_watchdog(60, || {
+        let engine = native_engine("pipe_ver", &[("cnf_a", 4)], Duration::from_millis(1));
+        let (_engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+        let reply = client
+            .request(&json::parse(r#"{"v":3,"task":"cnf_a","input":[1,2]}"#).unwrap())
+            .unwrap();
+        assert_eq!(reply.get("ok").and_then(Value::as_bool), Some(false));
+        assert_eq!(
+            reply.get("code").and_then(Value::as_str),
+            Some("bad_request"),
+            "{reply:?}"
+        );
+        // invalid JSON gets a structured bad_request too, and the
+        // connection survives for the next request
+        let reply = client.request(&json::parse(r#""not an object""#).unwrap()).unwrap();
+        assert_eq!(
+            reply.get("code").and_then(Value::as_str),
+            Some("bad_request"),
+            "{reply:?}"
+        );
+        let ok = client.infer("cnf_a", 0.5, &[0.1, 0.2]).unwrap();
+        assert_eq!(ok.get("ok").and_then(Value::as_bool), Some(true));
+    });
+}

@@ -8,16 +8,26 @@ use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
 
-use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
+use hypersolvers::api::ErrorCode;
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy, SubmitOptions};
 use hypersolvers::runtime::BackendKind;
 use hypersolvers::util::fixtures;
 use hypersolvers::util::json::{self, Value};
 
 fn native_engine(tag: &str, tasks: &[(&str, usize)], workers: usize) -> Engine {
+    native_engine_wait(tag, tasks, workers, Duration::from_millis(1))
+}
+
+fn native_engine_wait(
+    tag: &str,
+    tasks: &[(&str, usize)],
+    workers: usize,
+    max_wait: Duration,
+) -> Engine {
     let dir = fixtures::temp_native_artifacts(tag, tasks).unwrap();
     Engine::new(EngineConfig {
         artifacts_dir: dir,
-        max_wait: Duration::from_millis(1),
+        max_wait,
         policy: Policy::MinMacs,
         backend: BackendKind::Native,
         workers,
@@ -65,7 +75,7 @@ fn native_engine_serves_end_to_end() {
         }
 
         // a burst batches: 8 submits, batch cap 4 → fills of 4
-        let rxs: Vec<_> = (0..8)
+        let handles: Vec<_> = (0..8)
             .map(|i| {
                 engine
                     .submit("cnf_a", 0.5, vec![0.1 * i as f32, -0.5])
@@ -73,8 +83,8 @@ fn native_engine_serves_end_to_end() {
             })
             .collect();
         let mut fills = Vec::new();
-        for rx in rxs {
-            let resp = rx.recv().unwrap();
+        for h in handles {
+            let resp = h.wait().unwrap();
             assert_eq!(resp.output.len(), 2);
             fills.push(resp.batch_fill);
         }
@@ -89,9 +99,182 @@ fn native_engine_warmup_and_rejections() {
         let engine = native_engine("reject", &[("cnf_a", 4)], 2);
         engine.warmup("cnf_a").unwrap();
         assert!(engine.warmup("no_such_task").is_err());
-        assert!(engine.submit("no_such_task", 0.1, vec![0.0]).is_err());
+        // rejections carry stable machine-readable codes
+        let e = engine.submit("no_such_task", 0.1, vec![0.0]).unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnknownTask);
         // wrong sample dimension
-        assert!(engine.submit("cnf_a", 0.1, vec![0.0; 5]).is_err());
+        let e = engine.submit("cnf_a", 0.1, vec![0.0; 5]).unwrap_err();
+        assert_eq!(e.code, ErrorCode::ShapeMismatch);
+        // zero samples / more samples than the executable batch
+        let e = engine
+            .submit_opts("cnf_a", 0.1, vec![], 0, &SubmitOptions::default())
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::ShapeMismatch);
+        let e = engine
+            .submit_opts("cnf_a", 0.1, vec![0.0; 10], 5, &SubmitOptions::default())
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::ShapeMismatch);
+        // unknown pinned variant
+        let e = engine
+            .submit_opts(
+                "cnf_a",
+                0.1,
+                vec![0.0, 0.0],
+                1,
+                &SubmitOptions {
+                    variant: Some("rk9_k99".into()),
+                    ..SubmitOptions::default()
+                },
+            )
+            .unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnknownVariant);
+    });
+}
+
+#[test]
+fn multi_sample_requests_round_trip_row_blocks() {
+    with_watchdog(60, || {
+        let engine = native_engine("multirow", &[("cnf_a", 4)], 2);
+        // a full-batch request (4 rows) and a smaller one (2 rows), both
+        // against single-sample requests for the same variant — outputs
+        // must match the single-sample answers row for row
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|i| vec![0.1 * i as f32, -0.3 + 0.2 * i as f32])
+            .collect();
+        let singles: Vec<Vec<f32>> = rows
+            .iter()
+            .map(|r| engine.infer("cnf_a", 0.5, r.clone()).unwrap().output)
+            .collect();
+
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let resp = engine
+            .submit_opts("cnf_a", 0.5, flat, 4, &SubmitOptions::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp.output.len(), 8);
+        assert_eq!(resp.batch_fill, 4);
+        for (i, s) in singles.iter().enumerate() {
+            assert_eq!(&resp.output[i * 2..(i + 1) * 2], s.as_slice(), "row {i}");
+        }
+
+        // 2-row request: answered, possibly padded (fill ≤ cap)
+        let flat2: Vec<f32> = rows[..2].iter().flatten().copied().collect();
+        let resp2 = engine
+            .submit_opts("cnf_a", 0.5, flat2, 2, &SubmitOptions::default())
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp2.output.len(), 4);
+        assert_eq!(&resp2.output[..2], singles[0].as_slice());
+        assert_eq!(&resp2.output[2..], singles[1].as_slice());
+    });
+}
+
+#[test]
+fn variant_pin_and_policy_override() {
+    with_watchdog(60, || {
+        let engine = native_engine("pin", &[("cnf_a", 4)], 2);
+        // pin: bypasses the budget policy entirely (loose budget would
+        // otherwise route to euler_k2)
+        let resp = engine
+            .submit_opts(
+                "cnf_a",
+                0.5,
+                vec![0.3, -0.2],
+                1,
+                &SubmitOptions {
+                    variant: Some("dopri5".into()),
+                    ..SubmitOptions::default()
+                },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(resp.variant, "dopri5");
+        assert!(resp.nfe >= 7);
+        // per-request policy override is accepted and still satisfies the
+        // budget (the fixture's nfe/macs orders agree, so just assert
+        // budget satisfaction + success)
+        let resp = engine
+            .submit_opts(
+                "cnf_a",
+                0.05,
+                vec![0.3, -0.2],
+                1,
+                &SubmitOptions {
+                    policy: Some(Policy::MinNfe),
+                    ..SubmitOptions::default()
+                },
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(resp.mape <= 0.05, "{resp:?}");
+    });
+}
+
+#[test]
+fn deadline_fails_fast_with_structured_code() {
+    with_watchdog(60, || {
+        // long batching wait + batch cap 4: a lone 1-row request only
+        // flushes at its own deadline, which has then already passed
+        let engine = native_engine_wait(
+            "deadline",
+            &[("cnf_a", 4)],
+            2,
+            Duration::from_millis(300),
+        );
+        let err = engine
+            .submit_opts(
+                "cnf_a",
+                0.5,
+                vec![0.3, -0.2],
+                1,
+                &SubmitOptions {
+                    deadline: Some(Duration::from_micros(1)),
+                    ..SubmitOptions::default()
+                },
+            )
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::DeadlineExceeded, "{err}");
+        assert_eq!(engine.metrics().deadline_misses.load(Relaxed), 1);
+        // a generous deadline on the same queue still serves fine
+        let resp = engine
+            .submit_opts(
+                "cnf_a",
+                0.5,
+                vec![0.3, -0.2],
+                1,
+                &SubmitOptions {
+                    deadline: Some(Duration::from_secs(30)),
+                    ..SubmitOptions::default()
+                },
+            )
+            .unwrap()
+            .wait();
+        // flushes at its max_wait point (300ms), well under the 30s
+        // deadline, so this completes ok
+        assert!(resp.is_ok(), "{resp:?}");
+        // a deadline SHORTER than max_wait but comfortably larger than the
+        // dispatch margin pulls the flush early and still gets SERVED —
+        // the deadline is a usable latency SLO, not a guaranteed failure
+        let resp = engine
+            .submit_opts(
+                "cnf_a",
+                0.5,
+                vec![0.3, -0.2],
+                1,
+                &SubmitOptions {
+                    deadline: Some(Duration::from_millis(100)),
+                    ..SubmitOptions::default()
+                },
+            )
+            .unwrap()
+            .wait();
+        assert!(resp.is_ok(), "100ms deadline under 300ms max_wait: {resp:?}");
     });
 }
 
@@ -112,35 +295,40 @@ fn worker_pool_stress_8_threads_100_submits() {
             let engine = std::sync::Arc::clone(&engine);
             handles.push(thread::spawn(move || {
                 let budgets = [0.5f32, 0.05, 0.000001];
-                let mut rxs = Vec::with_capacity(PER_THREAD);
+                let mut subs = Vec::with_capacity(PER_THREAD);
                 for i in 0..PER_THREAD {
                     let task = if (t + i) % 2 == 0 { "cnf_a" } else { "cnf_b" };
                     let budget = budgets[i % budgets.len()];
                     let input = vec![0.01 * i as f32, -0.02 * t as f32];
-                    rxs.push(engine.submit(task, budget, input).unwrap());
+                    subs.push(engine.submit(task, budget, input).unwrap());
                 }
-                rxs
+                subs
             }));
         }
 
-        let mut receivers = Vec::with_capacity(THREADS * PER_THREAD);
+        let mut submissions = Vec::with_capacity(THREADS * PER_THREAD);
         for h in handles {
-            receivers.extend(h.join().unwrap());
+            submissions.extend(h.join().unwrap());
         }
-        assert_eq!(receivers.len(), THREADS * PER_THREAD);
+        assert_eq!(submissions.len(), THREADS * PER_THREAD);
 
-        // every receiver gets exactly one response with the right output dim
-        let mut responses = Vec::with_capacity(receivers.len());
-        for rx in &receivers {
-            let resp = rx
+        // every handle gets exactly one completion with the right output
+        // dim, tagged with its own engine id
+        let mut responses = Vec::with_capacity(submissions.len());
+        for handle in &submissions {
+            let done = handle
+                .receiver()
                 .recv_timeout(Duration::from_secs(30))
                 .expect("response lost");
+            assert_eq!(done.id, handle.id(), "completion id mismatch");
+            let resp = done.result.expect("request failed");
             assert_eq!(resp.output.len(), 2, "variant {}", resp.variant);
             responses.push(resp);
         }
         let m = engine.metrics();
         assert_eq!(m.requests.load(Relaxed), (THREADS * PER_THREAD) as u64);
         assert_eq!(m.responses.load(Relaxed), (THREADS * PER_THREAD) as u64);
+        assert_eq!(m.failures.load(Relaxed), 0);
         assert!(m.inflight_peak.load(Relaxed) >= 1);
         // the gauge decrements just after the batch's last send — allow the
         // workers a moment to step out of run_batch before checking for leaks
@@ -152,14 +340,45 @@ fn worker_pool_stress_8_threads_100_submits() {
 
         // Drop joins all workers without hanging (the watchdog is the net),
         // and after it every channel is disconnected with nothing buffered —
-        // i.e. exactly one response was ever sent per request.
+        // i.e. exactly one completion was ever sent per request.
         drop(engine);
-        for rx in &receivers {
+        for handle in &submissions {
             assert!(matches!(
-                rx.try_recv(),
+                handle.receiver().try_recv(),
                 Err(mpsc::TryRecvError::Disconnected)
             ));
         }
+    });
+}
+
+#[test]
+fn shared_completion_channel_correlates_by_id() {
+    with_watchdog(60, || {
+        let engine = native_engine("shared_chan", &[("cnf_a", 4)], 2);
+        let (tx, rx) = mpsc::channel();
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            let id = engine
+                .submit_with(
+                    "cnf_a",
+                    0.5,
+                    vec![0.05 * i as f32, -0.4],
+                    1,
+                    &SubmitOptions::default(),
+                    tx.clone(),
+                )
+                .unwrap();
+            ids.push(id);
+        }
+        drop(tx);
+        let mut seen = Vec::new();
+        for done in rx {
+            assert!(done.result.is_ok(), "{done:?}");
+            seen.push(done.id);
+        }
+        seen.sort_unstable();
+        ids.sort_unstable();
+        assert_eq!(seen, ids, "every id completed exactly once");
     });
 }
 
@@ -187,6 +406,7 @@ fn server_protocol_over_native_backend() {
         );
         assert_eq!(backend.get("workers").and_then(Value::as_usize), Some(2));
 
+        // legacy v0 line: still answered, flat output, deprecation notice
         let resp = server::handle_line(
             &engine,
             r#"{"task":"cnf_a","budget":0.5,"input":[0.5,0.5]}"#,
@@ -194,6 +414,21 @@ fn server_protocol_over_native_backend() {
         assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp:?}");
         let out = resp.get("output").unwrap().as_arr().unwrap();
         assert_eq!(out.len(), 2);
+        assert!(out[0].as_f64().is_some(), "v0 output stays flat");
+        assert!(resp.get("deprecation").is_some());
+        assert!(resp.get("v").is_none());
+
+        // v1 line: versioned reply, nested output, client id echoed
+        let resp = server::handle_line(
+            &engine,
+            r#"{"v":1,"id":42,"task":"cnf_a","budget":0.5,"input":[[0.5,0.5],[0.1,-0.2]]}"#,
+        );
+        assert_eq!(resp.get("ok").and_then(Value::as_bool), Some(true), "{resp:?}");
+        assert_eq!(resp.get("v").and_then(Value::as_usize), Some(1));
+        assert_eq!(resp.get("id").and_then(Value::as_usize), Some(42));
+        let rows = resp.get("output").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].as_arr().unwrap().len(), 2);
 
         let metrics = server::handle_line(&engine, r#"{"cmd":"metrics"}"#);
         assert_eq!(
@@ -202,10 +437,63 @@ fn server_protocol_over_native_backend() {
         );
         let report = metrics.get("report").unwrap().as_str().unwrap().to_string();
         assert!(report.contains("requests="), "{report}");
+        // queue depths per (task, variant) are part of the metrics surface
+        let queues = metrics.get("queues").unwrap().as_arr().unwrap();
+        assert!(queues
+            .iter()
+            .all(|q| q.get("task").is_some() && q.get("rows").is_some()));
 
-        // malformed request → JSON error, not a panic
+        // malformed request → structured JSON error with a stable code
         let bad = server::handle_line(&engine, r#"{"task":"nope","input":[1]}"#);
         assert_eq!(bad.get("ok").and_then(Value::as_bool), Some(false));
+        assert_eq!(
+            bad.get("code").and_then(Value::as_str),
+            Some("unknown_task"),
+            "{bad:?}"
+        );
+        let bad = server::handle_line(&engine, r#"{"cmd":"reboot"}"#);
+        assert_eq!(bad.get("code").and_then(Value::as_str), Some("unknown_cmd"));
+        let bad = server::handle_line(
+            &engine,
+            r#"{"v":1,"task":"cnf_a","budget":"0.05","input":[1,2]}"#,
+        );
+        assert_eq!(bad.get("code").and_then(Value::as_str), Some("bad_request"));
         let _ = json::to_string(&bad);
+    });
+}
+
+#[test]
+fn metrics_expose_queue_depths_while_queued() {
+    with_watchdog(60, || {
+        // max_wait 10s + cap 4: submissions sit visibly in their queue
+        let engine = native_engine_wait(
+            "depths",
+            &[("cnf_a", 4)],
+            2,
+            Duration::from_secs(10),
+        );
+        let _h1 = engine.submit("cnf_a", 0.5, vec![0.1, 0.2]).unwrap();
+        let _h2 = engine
+            .submit_opts("cnf_a", 0.5, vec![0.1, 0.2, 0.3, 0.4], 2, &SubmitOptions::default())
+            .unwrap();
+        let depths = engine.queue_depths();
+        let d = depths
+            .iter()
+            .find(|d| d.task == "cnf_a" && d.variant == "euler_k2")
+            .expect("queue exists");
+        assert_eq!(d.requests, 2);
+        assert_eq!(d.rows, 3);
+        // the metrics cmd carries the same numbers
+        let m = server::handle_line(&engine, r#"{"cmd":"metrics"}"#);
+        let queues = m.get("queues").unwrap().as_arr().unwrap();
+        let q = queues
+            .iter()
+            .find(|q| q.get("variant").and_then(Value::as_str) == Some("euler_k2"))
+            .unwrap();
+        assert_eq!(q.get("rows").and_then(Value::as_usize), Some(3));
+        // dropping the engine abandons the queued requests: handles see a
+        // disconnect, not a hang
+        drop(engine);
+        assert!(_h1.wait().is_err());
     });
 }

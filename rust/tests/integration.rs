@@ -293,7 +293,7 @@ fn engine_serves_mixed_budgets() {
     assert_eq!(tight.output.len(), 2);
 
     // batch of concurrent submissions all get answers
-    let rxs: Vec<_> = (0..32)
+    let handles: Vec<_> = (0..32)
         .map(|i| {
             engine
                 .submit("cnf_rings", 0.08, vec![0.01 * i as f32, -0.5])
@@ -301,8 +301,8 @@ fn engine_serves_mixed_budgets() {
         })
         .collect();
     let mut fills = Vec::new();
-    for rx in rxs {
-        let resp = rx.recv().unwrap();
+    for h in handles {
+        let resp = h.wait().unwrap();
         assert!(resp.mape <= 0.08);
         fills.push(resp.batch_fill);
     }
@@ -318,9 +318,11 @@ fn engine_rejects_bad_requests() {
         return;
     }
     let engine = Engine::with_defaults().unwrap();
-    assert!(engine.submit("no_such_task", 0.1, vec![0.0]).is_err());
+    let e = engine.submit("no_such_task", 0.1, vec![0.0]).unwrap_err();
+    assert_eq!(e.code, hypersolvers::api::ErrorCode::UnknownTask);
     // wrong sample dimension
-    assert!(engine.submit("cnf_rings", 0.1, vec![0.0; 5]).is_err());
+    let e = engine.submit("cnf_rings", 0.1, vec![0.0; 5]).unwrap_err();
+    assert_eq!(e.code, hypersolvers::api::ErrorCode::ShapeMismatch);
 }
 
 #[test]
