@@ -33,7 +33,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hypersolvers::api::v1::{InferReply, InferRequest};
-use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy};
+use hypersolvers::coordinator::{
+    server, Engine, EngineConfig, Policy, Priority, SloConfig, SubmitOptions,
+};
 use hypersolvers::data::workload::WorkloadSpec;
 use hypersolvers::runtime::{BackendKind, Manifest};
 use hypersolvers::tensor;
@@ -67,6 +69,22 @@ fn main() {
             "0",
             "when > 0, rerun every scenario with the row-block matmul pool at \
              this size and emit paired off/on rows",
+        )
+        .opt(
+            "overload-factor",
+            "3",
+            "open-loop overload scenario: offered rate as a multiple of \
+             measured capacity (native backend only; 0 disables)",
+        )
+        .opt(
+            "overload-deadline-ms",
+            "200",
+            "per-request deadline of the overload scenario",
+        )
+        .opt(
+            "overload-secs",
+            "1",
+            "offered-load duration of each overload run",
         )
         .parse_env();
 
@@ -132,6 +150,7 @@ fn main() {
         policy: Policy::MinMacs,
         backend,
         workers,
+        ..Default::default()
     };
 
     // paired matmul-pool modes: 0 (off) always, plus --matmul-threads on.
@@ -383,6 +402,195 @@ fn main() {
         );
     }
 
+    // ---- open-loop overload: SLO admission control + shedding ----
+    //
+    // A heavy synthetic task (128-wide MLP field, dopri5-pinned) gives the
+    // engine a finite capacity; the scenario then *offers* a multiple of it
+    // open-loop — requests keep arriving whether or not earlier ones
+    // finished, the regime where closed-loop benches can't see overload.
+    // Run once with every SLO defence off (baseline) and once with
+    // admission + shedding on; goodput = deadline-met completions over all
+    // submitted requests, rejected/shed ones counted as failed. Shedding
+    // must *raise* goodput: the baseline burns capacity on rows that are
+    // already dead on arrival.
+    let overload_factor = args.get_f64("overload-factor");
+    let mut overload_headline: Option<(f64, f64)> = None; // (shed-on, shed-off)
+    if overload_factor > 0.0 && matches!(backend, BackendKind::Native) {
+        let deadline = Duration::from_millis(args.get_usize("overload-deadline-ms") as u64);
+        let offer_secs = args.get_f64("overload-secs").max(0.1);
+        let heavy_task = "cnf_heavy";
+        let heavy_dir = fixtures::temp_heavy_native_artifacts("bench_overload", heavy_task, 16)
+            .expect("write heavy fixtures");
+        let heavy_manifest = Manifest::load(&heavy_dir).expect("heavy manifest");
+        let b_cap = heavy_manifest.task(heavy_task).unwrap().batch();
+        let heavy_config = |slo: SloConfig| EngineConfig {
+            artifacts_dir: heavy_dir.clone(),
+            max_wait: Duration::from_millis(2),
+            policy: Policy::MinMacs,
+            backend,
+            workers: args.get_usize("workers"),
+            slo,
+        };
+        let dopri = |deadline: Option<Duration>, priority: Priority| SubmitOptions {
+            variant: Some("dopri5".into()),
+            deadline,
+            priority,
+            ..Default::default()
+        };
+
+        // capacity: sequential full-batch submissions on a warm engine;
+        // the first (cold) batch is excluded
+        let engine = Engine::new(heavy_config(SloConfig::default())).unwrap();
+        engine.warmup(heavy_task).unwrap();
+        let mut rng = Rng::new(11);
+        let mut walls = Vec::new();
+        for _ in 0..6 {
+            let input: Vec<f32> = (0..b_cap * 2).map(|_| rng.normal_f32()).collect();
+            let t0 = Instant::now();
+            engine
+                .submit_opts(heavy_task, 0.5, input, b_cap, &dopri(None, Priority::Normal))
+                .unwrap()
+                .wait()
+                .unwrap();
+            walls.push(t0.elapsed().as_secs_f64());
+        }
+        let steady = &walls[1..];
+        let capacity_rows_s = b_cap as f64 * steady.len() as f64 / steady.iter().sum::<f64>();
+        drop(engine);
+
+        let offered_rps = overload_factor * capacity_rows_s;
+        let n_req = ((offered_rps * offer_secs) as usize).clamp(b_cap * 4, 50_000);
+        // high-water: roughly half a deadline's worth of queue — deep
+        // enough to keep batches full, shallow enough that surviving rows
+        // still dispatch inside the deadline
+        let high_water =
+            ((capacity_rows_s * deadline.as_secs_f64() / 2.0) as usize).max(2 * b_cap);
+        println!(
+            "\n[overload] capacity ≈ {capacity_rows_s:.0} rows/s → offering \
+             {offered_rps:.0} single-row req/s (×{overload_factor}) for \
+             {offer_secs}s, deadline {deadline:?}, high-water {high_water} rows"
+        );
+
+        let mut otable = Table::new(&[
+            "scenario", "reqs", "offered rps", "accepted", "rejected", "shed",
+            "misses", "goodput",
+        ]);
+        let mut goodput_pair = (0.0f64, 0.0f64); // (shed-off, shed-on)
+        for shed_on in [false, true] {
+            let slo = if shed_on {
+                SloConfig {
+                    admission: true,
+                    shed_high_water_rows: high_water,
+                    client_quota_rows: 0,
+                }
+            } else {
+                SloConfig {
+                    admission: false,
+                    shed_high_water_rows: 0,
+                    client_quota_rows: 0,
+                }
+            };
+            let scenario = format!("overload shed={}", if shed_on { "on" } else { "off" });
+            let engine = Engine::new(heavy_config(slo)).unwrap();
+            engine.warmup(heavy_task).unwrap();
+            let mut rng = Rng::new(12);
+            let mut handles = Vec::with_capacity(n_req);
+            let mut rejected = 0usize;
+            let t0 = Instant::now();
+            for i in 0..n_req {
+                let target = t0 + Duration::from_secs_f64(i as f64 / offered_rps);
+                loop {
+                    let now = Instant::now();
+                    if now >= target {
+                        break;
+                    }
+                    if target - now > Duration::from_millis(1) {
+                        std::thread::sleep(target - now - Duration::from_micros(500));
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                // mixed priority classes: shedding evicts low first
+                let priority = match i % 3 {
+                    0 => Priority::Low,
+                    1 => Priority::Normal,
+                    _ => Priority::High,
+                };
+                let input = vec![rng.normal_f32(), rng.normal_f32()];
+                match engine.submit_opts(
+                    heavy_task,
+                    0.5,
+                    input,
+                    1,
+                    &dopri(Some(deadline), priority),
+                ) {
+                    Ok(h) => handles.push(h),
+                    Err(_) => rejected += 1,
+                }
+            }
+            let accepted = handles.len();
+            let mut met = 0usize;
+            for h in handles {
+                if let Ok(resp) = h.wait() {
+                    if resp.latency <= deadline {
+                        met += 1;
+                    }
+                }
+            }
+            let metrics = engine.metrics();
+            let shed = metrics.shed.load(Relaxed);
+            let misses = metrics.deadline_misses.load(Relaxed);
+            let goodput = met as f64 / n_req as f64;
+            if shed_on {
+                goodput_pair.1 = goodput;
+            } else {
+                goodput_pair.0 = goodput;
+            }
+            otable.row(&[
+                scenario.clone(),
+                n_req.to_string(),
+                format!("{offered_rps:.0}"),
+                accepted.to_string(),
+                rejected.to_string(),
+                shed.to_string(),
+                misses.to_string(),
+                format!("{goodput:.3}"),
+            ]);
+            scenarios_json.push(json::obj(vec![
+                ("scenario", json::s(&scenario)),
+                ("mode", json::s("inproc_openloop_overload")),
+                ("task", json::s(heavy_task)),
+                ("shedding", Value::Bool(shed_on)),
+                ("overload_factor", json::num(overload_factor)),
+                ("deadline_ms", json::num(deadline.as_secs_f64() * 1e3)),
+                ("capacity_rows_per_s", json::num(capacity_rows_s)),
+                ("offered_rps", json::num(offered_rps)),
+                ("requests", json::num(n_req as f64)),
+                ("accepted", json::num(accepted as f64)),
+                ("rejected_at_submit", json::num(rejected as f64)),
+                ("shed", json::num(shed as f64)),
+                ("deadline_misses", json::num(misses as f64)),
+                ("deadline_met", json::num(met as f64)),
+                ("goodput", json::num(goodput)),
+            ]));
+            println!("[{scenario}] {}", metrics.report());
+        }
+        println!();
+        otable.print();
+        println!(
+            "\ngoodput = deadline-met completions / all submitted requests \
+             (admission rejects and shed rows count as failures). The shed=on \
+             row must beat shed=off: refusing doomed work up front keeps \
+             capacity on requests that can still meet their deadline."
+        );
+        overload_headline = Some((goodput_pair.1, goodput_pair.0));
+    } else if overload_factor > 0.0 {
+        println!(
+            "\n[overload] skipped: the scenario needs the native backend's \
+             synthetic heavy fixture"
+        );
+    }
+
     println!();
     table.print();
     println!(
@@ -415,14 +623,17 @@ fn main() {
         Err(e) => eprintln!("\nfailed to write bench JSON: {e}"),
     }
     if let Some((p50, rps)) = headline {
-        let entry = benchkit::bench_doc(
-            "serving_throughput",
-            vec![
-                ("backend", json::s(&backend.to_string())),
-                ("mixed_p50_ms", json::num(p50)),
-                ("mixed_throughput_rps", json::num(rps)),
-            ],
-        );
+        let mut fields = vec![
+            ("backend", json::s(&backend.to_string())),
+            ("mixed_p50_ms", json::num(p50)),
+            ("mixed_throughput_rps", json::num(rps)),
+        ];
+        if let Some((goodput_on, goodput_off)) = overload_headline {
+            fields.push(("overload_goodput", json::num(goodput_on)));
+            fields.push(("overload_goodput_baseline", json::num(goodput_off)));
+            fields.push(("overload_factor", json::num(overload_factor)));
+        }
+        let entry = benchkit::bench_doc("serving_throughput", fields);
         match benchkit::append_trajectory(entry) {
             Ok(path) => println!("appended to {}", path.display()),
             Err(e) => eprintln!("failed to append bench trajectory: {e}"),

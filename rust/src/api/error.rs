@@ -33,11 +33,16 @@ pub enum ErrorCode {
     /// Server-side invariant violation (manifest drift, short backend
     /// output, dropped channels).
     Internal,
+    /// The engine refused or dropped the request under load: admission
+    /// control predicted its deadline unmeetable given the queue, the
+    /// client's row quota was exhausted, or the request was shed at the
+    /// queued-rows high-water mark.
+    Overloaded,
 }
 
 impl ErrorCode {
     /// Every code, for exhaustive protocol tests.
-    pub const ALL: [ErrorCode; 8] = [
+    pub const ALL: [ErrorCode; 9] = [
         ErrorCode::BadRequest,
         ErrorCode::UnknownTask,
         ErrorCode::UnknownVariant,
@@ -46,6 +51,7 @@ impl ErrorCode {
         ErrorCode::UnknownCmd,
         ErrorCode::ExecFailed,
         ErrorCode::Internal,
+        ErrorCode::Overloaded,
     ];
 
     /// The frozen wire string.
@@ -59,6 +65,7 @@ impl ErrorCode {
             ErrorCode::UnknownCmd => "unknown_cmd",
             ErrorCode::ExecFailed => "exec_failed",
             ErrorCode::Internal => "internal",
+            ErrorCode::Overloaded => "overloaded",
         }
     }
 
@@ -119,6 +126,10 @@ impl ApiError {
 
     pub fn internal(m: impl Into<String>) -> ApiError {
         ApiError::new(ErrorCode::Internal, m)
+    }
+
+    pub fn overloaded(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::Overloaded, m)
     }
 
     /// Map a crate-level execution error onto the API code space (batch

@@ -25,7 +25,12 @@
 //! overrides the engine default axis), `variant` (pin an exact variant,
 //! bypassing the policy), `deadline_us` (fail fast with
 //! `deadline_exceeded` if the request has not *dispatched* within this
-//! many µs — an execution already in flight is never cancelled).
+//! many µs — an execution already in flight is never cancelled),
+//! `priority` (`"low" | "normal" | "high"`, breaks dispatch ties and
+//! orders overload shedding; absent = `"normal"`), `client` (caller
+//! identity string for per-client row quotas; absent = unattributed,
+//! quota-exempt). An overloaded engine answers with the `overloaded`
+//! code *before* queueing work it predicts cannot meet its deadline.
 //!
 //! **Versioning:** every v1 line carries `"v": 1`. A line without `"v"`
 //! is a legacy v0 request (single flat sample, no id/policy/variant/
@@ -37,7 +42,7 @@
 
 use crate::api::error::{ApiError, ErrorCode};
 use crate::coordinator::policy::Policy;
-use crate::coordinator::request::Response;
+use crate::coordinator::request::{Priority, Response};
 use crate::util::json::{self, Value};
 
 /// The protocol version this module speaks.
@@ -68,6 +73,11 @@ pub struct InferRequest {
     pub variant: Option<String>,
     /// Fail fast with `deadline_exceeded` if not dispatched in time.
     pub deadline_us: Option<u64>,
+    /// Priority class ("low"/"normal"/"high" on the wire); ties in EDF
+    /// dispatch and shedding order. Defaults to [`Priority::Normal`].
+    pub priority: Priority,
+    /// Caller identity for per-client row quotas (absent = exempt).
+    pub client: Option<String>,
 }
 
 impl InferRequest {
@@ -84,6 +94,8 @@ impl InferRequest {
             policy: None,
             variant: None,
             deadline_us: None,
+            priority: Priority::default(),
+            client: None,
         }
     }
 
@@ -110,6 +122,8 @@ impl InferRequest {
             policy: None,
             variant: None,
             deadline_us: None,
+            priority: Priority::default(),
+            client: None,
         }
     }
 
@@ -122,6 +136,8 @@ impl InferRequest {
             policy: self.policy,
             variant: self.variant.clone(),
             deadline: self.deadline_us.map(std::time::Duration::from_micros),
+            priority: self.priority,
+            client: self.client.clone(),
         }
     }
 }
@@ -273,7 +289,7 @@ pub fn decode_request(v: &Value) -> Result<(InferRequest, u8), ApiError> {
     // the v1-only fields: on v0 lines they are ignored entirely, exactly
     // as the pre-v1 server (which read only task/budget/input) did — a
     // legacy client whose lines carry extraneous keys must keep working
-    let (id, policy, variant, deadline_us) = if version == 1 {
+    let (id, policy, variant, deadline_us, priority, client) = if version == 1 {
         let policy = match field_str(v, "policy")? {
             None => None,
             Some("nfe") => Some(Policy::MinNfe),
@@ -284,14 +300,24 @@ pub fn decode_request(v: &Value) -> Result<(InferRequest, u8), ApiError> {
                 )))
             }
         };
+        let priority = match field_str(v, "priority")? {
+            None => Priority::default(),
+            Some(s) => Priority::from_wire(s).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "priority must be \"low\", \"normal\" or \"high\", got {s:?}"
+                ))
+            })?,
+        };
         (
             field_u64(v, "id")?,
             policy,
             field_str(v, "variant")?.map(str::to_string),
             field_u64(v, "deadline_us")?,
+            priority,
+            field_str(v, "client")?.map(str::to_string),
         )
     } else {
-        (None, None, None, None)
+        (None, None, None, None, Priority::default(), None)
     };
 
     Ok((
@@ -305,6 +331,8 @@ pub fn decode_request(v: &Value) -> Result<(InferRequest, u8), ApiError> {
             policy,
             variant,
             deadline_us,
+            priority,
+            client,
         },
         version,
     ))
@@ -337,6 +365,14 @@ pub fn encode_request(r: &InferRequest) -> Value {
     }
     if let Some(d) = r.deadline_us {
         fields.push(("deadline_us", json::num(d as f64)));
+    }
+    // the default class is omitted, keeping pre-priority golden lines
+    // byte-identical
+    if r.priority != Priority::Normal {
+        fields.push(("priority", json::s(r.priority.as_str())));
+    }
+    if let Some(c) = &r.client {
+        fields.push(("client", json::s(c)));
     }
     json::obj(fields)
 }
@@ -494,9 +530,17 @@ mod tests {
         let mut r = InferRequest::batch("t", 0.1, 3, vec![0.5; 6]);
         r.id = Some(3);
         r.deadline_us = Some(100);
+        r.priority = Priority::High;
+        r.client = Some("tenant-a".into());
         let (back, version) = decode_request(&encode_request(&r)).unwrap();
         assert_eq!(version, 1);
         assert_eq!(back, r);
+        // the normal class is omitted on the wire and restored on decode
+        let r = InferRequest::single("t", 0.1, vec![1.0]);
+        let enc = encode_request(&r);
+        assert!(enc.get("priority").is_none() && enc.get("client").is_none());
+        let (back, _) = decode_request(&enc).unwrap();
+        assert_eq!(back.priority, Priority::Normal);
         // infinite budget is omitted on the wire and restored on decode
         let r = InferRequest::single("t", f32::INFINITY, vec![1.0]);
         let enc = encode_request(&r);
@@ -540,13 +584,15 @@ mod tests {
         // even when their values would be invalid in v1
         let v = json::parse(
             r#"{"task":"t","input":[1,2],"policy":"speed","variant":7,
-                "deadline_us":-1,"id":"x"}"#,
+                "deadline_us":-1,"id":"x","priority":"urgent","client":3}"#,
         )
         .unwrap();
         let (r, version) = decode_request(&v).unwrap();
         assert_eq!(version, 0);
         assert!(r.id.is_none() && r.policy.is_none());
         assert!(r.variant.is_none() && r.deadline_us.is_none());
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.client.is_none());
     }
 
     #[test]
@@ -563,6 +609,9 @@ mod tests {
             r#"{"v":1,"task":"t","deadline_us":1.5,"input":[1]}"#,
             r#"{"v":1,"task":"t","id":-1,"input":[1]}"#,
             r#"{"v":1,"task":"t","variant":7,"input":[1]}"#,
+            r#"{"v":1,"task":"t","priority":"urgent","input":[1]}"#,
+            r#"{"v":1,"task":"t","priority":2,"input":[1]}"#,
+            r#"{"v":1,"task":"t","client":7,"input":[1]}"#,
             r#"{"v":1,"task":"t","input":[[1,2],[3]]}"#,
             r#"{"v":1,"task":"t","input":[[[1]]]}"#,
             r#"{"v":1,"task":"t","input":[]}"#,

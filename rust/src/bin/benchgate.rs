@@ -9,7 +9,10 @@
 //!   `--p50-slack ×` the previous run;
 //! * the trained hypersolver dropping off the NFE Pareto front
 //!   (`hyperbench_pareto.tasks[*].hyper_on_nfe_front` true → false);
-//! * the serve-path speedup vs the tightest dopri5 collapsing below 1×.
+//! * the serve-path speedup vs the tightest dopri5 collapsing below 1×;
+//! * overload goodput (`serving_throughput.overload_goodput`): shedding-on
+//!   must strictly beat the shedding-off baseline within a run, and must
+//!   not drop more than `--goodput-drop` (absolute) run-over-run.
 //!
 //! CI restores the previous run's trajectory via actions/cache before the
 //! benches run, so the file genuinely accumulates and this diff is
@@ -38,6 +41,12 @@ fn main() {
             "allowed serving-p50 growth factor run-over-run (wall clock on \
              shared runners is noisy; keep this generous)",
         )
+        .opt(
+            "goodput-drop",
+            "0.15",
+            "allowed absolute drop of overload goodput run-over-run \
+             (goodput is in [0, 1])",
+        )
         .parse_env();
 
     let path = std::env::var("BENCH_TRAJECTORY")
@@ -45,6 +54,11 @@ fn main() {
     let slack = args.get_f64("p50-slack");
     if !(slack.is_finite() && slack >= 1.0) {
         eprintln!("error: --p50-slack must be a finite factor ≥ 1, got {slack}");
+        std::process::exit(2);
+    }
+    let goodput_drop = args.get_f64("goodput-drop");
+    if !(goodput_drop.is_finite() && (0.0..=1.0).contains(&goodput_drop)) {
+        eprintln!("error: --goodput-drop must be in [0, 1], got {goodput_drop}");
         std::process::exit(2);
     }
 
@@ -74,11 +88,11 @@ fn main() {
     };
 
     println!(
-        "benchgate: {} entries in {}, p50 slack {slack}×",
+        "benchgate: {} entries in {}, p50 slack {slack}×, goodput drop ≤ {goodput_drop}",
         entries.len(),
         path.display()
     );
-    let report = benchkit::trajectory_gate(&entries, slack);
+    let report = benchkit::trajectory_gate(&entries, slack, goodput_drop);
     for line in &report.checks {
         println!("  ok  {line}");
     }

@@ -13,7 +13,7 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::request::{CompletionSender, Request};
+use crate::coordinator::request::{CompletionSender, Priority, Request};
 
 /// How far ahead of a request's deadline its queue is flushed, covering
 /// the condvar wake-up + pop + batch assembly so dispatch starts before
@@ -43,6 +43,20 @@ pub fn pad_batch(samples: &[&[f32]], cap: usize, dim: usize) -> Vec<f32> {
 pub struct Pending {
     pub req: Request,
     pub done: CompletionSender,
+}
+
+impl std::fmt::Debug for Pending {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pending").field("req", &self.req).finish_non_exhaustive()
+    }
+}
+
+/// Rows a queued request occupies in every accounting path — push, drain,
+/// shed and quota bookkeeping all route through this one definition, so a
+/// zero-sample request (which still occupies a batch slot) can never drift
+/// `Queue::rows` against the cap/readiness math.
+pub fn rows(p: &Pending) -> usize {
+    p.req.samples.max(1)
 }
 
 /// Queue key: (task, variant) — requests routed to the same executable batch
@@ -87,6 +101,10 @@ struct Queue {
 pub struct Batcher {
     queues: HashMap<QueueKey, Queue>,
     max_wait: Duration,
+    /// per-client queued-row quota (0 = unlimited)
+    quota_rows: usize,
+    /// rows currently queued per client identity
+    client_rows: HashMap<String, usize>,
 }
 
 impl Batcher {
@@ -94,7 +112,18 @@ impl Batcher {
         Batcher {
             queues: HashMap::new(),
             max_wait,
+            quota_rows: 0,
+            client_rows: HashMap::new(),
         }
+    }
+
+    /// Cap the rows any single client may hold queued at once (0 =
+    /// unlimited). Requests carrying a `client` identity are rejected at
+    /// [`Self::push`] once the quota is reached; unattributed requests
+    /// are exempt.
+    pub fn with_client_quota(mut self, rows: usize) -> Batcher {
+        self.quota_rows = rows;
+        self
     }
 
     /// Register the executable batch size for a queue (first sight).
@@ -107,11 +136,33 @@ impl Batcher {
         });
     }
 
-    pub fn push(&mut self, key: &QueueKey, p: Pending) {
+    /// Enqueue a request. `Err` hands the request back untouched when the
+    /// client's row quota would be exceeded — the caller owns the refusal
+    /// (the engine maps it onto `overloaded`).
+    pub fn push(&mut self, key: &QueueKey, p: Pending) -> Result<(), Pending> {
+        if self.quota_rows > 0 {
+            if let Some(client) = &p.req.client {
+                let used = self.client_rows.get(client).copied().unwrap_or(0);
+                if used + rows(&p) > self.quota_rows {
+                    return Err(p);
+                }
+            }
+        }
         let q = self.queues.get_mut(key).expect("ensure_queue before push");
-        q.rows += p.req.samples;
+        if let Some(client) = &p.req.client {
+            *self.client_rows.entry(client.clone()).or_insert(0) += rows(&p);
+        }
+        q.rows += rows(&p);
         q.deadline_count += usize::from(p.req.deadline.is_some());
         q.items.push_back(p);
+        Ok(())
+    }
+
+    /// Rows currently queued on one (task, variant) queue (0 when absent).
+    /// Admission control reads this to predict the wait ahead of a new
+    /// request before enqueueing it.
+    pub fn queue_rows(&self, key: &QueueKey) -> usize {
+        self.queues.get(key).map(|q| q.rows).unwrap_or(0)
     }
 
     /// Queued requests across all queues.
@@ -175,6 +226,12 @@ impl Batcher {
     /// Pop the single most-urgent ready batch (rows full, or a flush
     /// deadline passed) whose key is not in `busy`.
     ///
+    /// Dispatch is earliest-deadline-first: among ready queues the one
+    /// whose flush/deadline point is earliest wins (for deadline-free
+    /// queues that point is `front.t_submit + max_wait`, which reduces to
+    /// the old oldest-first order), and the front request's priority class
+    /// breaks exact ties — `High` beats `Normal` beats `Low`.
+    ///
     /// This is the worker-pool pop: each dispatch worker takes one batch at
     /// a time, and `busy` carries the keys currently executing on other
     /// workers — per-queue affinity, so a queue's batches never run (or
@@ -182,7 +239,7 @@ impl Batcher {
     /// queues execute concurrently. Requests are never split: the drain
     /// stops before a request whose rows would overflow the cap.
     pub fn pop_ready(&mut self, now: Instant, busy: &HashSet<QueueKey>) -> Option<ReadyBatch> {
-        let mut best: Option<(Instant, QueueKey)> = None;
+        let mut best: Option<((Instant, std::cmp::Reverse<Priority>), QueueKey)> = None;
         for (key, q) in &self.queues {
             if busy.contains(key) {
                 continue;
@@ -191,39 +248,91 @@ impl Batcher {
                 Some(p) => p,
                 None => continue,
             };
-            let ready = q.rows >= q.cap
-                || self
-                    .queue_flush_deadline(q)
-                    .map(|d| now >= d)
-                    .unwrap_or(false);
+            let urgency = match self.queue_flush_deadline(q) {
+                Some(d) => d,
+                None => continue,
+            };
+            let ready = q.rows >= q.cap || now >= urgency;
             if !ready {
                 continue;
             }
-            let urgency = front.req.t_submit;
-            if best.as_ref().map(|(t, _)| urgency < *t).unwrap_or(true) {
-                best = Some((urgency, key.clone()));
+            let cand = (urgency, std::cmp::Reverse(front.req.priority));
+            if best.as_ref().map(|(b, _)| cand < *b).unwrap_or(true) {
+                best = Some((cand, key.clone()));
             }
         }
         let (_, key) = best?;
         let q = self.queues.get_mut(&key).expect("queue exists");
         let cap = q.cap;
         let mut items: Vec<Pending> = Vec::new();
-        let mut rows = 0usize;
+        let mut taken = 0usize;
         while let Some(p) = q.items.front() {
-            let r = p.req.samples.max(1);
-            if !items.is_empty() && rows + r > cap {
+            let r = rows(p);
+            if !items.is_empty() && taken + r > cap {
                 break;
             }
-            rows += r;
+            taken += r;
             let p = q.items.pop_front().expect("front exists");
-            q.rows -= p.req.samples;
+            q.rows -= rows(&p);
             q.deadline_count -= usize::from(p.req.deadline.is_some());
+            if let Some(client) = &p.req.client {
+                if let Some(c) = self.client_rows.get_mut(client) {
+                    *c = c.saturating_sub(rows(&p));
+                    if *c == 0 {
+                        self.client_rows.remove(client);
+                    }
+                }
+            }
             items.push(p);
-            if rows >= cap {
+            if taken >= cap {
                 break;
             }
         }
         Some(ReadyBatch { key, items })
+    }
+
+    /// Shed queued requests until total queued rows drop to `target_rows`,
+    /// removing lowest-priority, latest-deadline victims first (a request
+    /// without a deadline is "latest" within its class — it promised the
+    /// least, so it is sacrificed first). Returns the shed requests so the
+    /// engine can fail their completions with `overloaded`; row, deadline
+    /// and quota accounting all stay consistent.
+    pub fn shed_to(&mut self, target_rows: usize) -> Vec<Pending> {
+        let far = Instant::now() + Duration::from_secs(365 * 24 * 3600);
+        let mut shed = Vec::new();
+        while self.queued_rows() > target_rows {
+            let mut victim: Option<((Priority, std::cmp::Reverse<Instant>), QueueKey, usize)> =
+                None;
+            for (key, q) in &self.queues {
+                for (i, p) in q.items.iter().enumerate() {
+                    let cand = (
+                        p.req.priority,
+                        std::cmp::Reverse(p.req.deadline.unwrap_or(far)),
+                    );
+                    if victim.as_ref().map(|(v, _, _)| cand < *v).unwrap_or(true) {
+                        victim = Some((cand, key.clone(), i));
+                    }
+                }
+            }
+            let (_, key, i) = match victim {
+                Some(v) => v,
+                None => break,
+            };
+            let q = self.queues.get_mut(&key).expect("queue exists");
+            let p = q.items.remove(i).expect("victim index exists");
+            q.rows -= rows(&p);
+            q.deadline_count -= usize::from(p.req.deadline.is_some());
+            if let Some(client) = &p.req.client {
+                if let Some(c) = self.client_rows.get_mut(client) {
+                    *c = c.saturating_sub(rows(&p));
+                    if *c == 0 {
+                        self.client_rows.remove(client);
+                    }
+                }
+            }
+            shed.push(p);
+        }
+        shed
     }
 
     /// Earliest flush deadline across all queues (None when idle) —
@@ -281,7 +390,7 @@ mod tests {
         for i in 0..7 {
             let (p, _rx) = pending(i, now);
             std::mem::forget(_rx);
-            b.push(&key(), p);
+            b.push(&key(), p).unwrap();
         }
         // 7 queued, batch 3 → two full batches pop, one item stays queued
         // (not full, deadline far away)
@@ -301,7 +410,7 @@ mod tests {
         for (i, rows) in [(0u64, 2usize), (1, 1), (2, 2), (3, 3)] {
             let (p, _rx) = pending_rows(i, now, rows);
             std::mem::forget(_rx);
-            b.push(&key(), p);
+            b.push(&key(), p).unwrap();
         }
         let busy = HashSet::new();
         // first pop: 2 + 1 = 3 rows, then the 2-row request would overflow
@@ -331,7 +440,7 @@ mod tests {
         let (mut p, _rx) = pending(0, now);
         std::mem::forget(_rx);
         p.req.deadline = Some(now + Duration::from_millis(5));
-        b.push(&key(), p);
+        b.push(&key(), p).unwrap();
         // not ready yet; flush point is margin-before-deadline, not max_wait
         assert!(b.pop_ready(now, &HashSet::new()).is_none());
         let dl = b.next_deadline().unwrap();
@@ -357,7 +466,7 @@ mod tests {
         for (i, rows) in [(0u64, 2usize), (1, 3)] {
             let (p, _rx) = pending_rows(i, now, rows);
             std::mem::forget(_rx);
-            b.push(&ka, p);
+            b.push(&ka, p).unwrap();
         }
         let d = b.depths();
         assert_eq!(d.len(), 2);
@@ -372,7 +481,7 @@ mod tests {
         let old = Instant::now() - Duration::from_millis(50);
         let (p, _rx) = pending(0, old);
         std::mem::forget(_rx);
-        b.push(&key(), p);
+        b.push(&key(), p).unwrap();
         let batch = b.pop_ready(Instant::now(), &HashSet::new()).unwrap();
         assert_eq!(batch.items.len(), 1);
         assert_eq!(b.queued(), 0);
@@ -385,7 +494,7 @@ mod tests {
         let now = Instant::now();
         let (p, _rx) = pending(0, now);
         std::mem::forget(_rx);
-        b.push(&key(), p);
+        b.push(&key(), p).unwrap();
         assert!(b.pop_ready(now, &HashSet::new()).is_none());
         assert_eq!(b.queued(), 1);
         let dl = b.next_deadline().unwrap();
@@ -406,7 +515,7 @@ mod tests {
             for i in 0..4 {
                 let (p, _rx) = pending((k * 10 + i) as u64, old);
                 std::mem::forget(_rx);
-                b.push(&key_n(k), p);
+                b.push(&key_n(k), p).unwrap();
             }
         }
         // both queues full; with one busy, pop must return the other
@@ -432,10 +541,10 @@ mod tests {
         // key 0: old item (expired deadline), key 1: fresh item
         let (p, _rx) = pending(0, now - Duration::from_secs(1));
         std::mem::forget(_rx);
-        b.push(&key_n(0), p);
+        b.push(&key_n(0), p).unwrap();
         let (p, _rx) = pending(1, now);
         std::mem::forget(_rx);
-        b.push(&key_n(1), p);
+        b.push(&key_n(1), p).unwrap();
 
         let mut busy = HashSet::new();
         busy.insert(key_n(0));
@@ -464,7 +573,7 @@ mod tests {
                 total_rows += rows;
                 let (p, _rx) = pending_rows(i as u64, old, rows);
                 std::mem::forget(_rx);
-                b.push(&key(), p);
+                b.push(&key(), p).unwrap();
             }
             let busy = HashSet::new();
             let mut popped = 0usize;
@@ -505,7 +614,7 @@ mod tests {
                     let (p, _rx) = pending(next_id, old + Duration::from_micros(next_id));
                     std::mem::forget(_rx);
                     next_id += 1;
-                    b.push(&keys[k], p);
+                    b.push(&keys[k], p).unwrap();
                 } else if let Some(batch) = b.pop_ready(Instant::now(), &busy) {
                     let ki = keys.iter().position(|k| *k == batch.key).unwrap();
                     drained[ki].extend(batch.items.iter().map(|p| p.req.id));
@@ -553,6 +662,88 @@ mod tests {
     }
 
     #[test]
+    fn zero_sample_requests_keep_row_accounting_consistent() {
+        // regression: push used to add `samples` (0) while pop drained
+        // `samples.max(1)` (1) and decremented raw `samples` (0) — a
+        // zero-sample request would leave `q.rows` drifting against the
+        // readiness math forever. All paths now route through `rows()`.
+        let mut b = Batcher::new(Duration::from_millis(1));
+        b.ensure_queue(&key(), 4);
+        let old = Instant::now() - Duration::from_secs(1);
+        let (p, _rx) = pending_rows(0, old, 0);
+        std::mem::forget(_rx);
+        b.push(&key(), p).unwrap();
+        assert_eq!(b.queued_rows(), 1, "zero-sample request occupies one row");
+        let batch = b.pop_ready(Instant::now(), &HashSet::new()).unwrap();
+        assert_eq!(batch.items.len(), 1);
+        assert_eq!(b.queued(), 0);
+        assert_eq!(b.queued_rows(), 0, "accounting balanced after drain");
+        assert!(b.pop_ready(Instant::now(), &HashSet::new()).is_none());
+    }
+
+    #[test]
+    fn client_quota_rejects_push_and_releases_on_pop() {
+        let mut b = Batcher::new(Duration::from_millis(1)).with_client_quota(2);
+        b.ensure_queue(&key(), 8);
+        let old = Instant::now() - Duration::from_secs(1);
+        let mk = |id: u64, client: Option<&str>| {
+            let (mut p, _rx) = pending(id, old);
+            std::mem::forget(_rx);
+            p.req.client = client.map(str::to_string);
+            p
+        };
+        b.push(&key(), mk(0, Some("c1"))).unwrap();
+        b.push(&key(), mk(1, Some("c1"))).unwrap();
+        let rejected = b.push(&key(), mk(2, Some("c1"))).unwrap_err();
+        assert_eq!(rejected.req.id, 2, "request handed back untouched");
+        // other clients and unattributed requests are unaffected
+        b.push(&key(), mk(3, Some("c2"))).unwrap();
+        b.push(&key(), mk(4, None)).unwrap();
+        // draining the queue releases the quota
+        assert_eq!(
+            b.pop_ready(Instant::now(), &HashSet::new()).unwrap().items.len(),
+            4
+        );
+        b.push(&key(), mk(5, Some("c1"))).unwrap();
+    }
+
+    #[test]
+    fn shed_to_removes_lowest_priority_latest_deadline_first() {
+        let mut b = Batcher::new(Duration::from_secs(10));
+        b.ensure_queue(&key(), 64);
+        let now = Instant::now();
+        let mk = |id: u64, prio: Priority, dl: Option<Duration>| {
+            let (mut p, _rx) = pending(id, now);
+            std::mem::forget(_rx);
+            p.req.priority = prio;
+            p.req.deadline = dl.map(|d| now + d);
+            p
+        };
+        b.push(&key(), mk(0, Priority::High, None)).unwrap();
+        b.push(&key(), mk(1, Priority::Low, Some(Duration::from_millis(5))))
+            .unwrap();
+        b.push(&key(), mk(2, Priority::Low, None)).unwrap();
+        b.push(&key(), mk(3, Priority::Normal, None)).unwrap();
+        // shed to 2 rows: the no-deadline Low goes first (latest within
+        // its class), then the deadlined Low; High and Normal survive
+        let shed = b.shed_to(2);
+        assert_eq!(
+            shed.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![2, 1]
+        );
+        assert_eq!(b.queued_rows(), 2);
+        assert!(b.shed_to(2).is_empty(), "already at the mark");
+        // accounting stayed consistent: the survivors still drain
+        let batch = b
+            .pop_ready(now + Duration::from_secs(60), &HashSet::new())
+            .unwrap();
+        assert_eq!(
+            batch.items.iter().map(|p| p.req.id).collect::<Vec<_>>(),
+            vec![0, 3]
+        );
+    }
+
+    #[test]
     fn pad_batch_packs_multi_row_blocks_contiguously() {
         // a 2-row request followed by a 1-row request, cap 4
         let a = [1.0f32, 2.0, 3.0, 4.0];
@@ -585,7 +776,7 @@ mod tests {
                     let at = base + Duration::from_micros(t);
                     let (p, _rx) = pending(t, at);
                     std::mem::forget(_rx);
-                    b.push(&keys[k], p);
+                    b.push(&keys[k], p).unwrap();
                     fronts[k].push_back(at);
                     // pushing can only pull the deadline earlier or leave it
                     if let (Some(prev), Some(now)) = (prev, b.next_deadline()) {
@@ -625,7 +816,7 @@ mod tests {
             for i in 0..n {
                 let (p, _rx) = pending(i as u64, old);
                 std::mem::forget(_rx);
-                b.push(&key(), p);
+                b.push(&key(), p).unwrap();
             }
             // everything is past deadline → all must flush exactly once
             let busy = HashSet::new();

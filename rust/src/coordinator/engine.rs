@@ -19,7 +19,7 @@
 //! genuinely in parallel, on the PJRT backend pipelined up to the executor
 //! thread.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
@@ -31,10 +31,48 @@ use crate::coordinator::batcher::{
 };
 use crate::coordinator::metrics::CoordinatorMetrics;
 use crate::coordinator::policy::{select_variant, Policy};
-use crate::coordinator::request::{Completion, CompletionSender, Request, Response};
+use crate::coordinator::request::{Completion, CompletionSender, Priority, Request, Response};
 use crate::runtime::backend::{BackendKind, ExecBackend};
 use crate::runtime::manifest::Manifest;
 use crate::{log_debug, log_info, Error, Result};
+
+/// EWMA smoothing factor for the per-(task, variant) measured batch
+/// wall-clock that admission control predicts queue waits from.
+const WALL_EWMA_ALPHA: f64 = 0.3;
+
+/// Admission-control seed before the first measurement: the manifest's
+/// per-sample `nfe` × this µs/NFE guess approximates one batch wall-clock,
+/// so a cold queue still rejects obviously-unmeetable deadlines instead of
+/// admitting blind until the first batch lands.
+const SEED_WALL_US_PER_NFE: f64 = 25.0;
+
+/// SLO-defence knobs: admission control, load shedding, client quotas.
+/// All default to "admit everything except provably-late deadlines" —
+/// shedding and quotas are opt-in because they refuse work.
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    /// Reject a deadlined request with `overloaded` *before* enqueue when
+    /// the predicted queue wait (per-(task, variant) wall-clock EWMA ×
+    /// batches already queued ahead) exceeds its deadline.
+    pub admission: bool,
+    /// Total queued-rows high-water mark: a push that leaves more rows
+    /// queued sheds lowest-priority, latest-deadline requests back down
+    /// to the mark (0 = never shed).
+    pub shed_high_water_rows: usize,
+    /// Per-client queued-row quota enforced at push (0 = unlimited;
+    /// unattributed requests are exempt).
+    pub client_quota_rows: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            admission: true,
+            shed_high_water_rows: 0,
+            client_quota_rows: 0,
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -46,6 +84,8 @@ pub struct EngineConfig {
     pub backend: BackendKind,
     /// dispatch worker count; 0 = auto (one per core, clamped to [2, 8])
     pub workers: usize,
+    /// SLO defence: admission control, shedding high-water mark, quotas
+    pub slo: SloConfig,
 }
 
 impl Default for EngineConfig {
@@ -56,6 +96,7 @@ impl Default for EngineConfig {
             policy: Policy::MinMacs,
             backend: BackendKind::Pjrt,
             workers: 0,
+            slo: SloConfig::default(),
         }
     }
 }
@@ -72,6 +113,12 @@ pub struct SubmitOptions {
     /// Fail fast with `deadline_exceeded` if the request has not been
     /// dispatched within this duration of submission.
     pub deadline: Option<Duration>,
+    /// Priority class: breaks EDF dispatch ties between equally-urgent
+    /// queues, and lower classes are shed first under overload.
+    pub priority: Priority,
+    /// Client identity for per-client row quotas (`None` = unattributed,
+    /// exempt from quotas).
+    pub client: Option<String>,
 }
 
 /// A non-blocking submission: the engine id plus the completion channel.
@@ -133,6 +180,10 @@ struct DispatchState {
     batcher: Batcher,
     /// keys currently executing on some worker
     inflight: HashSet<QueueKey>,
+    /// per-(task, variant) EWMA of measured batch wall-clock (µs),
+    /// updated by the workers after each executed batch — what admission
+    /// control predicts queue waits from
+    wall_ewma: HashMap<QueueKey, f64>,
 }
 
 struct Shared {
@@ -159,8 +210,10 @@ impl Engine {
         let backend: Arc<dyn ExecBackend> = Arc::from(config.backend.create()?);
         let shared = Arc::new(Shared {
             state: Mutex::new(DispatchState {
-                batcher: Batcher::new(config.max_wait),
+                batcher: Batcher::new(config.max_wait)
+                    .with_client_quota(config.slo.client_quota_rows),
                 inflight: HashSet::new(),
+                wall_ewma: HashMap::new(),
             }),
             work: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -308,12 +361,67 @@ impl Engine {
         let mut req = Request::new(id, task, budget, input, samples);
         let t0 = req.t_submit;
         req.deadline = opts.deadline.map(|d| t0 + d);
-        {
+        req.priority = opts.priority;
+        req.client = opts.client.clone();
+        let slo = &self.config.slo;
+        let shed_victims = {
             let mut s = self.shared.state.lock().unwrap();
-            s.batcher.ensure_queue(&key, entry.batch());
-            s.batcher.push(&key, Pending { req, done });
-        }
+            s.batcher.ensure_queue(&key, b_cap);
+            // admission control: refuse a deadlined request before it
+            // ever queues when the rows already ahead of it predict a
+            // wait past its deadline — rejecting late work up front keeps
+            // it from poisoning the queue for requests that can still win
+            if slo.admission {
+                if let Some(deadline) = opts.deadline {
+                    let queued = s.batcher.queue_rows(&key);
+                    if queued > 0 {
+                        let seed = variant.nfe as f64 * SEED_WALL_US_PER_NFE;
+                        let wall_us = s.wall_ewma.get(&key).copied().unwrap_or(seed);
+                        let batches_ahead = queued.div_ceil(b_cap);
+                        // +2: the request's own batch must also run, and a
+                        // prior batch of this queue may already be in
+                        // flight on its affine worker — admitting work
+                        // that can only *just* make it loses to jitter
+                        let predicted_us = (batches_ahead + 2) as f64 * wall_us;
+                        if predicted_us > deadline.as_micros() as f64 {
+                            drop(s);
+                            self.metrics.overload_rejects.fetch_add(1, Relaxed);
+                            return Err(ApiError::overloaded(format!(
+                                "task {task}: {queued} queued rows predict a \
+                                 {predicted_us:.0}µs wait, past the {}µs \
+                                 deadline",
+                                deadline.as_micros()
+                            )));
+                        }
+                    }
+                }
+            }
+            if let Err(p) = s.batcher.push(&key, Pending { req, done }) {
+                drop(s);
+                self.metrics.overload_rejects.fetch_add(1, Relaxed);
+                let client = p.req.client.as_deref().unwrap_or("");
+                return Err(ApiError::overloaded(format!(
+                    "client {client:?} is at its queued-row quota of {}",
+                    slo.client_quota_rows
+                )));
+            }
+            if slo.shed_high_water_rows > 0 && s.batcher.queued_rows() > slo.shed_high_water_rows {
+                s.batcher.shed_to(slo.shed_high_water_rows)
+            } else {
+                Vec::new()
+            }
+        };
         self.metrics.requests.fetch_add(1, Relaxed);
+        for p in shed_victims {
+            self.metrics.shed.fetch_add(1, Relaxed);
+            complete(
+                &self.metrics,
+                p,
+                Err(ApiError::overloaded(
+                    "shed at the queued-rows high-water mark under overload",
+                )),
+            );
+        }
         self.shared.work.notify_one();
         Ok(id)
     }
@@ -434,13 +542,21 @@ fn worker_main(
             }
         };
 
+        let key = batch.key.clone();
         let _guard = InflightGuard {
             shared: &*shared,
             metrics: &*metrics,
-            key: batch.key.clone(),
+            key: key.clone(),
         };
         metrics.batch_started();
-        run_batch(&manifest, &metrics, backend.as_ref(), batch);
+        if let Some(wall) = run_batch(&manifest, &metrics, backend.as_ref(), batch) {
+            // feed the measured wall-clock back into the admission
+            // predictor for this (task, variant)
+            let wall_us = wall.as_secs_f64() * 1e6;
+            let mut s = shared.state.lock().unwrap();
+            let e = s.wall_ewma.entry(key).or_insert(wall_us);
+            *e = WALL_EWMA_ALPHA * wall_us + (1.0 - WALL_EWMA_ALPHA) * *e;
+        }
     }
 }
 
@@ -460,19 +576,29 @@ fn complete(
     });
 }
 
-fn fail_items(metrics: &CoordinatorMetrics, key: &QueueKey, items: Vec<Pending>, err: ApiError) {
+/// Fail every item of a batch; returns `None` so `run_batch` error paths
+/// can `return fail_items(...)` without an executed wall-clock.
+fn fail_items(
+    metrics: &CoordinatorMetrics,
+    key: &QueueKey,
+    items: Vec<Pending>,
+    err: ApiError,
+) -> Option<Duration> {
     crate::log_error!("batch {key:?} failed: {err}");
     for p in items {
         complete(metrics, p, Err(err.clone()));
     }
+    None
 }
 
+/// Execute one ready batch. Returns the backend wall-clock when the batch
+/// actually executed (the admission EWMA observation), `None` otherwise.
 fn run_batch(
     manifest: &Manifest,
     metrics: &CoordinatorMetrics,
     backend: &dyn ExecBackend,
     batch: ReadyBatch,
-) {
+) -> Option<Duration> {
     let ReadyBatch { key, items } = batch;
     let entry = match manifest.task(&key.0) {
         Ok(e) => e,
@@ -524,7 +650,7 @@ fn run_batch(
         }
     }
     if live.is_empty() {
-        return;
+        return None;
     }
     let items = live;
 
@@ -592,6 +718,11 @@ fn run_batch(
         let latency = p.req.t_submit.elapsed();
         metrics.total_latency.record(latency);
         metrics.responses.fetch_add(1, Relaxed);
+        // goodput accounting: a response with no deadline had no SLO to
+        // miss; one delivered past its deadline counts against goodput
+        if p.req.deadline.is_none_or(|d| Instant::now() <= d) {
+            metrics.deadline_met.fetch_add(1, Relaxed);
+        }
         let resp = Response {
             id: p.req.id,
             output: out.z[off..off + n].to_vec(),
@@ -604,6 +735,7 @@ fn run_batch(
         off += n;
         complete(metrics, p, Ok(resp));
     }
+    Some(exec_time)
 }
 
 #[cfg(test)]
@@ -622,11 +754,18 @@ mod tests {
         let c = EngineConfig::default();
         assert_eq!(c.backend, BackendKind::Pjrt);
         assert_eq!(c.workers, 0);
+        // SLO defaults: admission on, shedding and quotas off (they
+        // refuse work, so they are opt-in)
+        assert!(c.slo.admission);
+        assert_eq!(c.slo.shed_high_water_rows, 0);
+        assert_eq!(c.slo.client_quota_rows, 0);
     }
 
     #[test]
     fn default_submit_options_are_classic() {
         let o = SubmitOptions::default();
         assert!(o.policy.is_none() && o.variant.is_none() && o.deadline.is_none());
+        assert_eq!(o.priority, Priority::Normal);
+        assert!(o.client.is_none());
     }
 }

@@ -16,6 +16,14 @@ pub struct CoordinatorMetrics {
     pub failures: AtomicU64,
     /// requests failed fast because their deadline passed before dispatch
     pub deadline_misses: AtomicU64,
+    /// queued requests shed at the overload high-water mark
+    pub shed: AtomicU64,
+    /// requests refused before enqueue (admission control predicted the
+    /// deadline unmeetable, or the client's row quota was exhausted)
+    pub overload_rejects: AtomicU64,
+    /// successful completions that met their deadline (no-deadline
+    /// responses count as met — they had no SLO to miss)
+    pub deadline_met: AtomicU64,
     pub batches: AtomicU64,
     /// real rows executed across all batches
     pub rows: AtomicU64,
@@ -75,9 +83,21 @@ impl CoordinatorMetrics {
         rows as f64 / (rows + pad) as f64
     }
 
+    /// Fraction of delivered responses that met their deadline (1.0 when
+    /// nothing has completed yet). This is the SLO headline: under
+    /// overload a server can keep `responses` high while goodput craters.
+    pub fn goodput(&self) -> f64 {
+        let responses = self.responses.load(Relaxed);
+        if responses == 0 {
+            return 1.0;
+        }
+        self.deadline_met.load(Relaxed) as f64 / responses as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} responses={} failures={} deadline_misses={} batches={} \
+            "requests={} responses={} failures={} deadline_misses={} \
+             shed={} overload_rejects={} goodput={:.2} batches={} \
              rows={} fill={:.2} inflight_peak={} \
              queue_p50={:.0}µs exec_p50={:.0}µs total_p50={:.0}µs total_p99={:.0}µs \
              nfe_total={} gmacs_total={:.2}",
@@ -85,6 +105,9 @@ impl CoordinatorMetrics {
             self.responses.load(Relaxed),
             self.failures.load(Relaxed),
             self.deadline_misses.load(Relaxed),
+            self.shed.load(Relaxed),
+            self.overload_rejects.load(Relaxed),
+            self.goodput(),
             self.batches.load(Relaxed),
             self.rows.load(Relaxed),
             self.fill_ratio(),
@@ -136,5 +159,17 @@ mod tests {
         assert_eq!(m.fill_ratio(), 1.0);
         assert!(m.report().contains("requests=0"));
         assert!(m.report().contains("deadline_misses=0"));
+        assert!(m.report().contains("shed=0"));
+        assert!(m.report().contains("overload_rejects=0"));
+    }
+
+    #[test]
+    fn goodput_tracks_deadline_met_over_responses() {
+        let m = CoordinatorMetrics::new();
+        assert_eq!(m.goodput(), 1.0, "no responses yet → vacuous 1.0");
+        m.responses.fetch_add(4, Relaxed);
+        m.deadline_met.fetch_add(3, Relaxed);
+        assert!((m.goodput() - 0.75).abs() < 1e-12);
+        assert!(m.report().contains("goodput=0.75"), "{}", m.report());
     }
 }

@@ -34,7 +34,7 @@ pub mod policy;
 pub mod request;
 pub mod server;
 
-pub use engine::{Engine, EngineConfig, SubmitHandle, SubmitOptions};
+pub use engine::{Engine, EngineConfig, SloConfig, SubmitHandle, SubmitOptions};
 pub use metrics::CoordinatorMetrics;
 pub use policy::{select_variant, Policy};
-pub use request::{Completion, CompletionSender, Request, Response};
+pub use request::{Completion, CompletionSender, Priority, Request, Response};

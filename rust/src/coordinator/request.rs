@@ -5,6 +5,37 @@ use std::time::Instant;
 
 use crate::api::ApiError;
 
+/// Priority class of a request. Higher classes win dispatch ties when two
+/// queues are equally urgent, and lower classes are shed first under
+/// overload. The wire strings ("low"/"normal"/"high") are frozen.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// The frozen wire string.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    pub fn from_wire(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+}
+
 /// One inference request: a batch of `samples` rows for `task`, plus the
 /// accuracy budget the caller is willing to tolerate.
 #[derive(Clone, Debug)]
@@ -25,6 +56,12 @@ pub struct Request {
     /// fail fast with `deadline_exceeded` if the request has not been
     /// dispatched to the backend by this instant (`None` = no deadline)
     pub deadline: Option<Instant>,
+    /// priority class: breaks EDF dispatch ties, and lower classes are
+    /// shed first under overload
+    pub priority: Priority,
+    /// client identity for per-client row quotas (`None` = unattributed,
+    /// exempt from quotas)
+    pub client: Option<String>,
 }
 
 impl Request {
@@ -37,6 +74,8 @@ impl Request {
             samples,
             t_submit: Instant::now(),
             deadline: None,
+            priority: Priority::default(),
+            client: None,
         }
     }
 }
@@ -84,7 +123,20 @@ mod tests {
         assert_eq!(r.task, "cnf_rings");
         assert_eq!(r.samples, 1);
         assert!(r.deadline.is_none());
+        assert_eq!(r.priority, Priority::Normal);
+        assert!(r.client.is_none());
         assert!(r.t_submit.elapsed().as_secs() < 1);
+    }
+
+    #[test]
+    fn priority_classes_order_and_round_trip() {
+        assert!(Priority::Low < Priority::Normal);
+        assert!(Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::from_wire(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::from_wire("urgent"), None);
     }
 
     #[test]

@@ -257,10 +257,16 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
                     ])
                 })
                 .collect();
+            let m = engine.metrics();
+            let shed = m.shed.load(std::sync::atomic::Ordering::Relaxed);
+            let rejects = m.overload_rejects.load(std::sync::atomic::Ordering::Relaxed);
             json::obj(vec![
                 ("ok", Value::Bool(true)),
                 ("backend", json::s(engine.backend_name())),
-                ("report", json::s(&engine.metrics().report())),
+                ("report", json::s(&m.report())),
+                ("goodput", json::num(m.goodput())),
+                ("shed", json::num(shed as f64)),
+                ("overload_rejects", json::num(rejects as f64)),
                 ("queues", Value::Arr(queues)),
             ])
         }

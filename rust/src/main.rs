@@ -18,7 +18,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy, SubmitOptions};
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy, Priority, SubmitOptions};
 use hypersolvers::runtime::{BackendKind, Manifest};
 use hypersolvers::util::cli::Cli;
 
@@ -30,6 +30,17 @@ fn main() {
         .opt("policy", "macs", "variant cost axis: macs | nfe")
         .opt("backend", "pjrt", "execution backend: pjrt | native")
         .opt("workers", "0", "dispatch workers (0 = auto)")
+        .opt(
+            "admission",
+            "on",
+            "SLO admission control: reject at submit when the deadline is predicted unmeetable (on | off)",
+        )
+        .opt(
+            "shed-rows",
+            "0",
+            "queued-rows high-water mark; overflow sheds lowest-priority work (0 = off)",
+        )
+        .opt("quota-rows", "0", "per-client queued-row quota (0 = off)")
         .opt(
             "matmul-threads",
             "0",
@@ -44,6 +55,8 @@ fn main() {
             "0",
             "fail `infer` fast with deadline_exceeded after this many µs (0 = none)",
         )
+        .opt("priority", "normal", "`infer` priority class: low | normal | high")
+        .opt("client", "", "client id for `infer` (per-client quota accounting)")
         .parse_env();
 
     let cmd = parsed
@@ -85,6 +98,16 @@ fn main() {
     if !parsed.get("artifacts").is_empty() {
         config.artifacts_dir = parsed.get("artifacts").into();
     }
+    config.slo.admission = match parsed.get("admission").as_str() {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("error: --admission must be \"on\" or \"off\", got {other:?}");
+            std::process::exit(2);
+        }
+    };
+    config.slo.shed_high_water_rows = parsed.get_usize("shed-rows");
+    config.slo.client_quota_rows = parsed.get_usize("quota-rows");
 
     let result = match cmd.as_str() {
         "tasks" => cmd_tasks(&config),
@@ -95,6 +118,8 @@ fn main() {
             &parsed.get("input"),
             &parsed.get("variant"),
             parsed.get_usize("deadline-us") as u64,
+            &parsed.get("priority"),
+            &parsed.get("client"),
         ),
         "serve" => cmd_serve(config, &parsed.get("addr")),
         other => {
@@ -139,10 +164,17 @@ fn cmd_infer(
     input_csv: &str,
     variant: &str,
     deadline_us: u64,
+    priority: &str,
+    client: &str,
 ) -> hypersolvers::Result<()> {
     if task.is_empty() {
         return Err(hypersolvers::Error::Other("--task is required".into()));
     }
+    let priority = Priority::from_wire(priority).ok_or_else(|| {
+        hypersolvers::Error::Other(format!(
+            "--priority must be \"low\", \"normal\" or \"high\", got {priority:?}"
+        ))
+    })?;
     let input: Vec<f32> = input_csv
         .split(',')
         .filter(|s| !s.is_empty())
@@ -153,6 +185,8 @@ fn cmd_infer(
         policy: None,
         variant: (!variant.is_empty()).then(|| variant.to_string()),
         deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
+        priority,
+        client: (!client.is_empty()).then(|| client.to_string()),
     };
     let resp = engine
         .submit_opts(task, budget, input, 1, &opts)

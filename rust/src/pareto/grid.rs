@@ -8,6 +8,7 @@
 //! is reproducible from its embedded grid block plus the seed.
 
 use crate::nn::{Act, AnalyticField, FieldNet, Linear, Mlp, MlpField, TimeMode};
+use crate::runtime::native::DEFAULT_DOPRI5_TOL;
 use crate::solvers::Tableau;
 use crate::tensor::Tensor;
 use crate::train::StateSampler;
@@ -127,7 +128,7 @@ impl GridConfig {
         GridConfig {
             solvers: vec!["euler".into(), "midpoint".into(), "rk4".into()],
             ks: vec![1, 2, 4, 8, 16, 32],
-            tols: vec![1e-2, 1e-3, 1e-5],
+            tols: vec![1e-2, 1e-3, DEFAULT_DOPRI5_TOL],
             hyper_base: "euler".into(),
             hyper_k: 8,
             batch: 256,
@@ -153,7 +154,7 @@ impl GridConfig {
         GridConfig {
             solvers: vec!["euler".into(), "midpoint".into()],
             ks: vec![1, 2, 4],
-            tols: vec![1e-3, 1e-5],
+            tols: vec![1e-3, DEFAULT_DOPRI5_TOL],
             hyper_k: 2,
             batch: 64,
             traj_mesh_k: 8,

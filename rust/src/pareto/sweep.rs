@@ -399,6 +399,7 @@ pub fn serve_sweep(
         policy: Policy::MinMacs,
         backend: BackendKind::Native,
         workers: 2,
+        ..Default::default()
     })?;
     engine.warmup(task)?;
 

@@ -52,16 +52,25 @@ pub struct Variant {
 }
 
 impl Variant {
+    // loud over lossy, like `tol` below: `k`/`nfe`/`macs` used to silently
+    // default to 0 on malformed values (the json accessors saturate-cast,
+    // so even `-1` or `1.5` slipped through), `hyper` to false and `mape`
+    // to NaN — a typo'd manifest would mis-route policy decisions and
+    // mis-seed admission control with no diagnostic anywhere
     fn from_json(v: &Value) -> Result<Variant> {
         Ok(Variant {
             name: req_str(v, "name")?,
             solver: req_str(v, "solver")?,
-            k: v.req("k")?.as_usize().unwrap_or(0),
-            hyper: v.req("hyper")?.as_bool().unwrap_or(false),
+            k: uint_field(v, "k", "variant k")? as usize,
+            hyper: v.req("hyper")?.as_bool().ok_or_else(|| {
+                Error::Manifest("variant hyper must be a boolean".into())
+            })?,
             hlo: req_str(v, "hlo")?,
-            nfe: v.req("nfe")?.as_i64().unwrap_or(0) as u64,
-            macs: v.req("macs")?.as_i64().unwrap_or(0) as u64,
-            mape: v.req("mape")?.as_f64().unwrap_or(f64::NAN),
+            nfe: uint_field(v, "nfe", "variant nfe")?,
+            macs: uint_field(v, "macs", "variant macs")?,
+            mape: v.req("mape")?.as_f64().ok_or_else(|| {
+                Error::Manifest("variant mape must be a number".into())
+            })?,
             // a present-but-non-numeric tol must fail loudly: silently
             // falling back to the backend default would serve (and
             // measure) the wrong tolerance with no diagnostic
@@ -124,6 +133,22 @@ fn req_str(v: &Value, key: &str) -> Result<String> {
         .to_string())
 }
 
+/// Strict non-negative integer field. The generic json accessors
+/// (`as_usize`/`as_i64`) saturate-cast through f64 — `-1` becomes 0 and
+/// `1.5` becomes 1 — so manifest counters must validate the raw number.
+fn uint_field(v: &Value, key: &str, label: &str) -> Result<u64> {
+    let n = v
+        .req(key)?
+        .as_f64()
+        .ok_or_else(|| Error::Manifest(format!("{label} must be a number")))?;
+    if !(n.is_finite() && n >= 0.0 && n.fract() == 0.0 && n <= 2f64.powi(53)) {
+        return Err(Error::Manifest(format!(
+            "{label} must be a non-negative integer, got {n}"
+        )));
+    }
+    Ok(n as u64)
+}
+
 impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
@@ -159,20 +184,29 @@ impl Manifest {
                 }
             }
             let macs = tv.req("macs")?;
+            let state_shape = tv.req("state")?.req("shape")?.as_usize_vec()?;
+            if state_shape.is_empty() {
+                // an empty shape used to silently mean batch() == 1 — any
+                // mismatch then surfaced as shape errors far from the cause
+                return Err(Error::Manifest(format!(
+                    "task {name}: state shape is empty — the exported batch \
+                     dimension must be explicit"
+                )));
+            }
             tasks.insert(
                 name.clone(),
                 TaskEntry {
                     name: name.clone(),
                     kind: req_str(tv, "kind")?,
-                    state_shape: tv.req("state")?.req("shape")?.as_usize_vec()?,
+                    state_shape,
                     s_span: (
                         span[0].as_f32().unwrap_or(0.0),
                         span[1].as_f32().unwrap_or(1.0),
                     ),
                     weights: req_str(tv, "weights")?,
                     field_hlo: req_str(tv, "field_hlo")?,
-                    mac_f: macs.req("field")?.as_i64().unwrap_or(0) as u64,
-                    mac_g: macs.req("hyper")?.as_i64().unwrap_or(0) as u64,
+                    mac_f: uint_field(macs, "field", "task macs.field")?,
+                    mac_g: uint_field(macs, "hyper", "task macs.hyper")?,
                     delta: tv.req("delta")?.as_f64().unwrap_or(f64::NAN),
                     hyper_base: req_str(tv, "hyper_base")?,
                     truth_acc: tv.get("truth_acc").and_then(Value::as_f64),
@@ -341,6 +375,38 @@ mod tests {
         let err = Manifest::load(&dir).unwrap_err();
         assert!(err.to_string().contains("tol"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_variant_fields_are_rejected_loudly() {
+        // each case breaks exactly one field the loader used to silently
+        // default (k→0, hyper→false, nfe/macs→0, mape→NaN, shape→batch 1)
+        let cases = [
+            ("\"k\": 1,", "\"k\": \"1\",", "variant k"),
+            ("\"nfe\": 2,", "\"nfe\": -2,", "variant nfe"),
+            ("\"macs\": 17024,", "\"macs\": 1.5,", "variant macs"),
+            ("\"hyper\": false,", "\"hyper\": \"no\",", "variant hyper"),
+            ("\"mape\": 0.119,", "\"mape\": \"high\",", "variant mape"),
+            (
+                "\"state\": {\"shape\": [256, 2]}",
+                "\"state\": {\"shape\": []}",
+                "state shape is empty",
+            ),
+        ];
+        for (i, (from, to, needle)) in cases.iter().enumerate() {
+            let dir = std::env::temp_dir().join(format!(
+                "hsolve_manifest_bad{}_{}",
+                i,
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            let bad = SAMPLE.replace(from, to);
+            assert_ne!(bad, SAMPLE, "replacement {from:?} applied");
+            std::fs::write(dir.join("manifest.json"), bad).unwrap();
+            let err = Manifest::load(&dir).unwrap_err();
+            assert!(err.to_string().contains(needle), "{from}: {err}");
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
 
     #[test]

@@ -22,6 +22,14 @@ use crate::solvers::{
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
+/// Tolerance used for `dopri5` variants whose manifest pins no `tol`.
+///
+/// Historically this was a silent `unwrap_or(1e-5)` buried in the execute
+/// path; it is a named constant so the pareto sweep's default tolerance
+/// grids ([`crate::pareto::grid::GridConfig`]) and the serving path agree
+/// on — and document — the same default.
+pub const DEFAULT_DOPRI5_TOL: f32 = 1e-5;
+
 /// A task's weights, loaded once and shared across dispatch workers.
 enum NativeModel {
     Cnf(CnfModel),
@@ -177,8 +185,18 @@ impl ExecBackend for NativeBackend {
         let mut ws = qs.ws.lock().unwrap();
         let (zt, nfe) = if variant.solver == "dopri5" {
             // the manifest may pin a per-variant tolerance (the pareto
-            // sweep's adaptive axis); default matches the historical 1e-5
-            let tol = variant.tol.map(|t| t as f32).unwrap_or(1e-5);
+            // sweep's adaptive axis); otherwise fall back loudly to the
+            // shared default instead of a silent magic number
+            let tol = match variant.tol {
+                Some(t) => t as f32,
+                None => {
+                    crate::log_debug!(
+                        "variant {} pins no dopri5 tol; using default {DEFAULT_DOPRI5_TOL}",
+                        variant.name
+                    );
+                    DEFAULT_DOPRI5_TOL
+                }
+            };
             let r = adaptive_ws(
                 field,
                 &z0,

@@ -273,10 +273,15 @@ fn entry_f64(v: &Value, key: &str) -> Option<f64> {
 /// * `hyperbench_pareto.tasks[*].hyper_on_nfe_front` — NFE-front
 ///   membership must never flip true → false;
 /// * `hyperbench_pareto.tasks[*].serve_speedup_vs_dopri5` — a speedup
-///   that was > 1 must not drop to ≤ 1 (the end-to-end win vanishing).
+///   that was > 1 must not drop to ≤ 1 (the end-to-end win vanishing);
+/// * `serving_throughput.overload_goodput` — within the newest entry,
+///   shedding-on goodput must strictly exceed the shedding-off baseline
+///   (`overload_goodput_baseline`), and run over run the goodput must not
+///   drop by more than `goodput_drop` (absolute, goodput is in [0, 1]).
 ///
-/// Streams with fewer than two entries just record a baseline note.
-pub fn trajectory_gate(entries: &[Value], p50_slack: f64) -> GateReport {
+/// Streams with fewer than two entries just record a baseline note (the
+/// within-entry overload check still applies to a first entry).
+pub fn trajectory_gate(entries: &[Value], p50_slack: f64, goodput_drop: f64) -> GateReport {
     let mut report = GateReport::default();
     // group by bench stream, preserving order
     let mut streams: Vec<(String, Vec<&Value>)> = Vec::new();
@@ -292,6 +297,26 @@ pub fn trajectory_gate(entries: &[Value], p50_slack: f64) -> GateReport {
         }
     }
     for (name, stream) in &streams {
+        // within-entry overload invariant: shedding must *help* — applies
+        // to the newest entry even when there is nothing yet to diff
+        let latest = *stream.last().expect("streams hold at least one entry");
+        if name.as_str() == "serving_throughput" {
+            if let (Some(on), Some(off)) = (
+                entry_f64(latest, "overload_goodput"),
+                entry_f64(latest, "overload_goodput_baseline"),
+            ) {
+                let line = format!(
+                    "[{name}] overload goodput: shed-on {on:.3} vs shed-off {off:.3}"
+                );
+                if on <= off {
+                    report.regressions.push(format!(
+                        "{line} — REGRESSED (shedding must strictly beat the baseline)"
+                    ));
+                } else {
+                    report.checks.push(line);
+                }
+            }
+        }
         if stream.len() < 2 {
             report
                 .checks
@@ -317,6 +342,26 @@ pub fn trajectory_gate(entries: &[Value], p50_slack: f64) -> GateReport {
                 _ => report
                     .checks
                     .push(format!("[{name}] no mixed_p50_ms pair to diff")),
+            }
+            match (
+                entry_f64(prev, "overload_goodput"),
+                entry_f64(newest, "overload_goodput"),
+            ) {
+                (Some(p), Some(n)) => {
+                    let floor = p - goodput_drop;
+                    let line = format!(
+                        "[{name}] overload goodput under shedding: {p:.3} → {n:.3} \
+                         (allowed ≥ {floor:.3})"
+                    );
+                    if n < floor {
+                        report.regressions.push(format!("{line} — REGRESSED"));
+                    } else {
+                        report.checks.push(line);
+                    }
+                }
+                _ => report
+                    .checks
+                    .push(format!("[{name}] no overload_goodput pair to diff")),
             }
         }
         if name.as_str() == "hyperbench_pareto" {
@@ -475,34 +520,76 @@ mod tests {
         };
         // healthy: p50 within slack, front stays, speedup stays > 1
         let entries = vec![serving(2.0), pareto(true, 5.0), serving(2.2), pareto(true, 4.0)];
-        let r = trajectory_gate(&entries, 1.5);
+        let r = trajectory_gate(&entries, 1.5, 0.15);
         assert!(r.passed(), "{:?}", r.regressions);
         assert!(r.checks.iter().any(|c| c.contains("serving p50")));
 
         // p50 blows the slack → regression
         let entries = vec![serving(2.0), serving(4.0)];
-        let r = trajectory_gate(&entries, 1.5);
+        let r = trajectory_gate(&entries, 1.5, 0.15);
         assert!(!r.passed());
         assert!(r.regressions[0].contains("REGRESSED"), "{:?}", r.regressions);
 
         // front membership flipping off → regression, even with p50 fine
         let entries = vec![pareto(true, 5.0), pareto(false, 5.0)];
-        assert!(!trajectory_gate(&entries, 1.5).passed());
+        assert!(!trajectory_gate(&entries, 1.5, 0.15).passed());
         // speedup collapsing through 1.0 → regression
         let entries = vec![pareto(true, 5.0), pareto(true, 0.8)];
-        assert!(!trajectory_gate(&entries, 1.5).passed());
+        assert!(!trajectory_gate(&entries, 1.5, 0.15).passed());
         // only the LAST TWO entries of a stream are compared: an ancient
         // regression two runs back does not keep failing the gate once a
         // healthy pair follows (false→true front is a recovery, and a
         // speedup that was ≤ 1 may grow freely)
         let entries = vec![pareto(true, 5.0), pareto(false, 0.5), pareto(true, 3.0)];
-        assert!(trajectory_gate(&entries, 1.5).passed());
+        assert!(trajectory_gate(&entries, 1.5, 0.15).passed());
 
         // single entries per stream: baseline only, passes
         let entries = vec![serving(2.0), pareto(true, 5.0)];
-        let r = trajectory_gate(&entries, 1.5);
+        let r = trajectory_gate(&entries, 1.5, 0.15);
         assert!(r.passed());
         assert!(r.checks.iter().all(|c| c.contains("nothing to diff")));
+    }
+
+    #[test]
+    fn trajectory_gate_checks_overload_goodput() {
+        let overload = |on: f64, off: f64| {
+            json::obj(vec![
+                ("bench", json::s("serving_throughput")),
+                ("mixed_p50_ms", json::num(2.0)),
+                ("overload_goodput", json::num(on)),
+                ("overload_goodput_baseline", json::num(off)),
+            ])
+        };
+        // healthy: shed-on beats shed-off, and run-over-run drop is small
+        let entries = vec![overload(0.40, 0.10), overload(0.35, 0.12)];
+        let r = trajectory_gate(&entries, 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.checks.iter().any(|c| c.contains("overload goodput")));
+
+        // within-entry: shedding-on not strictly beating shed-off fails,
+        // even on a first entry with nothing to diff against
+        let entries = vec![overload(0.10, 0.10)];
+        let r = trajectory_gate(&entries, 1.5, 0.15);
+        assert!(!r.passed());
+        assert!(r.regressions[0].contains("strictly beat"), "{:?}", r.regressions);
+
+        // run-over-run: goodput collapsing past the allowed drop fails
+        let entries = vec![overload(0.60, 0.10), overload(0.30, 0.10)];
+        let r = trajectory_gate(&entries, 1.5, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.regressions.iter().any(|c| c.contains("overload goodput")),
+            "{:?}",
+            r.regressions
+        );
+
+        // entries without overload fields gate nothing new
+        let plain = json::obj(vec![
+            ("bench", json::s("serving_throughput")),
+            ("mixed_p50_ms", json::num(2.0)),
+        ]);
+        let r = trajectory_gate(&[plain.clone(), plain], 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
     }
 
     #[test]

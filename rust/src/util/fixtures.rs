@@ -90,6 +90,12 @@ pub fn write_native_artifacts(dir: &Path, tasks: &[(&str, usize)]) -> Result<()>
 /// Every call gets a unique directory (pid + counter), so concurrent tests
 /// in one binary never race on the filesystem; `tag` just aids debugging.
 pub fn temp_native_artifacts(tag: &str, tasks: &[(&str, usize)]) -> Result<PathBuf> {
+    let dir = fresh_temp_dir(tag)?;
+    write_native_artifacts(&dir, tasks)?;
+    Ok(dir)
+}
+
+fn fresh_temp_dir(tag: &str) -> Result<PathBuf> {
     use std::sync::atomic::{AtomicU64, Ordering};
     static UNIQ: AtomicU64 = AtomicU64::new(0);
     let dir = std::env::temp_dir().join(format!(
@@ -100,7 +106,113 @@ pub fn temp_native_artifacts(tag: &str, tasks: &[(&str, usize)]) -> Result<PathB
     if dir.exists() {
         std::fs::remove_dir_all(&dir)?;
     }
-    write_native_artifacts(&dir, tasks)?;
+    Ok(dir)
+}
+
+// ---------------------------------------------------------------------------
+// Heavy fixture: a field expensive enough that serving capacity is finite
+// ---------------------------------------------------------------------------
+
+/// Hidden width of the heavy fixture's MLP field.
+const HEAVY_HIDDEN: usize = 128;
+
+/// Render a dense matrix as a JSON array of `din` rows × `dout` columns —
+/// the exact `w` layout `nn::layers` reads back.
+fn mat_json(rows: &[Vec<f32>]) -> String {
+    let rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+            format!("[{}]", cells.join(", "))
+        })
+        .collect();
+    format!("[{}]", rows.join(", "))
+}
+
+/// A 2-D field through a 3→H→H→2 MLP (time concat, tanh hidden layers, a
+/// small-scaled linear readout so |f| stays O(1) and every solver is
+/// finite over the span). Weights come from the seeded in-repo PRNG, so
+/// the fixture is deterministic across runs and machines. At H = 128 one
+/// field evaluation costs ~17k MACs — three orders of magnitude above the
+/// rotation fixture — which gives the serving stack a *finite measurable
+/// capacity*: the substrate the overload/shedding bench needs.
+fn heavy_field_json(seed: u64) -> String {
+    let mut rng = crate::util::prng::Rng::new(seed ^ 0x0EA5_EED);
+    let dims = [3usize, HEAVY_HIDDEN, HEAVY_HIDDEN, 2];
+    let mut layers = Vec::with_capacity(dims.len() - 1);
+    for li in 0..dims.len() - 1 {
+        let (din, dout) = (dims[li], dims[li + 1]);
+        let last = li == dims.len() - 2;
+        let scale = if last { 0.1 } else { 1.0 } / (din as f32).sqrt();
+        let w: Vec<Vec<f32>> = (0..din)
+            .map(|_| (0..dout).map(|_| rng.normal_f32() * scale).collect())
+            .collect();
+        let b: Vec<String> = (0..dout).map(|_| "0".to_string()).collect();
+        layers.push(format!(
+            r#"{{"w": {}, "b": [{}], "act": "{}"}}"#,
+            mat_json(&w),
+            b.join(", "),
+            if last { "id" } else { "tanh" }
+        ));
+    }
+    format!(
+        r#"{{"time_mode": "concat", "layers": [{}]}}"#,
+        layers.join(", ")
+    )
+}
+
+/// Write a single heavy cnf task (see [`heavy_field_json`]) into `dir`.
+/// Two variants: a cheap `euler_k2` and the adaptive `dopri5` reference —
+/// the overload bench pins `dopri5` so every request pays the full
+/// adaptive cost.
+pub fn write_heavy_native_artifacts(dir: &Path, name: &str, batch: usize) -> Result<()> {
+    std::fs::create_dir_all(dir.join("weights"))?;
+    // MACs per field eval: 3·H + H·H + H·2 at H = HEAVY_HIDDEN
+    let mac_f = 3 * HEAVY_HIDDEN + HEAVY_HIDDEN * HEAVY_HIDDEN + HEAVY_HIDDEN * 2;
+    let task = format!(
+        r#""{name}": {{
+      "kind": "cnf",
+      "state": {{"shape": [{batch}, 2]}},
+      "s_span": [0.0, 1.0],
+      "weights": "weights/{name}.json",
+      "field_hlo": "{name}_field.hlo.txt",
+      "macs": {{"field": {mac_f}, "hyper": 12}},
+      "delta": 0.01,
+      "hyper_base": "heun",
+      "variants": [
+        {{"name": "euler_k2", "solver": "euler", "k": 2, "hyper": false,
+          "hlo": "{name}_euler_k2.hlo.txt", "nfe": 2, "macs": {m2},
+          "mape": 0.3, "in_shape": [{batch}, 2], "out_shape": [{batch}, 2]}},
+        {{"name": "dopri5", "solver": "dopri5", "k": 0, "hyper": false,
+          "hlo": "{name}_dopri5.hlo.txt", "nfe": 26, "macs": {m26},
+          "mape": 0.0001, "outputs": ["z", "nfe"],
+          "in_shape": [{batch}, 2], "out_shape": [{batch}, 2]}}
+      ]
+    }}"#,
+        m2 = 2 * mac_f,
+        m26 = 26 * mac_f,
+    );
+    let weights = format!(
+        r#"{{"kind": "cnf", "field": {}, "hyper": {HYPER_JSON}}}"#,
+        heavy_field_json(17)
+    );
+    std::fs::write(dir.join("weights").join(format!("{name}.json")), weights)?;
+    let manifest = format!(
+        r#"{{
+  "version": 1, "stamp": "synthetic-native-heavy", "seed": 0, "quick": false,
+  "tasks": {{
+    {task}
+  }}
+}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)?;
+    Ok(())
+}
+
+/// [`temp_native_artifacts`], but with the heavy task set.
+pub fn temp_heavy_native_artifacts(tag: &str, name: &str, batch: usize) -> Result<PathBuf> {
+    let dir = fresh_temp_dir(tag)?;
+    write_heavy_native_artifacts(&dir, name, batch)?;
     Ok(dir)
 }
 
@@ -123,5 +235,22 @@ mod tests {
         // the weight files load as a CnfModel and the field has state dim 2
         let model = crate::nn::CnfModel::load(&m.weights_path(a)).unwrap();
         assert_eq!(model.field.state_dim(), 2);
+    }
+
+    #[test]
+    fn heavy_fixture_parses_loads_and_is_deterministic() {
+        let dir = temp_heavy_native_artifacts("fixtures_heavy", "cnf_heavy", 8).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let t = m.task("cnf_heavy").unwrap();
+        assert_eq!(t.batch(), 8);
+        assert!(t.variant("dopri5").unwrap().returns_nfe);
+        assert!(t.mac_f > 10_000, "heavy field must be expensive: {}", t.mac_f);
+        let model = crate::nn::CnfModel::load(&m.weights_path(t)).unwrap();
+        assert_eq!(model.field.state_dim(), 2);
+        // seeded weights: two independent writes produce identical files
+        let dir2 = temp_heavy_native_artifacts("fixtures_heavy", "cnf_heavy", 8).unwrap();
+        let w1 = std::fs::read(dir.join("weights/cnf_heavy.json")).unwrap();
+        let w2 = std::fs::read(dir2.join("weights/cnf_heavy.json")).unwrap();
+        assert_eq!(w1, w2);
     }
 }

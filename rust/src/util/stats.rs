@@ -25,7 +25,9 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a stray NaN (e.g. a failed measurement) sorts to the end
+    // instead of panicking the whole report
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -132,6 +134,17 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
         assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
         assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.011);
+    }
+
+    #[test]
+    fn percentile_survives_nan_entries() {
+        // regression: partial_cmp(...).unwrap() panicked on any NaN in the
+        // input; total_cmp sorts NaN after every finite value, so low/mid
+        // percentiles of real data stay meaningful
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn native_engine(tag: &str, tasks: &[(&str, usize)], max_wait: Duration) -> Engi
         policy: Policy::MinMacs,
         backend: BackendKind::Native,
         workers: 2,
+        ..Default::default()
     })
     .unwrap()
 }
@@ -91,6 +92,17 @@ fn golden_v1_error_line() {
     assert_eq!(
         json::to_string(&v1::encode_error(None, &ApiError::unknown_cmd("nope"), 0)),
         r#"{"code":"unknown_cmd","error":"nope","ok":false}"#
+    );
+}
+
+#[test]
+fn golden_overloaded_error_line() {
+    // the admission-control/shedding rejection is part of the frozen wire
+    // contract: clients branch on this exact code string to back off
+    let e = ApiError::overloaded("queue past deadline");
+    assert_eq!(
+        json::to_string(&v1::encode_error(Some(11), &e, 1)),
+        r#"{"code":"overloaded","error":"queue past deadline","id":11,"ok":false,"v":1}"#
     );
 }
 

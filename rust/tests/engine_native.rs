@@ -9,7 +9,9 @@ use std::thread;
 use std::time::Duration;
 
 use hypersolvers::api::ErrorCode;
-use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy, SubmitOptions};
+use hypersolvers::coordinator::{
+    server, Engine, EngineConfig, Policy, Priority, SloConfig, SubmitOptions,
+};
 use hypersolvers::runtime::BackendKind;
 use hypersolvers::util::fixtures;
 use hypersolvers::util::json::{self, Value};
@@ -24,6 +26,16 @@ fn native_engine_wait(
     workers: usize,
     max_wait: Duration,
 ) -> Engine {
+    native_engine_slo(tag, tasks, workers, max_wait, SloConfig::default())
+}
+
+fn native_engine_slo(
+    tag: &str,
+    tasks: &[(&str, usize)],
+    workers: usize,
+    max_wait: Duration,
+    slo: SloConfig,
+) -> Engine {
     let dir = fixtures::temp_native_artifacts(tag, tasks).unwrap();
     Engine::new(EngineConfig {
         artifacts_dir: dir,
@@ -31,6 +43,7 @@ fn native_engine_wait(
         policy: Policy::MinMacs,
         backend: BackendKind::Native,
         workers,
+        slo,
     })
     .unwrap()
 }
@@ -495,5 +508,181 @@ fn metrics_expose_queue_depths_while_queued() {
         // disconnect, not a hang
         drop(engine);
         assert!(_h1.wait().is_err());
+    });
+}
+
+#[test]
+fn admission_rejects_unmeetable_deadline_at_submit() {
+    with_watchdog(60, || {
+        // long batching wait + cap 4: queued rows sit until the batch fills
+        let engine = native_engine_wait("admission", &[("cnf_a", 4)], 2, Duration::from_secs(10));
+        let pin = |deadline: Option<Duration>| SubmitOptions {
+            variant: Some("euler_k2".into()),
+            deadline,
+            ..SubmitOptions::default()
+        };
+        let queued: Vec<_> = (0..3)
+            .map(|i| {
+                engine
+                    .submit_opts("cnf_a", 0.5, vec![0.1 * i as f32, -0.25], 1, &pin(None))
+                    .unwrap()
+            })
+            .collect();
+        // 3 rows ahead predict a wait far past a 1µs deadline → refused at
+        // submit with the frozen overloaded code, before ever queueing
+        let err = engine
+            .submit_opts("cnf_a", 0.5, vec![0.0, 0.0], 1, &pin(Some(Duration::from_micros(1))))
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::Overloaded, "{err}");
+        assert_eq!(engine.metrics().overload_rejects.load(Relaxed), 1);
+        // a meetable deadline on the same queue is admitted — and fills
+        // the batch, so everything queued completes
+        let ok = engine
+            .submit_opts("cnf_a", 0.5, vec![0.0, 0.0], 1, &pin(Some(Duration::from_secs(30))))
+            .unwrap();
+        assert!(ok.wait().is_ok());
+        for h in queued {
+            assert!(h.wait().is_ok());
+        }
+        // empty queue: even an absurd deadline is admitted (it fails at
+        // dispatch with deadline_exceeded, not at submit)
+        let err = engine
+            .submit_opts("cnf_a", 0.5, vec![0.0, 0.0], 1, &pin(Some(Duration::from_micros(1))))
+            .unwrap()
+            .wait()
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::DeadlineExceeded, "{err}");
+    });
+}
+
+#[test]
+fn edf_dispatches_urgent_deadline_queue_first() {
+    with_watchdog(60, || {
+        // ONE worker: dispatch order is observable as completion latency.
+        // A (no deadline) flushes at max_wait = 400ms; B (50ms deadline,
+        // different variant queue) flushes at its deadline margin — EDF
+        // must pick B long before A even though A was submitted first.
+        let engine = native_engine_wait("edf", &[("cnf_a", 4)], 1, Duration::from_millis(400));
+        let a = engine
+            .submit_opts(
+                "cnf_a",
+                0.5,
+                vec![0.3, -0.2],
+                1,
+                &SubmitOptions {
+                    variant: Some("euler_k2".into()),
+                    ..SubmitOptions::default()
+                },
+            )
+            .unwrap();
+        let b = engine
+            .submit_opts(
+                "cnf_a",
+                0.5,
+                vec![0.3, -0.2],
+                1,
+                &SubmitOptions {
+                    variant: Some("heun_k2".into()),
+                    deadline: Some(Duration::from_millis(50)),
+                    ..SubmitOptions::default()
+                },
+            )
+            .unwrap();
+        let resp_b = b.wait().expect("deadlined request must be served");
+        let resp_a = a.wait().expect("undeadlined request must be served");
+        assert!(
+            resp_b.latency < resp_a.latency,
+            "EDF must serve the 50ms-deadline queue before the 400ms flush: \
+             b={:?} a={:?}",
+            resp_b.latency,
+            resp_a.latency
+        );
+    });
+}
+
+#[test]
+fn client_quota_rejects_submit_over_budgeted_rows() {
+    with_watchdog(60, || {
+        let engine = native_engine_slo(
+            "quota",
+            &[("cnf_a", 8)],
+            2,
+            Duration::from_secs(10),
+            SloConfig {
+                client_quota_rows: 2,
+                ..SloConfig::default()
+            },
+        );
+        let with_client = |c: Option<&str>| SubmitOptions {
+            variant: Some("euler_k2".into()),
+            client: c.map(str::to_string),
+            ..SubmitOptions::default()
+        };
+        let _h1 = engine
+            .submit_opts("cnf_a", 0.5, vec![0.1, 0.2], 1, &with_client(Some("c1")))
+            .unwrap();
+        let _h2 = engine
+            .submit_opts("cnf_a", 0.5, vec![0.1, 0.2], 1, &with_client(Some("c1")))
+            .unwrap();
+        // c1 is at its 2-row quota: the third submit is refused…
+        let err = engine
+            .submit_opts("cnf_a", 0.5, vec![0.1, 0.2], 1, &with_client(Some("c1")))
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::Overloaded, "{err}");
+        assert!(err.message.contains("quota"), "{err}");
+        // …while other clients and unattributed requests still get in
+        let _h3 = engine
+            .submit_opts("cnf_a", 0.5, vec![0.1, 0.2], 1, &with_client(Some("c2")))
+            .unwrap();
+        let _h4 = engine.submit_opts("cnf_a", 0.5, vec![0.1, 0.2], 1, &with_client(None)).unwrap();
+        assert_eq!(engine.metrics().overload_rejects.load(Relaxed), 1);
+    });
+}
+
+#[test]
+fn shedding_evicts_low_priority_rows_and_counts_them() {
+    with_watchdog(60, || {
+        // cap 8 + 10s max_wait: nothing flushes during the test. High-water
+        // at 4 rows; admission off so the queue genuinely overfills.
+        let engine = native_engine_slo(
+            "shed",
+            &[("cnf_a", 8)],
+            2,
+            Duration::from_secs(10),
+            SloConfig {
+                admission: false,
+                shed_high_water_rows: 4,
+                ..SloConfig::default()
+            },
+        );
+        let prio = |p: Priority| SubmitOptions {
+            variant: Some("euler_k2".into()),
+            priority: p,
+            ..SubmitOptions::default()
+        };
+        let _high: Vec<_> = (0..4)
+            .map(|i| {
+                engine
+                    .submit_opts("cnf_a", 0.5, vec![0.1 * i as f32, 0.0], 1, &prio(Priority::High))
+                    .unwrap()
+            })
+            .collect();
+        // each low-priority submit pushes the queue past the high-water
+        // mark and is immediately shed — the submit itself succeeds, the
+        // completion carries the frozen overloaded code
+        for _ in 0..2 {
+            let h = engine
+                .submit_opts("cnf_a", 0.5, vec![0.0, 0.0], 1, &prio(Priority::Low))
+                .unwrap();
+            let err = h.wait().unwrap_err();
+            assert_eq!(err.code, ErrorCode::Overloaded, "{err}");
+            assert!(err.message.contains("shed"), "{err}");
+        }
+        let m = engine.metrics();
+        assert_eq!(m.shed.load(Relaxed), 2);
+        // shed rows are failures, not deadline misses or admission rejects
+        assert_eq!(m.overload_rejects.load(Relaxed), 0);
+        assert_eq!(m.deadline_misses.load(Relaxed), 0);
+        assert_eq!(m.failures.load(Relaxed), 2);
     });
 }
