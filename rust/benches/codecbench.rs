@@ -1,0 +1,165 @@
+//! Codec bench (ours) — the API v1 JSON-line codec against the API v2
+//! binary framed codec, encode and decode, on the wide request shape the
+//! serving benches use (512 rows × 64 dims by default ⇒ 128 KiB of row
+//! data per message).
+//!
+//! v1 pays a text round trip per float (format on encode, parse on
+//! decode, plus a `Vec<Vec<f32>>` of row allocations); v2 writes the rows
+//! once as little-endian bytes behind a small JSON header and reads them
+//! back straight into the contiguous block the batcher consumes. The
+//! decode side is the one the server's hot path cares about — the
+//! trajectory gate holds v2 decode strictly above v1.
+//!
+//! ```bash
+//! cargo bench --bench codecbench
+//! cargo bench --bench codecbench -- --rows 2048 --dims 16
+//! ```
+//!
+//! Results go to `BENCH_codec.json` (override with `BENCH_JSON`) and the
+//! headline ratios are appended to the rolling `BENCH_trajectory.json`.
+
+use hypersolvers::api::v1::{InferRequest, InferResponse};
+use hypersolvers::api::{v1, v2};
+use hypersolvers::util::benchkit::{self, Bench, Measurement, Table};
+use hypersolvers::util::cli::Cli;
+use hypersolvers::util::json::{self, Value};
+use hypersolvers::util::prng::Rng;
+
+fn main() {
+    let args = Cli::new("codecbench — v1 JSON lines vs v2 binary frames")
+        .opt("rows", "512", "rows per request")
+        .opt("dims", "64", "values per row")
+        .opt("measure-ms", "400", "wall-clock budget per measurement")
+        .parse_env();
+    let rows = args.get_usize("rows").max(1);
+    let dims = args.get_usize("dims").max(1);
+    let payload_bytes = rows * dims * 4;
+
+    let mut rng = Rng::new(21);
+    let input: Vec<f32> = (0..rows * dims).map(|_| rng.normal_f32()).collect();
+    let mut req = InferRequest::batch("cnf_wide", 0.5, rows, input);
+    req.id = Some(1);
+    req.deadline_us = Some(250_000);
+    let resp = InferResponse {
+        id: 1,
+        variant: "euler_k2".into(),
+        mape: 0.25,
+        nfe: 2,
+        latency_us: 900,
+        batch_fill: 1.0,
+        samples: rows,
+        dims,
+        output: (0..rows * dims).map(|_| rng.normal_f32()).collect(),
+    };
+
+    // pre-encoded messages for the decode measurements
+    let v1_line = json::to_string(&v1::encode_request(&req));
+    let v2_frame = v2::encode_request(&req);
+    let v1_resp_line = json::to_string(&v1::encode_response(&resp, 1));
+    let v2_resp_frame = v2::encode_response(&resp);
+    println!(
+        "rows={rows} dims={dims}  payload {payload_bytes} B  \
+         v1 line {} B  v2 frame {} B",
+        v1_line.len(),
+        v2_frame.len()
+    );
+
+    let b = Bench::with_budget(args.get_usize("measure-ms") as u64);
+
+    let enc_v1 = b.run("encode v1", || {
+        std::hint::black_box(json::to_string(&v1::encode_request(&req)));
+    });
+    let enc_v2 = b.run("encode v2", || {
+        std::hint::black_box(v2::encode_request(&req));
+    });
+    let dec_v1 = b.run("decode v1", || {
+        let v = json::parse(&v1_line).unwrap();
+        let (r, _) = v1::decode_request(&v).unwrap();
+        std::hint::black_box(r);
+    });
+    let dec_v2 = b.run("decode v2", || {
+        let frame = v2::read_frame(&mut &v2_frame[..]).unwrap();
+        std::hint::black_box(v2::decode_request(frame).unwrap());
+    });
+    let dec_resp_v1 = b.run("decode v1 response", || {
+        let v = json::parse(&v1_resp_line).unwrap();
+        std::hint::black_box(v1::decode_reply(&v).unwrap());
+    });
+    let dec_resp_v2 = b.run("decode v2 response", || {
+        let frame = v2::read_frame(&mut &v2_resp_frame[..]).unwrap();
+        std::hint::black_box(v2::decode_reply(frame).unwrap());
+    });
+
+    // MB/s over the *row payload*: both codecs move the same rows·dims·4
+    // bytes of f32 data, so this is the apples-to-apples rate (v1's actual
+    // wire bytes are larger — the text expansion is part of its cost)
+    let mbps = |m: &Measurement| payload_bytes as f64 / (1024.0 * 1024.0) / m.mean.as_secs_f64();
+    let us_per_row = |m: &Measurement| m.mean_us() / rows as f64;
+
+    let mut table = Table::new(&["op", "mean µs", "µs/row", "payload MB/s"]);
+    for m in [&enc_v1, &enc_v2, &dec_v1, &dec_v2, &dec_resp_v1, &dec_resp_v2] {
+        table.row(&[
+            m.name.clone(),
+            format!("{:.1}", m.mean_us()),
+            format!("{:.3}", us_per_row(m)),
+            format!("{:.1}", mbps(m)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\ndecode speedup v2/v1: requests ×{:.1}, responses ×{:.1}",
+        dec_v1.mean.as_secs_f64() / dec_v2.mean.as_secs_f64(),
+        dec_resp_v1.mean.as_secs_f64() / dec_resp_v2.mean.as_secs_f64()
+    );
+
+    let m_json = |m: &Measurement| {
+        json::obj(vec![
+            ("op", json::s(&m.name)),
+            ("mean_us", json::num(m.mean_us())),
+            ("us_per_row", json::num(us_per_row(m))),
+            ("payload_mb_per_s", json::num(mbps(m))),
+            ("iters", json::num(m.iters as f64)),
+        ])
+    };
+    let doc = benchkit::bench_doc(
+        "codecbench",
+        vec![
+            ("rows", json::num(rows as f64)),
+            ("dims", json::num(dims as f64)),
+            ("payload_bytes", json::num(payload_bytes as f64)),
+            ("v1_line_bytes", json::num(v1_line.len() as f64)),
+            ("v2_frame_bytes", json::num(v2_frame.len() as f64)),
+            (
+                "ops",
+                Value::Arr(
+                    [&enc_v1, &enc_v2, &dec_v1, &dec_v2, &dec_resp_v1, &dec_resp_v2]
+                        .into_iter()
+                        .map(m_json)
+                        .collect(),
+                ),
+            ),
+        ],
+    );
+    match benchkit::write_bench_json("BENCH_codec.json", &doc) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write bench JSON: {e}"),
+    }
+
+    let entry = benchkit::bench_doc(
+        "codecbench",
+        vec![
+            ("rows", json::num(rows as f64)),
+            ("dims", json::num(dims as f64)),
+            ("v1_decode_mbps", json::num(mbps(&dec_v1))),
+            ("v2_decode_mbps", json::num(mbps(&dec_v2))),
+            (
+                "v2_over_v1_decode",
+                json::num(dec_v1.mean.as_secs_f64() / dec_v2.mean.as_secs_f64()),
+            ),
+        ],
+    );
+    match benchkit::append_trajectory(entry) {
+        Ok(path) => println!("appended to {}", path.display()),
+        Err(e) => eprintln!("failed to append bench trajectory: {e}"),
+    }
+}

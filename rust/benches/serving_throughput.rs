@@ -71,6 +71,14 @@ fn main() {
              this size and emit paired off/on rows",
         )
         .opt(
+            "wide-requests",
+            "200",
+            "requests per wide v1-vs-v2 pipelined scenario (native only; \
+             0 disables)",
+        )
+        .opt("wide-rows", "512", "rows per request in the wide scenario")
+        .opt("wide-dims", "64", "state dimension of the wide scenario task")
+        .opt(
             "overload-factor",
             "3",
             "open-loop overload scenario: offered rate as a multiple of \
@@ -402,6 +410,151 @@ fn main() {
         );
     }
 
+    // ---- wide pipelined TCP: v1 JSON lines vs v2 binary frames ----
+    //
+    // The codec A/B the wire-protocol work is judged on. One synthetic
+    // wide task ([rows × dims] per request, 512×64 by default ⇒ 128 KiB of
+    // row data per request) with a deliberately cheap euler_k2 variant, so
+    // end-to-end latency is dominated by the wire path: encode, socket,
+    // decode, batch assembly. Same engine shape, same workload, same
+    // window — the only difference between the paired runs is the dialect
+    // the client negotiates.
+    let wide_requests = args.get_usize("wide-requests");
+    let mut wide_headline: Option<(f64, f64)> = None; // (v1 p50, v2 p50)
+    if wide_requests > 0 && matches!(backend, BackendKind::Native) {
+        let wide_task = "cnf_wide";
+        let wide_rows = args.get_usize("wide-rows").max(1);
+        let wide_dims = args.get_usize("wide-dims").max(1);
+        let wide_dir =
+            fixtures::temp_wide_native_artifacts("bench_wide", wide_task, wide_rows, wide_dims)
+                .expect("write wide fixtures");
+        let mut wide_pair = (0.0f64, 0.0f64);
+        for &use_v2 in &[false, true] {
+            let dialect = if use_v2 { "v2" } else { "v1" };
+            let scenario = format!("pipelined wide {dialect}");
+            let engine = Arc::new(
+                Engine::new(EngineConfig {
+                    artifacts_dir: wide_dir.clone(),
+                    max_wait: Duration::from_millis(2),
+                    policy: Policy::MinMacs,
+                    backend,
+                    workers: args.get_usize("workers"),
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+            engine.warmup(wide_task).unwrap();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            {
+                let engine = Arc::clone(&engine);
+                std::thread::spawn(move || {
+                    let _ = server::serve_listener(engine, listener);
+                });
+            }
+            let mut client = server::Client::connect(&addr).unwrap();
+            if use_v2 {
+                assert!(client.prefer_v2().unwrap(), "server must offer v2");
+            }
+
+            let mut rng = Rng::new(13);
+            let t0 = Instant::now();
+            let mut sent_at: HashMap<u64, Instant> = HashMap::with_capacity(window);
+            let mut latencies: Vec<f64> = Vec::with_capacity(wide_requests);
+            let mut rows_done = 0usize;
+            let mut next = 0usize;
+            let send_one = |client: &mut server::Client,
+                                sent_at: &mut HashMap<u64, Instant>,
+                                rng: &mut Rng| {
+                let input: Vec<f32> =
+                    (0..wide_rows * wide_dims).map(|_| rng.normal_f32()).collect();
+                let req = InferRequest::batch(wide_task, 0.5, wide_rows, input);
+                let id = client.send(&req).unwrap();
+                sent_at.insert(id, Instant::now());
+            };
+            while next < wide_requests.min(window) {
+                send_one(&mut client, &mut sent_at, &mut rng);
+                next += 1;
+            }
+            while latencies.len() < wide_requests {
+                let reply = client.recv_reply().unwrap();
+                let id = reply.id().expect("reply without id");
+                let at = sent_at.remove(&id).expect("unmatched reply id");
+                latencies.push(at.elapsed().as_secs_f64() * 1e3);
+                match reply {
+                    InferReply::Ok(r) => rows_done += r.samples,
+                    InferReply::Err(e) => panic!("wide request failed: {}", e.error),
+                }
+                if next < wide_requests {
+                    send_one(&mut client, &mut sent_at, &mut rng);
+                    next += 1;
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            assert!(sent_at.is_empty(), "unanswered ids: {}", sent_at.len());
+
+            let achieved_rps = wide_requests as f64 / wall;
+            // request + response rows both cross the wire; count one side
+            let wire_mb_s = (rows_done * wide_dims * 4) as f64 / (1024.0 * 1024.0) / wall;
+            let (p50, p95, p99) = (
+                stats::percentile(&latencies, 50.0),
+                stats::percentile(&latencies, 95.0),
+                stats::percentile(&latencies, 99.0),
+            );
+            if use_v2 {
+                wide_pair.1 = p50;
+            } else {
+                wide_pair.0 = p50;
+            }
+            let metrics = engine.metrics();
+            table.row(&[
+                scenario.clone(),
+                "0".into(),
+                wide_requests.to_string(),
+                "-".into(),
+                format!("{achieved_rps:.0}"),
+                format!("{p50:.2}"),
+                format!("{p99:.2}"),
+                format!("{:.2}", metrics.fill_ratio()),
+                "-".into(),
+                metrics.inflight_peak.load(Relaxed).to_string(),
+            ]);
+            scenarios_json.push(json::obj(vec![
+                ("scenario", json::s(&scenario)),
+                (
+                    "mode",
+                    json::s(if use_v2 { "tcp_pipelined_v2" } else { "tcp_pipelined" }),
+                ),
+                ("task", json::s(wide_task)),
+                ("requests", json::num(wide_requests as f64)),
+                ("window", json::num(window as f64)),
+                ("rows_per_req", json::num(wide_rows as f64)),
+                ("dims", json::num(wide_dims as f64)),
+                ("rows", json::num(rows_done as f64)),
+                ("throughput_rps", json::num(achieved_rps)),
+                ("throughput_rows_per_s", json::num(rows_done as f64 / wall)),
+                ("payload_mb_per_s", json::num(wire_mb_s)),
+                ("p50_ms", json::num(p50)),
+                ("p95_ms", json::num(p95)),
+                ("p99_ms", json::num(p99)),
+            ]));
+            println!(
+                "[{scenario}] window={window} rows={rows_done} \
+                 payload {wire_mb_s:.1} MB/s"
+            );
+        }
+        println!(
+            "\n[wide] {wide_rows}×{wide_dims} pipelined p50: v1 {:.2} ms vs v2 {:.2} ms",
+            wide_pair.0, wide_pair.1
+        );
+        wide_headline = Some(wide_pair);
+    } else if wide_requests > 0 {
+        println!(
+            "\n[wide] skipped: the v1-vs-v2 scenario needs the native \
+             backend's synthetic wide fixture"
+        );
+    }
+
     // ---- open-loop overload: SLO admission control + shedding ----
     //
     // A heavy synthetic task (128-wide MLP field, dopri5-pinned) gives the
@@ -628,6 +781,10 @@ fn main() {
             ("mixed_p50_ms", json::num(p50)),
             ("mixed_throughput_rps", json::num(rps)),
         ];
+        if let Some((v1_p50, v2_p50)) = wide_headline {
+            fields.push(("pipelined_big_v1_p50_ms", json::num(v1_p50)));
+            fields.push(("pipelined_big_v2_p50_ms", json::num(v2_p50)));
+        }
         if let Some((goodput_on, goodput_off)) = overload_headline {
             fields.push(("overload_goodput", json::num(goodput_on)));
             fields.push(("overload_goodput_baseline", json::num(goodput_off)));

@@ -6,6 +6,10 @@
 //! * [`v1`] — the typed [`v1::InferRequest`]/[`v1::InferResponse`] structs
 //!   and the JSON-lines codec (v1 lines tagged `"v": 1`; legacy v0 lines
 //!   still decoded and answered with a deprecation notice).
+//! * [`v2`] — the binary framed codec over the *same* typed structs: a
+//!   small JSON header plus raw little-endian f32 row data, zero-copy in
+//!   both directions. Routed by a one-byte frame magic, so v0/v1/v2
+//!   coexist on one port.
 //!
 //! The TCP server ([`crate::coordinator::server`]), the pipelined
 //! [`Client`](crate::coordinator::server::Client), and the Pareto serve
@@ -15,5 +19,6 @@
 
 pub mod error;
 pub mod v1;
+pub mod v2;
 
 pub use error::{ApiError, ErrorCode};

@@ -186,7 +186,7 @@ impl InferReply {
 // Strict field readers
 // ---------------------------------------------------------------------------
 
-fn field_u64(v: &Value, key: &str) -> Result<Option<u64>, ApiError> {
+pub(crate) fn field_u64(v: &Value, key: &str) -> Result<Option<u64>, ApiError> {
     match v.get(key) {
         None => Ok(None),
         Some(x) => {
@@ -203,7 +203,7 @@ fn field_u64(v: &Value, key: &str) -> Result<Option<u64>, ApiError> {
     }
 }
 
-fn field_str(v: &Value, key: &str) -> Result<Option<&str>, ApiError> {
+pub(crate) fn field_str(v: &Value, key: &str) -> Result<Option<&str>, ApiError> {
     match v.get(key) {
         None => Ok(None),
         Some(Value::Str(s)) => Ok(Some(s)),
@@ -225,8 +225,9 @@ pub fn wire_version(v: &Value) -> Result<u8, ApiError> {
         Some(x) => match x.as_f64() {
             Some(n) if n == VERSION as f64 => Ok(1),
             _ => Err(ApiError::bad_request(format!(
-                "unsupported protocol version {x:?} (this server speaks v{VERSION} \
-                 and legacy v0 lines)"
+                "unsupported protocol version {x:?} (JSON lines speak v{VERSION} \
+                 or legacy v0; v2 is a binary frame, not a JSON line — see \
+                 rust/README.md §\"Wire protocol v2\")"
             ))),
         },
     }
@@ -273,8 +274,41 @@ pub fn decode_request(v: &Value) -> Result<(InferRequest, u8), ApiError> {
         ));
     }
 
-    let budget = match v.get("budget") {
-        None => f32::INFINITY,
+    let budget = decode_budget(v)?;
+
+    // the v1-only fields: on v0 lines they are ignored entirely, exactly
+    // as the pre-v1 server (which read only task/budget/input) did — a
+    // legacy client whose lines carry extraneous keys must keep working
+    let meta = if version == 1 {
+        decode_meta(v)?
+    } else {
+        WireMeta::default()
+    };
+
+    Ok((
+        InferRequest {
+            id: meta.id,
+            task,
+            samples,
+            dims,
+            input,
+            budget,
+            policy: meta.policy,
+            variant: meta.variant,
+            deadline_us: meta.deadline_us,
+            priority: meta.priority,
+            client: meta.client,
+        },
+        version,
+    ))
+}
+
+/// Strict read of the `budget` field (absent = infinite = cheapest
+/// available) — shared by the v1 line codec and the v2 frame header, so
+/// the dialects cannot drift on what a malformed budget means.
+pub(crate) fn decode_budget(v: &Value) -> Result<f32, ApiError> {
+    match v.get("budget") {
+        None => Ok(f32::INFINITY),
         Some(b) => {
             let b = b.as_f64().ok_or_else(|| {
                 ApiError::bad_request("budget must be a number (e.g. 0.05, not \"0.05\")")
@@ -282,60 +316,54 @@ pub fn decode_request(v: &Value) -> Result<(InferRequest, u8), ApiError> {
             if b.is_nan() {
                 return Err(ApiError::bad_request("budget must not be NaN"));
             }
-            b as f32
+            Ok(b as f32)
+        }
+    }
+}
+
+/// The optional request metadata shared by the v1 line and the v2 frame
+/// header: correlation id, policy axis, pinned variant, deadline,
+/// priority class, client identity.
+#[derive(Debug, Default)]
+pub(crate) struct WireMeta {
+    pub id: Option<u64>,
+    pub policy: Option<Policy>,
+    pub variant: Option<String>,
+    pub deadline_us: Option<u64>,
+    pub priority: Priority,
+    pub client: Option<String>,
+}
+
+/// Strict decode of the [`WireMeta`] fields from a request object — the
+/// one mapping both codecs apply, so v2 headers inherit v1's semantics
+/// (and its loud rejections) field for field.
+pub(crate) fn decode_meta(v: &Value) -> Result<WireMeta, ApiError> {
+    let policy = match field_str(v, "policy")? {
+        None => None,
+        Some("nfe") => Some(Policy::MinNfe),
+        Some("macs") => Some(Policy::MinMacs),
+        Some(other) => {
+            return Err(ApiError::bad_request(format!(
+                "policy must be \"nfe\" or \"macs\", got {other:?}"
+            )))
         }
     };
-
-    // the v1-only fields: on v0 lines they are ignored entirely, exactly
-    // as the pre-v1 server (which read only task/budget/input) did — a
-    // legacy client whose lines carry extraneous keys must keep working
-    let (id, policy, variant, deadline_us, priority, client) = if version == 1 {
-        let policy = match field_str(v, "policy")? {
-            None => None,
-            Some("nfe") => Some(Policy::MinNfe),
-            Some("macs") => Some(Policy::MinMacs),
-            Some(other) => {
-                return Err(ApiError::bad_request(format!(
-                    "policy must be \"nfe\" or \"macs\", got {other:?}"
-                )))
-            }
-        };
-        let priority = match field_str(v, "priority")? {
-            None => Priority::default(),
-            Some(s) => Priority::from_wire(s).ok_or_else(|| {
-                ApiError::bad_request(format!(
-                    "priority must be \"low\", \"normal\" or \"high\", got {s:?}"
-                ))
-            })?,
-        };
-        (
-            field_u64(v, "id")?,
-            policy,
-            field_str(v, "variant")?.map(str::to_string),
-            field_u64(v, "deadline_us")?,
-            priority,
-            field_str(v, "client")?.map(str::to_string),
-        )
-    } else {
-        (None, None, None, None, Priority::default(), None)
+    let priority = match field_str(v, "priority")? {
+        None => Priority::default(),
+        Some(s) => Priority::from_wire(s).ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "priority must be \"low\", \"normal\" or \"high\", got {s:?}"
+            ))
+        })?,
     };
-
-    Ok((
-        InferRequest {
-            id,
-            task,
-            samples,
-            dims,
-            input,
-            budget,
-            policy,
-            variant,
-            deadline_us,
-            priority,
-            client,
-        },
-        version,
-    ))
+    Ok(WireMeta {
+        id: field_u64(v, "id")?,
+        policy,
+        variant: field_str(v, "variant")?.map(str::to_string),
+        deadline_us: field_u64(v, "deadline_us")?,
+        priority,
+        client: field_str(v, "client")?.map(str::to_string),
+    })
 }
 
 /// Encode a request as a v1 wire line. An infinite budget is omitted
@@ -347,6 +375,14 @@ pub fn encode_request(r: &InferRequest) -> Value {
         ("task", json::s(&r.task)),
         ("input", rows_value(&r.input, r.samples, r.dims)),
     ];
+    push_meta_fields(&mut fields, r);
+    json::obj(fields)
+}
+
+/// Append the optional request fields shared by the v1 line and the v2
+/// frame header, with the frozen omission conventions (absent id, infinite
+/// budget, `normal` priority are all omitted — golden-byte stability).
+pub(crate) fn push_meta_fields(fields: &mut Vec<(&'static str, Value)>, r: &InferRequest) {
     if let Some(id) = r.id {
         fields.push(("id", json::num(id as f64)));
     }
@@ -374,7 +410,6 @@ pub fn encode_request(r: &InferRequest) -> Value {
     if let Some(c) = &r.client {
         fields.push(("client", json::s(c)));
     }
-    json::obj(fields)
 }
 
 fn rows_value(data: &[f32], samples: usize, dims: usize) -> Value {

@@ -1,0 +1,504 @@
+//! Serving API **v2**: a length-prefixed binary framing of the same typed
+//! protocol [`crate::api::v1`] speaks — a small JSON header plus raw
+//! little-endian `f32` row data, so a `[rows, dims]` payload crosses the
+//! wire without a per-float text parse and deserializes straight into the
+//! engine's contiguous [`RowBlock`](crate::coordinator::RowBlock).
+//!
+//! ```text
+//! offset  size          field
+//! 0       1             magic 0xB2 (never a valid JSON/UTF-8 first byte)
+//! 1       1             kind: 1 = request, 2 = response, 3 = error
+//! 2       4             header_len  (u32, little-endian)
+//! 6       4             payload_len (u32, little-endian, bytes; = 4·rows·dims)
+//! 10      header_len    JSON header ({"v":2, ...}; same fields as the v1
+//!                       line minus input/output, plus "rows"/"dims")
+//! 10+h    payload_len   raw little-endian f32 rows, row-major [rows, dims]
+//! ```
+//!
+//! Request headers carry `task`/`rows`/`dims` plus the optional v1 fields
+//! (`id`, `budget`, `policy`, `variant`, `deadline_us`, `priority`,
+//! `client`) with **identical** strict semantics — both codecs decode the
+//! metadata through the same `api::v1` readers, so v2 cannot drift from
+//! v1 field by field. Response and error headers mirror the v1 reply
+//! shapes (`ok`, `id`, `variant`, `mape`, `nfe`, `latency_us`,
+//! `batch_fill`, `code`, `error`); error frames have an empty payload.
+//!
+//! A server sniffs the first byte of each message to route it: `0xB2`
+//! means a v2 frame, anything else is a JSON line (v0/v1) — all three
+//! dialects coexist on one port and one connection. Malformed frames
+//! (bad magic, truncated header, length overflow, ragged row payload) are
+//! answered with a loud `bad_request` error frame, never a panic or a
+//! silent truncation; since binary framing cannot be resynchronized after
+//! garbage, the server then closes the connection.
+
+use std::io::Read;
+
+use crate::api::error::{ApiError, ErrorCode};
+use crate::api::v1::{self, ErrorReply, InferReply, InferRequest, InferResponse};
+use crate::util::json::{self, Value};
+
+/// The protocol version this module speaks (the header's `"v"` value).
+pub const VERSION: u64 = 2;
+
+/// First byte of every v2 frame. `0xB2` is not `{` (0x7B), not whitespace,
+/// and not a valid leading UTF-8 byte — a JSON-lines peer can never emit
+/// it as the first byte of a message, so one-byte sniffing is unambiguous.
+pub const FRAME_MAGIC: u8 = 0xB2;
+
+/// Frame kinds (byte 1).
+pub const KIND_REQUEST: u8 = 1;
+pub const KIND_RESPONSE: u8 = 2;
+pub const KIND_ERROR: u8 = 3;
+
+/// Fixed prefix: magic + kind + header_len (u32le) + payload_len (u32le).
+pub const FRAME_PREFIX_LEN: usize = 10;
+
+/// Hard cap on the JSON header (metadata only — row data never lives
+/// here); a bigger claim is a corrupt or hostile frame.
+pub const MAX_HEADER_BYTES: usize = 64 * 1024;
+
+/// Hard cap on the row payload (64 MiB ≈ a 65536×256 f32 block, far above
+/// any exported batch); a bigger claim is rejected before allocating.
+pub const MAX_PAYLOAD_BYTES: usize = 64 * 1024 * 1024;
+
+/// One decoded frame: kind, parsed JSON header, and the payload as `f32`
+/// values (empty for error frames).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: u8,
+    pub header: Value,
+    pub payload: Vec<f32>,
+}
+
+/// Why a frame failed to read: `Io` is a transport failure (including a
+/// stream truncated mid-frame); `Bad` is a structurally invalid frame the
+/// peer should be told about (`bad_request`) before the connection drops.
+#[derive(Debug)]
+pub enum FrameError {
+    Io(std::io::Error),
+    Bad(ApiError),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "v2 frame io error: {e}"),
+            FrameError::Bad(e) => write!(f, "v2 frame error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<FrameError> for crate::Error {
+    fn from(e: FrameError) -> crate::Error {
+        match e {
+            FrameError::Io(e) => crate::Error::Io(e),
+            FrameError::Bad(e) => e.into(),
+        }
+    }
+}
+
+/// True when the stream was cut mid-frame — the one `Io` case that still
+/// deserves a loud `bad_request` ("truncated frame") reply attempt.
+pub fn is_truncation(e: &FrameError) -> bool {
+    matches!(e, FrameError::Io(io) if io.kind() == std::io::ErrorKind::UnexpectedEof)
+}
+
+fn bad(msg: impl Into<String>) -> FrameError {
+    FrameError::Bad(ApiError::bad_request(msg))
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level frame I/O
+// ---------------------------------------------------------------------------
+
+/// Append `rows` to `out` as raw little-endian f32 bytes — on
+/// little-endian targets a single `extend_from_slice` of the reinterpreted
+/// block (the symmetric zero-copy of the decode path).
+fn extend_rows_le(out: &mut Vec<u8>, rows: &[f32]) {
+    #[cfg(target_endian = "little")]
+    {
+        // SAFETY: an initialized `[f32]` is plain-old-data; viewing its
+        // rows.len() * 4 bytes as `[u8]` (alignment 1 ≤ 4) is always
+        // valid, and the view ends before `out` can reallocate or `rows`
+        // can move.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(rows.as_ptr().cast::<u8>(), rows.len() * 4)
+        };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    for x in rows {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Read `n` little-endian f32 values, filling the target vec's bytes in
+/// place — no intermediate byte buffer, no per-float parse.
+fn read_rows_le(r: &mut impl Read, n: usize) -> std::io::Result<Vec<f32>> {
+    let mut out = vec![0f32; n];
+    {
+        // SAFETY: `out` owns n initialized f32s; viewing them as n * 4
+        // bytes (alignment 1 ≤ 4) for the duration of the read is valid,
+        // and every byte pattern is a valid f32.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(out.as_mut_ptr().cast::<u8>(), n * 4)
+        };
+        r.read_exact(bytes)?;
+    }
+    #[cfg(not(target_endian = "little"))]
+    for x in &mut out {
+        *x = f32::from_bits(x.to_bits().swap_bytes());
+    }
+    Ok(out)
+}
+
+/// Serialize one frame: prefix + header JSON + payload rows.
+fn frame_bytes(kind: u8, header: &Value, payload: &[f32]) -> Vec<u8> {
+    let h = json::to_string(header).into_bytes();
+    debug_assert!(h.len() <= MAX_HEADER_BYTES, "header exceeds the frame cap");
+    let mut out = Vec::with_capacity(FRAME_PREFIX_LEN + h.len() + payload.len() * 4);
+    out.push(FRAME_MAGIC);
+    out.push(kind);
+    out.extend_from_slice(&(h.len() as u32).to_le_bytes());
+    out.extend_from_slice(&((payload.len() * 4) as u32).to_le_bytes());
+    out.extend_from_slice(&h);
+    extend_rows_le(&mut out, payload);
+    out
+}
+
+/// Read one complete frame (prefix, header, payload) from `r`, applying
+/// the hardening limits. The caller has usually sniffed (not consumed)
+/// the magic byte; this reads and re-checks it.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, FrameError> {
+    let mut prefix = [0u8; FRAME_PREFIX_LEN];
+    r.read_exact(&mut prefix).map_err(FrameError::Io)?;
+    if prefix[0] != FRAME_MAGIC {
+        return Err(bad(format!(
+            "bad v2 frame magic 0x{:02x} (want 0x{FRAME_MAGIC:02x})",
+            prefix[0]
+        )));
+    }
+    let kind = prefix[1];
+    if !matches!(kind, KIND_REQUEST | KIND_RESPONSE | KIND_ERROR) {
+        return Err(bad(format!("unknown v2 frame kind {kind}")));
+    }
+    let header_len = u32::from_le_bytes(prefix[2..6].try_into().expect("4 bytes")) as usize;
+    let payload_len = u32::from_le_bytes(prefix[6..10].try_into().expect("4 bytes")) as usize;
+    if header_len == 0 {
+        return Err(bad("v2 frame declares an empty header"));
+    }
+    if header_len > MAX_HEADER_BYTES {
+        return Err(bad(format!(
+            "v2 frame header of {header_len} bytes overflows the {MAX_HEADER_BYTES}-byte cap"
+        )));
+    }
+    if payload_len > MAX_PAYLOAD_BYTES {
+        return Err(bad(format!(
+            "v2 frame payload of {payload_len} bytes overflows the {MAX_PAYLOAD_BYTES}-byte cap"
+        )));
+    }
+    if payload_len % 4 != 0 {
+        return Err(bad(format!(
+            "v2 frame payload of {payload_len} bytes is not a whole number of f32 rows"
+        )));
+    }
+    let mut hbuf = vec![0u8; header_len];
+    r.read_exact(&mut hbuf).map_err(FrameError::Io)?;
+    let htext = std::str::from_utf8(&hbuf)
+        .map_err(|_| bad("v2 frame header is not UTF-8"))?;
+    let header = json::parse(htext)
+        .map_err(|e| bad(format!("v2 frame header is not valid JSON: {e}")))?;
+    let payload = read_rows_le(r, payload_len / 4).map_err(FrameError::Io)?;
+    Ok(Frame {
+        kind,
+        header,
+        payload,
+    })
+}
+
+/// Header `"v"` must be exactly this module's version (strict, like v1's
+/// line tag — an unknown version must fail loudly, not guess).
+fn check_version(header: &Value) -> Result<(), ApiError> {
+    if header.as_obj().is_none() {
+        return Err(ApiError::bad_request("v2 frame header must be a JSON object"));
+    }
+    match header.get("v").and_then(Value::as_f64) {
+        Some(n) if n == VERSION as f64 => Ok(()),
+        other => Err(ApiError::bad_request(format!(
+            "v2 frame header carries version {other:?}, want {VERSION}"
+        ))),
+    }
+}
+
+/// Strict read of a required non-negative integer header field.
+fn required_u64(header: &Value, key: &str) -> Result<u64, ApiError> {
+    v1::field_u64(header, key)?
+        .ok_or_else(|| ApiError::bad_request(format!("v2 frame header missing {key}")))
+}
+
+/// Check the header's declared `[rows, dims]` against the payload the
+/// frame actually carried — a ragged payload is a loud `bad_request`.
+fn check_rows_dims(rows: u64, dims: u64, got: usize) -> Result<(usize, usize), ApiError> {
+    if rows == 0 || dims == 0 {
+        return Err(ApiError::bad_request("v2 frame carries no rows"));
+    }
+    let want = (rows as usize)
+        .checked_mul(dims as usize)
+        .filter(|w| *w <= MAX_PAYLOAD_BYTES / 4)
+        .ok_or_else(|| {
+            ApiError::bad_request(format!("v2 frame declares {rows}×{dims} rows — overflow"))
+        })?;
+    if want != got {
+        return Err(ApiError::bad_request(format!(
+            "v2 frame payload carries {got} values but the header declares \
+             {rows}×{dims} = {want}"
+        )));
+    }
+    Ok((rows as usize, dims as usize))
+}
+
+// ---------------------------------------------------------------------------
+// Request codec
+// ---------------------------------------------------------------------------
+
+/// Encode a typed request as one v2 frame: the metadata header (same
+/// omission conventions as the v1 line) plus the raw row payload.
+pub fn encode_request(r: &InferRequest) -> Vec<u8> {
+    let mut fields = vec![
+        ("v", json::num(VERSION as f64)),
+        ("task", json::s(&r.task)),
+        ("rows", json::num(r.samples as f64)),
+        ("dims", json::num(r.dims as f64)),
+    ];
+    v1::push_meta_fields(&mut fields, r);
+    frame_bytes(KIND_REQUEST, &json::obj(fields), &r.input)
+}
+
+/// Decode a request frame into the typed form, moving the payload (the
+/// frame's row block becomes the request's input with no copy). Strict:
+/// every malformed header field is a [`ErrorCode::BadRequest`].
+pub fn decode_request(f: Frame) -> Result<InferRequest, ApiError> {
+    if f.kind != KIND_REQUEST {
+        return Err(ApiError::bad_request(format!(
+            "expected a request frame (kind {KIND_REQUEST}), got kind {}",
+            f.kind
+        )));
+    }
+    check_version(&f.header)?;
+    let task = v1::field_str(&f.header, "task")?
+        .ok_or_else(|| ApiError::bad_request("v2 frame header missing task"))?
+        .to_string();
+    let rows = required_u64(&f.header, "rows")?;
+    let dims = required_u64(&f.header, "dims")?;
+    let (samples, dims) = check_rows_dims(rows, dims, f.payload.len())?;
+    let budget = v1::decode_budget(&f.header)?;
+    let meta = v1::decode_meta(&f.header)?;
+    Ok(InferRequest {
+        id: meta.id,
+        task,
+        samples,
+        dims,
+        input: f.payload,
+        budget,
+        policy: meta.policy,
+        variant: meta.variant,
+        deadline_us: meta.deadline_us,
+        priority: meta.priority,
+        client: meta.client,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Reply codec
+// ---------------------------------------------------------------------------
+
+/// Encode a success reply as one v2 frame; the output rows ride as the
+/// raw payload.
+pub fn encode_response(r: &InferResponse) -> Vec<u8> {
+    let header = json::obj(vec![
+        ("v", json::num(VERSION as f64)),
+        ("ok", Value::Bool(true)),
+        ("id", json::num(r.id as f64)),
+        ("variant", json::s(&r.variant)),
+        ("mape", json::num(r.mape)),
+        ("nfe", json::num(r.nfe as f64)),
+        ("latency_us", json::num(r.latency_us as f64)),
+        ("batch_fill", json::num(r.batch_fill as f64)),
+        ("rows", json::num(r.samples as f64)),
+        ("dims", json::num(r.dims as f64)),
+    ]);
+    frame_bytes(KIND_RESPONSE, &header, &r.output)
+}
+
+/// Encode an error reply as one v2 frame (empty payload). Carries the
+/// same stable `code` strings as every other dialect.
+pub fn encode_error(id: Option<u64>, e: &ApiError) -> Vec<u8> {
+    let mut fields = vec![
+        ("v", json::num(VERSION as f64)),
+        ("ok", Value::Bool(false)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id", json::num(id as f64)));
+    }
+    fields.push(("code", json::s(e.code.as_str())));
+    fields.push(("error", json::s(&e.message)));
+    frame_bytes(KIND_ERROR, &json::obj(fields), &[])
+}
+
+/// Decode one reply frame (client side), moving the payload into the
+/// typed response. Mirrors [`v1::decode_reply`]'s leniency: unknown error
+/// codes degrade to `internal` with the original string kept.
+pub fn decode_reply(f: Frame) -> Result<InferReply, ApiError> {
+    match f.kind {
+        KIND_ERROR => {
+            check_version(&f.header)?;
+            if !f.payload.is_empty() {
+                return Err(ApiError::bad_request(
+                    "v2 error frame carries a non-empty payload",
+                ));
+            }
+            let id = v1::field_u64(&f.header, "id")?;
+            let code_s = v1::field_str(&f.header, "code")?.unwrap_or("internal");
+            let message = v1::field_str(&f.header, "error")?.unwrap_or("").to_string();
+            let error = match ErrorCode::from_wire(code_s) {
+                Some(code) => ApiError::new(code, message),
+                None => ApiError::internal(format!("unknown error code {code_s:?}: {message}")),
+            };
+            Ok(InferReply::Err(ErrorReply { id, error }))
+        }
+        KIND_RESPONSE => {
+            check_version(&f.header)?;
+            if f.header.get("ok").and_then(Value::as_bool) != Some(true) {
+                return Err(ApiError::bad_request(
+                    "v2 response frame must carry ok: true",
+                ));
+            }
+            let id = required_u64(&f.header, "id")?;
+            let rows = required_u64(&f.header, "rows")?;
+            let dims = required_u64(&f.header, "dims")?;
+            let (samples, dims) = check_rows_dims(rows, dims, f.payload.len())?;
+            Ok(InferReply::Ok(InferResponse {
+                id,
+                variant: v1::field_str(&f.header, "variant")?.unwrap_or("").to_string(),
+                mape: f.header.get("mape").and_then(Value::as_f64).unwrap_or(f64::NAN),
+                nfe: v1::field_u64(&f.header, "nfe")?.unwrap_or(0),
+                latency_us: v1::field_u64(&f.header, "latency_us")?.unwrap_or(0),
+                batch_fill: v1::field_u64(&f.header, "batch_fill")?.unwrap_or(0) as usize,
+                samples,
+                dims,
+                output: f.payload,
+            }))
+        }
+        other => Err(ApiError::bad_request(format!(
+            "expected a reply frame, got kind {other}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Priority;
+
+    fn read_all(bytes: &[u8]) -> Result<Frame, FrameError> {
+        let mut cur = bytes;
+        read_frame(&mut cur)
+    }
+
+    #[test]
+    fn request_frames_round_trip_with_v1_parity() {
+        let mut r = InferRequest::batch("cnf_a", 0.25, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        r.id = Some(7);
+        r.variant = Some("euler_k2".into());
+        r.deadline_us = Some(5000);
+        r.priority = Priority::High;
+        r.client = Some("tenant-a".into());
+        let frame = read_all(&encode_request(&r)).unwrap();
+        assert_eq!(frame.kind, KIND_REQUEST);
+        let back = decode_request(frame).unwrap();
+        assert_eq!(back, r);
+        // the same request through the v1 line codec decodes identically
+        let (via_v1, _) = v1::decode_request(&v1::encode_request(&r)).unwrap();
+        assert_eq!(back, via_v1);
+    }
+
+    #[test]
+    fn response_and_error_frames_round_trip() {
+        let resp = InferResponse {
+            id: 9,
+            variant: "hyperheun_k2".into(),
+            mape: 0.02,
+            nfe: 4,
+            latency_us: 812,
+            batch_fill: 4,
+            samples: 2,
+            dims: 2,
+            output: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        match decode_reply(read_all(&encode_response(&resp)).unwrap()).unwrap() {
+            InferReply::Ok(back) => assert_eq!(back, resp),
+            other => panic!("{other:?}"),
+        }
+        for code in ErrorCode::ALL {
+            let e = ApiError::new(code, format!("m-{code}"));
+            match decode_reply(read_all(&encode_error(Some(5), &e)).unwrap()).unwrap() {
+                InferReply::Err(back) => {
+                    assert_eq!(back.id, Some(5));
+                    assert_eq!(back.error, e);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frames_fail_loudly_not_silently() {
+        let good = encode_request(&InferRequest::single("t", 0.5, vec![1.0, 2.0]));
+        // bad magic
+        let mut b = good.clone();
+        b[0] = b'{';
+        assert!(matches!(read_all(&b), Err(FrameError::Bad(e)) if e.code == ErrorCode::BadRequest));
+        // unknown kind
+        let mut b = good.clone();
+        b[1] = 9;
+        assert!(matches!(read_all(&b), Err(FrameError::Bad(_))));
+        // truncated header: cut the stream mid-frame
+        let b = &good[..FRAME_PREFIX_LEN + 3];
+        let err = read_all(b).unwrap_err();
+        assert!(is_truncation(&err), "{err}");
+        // truncated prefix
+        let err = read_all(&good[..4]).unwrap_err();
+        assert!(is_truncation(&err), "{err}");
+        // header length overflow
+        let mut b = good.clone();
+        b[2..6].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(read_all(&b), Err(FrameError::Bad(_))));
+        // payload length overflow
+        let mut b = good.clone();
+        b[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(read_all(&b), Err(FrameError::Bad(_))));
+        // ragged payload: 2 rows × 2 dims declared, 3 values sent
+        let mut r = InferRequest::batch("t", 0.5, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        r.input.pop();
+        let frame = read_all(&encode_request(&r)).unwrap();
+        assert_eq!(decode_request(frame).unwrap_err().code, ErrorCode::BadRequest);
+        // payload not a multiple of 4 bytes
+        let mut b = good.clone();
+        let plen = u32::from_le_bytes(b[6..10].try_into().unwrap());
+        b[6..10].copy_from_slice(&(plen - 1).to_le_bytes());
+        assert!(matches!(read_all(&b), Err(FrameError::Bad(_))));
+    }
+
+    #[test]
+    fn header_version_is_strict() {
+        let good = encode_request(&InferRequest::single("t", 0.5, vec![1.0]));
+        let mut frame = read_all(&good).unwrap();
+        // rewrite the header's version tag: decode must reject it
+        if let Value::Obj(m) = &mut frame.header {
+            m.insert("v".into(), json::num(1.0));
+        }
+        assert_eq!(decode_request(frame).unwrap_err().code, ErrorCode::BadRequest);
+    }
+}

@@ -21,12 +21,21 @@ use crate::coordinator::request::{CompletionSender, Priority, Request};
 /// a loaded scheduler; still small against real serving deadlines.
 pub const DEADLINE_FLUSH_MARGIN: Duration = Duration::from_millis(2);
 
-/// Assemble a padded batch input: `cap` rows of `dim` values. Each slice
-/// contributes `len / dim` consecutive rows (a multi-sample request is one
-/// contiguous row block); remaining fill rows are zeroed. Used by the
-/// engine right before handing a batch to the execution backend.
-pub fn pad_batch(samples: &[&[f32]], cap: usize, dim: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; cap * dim];
+/// Assemble a padded batch input into a reusable buffer: `cap` rows of
+/// `dim` values. Each slice contributes `len / dim` consecutive rows (a
+/// multi-sample request is one contiguous row block); remaining fill rows
+/// are zeroed. This is the dispatch hot path's form — each worker reuses
+/// one buffer across batches (the `RkWorkspace` pattern), so steady-state
+/// batch staging allocates nothing once the buffer has grown to the
+/// largest `cap × dim` it serves.
+pub fn pad_batch_into<'a>(
+    out: &mut Vec<f32>,
+    samples: impl IntoIterator<Item = &'a [f32]>,
+    cap: usize,
+    dim: usize,
+) {
+    out.clear();
+    out.resize(cap * dim, 0.0);
     let mut off = 0usize;
     for s in samples {
         if off >= out.len() {
@@ -36,6 +45,14 @@ pub fn pad_batch(samples: &[&[f32]], cap: usize, dim: usize) -> Vec<f32> {
         out[off..off + n].copy_from_slice(&s[..n]);
         off += n;
     }
+}
+
+/// [`pad_batch_into`] as a pure function returning a fresh `Vec` —
+/// bit-identical output (same clamping, same zero fill), kept for callers
+/// and tests that don't hold a reusable buffer.
+pub fn pad_batch(samples: &[&[f32]], cap: usize, dim: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    pad_batch_into(&mut out, samples.iter().copied(), cap, dim);
     out
 }
 
@@ -56,7 +73,7 @@ impl std::fmt::Debug for Pending {
 /// zero-sample request (which still occupies a batch slot) can never drift
 /// `Queue::rows` against the cap/readiness math.
 pub fn rows(p: &Pending) -> usize {
-    p.req.samples.max(1)
+    p.req.block.rows.max(1)
 }
 
 /// Queue key: (task, variant) — requests routed to the same executable batch
@@ -579,7 +596,7 @@ mod tests {
             let mut popped = 0usize;
             let mut popped_rows = 0usize;
             while let Some(batch) = b.pop_ready(Instant::now(), &busy) {
-                let rows: usize = batch.items.iter().map(|p| p.req.samples).sum();
+                let rows: usize = batch.items.iter().map(|p| p.req.block.rows).sum();
                 prop_assert(rows <= cap, format!("batch rows {rows} > cap {cap}"))?;
                 prop_assert(!batch.items.is_empty(), "empty batch")?;
                 popped += batch.items.len();
@@ -750,6 +767,26 @@ mod tests {
         let b = [5.0f32, 6.0];
         let out = pad_batch(&[&a[..], &b[..]], 4, 2);
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pad_batch_into_reuses_a_buffer_bit_identically() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0];
+        let mut buf = Vec::new();
+        // the buffered form matches the pure form exactly, batch after
+        // batch — including a *smaller* batch reusing a larger buffer,
+        // where stale tail values must be re-zeroed, not leak through
+        pad_batch_into(&mut buf, [&a[..], &b[..]], 4, 2);
+        assert_eq!(buf, pad_batch(&[&a[..], &b[..]], 4, 2));
+        pad_batch_into(&mut buf, [&b[..]], 2, 2);
+        assert_eq!(buf, pad_batch(&[&b[..]], 2, 2));
+        assert_eq!(buf, vec![5.0, 6.0, 0.0, 0.0]);
+        // overflowing input clamps exactly like the pure form
+        let long = [9.0f32; 8];
+        pad_batch_into(&mut buf, [&long[..]], 2, 2);
+        assert_eq!(buf, pad_batch(&[&long[..]], 2, 2));
+        assert_eq!(buf.len(), 4);
     }
 
     #[test]

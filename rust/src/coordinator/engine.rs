@@ -27,11 +27,13 @@ use std::time::{Duration, Instant};
 
 use crate::api::ApiError;
 use crate::coordinator::batcher::{
-    pad_batch, Batcher, Pending, QueueDepth, QueueKey, ReadyBatch,
+    pad_batch_into, Batcher, Pending, QueueDepth, QueueKey, ReadyBatch,
 };
 use crate::coordinator::metrics::CoordinatorMetrics;
 use crate::coordinator::policy::{select_variant, Policy};
-use crate::coordinator::request::{Completion, CompletionSender, Priority, Request, Response};
+use crate::coordinator::request::{
+    Completion, CompletionSender, Priority, Request, Response, RowBlock,
+};
 use crate::runtime::backend::{BackendKind, ExecBackend};
 use crate::runtime::manifest::Manifest;
 use crate::{log_debug, log_info, Error, Result};
@@ -298,18 +300,18 @@ impl Engine {
 
     /// Submit a request whose completion is delivered on `done`, tagged
     /// with the returned engine id — the pipelined path: any number of
-    /// in-flight submissions can share one channel. `input` is row-major
-    /// `[samples, dims]`; validation, policy selection and enqueueing all
-    /// happen before this returns, so a returned id is a guarantee that
-    /// exactly one [`Completion`] will be attempted for it (success,
-    /// structured error, or — only if the engine is dropped first —
-    /// channel disconnect).
+    /// in-flight submissions can share one channel. `block` is the
+    /// contiguous row-major `[rows, dims]` payload (moved in as-is — the
+    /// binary v2 codec hands its decoded frame payload straight here);
+    /// validation, policy selection and enqueueing all happen before this
+    /// returns, so a returned id is a guarantee that exactly one
+    /// [`Completion`] will be attempted for it (success, structured error,
+    /// or — only if the engine is dropped first — channel disconnect).
     pub fn submit_with(
         &self,
         task: &str,
         budget: f32,
-        input: Vec<f32>,
-        samples: usize,
+        block: RowBlock,
         opts: &SubmitOptions,
         done: CompletionSender,
     ) -> std::result::Result<u64, ApiError> {
@@ -322,18 +324,19 @@ impl Engine {
                 "task {task}: manifest state shape is rank 0"
             )));
         }
+        let samples = block.rows;
         if samples == 0 {
             return Err(ApiError::shape_mismatch(format!(
                 "task {task}: request carries zero samples"
             )));
         }
         let sample_dim: usize = entry.state_shape[1..].iter().product();
-        if input.len() != samples * sample_dim {
+        if block.data.len() != samples * sample_dim {
             return Err(ApiError::shape_mismatch(format!(
                 "task {task}: {samples} sample(s) × state dim {sample_dim} wants \
                  {} values, got {}",
                 samples * sample_dim,
-                input.len()
+                block.data.len()
             )));
         }
         let b_cap = entry.batch();
@@ -358,7 +361,7 @@ impl Engine {
         };
         let key: QueueKey = (task.to_string(), variant.name.clone());
         let id = self.next_id.fetch_add(1, Relaxed);
-        let mut req = Request::new(id, task, budget, input, samples);
+        let mut req = Request::from_block(id, task, budget, block);
         let t0 = req.t_submit;
         req.deadline = opts.deadline.map(|d| t0 + d);
         req.priority = opts.priority;
@@ -427,7 +430,9 @@ impl Engine {
     }
 
     /// Non-blocking submit with per-request options; returns a handle
-    /// owning its completion channel.
+    /// owning its completion channel. `input` is flat row-major
+    /// `[samples, dims]` — the convenience wrapper over
+    /// [`Self::submit_with`]'s [`RowBlock`] surface.
     pub fn submit_opts(
         &self,
         task: &str,
@@ -437,7 +442,8 @@ impl Engine {
         opts: &SubmitOptions,
     ) -> std::result::Result<SubmitHandle, ApiError> {
         let (tx, rx) = mpsc::channel();
-        let id = self.submit_with(task, budget, input, samples, opts, tx)?;
+        let block = RowBlock::from_rows(samples, input);
+        let id = self.submit_with(task, budget, block, opts, tx)?;
         Ok(SubmitHandle { id, rx })
     }
 
@@ -512,6 +518,10 @@ fn worker_main(
     metrics: Arc<CoordinatorMetrics>,
     backend: Arc<dyn ExecBackend>,
 ) {
+    // per-worker reusable padded-batch buffer: `pad_batch_into` refills it
+    // for every batch, so steady-state dispatch does not allocate for
+    // batch assembly
+    let mut pad_buf: Vec<f32> = Vec::new();
     loop {
         // claim one ready batch under the lock, run it outside
         let batch: ReadyBatch = {
@@ -549,7 +559,7 @@ fn worker_main(
             key: key.clone(),
         };
         metrics.batch_started();
-        if let Some(wall) = run_batch(&manifest, &metrics, backend.as_ref(), batch) {
+        if let Some(wall) = run_batch(&manifest, &metrics, backend.as_ref(), batch, &mut pad_buf) {
             // feed the measured wall-clock back into the admission
             // predictor for this (task, variant)
             let wall_us = wall.as_secs_f64() * 1e6;
@@ -598,6 +608,7 @@ fn run_batch(
     metrics: &CoordinatorMetrics,
     backend: &dyn ExecBackend,
     batch: ReadyBatch,
+    pad_buf: &mut Vec<f32>,
 ) -> Option<Duration> {
     let ReadyBatch { key, items } = batch;
     let entry = match manifest.task(&key.0) {
@@ -660,10 +671,10 @@ fn run_batch(
     // surface doesn't produce yet)
     if let Some(p) = items
         .iter()
-        .find(|p| p.req.input.len() != p.req.samples * sample_dim)
+        .find(|p| p.req.block.data.len() != p.req.block.rows * sample_dim)
     {
-        let got = p.req.input.len();
-        let rows = p.req.samples;
+        let got = p.req.block.data.len();
+        let rows = p.req.block.rows;
         return fail_items(
             metrics,
             &key,
@@ -675,11 +686,15 @@ fn run_batch(
         );
     }
 
-    // assemble the padded batch input: each request is one contiguous
-    // row block, fill rows zeroed
-    let rows: usize = items.iter().map(|p| p.req.samples).sum();
-    let inputs: Vec<&[f32]> = items.iter().map(|p| p.req.input.as_slice()).collect();
-    let input = pad_batch(&inputs, b_cap, sample_dim);
+    // assemble the padded batch input into the worker's reusable buffer:
+    // each request is one contiguous row block, fill rows zeroed
+    let rows: usize = items.iter().map(|p| p.req.block.rows).sum();
+    pad_batch_into(
+        pad_buf,
+        items.iter().map(|p| p.req.block.data.as_slice()),
+        b_cap,
+        sample_dim,
+    );
     let queue_start = Instant::now();
     for p in &items {
         metrics
@@ -688,7 +703,7 @@ fn run_batch(
     }
 
     let t_exec = Instant::now();
-    let out = match backend.execute(manifest, entry, &variant, input) {
+    let out = match backend.execute(manifest, entry, &variant, pad_buf.as_slice()) {
         Ok(o) => o,
         Err(e) => return fail_items(metrics, &key, items, ApiError::from_engine(&e)),
     };
@@ -714,7 +729,7 @@ fn run_batch(
     log_debug!("batch {}/{}: {rows}/{b_cap} rows in {exec_time:?}", key.0, key.1);
     let mut off = 0usize;
     for p in items {
-        let n = p.req.samples * out_dim;
+        let n = p.req.block.rows * out_dim;
         let latency = p.req.t_submit.elapsed();
         metrics.total_latency.record(latency);
         metrics.responses.fetch_add(1, Relaxed);

@@ -37,4 +37,4 @@ pub mod server;
 pub use engine::{Engine, EngineConfig, SloConfig, SubmitHandle, SubmitOptions};
 pub use metrics::CoordinatorMetrics;
 pub use policy::{select_variant, Policy};
-pub use request::{Completion, CompletionSender, Priority, Request, Response};
+pub use request::{Completion, CompletionSender, Priority, Request, Response, RowBlock};

@@ -5,6 +5,59 @@ use std::time::Instant;
 
 use crate::api::ApiError;
 
+/// A contiguous row-major `[rows, dims]` block of `f32` values — the one
+/// payload type both wire codecs decode into and the engine/batcher queue.
+/// Binary v2 frames read their raw little-endian row bytes straight into
+/// `data`; v1 JSON lines flatten into the same shape. Either way
+/// [`Engine::submit_with`](crate::coordinator::Engine::submit_with) and the
+/// batcher never see a per-row `Vec<Vec<f32>>` or re-copy the payload.
+///
+/// The constructors don't validate `rows × dims` against `data.len()` —
+/// the engine checks the block against the task's state shape at submit,
+/// so a malformed block fails loudly with `shape_mismatch` instead of
+/// panicking inside the server.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowBlock {
+    /// rows carried (1 for the classic single-sample case)
+    pub rows: usize,
+    /// values per row
+    pub dims: usize,
+    /// row-major `[rows, dims]` values
+    pub data: Vec<f32>,
+}
+
+impl RowBlock {
+    pub fn new(rows: usize, dims: usize, data: Vec<f32>) -> RowBlock {
+        RowBlock { rows, dims, data }
+    }
+
+    /// Build from a flat payload and a row count, deriving `dims`
+    /// (`rows == 0` keeps the raw length so the mismatch stays visible to
+    /// the engine's validation).
+    pub fn from_rows(rows: usize, data: Vec<f32>) -> RowBlock {
+        let dims = if rows > 0 { data.len() / rows } else { data.len() };
+        RowBlock { rows, dims, data }
+    }
+
+    /// One row — the classic single-sample surface.
+    pub fn single(sample: Vec<f32>) -> RowBlock {
+        RowBlock {
+            rows: 1,
+            dims: sample.len(),
+            data: sample,
+        }
+    }
+
+    /// Total values carried (`rows × dims` when well-formed).
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
 /// Priority class of a request. Higher classes win dispatch ties when two
 /// queues are equally urgent, and lower classes are shed first under
 /// overload. The wire strings ("low"/"normal"/"high") are frozen.
@@ -46,11 +99,9 @@ pub struct Request {
     /// maximum acceptable terminal MAPE vs the dopri5 reference;
     /// `f32::INFINITY` means "cheapest available"
     pub budget: f32,
-    /// row-major `[samples, dims]` payload (dims = task state dims
-    /// without the batch dim)
-    pub input: Vec<f32>,
-    /// rows carried by this request (1 for the classic single-sample case)
-    pub samples: usize,
+    /// the contiguous `[rows, dims]` payload block (dims = task state
+    /// dims without the batch dim)
+    pub block: RowBlock,
     /// enqueue timestamp (set by the engine)
     pub t_submit: Instant,
     /// fail fast with `deadline_exceeded` if the request has not been
@@ -66,12 +117,17 @@ pub struct Request {
 
 impl Request {
     pub fn new(id: u64, task: &str, budget: f32, input: Vec<f32>, samples: usize) -> Request {
+        Request::from_block(id, task, budget, RowBlock::from_rows(samples, input))
+    }
+
+    /// Construct from an already-assembled [`RowBlock`] (the codec path —
+    /// no reshaping, the block moves in as-is).
+    pub fn from_block(id: u64, task: &str, budget: f32, block: RowBlock) -> Request {
         Request {
             id,
             task: task.to_string(),
             budget,
-            input,
-            samples,
+            block,
             t_submit: Instant::now(),
             deadline: None,
             priority: Priority::default(),
@@ -121,11 +177,28 @@ mod tests {
         let r = Request::new(7, "cnf_rings", 0.05, vec![1.0, 2.0], 1);
         assert_eq!(r.id, 7);
         assert_eq!(r.task, "cnf_rings");
-        assert_eq!(r.samples, 1);
+        assert_eq!(r.block.rows, 1);
+        assert_eq!(r.block.dims, 2);
+        assert_eq!(r.block.data, vec![1.0, 2.0]);
         assert!(r.deadline.is_none());
         assert_eq!(r.priority, Priority::Normal);
         assert!(r.client.is_none());
         assert!(r.t_submit.elapsed().as_secs() < 1);
+    }
+
+    #[test]
+    fn row_blocks_carry_shape_without_reshaping() {
+        let b = RowBlock::from_rows(2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!((b.rows, b.dims, b.len()), (2, 2, 4));
+        assert!(!b.is_empty());
+        let s = RowBlock::single(vec![5.0, 6.0, 7.0]);
+        assert_eq!((s.rows, s.dims), (1, 3));
+        // zero rows keep the raw length visible instead of dividing by 0
+        let z = RowBlock::from_rows(0, vec![9.0]);
+        assert_eq!((z.rows, z.dims, z.len()), (0, 1, 1));
+        // explicit constructor trusts the caller; the engine validates
+        let e = RowBlock::new(3, 2, vec![0.0; 5]);
+        assert_eq!(e.len(), 5);
     }
 
     #[test]

@@ -1,37 +1,43 @@
-//! TCP JSON-lines serving front end — a thin pipelined shell over the
-//! typed protocol in [`crate::api::v1`].
+//! TCP serving front end — a thin pipelined shell over the typed protocol
+//! in [`crate::api`], speaking all three wire dialects on one port.
 //!
-//! One JSON object per line, both directions. Requests on a connection are
-//! submitted to the engine **as they arrive** (nothing blocks the reader),
-//! and responses are written back as their batches complete — possibly out
-//! of order; clients correlate by `id`. A single connection can therefore
-//! keep any number of multi-sample requests in flight (see
-//! [`Client::infer_pipelined`]).
+//! Each connection message is routed by its **first byte**: the v2 frame
+//! magic (`0xB2`, see [`crate::api::v2`]) means a binary frame; anything
+//! else is a JSON line (v1, or legacy v0 without a `"v"` key). Requests
+//! are submitted to the engine **as they arrive** (nothing blocks the
+//! reader), and responses are written back as their batches complete —
+//! possibly out of order; clients correlate by `id`. A single connection
+//! can therefore keep any number of multi-sample requests in flight (see
+//! [`Client::infer_pipelined`]), and may freely mix dialects — each reply
+//! is encoded in the dialect its request arrived in.
 //!
 //! ```text
 //! → {"v": 1, "id": 7, "task": "cnf_rings", "budget": 0.05,
 //!    "input": [[0.1, -0.7], [0.3, 0.2]]}
 //! ← {"v": 1, "ok": true, "id": 7, "variant": "hyperheun_k1", ...}
-//! → {"cmd": "metrics"}
-//! ← {"ok": true, "report": "...", "queues": [...]}
+//! → 0xB2 [kind=1][header_len][payload_len]{"v":2,...} <raw f32 rows>
+//! ← 0xB2 [kind=2][header_len][payload_len]{"v":2,"ok":true,...} <rows>
+//! → {"cmd": "protocol"}
+//! ← {"ok": true, "versions": [0, 1, 2]}
 //! ```
 //!
 //! Legacy v0 lines (no `"v"` key, one flat sample) are still answered, in
 //! the v0 response shape plus a `deprecation` notice. The full schema,
 //! error codes and versioning policy live in rust/README.md §"Serving API
-//! v1"; apart from the deliberately-legacy [`Client::infer`] v0 helper,
-//! every line this module reads or writes goes through the `api::v1`
-//! codec — there is no second copy of the protocol.
+//! v1" and §"Wire protocol v2"; apart from the deliberately-legacy
+//! [`Client::infer`] v0 helper, every message this module reads or writes
+//! goes through the `api::v1`/`api::v2` codecs — there is no second copy
+//! of the protocol.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::api::v1::{self, InferReply, InferRequest};
-use crate::api::ApiError;
+use crate::api::{v2, ApiError};
 use crate::coordinator::engine::Engine;
-use crate::coordinator::request::Completion;
+use crate::coordinator::request::{Completion, RowBlock};
 use crate::util::json::{self, Value};
 use crate::{log_info, Error, Result};
 
@@ -61,7 +67,7 @@ pub fn serve_listener(engine: Arc<Engine>, listener: TcpListener) -> Result<()> 
 /// What the connection remembers about an in-flight submission, keyed by
 /// engine id: how to encode its completion.
 struct PendingMeta {
-    /// wire dialect the request arrived in (0 | 1)
+    /// wire dialect the request arrived in (0 | 1 | 2)
     version: u8,
     /// client-chosen correlation id (engine id echoed when absent)
     client_id: Option<u64>,
@@ -70,54 +76,118 @@ struct PendingMeta {
     samples: usize,
 }
 
-fn write_line(writer: &Mutex<TcpStream>, v: &Value) -> std::io::Result<()> {
+/// One JSON line as wire bytes (trailing newline included).
+fn line_bytes(v: &Value) -> Vec<u8> {
     let mut s = json::to_string(v);
     s.push('\n');
+    s.into_bytes()
+}
+
+/// Write one complete message and flush — the immediate-reply path
+/// (command replies, rejections, the strict-order v0 serve). Completions
+/// go through the pump, which coalesces its flushes instead.
+fn write_msg(writer: &Mutex<BufWriter<TcpStream>>, bytes: &[u8]) -> std::io::Result<()> {
     let mut w = writer.lock().unwrap();
-    w.write_all(s.as_bytes())
+    w.write_all(bytes)?;
+    w.flush()
 }
 
 fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr().ok();
-    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let writer = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
     let pending: Arc<Mutex<HashMap<u64, PendingMeta>>> = Arc::new(Mutex::new(HashMap::new()));
     let (done_tx, done_rx) = mpsc::channel::<Completion>();
 
     // completion pump: encodes finished submissions (in whatever order the
     // engine completes them) and writes them back; exits once the reader
-    // has hung up AND every in-flight request completed (all senders gone)
+    // has hung up AND every in-flight request completed (all senders
+    // gone). Flushes are coalesced: every completion already finished is
+    // written back to back, then the socket is flushed ONCE — under load
+    // many replies share one syscall.
     let pump = {
         let writer = Arc::clone(&writer);
         let pending = Arc::clone(&pending);
         std::thread::spawn(move || {
-            for c in done_rx {
-                let meta = match pending.lock().unwrap().remove(&c.id) {
-                    Some(m) => m,
-                    None => continue, // reader vanished mid-registration
-                };
-                let line = completion_line(&meta, c);
-                if write_line(&writer, &line).is_err() {
-                    return; // peer gone; stop draining
+            while let Ok(first) = done_rx.recv() {
+                let mut w = writer.lock().unwrap();
+                for c in std::iter::once(first).chain(done_rx.try_iter()) {
+                    let meta = match pending.lock().unwrap().remove(&c.id) {
+                        Some(m) => m,
+                        None => continue, // reader vanished mid-registration
+                    };
+                    if w.write_all(&completion_bytes(&meta, c)).is_err() {
+                        return; // peer gone; stop draining
+                    }
+                }
+                if w.flush().is_err() {
+                    return;
                 }
             }
         })
     };
 
-    let reader = BufReader::new(stream);
+    let mut reader = BufReader::new(stream);
     let mut read_err: Option<Error> = None;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    loop {
+        // one-byte sniff routes each message: frame magic → binary v2,
+        // anything else → a JSON line (v0/v1)
+        let first = match reader.fill_buf() {
+            Ok(buf) => match buf.first() {
+                Some(b) => *b,
+                None => break, // clean EOF between messages
+            },
             Err(e) => {
                 read_err = Some(e.into());
                 break;
             }
         };
+        if first == v2::FRAME_MAGIC {
+            let frame = match v2::read_frame(&mut reader) {
+                Ok(f) => f,
+                // a malformed or truncated frame loses the framing — reply
+                // loudly (best effort), then close; there is no resync
+                Err(v2::FrameError::Bad(e)) => {
+                    let _ = write_msg(&writer, &v2::encode_error(None, &e));
+                    break;
+                }
+                Err(v2::FrameError::Io(e))
+                    if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+                {
+                    let _ = write_msg(
+                        &writer,
+                        &v2::encode_error(
+                            None,
+                            &ApiError::bad_request("connection truncated mid-frame"),
+                        ),
+                    );
+                    break;
+                }
+                Err(v2::FrameError::Io(e)) => {
+                    read_err = Some(e.into());
+                    break;
+                }
+            };
+            if let Some(reply) = handle_frame(engine, frame, &done_tx, &pending) {
+                if write_msg(&writer, &reply).is_err() {
+                    break;
+                }
+            }
+            continue;
+        }
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(e) => {
+                read_err = Some(e.into());
+                break;
+            }
+        }
         if line.trim().is_empty() {
             continue;
         }
         if let Some(reply) = handle_pipelined(engine, &line, &done_tx, &pending) {
-            if write_line(&writer, &reply).is_err() {
+            if write_msg(&writer, &line_bytes(&reply)).is_err() {
                 break;
             }
         }
@@ -131,15 +201,24 @@ fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
     }
 }
 
-fn completion_line(meta: &PendingMeta, c: Completion) -> Value {
+/// Encode one completion in the dialect its request arrived in.
+fn completion_bytes(meta: &PendingMeta, c: Completion) -> Vec<u8> {
     let id = meta.client_id.unwrap_or(c.id);
-    match c.result {
+    if meta.version == 2 {
+        return match c.result {
+            Ok(resp) => {
+                v2::encode_response(&v1::response_from_engine(id, meta.samples, &resp))
+            }
+            Err(e) => v2::encode_error(Some(id), &e),
+        };
+    }
+    line_bytes(&match c.result {
         Ok(resp) => v1::encode_response(
             &v1::response_from_engine(id, meta.samples, &resp),
             meta.version,
         ),
         Err(e) => v1::encode_error(Some(id), &e, meta.version),
-    }
+    })
 }
 
 /// Process one request line on the pipelined path. Returns an immediate
@@ -176,22 +255,65 @@ fn handle_pipelined(
         // legacy v0 clients have no client-chosen ids and relied on the
         // old server's strict request→reply order; serve them
         // synchronously on the reader thread so that guarantee holds
-        // (only v1 lines pipeline)
+        // (only v1 lines and v2 frames pipeline)
         return Some(serve_blocking(engine, req, 0));
     }
+    match submit_pipelined(engine, req, version, done, pending) {
+        None => None,
+        Some((id, e)) => Some(v1::encode_error(id, &e, version)),
+    }
+}
+
+/// Process one decoded v2 request frame on the pipelined path. Returns an
+/// immediate error frame for rejected submissions; accepted submissions
+/// return `None` — their reply frame arrives later via the completion
+/// pump.
+fn handle_frame(
+    engine: &Engine,
+    frame: v2::Frame,
+    done: &mpsc::Sender<Completion>,
+    pending: &Mutex<HashMap<u64, PendingMeta>>,
+) -> Option<Vec<u8>> {
+    // best-effort id echo (same validation as the codec) so pipelined
+    // clients can correlate rejections of malformed headers
+    let client_id = v1::peek_id(&frame.header);
+    let req = match v2::decode_request(frame) {
+        Ok(r) => r,
+        Err(e) => return Some(v2::encode_error(client_id, &e)),
+    };
+    match submit_pipelined(engine, req, 2, done, pending) {
+        None => None,
+        Some((id, e)) => Some(v2::encode_error(id, &e)),
+    }
+}
+
+/// Submit one decoded request on the pipelined path, registering its
+/// completion meta keyed by engine id. The pending lock is held across
+/// `submit_with` so the completion pump cannot observe a finished id
+/// before its meta is registered. Returns the rejection (client id +
+/// error) when the engine refuses the request.
+fn submit_pipelined(
+    engine: &Engine,
+    req: InferRequest,
+    version: u8,
+    done: &mpsc::Sender<Completion>,
+    pending: &Mutex<HashMap<u64, PendingMeta>>,
+) -> Option<(Option<u64>, ApiError)> {
     let opts = req.submit_options();
     let InferRequest {
         id: client_id,
         task,
         samples,
+        dims,
         input,
         budget,
         ..
     } = req;
-    // the pending lock is held across submit_with so the completion pump
-    // cannot observe a finished id before its meta is registered
+    // the decoded payload moves into the engine as one contiguous block —
+    // for v2 frames this is the same allocation the frame was read into
+    let block = RowBlock::new(samples, dims, input);
     let mut map = pending.lock().unwrap();
-    match engine.submit_with(&task, budget, input, samples, &opts, done.clone()) {
+    match engine.submit_with(&task, budget, block, &opts, done.clone()) {
         Ok(engine_id) => {
             map.insert(
                 engine_id,
@@ -203,7 +325,7 @@ fn handle_pipelined(
             );
             None
         }
-        Err(e) => Some(v1::encode_error(client_id, &e, version)),
+        Err(e) => Some((client_id, e)),
     }
 }
 
@@ -275,6 +397,16 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
             ("backend", json::s(engine.backend_name())),
             ("workers", json::num(engine.worker_count() as f64)),
         ]),
+        // version negotiation: which wire dialects this server speaks.
+        // Clients prefer the highest they know; servers predating this
+        // command answer unknown_cmd, which a client reads as "v1 only"
+        "protocol" => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            (
+                "versions",
+                Value::Arr(vec![json::num(0.0), json::num(1.0), json::num(2.0)]),
+            ),
+        ]),
         "tasks" => json::obj(vec![
             ("ok", Value::Bool(true)),
             (
@@ -326,11 +458,15 @@ pub fn handle_line(engine: &Engine, line: &str) -> Value {
 }
 
 /// Blocking + pipelined client over the typed protocol — examples,
-/// integration tests, and the serving bench's TCP scenarios.
+/// integration tests, and the serving bench's TCP scenarios. Speaks v1
+/// JSON lines by default; [`Self::prefer_v2`] negotiates up to binary v2
+/// frames when the server supports them (and falls back to v1 when not).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     next_id: u64,
+    /// Encode requests as binary v2 frames (set by [`Self::prefer_v2`]).
+    use_v2: bool,
 }
 
 impl Client {
@@ -340,7 +476,23 @@ impl Client {
             writer: stream.try_clone()?,
             reader: BufReader::new(stream),
             next_id: 1,
+            use_v2: false,
         })
+    }
+
+    /// Negotiate up to binary v2: ask the server which protocol versions
+    /// it speaks (`cmd: "protocol"`) and switch this client to v2 frames
+    /// when the answer includes 2. A server predating the command answers
+    /// `unknown_cmd` — the client then simply stays on v1 (the fallback
+    /// rule). Returns whether v2 is now active.
+    pub fn prefer_v2(&mut self) -> Result<bool> {
+        let reply = self.request(&json::obj(vec![("cmd", json::s("protocol"))]))?;
+        self.use_v2 = reply.get("ok").and_then(Value::as_bool) == Some(true)
+            && reply
+                .get("versions")
+                .and_then(Value::as_arr)
+                .is_some_and(|vs| vs.iter().any(|v| v.as_f64() == Some(2.0)));
+        Ok(self.use_v2)
     }
 
     fn write_value(&mut self, v: &Value) -> Result<()> {
@@ -373,8 +525,9 @@ impl Client {
         ]))
     }
 
-    /// Send one typed v1 request without waiting. Assigns (and returns)
-    /// a connection-unique id when the request doesn't carry one.
+    /// Send one typed request without waiting, in the negotiated dialect
+    /// (v1 line, or v2 frame after [`Self::prefer_v2`]). Assigns (and
+    /// returns) a connection-unique id when the request doesn't carry one.
     pub fn send(&mut self, req: &InferRequest) -> Result<u64> {
         let id = match req.id {
             Some(i) => {
@@ -389,12 +542,28 @@ impl Client {
         };
         let mut r = req.clone();
         r.id = Some(id);
-        self.write_value(&v1::encode_request(&r))?;
+        if self.use_v2 {
+            self.writer.write_all(&v2::encode_request(&r))?;
+        } else {
+            self.write_value(&v1::encode_request(&r))?;
+        }
         Ok(id)
     }
 
-    /// Read and decode the next reply line (any in-flight id).
+    /// Read and decode the next reply (any in-flight id), sniffing the
+    /// first byte so v1 lines and v2 frames can interleave on one
+    /// connection.
     pub fn recv_reply(&mut self) -> Result<InferReply> {
+        let first = self
+            .reader
+            .fill_buf()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Coordinator("server closed the connection".into()))?;
+        if first == v2::FRAME_MAGIC {
+            let frame = v2::read_frame(&mut self.reader).map_err(Error::from)?;
+            return v2::decode_reply(frame).map_err(Error::from);
+        }
         let v = self.read_value()?;
         v1::decode_reply(&v).map_err(Error::from)
     }

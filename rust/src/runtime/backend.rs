@@ -36,13 +36,15 @@ pub trait ExecBackend: Send + Sync {
     fn prepare(&self, manifest: &Manifest, task: &TaskEntry, variant: &Variant) -> Result<()>;
 
     /// Execute one padded batch: `input` is the row-major flattening of
-    /// `variant.in_shape` (padding rows zeroed).
+    /// `variant.in_shape` (padding rows zeroed). Borrowed so the engine
+    /// can reuse one padding buffer across batches; backends stage their
+    /// own device/tensor copy.
     fn execute(
         &self,
         manifest: &Manifest,
         task: &TaskEntry,
         variant: &Variant,
-        input: Vec<f32>,
+        input: &[f32],
     ) -> Result<ExecOutput>;
 }
 
@@ -140,11 +142,16 @@ impl ExecBackend for PjrtBackend {
         manifest: &Manifest,
         task: &TaskEntry,
         variant: &Variant,
-        input: Vec<f32>,
+        input: &[f32],
     ) -> Result<ExecOutput> {
         self.prepare(manifest, task, variant)?;
         let key = exe_key(task, variant);
-        let outputs = self.executor.handle().run(&key, input, &variant.in_shape)?;
+        // the executor consumes an owned host buffer (it crosses to the
+        // executor thread; PJRT copies host→device regardless)
+        let outputs = self
+            .executor
+            .handle()
+            .run(&key, input.to_vec(), &variant.in_shape)?;
         let mut leaves = outputs.into_iter();
         let z = leaves
             .next()

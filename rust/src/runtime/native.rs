@@ -83,6 +83,10 @@ impl NativeModel {
 struct QueueState {
     tab: Tableau,
     ws: Mutex<RkWorkspace>,
+    /// Persistent input staging tensor, shaped `variant.in_shape` — the
+    /// borrowed batch slice is copied into it, so steady-state execution
+    /// allocates nothing for the input either.
+    z0: Mutex<Tensor>,
 }
 
 pub struct NativeBackend {
@@ -140,6 +144,7 @@ impl NativeBackend {
                     Arc::new(QueueState {
                         tab,
                         ws: Mutex::new(RkWorkspace::new()),
+                        z0: Mutex::new(Tensor::zeros(&variant.in_shape)),
                     })
                 }),
         ))
@@ -166,22 +171,41 @@ impl ExecBackend for NativeBackend {
         manifest: &Manifest,
         task: &TaskEntry,
         variant: &Variant,
-        input: Vec<f32>,
+        input: &[f32],
     ) -> Result<ExecOutput> {
         let model = self.model(manifest, task)?;
-        let x = Tensor::new(&variant.in_shape, input)?;
+        let qs = self.queue_state(task, variant)?;
+
+        // stage the borrowed batch into the queue's persistent input
+        // tensor — the shape check `Tensor::new` used to perform, without
+        // its per-batch allocation
+        let mut staged = qs.z0.lock().unwrap();
+        if input.len() != staged.numel() {
+            return Err(Error::Shape(format!(
+                "native batch for {}/{} carries {} values, in_shape {:?} wants {}",
+                task.name,
+                variant.name,
+                input.len(),
+                variant.in_shape,
+                staged.numel()
+            )));
+        }
+        staged.data_mut().copy_from_slice(input);
 
         // image tasks may export image→logits executables: the manifest's
         // state shape is the ODE-state shape, so an in_shape that differs
         // from it means the batch arrives in image space and needs the
         // learned h_x augmenter first
-        let z0 = match &*model {
-            NativeModel::Image(im) if variant.in_shape != task.state_shape => im.hx(&x)?,
-            _ => x,
+        let hx_t;
+        let z0: &Tensor = match &*model {
+            NativeModel::Image(im) if variant.in_shape != task.state_shape => {
+                hx_t = im.hx(&staged)?;
+                &hx_t
+            }
+            _ => &staged,
         };
 
         let field = model.field();
-        let qs = self.queue_state(task, variant)?;
         let mut ws = qs.ws.lock().unwrap();
         let (zt, nfe) = if variant.solver == "dopri5" {
             // the manifest may pin a per-variant tolerance (the pareto
@@ -199,7 +223,7 @@ impl ExecBackend for NativeBackend {
             };
             let r = adaptive_ws(
                 field,
-                &z0,
+                z0,
                 task.s_span,
                 &qs.tab,
                 &AdaptiveOpts::with_tol(tol),
@@ -217,7 +241,7 @@ impl ExecBackend for NativeBackend {
                 odeint_hyper_ws(
                     field,
                     model.hyper(),
-                    &z0,
+                    z0,
                     task.s_span,
                     variant.k,
                     &qs.tab,
@@ -234,11 +258,12 @@ impl ExecBackend for NativeBackend {
                 )));
             }
             (
-                odeint_fixed_ws(field, &z0, task.s_span, variant.k, &qs.tab, &mut ws)?.clone(),
+                odeint_fixed_ws(field, z0, task.s_span, variant.k, &qs.tab, &mut ws)?.clone(),
                 None,
             )
         };
         drop(ws);
+        drop(staged);
 
         // image readout when the export's output is logits, not state
         let out = match &*model {
@@ -284,7 +309,7 @@ mod tests {
         let input: Vec<f32> = (0..8).map(|i| 0.1 * i as f32).collect();
         for v in &task.variants {
             let out = backend
-                .execute(&m, task, v, input.clone())
+                .execute(&m, task, v, &input)
                 .unwrap_or_else(|e| panic!("{}: {e}", v.name));
             assert_eq!(out.z.len(), 8, "{}", v.name);
             assert!(out.z.iter().all(|x| x.is_finite()), "{}", v.name);
@@ -303,10 +328,10 @@ mod tests {
         let task = m.task("cnf_t").unwrap();
         let input: Vec<f32> = (0..8).map(|i| 0.3 + 0.2 * i as f32).collect();
         let euler = backend
-            .execute(&m, task, task.variant("euler_k2").unwrap(), input.clone())
+            .execute(&m, task, task.variant("euler_k2").unwrap(), &input)
             .unwrap();
         let d5 = backend
-            .execute(&m, task, task.variant("dopri5").unwrap(), input)
+            .execute(&m, task, task.variant("dopri5").unwrap(), &input)
             .unwrap();
         let diff: f32 = euler
             .z
@@ -342,11 +367,11 @@ mod tests {
         loose.name = "dopri5_loose".into();
         loose.tol = Some(1e-2);
         let nfe_tight = backend
-            .execute(&m, task, &tight, input.clone())
+            .execute(&m, task, &tight, &input)
             .unwrap()
             .nfe
             .unwrap();
-        let nfe_loose = backend.execute(&m, task, &loose, input).unwrap().nfe.unwrap();
+        let nfe_loose = backend.execute(&m, task, &loose, &input).unwrap().nfe.unwrap();
         assert!(
             nfe_tight > nfe_loose,
             "tol 1e-7 spent {nfe_tight} NFE vs 1e-2's {nfe_loose}"
@@ -358,7 +383,7 @@ mod tests {
         let (m, backend) = synth();
         let task = m.task("cnf_t").unwrap();
         let v = &task.variants[0];
-        assert!(backend.execute(&m, task, v, vec![0.0; 3]).is_err());
+        assert!(backend.execute(&m, task, v, &[0.0; 3]).is_err());
     }
 
     #[test]
@@ -369,9 +394,9 @@ mod tests {
         // repeat batches on every variant: one workspace per (task, variant),
         // reused, and outputs identical batch over batch
         for v in &task.variants {
-            let first = backend.execute(&m, task, v, input.clone()).unwrap();
+            let first = backend.execute(&m, task, v, &input).unwrap();
             for _ in 0..3 {
-                let again = backend.execute(&m, task, v, input.clone()).unwrap();
+                let again = backend.execute(&m, task, v, &input).unwrap();
                 assert_eq!(again.z, first.z, "{} drifted across batches", v.name);
             }
         }

@@ -485,7 +485,7 @@ pub fn serve_check(
         .into_data();
     let mut outputs = std::collections::BTreeMap::new();
     for v in &entry.variants {
-        let o = backend.execute(&manifest, entry, v, input.clone())?;
+        let o = backend.execute(&manifest, entry, v, &input)?;
         if o.z.iter().any(|x| !x.is_finite()) {
             return Err(Error::Other(format!(
                 "serve check: variant {} produced non-finite output",

@@ -277,10 +277,16 @@ fn entry_f64(v: &Value, key: &str) -> Option<f64> {
 /// * `serving_throughput.overload_goodput` — within the newest entry,
 ///   shedding-on goodput must strictly exceed the shedding-off baseline
 ///   (`overload_goodput_baseline`), and run over run the goodput must not
-///   drop by more than `goodput_drop` (absolute, goodput is in [0, 1]).
+///   drop by more than `goodput_drop` (absolute, goodput is in [0, 1]);
+/// * `serving_throughput.pipelined_big_v2_p50_ms` — within the newest
+///   entry, end-to-end pipelined p50 on the wide workload must be strictly
+///   faster over the v2 binary frames than over v1 JSON lines
+///   (`pipelined_big_v1_p50_ms`) — the zero-copy wire path must stay a win;
+/// * `codecbench.v2_decode_mbps` — within the newest entry, v2 request
+///   decode throughput must strictly exceed `v1_decode_mbps`.
 ///
 /// Streams with fewer than two entries just record a baseline note (the
-/// within-entry overload check still applies to a first entry).
+/// within-entry checks still apply to a first entry).
 pub fn trajectory_gate(entries: &[Value], p50_slack: f64, goodput_drop: f64) -> GateReport {
     let mut report = GateReport::default();
     // group by bench stream, preserving order
@@ -311,6 +317,41 @@ pub fn trajectory_gate(entries: &[Value], p50_slack: f64, goodput_drop: f64) -> 
                 if on <= off {
                     report.regressions.push(format!(
                         "{line} — REGRESSED (shedding must strictly beat the baseline)"
+                    ));
+                } else {
+                    report.checks.push(line);
+                }
+            }
+            // within-entry wire invariant: the v2 frames must beat the v1
+            // lines end to end on the wide pipelined workload
+            if let (Some(v1), Some(v2)) = (
+                entry_f64(latest, "pipelined_big_v1_p50_ms"),
+                entry_f64(latest, "pipelined_big_v2_p50_ms"),
+            ) {
+                let line = format!(
+                    "[{name}] wide pipelined p50: v1 {v1:.3} ms vs v2 {v2:.3} ms"
+                );
+                if v2 >= v1 {
+                    report.regressions.push(format!(
+                        "{line} — REGRESSED (v2 frames must strictly beat v1 lines)"
+                    ));
+                } else {
+                    report.checks.push(line);
+                }
+            }
+        }
+        if name.as_str() == "codecbench" {
+            // within-entry codec invariant: binary row blocks must decode
+            // strictly faster than the per-float JSON text path
+            if let (Some(v1), Some(v2)) = (
+                entry_f64(latest, "v1_decode_mbps"),
+                entry_f64(latest, "v2_decode_mbps"),
+            ) {
+                let line =
+                    format!("[{name}] request decode: v1 {v1:.1} MB/s vs v2 {v2:.1} MB/s");
+                if v2 <= v1 {
+                    report.regressions.push(format!(
+                        "{line} — REGRESSED (v2 decode must strictly beat v1)"
                     ));
                 } else {
                     report.checks.push(line);
@@ -590,6 +631,52 @@ mod tests {
         ]);
         let r = trajectory_gate(&[plain.clone(), plain], 1.5, 0.15);
         assert!(r.passed(), "{:?}", r.regressions);
+    }
+
+    #[test]
+    fn trajectory_gate_checks_v2_wire_wins() {
+        // codecbench: v2 decode throughput must strictly beat v1
+        let codec = |v1: f64, v2: f64| {
+            json::obj(vec![
+                ("bench", json::s("codecbench")),
+                ("v1_decode_mbps", json::num(v1)),
+                ("v2_decode_mbps", json::num(v2)),
+            ])
+        };
+        let r = trajectory_gate(&[codec(120.0, 900.0)], 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.checks.iter().any(|c| c.contains("request decode")));
+        // applies within a FIRST entry — no prior run needed to fail it
+        let r = trajectory_gate(&[codec(120.0, 120.0)], 1.5, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.regressions[0].contains("v2 decode must strictly beat v1"),
+            "{:?}",
+            r.regressions
+        );
+
+        // serving: wide pipelined p50 over v2 frames must beat v1 lines
+        let serving = |v1: f64, v2: f64| {
+            json::obj(vec![
+                ("bench", json::s("serving_throughput")),
+                ("pipelined_big_v1_p50_ms", json::num(v1)),
+                ("pipelined_big_v2_p50_ms", json::num(v2)),
+            ])
+        };
+        let r = trajectory_gate(&[serving(8.0, 3.0)], 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.checks.iter().any(|c| c.contains("wide pipelined p50")));
+        let r = trajectory_gate(&[serving(3.0, 3.0)], 1.5, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.regressions[0].contains("v2 frames must strictly beat v1 lines"),
+            "{:?}",
+            r.regressions
+        );
+
+        // entries without the fields gate nothing new
+        let plain = json::obj(vec![("bench", json::s("codecbench"))]);
+        assert!(trajectory_gate(&[plain], 1.5, 0.15).passed());
     }
 
     #[test]

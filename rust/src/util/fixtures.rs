@@ -216,6 +216,109 @@ pub fn temp_heavy_native_artifacts(tag: &str, name: &str, batch: usize) -> Resul
     Ok(dir)
 }
 
+// ---------------------------------------------------------------------------
+// Wide fixture: arbitrary state dimension, cheap field — codec-bound serving
+// ---------------------------------------------------------------------------
+
+/// Render the wide fixture's linear field: paired rotations on the state
+/// plane (z_{2k}, z_{2k+1}) plus a small time drift, generalising the 2-D
+/// rotation fixture to any `dims`. Trajectories stay bounded, so every
+/// solver is finite, while one field eval costs only (dims+1)·dims MACs —
+/// cheap enough that wide-row serving is wire/batching-bound, which is the
+/// regime the v2 codec benches need.
+fn wide_field_json(dims: usize) -> String {
+    // w is (dims + 1) × dims: state rows then the time-concat row
+    let mut w = vec![vec![0.0f32; dims]; dims + 1];
+    for k in 0..dims / 2 {
+        w[2 * k + 1][2 * k] = 1.0; // dz_{2k}   = +z_{2k+1}
+        w[2 * k][2 * k + 1] = -1.0; // dz_{2k+1} = -z_{2k}
+    }
+    for j in 0..dims {
+        w[dims][j] = 0.1; // + 0.1 s drift on every coordinate
+    }
+    let b: Vec<String> = (0..dims).map(|_| "0".to_string()).collect();
+    format!(
+        r#"{{"time_mode": "concat", "layers": [{{"w": {}, "b": [{}], "act": "id"}}]}}"#,
+        mat_json(&w),
+        b.join(", ")
+    )
+}
+
+/// The matching hyper net g([z, dz, eps, s]) = 0.05 z at width `dims`.
+fn wide_hyper_json(dims: usize) -> String {
+    let mut w = vec![vec![0.0f32; dims]; 2 * dims + 2];
+    for j in 0..dims {
+        w[j][j] = 0.05;
+    }
+    let b: Vec<String> = (0..dims).map(|_| "0".to_string()).collect();
+    format!(
+        r#"{{"layers": [{{"w": {}, "b": [{}], "act": "id"}}]}}"#,
+        mat_json(&w),
+        b.join(", ")
+    )
+}
+
+/// Write one cnf task with state shape `[batch, dims]` — the **wide**
+/// fixture. A single cheap `euler_k2` variant keeps compute negligible
+/// next to request decode + batch assembly, so end-to-end timings at
+/// large `dims` (e.g. 512×64) measure the wire path, not the solver.
+pub fn write_wide_native_artifacts(
+    dir: &Path,
+    name: &str,
+    batch: usize,
+    dims: usize,
+) -> Result<()> {
+    std::fs::create_dir_all(dir.join("weights"))?;
+    let mac_f = (dims + 1) * dims;
+    let task = format!(
+        r#""{name}": {{
+      "kind": "cnf",
+      "state": {{"shape": [{batch}, {dims}]}},
+      "s_span": [0.0, 1.0],
+      "weights": "weights/{name}.json",
+      "field_hlo": "{name}_field.hlo.txt",
+      "macs": {{"field": {mac_f}, "hyper": {mac_h}}},
+      "delta": 0.01,
+      "hyper_base": "heun",
+      "variants": [
+        {{"name": "euler_k2", "solver": "euler", "k": 2, "hyper": false,
+          "hlo": "{name}_euler_k2.hlo.txt", "nfe": 2, "macs": {m2},
+          "mape": 0.25, "in_shape": [{batch}, {dims}], "out_shape": [{batch}, {dims}]}}
+      ]
+    }}"#,
+        mac_h = (2 * dims + 2) * dims,
+        m2 = 2 * mac_f,
+    );
+    let weights = format!(
+        r#"{{"kind": "cnf", "field": {}, "hyper": {}}}"#,
+        wide_field_json(dims),
+        wide_hyper_json(dims)
+    );
+    std::fs::write(dir.join("weights").join(format!("{name}.json")), weights)?;
+    let manifest = format!(
+        r#"{{
+  "version": 1, "stamp": "synthetic-native-wide", "seed": 0, "quick": false,
+  "tasks": {{
+    {task}
+  }}
+}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)?;
+    Ok(())
+}
+
+/// [`temp_native_artifacts`], but with one wide `[batch, dims]` task.
+pub fn temp_wide_native_artifacts(
+    tag: &str,
+    name: &str,
+    batch: usize,
+    dims: usize,
+) -> Result<PathBuf> {
+    let dir = fresh_temp_dir(tag)?;
+    write_wide_native_artifacts(&dir, name, batch, dims)?;
+    Ok(dir)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +338,20 @@ mod tests {
         // the weight files load as a CnfModel and the field has state dim 2
         let model = crate::nn::CnfModel::load(&m.weights_path(a)).unwrap();
         assert_eq!(model.field.state_dim(), 2);
+    }
+
+    #[test]
+    fn wide_fixture_parses_loads_and_serves_any_dims() {
+        let dir = temp_wide_native_artifacts("fixtures_wide", "cnf_wide", 16, 64).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let t = m.task("cnf_wide").unwrap();
+        assert_eq!(t.batch(), 16);
+        assert_eq!(t.state_shape, vec![16, 64]);
+        assert_eq!(t.variants.len(), 1);
+        let v = t.variant("euler_k2").unwrap();
+        assert_eq!(v.in_shape, vec![16, 64]);
+        let model = crate::nn::CnfModel::load(&m.weights_path(t)).unwrap();
+        assert_eq!(model.field.state_dim(), 64);
     }
 
     #[test]

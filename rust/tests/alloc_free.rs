@@ -203,4 +203,27 @@ fn warm_solver_loops_do_not_touch_the_allocator() {
         loose, tight,
         "dopri5_ws allocation count scales with step count: {loose} vs {tight}"
     );
+
+    // --- pad_batch_into over a warm buffer: exactly 0 allocations ---
+    // This is the engine's batch-assembly hot path (each dispatch worker
+    // holds one reusable buffer), so a warm steady state must never touch
+    // the allocator — `resize` to the same capacity and `copy_from_slice`
+    // only. (The full dispatch round still allocates per response —
+    // Response output, channel nodes — so this pins exactly the padding
+    // step the perf work moved off the heap.)
+    use hypersolvers::coordinator::batcher::pad_batch_into;
+    let row_a: Vec<f32> = (0..64).map(|i| 0.01 * i as f32).collect();
+    let row_b: Vec<f32> = (0..128).map(|i| -0.02 * i as f32).collect();
+    let mut pad_buf: Vec<f32> = Vec::new();
+    pad_batch_into(&mut pad_buf, [&row_a[..], &row_b[..]], 4, 64); // warm: one grow
+    let before = allocs();
+    for _ in 0..16 {
+        pad_batch_into(&mut pad_buf, [&row_a[..], &row_b[..]], 4, 64);
+        std::hint::black_box(pad_buf.as_slice());
+    }
+    let pad_allocs = allocs() - before;
+    assert_eq!(
+        pad_allocs, 0,
+        "pad_batch_into over a warm buffer allocated {pad_allocs} times in 16 batches"
+    );
 }

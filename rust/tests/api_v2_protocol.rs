@@ -1,0 +1,399 @@
+//! Protocol tests for `api::v2`: golden byte-exact frames, v1↔v2 decode
+//! parity, malformed-frame hardening (codec-level AND over a live TCP
+//! connection), version negotiation, and an end-to-end pipelined serving
+//! test where v0 lines, v1 lines and v2 frames share one port.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use hypersolvers::api::v1::{InferReply, InferRequest, InferResponse};
+use hypersolvers::api::{v1, v2, ApiError, ErrorCode};
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy, Priority};
+use hypersolvers::runtime::BackendKind;
+use hypersolvers::util::fixtures;
+use hypersolvers::util::json::{self, Value};
+
+fn native_engine(tag: &str, tasks: &[(&str, usize)], max_wait: Duration) -> Engine {
+    let dir = fixtures::temp_native_artifacts(tag, tasks).unwrap();
+    Engine::new(EngineConfig {
+        artifacts_dir: dir,
+        max_wait,
+        policy: Policy::MinMacs,
+        backend: BackendKind::Native,
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Watchdog for the socket tests: a wedged server would otherwise hang
+/// `cargo test` forever on a blocking read.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let t = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: v2 protocol test did not finish within {secs}s")
+        }
+    }
+}
+
+fn spawn_server(engine: Engine) -> (Arc<Engine>, String) {
+    let engine = Arc::new(engine);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    {
+        let engine = Arc::clone(&engine);
+        thread::spawn(move || {
+            let _ = server::serve_listener(engine, listener);
+        });
+    }
+    (engine, addr)
+}
+
+/// Assemble the expected frame bytes by hand: prefix + header + LE rows.
+fn frame_fixture(kind: u8, header: &str, rows: &[f32]) -> Vec<u8> {
+    let mut want = vec![0xB2u8, kind];
+    want.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    want.extend_from_slice(&((rows.len() * 4) as u32).to_le_bytes());
+    want.extend_from_slice(header.as_bytes());
+    for x in rows {
+        want.extend_from_slice(&x.to_le_bytes());
+    }
+    want
+}
+
+// ---------------------------------------------------------------------------
+// Golden frames: the exact bytes of the v2 dialect
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_v2_request_frame() {
+    // dyadic values only (exact in f32 and f64), same discipline as the
+    // v1 golden lines — the header prints deterministically (BTreeMap)
+    let mut req = InferRequest::batch("cnf_rings", 0.25, 2, vec![0.5, -0.75, 0.25, 1.5]);
+    req.id = Some(7);
+    assert_eq!(
+        v2::encode_request(&req),
+        frame_fixture(
+            v2::KIND_REQUEST,
+            r#"{"budget":0.25,"dims":2,"id":7,"rows":2,"task":"cnf_rings","v":2}"#,
+            &[0.5, -0.75, 0.25, 1.5],
+        )
+    );
+}
+
+#[test]
+fn golden_v2_response_frame() {
+    let resp = InferResponse {
+        id: 7,
+        variant: "hyperheun_k2".into(),
+        mape: 0.02,
+        nfe: 4,
+        latency_us: 812,
+        batch_fill: 4,
+        samples: 2,
+        dims: 2,
+        output: vec![1.0, 2.0, 3.0, 4.0],
+    };
+    assert_eq!(
+        v2::encode_response(&resp),
+        frame_fixture(
+            v2::KIND_RESPONSE,
+            r#"{"batch_fill":4,"dims":2,"id":7,"latency_us":812,"mape":0.02,"nfe":4,"ok":true,"rows":2,"v":2,"variant":"hyperheun_k2"}"#,
+            &[1.0, 2.0, 3.0, 4.0],
+        )
+    );
+}
+
+#[test]
+fn golden_v2_error_frame_for_every_code() {
+    // error frames carry an empty payload and the same frozen code
+    // strings as the v1 lines — fixture-checked for all nine codes
+    assert_eq!(
+        v2::encode_error(Some(9), &ApiError::deadline_exceeded("too slow")),
+        frame_fixture(
+            v2::KIND_ERROR,
+            r#"{"code":"deadline_exceeded","error":"too slow","id":9,"ok":false,"v":2}"#,
+            &[],
+        )
+    );
+    for code in ErrorCode::ALL {
+        let e = ApiError::new(code, format!("m-{code}"));
+        let header = format!(
+            r#"{{"code":"{code}","error":"m-{code}","id":3,"ok":false,"v":2}}"#
+        );
+        assert_eq!(
+            v2::encode_error(Some(3), &e),
+            frame_fixture(v2::KIND_ERROR, &header, &[]),
+            "{code}"
+        );
+        // and it decodes back to the typed error, code intact
+        let frame = v2::read_frame(&mut &v2::encode_error(Some(3), &e)[..]).unwrap();
+        match v2::decode_reply(frame).unwrap() {
+            InferReply::Err(back) => {
+                assert_eq!(back.id, Some(3));
+                assert_eq!(back.error, e);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v1 ↔ v2 parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v1_and_v2_decode_identical_requests_identically() {
+    // every metadata field set: both codecs must produce the same typed
+    // request (they share the strict field mapping, and this pins it)
+    let mut r = InferRequest::batch("cnf_a", 0.125, 3, vec![0.5; 6]);
+    r.id = Some(42);
+    r.policy = Some(Policy::MinNfe);
+    r.variant = Some("euler_k2".into());
+    r.deadline_us = Some(9000);
+    r.priority = Priority::Low;
+    r.client = Some("tenant-b".into());
+    let (via_v1, ver) = v1::decode_request(&v1::encode_request(&r)).unwrap();
+    assert_eq!(ver, 1);
+    let frame = v2::read_frame(&mut &v2::encode_request(&r)[..]).unwrap();
+    let via_v2 = v2::decode_request(frame).unwrap();
+    assert_eq!(via_v1, via_v2);
+    assert_eq!(via_v2, r);
+
+    // the omission conventions agree too: infinite budget / normal
+    // priority / absent id are absent from the v2 header exactly as from
+    // the v1 line
+    let plain = InferRequest::single("t", f32::INFINITY, vec![1.0, 2.0]);
+    let frame = v2::read_frame(&mut &v2::encode_request(&plain)[..]).unwrap();
+    for absent in ["budget", "id", "priority", "client", "policy"] {
+        assert!(frame.header.get(absent).is_none(), "{absent}");
+    }
+    let back = v2::decode_request(frame).unwrap();
+    assert_eq!(back.budget, f32::INFINITY);
+    assert_eq!(back.priority, Priority::Normal);
+}
+
+// ---------------------------------------------------------------------------
+// Malformed frames over a live connection
+// ---------------------------------------------------------------------------
+
+/// Read one reply frame straight off the socket.
+fn read_frame_raw(stream: &mut TcpStream) -> v2::Frame {
+    v2::read_frame(stream).expect("server should answer with a v2 frame")
+}
+
+fn expect_bad_request(frame: v2::Frame) {
+    match v2::decode_reply(frame).unwrap() {
+        InferReply::Err(e) => assert_eq!(e.error.code, ErrorCode::BadRequest, "{}", e.error),
+        other => panic!("expected a bad_request error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_frames_get_loud_bad_request_replies_over_tcp() {
+    with_watchdog(60, || {
+        let engine = native_engine("v2_bad", &[("cnf_a", 4)], Duration::from_millis(1));
+        let (_engine, addr) = spawn_server(engine);
+
+        // header length overflow: rejected before any allocation, loudly
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut b = vec![0xB2u8, v2::KIND_REQUEST];
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // header_len
+        b.extend_from_slice(&0u32.to_le_bytes()); // payload_len
+        s.write_all(&b).unwrap();
+        expect_bad_request(read_frame_raw(&mut s));
+
+        // truncated mid-frame: prefix promises 64 header bytes, the
+        // stream ends after 8 — a loud bad_request, not a silent hang
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut b = vec![0xB2u8, v2::KIND_REQUEST];
+        b.extend_from_slice(&64u32.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes());
+        b.extend_from_slice(&[b'{'; 8]);
+        s.write_all(&b).unwrap();
+        s.shutdown(Shutdown::Write).unwrap();
+        expect_bad_request(read_frame_raw(&mut s));
+
+        // payload not a whole number of f32s
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let good = v2::encode_request(&InferRequest::single("cnf_a", 0.5, vec![0.1, 0.2]));
+        let mut b = good.clone();
+        b[6..10].copy_from_slice(&7u32.to_le_bytes());
+        s.write_all(&b).unwrap();
+        expect_bad_request(read_frame_raw(&mut s));
+
+        // ragged row payload: header says 2×2, payload carries 3 floats —
+        // the frame itself parses, so the connection survives the reject
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut ragged = InferRequest::batch("cnf_a", 0.5, 2, vec![0.1, 0.2, 0.3, 0.4]);
+        ragged.input.pop();
+        s.write_all(&v2::encode_request(&ragged)).unwrap();
+        expect_bad_request(read_frame_raw(&mut s));
+        // ...and a good frame on the same connection is still served
+        s.write_all(&good).unwrap();
+        let frame = read_frame_raw(&mut s);
+        assert_eq!(frame.kind, v2::KIND_RESPONSE);
+        match v2::decode_reply(frame).unwrap() {
+            InferReply::Ok(r) => assert_eq!((r.samples, r.dims), (1, 2)),
+            other => panic!("{other:?}"),
+        }
+
+        // a well-formed frame whose shape disagrees with the task state
+        // gets the engine's shape_mismatch (not bad_request), echoing id
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut wide = InferRequest::single("cnf_a", 0.5, vec![0.0; 5]);
+        wide.id = Some(77);
+        s.write_all(&v2::encode_request(&wide)).unwrap();
+        match v2::decode_reply(read_frame_raw(&mut s)).unwrap() {
+            InferReply::Err(e) => {
+                assert_eq!(e.id, Some(77));
+                assert_eq!(e.error.code, ErrorCode::ShapeMismatch, "{}", e.error);
+            }
+            other => panic!("{other:?}"),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Negotiation + end-to-end pipelined serving over v2
+// ---------------------------------------------------------------------------
+
+#[test]
+fn protocol_cmd_advertises_all_three_versions() {
+    with_watchdog(60, || {
+        let engine = native_engine("v2_nego", &[("cnf_a", 4)], Duration::from_millis(1));
+        let (_engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+        let reply = client
+            .request(&json::obj(vec![("cmd", json::s("protocol"))]))
+            .unwrap();
+        assert_eq!(reply.get("ok").and_then(Value::as_bool), Some(true));
+        let versions: Vec<f64> = reply
+            .get("versions")
+            .and_then(Value::as_arr)
+            .unwrap()
+            .iter()
+            .filter_map(Value::as_f64)
+            .collect();
+        assert_eq!(versions, vec![0.0, 1.0, 2.0]);
+        assert!(client.prefer_v2().unwrap(), "negotiation should pick v2");
+    });
+}
+
+#[test]
+fn pipelined_v2_connection_matches_inflight_ids_and_mixes_dialects() {
+    with_watchdog(120, || {
+        let engine = native_engine(
+            "v2_pipe",
+            &[("cnf_a", 4), ("cnf_b", 4)],
+            Duration::from_millis(1),
+        );
+        let (engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+
+        // a v1 round trip BEFORE negotiation (client still speaks lines)
+        match client
+            .infer_v1(&InferRequest::single("cnf_a", 0.5, vec![0.1, 0.2]))
+            .unwrap()
+        {
+            InferReply::Ok(r) => assert_eq!(r.samples, 1),
+            other => panic!("{other:?}"),
+        }
+
+        assert!(client.prefer_v2().unwrap());
+
+        // N=16 v2 frames in flight on one connection: mixed tasks, mixed
+        // budgets, mixed row counts, plus two poisoned requests that come
+        // back as immediate v2 error frames
+        let mut reqs: Vec<InferRequest> = Vec::new();
+        for i in 0..16u64 {
+            let task = if i % 2 == 0 { "cnf_a" } else { "cnf_b" };
+            let budget = [0.5f32, 0.05, 1e-6][(i % 3) as usize];
+            let samples = 1 + (i as usize % 3);
+            let input: Vec<f32> = (0..samples * 2)
+                .map(|j| 0.05 * (i as f32) - 0.03 * j as f32)
+                .collect();
+            let mut r = InferRequest::batch(task, budget, samples, input);
+            r.id = Some(100 + i);
+            reqs.push(r);
+        }
+        let mut bad_task = InferRequest::single("no_such_task", 0.5, vec![0.0, 0.0]);
+        bad_task.id = Some(900);
+        reqs.insert(5, bad_task);
+        let mut bad_shape = InferRequest::single("cnf_a", 0.5, vec![0.0; 5]);
+        bad_shape.id = Some(901);
+        reqs.insert(11, bad_shape);
+
+        let replies = client.infer_pipelined(&reqs).unwrap();
+        assert_eq!(replies.len(), reqs.len());
+        for (req, reply) in reqs.iter().zip(&replies) {
+            assert_eq!(reply.id(), req.id, "replies re-ordered by id");
+            match (req.id, reply) {
+                (Some(900), InferReply::Err(e)) => {
+                    assert_eq!(e.error.code, ErrorCode::UnknownTask)
+                }
+                (Some(901), InferReply::Err(e)) => {
+                    assert_eq!(e.error.code, ErrorCode::ShapeMismatch)
+                }
+                (_, InferReply::Ok(r)) => {
+                    assert_eq!(r.samples, req.samples, "row count echoed");
+                    assert_eq!(r.output.len(), req.samples * 2);
+                    assert!(r.output.iter().all(|x| x.is_finite()));
+                }
+                (id, other) => panic!("request {id:?} got {other:?}"),
+            }
+        }
+
+        // all three dialects interleave on the SAME connection: a legacy
+        // v0 line (answered in the v0 shape, deprecation notice intact)...
+        let v0 = client.infer("cnf_a", 0.5, &[0.5, 0.5]).unwrap();
+        assert_eq!(v0.get("ok").and_then(Value::as_bool), Some(true), "{v0:?}");
+        assert!(v0.get("deprecation").is_some());
+        // ...then another v2 frame round trip
+        match client
+            .infer_v1(&InferRequest::single("cnf_b", 0.05, vec![0.1, 0.2]))
+            .unwrap()
+        {
+            InferReply::Ok(r) => assert_eq!(r.variant, "hyperheun_k2"),
+            other => panic!("{other:?}"),
+        }
+
+        let m = engine.metrics();
+        assert!(
+            m.responses.load(std::sync::atomic::Ordering::Relaxed) >= 18,
+            "{}",
+            m.report()
+        );
+    });
+}
+
+#[test]
+fn deadline_exceeded_travels_a_v2_frame_with_its_code() {
+    with_watchdog(60, || {
+        let engine = native_engine(
+            "v2_deadline",
+            &[("cnf_a", 4)],
+            Duration::from_millis(500),
+        );
+        let (_engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+        assert!(client.prefer_v2().unwrap());
+        let mut req = InferRequest::single("cnf_a", 0.5, vec![0.1, 0.2]);
+        req.deadline_us = Some(1);
+        match client.infer_v1(&req).unwrap() {
+            InferReply::Err(e) => {
+                assert_eq!(e.error.code, ErrorCode::DeadlineExceeded, "{}", e.error)
+            }
+            other => panic!("expected deadline_exceeded, got {other:?}"),
+        }
+    });
+}

@@ -51,7 +51,7 @@ fn native_backend_matches_solver_level_calls() {
             .unwrap()
         };
 
-        let served = backend.execute(&m, task, v, input.clone()).unwrap();
+        let served = backend.execute(&m, task, v, &input).unwrap();
         assert_eq!(served.z.len(), direct.numel(), "{}", v.name);
         for (i, (a, b)) in served.z.iter().zip(direct.data()).enumerate() {
             assert!(
@@ -78,7 +78,7 @@ fn native_backend_zero_padding_rows_stay_finite() {
     input[0] = 0.7;
     input[1] = -0.3; // one real sample, three zero rows
     for v in &task.variants {
-        let out = backend.execute(&m, task, v, input.clone()).unwrap();
+        let out = backend.execute(&m, task, v, &input).unwrap();
         assert!(
             out.z.iter().all(|x| x.is_finite()),
             "{}: padded rows went non-finite",
@@ -109,8 +109,8 @@ fn native_matches_pjrt_when_artifacts_present() {
         let dim: usize = task.state_shape.iter().product();
         let input: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
         for v in &task.variants {
-            let a = pjrt.execute(&m, task, v, input.clone()).unwrap();
-            let b = native.execute(&m, task, v, input.clone()).unwrap();
+            let a = pjrt.execute(&m, task, v, &input).unwrap();
+            let b = native.execute(&m, task, v, &input).unwrap();
             assert_eq!(a.z.len(), b.z.len(), "{name}/{}", v.name);
             if v.solver == "dopri5" {
                 continue; // adaptive paths take their own step sequences

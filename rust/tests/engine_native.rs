@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use hypersolvers::api::ErrorCode;
 use hypersolvers::coordinator::{
-    server, Engine, EngineConfig, Policy, Priority, SloConfig, SubmitOptions,
+    server, Engine, EngineConfig, Policy, Priority, RowBlock, SloConfig, SubmitOptions,
 };
 use hypersolvers::runtime::BackendKind;
 use hypersolvers::util::fixtures;
@@ -375,8 +375,7 @@ fn shared_completion_channel_correlates_by_id() {
                 .submit_with(
                     "cnf_a",
                     0.5,
-                    vec![0.05 * i as f32, -0.4],
-                    1,
+                    RowBlock::single(vec![0.05 * i as f32, -0.4]),
                     &SubmitOptions::default(),
                     tx.clone(),
                 )
