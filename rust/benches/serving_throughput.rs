@@ -23,13 +23,16 @@
 //! Besides the human-readable tables, the run is summarized to
 //! `BENCH_serving.json` (override the path with `BENCH_JSON`): per
 //! scenario p50/p95/p99 latency, achieved throughput, batch fill, NFE/req,
-//! and the worker-pool concurrency peak — machine-readable so successive
-//! PRs can diff serving performance.
+//! the worker-pool concurrency peak, and the engine-side stage breakdown
+//! (`stage_{queue,pad,exec,total}_{p50,p99}_ms`, from the request spans) —
+//! machine-readable so successive PRs can diff serving performance. With
+//! `--metrics-addr HOST:PORT` the run also exposes live Prometheus text
+//! for whichever engine is currently under load (what CI scrapes).
 
 use std::collections::HashMap;
 use std::net::TcpListener;
 use std::sync::atomic::Ordering::Relaxed;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use hypersolvers::api::v1::{InferReply, InferRequest};
@@ -94,6 +97,12 @@ fn main() {
             "1",
             "offered-load duration of each overload run",
         )
+        .opt(
+            "metrics-addr",
+            "",
+            "Prometheus exposition listen address, scraping whichever \
+             engine is currently under load (empty = off)",
+        )
         .parse_env();
 
     let backend = match BackendKind::from_name(&args.get("backend")) {
@@ -151,6 +160,31 @@ fn main() {
     let mut scenarios_json: Vec<Value> = Vec::new();
     let mut resolved_workers = 0usize;
     let mut headline: Option<(f64, f64)> = None; // mixed-budget (p50, rps), pool off
+    let mut headline_stages: Option<Vec<(&'static str, Value)>> = None;
+
+    // Optional live exposition plane: scenarios rotate through short-lived
+    // engines, so the scrape renders whichever one is currently registered
+    // (CI scrapes this mid-run and gates it with `benchgate --expo-check`).
+    let metrics_engine: Arc<Mutex<Option<Arc<Engine>>>> = Arc::new(Mutex::new(None));
+    let metrics_addr = args.get("metrics-addr");
+    if !metrics_addr.is_empty() {
+        let listener = TcpListener::bind(metrics_addr.as_str()).expect("bind --metrics-addr");
+        println!("metrics exposition on {}", listener.local_addr().unwrap());
+        let current = Arc::clone(&metrics_engine);
+        std::thread::spawn(move || {
+            let _ = server::serve_metrics_with(listener, move || {
+                match current.lock().unwrap().as_ref() {
+                    Some(e) => e.render_prometheus(),
+                    // before the first scenario registers: minimal but
+                    // parseable, so early scrapes see text, not a reset
+                    None => "# TYPE hypersolvers_up gauge\nhypersolvers_up 1\n".into(),
+                }
+            });
+        });
+    }
+    let register = |e: &Arc<Engine>| {
+        *metrics_engine.lock().unwrap() = Some(Arc::clone(e));
+    };
 
     let engine_config = |workers: usize| EngineConfig {
         artifacts_dir: artifacts_dir.clone(),
@@ -195,7 +229,8 @@ fn main() {
         } else {
             tensor::clear_matmul_pool();
         }
-        let engine = Engine::new(engine_config(args.get_usize("workers"))).unwrap();
+        let engine = Arc::new(Engine::new(engine_config(args.get_usize("workers"))).unwrap());
+        register(&engine);
         resolved_workers = engine.worker_count();
         for t in &tasks {
             engine.warmup(t).unwrap();
@@ -260,7 +295,7 @@ fn main() {
             format!("{nfe_per_req:.1}"),
             conc_peak.to_string(),
         ]);
-        scenarios_json.push(json::obj(vec![
+        let mut row = vec![
             ("scenario", json::s(scenario)),
             ("mode", json::s("inproc_poisson")),
             ("matmul_threads", json::num(mode as f64)),
@@ -273,9 +308,12 @@ fn main() {
             ("fill", json::num(metrics.fill_ratio())),
             ("nfe_per_req", json::num(nfe_per_req)),
             ("inflight_peak", json::num(conc_peak as f64)),
-        ]));
+        ];
+        row.extend(stage_fields(metrics));
+        scenarios_json.push(json::obj(row));
         if scenario == "mixed budgets" && mode == 0 {
             headline = Some((p50, achieved_rps));
+            headline_stages = Some(stage_fields(metrics));
         }
         println!("[{scenario}] mm={mode} {}", metrics.report());
         if conc_peak >= 2 {
@@ -306,6 +344,7 @@ fn main() {
         let samples_label = if full_batch { "×B" } else { "×1" };
         let scenario = format!("pipelined tcp {samples_label}");
         let engine = Arc::new(Engine::new(engine_config(args.get_usize("workers"))).unwrap());
+        register(&engine);
         for t in &tasks {
             engine.warmup(t).unwrap();
         }
@@ -378,7 +417,7 @@ fn main() {
             format!("{nfe_per_req:.1}"),
             conc_peak.to_string(),
         ]);
-        scenarios_json.push(json::obj(vec![
+        let mut row = vec![
             ("scenario", json::s(&scenario)),
             ("mode", json::s("tcp_pipelined")),
             ("matmul_threads", json::num(0.0)),
@@ -403,7 +442,9 @@ fn main() {
             ("fill", json::num(metrics.fill_ratio())),
             ("nfe_per_req", json::num(nfe_per_req)),
             ("inflight_peak", json::num(conc_peak as f64)),
-        ]));
+        ];
+        row.extend(stage_fields(metrics));
+        scenarios_json.push(json::obj(row));
         println!(
             "[{scenario}] window={window} rows={rows_done} {}",
             metrics.report()
@@ -443,6 +484,7 @@ fn main() {
                 })
                 .unwrap(),
             );
+            register(&engine);
             engine.warmup(wide_task).unwrap();
             let listener = TcpListener::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap().to_string();
@@ -519,7 +561,7 @@ fn main() {
                 "-".into(),
                 metrics.inflight_peak.load(Relaxed).to_string(),
             ]);
-            scenarios_json.push(json::obj(vec![
+            let mut row = vec![
                 ("scenario", json::s(&scenario)),
                 (
                     "mode",
@@ -537,7 +579,9 @@ fn main() {
                 ("p50_ms", json::num(p50)),
                 ("p95_ms", json::num(p95)),
                 ("p99_ms", json::num(p99)),
-            ]));
+            ];
+            row.extend(stage_fields(metrics));
+            scenarios_json.push(json::obj(row));
             println!(
                 "[{scenario}] window={window} rows={rows_done} \
                  payload {wire_mb_s:.1} MB/s"
@@ -644,7 +688,8 @@ fn main() {
                 }
             };
             let scenario = format!("overload shed={}", if shed_on { "on" } else { "off" });
-            let engine = Engine::new(heavy_config(slo)).unwrap();
+            let engine = Arc::new(Engine::new(heavy_config(slo)).unwrap());
+            register(&engine);
             engine.warmup(heavy_task).unwrap();
             let mut rng = Rng::new(12);
             let mut handles = Vec::with_capacity(n_req);
@@ -790,10 +835,34 @@ fn main() {
             fields.push(("overload_goodput_baseline", json::num(goodput_off)));
             fields.push(("overload_factor", json::num(overload_factor)));
         }
+        // engine-side stage breakdown of the headline scenario — benchgate
+        // checks that queue+pad+exec p50s stay consistent with the total
+        if let Some(sf) = headline_stages {
+            fields.extend(sf);
+        }
         let entry = benchkit::bench_doc("serving_throughput", fields);
         match benchkit::append_trajectory(entry) {
             Ok(path) => println!("appended to {}", path.display()),
             Err(e) => eprintln!("failed to append bench trajectory: {e}"),
         }
     }
+}
+
+/// Engine-side stage-latency breakdown, read from the request spans'
+/// histograms: where a request's wall time actually went (queue wait, pad,
+/// execute) as distinct from the client-observed percentiles above.
+fn stage_fields(
+    m: &hypersolvers::coordinator::CoordinatorMetrics,
+) -> Vec<(&'static str, Value)> {
+    let ms = |h: &stats::LatencyHistogram, pct: f64| json::num(h.percentile_us(pct) / 1e3);
+    vec![
+        ("stage_queue_p50_ms", ms(&m.queue_latency, 50.0)),
+        ("stage_queue_p99_ms", ms(&m.queue_latency, 99.0)),
+        ("stage_pad_p50_ms", ms(&m.pad_latency, 50.0)),
+        ("stage_pad_p99_ms", ms(&m.pad_latency, 99.0)),
+        ("stage_exec_p50_ms", ms(&m.exec_latency, 50.0)),
+        ("stage_exec_p99_ms", ms(&m.exec_latency, 99.0)),
+        ("stage_total_p50_ms", ms(&m.total_latency, 50.0)),
+        ("stage_total_p99_ms", ms(&m.total_latency, 99.0)),
+    ]
 }

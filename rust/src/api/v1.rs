@@ -29,7 +29,10 @@
 //! `priority` (`"low" | "normal" | "high"`, breaks dispatch ties and
 //! orders overload shedding; absent = `"normal"`), `client` (caller
 //! identity string for per-client row quotas; absent = unattributed,
-//! quota-exempt). An overloaded engine answers with the `overloaded`
+//! quota-exempt), `trace` (client-chosen trace id for the observability
+//! plane, echoed on the reply — success *or* error — and attached to the
+//! request's span; absent = server-assigned, visible only via
+//! `cmd:"trace"`). An overloaded engine answers with the `overloaded`
 //! code *before* queueing work it predicts cannot meet its deadline.
 //!
 //! **Versioning:** every v1 line carries `"v": 1`. A line without `"v"`
@@ -78,6 +81,10 @@ pub struct InferRequest {
     pub priority: Priority,
     /// Caller identity for per-client row quotas (absent = exempt).
     pub client: Option<String>,
+    /// Client-chosen trace id, echoed on replies (success and error) and
+    /// attached to the request's stage span. `None` lets the engine assign
+    /// one, visible only via `cmd:"trace"`.
+    pub trace: Option<u64>,
 }
 
 impl InferRequest {
@@ -96,6 +103,7 @@ impl InferRequest {
             deadline_us: None,
             priority: Priority::default(),
             client: None,
+            trace: None,
         }
     }
 
@@ -124,6 +132,7 @@ impl InferRequest {
             deadline_us: None,
             priority: Priority::default(),
             client: None,
+            trace: None,
         }
     }
 
@@ -138,6 +147,7 @@ impl InferRequest {
             deadline: self.deadline_us.map(std::time::Duration::from_micros),
             priority: self.priority,
             client: self.client.clone(),
+            trace: self.trace,
         }
     }
 }
@@ -157,6 +167,9 @@ pub struct InferResponse {
     pub dims: usize,
     /// Row-major `[samples, dims]` output.
     pub output: Vec<f32>,
+    /// Echo of the client-supplied trace id; `None` (and omitted on the
+    /// wire) when the request carried none — golden replies stay stable.
+    pub trace: Option<u64>,
 }
 
 /// A typed error reply.
@@ -164,6 +177,9 @@ pub struct InferResponse {
 pub struct ErrorReply {
     pub id: Option<u64>,
     pub error: ApiError,
+    /// Echo of the client-supplied trace id, when the line that failed
+    /// carried a valid one.
+    pub trace: Option<u64>,
 }
 
 /// One decoded reply line.
@@ -216,6 +232,12 @@ pub(crate) fn field_str(v: &Value, key: &str) -> Result<Option<&str>, ApiError> 
 /// invalid id yields `None`, never a second definition of validity).
 pub fn peek_id(v: &Value) -> Option<u64> {
     field_u64(v, "id").ok().flatten()
+}
+
+/// Best-effort read of a line's `trace` field, same contract as
+/// [`peek_id`] — for echoing trace ids on lines that failed to decode.
+pub fn peek_trace(v: &Value) -> Option<u64> {
+    field_u64(v, "trace").ok().flatten()
 }
 
 /// Wire version of a line: `None` "v" key → 0; `1` → 1; else rejected.
@@ -298,6 +320,7 @@ pub fn decode_request(v: &Value) -> Result<(InferRequest, u8), ApiError> {
             deadline_us: meta.deadline_us,
             priority: meta.priority,
             client: meta.client,
+            trace: meta.trace,
         },
         version,
     ))
@@ -332,6 +355,7 @@ pub(crate) struct WireMeta {
     pub deadline_us: Option<u64>,
     pub priority: Priority,
     pub client: Option<String>,
+    pub trace: Option<u64>,
 }
 
 /// Strict decode of the [`WireMeta`] fields from a request object — the
@@ -363,6 +387,7 @@ pub(crate) fn decode_meta(v: &Value) -> Result<WireMeta, ApiError> {
         deadline_us: field_u64(v, "deadline_us")?,
         priority,
         client: field_str(v, "client")?.map(str::to_string),
+        trace: field_u64(v, "trace")?,
     })
 }
 
@@ -410,6 +435,9 @@ pub(crate) fn push_meta_fields(fields: &mut Vec<(&'static str, Value)>, r: &Infe
     if let Some(c) = &r.client {
         fields.push(("client", json::s(c)));
     }
+    if let Some(t) = r.trace {
+        fields.push(("trace", json::num(t as f64)));
+    }
 }
 
 fn rows_value(data: &[f32], samples: usize, dims: usize) -> Value {
@@ -445,6 +473,7 @@ pub fn response_from_engine(id: u64, samples: usize, r: &Response) -> InferRespo
         samples,
         dims,
         output: r.output.clone(),
+        trace: None,
     }
 }
 
@@ -465,7 +494,7 @@ pub fn encode_response(r: &InferResponse, version: u8) -> Value {
             ("deprecation", json::s(DEPRECATION)),
         ]);
     }
-    json::obj(vec![
+    let mut fields = vec![
         ("v", json::num(VERSION as f64)),
         ("ok", Value::Bool(true)),
         ("id", json::num(r.id as f64)),
@@ -475,13 +504,20 @@ pub fn encode_response(r: &InferResponse, version: u8) -> Value {
         ("latency_us", json::num(r.latency_us as f64)),
         ("batch_fill", json::num(r.batch_fill as f64)),
         ("output", rows_value(&r.output, r.samples, r.dims)),
-    ])
+    ];
+    // echoed only when the request carried one — pre-trace golden replies
+    // stay byte-identical
+    if let Some(t) = r.trace {
+        fields.push(("trace", json::num(t as f64)));
+    }
+    json::obj(fields)
 }
 
 /// Encode an error reply. Both dialects carry `code` + `error`; v1 adds
-/// the version tag and echoes the id when one is known.
-pub fn encode_error(id: Option<u64>, e: &ApiError, version: u8) -> Value {
-    let mut fields = Vec::with_capacity(5);
+/// the version tag, echoes the id when one is known, and echoes a
+/// client-supplied trace id so rejected requests stay correlatable.
+pub fn encode_error(id: Option<u64>, trace: Option<u64>, e: &ApiError, version: u8) -> Value {
+    let mut fields = Vec::with_capacity(6);
     if version != 0 {
         fields.push(("v", json::num(VERSION as f64)));
     }
@@ -491,6 +527,9 @@ pub fn encode_error(id: Option<u64>, e: &ApiError, version: u8) -> Value {
     }
     fields.push(("code", json::s(e.code.as_str())));
     fields.push(("error", json::s(&e.message)));
+    if let Some(t) = trace {
+        fields.push(("trace", json::num(t as f64)));
+    }
     json::obj(fields)
 }
 
@@ -503,6 +542,7 @@ pub fn decode_reply(v: &Value) -> Result<InferReply, ApiError> {
         .and_then(Value::as_bool)
         .ok_or_else(|| ApiError::bad_request("reply missing ok"))?;
     let id = field_u64(v, "id")?;
+    let trace = field_u64(v, "trace")?;
     if !ok {
         let code_s = field_str(v, "code")?.unwrap_or("internal");
         let message = field_str(v, "error")?.unwrap_or("").to_string();
@@ -510,7 +550,7 @@ pub fn decode_reply(v: &Value) -> Result<InferReply, ApiError> {
             Some(code) => ApiError::new(code, message),
             None => ApiError::internal(format!("unknown error code {code_s:?}: {message}")),
         };
-        return Ok(InferReply::Err(ErrorReply { id, error }));
+        return Ok(InferReply::Err(ErrorReply { id, error, trace }));
     }
     let id = id.ok_or_else(|| ApiError::bad_request("ok reply missing id"))?;
     let (output, shape) = v
@@ -537,6 +577,7 @@ pub fn decode_reply(v: &Value) -> Result<InferReply, ApiError> {
         samples,
         dims,
         output,
+        trace,
     }))
 }
 
@@ -675,6 +716,7 @@ mod tests {
             samples: 2,
             dims: 2,
             output: vec![1.0, 2.0, 3.0, 4.0],
+            trace: None,
         };
         let v1 = encode_response(&r, 1);
         assert_eq!(v1.get("v").and_then(Value::as_f64), Some(1.0));
@@ -696,7 +738,7 @@ mod tests {
         for code in ErrorCode::ALL {
             let e = ApiError::new(code, format!("details of {code}"));
             for version in [0u8, 1] {
-                let enc = encode_error(Some(5), &e, version);
+                let enc = encode_error(Some(5), None, &e, version);
                 assert_eq!(enc.get("ok").and_then(Value::as_bool), Some(false));
                 assert_eq!(enc.get("code").and_then(Value::as_str), Some(code.as_str()));
                 match decode_reply(&enc).unwrap() {
@@ -717,5 +759,51 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn trace_ids_ride_the_wire_when_present_and_vanish_when_absent() {
+        // requests: trace encodes, round-trips, and is strictly typed
+        let mut r = InferRequest::single("t", 0.5, vec![1.0]);
+        r.trace = Some(99);
+        let enc = encode_request(&r);
+        assert_eq!(enc.get("trace").and_then(Value::as_f64), Some(99.0));
+        let (back, _) = decode_request(&enc).unwrap();
+        assert_eq!(back.trace, Some(99));
+        assert_eq!(back.submit_options().trace, Some(99));
+        let v = json::parse(r#"{"v":1,"task":"t","trace":"x","input":[1]}"#).unwrap();
+        assert_eq!(decode_request(&v).unwrap_err().code, ErrorCode::BadRequest);
+        // the untraced request line has no trace key at all
+        r.trace = None;
+        assert!(encode_request(&r).get("trace").is_none());
+
+        // replies: echoed on success and on errors, omitted when None
+        let mut resp = InferResponse {
+            id: 1,
+            variant: "euler_k2".into(),
+            mape: 0.0,
+            nfe: 2,
+            latency_us: 10,
+            batch_fill: 1,
+            samples: 1,
+            dims: 1,
+            output: vec![0.5],
+            trace: Some(99),
+        };
+        let enc = encode_response(&resp, 1);
+        assert_eq!(enc.get("trace").and_then(Value::as_f64), Some(99.0));
+        match decode_reply(&enc).unwrap() {
+            InferReply::Ok(back) => assert_eq!(back.trace, Some(99)),
+            other => panic!("{other:?}"),
+        }
+        resp.trace = None;
+        assert!(encode_response(&resp, 1).get("trace").is_none());
+        let err = ApiError::new(ErrorCode::Overloaded, "busy");
+        let enc = encode_error(Some(5), Some(99), &err, 1);
+        match decode_reply(&enc).unwrap() {
+            InferReply::Err(back) => assert_eq!(back.trace, Some(99)),
+            other => panic!("{other:?}"),
+        }
+        assert!(encode_error(Some(5), None, &err, 1).get("trace").is_none());
     }
 }

@@ -17,7 +17,7 @@
 //!
 //! Request headers carry `task`/`rows`/`dims` plus the optional v1 fields
 //! (`id`, `budget`, `policy`, `variant`, `deadline_us`, `priority`,
-//! `client`) with **identical** strict semantics — both codecs decode the
+//! `client`, `trace`) with **identical** strict semantics — both codecs decode the
 //! metadata through the same `api::v1` readers, so v2 cannot drift from
 //! v1 field by field. Response and error headers mirror the v1 reply
 //! shapes (`ok`, `id`, `variant`, `mape`, `nfe`, `latency_us`,
@@ -307,6 +307,7 @@ pub fn decode_request(f: Frame) -> Result<InferRequest, ApiError> {
         deadline_us: meta.deadline_us,
         priority: meta.priority,
         client: meta.client,
+        trace: meta.trace,
     })
 }
 
@@ -317,7 +318,7 @@ pub fn decode_request(f: Frame) -> Result<InferRequest, ApiError> {
 /// Encode a success reply as one v2 frame; the output rows ride as the
 /// raw payload.
 pub fn encode_response(r: &InferResponse) -> Vec<u8> {
-    let header = json::obj(vec![
+    let mut fields = vec![
         ("v", json::num(VERSION as f64)),
         ("ok", Value::Bool(true)),
         ("id", json::num(r.id as f64)),
@@ -328,13 +329,19 @@ pub fn encode_response(r: &InferResponse) -> Vec<u8> {
         ("batch_fill", json::num(r.batch_fill as f64)),
         ("rows", json::num(r.samples as f64)),
         ("dims", json::num(r.dims as f64)),
-    ]);
-    frame_bytes(KIND_RESPONSE, &header, &r.output)
+    ];
+    // same omission convention as the v1 line: pre-trace frames are
+    // byte-identical
+    if let Some(t) = r.trace {
+        fields.push(("trace", json::num(t as f64)));
+    }
+    frame_bytes(KIND_RESPONSE, &json::obj(fields), &r.output)
 }
 
 /// Encode an error reply as one v2 frame (empty payload). Carries the
-/// same stable `code` strings as every other dialect.
-pub fn encode_error(id: Option<u64>, e: &ApiError) -> Vec<u8> {
+/// same stable `code` strings as every other dialect, and echoes a
+/// client-supplied trace id like the v1 error line.
+pub fn encode_error(id: Option<u64>, trace: Option<u64>, e: &ApiError) -> Vec<u8> {
     let mut fields = vec![
         ("v", json::num(VERSION as f64)),
         ("ok", Value::Bool(false)),
@@ -344,6 +351,9 @@ pub fn encode_error(id: Option<u64>, e: &ApiError) -> Vec<u8> {
     }
     fields.push(("code", json::s(e.code.as_str())));
     fields.push(("error", json::s(&e.message)));
+    if let Some(t) = trace {
+        fields.push(("trace", json::num(t as f64)));
+    }
     frame_bytes(KIND_ERROR, &json::obj(fields), &[])
 }
 
@@ -366,7 +376,11 @@ pub fn decode_reply(f: Frame) -> Result<InferReply, ApiError> {
                 Some(code) => ApiError::new(code, message),
                 None => ApiError::internal(format!("unknown error code {code_s:?}: {message}")),
             };
-            Ok(InferReply::Err(ErrorReply { id, error }))
+            Ok(InferReply::Err(ErrorReply {
+                id,
+                error,
+                trace: v1::field_u64(&f.header, "trace")?,
+            }))
         }
         KIND_RESPONSE => {
             check_version(&f.header)?;
@@ -389,6 +403,7 @@ pub fn decode_reply(f: Frame) -> Result<InferReply, ApiError> {
                 samples,
                 dims,
                 output: f.payload,
+                trace: v1::field_u64(&f.header, "trace")?,
             }))
         }
         other => Err(ApiError::bad_request(format!(
@@ -436,6 +451,7 @@ mod tests {
             samples: 2,
             dims: 2,
             output: vec![1.0, 2.0, 3.0, 4.0],
+            trace: None,
         };
         match decode_reply(read_all(&encode_response(&resp)).unwrap()).unwrap() {
             InferReply::Ok(back) => assert_eq!(back, resp),
@@ -443,13 +459,48 @@ mod tests {
         }
         for code in ErrorCode::ALL {
             let e = ApiError::new(code, format!("m-{code}"));
-            match decode_reply(read_all(&encode_error(Some(5), &e)).unwrap()).unwrap() {
+            match decode_reply(read_all(&encode_error(Some(5), None, &e)).unwrap()).unwrap() {
                 InferReply::Err(back) => {
                     assert_eq!(back.id, Some(5));
                     assert_eq!(back.error, e);
                 }
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn trace_ids_round_trip_both_frame_kinds() {
+        // request frames inherit the shared meta codec
+        let mut r = InferRequest::single("t", 0.5, vec![1.0]);
+        r.trace = Some(314);
+        let back = decode_request(read_all(&encode_request(&r)).unwrap()).unwrap();
+        assert_eq!(back.trace, Some(314));
+        // reply frames echo, error frames echo, absent stays absent
+        let resp = InferResponse {
+            id: 1,
+            variant: "euler_k2".into(),
+            mape: 0.0,
+            nfe: 2,
+            latency_us: 5,
+            batch_fill: 1,
+            samples: 1,
+            dims: 1,
+            output: vec![0.5],
+            trace: Some(314),
+        };
+        match decode_reply(read_all(&encode_response(&resp)).unwrap()).unwrap() {
+            InferReply::Ok(back) => assert_eq!(back.trace, Some(314)),
+            other => panic!("{other:?}"),
+        }
+        let e = ApiError::new(ErrorCode::Overloaded, "busy");
+        match decode_reply(read_all(&encode_error(Some(2), Some(314), &e)).unwrap()).unwrap() {
+            InferReply::Err(back) => assert_eq!(back.trace, Some(314)),
+            other => panic!("{other:?}"),
+        }
+        match decode_reply(read_all(&encode_error(Some(2), None, &e)).unwrap()).unwrap() {
+            InferReply::Err(back) => assert_eq!(back.trace, None),
+            other => panic!("{other:?}"),
         }
     }
 

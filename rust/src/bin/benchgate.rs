@@ -19,11 +19,19 @@
 //! commit-over-commit. A missing file (first run / cold cache) passes with
 //! a note — there is nothing to regress against yet.
 //!
+//! A second mode, `--expo-check FILE`, validates a scraped Prometheus
+//! exposition instead of the trajectory: the file must parse as exposition
+//! text and carry the serving metric families the dashboards key on. CI
+//! runs it against the text scraped from the serving bench's
+//! `--metrics-addr` listener.
+//!
 //! ```bash
 //! benchgate                                   # ./BENCH_trajectory.json
 //! benchgate --trajectory path.json --p50-slack 1.75
+//! benchgate --expo-check metrics.prom         # gate a scraped exposition
 //! ```
 
+use hypersolvers::obs::expo;
 use hypersolvers::util::benchkit;
 use hypersolvers::util::cli::Cli;
 use hypersolvers::util::json;
@@ -34,6 +42,12 @@ fn main() {
             "trajectory",
             "BENCH_trajectory.json",
             "rolling trajectory file (BENCH_TRAJECTORY env also honored)",
+        )
+        .opt(
+            "expo-check",
+            "",
+            "validate a scraped Prometheus exposition file instead of \
+             gating the trajectory",
         )
         .opt(
             "p50-slack",
@@ -48,6 +62,12 @@ fn main() {
              (goodput is in [0, 1])",
         )
         .parse_env();
+
+    let expo_path = args.get("expo-check");
+    if !expo_path.is_empty() {
+        expo_check(&expo_path);
+        return;
+    }
 
     let path = std::env::var("BENCH_TRAJECTORY")
         .unwrap_or_else(|_| args.get("trajectory"));
@@ -107,4 +127,38 @@ fn main() {
         std::process::exit(1);
     }
     println!("benchgate: no regressions");
+}
+
+/// `--expo-check`: the scraped exposition must parse line-for-line and
+/// carry the families the serving dashboards key on. A scrape that raced
+/// the bench's first engine (`hypersolvers_up` only) fails here — CI's
+/// retry loop is supposed to have waited that out.
+fn expo_check(path: &str) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: read {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let required = [
+        "hypersolvers_requests_total",
+        "hypersolvers_responses_total",
+        "hypersolvers_batch_fill_ratio",
+        "hypersolvers_goodput",
+        "hypersolvers_latency_us",
+    ];
+    match expo::self_check(&text, &required) {
+        Ok(samples) => {
+            println!(
+                "benchgate: exposition ok — {samples} samples, all {} required \
+                 families present",
+                required.len()
+            );
+        }
+        Err(e) => {
+            eprintln!("benchgate: bad exposition in {path}: {e}");
+            std::process::exit(1);
+        }
+    }
 }

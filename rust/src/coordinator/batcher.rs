@@ -289,7 +289,8 @@ impl Batcher {
                 break;
             }
             taken += r;
-            let p = q.items.pop_front().expect("front exists");
+            let mut p = q.items.pop_front().expect("front exists");
+            p.req.stamps.stamp(crate::obs::Stage::Pop);
             q.rows -= rows(&p);
             q.deadline_count -= usize::from(p.req.deadline.is_some());
             if let Some(client) = &p.req.client {

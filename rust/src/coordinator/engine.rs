@@ -34,6 +34,7 @@ use crate::coordinator::policy::{select_variant, Policy};
 use crate::coordinator::request::{
     Completion, CompletionSender, Priority, Request, Response, RowBlock,
 };
+use crate::obs::{self, Stage};
 use crate::runtime::backend::{BackendKind, ExecBackend};
 use crate::runtime::manifest::Manifest;
 use crate::{log_debug, log_info, Error, Result};
@@ -121,6 +122,10 @@ pub struct SubmitOptions {
     /// Client identity for per-client row quotas (`None` = unattributed,
     /// exempt from quotas).
     pub client: Option<String>,
+    /// Client-supplied trace id for end-to-end correlation; `None` lets
+    /// the engine generate one. The id travels with the request's span
+    /// (`cmd:"trace"`) and is echoed on wire replies when supplied.
+    pub trace: Option<u64>,
 }
 
 /// A non-blocking submission: the engine id plus the completion channel.
@@ -298,6 +303,175 @@ impl Engine {
         self.shared.state.lock().unwrap().batcher.depths()
     }
 
+    /// Per-(task, variant) admission-control wall-clock predictions (the
+    /// EWMA of measured batch wall µs), sorted by name.
+    pub fn wall_predictions(&self) -> Vec<(String, String, f64)> {
+        let s = self.shared.state.lock().unwrap();
+        let mut out: Vec<(String, String, f64)> = s
+            .wall_ewma
+            .iter()
+            .map(|(k, v)| (k.0.clone(), k.1.clone(), *v))
+            .collect();
+        drop(s);
+        out.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
+        out
+    }
+
+    /// Render every counter, gauge and latency histogram in Prometheus
+    /// text format — the payload of `cmd:"stats"` and the
+    /// `--metrics-addr` listener. Deterministic order (sorted snapshots),
+    /// every value finite.
+    pub fn render_prometheus(&self) -> String {
+        use crate::obs::expo::PromText;
+        let m = self.metrics.as_ref();
+        let c = |a: &AtomicU64| a.load(Relaxed) as f64;
+        let mut p = PromText::new();
+        for (name, help, v) in [
+            ("requests_total", "Requests accepted at submit", c(&m.requests)),
+            ("responses_total", "Successful completions delivered", c(&m.responses)),
+            ("failures_total", "Completions delivered as errors", c(&m.failures)),
+            (
+                "deadline_misses_total",
+                "Requests failed fast past their deadline before dispatch",
+                c(&m.deadline_misses),
+            ),
+            (
+                "deadline_met_total",
+                "Successful completions that met their deadline",
+                c(&m.deadline_met),
+            ),
+            ("shed_total", "Queued requests shed under overload", c(&m.shed)),
+            (
+                "overload_rejects_total",
+                "Requests refused at submit by admission control or quotas",
+                c(&m.overload_rejects),
+            ),
+            ("batches_total", "Batches executed", c(&m.batches)),
+            ("rows_total", "Real rows executed", c(&m.rows)),
+            (
+                "padded_slots_total",
+                "Padded (wasted) batch slots executed",
+                c(&m.padded_slots),
+            ),
+            ("nfe_total", "Field evaluations spent", c(&m.nfe_total)),
+            ("macs_total", "MACs spent", c(&m.macs_total)),
+            (
+                "spans_recorded_total",
+                "Completed request spans pushed to the trace ring",
+                m.spans.pushed() as f64,
+            ),
+        ] {
+            let name = format!("hypersolvers_{name}");
+            p.family(&name, "counter", help);
+            p.sample(&name, &[], v);
+        }
+        for (name, help, v) in [
+            (
+                "inflight_batches",
+                "Batches executing right now",
+                c(&m.inflight_batches),
+            ),
+            (
+                "inflight_peak",
+                "High-water mark of concurrent batches",
+                c(&m.inflight_peak),
+            ),
+            (
+                "batch_fill_ratio",
+                "Mean real-rows fraction of executed batches",
+                m.fill_ratio(),
+            ),
+            (
+                "goodput",
+                "Deadline-met fraction of delivered responses",
+                m.goodput(),
+            ),
+        ] {
+            let name = format!("hypersolvers_{name}");
+            p.family(&name, "gauge", help);
+            p.sample(&name, &[], v);
+        }
+
+        p.family(
+            "hypersolvers_latency_us",
+            "summary",
+            "Request latency by pipeline stage, all queues",
+        );
+        for (stage, h) in [
+            ("queue", &m.queue_latency),
+            ("pad", &m.pad_latency),
+            ("exec", &m.exec_latency),
+            ("total", &m.total_latency),
+        ] {
+            p.summary("hypersolvers_latency_us", &[("stage", stage)], h);
+        }
+
+        let stages = m.stage_snapshot();
+        p.family(
+            "hypersolvers_stage_latency_us",
+            "summary",
+            "Request latency by pipeline stage per (task, variant) queue",
+        );
+        for (task, variant, h) in &stages {
+            for (stage, hist) in [
+                ("queue", &h.queue),
+                ("pad", &h.pad),
+                ("exec", &h.exec),
+                ("total", &h.total),
+            ] {
+                p.summary(
+                    "hypersolvers_stage_latency_us",
+                    &[
+                        ("task", task.as_str()),
+                        ("variant", variant.as_str()),
+                        ("stage", stage),
+                    ],
+                    hist,
+                );
+            }
+        }
+
+        let depths = self.queue_depths();
+        p.family(
+            "hypersolvers_queue_depth_requests",
+            "gauge",
+            "Queued requests per (task, variant) queue",
+        );
+        for d in &depths {
+            p.sample(
+                "hypersolvers_queue_depth_requests",
+                &[("task", d.task.as_str()), ("variant", d.variant.as_str())],
+                d.requests as f64,
+            );
+        }
+        p.family(
+            "hypersolvers_queue_depth_rows",
+            "gauge",
+            "Queued rows per (task, variant) queue",
+        );
+        for d in &depths {
+            p.sample(
+                "hypersolvers_queue_depth_rows",
+                &[("task", d.task.as_str()), ("variant", d.variant.as_str())],
+                d.rows as f64,
+            );
+        }
+
+        p.family(
+            "hypersolvers_wall_ewma_us",
+            "gauge",
+            "Admission-control EWMA of measured batch wall-clock",
+        );
+        for (task, variant, us) in &self.wall_predictions() {
+            p.sample(
+                "hypersolvers_wall_ewma_us",
+                &[("task", task.as_str()), ("variant", variant.as_str())],
+                *us,
+            );
+        }
+        p.finish()
+    }
+
     /// Submit a request whose completion is delivered on `done`, tagged
     /// with the returned engine id — the pipelined path: any number of
     /// in-flight submissions can share one channel. `block` is the
@@ -366,6 +540,9 @@ impl Engine {
         req.deadline = opts.deadline.map(|d| t0 + d);
         req.priority = opts.priority;
         req.client = opts.client.clone();
+        req.trace = opts.trace.unwrap_or_else(obs::next_trace_id);
+        req.trace_client = opts.trace.is_some();
+        req.stamps.stamp(Stage::Submit);
         let slo = &self.config.slo;
         let shed_victims = {
             let mut s = self.shared.state.lock().unwrap();
@@ -399,6 +576,12 @@ impl Engine {
                     }
                 }
             }
+            // both stamps land here: the admission decision was just made
+            // (whether or not the check is enabled), and the push below is
+            // the enqueue — a request refused by the quota path simply
+            // never reaches the span ring
+            req.stamps.stamp(Stage::Admission);
+            req.stamps.stamp(Stage::Enqueue);
             if let Err(p) = s.batcher.push(&key, Pending { req, done }) {
                 drop(s);
                 self.metrics.overload_rejects.fetch_add(1, Relaxed);
@@ -586,16 +769,34 @@ fn complete(
     });
 }
 
+/// Record a finished request's span: ring (for `cmd:"trace"`) and the
+/// slow-exemplar table. Pure `Copy` data — no allocation on this path.
+fn finish_span(metrics: &CoordinatorMetrics, req: &Request, key_idx: u32, ok: bool) {
+    let span = obs::Span {
+        trace: req.trace,
+        id: req.id,
+        key: key_idx,
+        rows: req.block.rows as u32,
+        ok,
+        stamps: req.stamps,
+    };
+    metrics.spans.push(span);
+    metrics.slow.offer(span);
+}
+
 /// Fail every item of a batch; returns `None` so `run_batch` error paths
 /// can `return fail_items(...)` without an executed wall-clock.
 fn fail_items(
     metrics: &CoordinatorMetrics,
     key: &QueueKey,
+    key_idx: u32,
     items: Vec<Pending>,
     err: ApiError,
 ) -> Option<Duration> {
     crate::log_error!("batch {key:?} failed: {err}");
-    for p in items {
+    for mut p in items {
+        p.req.stamps.stamp(Stage::Reply);
+        finish_span(metrics, &p.req, key_idx, false);
         complete(metrics, p, Err(err.clone()));
     }
     None
@@ -611,10 +812,20 @@ fn run_batch(
     pad_buf: &mut Vec<f32>,
 ) -> Option<Duration> {
     let ReadyBatch { key, items } = batch;
+    // intern the (task, variant) once per batch: after the first batch of
+    // a queue this is a lock + name scan, no allocation — the per-item
+    // stage recording below then runs entirely on atomics
+    let (key_idx, stage_hists) = metrics.stage_key(&key.0, &key.1);
     let entry = match manifest.task(&key.0) {
         Ok(e) => e,
         Err(e) => {
-            return fail_items(metrics, &key, items, ApiError::unknown_task(e.to_string()))
+            return fail_items(
+                metrics,
+                &key,
+                key_idx,
+                items,
+                ApiError::unknown_task(e.to_string()),
+            )
         }
     };
     let variant = match entry.variant(&key.1) {
@@ -623,6 +834,7 @@ fn run_batch(
             return fail_items(
                 metrics,
                 &key,
+                key_idx,
                 items,
                 ApiError::internal("variant vanished from the manifest"),
             )
@@ -632,6 +844,7 @@ fn run_batch(
         return fail_items(
             metrics,
             &key,
+            key_idx,
             items,
             ApiError::internal("variant has rank-0 in/out shape"),
         );
@@ -646,7 +859,7 @@ fn run_batch(
     // executes (an in-flight execute is never cancelled, by contract)
     let now = Instant::now();
     let mut live: Vec<Pending> = Vec::with_capacity(items.len());
-    for p in items {
+    for mut p in items {
         match p.req.deadline {
             Some(d) if now >= d => {
                 metrics.deadline_misses.fetch_add(1, Relaxed);
@@ -655,6 +868,8 @@ fn run_batch(
                     "request waited {waited}µs, past its deadline, before its \
                      batch dispatched"
                 ));
+                p.req.stamps.stamp(Stage::Reply);
+                finish_span(metrics, &p.req, key_idx, false);
                 complete(metrics, p, Err(err));
             }
             _ => live.push(p),
@@ -678,6 +893,7 @@ fn run_batch(
         return fail_items(
             metrics,
             &key,
+            key_idx,
             items,
             ApiError::shape_mismatch(format!(
                 "request has {got} values over {rows} row(s) but variant row \
@@ -685,6 +901,7 @@ fn run_batch(
             )),
         );
     }
+    let mut items = items;
 
     // assemble the padded batch input into the worker's reusable buffer:
     // each request is one contiguous row block, fill rows zeroed
@@ -695,6 +912,12 @@ fn run_batch(
         b_cap,
         sample_dim,
     );
+    // one clock read per stage, shared by every batch-mate: their stamps
+    // stay identical and the stamping cost stays O(1) clock calls
+    let padded_us = obs::now_us();
+    for p in &mut items {
+        p.req.stamps.set(Stage::Pad, padded_us);
+    }
     let queue_start = Instant::now();
     for p in &items {
         metrics
@@ -703,12 +926,24 @@ fn run_batch(
     }
 
     let t_exec = Instant::now();
+    let exec_start_us = obs::now_us();
+    for p in &mut items {
+        p.req.stamps.set(Stage::ExecStart, exec_start_us);
+    }
     let out = match backend.execute(manifest, entry, &variant, pad_buf.as_slice()) {
         Ok(o) => o,
-        Err(e) => return fail_items(metrics, &key, items, ApiError::from_engine(&e)),
+        Err(e) => return fail_items(metrics, &key, key_idx, items, ApiError::from_engine(&e)),
     };
     let exec_time = t_exec.elapsed();
     metrics.exec_latency.record(exec_time);
+    let exec_end_us = obs::now_us();
+    // solver-internal counts stamped by the backend on this thread (the
+    // native path; a backend executing elsewhere leaves them 0 and the
+    // span falls back to the variant's nominal NFE)
+    let (solver_nfe, solver_accepted, solver_rejected) = obs::take_solver_stamp();
+    for p in &mut items {
+        p.req.stamps.set(Stage::ExecEnd, exec_end_us);
+    }
 
     let nfe = out.nfe.unwrap_or(variant.nfe);
     if out.z.len() < rows * out_dim {
@@ -718,6 +953,7 @@ fn run_batch(
         return fail_items(
             metrics,
             &key,
+            key_idx,
             items,
             ApiError::internal(format!(
                 "backend returned {got} values, batch needs {}",
@@ -728,7 +964,7 @@ fn run_batch(
     metrics.record_batch(rows, b_cap, nfe, variant.macs);
     log_debug!("batch {}/{}: {rows}/{b_cap} rows in {exec_time:?}", key.0, key.1);
     let mut off = 0usize;
-    for p in items {
+    for mut p in items {
         let n = p.req.block.rows * out_dim;
         let latency = p.req.t_submit.elapsed();
         metrics.total_latency.record(latency);
@@ -748,6 +984,27 @@ fn run_batch(
             batch_fill: rows,
         };
         off += n;
+        p.req.stamps.nfe = if solver_nfe > 0 { solver_nfe } else { nfe };
+        p.req.stamps.accepted = solver_accepted;
+        p.req.stamps.rejected = solver_rejected;
+        p.req.stamps.stamp(Stage::Reply);
+        let st = &p.req.stamps;
+        stage_hists
+            .queue
+            .record(Duration::from_micros(st.dur_us(Stage::Enqueue, Stage::Pop)));
+        stage_hists
+            .pad
+            .record(Duration::from_micros(st.dur_us(Stage::Pop, Stage::Pad)));
+        stage_hists.exec.record(Duration::from_micros(
+            st.dur_us(Stage::ExecStart, Stage::ExecEnd),
+        ));
+        stage_hists
+            .total
+            .record(Duration::from_micros(st.dur_us(Stage::Submit, Stage::Reply)));
+        metrics
+            .pad_latency
+            .record(Duration::from_micros(st.dur_us(Stage::Pop, Stage::Pad)));
+        finish_span(metrics, &p.req, key_idx, true);
         complete(metrics, p, Ok(resp));
     }
     Some(exec_time)

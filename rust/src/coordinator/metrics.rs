@@ -1,9 +1,40 @@
 //! Coordinator observability: request/batch counters, latency histograms,
 //! NFE/MAC accounting. All atomics — the hot path never locks to record.
+//!
+//! With request tracing (see [`crate::obs`]) the metrics also carry the
+//! span plane: a lock-free ring of completed spans (`cmd:"trace"`), the
+//! slow-request exemplars (`cmd:"trace_slow"`), and per-(task, variant)
+//! *stage* histograms — where a queue's requests spend their time, split
+//! queue / pad / exec / total. The (task, variant) names are interned to
+//! a `u32` key at first sight so the per-request records stay `Copy` and
+//! the dispatch hot path stays allocation-free.
 
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
 
+use crate::obs::ring::SpanRing;
+use crate::obs::SlowTable;
 use crate::util::stats::LatencyHistogram;
+
+/// Per-(task, variant) stage-latency histograms: where time goes inside
+/// the pipeline for one queue. All atomics — recording never locks.
+#[derive(Default)]
+pub struct StageHists {
+    /// enqueue → pop (time queued behind the batching policy)
+    pub queue: LatencyHistogram,
+    /// pop → padded (batch assembly/staging)
+    pub pad: LatencyHistogram,
+    /// exec start → exec end (backend solve)
+    pub exec: LatencyHistogram,
+    /// submit → reply (end to end)
+    pub total: LatencyHistogram,
+}
+
+struct KeyEntry {
+    task: String,
+    variant: String,
+    hists: Arc<StageHists>,
+}
 
 #[derive(Default)]
 pub struct CoordinatorMetrics {
@@ -43,7 +74,15 @@ pub struct CoordinatorMetrics {
     pub inflight_peak: AtomicU64,
     pub queue_latency: LatencyHistogram,
     pub exec_latency: LatencyHistogram,
+    /// batch staging (pop → padded) across all queues
+    pub pad_latency: LatencyHistogram,
     pub total_latency: LatencyHistogram,
+    /// completed request spans, overwrite-oldest (`cmd:"trace"`)
+    pub spans: SpanRing,
+    /// top-K slowest spans by end-to-end latency (`cmd:"trace_slow"`)
+    pub slow: SlowTable,
+    /// interned (task, variant) keys + their stage histograms
+    keys: Mutex<Vec<KeyEntry>>,
 }
 
 impl CoordinatorMetrics {
@@ -92,6 +131,53 @@ impl CoordinatorMetrics {
             return 1.0;
         }
         self.deadline_met.load(Relaxed) as f64 / responses as f64
+    }
+
+    fn lock_keys(&self) -> std::sync::MutexGuard<'_, Vec<KeyEntry>> {
+        match self.keys.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Intern a (task, variant) key, returning its stable index and the
+    /// queue's stage histograms. The scan compares by `&str` so repeat
+    /// lookups (once per executed batch) allocate nothing; only the first
+    /// sight of a key allocates its entry.
+    pub fn stage_key(&self, task: &str, variant: &str) -> (u32, Arc<StageHists>) {
+        let mut keys = self.lock_keys();
+        for (i, e) in keys.iter().enumerate() {
+            if e.task == task && e.variant == variant {
+                return (i as u32, Arc::clone(&e.hists));
+            }
+        }
+        let hists = Arc::new(StageHists::default());
+        keys.push(KeyEntry {
+            task: task.to_string(),
+            variant: variant.to_string(),
+            hists: Arc::clone(&hists),
+        });
+        ((keys.len() - 1) as u32, hists)
+    }
+
+    /// Resolve an interned key index back to its (task, variant) names.
+    pub fn key_name(&self, key: u32) -> Option<(String, String)> {
+        self.lock_keys()
+            .get(key as usize)
+            .map(|e| (e.task.clone(), e.variant.clone()))
+    }
+
+    /// Snapshot every interned (task, variant) with its stage histograms,
+    /// sorted by name — the exposition iterates this for a deterministic
+    /// render order.
+    pub fn stage_snapshot(&self) -> Vec<(String, String, Arc<StageHists>)> {
+        let mut out: Vec<(String, String, Arc<StageHists>)> = self
+            .lock_keys()
+            .iter()
+            .map(|e| (e.task.clone(), e.variant.clone(), Arc::clone(&e.hists)))
+            .collect();
+        out.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
+        out
     }
 
     pub fn report(&self) -> String {
@@ -171,5 +257,44 @@ mod tests {
         m.deadline_met.fetch_add(3, Relaxed);
         assert!((m.goodput() - 0.75).abs() < 1e-12);
         assert!(m.report().contains("goodput=0.75"), "{}", m.report());
+    }
+
+    #[test]
+    fn ratios_are_well_defined_before_the_first_response() {
+        // division-guard audit: every ratio the wire can report must be a
+        // finite, meaningful value at t=0 — never NaN from 0/0
+        let m = CoordinatorMetrics::new();
+        assert_eq!(m.fill_ratio(), 1.0, "no batches yet → vacuously full");
+        assert_eq!(m.goodput(), 1.0, "no responses yet → vacuously good");
+        assert!(m.fill_ratio().is_finite());
+        assert!(m.goodput().is_finite());
+        // histograms: empty percentiles/means are 0, not NaN
+        assert_eq!(m.total_latency.percentile_us(50.0), 0.0);
+        assert_eq!(m.total_latency.mean_us(), 0.0);
+        // pad-only batches (0 real rows) keep fill_ratio finite too
+        m.record_batch(0, 4, 1, 1);
+        assert_eq!(m.fill_ratio(), 0.0);
+        assert!(m.fill_ratio().is_finite());
+    }
+
+    #[test]
+    fn stage_keys_intern_stably_and_resolve_back() {
+        let m = CoordinatorMetrics::new();
+        let (k0, h0) = m.stage_key("cnf_a", "euler_k2");
+        let (k1, _) = m.stage_key("cnf_b", "euler_k2");
+        let (k0b, h0b) = m.stage_key("cnf_a", "euler_k2");
+        assert_eq!(k0, k0b, "repeat lookups return the same index");
+        assert_ne!(k0, k1);
+        assert!(Arc::ptr_eq(&h0, &h0b), "same histograms behind the key");
+        assert_eq!(
+            m.key_name(k1),
+            Some(("cnf_b".to_string(), "euler_k2".to_string()))
+        );
+        assert_eq!(m.key_name(99), None);
+        h0.queue.record(std::time::Duration::from_micros(100));
+        let snap = m.stage_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "cnf_a", "snapshot sorted by name");
+        assert_eq!(snap[0].2.queue.count(), 1);
     }
 }

@@ -35,6 +35,6 @@ pub mod request;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig, SloConfig, SubmitHandle, SubmitOptions};
-pub use metrics::CoordinatorMetrics;
+pub use metrics::{CoordinatorMetrics, StageHists};
 pub use policy::{select_variant, Policy};
 pub use request::{Completion, CompletionSender, Priority, Request, Response, RowBlock};

@@ -113,6 +113,15 @@ pub struct Request {
     /// client identity for per-client row quotas (`None` = unattributed,
     /// exempt from quotas)
     pub client: Option<String>,
+    /// trace id: client-supplied via the wire `trace` field, or
+    /// server-generated at submit — never 0 once the engine accepts it
+    pub trace: u64,
+    /// whether `trace` was supplied by the client (echoed on replies
+    /// only then, keeping traceless wire lines byte-stable)
+    pub trace_client: bool,
+    /// per-stage monotonic timestamps, stamped along the pipeline; the
+    /// completed record lands in the span ring (`cmd:"trace"`)
+    pub stamps: crate::obs::StageStamps,
 }
 
 impl Request {
@@ -132,6 +141,9 @@ impl Request {
             deadline: None,
             priority: Priority::default(),
             client: None,
+            trace: 0,
+            trace_client: false,
+            stamps: crate::obs::StageStamps::default(),
         }
     }
 }

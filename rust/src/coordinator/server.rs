@@ -64,6 +64,72 @@ pub fn serve_listener(engine: Arc<Engine>, listener: TcpListener) -> Result<()> 
     Ok(())
 }
 
+/// Serve the Prometheus exposition on its own plaintext listener (the
+/// `--metrics-addr` plane). Each connection gets one scrape: whatever the
+/// client sent (an HTTP GET head, or nothing at all) is drained
+/// best-effort, then the full exposition is written as a minimal HTTP/1.0
+/// response and the connection closes — enough for `curl`, Prometheus,
+/// and `nc` alike without an HTTP dependency.
+pub fn serve_metrics(engine: Arc<Engine>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    serve_metrics_listener(engine, listener)
+}
+
+/// [`serve_metrics`] on an already-bound listener (tests bind port 0).
+pub fn serve_metrics_listener(engine: Arc<Engine>, listener: TcpListener) -> Result<()> {
+    serve_metrics_with(listener, move || engine.render_prometheus())
+}
+
+/// The exposition accept loop over an arbitrary render closure — lets the
+/// serving bench publish metrics for whichever short-lived engine is
+/// currently under load, not just one long-lived [`Engine`].
+pub fn serve_metrics_with<F>(listener: TcpListener, render: F) -> Result<()>
+where
+    F: Fn() -> String + Send + Sync + 'static,
+{
+    log_info!("metrics exposition on {:?}", listener.local_addr());
+    let render = Arc::new(render);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let render = Arc::clone(&render);
+        std::thread::spawn(move || {
+            if let Err(e) = serve_scrape(render.as_ref(), stream) {
+                crate::log_debug!("scrape connection closed: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// One scrape connection: drain the request head (bounded by a read
+/// timeout so a silent peer cannot pin the thread), render, respond,
+/// close.
+fn serve_scrape(render: &dyn Fn() -> String, mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(250)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            // blank line = end of an HTTP request head; EOF or timeout =
+            // a raw-TCP scraper that sent nothing — answer either way
+            Ok(0) => break,
+            Ok(_) if line == "\r\n" || line == "\n" => break,
+            Ok(_) => {}
+            Err(_) => break,
+        }
+    }
+    let body = render();
+    let head = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
 /// What the connection remembers about an in-flight submission, keyed by
 /// engine id: how to encode its completion.
 struct PendingMeta {
@@ -74,6 +140,10 @@ struct PendingMeta {
     /// request row count (the output row width comes from the response —
     /// variants may have out_dim != in_dim)
     samples: usize,
+    /// client-supplied trace id, echoed on the reply (success or error);
+    /// server-assigned ids are never echoed — pre-trace replies stay
+    /// byte-identical
+    trace: Option<u64>,
 }
 
 /// One JSON line as wire bytes (trailing newline included).
@@ -147,7 +217,7 @@ fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
                 // a malformed or truncated frame loses the framing — reply
                 // loudly (best effort), then close; there is no resync
                 Err(v2::FrameError::Bad(e)) => {
-                    let _ = write_msg(&writer, &v2::encode_error(None, &e));
+                    let _ = write_msg(&writer, &v2::encode_error(None, None, &e));
                     break;
                 }
                 Err(v2::FrameError::Io(e))
@@ -156,6 +226,7 @@ fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
                     let _ = write_msg(
                         &writer,
                         &v2::encode_error(
+                            None,
                             None,
                             &ApiError::bad_request("connection truncated mid-frame"),
                         ),
@@ -207,17 +278,20 @@ fn completion_bytes(meta: &PendingMeta, c: Completion) -> Vec<u8> {
     if meta.version == 2 {
         return match c.result {
             Ok(resp) => {
-                v2::encode_response(&v1::response_from_engine(id, meta.samples, &resp))
+                let mut r = v1::response_from_engine(id, meta.samples, &resp);
+                r.trace = meta.trace;
+                v2::encode_response(&r)
             }
-            Err(e) => v2::encode_error(Some(id), &e),
+            Err(e) => v2::encode_error(Some(id), meta.trace, &e),
         };
     }
     line_bytes(&match c.result {
-        Ok(resp) => v1::encode_response(
-            &v1::response_from_engine(id, meta.samples, &resp),
-            meta.version,
-        ),
-        Err(e) => v1::encode_error(Some(id), &e, meta.version),
+        Ok(resp) => {
+            let mut r = v1::response_from_engine(id, meta.samples, &resp);
+            r.trace = meta.trace;
+            v1::encode_response(&r, meta.version)
+        }
+        Err(e) => v1::encode_error(Some(id), meta.trace, &e, meta.version),
     })
 }
 
@@ -235,6 +309,7 @@ fn handle_pipelined(
         Err(e) => {
             return Some(v1::encode_error(
                 None,
+                None,
                 &ApiError::bad_request(format!("invalid JSON: {e}")),
                 1,
             ))
@@ -247,8 +322,14 @@ fn handle_pipelined(
     let (req, version) = match v1::decode_request(&v) {
         Ok(x) => x,
         Err(e) => {
-            // best-effort id echo so pipelined clients can still correlate
-            return Some(v1::encode_error(v1::peek_id(&v), &e, version_guess));
+            // best-effort id + trace echo so pipelined clients can still
+            // correlate rejections of malformed lines
+            return Some(v1::encode_error(
+                v1::peek_id(&v),
+                v1::peek_trace(&v),
+                &e,
+                version_guess,
+            ));
         }
     };
     if version == 0 {
@@ -260,7 +341,7 @@ fn handle_pipelined(
     }
     match submit_pipelined(engine, req, version, done, pending) {
         None => None,
-        Some((id, e)) => Some(v1::encode_error(id, &e, version)),
+        Some((id, trace, e)) => Some(v1::encode_error(id, trace, &e, version)),
     }
 }
 
@@ -274,16 +355,17 @@ fn handle_frame(
     done: &mpsc::Sender<Completion>,
     pending: &Mutex<HashMap<u64, PendingMeta>>,
 ) -> Option<Vec<u8>> {
-    // best-effort id echo (same validation as the codec) so pipelined
-    // clients can correlate rejections of malformed headers
+    // best-effort id + trace echo (same validation as the codec) so
+    // pipelined clients can correlate rejections of malformed headers
     let client_id = v1::peek_id(&frame.header);
+    let client_trace = v1::peek_trace(&frame.header);
     let req = match v2::decode_request(frame) {
         Ok(r) => r,
-        Err(e) => return Some(v2::encode_error(client_id, &e)),
+        Err(e) => return Some(v2::encode_error(client_id, client_trace, &e)),
     };
     match submit_pipelined(engine, req, 2, done, pending) {
         None => None,
-        Some((id, e)) => Some(v2::encode_error(id, &e)),
+        Some((id, trace, e)) => Some(v2::encode_error(id, trace, &e)),
     }
 }
 
@@ -298,7 +380,7 @@ fn submit_pipelined(
     version: u8,
     done: &mpsc::Sender<Completion>,
     pending: &Mutex<HashMap<u64, PendingMeta>>,
-) -> Option<(Option<u64>, ApiError)> {
+) -> Option<(Option<u64>, Option<u64>, ApiError)> {
     let opts = req.submit_options();
     let InferRequest {
         id: client_id,
@@ -307,6 +389,7 @@ fn submit_pipelined(
         dims,
         input,
         budget,
+        trace,
         ..
     } = req;
     // the decoded payload moves into the engine as one contiguous block —
@@ -321,11 +404,12 @@ fn submit_pipelined(
                     version,
                     client_id,
                     samples,
+                    trace,
                 },
             );
             None
         }
-        Err(e) => Some((client_id, e)),
+        Err(e) => Some((client_id, trace, e)),
     }
 }
 
@@ -340,17 +424,51 @@ fn serve_blocking(engine: &Engine, req: InferRequest, version: u8) -> Value {
         samples,
         input,
         budget,
+        trace,
         ..
     } = req;
     let handle = match engine.submit_opts(&task, budget, input, samples, &opts) {
         Ok(h) => h,
-        Err(e) => return v1::encode_error(client_id, &e, version),
+        Err(e) => return v1::encode_error(client_id, trace, &e, version),
     };
     let id = client_id.unwrap_or(handle.id());
     match handle.wait() {
-        Ok(resp) => v1::encode_response(&v1::response_from_engine(id, samples, &resp), version),
-        Err(e) => v1::encode_error(Some(id), &e, version),
+        Ok(resp) => {
+            let mut r = v1::response_from_engine(id, samples, &resp);
+            r.trace = trace;
+            v1::encode_response(&r, version)
+        }
+        Err(e) => v1::encode_error(Some(id), trace, &e, version),
     }
+}
+
+/// One completed span as a JSON object — raw per-stage timestamps (µs
+/// since the process clock epoch; 0 = the stage was never reached) plus
+/// the solver counters, resolved back to task/variant names.
+fn span_value(m: &crate::coordinator::CoordinatorMetrics, s: &crate::obs::Span) -> Value {
+    use crate::obs::Stage;
+    let (task, variant) = m.key_name(s.key).unwrap_or_default();
+    let st = &s.stamps;
+    json::obj(vec![
+        ("trace", json::num(s.trace as f64)),
+        ("id", json::num(s.id as f64)),
+        ("task", json::s(&task)),
+        ("variant", json::s(&variant)),
+        ("rows", json::num(s.rows as f64)),
+        ("ok", Value::Bool(s.ok)),
+        ("submit_us", json::num(st.get(Stage::Submit) as f64)),
+        ("admission_us", json::num(st.get(Stage::Admission) as f64)),
+        ("enqueue_us", json::num(st.get(Stage::Enqueue) as f64)),
+        ("pop_us", json::num(st.get(Stage::Pop) as f64)),
+        ("pad_us", json::num(st.get(Stage::Pad) as f64)),
+        ("exec_start_us", json::num(st.get(Stage::ExecStart) as f64)),
+        ("exec_end_us", json::num(st.get(Stage::ExecEnd) as f64)),
+        ("reply_us", json::num(st.get(Stage::Reply) as f64)),
+        ("total_us", json::num(s.total_us() as f64)),
+        ("nfe", json::num(st.nfe as f64)),
+        ("accepted", json::num(st.accepted as f64)),
+        ("rejected", json::num(st.rejected as f64)),
+    ])
 }
 
 /// Handle a `{"cmd": ...}` line. Every error carries a stable `code`.
@@ -359,6 +477,7 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
         Some(c) => c,
         None => {
             return v1::encode_error(
+                None,
                 None,
                 &ApiError::bad_request("cmd must be a string"),
                 1,
@@ -421,9 +540,50 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
                 ),
             ),
         ]),
+        // the whole Prometheus exposition, inline — for clients already on
+        // the serving port; scrapers use the dedicated --metrics-addr
+        // listener (see serve_metrics)
+        "stats" => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            ("format", json::s("prometheus")),
+            ("text", json::s(&engine.render_prometheus())),
+        ]),
+        // the last N completed request spans, newest first (optional "n",
+        // default 32)
+        "trace" => {
+            let n = match v1::field_u64(req, "n") {
+                Ok(x) => x.unwrap_or(32) as usize,
+                Err(e) => return v1::encode_error(None, None, &e, 1),
+            };
+            let m = engine.metrics();
+            let mut spans = Vec::new();
+            m.spans.snapshot_into(&mut spans, n);
+            json::obj(vec![
+                ("ok", Value::Bool(true)),
+                (
+                    "spans",
+                    Value::Arr(spans.iter().map(|s| span_value(m, s)).collect()),
+                ),
+            ])
+        }
+        // the slowest completed spans since startup, slowest first —
+        // exemplars that a capacity-bounded ring would have overwritten
+        "trace_slow" => {
+            let m = engine.metrics();
+            let mut spans = Vec::new();
+            m.slow.snapshot_into(&mut spans);
+            json::obj(vec![
+                ("ok", Value::Bool(true)),
+                (
+                    "spans",
+                    Value::Arr(spans.iter().map(|s| span_value(m, s)).collect()),
+                ),
+            ])
+        }
         // command errors use the v1 error shape (the version tag is how
         // clients branch); only v0-dialect *infer* replies omit it
         other => v1::encode_error(
+            None,
             None,
             &ApiError::unknown_cmd(format!("unknown cmd {other:?}")),
             1,
@@ -441,6 +601,7 @@ pub fn handle_line(engine: &Engine, line: &str) -> Value {
         Err(e) => {
             return v1::encode_error(
                 None,
+                None,
                 &ApiError::bad_request(format!("invalid JSON: {e}")),
                 1,
             )
@@ -452,7 +613,7 @@ pub fn handle_line(engine: &Engine, line: &str) -> Value {
     let version_guess = v1::wire_version(&v).unwrap_or(1);
     let (req, version) = match v1::decode_request(&v) {
         Ok(x) => x,
-        Err(e) => return v1::encode_error(v1::peek_id(&v), &e, version_guess),
+        Err(e) => return v1::encode_error(v1::peek_id(&v), v1::peek_trace(&v), &e, version_guess),
     };
     serve_blocking(engine, req, version)
 }

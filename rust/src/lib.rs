@@ -53,6 +53,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod ode;
 pub mod pareto;
 pub mod runtime;

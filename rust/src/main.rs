@@ -25,6 +25,11 @@ use hypersolvers::util::cli::Cli;
 fn main() {
     let parsed = Cli::new("hypersolverd — hypersolver model serving daemon")
         .opt("addr", "127.0.0.1:7878", "listen address for `serve`")
+        .opt(
+            "metrics-addr",
+            "",
+            "Prometheus exposition listen address for `serve` (empty = off)",
+        )
         .opt("artifacts", "", "artifacts directory (default: ./artifacts)")
         .opt("max-wait-ms", "2", "dynamic batching deadline in ms")
         .opt("policy", "macs", "variant cost axis: macs | nfe")
@@ -121,7 +126,7 @@ fn main() {
             &parsed.get("priority"),
             &parsed.get("client"),
         ),
-        "serve" => cmd_serve(config, &parsed.get("addr")),
+        "serve" => cmd_serve(config, &parsed.get("addr"), &parsed.get("metrics-addr")),
         other => {
             eprintln!("unknown command {other:?} (serve | tasks | infer)");
             std::process::exit(2);
@@ -187,6 +192,7 @@ fn cmd_infer(
         deadline: (deadline_us > 0).then(|| Duration::from_micros(deadline_us)),
         priority,
         client: (!client.is_empty()).then(|| client.to_string()),
+        trace: None,
     };
     let resp = engine
         .submit_opts(task, budget, input, 1, &opts)
@@ -200,8 +206,18 @@ fn cmd_infer(
     Ok(())
 }
 
-fn cmd_serve(config: EngineConfig, addr: &str) -> hypersolvers::Result<()> {
+fn cmd_serve(config: EngineConfig, addr: &str, metrics_addr: &str) -> hypersolvers::Result<()> {
     let engine = Arc::new(Engine::new(config)?);
+    if !metrics_addr.is_empty() {
+        let engine = Arc::clone(&engine);
+        let metrics_addr = metrics_addr.to_string();
+        println!("metrics exposition on {metrics_addr}");
+        std::thread::spawn(move || {
+            if let Err(e) = server::serve_metrics(engine, &metrics_addr) {
+                eprintln!("metrics listener failed: {e}");
+            }
+        });
+    }
     println!("hypersolverd serving on {addr} — ctrl-c to stop");
     server::serve(engine, addr)
 }

@@ -1,0 +1,236 @@
+//! Prometheus text-format exposition (text/plain, version 0.0.4).
+//!
+//! [`PromText`] is a tiny deterministic renderer: callers declare a
+//! metric family (`# HELP` / `# TYPE` once) and then emit samples under
+//! it. Latency histograms render as Prometheus *summaries*
+//! (`{quantile="0.5"|"0.99"}` + `_sum` + `_count`) — the repo's
+//! [`LatencyHistogram`] is log-bucketed, so quantile midpoints are the
+//! honest representation, and summaries keep per-(task, variant) fan-out
+//! readable. Every rendered value is forced finite ([`fmt_value`]):
+//! a ratio gauge must never expose `NaN` before its first sample (the
+//! division-guard contract `CoordinatorMetrics` pins in its tests).
+//!
+//! [`self_check`] is the consumer-side validator: CI scrapes the
+//! `--metrics-addr` listener during the serving bench and runs the scrape
+//! through `benchgate --expo-check`, which calls this to assert the
+//! exposition is non-empty, parses line by line, carries no non-finite
+//! values, and contains the required metric families.
+
+use crate::util::stats::LatencyHistogram;
+
+/// Render a sample value: finite, and integral values print as integers
+/// (matching the repo's JSON writer, so goldens stay stable). Non-finite
+/// inputs clamp to 0 — exposition is a reporting plane, and a `NaN`
+/// poisons every downstream rate()/avg().
+pub fn fmt_value(v: f64) -> String {
+    let v = if v.is_finite() { v } else { 0.0 };
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Deterministic Prometheus text builder. Families render in call order;
+/// samples render in call order under their family — callers iterate
+/// sorted snapshots, so repeated renders of the same state are
+/// byte-identical (the golden test relies on this).
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+}
+
+impl PromText {
+    pub fn new() -> PromText {
+        PromText { out: String::new() }
+    }
+
+    /// Declare a metric family: `kind` is `counter`, `gauge` or
+    /// `summary`.
+    pub fn family(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push_str("\n# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    /// Emit one sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// Emit a latency histogram as summary samples (p50/p99 quantiles +
+    /// `_sum` + `_count`) under an already-declared summary family.
+    pub fn summary(&mut self, name: &str, labels: &[(&str, &str)], h: &LatencyHistogram) {
+        let mut l: Vec<(&str, &str)> = labels.to_vec();
+        l.push(("quantile", "0.5"));
+        self.sample(name, &l, h.percentile_us(50.0));
+        *l.last_mut().expect("quantile label present") = ("quantile", "0.99");
+        self.sample(name, &l, h.percentile_us(99.0));
+        let count = h.count();
+        self.sample(&format!("{name}_sum"), labels, h.mean_us() * count as f64);
+        self.sample(&format!("{name}_count"), labels, count as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Validate a scraped exposition: non-empty, every sample line parses as
+/// `name[{labels}] value` with a finite value, and every family in
+/// `required` has at least one sample. Returns the sample count.
+pub fn self_check(text: &str, required: &[&str]) -> Result<usize, String> {
+    let mut samples = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value separator: {line:?}", ln + 1))?;
+        let name = head.split('{').next().unwrap_or("");
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        {
+            return Err(format!("line {}: bad metric name: {line:?}", ln + 1));
+        }
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: unparseable value {value:?}", ln + 1))?;
+        if !v.is_finite() {
+            return Err(format!("line {}: non-finite value in {line:?}", ln + 1));
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        return Err("exposition contains no samples".to_string());
+    }
+    for fam in required {
+        let hit = text.lines().any(|l| {
+            !l.starts_with('#')
+                && (l.starts_with(&format!("{fam}{{")) || l.starts_with(&format!("{fam} ")))
+        });
+        if !hit {
+            return Err(format!("required metric family missing: {fam}"));
+        }
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn golden_exposition_bytes() {
+        // byte-for-byte golden: the renderer's framing (HELP/TYPE lines,
+        // label quoting, value formatting, newlines) is a wire contract —
+        // metric VALUES move run to run, but everything around them must
+        // not. This fixed snapshot pins the frame exactly.
+        let mut p = PromText::new();
+        p.family("hypersolvers_requests_total", "counter", "Requests submitted");
+        p.sample("hypersolvers_requests_total", &[], 42.0);
+        p.family("hypersolvers_goodput", "gauge", "Deadline-met fraction");
+        p.sample("hypersolvers_goodput", &[], 0.75);
+        p.family(
+            "hypersolvers_queue_depth_rows",
+            "gauge",
+            "Queued rows per (task, variant) queue",
+        );
+        p.sample(
+            "hypersolvers_queue_depth_rows",
+            &[("task", "cnf_a"), ("variant", "euler_k2")],
+            3.0,
+        );
+        let got = p.finish();
+        let want = "\
+# HELP hypersolvers_requests_total Requests submitted
+# TYPE hypersolvers_requests_total counter
+hypersolvers_requests_total 42
+# HELP hypersolvers_goodput Deadline-met fraction
+# TYPE hypersolvers_goodput gauge
+hypersolvers_goodput 0.75
+# HELP hypersolvers_queue_depth_rows Queued rows per (task, variant) queue
+# TYPE hypersolvers_queue_depth_rows gauge
+hypersolvers_queue_depth_rows{task=\"cnf_a\",variant=\"euler_k2\"} 3
+";
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn summary_renders_quantiles_sum_count() {
+        let h = LatencyHistogram::new();
+        for _ in 0..10 {
+            h.record(Duration::from_micros(100));
+        }
+        let mut p = PromText::new();
+        p.family("lat_us", "summary", "test latency");
+        p.summary("lat_us", &[("stage", "queue")], &h);
+        let text = p.finish();
+        assert!(text.contains("lat_us{stage=\"queue\",quantile=\"0.5\"}"));
+        assert!(text.contains("lat_us{stage=\"queue\",quantile=\"0.99\"}"));
+        assert!(text.contains("lat_us_sum{stage=\"queue\"} 1000\n"));
+        assert!(text.contains("lat_us_count{stage=\"queue\"} 10\n"));
+        assert!(self_check(&text, &["lat_us"]).is_ok());
+    }
+
+    #[test]
+    fn values_are_always_finite() {
+        assert_eq!(fmt_value(f64::NAN), "0");
+        assert_eq!(fmt_value(f64::INFINITY), "0");
+        assert_eq!(fmt_value(2.0), "2");
+        assert_eq!(fmt_value(0.125), "0.125");
+    }
+
+    #[test]
+    fn labels_are_escaped() {
+        let mut p = PromText::new();
+        p.sample("m", &[("task", "a\"b\\c\nd")], 1.0);
+        assert_eq!(p.finish(), "m{task=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn self_check_catches_the_failure_modes() {
+        assert!(self_check("", &[]).is_err(), "empty");
+        assert!(self_check("# HELP only comments\n", &[]).is_err(), "no samples");
+        assert!(self_check("m NaN\n", &[]).is_err(), "NaN value");
+        assert!(self_check("m{a=\"b\"} inf\n", &[]).is_err(), "infinite value");
+        assert!(self_check("m notanumber\n", &[]).is_err(), "bad value");
+        assert!(
+            self_check("ok_metric 1\n", &["missing_family"]).is_err(),
+            "required family absent"
+        );
+        let good = "# HELP m help\n# TYPE m counter\nm 3\nm{a=\"b\"} 4\n";
+        assert_eq!(self_check(good, &["m"]), Ok(2));
+    }
+}

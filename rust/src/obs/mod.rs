@@ -1,0 +1,335 @@
+//! Observability: end-to-end request tracing and metrics exposition.
+//!
+//! The paper's whole claim is a latency budget — hypersolvers buy
+//! "time-to-prediction comparable to discrete networks" — so the serving
+//! stack must be able to say *where* a slow request spent its time:
+//! admission, queue, padding, solver, or reply delivery. This module is
+//! the substrate:
+//!
+//! * [`StageStamps`] — a fixed-size per-request record of monotonic
+//!   timestamps, stamped by the engine at every pipeline stage
+//!   (submit → admission → enqueue → pop → pad → exec → reply) plus the
+//!   solver-internal counters (NFE, and accepted/rejected steps for
+//!   adaptive solvers). Plain `Copy` data, no allocation, so carrying it
+//!   on every [`Request`](crate::coordinator::Request) keeps the dispatch
+//!   hot path allocation-free (`tests/alloc_free.rs` pins this).
+//! * [`Span`] — a completed request's stamps plus its identity (trace id,
+//!   request id, interned (task, variant) key). Completed spans land in a
+//!   lock-free overwrite-oldest [`ring::SpanRing`] served by
+//!   `cmd:"trace"`, and the slowest land in a [`SlowTable`] served by
+//!   `cmd:"trace_slow"`.
+//! * [`expo`] — Prometheus text-format rendering for every counter and
+//!   histogram, behind `cmd:"stats"` and the `--metrics-addr` listener.
+//!
+//! Solver-internal counts cross the backend boundary through a
+//! thread-local ([`solver_stamp`] / [`take_solver_stamp`]): the native
+//! backend stamps after each solve on the worker thread, and the engine
+//! reads the stamp back right after `ExecBackend::execute` returns — no
+//! signature change on the `_ws` solver hot path, and no allocation.
+
+pub mod expo;
+pub mod ring;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Number of pipeline stages a request is stamped at.
+pub const STAGE_COUNT: usize = 8;
+
+/// Pipeline stages, in pipeline order. Timestamps stamped in this order
+/// are monotonically non-decreasing (all from one monotonic clock).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// `Engine::submit_with` entry (request constructed and validated).
+    Submit = 0,
+    /// SLO admission decision made (request was not refused).
+    Admission = 1,
+    /// Enqueued into its (task, variant) batcher queue.
+    Enqueue = 2,
+    /// Popped from the queue as part of a ready batch.
+    Pop = 3,
+    /// Batch input staged (padded) into the executable layout.
+    Pad = 4,
+    /// Backend execution started.
+    ExecStart = 5,
+    /// Backend execution finished.
+    ExecEnd = 6,
+    /// Completion written back toward the caller.
+    Reply = 7,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::Submit,
+        Stage::Admission,
+        Stage::Enqueue,
+        Stage::Pop,
+        Stage::Pad,
+        Stage::ExecStart,
+        Stage::ExecEnd,
+        Stage::Reply,
+    ];
+
+    /// Stable wire/exposition name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Submit => "submit",
+            Stage::Admission => "admission",
+            Stage::Enqueue => "enqueue",
+            Stage::Pop => "pop",
+            Stage::Pad => "pad",
+            Stage::ExecStart => "exec_start",
+            Stage::ExecEnd => "exec_end",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-wide monotonic epoch, never 0 — a 0
+/// stamp always means "stage not reached". Monotonically non-decreasing
+/// across calls (one `Instant` clock).
+pub fn now_us() -> u64 {
+    (epoch().elapsed().as_micros() as u64).max(1)
+}
+
+/// Allocate a fresh server-generated trace id (non-zero, process-unique).
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Fixed-size per-request stage-timestamp record: one µs stamp per
+/// [`Stage`] (0 = not reached) plus the solver-internal counters. `Copy`,
+/// allocation-free, carried inline on every request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageStamps {
+    /// µs since the process epoch, indexed by `Stage as usize`; 0 = unset.
+    pub us: [u64; STAGE_COUNT],
+    /// Field evaluations actually spent by the solve that served this
+    /// request's batch (falls back to the variant's nominal NFE when the
+    /// backend reports none).
+    pub nfe: u64,
+    /// Accepted adaptive steps (dopri5 variants; 0 for fixed-step).
+    pub accepted: u64,
+    /// Rejected adaptive steps (dopri5 variants; 0 for fixed-step).
+    pub rejected: u64,
+}
+
+impl StageStamps {
+    /// Stamp `stage` with the current monotonic time.
+    pub fn stamp(&mut self, stage: Stage) {
+        self.us[stage as usize] = now_us();
+    }
+
+    /// Stamp `stage` with a caller-provided time (one `now_us()` shared
+    /// across a whole batch keeps batch-mates' stamps identical).
+    pub fn set(&mut self, stage: Stage, us: u64) {
+        self.us[stage as usize] = us;
+    }
+
+    /// Raw stamp for `stage` (0 = stage not reached).
+    pub fn get(&self, stage: Stage) -> u64 {
+        self.us[stage as usize]
+    }
+
+    /// Duration between two stamped stages in µs; 0 when either end is
+    /// unset (the request never reached that stage).
+    pub fn dur_us(&self, from: Stage, to: Stage) -> u64 {
+        let (a, b) = (self.get(from), self.get(to));
+        if a == 0 || b == 0 {
+            0
+        } else {
+            b.saturating_sub(a)
+        }
+    }
+}
+
+/// A completed request span: identity + stamps. `Copy` and fixed-size so
+/// ring pushes and snapshots never allocate; the (task, variant) names
+/// live behind the interned `key` (see
+/// [`CoordinatorMetrics::stage_key`](crate::coordinator::CoordinatorMetrics::stage_key)).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Span {
+    /// Trace id: client-supplied via the wire `trace` field, or
+    /// server-generated ([`next_trace_id`]).
+    pub trace: u64,
+    /// Engine request id.
+    pub id: u64,
+    /// Interned (task, variant) index.
+    pub key: u32,
+    /// Rows the request carried.
+    pub rows: u32,
+    /// True when the request completed with a response (false: it failed
+    /// at some stage — the stamps show which).
+    pub ok: bool,
+    pub stamps: StageStamps,
+}
+
+impl Span {
+    /// End-to-end duration (submit → reply) in µs; 0 if never replied.
+    pub fn total_us(&self) -> u64 {
+        self.stamps.dur_us(Stage::Submit, Stage::Reply)
+    }
+}
+
+thread_local! {
+    static SOLVER: Cell<(u64, u64, u64)> = const { Cell::new((0, 0, 0)) };
+}
+
+/// Record solver-internal counters (NFE, accepted, rejected) for the
+/// solve that just ran on this thread. Called by the execution backend;
+/// read back by the engine via [`take_solver_stamp`] right after
+/// `execute` returns. Thread-local `Cell` — no locks, no allocation.
+pub fn solver_stamp(nfe: u64, accepted: u64, rejected: u64) {
+    SOLVER.with(|c| c.set((nfe, accepted, rejected)));
+}
+
+/// Read and clear this thread's solver stamp. Returns `(0, 0, 0)` when
+/// the backend did not stamp (e.g. it executed on another thread).
+pub fn take_solver_stamp() -> (u64, u64, u64) {
+    SOLVER.with(|c| c.replace((0, 0, 0)))
+}
+
+/// Top-K slowest completed spans by end-to-end latency, kept
+/// incrementally (`cmd:"trace_slow"`). The table is a fixed-capacity
+/// vector behind a mutex — offers replace the current minimum, so
+/// steady-state inserts allocate nothing.
+pub struct SlowTable {
+    k: usize,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl SlowTable {
+    pub fn new(k: usize) -> SlowTable {
+        let k = k.max(1);
+        SlowTable {
+            k,
+            spans: Mutex::new(Vec::with_capacity(k)),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Span>> {
+        match self.spans.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Offer a completed span; kept only while it is among the K slowest.
+    pub fn offer(&self, span: Span) {
+        let total = span.total_us();
+        let mut g = self.lock();
+        if g.len() < self.k {
+            g.push(span);
+            return;
+        }
+        let (mut mi, mut mv) = (0usize, u64::MAX);
+        for (i, s) in g.iter().enumerate() {
+            let t = s.total_us();
+            if t < mv {
+                mi = i;
+                mv = t;
+            }
+        }
+        if total > mv {
+            g[mi] = span;
+        }
+    }
+
+    /// Copy the current exemplars into `out`, slowest first.
+    pub fn snapshot_into(&self, out: &mut Vec<Span>) {
+        out.clear();
+        out.extend(self.lock().iter().copied());
+        out.sort_by_key(|s| std::cmp::Reverse(s.total_us()));
+    }
+}
+
+impl Default for SlowTable {
+    fn default() -> Self {
+        SlowTable::new(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamps_are_monotone_in_stage_order() {
+        let mut st = StageStamps::default();
+        for s in Stage::ALL {
+            st.stamp(s);
+        }
+        for w in Stage::ALL.windows(2) {
+            assert!(
+                st.get(w[0]) <= st.get(w[1]),
+                "{} > {}",
+                w[0].name(),
+                w[1].name()
+            );
+            assert!(st.get(w[0]) > 0, "stamp never 0 once stamped");
+        }
+    }
+
+    #[test]
+    fn durations_treat_unset_stages_as_zero() {
+        let mut st = StageStamps::default();
+        assert_eq!(st.dur_us(Stage::Submit, Stage::Reply), 0);
+        st.set(Stage::Submit, 100);
+        assert_eq!(st.dur_us(Stage::Submit, Stage::Reply), 0, "reply unset");
+        st.set(Stage::Reply, 350);
+        assert_eq!(st.dur_us(Stage::Submit, Stage::Reply), 250);
+        // a stamp pair recorded out of order saturates rather than wraps
+        st.set(Stage::Pop, 400);
+        st.set(Stage::Pad, 390);
+        assert_eq!(st.dur_us(Stage::Pop, Stage::Pad), 0);
+    }
+
+    #[test]
+    fn trace_ids_are_distinct_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn solver_stamp_is_read_once() {
+        solver_stamp(12, 5, 2);
+        assert_eq!(take_solver_stamp(), (12, 5, 2));
+        assert_eq!(take_solver_stamp(), (0, 0, 0), "cleared after read");
+    }
+
+    #[test]
+    fn slow_table_keeps_the_k_slowest() {
+        let t = SlowTable::new(2);
+        let mk = |trace: u64, total: u64| {
+            let mut s = Span {
+                trace,
+                ..Span::default()
+            };
+            s.stamps.set(Stage::Submit, 1);
+            s.stamps.set(Stage::Reply, 1 + total);
+            s
+        };
+        t.offer(mk(1, 100));
+        t.offer(mk(2, 50));
+        t.offer(mk(3, 200)); // evicts the 50µs span
+        t.offer(mk(4, 10)); // too fast, ignored
+        let mut out = Vec::new();
+        t.snapshot_into(&mut out);
+        assert_eq!(
+            out.iter().map(|s| s.trace).collect::<Vec<_>>(),
+            vec![3, 1],
+            "slowest first"
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Lock-free overwrite-oldest ring buffer for completed [`Span`]s.
+//!
+//! Writers claim a slot with one `fetch_add` on the global write index
+//! and publish through a per-slot sequence lock, so completion-path
+//! pushes never block each other and never allocate — the ring's whole
+//! footprint is the fixed slot array built at construction
+//! (`tests/alloc_free.rs` pins the steady state). Readers
+//! (`cmd:"trace"`) copy slots out under the same sequence protocol and
+//! simply skip a slot they race with: a trace snapshot is diagnostic
+//! data, and dropping one in-flight span beats stalling a dispatch
+//! worker.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::Span;
+
+/// Default ring capacity — enough recent spans to cover a burst at full
+/// batch fan-out while staying a few tens of KiB.
+pub const DEFAULT_SPAN_CAPACITY: usize = 512;
+
+/// One slot: a sequence word guarding a span.
+///
+/// Protocol: `seq == 0` never written; even ≥ 2 stable; odd mid-write.
+/// A writer CASes even → odd, writes, then stores even+2; a reader loads
+/// the sequence, copies, and accepts only if the sequence is unchanged
+/// and even.
+struct Slot {
+    seq: AtomicU64,
+    span: UnsafeCell<Span>,
+}
+
+// SAFETY: the span cell is only written by the thread that won the
+// seq CAS (odd = exclusively owned), and readers validate the sequence
+// around their copy, discarding any value raced with a writer.
+unsafe impl Sync for Slot {}
+
+/// Fixed-capacity, lock-free, overwrite-oldest span ring.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    /// Monotone total push count; `next % capacity` is the slot index.
+    next: AtomicU64,
+}
+
+impl SpanRing {
+    pub fn new(capacity: usize) -> SpanRing {
+        let capacity = capacity.max(1);
+        let slots: Vec<Slot> = (0..capacity)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                span: UnsafeCell::new(Span::default()),
+            })
+            .collect();
+        SpanRing {
+            slots: slots.into_boxed_slice(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever pushed (the overwrite window is the last
+    /// `capacity()` of them).
+    pub fn pushed(&self) -> u64 {
+        self.next.load(Ordering::Acquire)
+    }
+
+    /// Push a completed span, overwriting the oldest once full. Never
+    /// blocks and never allocates; in the rare race where another writer
+    /// has lapped the whole ring and still owns this exact slot, the
+    /// span is dropped rather than waited for.
+    pub fn push(&self, span: Span) {
+        let ticket = self.next.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(ticket % self.slots.len() as u64) as usize];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq & 1 == 1 {
+            return; // a lapped writer is mid-publish on this slot
+        }
+        if slot
+            .seq
+            .compare_exchange(seq, seq + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return; // lost the slot to a lapped writer
+        }
+        // SAFETY: the successful CAS to an odd sequence gives this thread
+        // exclusive write ownership of the slot until the release below.
+        unsafe {
+            *slot.span.get() = span;
+        }
+        slot.seq.store(seq + 2, Ordering::Release);
+    }
+
+    /// Copy up to `max` of the most recent spans into `out`, newest
+    /// first. `out` is caller-provided so steady-state polling reuses one
+    /// buffer. Slots mid-write (or never written) are skipped.
+    pub fn snapshot_into(&self, out: &mut Vec<Span>, max: usize) {
+        out.clear();
+        let head = self.next.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let window = head.min(cap);
+        let mut idx = head;
+        while idx > head - window && out.len() < max {
+            idx -= 1;
+            let slot = &self.slots[(idx % cap) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 == 0 || s1 & 1 == 1 {
+                continue; // never written, or a writer owns it right now
+            }
+            // SAFETY: the copy is validated by re-reading the sequence —
+            // if a writer raced us the sequence moved and we discard.
+            let span = unsafe { *slot.span.get() };
+            if slot.seq.load(Ordering::Acquire) != s1 {
+                continue;
+            }
+            out.push(span);
+        }
+    }
+}
+
+impl Default for SpanRing {
+    fn default() -> Self {
+        SpanRing::new(DEFAULT_SPAN_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64) -> Span {
+        Span {
+            trace,
+            ..Span::default()
+        }
+    }
+
+    #[test]
+    fn snapshot_returns_newest_first() {
+        let r = SpanRing::new(8);
+        for t in 1..=5 {
+            r.push(span(t));
+        }
+        let mut out = Vec::new();
+        r.snapshot_into(&mut out, 16);
+        assert_eq!(
+            out.iter().map(|s| s.trace).collect::<Vec<_>>(),
+            vec![5, 4, 3, 2, 1]
+        );
+        r.snapshot_into(&mut out, 2);
+        assert_eq!(out.iter().map(|s| s.trace).collect::<Vec<_>>(), vec![5, 4]);
+    }
+
+    #[test]
+    fn overwrites_oldest_when_full() {
+        let r = SpanRing::new(4);
+        for t in 1..=10 {
+            r.push(span(t));
+        }
+        assert_eq!(r.pushed(), 10);
+        let mut out = Vec::new();
+        r.snapshot_into(&mut out, 16);
+        assert_eq!(
+            out.iter().map(|s| s.trace).collect::<Vec<_>>(),
+            vec![10, 9, 8, 7],
+            "only the last capacity() spans survive"
+        );
+    }
+
+    #[test]
+    fn empty_ring_snapshots_empty() {
+        let r = SpanRing::new(4);
+        let mut out = vec![span(99)];
+        r.snapshot_into(&mut out, 16);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn concurrent_pushes_never_lose_the_ring() {
+        // hammer the ring from several threads; the snapshot must stay
+        // well-formed (no torn span: trace encodes its writer+seq and the
+        // redundant copy in `id` must always match)
+        let r = std::sync::Arc::new(SpanRing::new(32));
+        let threads: Vec<_> = (0..4u64)
+            .map(|w| {
+                let r = std::sync::Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..2000u64 {
+                        let t = (w << 32) | i;
+                        let s = Span {
+                            trace: t,
+                            id: t,
+                            ..Span::default()
+                        };
+                        r.push(s);
+                    }
+                })
+            })
+            .collect();
+        let mut out = Vec::new();
+        for _ in 0..200 {
+            r.snapshot_into(&mut out, 32);
+            for s in &out {
+                assert_eq!(s.trace, s.id, "torn span escaped the seqlock");
+            }
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        r.snapshot_into(&mut out, 32);
+        assert_eq!(out.len(), 32, "full ring snapshots its whole window");
+        for s in &out {
+            assert_eq!(s.trace, s.id);
+        }
+    }
+}

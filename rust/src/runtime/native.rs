@@ -229,6 +229,11 @@ impl ExecBackend for NativeBackend {
                 &AdaptiveOpts::with_tol(tol),
                 &mut ws,
             )?;
+            // solver-internal span counters: the engine reads this
+            // thread-local right after execute() returns (same worker
+            // thread on the native path), so the `_ws` solver signatures
+            // stay untouched and the hot loop stays allocation-free
+            crate::obs::solver_stamp(r.nfe, r.accepted, r.rejected);
             (r.z, Some(r.nfe))
         } else if variant.hyper {
             if variant.k == 0 {
@@ -237,6 +242,9 @@ impl ExecBackend for NativeBackend {
                     variant.name
                 )));
             }
+            // honest field-eval count for the span: k steps × RK stages
+            // (the hypersolver residual g is not a field eval)
+            crate::obs::solver_stamp((variant.k * qs.tab.stages()) as u64, 0, 0);
             (
                 odeint_hyper_ws(
                     field,
@@ -257,6 +265,7 @@ impl ExecBackend for NativeBackend {
                     variant.name
                 )));
             }
+            crate::obs::solver_stamp((variant.k * qs.tab.stages()) as u64, 0, 0);
             (
                 odeint_fixed_ws(field, z0, task.s_span, variant.k, &qs.tab, &mut ws)?.clone(),
                 None,

@@ -278,6 +278,11 @@ fn entry_f64(v: &Value, key: &str) -> Option<f64> {
 ///   shedding-on goodput must strictly exceed the shedding-off baseline
 ///   (`overload_goodput_baseline`), and run over run the goodput must not
 ///   drop by more than `goodput_drop` (absolute, goodput is in [0, 1]);
+/// * `serving_throughput.stage_*_p50_ms` — within the newest entry, the
+///   engine-side queue + pad + exec stage p50s must sum to at most twice
+///   the engine-side total p50 (disjoint sub-spans of the same requests;
+///   the slack covers log-bucket midpoint error) — a broken span clock
+///   cannot ship a plausible-looking breakdown;
 /// * `serving_throughput.pipelined_big_v2_p50_ms` — within the newest
 ///   entry, end-to-end pipelined p50 on the wide workload must be strictly
 ///   faster over the v2 binary frames than over v1 JSON lines
@@ -317,6 +322,32 @@ pub fn trajectory_gate(entries: &[Value], p50_slack: f64, goodput_drop: f64) -> 
                 if on <= off {
                     report.regressions.push(format!(
                         "{line} — REGRESSED (shedding must strictly beat the baseline)"
+                    ));
+                } else {
+                    report.checks.push(line);
+                }
+            }
+            // within-entry span-accounting invariant: the engine-side
+            // stage p50s (queue + pad + exec) cannot meaningfully exceed
+            // the engine-side total p50 — stages are disjoint sub-spans of
+            // the same requests. The ×2 slack absorbs the pow2-bucket
+            // histograms' geometric-midpoint error (each stage p50 can
+            // read up to √2 high while the total reads up to √2 low).
+            if let (Some(q), Some(pd), Some(ex), Some(tot)) = (
+                entry_f64(latest, "stage_queue_p50_ms"),
+                entry_f64(latest, "stage_pad_p50_ms"),
+                entry_f64(latest, "stage_exec_p50_ms"),
+                entry_f64(latest, "stage_total_p50_ms"),
+            ) {
+                let sum = q + pd + ex;
+                let line = format!(
+                    "[{name}] stage p50 sum (queue {q:.3} + pad {pd:.3} + exec \
+                     {ex:.3} = {sum:.3} ms) vs total p50 {tot:.3} ms"
+                );
+                if sum > tot * 2.0 {
+                    report.regressions.push(format!(
+                        "{line} — REGRESSED (stage spans account for more than \
+                         the whole request; the span clock is broken)"
                     ));
                 } else {
                     report.checks.push(line);
@@ -677,6 +708,36 @@ mod tests {
         // entries without the fields gate nothing new
         let plain = json::obj(vec![("bench", json::s("codecbench"))]);
         assert!(trajectory_gate(&[plain], 1.5, 0.15).passed());
+    }
+
+    #[test]
+    fn trajectory_gate_checks_stage_accounting() {
+        let staged = |q: f64, pd: f64, ex: f64, tot: f64| {
+            json::obj(vec![
+                ("bench", json::s("serving_throughput")),
+                ("stage_queue_p50_ms", json::num(q)),
+                ("stage_pad_p50_ms", json::num(pd)),
+                ("stage_exec_p50_ms", json::num(ex)),
+                ("stage_total_p50_ms", json::num(tot)),
+            ])
+        };
+        // healthy: stages sum under the total (with bucket slack)
+        let r = trajectory_gate(&[staged(0.5, 0.1, 1.0, 2.0)], 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.checks.iter().any(|c| c.contains("stage p50 sum")));
+        // broken clock: stages account for far more than the whole request
+        let r = trajectory_gate(&[staged(3.0, 1.0, 3.0, 1.0)], 1.5, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.regressions[0].contains("span clock"),
+            "{:?}",
+            r.regressions
+        );
+        // applies to the NEWEST entry only; entries without the fields
+        // gate nothing new
+        let plain = json::obj(vec![("bench", json::s("serving_throughput"))]);
+        let r = trajectory_gate(&[staged(9.0, 9.0, 9.0, 1.0), plain], 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Leveled stderr logger, configured by `HYPERSOLVERS_LOG`
-//! (error|warn|info|debug; default info).
+//! (error|warn|info|debug, case-insensitive; default info). An
+//! unrecognized value keeps the default but warns once — never a silent
+//! fallback.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -15,17 +17,34 @@ pub enum Level {
 static LEVEL: AtomicU8 = AtomicU8::new(2);
 static INIT: OnceLock<()> = OnceLock::new();
 
+/// Parse one `HYPERSOLVERS_LOG` value (case-insensitive). `None` means
+/// the value is not a level name — callers decide the fallback; the
+/// parser never silently substitutes one.
+pub fn parse_level(v: &str) -> Option<Level> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
 fn init() {
     INIT.get_or_init(|| {
         if let Ok(v) = std::env::var("HYPERSOLVERS_LOG") {
-            let lvl = match v.to_ascii_lowercase().as_str() {
-                "error" => 0,
-                "warn" => 1,
-                "info" => 2,
-                "debug" => 3,
-                _ => 2,
-            };
-            LEVEL.store(lvl, Ordering::Relaxed);
+            match parse_level(&v) {
+                Some(lvl) => LEVEL.store(lvl as u8, Ordering::Relaxed),
+                // keep the info default, but say so ONCE — a typo like
+                // `trace` or `INFO,foo` must not silently change what
+                // gets logged (eprintln! directly: the logger itself is
+                // mid-initialization here)
+                None => eprintln!(
+                    "[WARN ] {}: HYPERSOLVERS_LOG={v:?} is not a level \
+                     (error|warn|info|debug, case-insensitive); using info",
+                    module_path!()
+                ),
+            }
         }
     });
 }
@@ -99,6 +118,19 @@ macro_rules! log_error {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn level_parsing_accepts_any_case_and_rejects_everything_else() {
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("DEBUG"), Some(Level::Debug));
+        assert_eq!(parse_level("Warn"), Some(Level::Warn));
+        assert_eq!(parse_level(" info "), Some(Level::Info));
+        assert_eq!(parse_level("ERROR"), Some(Level::Error));
+        // not levels: the historical silent-info cases must be loud now
+        for bad in ["trace", "INFO,foo", "2", "", "verbose"] {
+            assert_eq!(parse_level(bad), None, "{bad:?}");
+        }
+    }
 
     #[test]
     fn level_gating() {

@@ -226,4 +226,67 @@ fn warm_solver_loops_do_not_touch_the_allocator() {
         pad_allocs, 0,
         "pad_batch_into over a warm buffer allocated {pad_allocs} times in 16 batches"
     );
+
+    // --- request tracing steady state: exactly 0 allocations ---
+    // The observability plane rides the same hot path: stage stamping,
+    // the solver thread-local, span-ring pushes, slow-table offers (at
+    // capacity), warm (task, variant) interning and histogram records
+    // must all stay off the allocator, or tracing un-does the perf work
+    // the pins above protect.
+    use hypersolvers::coordinator::CoordinatorMetrics;
+    use hypersolvers::obs::{self, Span, Stage, StageStamps};
+    let metrics = CoordinatorMetrics::new();
+    let (_, hists) = metrics.stage_key("cnf_a", "euler_k2"); // cold: interns
+    let mk_span = |trace: u64| {
+        let mut st = StageStamps::default();
+        for s in Stage::ALL {
+            st.stamp(s);
+        }
+        st.nfe = 4;
+        Span {
+            trace,
+            id: trace,
+            key: 0,
+            rows: 1,
+            ok: true,
+            stamps: st,
+        }
+    };
+    for i in 0..64 {
+        metrics.spans.push(mk_span(i)); // warm: fill past capacity wrap
+        metrics.slow.offer(mk_span(i)); // warm: table reaches capacity
+    }
+    let before = allocs();
+    for i in 0..16u64 {
+        let mut st = StageStamps::default();
+        for s in Stage::ALL {
+            st.stamp(s);
+        }
+        obs::solver_stamp(4, 2, 1);
+        let (nfe, acc, rej) = obs::take_solver_stamp();
+        st.nfe = nfe;
+        st.accepted = acc;
+        st.rejected = rej;
+        let (key, h) = metrics.stage_key("cnf_a", "euler_k2");
+        drop(h);
+        let span = Span {
+            trace: 1000 + i,
+            id: 1000 + i,
+            key,
+            rows: 1,
+            ok: true,
+            stamps: st,
+        };
+        hists
+            .total
+            .record(std::time::Duration::from_micros(st.dur_us(Stage::Submit, Stage::Reply)));
+        metrics.spans.push(span);
+        metrics.slow.offer(span);
+        std::hint::black_box(span.total_us());
+    }
+    let trace_allocs = allocs() - before;
+    assert_eq!(
+        trace_allocs, 0,
+        "warm tracing path allocated {trace_allocs} times in 16 spans"
+    );
 }

@@ -63,6 +63,19 @@ fn golden_v1_request_line() {
 }
 
 #[test]
+fn golden_v1_request_line_with_trace() {
+    // the optional trace id is the only difference from the line above:
+    // untraced requests stay byte-identical to the pre-trace protocol
+    let mut req = InferRequest::batch("cnf_rings", 0.25, 2, vec![0.5, -0.75, 0.25, 1.5]);
+    req.id = Some(7);
+    req.trace = Some(42);
+    assert_eq!(
+        json::to_string(&v1::encode_request(&req)),
+        r#"{"budget":0.25,"id":7,"input":[[0.5,-0.75],[0.25,1.5]],"task":"cnf_rings","trace":42,"v":1}"#
+    );
+}
+
+#[test]
 fn golden_v1_response_line() {
     let resp = InferResponse {
         id: 7,
@@ -74,6 +87,7 @@ fn golden_v1_response_line() {
         samples: 2,
         dims: 2,
         output: vec![1.0, 2.0, 3.0, 4.0],
+        trace: None,
     };
     assert_eq!(
         json::to_string(&v1::encode_response(&resp, 1)),
@@ -85,12 +99,12 @@ fn golden_v1_response_line() {
 fn golden_v1_error_line() {
     let e = ApiError::deadline_exceeded("too slow");
     assert_eq!(
-        json::to_string(&v1::encode_error(Some(9), &e, 1)),
+        json::to_string(&v1::encode_error(Some(9), None, &e, 1)),
         r#"{"code":"deadline_exceeded","error":"too slow","id":9,"ok":false,"v":1}"#
     );
     // v0 dialect: no version tag, code still present
     assert_eq!(
-        json::to_string(&v1::encode_error(None, &ApiError::unknown_cmd("nope"), 0)),
+        json::to_string(&v1::encode_error(None, None, &ApiError::unknown_cmd("nope"), 0)),
         r#"{"code":"unknown_cmd","error":"nope","ok":false}"#
     );
 }
@@ -101,8 +115,14 @@ fn golden_overloaded_error_line() {
     // contract: clients branch on this exact code string to back off
     let e = ApiError::overloaded("queue past deadline");
     assert_eq!(
-        json::to_string(&v1::encode_error(Some(11), &e, 1)),
+        json::to_string(&v1::encode_error(Some(11), None, &e, 1)),
         r#"{"code":"overloaded","error":"queue past deadline","id":11,"ok":false,"v":1}"#
+    );
+    // a traced request that gets rejected carries its trace id back on the
+    // rejection, so clients can line refusals up with their own spans
+    assert_eq!(
+        json::to_string(&v1::encode_error(Some(11), Some(3), &e, 1)),
+        r#"{"code":"overloaded","error":"queue past deadline","id":11,"ok":false,"trace":3,"v":1}"#
     );
 }
 
@@ -110,7 +130,7 @@ fn golden_overloaded_error_line() {
 fn every_error_code_round_trips_the_wire() {
     for code in ErrorCode::ALL {
         let e = ApiError::new(code, format!("m-{code}"));
-        let line = json::to_string(&v1::encode_error(Some(3), &e, 1));
+        let line = json::to_string(&v1::encode_error(Some(3), None, &e, 1));
         let back = json::parse(&line).unwrap();
         match v1::decode_reply(&back).unwrap() {
             InferReply::Err(err) => {
@@ -285,5 +305,107 @@ fn protocol_version_negotiation_rejects_unknown_versions() {
         );
         let ok = client.infer("cnf_a", 0.5, &[0.1, 0.2]).unwrap();
         assert_eq!(ok.get("ok").and_then(Value::as_bool), Some(true));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Request tracing: wire echo + the cmd:"trace" span surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_request_yields_an_ordered_span_via_cmd_trace() {
+    with_watchdog(60, || {
+        let engine = native_engine("pipe_trace", &[("cnf_a", 4)], Duration::from_millis(1));
+        let (_engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+
+        // success reply echoes the client-supplied trace id
+        let mut req = InferRequest::single("cnf_a", 0.05, vec![0.1, 0.2]);
+        req.trace = Some(77_000_001);
+        match client.infer_v1(&req).unwrap() {
+            InferReply::Ok(r) => assert_eq!(r.trace, Some(77_000_001)),
+            other => panic!("{other:?}"),
+        }
+
+        // an error reply (submit rejection — same arm that answers
+        // overloaded rejects) echoes it too
+        let mut bad = InferRequest::single("no_such_task", 0.05, vec![0.1, 0.2]);
+        bad.trace = Some(77_000_002);
+        match client.infer_v1(&bad).unwrap() {
+            InferReply::Err(e) => {
+                assert_eq!(e.error.code, ErrorCode::UnknownTask);
+                assert_eq!(e.trace, Some(77_000_002));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // the span surface: the traced request must be in the ring with
+        // monotonically ordered stage stamps and real solver work
+        let reply = client
+            .request(&json::parse(r#"{"cmd":"trace"}"#).unwrap())
+            .unwrap();
+        assert_eq!(reply.get("ok").and_then(Value::as_bool), Some(true), "{reply:?}");
+        let spans = reply.get("spans").and_then(Value::as_arr).expect("spans array");
+        let span = spans
+            .iter()
+            .find(|s| s.get("trace").and_then(Value::as_f64) == Some(77_000_001.0))
+            .expect("traced span in cmd:\"trace\"");
+        let at = |k: &str| {
+            span.get(k)
+                .and_then(Value::as_f64)
+                .unwrap_or_else(|| panic!("span missing {k}: {span:?}"))
+        };
+        let stamps = [
+            at("submit_us"),
+            at("enqueue_us"),
+            at("pop_us"),
+            at("exec_start_us"),
+            at("exec_end_us"),
+            at("reply_us"),
+        ];
+        for w in stamps.windows(2) {
+            assert!(w[0] <= w[1], "stage stamps out of order: {stamps:?}");
+        }
+        assert!(at("nfe") > 0.0, "span must carry solver NFE: {span:?}");
+        assert_eq!(span.get("task").and_then(Value::as_str), Some("cnf_a"));
+        assert_eq!(span.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(span.get("rows").and_then(Value::as_f64), Some(1.0));
+    });
+}
+
+#[test]
+fn pipelined_requests_keep_distinct_trace_ids() {
+    with_watchdog(120, || {
+        let engine = native_engine(
+            "pipe_trace_ids",
+            &[("cnf_a", 4), ("cnf_b", 4)],
+            Duration::from_millis(1),
+        );
+        let (_engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+
+        // distinct in-flight requests (mixed tasks/budgets, so completions
+        // can reorder) must each come back under their own trace id, and
+        // untraced requests interleaved among them stay trace-free
+        let mut reqs: Vec<InferRequest> = Vec::new();
+        for i in 0..12u64 {
+            let task = if i % 2 == 0 { "cnf_a" } else { "cnf_b" };
+            let budget = [0.5f32, 0.05][(i % 2) as usize];
+            let mut r = InferRequest::single(task, budget, vec![0.1, 0.2]);
+            r.id = Some(300 + i);
+            r.trace = (i % 3 != 2).then_some(5000 + i);
+            reqs.push(r);
+        }
+        let replies = client.infer_pipelined(&reqs).unwrap();
+        assert_eq!(replies.len(), reqs.len());
+        for (req, reply) in reqs.iter().zip(&replies) {
+            assert_eq!(reply.id(), req.id);
+            match reply {
+                InferReply::Ok(r) => {
+                    assert_eq!(r.trace, req.trace, "trace follows its own request")
+                }
+                other => panic!("{other:?}"),
+            }
+        }
     });
 }

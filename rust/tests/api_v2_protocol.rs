@@ -102,6 +102,7 @@ fn golden_v2_response_frame() {
         samples: 2,
         dims: 2,
         output: vec![1.0, 2.0, 3.0, 4.0],
+        trace: None,
     };
     assert_eq!(
         v2::encode_response(&resp),
@@ -118,7 +119,7 @@ fn golden_v2_error_frame_for_every_code() {
     // error frames carry an empty payload and the same frozen code
     // strings as the v1 lines — fixture-checked for all nine codes
     assert_eq!(
-        v2::encode_error(Some(9), &ApiError::deadline_exceeded("too slow")),
+        v2::encode_error(Some(9), None, &ApiError::deadline_exceeded("too slow")),
         frame_fixture(
             v2::KIND_ERROR,
             r#"{"code":"deadline_exceeded","error":"too slow","id":9,"ok":false,"v":2}"#,
@@ -131,12 +132,12 @@ fn golden_v2_error_frame_for_every_code() {
             r#"{{"code":"{code}","error":"m-{code}","id":3,"ok":false,"v":2}}"#
         );
         assert_eq!(
-            v2::encode_error(Some(3), &e),
+            v2::encode_error(Some(3), None, &e),
             frame_fixture(v2::KIND_ERROR, &header, &[]),
             "{code}"
         );
         // and it decodes back to the typed error, code intact
-        let frame = v2::read_frame(&mut &v2::encode_error(Some(3), &e)[..]).unwrap();
+        let frame = v2::read_frame(&mut &v2::encode_error(Some(3), None, &e)[..]).unwrap();
         match v2::decode_reply(frame).unwrap() {
             InferReply::Err(back) => {
                 assert_eq!(back.id, Some(3));
@@ -373,6 +374,61 @@ fn pipelined_v2_connection_matches_inflight_ids_and_mixes_dialects() {
             "{}",
             m.report()
         );
+    });
+}
+
+#[test]
+fn golden_v2_request_frame_with_trace() {
+    // trace rides the frame header under the same omission convention as
+    // the v1 line — the frame above (no trace) stays byte-identical
+    let mut req = InferRequest::batch("cnf_rings", 0.25, 2, vec![0.5, -0.75, 0.25, 1.5]);
+    req.id = Some(7);
+    req.trace = Some(42);
+    assert_eq!(
+        v2::encode_request(&req),
+        frame_fixture(
+            v2::KIND_REQUEST,
+            r#"{"budget":0.25,"dims":2,"id":7,"rows":2,"task":"cnf_rings","trace":42,"v":2}"#,
+            &[0.5, -0.75, 0.25, 1.5],
+        )
+    );
+}
+
+#[test]
+fn trace_ids_propagate_over_a_negotiated_v2_connection() {
+    with_watchdog(60, || {
+        let engine = native_engine("v2_trace", &[("cnf_a", 4)], Duration::from_millis(1));
+        let (_engine, addr) = spawn_server(engine);
+        let mut client = server::Client::connect(&addr).unwrap();
+        assert!(client.prefer_v2().unwrap());
+
+        // success frame echoes the client trace id
+        let mut req = InferRequest::single("cnf_a", 0.5, vec![0.1, 0.2]);
+        req.trace = Some(88_000_001);
+        match client.infer_v1(&req).unwrap() {
+            InferReply::Ok(r) => assert_eq!(r.trace, Some(88_000_001)),
+            other => panic!("{other:?}"),
+        }
+
+        // error frame (submit rejection) echoes it too
+        let mut bad = InferRequest::single("no_such_task", 0.5, vec![0.1, 0.2]);
+        bad.trace = Some(88_000_002);
+        match client.infer_v1(&bad).unwrap() {
+            InferReply::Err(e) => {
+                assert_eq!(e.error.code, ErrorCode::UnknownTask);
+                assert_eq!(e.trace, Some(88_000_002));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // an untraced frame on the same connection stays trace-free
+        match client
+            .infer_v1(&InferRequest::single("cnf_a", 0.5, vec![0.3, 0.4]))
+            .unwrap()
+        {
+            InferReply::Ok(r) => assert_eq!(r.trace, None),
+            other => panic!("{other:?}"),
+        }
     });
 }
 
