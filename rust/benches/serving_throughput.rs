@@ -28,6 +28,12 @@
 //! machine-readable so successive PRs can diff serving performance. With
 //! `--metrics-addr HOST:PORT` the run also exposes live Prometheus text
 //! for whichever engine is currently under load (what CI scrapes).
+//!
+//! The numerical-health scenarios replay one workload audit-off, audit-on
+//! (`--audit-rate 1`-equivalent) and audit-on with inputs shifted far off
+//! the training distribution; the off/on p50 pair feeds benchgate's
+//! audit-overhead bound, and `--health-prom PATH` writes the audit-enabled
+//! exposition for `benchgate --expo-check-health`.
 
 use std::collections::HashMap;
 use std::net::TcpListener;
@@ -96,6 +102,19 @@ fn main() {
             "overload-secs",
             "1",
             "offered-load duration of each overload run",
+        )
+        .opt(
+            "audit-requests",
+            "400",
+            "requests per shadow-audit A/B run and per drift-shifted run \
+             (0 disables the numerical-health scenarios)",
+        )
+        .opt(
+            "health-prom",
+            "",
+            "write the audit-enabled engine's Prometheus exposition to this \
+             path after the shifted scenario (what CI gates with \
+             `benchgate --expo-check-health`; empty = off)",
         )
         .opt(
             "metrics-addr",
@@ -627,6 +646,7 @@ fn main() {
             backend,
             workers: args.get_usize("workers"),
             slo,
+            ..Default::default()
         };
         let dopri = |deadline: Option<Duration>, priority: Priority| SubmitOptions {
             variant: Some("dopri5".into()),
@@ -789,6 +809,168 @@ fn main() {
         );
     }
 
+    // ---- shadow-audit A/B + distribution shift: the numerical-health plane ----
+    //
+    // The same Poisson mixed-budget workload replayed three times: audit
+    // off, audit sampling every completed request (rate 1.0, the worst
+    // case), and audit-on with every input pushed far outside the
+    // fixtures' training box. The off/on p50 pair lands in the bench
+    // trajectory, where benchgate enforces the ≤10% audit-overhead bound;
+    // the shifted run reports the drift scores and budget-breach counters
+    // the health plane raises, and (with --health-prom) writes the
+    // audit-enabled exposition for `benchgate --expo-check-health`.
+    let audit_requests = args.get_usize("audit-requests");
+    let mut audit_headline: Option<(f64, f64)> = None; // (off p50, on p50)
+    if audit_requests > 0 {
+        let mut audit_pair = (0.0f64, 0.0f64);
+        let health_runs: [(&str, f64, bool); 3] = [
+            ("audit off", 0.0, false),
+            ("audit on", 1.0, false),
+            ("audit on shifted", 1.0, true),
+        ];
+        for (label, audit_rate, shifted) in health_runs {
+            let scenario = format!("health {label}");
+            let mut cfg = engine_config(args.get_usize("workers"));
+            cfg.audit.rate = audit_rate;
+            let engine = Arc::new(Engine::new(cfg).unwrap());
+            register(&engine);
+            for t in &tasks {
+                engine.warmup(t).unwrap();
+            }
+            let spec = WorkloadSpec {
+                rate: args.get_f64("rate"),
+                count: audit_requests,
+                tasks: tasks.clone(),
+                budgets: vec![(0.05f32, 0.6f64), (0.15, 0.3), (0.01, 0.1)],
+            };
+            let trace = spec.generate(&mut Rng::new(21));
+            let mut rng = Rng::new(22);
+            let t0 = Instant::now();
+            let mut pending = Vec::with_capacity(trace.events.len());
+            for ev in &trace.events {
+                let target = t0 + Duration::from_secs_f64(ev.at_s);
+                loop {
+                    let now = Instant::now();
+                    if now >= target {
+                        break;
+                    }
+                    let gap = target - now;
+                    if gap > Duration::from_millis(1) {
+                        std::thread::sleep(gap - Duration::from_micros(500));
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                let dim = dims[tasks.iter().position(|t| *t == ev.task).unwrap()];
+                // in-distribution inputs sit inside the fixtures' training
+                // box ([-1.5, 1.5]); the shifted run offsets far outside it
+                let input: Vec<f32> = (0..dim)
+                    .map(|_| {
+                        let x = rng.normal_f32() * 0.5;
+                        if shifted {
+                            x + 9.0
+                        } else {
+                            x
+                        }
+                    })
+                    .collect();
+                pending.push(engine.submit(&ev.task, ev.budget, input).unwrap());
+            }
+            let mut latencies = Vec::with_capacity(pending.len());
+            for handle in pending {
+                latencies.push(handle.wait().unwrap().latency.as_secs_f64() * 1e3);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let achieved_rps = audit_requests as f64 / wall;
+            let (p50, p95, p99) = (
+                stats::percentile(&latencies, 50.0),
+                stats::percentile(&latencies, 95.0),
+                stats::percentile(&latencies, 99.0),
+            );
+            if !shifted {
+                if audit_rate == 0.0 {
+                    audit_pair.0 = p50;
+                } else {
+                    audit_pair.1 = p50;
+                }
+            }
+            // drain the audit queue on this thread so the snapshot below
+            // (and the exposition written for CI) reflects every sample
+            let audited = engine.audit_flush();
+            let mut drift_max = 0.0f64;
+            let mut breaches = 0u64;
+            let mut keys_json: Vec<Value> = Vec::new();
+            if let Some(plane) = engine.audit() {
+                for k in plane.snapshot() {
+                    if let Some(d) = k.drift_score {
+                        drift_max = drift_max.max(d);
+                    }
+                    breaches += k.breaches;
+                    keys_json.push(json::obj(vec![
+                        ("task", json::s(&k.task)),
+                        ("variant", json::s(&k.variant)),
+                        ("samples", json::num(k.samples as f64)),
+                        ("err_p50", json::num(k.err_p50)),
+                        ("budget", json::num(k.budget)),
+                        ("status", json::s(k.budget_status())),
+                        ("breaches", json::num(k.breaches as f64)),
+                        (
+                            "drift_score",
+                            k.drift_score.map(json::num).unwrap_or(Value::Null),
+                        ),
+                    ]));
+                }
+            }
+            let metrics = engine.metrics();
+            table.row(&[
+                scenario.clone(),
+                "0".into(),
+                audit_requests.to_string(),
+                format!("{:.0}", spec.rate),
+                format!("{achieved_rps:.0}"),
+                format!("{p50:.2}"),
+                format!("{p99:.2}"),
+                format!("{:.2}", metrics.fill_ratio()),
+                "-".into(),
+                metrics.inflight_peak.load(Relaxed).to_string(),
+            ]);
+            scenarios_json.push(json::obj(vec![
+                ("scenario", json::s(&scenario)),
+                ("mode", json::s("inproc_poisson_audit")),
+                ("audit_rate", json::num(audit_rate)),
+                ("shifted", Value::Bool(shifted)),
+                ("requests", json::num(audit_requests as f64)),
+                ("throughput_rps", json::num(achieved_rps)),
+                ("p50_ms", json::num(p50)),
+                ("p95_ms", json::num(p95)),
+                ("p99_ms", json::num(p99)),
+                ("audited", json::num(audited as f64)),
+                ("drift_score_max", json::num(drift_max)),
+                ("budget_breaches", json::num(breaches as f64)),
+                ("audit_keys", Value::Arr(keys_json)),
+            ]));
+            if audit_rate > 0.0 {
+                println!(
+                    "[{scenario}] audited={audited} drift_max={drift_max:.3} \
+                     breaches={breaches}"
+                );
+            }
+            if shifted {
+                let hp = args.get("health-prom");
+                if !hp.is_empty() {
+                    std::fs::write(&hp, engine.render_prometheus())
+                        .expect("write --health-prom");
+                    println!("wrote audit-enabled exposition to {hp}");
+                }
+            }
+        }
+        println!(
+            "\n[health] audit A/B p50: off {:.2} ms vs on {:.2} ms (rate 1.0)",
+            audit_pair.0, audit_pair.1
+        );
+        audit_headline = Some(audit_pair);
+    }
+
     println!();
     table.print();
     println!(
@@ -834,6 +1016,10 @@ fn main() {
             fields.push(("overload_goodput", json::num(goodput_on)));
             fields.push(("overload_goodput_baseline", json::num(goodput_off)));
             fields.push(("overload_factor", json::num(overload_factor)));
+        }
+        if let Some((off_p50, on_p50)) = audit_headline {
+            fields.push(("audit_off_p50_ms", json::num(off_p50)));
+            fields.push(("audit_on_p50_ms", json::num(on_p50)));
         }
         // engine-side stage breakdown of the headline scenario — benchgate
         // checks that queue+pad+exec p50s stay consistent with the total

@@ -23,12 +23,16 @@
 //! exposition instead of the trajectory: the file must parse as exposition
 //! text and carry the serving metric families the dashboards key on. CI
 //! runs it against the text scraped from the serving bench's
-//! `--metrics-addr` listener.
+//! `--metrics-addr` listener. `--expo-check-health FILE` is the same check
+//! plus the numerical-health families (`hypersolvers_audit_*`,
+//! `hypersolvers_drift_score`) — for expositions rendered with the shadow
+//! audit plane enabled.
 //!
 //! ```bash
 //! benchgate                                   # ./BENCH_trajectory.json
 //! benchgate --trajectory path.json --p50-slack 1.75
 //! benchgate --expo-check metrics.prom         # gate a scraped exposition
+//! benchgate --expo-check-health health.prom   # + audit/drift families
 //! ```
 
 use hypersolvers::obs::expo;
@@ -50,6 +54,12 @@ fn main() {
              gating the trajectory",
         )
         .opt(
+            "expo-check-health",
+            "",
+            "like --expo-check, but additionally require the shadow-audit \
+             and drift metric families (audit-enabled expositions)",
+        )
+        .opt(
             "p50-slack",
             "1.75",
             "allowed serving-p50 growth factor run-over-run (wall clock on \
@@ -65,7 +75,12 @@ fn main() {
 
     let expo_path = args.get("expo-check");
     if !expo_path.is_empty() {
-        expo_check(&expo_path);
+        expo_check(&expo_path, false);
+        return;
+    }
+    let health_path = args.get("expo-check-health");
+    if !health_path.is_empty() {
+        expo_check(&health_path, true);
         return;
     }
 
@@ -129,11 +144,13 @@ fn main() {
     println!("benchgate: no regressions");
 }
 
-/// `--expo-check`: the scraped exposition must parse line-for-line and
-/// carry the families the serving dashboards key on. A scrape that raced
-/// the bench's first engine (`hypersolvers_up` only) fails here — CI's
-/// retry loop is supposed to have waited that out.
-fn expo_check(path: &str) {
+/// `--expo-check` / `--expo-check-health`: the scraped exposition must
+/// parse line-for-line and carry the families the serving dashboards key
+/// on — plus, in health mode, the shadow-audit and drift families an
+/// audit-enabled engine renders. A scrape that raced the bench's first
+/// engine (`hypersolvers_up` only) fails here — CI's retry loop is
+/// supposed to have waited that out.
+fn expo_check(path: &str, health: bool) {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
         Err(e) => {
@@ -141,13 +158,22 @@ fn expo_check(path: &str) {
             std::process::exit(2);
         }
     };
-    let required = [
+    let mut required = vec![
         "hypersolvers_requests_total",
         "hypersolvers_responses_total",
         "hypersolvers_batch_fill_ratio",
         "hypersolvers_goodput",
         "hypersolvers_latency_us",
     ];
+    if health {
+        required.extend([
+            "hypersolvers_audit_samples_total",
+            "hypersolvers_audit_drops_total",
+            "hypersolvers_audit_budget_breach_total",
+            "hypersolvers_audit_error",
+            "hypersolvers_drift_score",
+        ]);
+    }
     match expo::self_check(&text, &required) {
         Ok(samples) => {
             println!(

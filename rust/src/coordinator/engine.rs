@@ -34,6 +34,7 @@ use crate::coordinator::policy::{select_variant, Policy};
 use crate::coordinator::request::{
     Completion, CompletionSender, Priority, Request, Response, RowBlock,
 };
+use crate::obs::audit::{AuditConfig, AuditPlane, AuditSample};
 use crate::obs::{self, Stage};
 use crate::runtime::backend::{BackendKind, ExecBackend};
 use crate::runtime::manifest::Manifest;
@@ -89,6 +90,9 @@ pub struct EngineConfig {
     pub workers: usize,
     /// SLO defence: admission control, shedding high-water mark, quotas
     pub slo: SloConfig,
+    /// shadow-audit plane: sampling rate, reference tolerance, budget
+    /// breach thresholds (rate 0.0 = plane disabled, the default)
+    pub audit: AuditConfig,
 }
 
 impl Default for EngineConfig {
@@ -100,6 +104,7 @@ impl Default for EngineConfig {
             backend: BackendKind::Pjrt,
             workers: 0,
             slo: SloConfig::default(),
+            audit: AuditConfig::default(),
         }
     }
 }
@@ -208,6 +213,8 @@ pub struct Engine {
     backend: Arc<dyn ExecBackend>,
     next_id: AtomicU64,
     workers: Vec<thread::JoinHandle<()>>,
+    audit: Option<Arc<AuditPlane>>,
+    audit_worker: Option<thread::JoinHandle<()>>,
     config: EngineConfig,
 }
 
@@ -226,6 +233,11 @@ impl Engine {
             shutdown: AtomicBool::new(false),
         });
         let metrics = Arc::new(CoordinatorMetrics::new());
+        let audit = if config.audit.rate > 0.0 {
+            Some(Arc::new(AuditPlane::new(config.audit.clone())))
+        } else {
+            None
+        };
 
         let n = resolve_workers(config.workers);
         let mut workers = Vec::with_capacity(n);
@@ -235,9 +247,10 @@ impl Engine {
                 let manifest = Arc::clone(&manifest);
                 let metrics = Arc::clone(&metrics);
                 let backend = Arc::clone(&backend);
+                let audit = audit.clone();
                 thread::Builder::new()
                     .name(format!("hsolve-dispatch-{i}"))
-                    .spawn(move || worker_main(shared, manifest, metrics, backend))
+                    .spawn(move || worker_main(shared, manifest, metrics, backend, audit))
             };
             match spawned {
                 Ok(j) => workers.push(j),
@@ -251,6 +264,32 @@ impl Engine {
                 }
             }
         }
+
+        // the audit worker re-solves sampled requests off the dispatch
+        // path; it owns its RkWorkspace (inside the plane), never the
+        // dispatch workers'
+        let audit_worker = match &audit {
+            None => None,
+            Some(plane) => {
+                let plane = Arc::clone(plane);
+                let manifest = Arc::clone(&manifest);
+                let metrics = Arc::clone(&metrics);
+                let spawned = thread::Builder::new()
+                    .name("hsolve-audit".into())
+                    .spawn(move || plane.run_worker(&manifest, |k| metrics.key_name(k)));
+                match spawned {
+                    Ok(j) => Some(j),
+                    Err(e) => {
+                        shared.shutdown.store(true, Relaxed);
+                        shared.work.notify_all();
+                        for j in workers {
+                            let _ = j.join();
+                        }
+                        return Err(Error::Coordinator(format!("spawn audit worker: {e}")));
+                    }
+                }
+            }
+        };
 
         log_info!(
             "engine up: {} tasks, backend {}, {} dispatch workers, policy {:?}, max_wait {:?}",
@@ -267,6 +306,8 @@ impl Engine {
             backend,
             next_id: AtomicU64::new(1),
             workers,
+            audit,
+            audit_worker,
             config,
         })
     }
@@ -290,6 +331,23 @@ impl Engine {
     /// The active backend's name ("pjrt" | "native").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// The shadow-audit plane, when `--audit-rate` enabled it.
+    pub fn audit(&self) -> Option<&AuditPlane> {
+        self.audit.as_deref()
+    }
+
+    /// Synchronously drain the audit queue on the caller's thread;
+    /// returns how many samples were processed. Tests and benches use
+    /// this to observe audit state without racing the worker thread.
+    pub fn audit_flush(&self) -> usize {
+        match &self.audit {
+            None => 0,
+            Some(plane) => {
+                plane.process_pending(&self.manifest, |k| self.metrics.key_name(k))
+            }
+        }
     }
 
     /// Dispatch worker count actually running.
@@ -468,6 +526,93 @@ impl Engine {
                 &[("task", task.as_str()), ("variant", variant.as_str())],
                 *us,
             );
+        }
+
+        // numerical-health families: only rendered when the audit plane is
+        // on, so an audit-off scrape is byte-stable against PR 8's shape
+        if let Some(plane) = self.audit.as_deref() {
+            let snaps = plane.snapshot();
+            p.family(
+                "hypersolvers_audit_samples_total",
+                "counter",
+                "Requests shadow-audited against the tight-tolerance reference",
+            );
+            for s in &snaps {
+                p.sample(
+                    "hypersolvers_audit_samples_total",
+                    &[("task", s.task.as_str()), ("variant", s.variant.as_str())],
+                    s.samples as f64,
+                );
+            }
+            p.family(
+                "hypersolvers_audit_drops_total",
+                "counter",
+                "Audit samples lost: bounded-queue/contended drops and unsupported re-solves",
+            );
+            p.sample(
+                "hypersolvers_audit_drops_total",
+                &[("reason", "queue")],
+                plane.drops.load(Relaxed) as f64,
+            );
+            p.sample(
+                "hypersolvers_audit_drops_total",
+                &[("reason", "unsupported")],
+                plane.unsupported.load(Relaxed) as f64,
+            );
+            p.family(
+                "hypersolvers_audit_budget_breach_total",
+                "counter",
+                "Sustained error-budget breaches (EWMA over breach_factor x manifest mape)",
+            );
+            for s in &snaps {
+                p.sample(
+                    "hypersolvers_audit_budget_breach_total",
+                    &[("task", s.task.as_str()), ("variant", s.variant.as_str())],
+                    s.breaches as f64,
+                );
+            }
+            p.family(
+                "hypersolvers_audit_error",
+                "summary",
+                "Measured relative terminal error of served outputs vs the reference solve",
+            );
+            for s in &snaps {
+                for (q, v) in [("0.5", s.err_p50), ("0.99", s.err_p99)] {
+                    p.sample(
+                        "hypersolvers_audit_error",
+                        &[
+                            ("task", s.task.as_str()),
+                            ("variant", s.variant.as_str()),
+                            ("quantile", q),
+                        ],
+                        v,
+                    );
+                }
+                p.sample(
+                    "hypersolvers_audit_error_sum",
+                    &[("task", s.task.as_str()), ("variant", s.variant.as_str())],
+                    s.err_mean * s.samples as f64,
+                );
+                p.sample(
+                    "hypersolvers_audit_error_count",
+                    &[("task", s.task.as_str()), ("variant", s.variant.as_str())],
+                    s.samples as f64,
+                );
+            }
+            p.family(
+                "hypersolvers_drift_score",
+                "gauge",
+                "Input drift of audited request states vs the manifest train_stats stamp",
+            );
+            for s in &snaps {
+                if let Some(d) = s.drift_score {
+                    p.sample(
+                        "hypersolvers_drift_score",
+                        &[("task", s.task.as_str()), ("variant", s.variant.as_str())],
+                        d,
+                    );
+                }
+            }
         }
         p.finish()
     }
@@ -661,7 +806,13 @@ impl Drop for Engine {
     fn drop(&mut self) {
         self.shared.shutdown.store(true, Relaxed);
         self.shared.work.notify_all();
+        if let Some(plane) = &self.audit {
+            plane.shutdown();
+        }
         for j in self.workers.drain(..) {
+            let _ = j.join();
+        }
+        if let Some(j) = self.audit_worker.take() {
             let _ = j.join();
         }
     }
@@ -700,6 +851,7 @@ fn worker_main(
     manifest: Arc<Manifest>,
     metrics: Arc<CoordinatorMetrics>,
     backend: Arc<dyn ExecBackend>,
+    audit: Option<Arc<AuditPlane>>,
 ) {
     // per-worker reusable padded-batch buffer: `pad_batch_into` refills it
     // for every batch, so steady-state dispatch does not allocate for
@@ -742,7 +894,14 @@ fn worker_main(
             key: key.clone(),
         };
         metrics.batch_started();
-        if let Some(wall) = run_batch(&manifest, &metrics, backend.as_ref(), batch, &mut pad_buf) {
+        if let Some(wall) = run_batch(
+            &manifest,
+            &metrics,
+            backend.as_ref(),
+            batch,
+            &mut pad_buf,
+            audit.as_deref(),
+        ) {
             // feed the measured wall-clock back into the admission
             // predictor for this (task, variant)
             let wall_us = wall.as_secs_f64() * 1e6;
@@ -810,6 +969,7 @@ fn run_batch(
     backend: &dyn ExecBackend,
     batch: ReadyBatch,
     pad_buf: &mut Vec<f32>,
+    audit: Option<&AuditPlane>,
 ) -> Option<Duration> {
     let ReadyBatch { key, items } = batch;
     // intern the (task, variant) once per batch: after the first batch of
@@ -974,6 +1134,21 @@ fn run_batch(
         if p.req.deadline.is_none_or(|d| Instant::now() <= d) {
             metrics.deadline_met.fetch_add(1, Relaxed);
         }
+        // shadow-audit sampling: the decision is a lock-free counter hash
+        // (allocation-free, pinned in tests/alloc_free.rs); only a sampled
+        // request pays the (input, output) copy, and `offer` never blocks
+        // — a full or contended queue costs one drop-counter tick
+        if let Some(plane) = audit {
+            if plane.sampler.decide() {
+                plane.offer(AuditSample {
+                    key: key_idx,
+                    rows: p.req.block.rows,
+                    dims: sample_dim,
+                    input: p.req.block.data.clone(),
+                    served: out.z[off..off + n].to_vec(),
+                });
+            }
+        }
         let resp = Response {
             id: p.req.id,
             output: out.z[off..off + n].to_vec(),
@@ -1031,6 +1206,13 @@ mod tests {
         assert!(c.slo.admission);
         assert_eq!(c.slo.shed_high_water_rows, 0);
         assert_eq!(c.slo.client_quota_rows, 0);
+        // audit plane defaults off (rate 0) with a tight reference tol
+        // and a sustained-breach condition
+        assert_eq!(c.audit.rate, 0.0);
+        assert!(c.audit.tol <= 1e-5);
+        assert!(c.audit.queue_cap > 0);
+        assert!(c.audit.breach_factor >= 1.0);
+        assert!(c.audit.breach_streak >= 1);
     }
 
     #[test]

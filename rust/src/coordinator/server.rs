@@ -101,23 +101,57 @@ where
     Ok(())
 }
 
+/// Hard cap on how many request-head bytes one scrape connection may
+/// send before we stop reading and just answer — a peer streaming an
+/// endless "request line" cannot grow memory.
+const SCRAPE_HEAD_MAX: u64 = 8 * 1024;
+
 /// One scrape connection: drain the request head (bounded by a read
-/// timeout so a silent peer cannot pin the thread), render, respond,
-/// close.
+/// timeout so a silent peer cannot pin the thread, and by
+/// [`SCRAPE_HEAD_MAX`] so a chatty one cannot grow memory), render,
+/// respond, close. Explicit HTTP requests for any path other than
+/// `/metrics` get a 404; raw-TCP scrapers that send nothing (`nc`)
+/// still get the exposition.
 fn serve_scrape(render: &dyn Fn() -> String, mut stream: TcpStream) -> std::io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(250)))?;
-    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(std::io::Read::take(stream.try_clone()?, SCRAPE_HEAD_MAX));
     let mut line = String::new();
+    let mut request_line = String::new();
     loop {
         line.clear();
         match reader.read_line(&mut line) {
-            // blank line = end of an HTTP request head; EOF or timeout =
-            // a raw-TCP scraper that sent nothing — answer either way
+            // blank line = end of an HTTP request head; EOF, timeout or
+            // the head cap = a raw-TCP scraper — answer either way
             Ok(0) => break,
             Ok(_) if line == "\r\n" || line == "\n" => break,
-            Ok(_) => {}
+            Ok(_) => {
+                if request_line.is_empty() {
+                    request_line = line.trim_end().to_string();
+                }
+            }
             Err(_) => break,
         }
+    }
+    // "GET /path HTTP/1.x" → route on the path (query string ignored);
+    // anything that does not parse as an HTTP request line is treated as
+    // a raw scrape and served the exposition
+    let mut parts = request_line.split_whitespace();
+    let not_found = match (parts.next(), parts.next(), parts.next()) {
+        (Some(_method), Some(target), Some(proto)) if proto.starts_with("HTTP/") => {
+            target.split('?').next().unwrap_or(target) != "/metrics"
+        }
+        _ => false,
+    };
+    if not_found {
+        let body = "not found — scrape /metrics\n";
+        let head = format!(
+            "HTTP/1.0 404 Not Found\r\nContent-Type: text/plain\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        return stream.flush();
     }
     let body = render();
     let head = format!(
@@ -471,6 +505,20 @@ fn span_value(m: &crate::coordinator::CoordinatorMetrics, s: &crate::obs::Span) 
     ])
 }
 
+/// Optional strictly-positive count field on a command (`"n"`, `"k"`).
+/// Absent → `None`; present must be a positive integer — zero and
+/// non-numeric values are client bugs and get a `bad_request`, never a
+/// silent default (the PR 6 no-silent-defaults rule).
+fn positive_count(req: &Value, key: &str) -> Result<Option<usize>, ApiError> {
+    match v1::field_u64(req, key)? {
+        None => Ok(None),
+        Some(0) => Err(ApiError::bad_request(format!(
+            "{key} must be a positive integer, got 0"
+        ))),
+        Some(n) => Ok(Some(n as usize)),
+    }
+}
+
 /// Handle a `{"cmd": ...}` line. Every error carries a stable `code`.
 pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
     let cmd = match req.get("cmd").and_then(Value::as_str) {
@@ -549,10 +597,11 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
             ("text", json::s(&engine.render_prometheus())),
         ]),
         // the last N completed request spans, newest first (optional "n",
-        // default 32)
+        // default 32; present-but-zero or non-numeric is a bad_request —
+        // "n": 0 is a client bug, not a request for nothing)
         "trace" => {
-            let n = match v1::field_u64(req, "n") {
-                Ok(x) => x.unwrap_or(32) as usize,
+            let n = match positive_count(req, "n") {
+                Ok(n) => n.unwrap_or(32),
                 Err(e) => return v1::encode_error(None, None, &e, 1),
             };
             let m = engine.metrics();
@@ -568,10 +617,16 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
         }
         // the slowest completed spans since startup, slowest first —
         // exemplars that a capacity-bounded ring would have overwritten
+        // (optional "k" caps how many; default all, zero is a bad_request)
         "trace_slow" => {
+            let k = match positive_count(req, "k") {
+                Ok(k) => k.unwrap_or(usize::MAX),
+                Err(e) => return v1::encode_error(None, None, &e, 1),
+            };
             let m = engine.metrics();
             let mut spans = Vec::new();
             m.slow.snapshot_into(&mut spans);
+            spans.truncate(k);
             json::obj(vec![
                 ("ok", Value::Bool(true)),
                 (
@@ -580,6 +635,73 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
                 ),
             ])
         }
+        // numerical-health verdicts from the shadow-audit plane: per
+        // (task, variant) audited error vs the manifest MAPE budget, plus
+        // input-drift scores vs the artifact's train_stats stamp
+        "health" => match engine.audit() {
+            None => json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("audit", Value::Bool(false)),
+                (
+                    "reason",
+                    json::s("auditing disabled — serve with --audit-rate > 0"),
+                ),
+            ]),
+            Some(plane) => {
+                use std::sync::atomic::Ordering::Relaxed;
+                let keys: Vec<Value> = plane
+                    .snapshot()
+                    .iter()
+                    .map(|k| {
+                        json::obj(vec![
+                            ("task", json::s(&k.task)),
+                            ("variant", json::s(&k.variant)),
+                            ("samples", json::num(k.samples as f64)),
+                            ("err_p50", json::num(k.err_p50)),
+                            ("err_p99", json::num(k.err_p99)),
+                            ("err_mean", json::num(k.err_mean)),
+                            ("err_ewma", k.ewma.map(json::num).unwrap_or(Value::Null)),
+                            ("budget", json::num(k.budget)),
+                            ("budget_status", json::s(k.budget_status())),
+                            ("breaches", json::num(k.breaches as f64)),
+                            // drift is per-task state observed through this
+                            // key; "disabled" = the artifact carries no
+                            // train_stats stamp to score against
+                            (
+                                "drift",
+                                if k.has_train_stats {
+                                    json::obj(vec![
+                                        ("rows", json::num(k.drift_rows as f64)),
+                                        (
+                                            "score",
+                                            k.drift_score
+                                                .map(json::num)
+                                                .unwrap_or(Value::Null),
+                                        ),
+                                    ])
+                                } else {
+                                    json::s("disabled")
+                                },
+                            ),
+                        ])
+                    })
+                    .collect();
+                json::obj(vec![
+                    ("ok", Value::Bool(true)),
+                    ("audit", Value::Bool(true)),
+                    ("rate", json::num(plane.config.rate)),
+                    ("tol", json::num(plane.config.tol as f64)),
+                    ("backlog", json::num(plane.backlog() as f64)),
+                    ("enqueued", json::num(plane.enqueued.load(Relaxed) as f64)),
+                    ("drops", json::num(plane.drops.load(Relaxed) as f64)),
+                    (
+                        "unsupported",
+                        json::num(plane.unsupported.load(Relaxed) as f64),
+                    ),
+                    ("keys", Value::Arr(keys)),
+                ])
+            }
+        },
         // command errors use the v1 error shape (the version tag is how
         // clients branch); only v0-dialect *infer* replies omit it
         other => v1::encode_error(

@@ -47,6 +47,16 @@ fn main() {
         )
         .opt("quota-rows", "0", "per-client queued-row quota (0 = off)")
         .opt(
+            "audit-rate",
+            "0",
+            "shadow-audit sampling fraction of completed requests in [0, 1] (0 = off)",
+        )
+        .opt(
+            "audit-tol",
+            "1e-6",
+            "dopri5 tolerance for the audit plane's reference re-solves",
+        )
+        .opt(
             "matmul-threads",
             "0",
             "dedicated row-block matmul pool for large gemms (0 = off)",
@@ -113,6 +123,22 @@ fn main() {
     };
     config.slo.shed_high_water_rows = parsed.get_usize("shed-rows");
     config.slo.client_quota_rows = parsed.get_usize("quota-rows");
+    config.audit.rate = parsed.get_f64("audit-rate");
+    if !(0.0..=1.0).contains(&config.audit.rate) {
+        eprintln!(
+            "error: --audit-rate must be in [0, 1], got {}",
+            config.audit.rate
+        );
+        std::process::exit(2);
+    }
+    config.audit.tol = parsed.get_f64("audit-tol") as f32;
+    if !(config.audit.tol.is_finite() && config.audit.tol > 0.0) {
+        eprintln!(
+            "error: --audit-tol must be a positive number, got {}",
+            config.audit.tol
+        );
+        std::process::exit(2);
+    }
 
     let result = match cmd.as_str() {
         "tasks" => cmd_tasks(&config),

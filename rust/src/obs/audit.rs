@@ -1,0 +1,574 @@
+//! Shadow-audit sampling: live accuracy measurement for served variants.
+//!
+//! The manifest stamps each variant with a *static* `mape` measured at
+//! export time; this module turns that into a **live error budget**. The
+//! engine samples a configurable fraction of completed requests — the
+//! sampling decision is a lock-free counter hash, allocation-free and
+//! pinned by `tests/alloc_free.rs` — and copies `(input, served output)`
+//! into a bounded drop-oldest queue. A dedicated audit worker then
+//! re-solves each sample against the task's vector field with tight-tol
+//! `dopri5_ws` in its own [`RkWorkspace`] (never the dispatch workers'),
+//! and records:
+//!
+//! * relative terminal error into a per-(task, variant) log-bucket error
+//!   histogram ([`LatencyHistogram`] reused at nano-relative-error = "ppb"
+//!   scale) + an EWMA checked against the manifest `mape` budget —
+//!   a *sustained* breach (EWMA > `breach_factor × mape` for
+//!   `breach_streak` consecutive samples) increments the
+//!   `audit_budget_breach` counter;
+//! * the input states into a per-key [`DriftSketch`], scored against the
+//!   manifest's `train_stats` stamp (absent ⇒ drift disabled, loudly).
+//!
+//! Dispatch never blocks on any of this: `offer` uses `try_lock` and a
+//! drop-oldest policy, and every drop is counted.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::obs::drift::{DriftSketch, TrainStats};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::native::NativeModel;
+use crate::solvers::{dopri5_ws, AdaptiveOpts, RkWorkspace};
+use crate::tensor::Tensor;
+use crate::util::stats::LatencyHistogram;
+
+/// Relative error is recorded into the log-bucket histogram in units of
+/// 1e-9 ("ppb"): `record(err × 1e9 µs)`, read back via
+/// `percentile_us(q) × 1e-9`. The histogram's 40 log₂ buckets then span
+/// relative errors ~1e-9 ..= ~1e3 — far beyond both ends of any plausible
+/// budget.
+pub const ERR_SCALE: f64 = 1e9;
+
+/// Audit-plane configuration, carried on
+/// [`EngineConfig`](crate::coordinator::engine::EngineConfig) and set from
+/// `hypersolverd serve --audit-rate R --audit-tol T`.
+#[derive(Clone, Debug)]
+pub struct AuditConfig {
+    /// fraction of completed requests to audit (0.0 disables the plane)
+    pub rate: f64,
+    /// reference dopri5 tolerance for the re-solve
+    pub tol: f32,
+    /// bounded sample queue depth (drop-oldest beyond this)
+    pub queue_cap: usize,
+    /// EWMA smoothing factor for the measured error
+    pub ewma_alpha: f64,
+    /// budget headroom: breach condition is `ewma > breach_factor × mape`
+    pub breach_factor: f64,
+    /// consecutive breaching samples before the breach counter increments
+    pub breach_streak: u32,
+    /// sampler hash seed (same seed + request stream ⇒ same decisions)
+    pub seed: u64,
+}
+
+impl Default for AuditConfig {
+    fn default() -> Self {
+        AuditConfig {
+            rate: 0.0,
+            tol: 1e-6,
+            queue_cap: 256,
+            ewma_alpha: 0.2,
+            breach_factor: 2.0,
+            breach_streak: 4,
+            seed: 0x5EED_A0D1,
+        }
+    }
+}
+
+/// splitmix64 finalizer: decorrelates the sequential sample counter.
+#[inline]
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// The sampling decision: a counter-indexed hash against a rate threshold.
+/// Lock-free, allocation-free (pinned in `tests/alloc_free.rs`) and
+/// deterministic — decision `i` depends only on `(seed, i)`, so the same
+/// seed over the same request stream audits the same requests.
+pub struct AuditSampler {
+    seed: u64,
+    /// `rate` mapped onto u64 range; 0 ⇒ never, `u64::MAX` ⇒ always
+    threshold: u64,
+    counter: AtomicU64,
+}
+
+impl AuditSampler {
+    pub fn new(rate: f64, seed: u64) -> AuditSampler {
+        let clamped = rate.clamp(0.0, 1.0);
+        // float→int casts saturate, so rate 1.0 lands exactly on u64::MAX
+        let threshold = (clamped * u64::MAX as f64) as u64;
+        AuditSampler {
+            seed,
+            threshold,
+            counter: AtomicU64::new(0),
+        }
+    }
+
+    /// Should this completed request be audited? Hot-path safe.
+    #[inline]
+    pub fn decide(&self) -> bool {
+        if self.threshold == 0 {
+            return false;
+        }
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        self.threshold == u64::MAX
+            || mix(self.seed ^ n.wrapping_mul(0x9e37_79b9_7f4a_7c15)) < self.threshold
+    }
+
+    /// decisions taken so far (sampled or not)
+    pub fn decisions(&self) -> u64 {
+        self.counter.load(Ordering::Relaxed)
+    }
+}
+
+/// One sampled request: the served (input, output) pair plus the interned
+/// (task, variant) key it ran under.
+#[derive(Clone, Debug)]
+pub struct AuditSample {
+    /// interned key from `CoordinatorMetrics::stage_key`
+    pub key: u32,
+    pub rows: usize,
+    pub dims: usize,
+    /// request input block, row-major `rows × dims`
+    pub input: Vec<f32>,
+    /// served output, row-major (same layout when the task solves in
+    /// state space; anything else is counted `unsupported`)
+    pub served: Vec<f32>,
+}
+
+/// Mutable per-key audit state the worker owns.
+struct KeyLive {
+    ewma: Option<f64>,
+    streak: u32,
+    drift: DriftSketch,
+}
+
+/// Per-(task, variant) audit ledger.
+pub struct KeyAudit {
+    pub task: String,
+    pub variant: String,
+    /// the manifest `mape` stamp this key is held against
+    pub budget: f64,
+    train: Option<TrainStats>,
+    /// measured relative error, log-bucketed at [`ERR_SCALE`]
+    pub err: LatencyHistogram,
+    pub samples: AtomicU64,
+    pub breaches: AtomicU64,
+    live: Mutex<KeyLive>,
+}
+
+impl KeyAudit {
+    fn new(task: String, variant: String, budget: f64, dims: usize, train: Option<TrainStats>) -> KeyAudit {
+        KeyAudit {
+            task,
+            variant,
+            budget,
+            train,
+            err: LatencyHistogram::new(),
+            samples: AtomicU64::new(0),
+            breaches: AtomicU64::new(0),
+            live: Mutex::new(KeyLive {
+                ewma: None,
+                streak: 0,
+                drift: DriftSketch::new(dims),
+            }),
+        }
+    }
+}
+
+/// Read-side snapshot of one key, consumed by `cmd:"health"` and the
+/// Prometheus render.
+#[derive(Clone, Debug)]
+pub struct KeySnapshot {
+    pub task: String,
+    pub variant: String,
+    pub samples: u64,
+    pub err_p50: f64,
+    pub err_p99: f64,
+    pub err_mean: f64,
+    pub ewma: Option<f64>,
+    pub budget: f64,
+    pub breaches: u64,
+    pub has_train_stats: bool,
+    pub drift_rows: u64,
+    pub drift_score: Option<f64>,
+}
+
+impl KeySnapshot {
+    /// `"ok"` / `"breach"` / `"no_samples"` — the health verdict string.
+    pub fn budget_status(&self) -> &'static str {
+        match self.ewma {
+            None => "no_samples",
+            Some(_) if self.breaches > 0 => "breach",
+            Some(e) if e > self.budget => "over_budget",
+            Some(_) => "ok",
+        }
+    }
+}
+
+/// Worker-owned solve state: one reference workspace + cached models.
+struct WorkerState {
+    ws: RkWorkspace,
+    models: BTreeMap<String, NativeModel>,
+}
+
+/// The audit plane: bounded sample queue + per-key ledgers + the worker's
+/// reference-solve state. Shared `Arc` between the engine (producer), the
+/// audit worker (consumer) and the read surfaces.
+pub struct AuditPlane {
+    pub config: AuditConfig,
+    pub sampler: AuditSampler,
+    queue: Mutex<VecDeque<AuditSample>>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// samples lost to a full queue or a contended offer
+    pub drops: AtomicU64,
+    /// samples accepted into the queue
+    pub enqueued: AtomicU64,
+    /// samples the worker could not re-solve (image readouts, stale keys…)
+    pub unsupported: AtomicU64,
+    keys: Mutex<BTreeMap<u32, KeyAudit>>,
+    worker: Mutex<WorkerState>,
+}
+
+impl AuditPlane {
+    pub fn new(config: AuditConfig) -> AuditPlane {
+        let sampler = AuditSampler::new(config.rate, config.seed);
+        AuditPlane {
+            sampler,
+            queue: Mutex::new(VecDeque::with_capacity(config.queue_cap.max(1))),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            drops: AtomicU64::new(0),
+            enqueued: AtomicU64::new(0),
+            unsupported: AtomicU64::new(0),
+            keys: Mutex::new(BTreeMap::new()),
+            worker: Mutex::new(WorkerState {
+                ws: RkWorkspace::new(),
+                models: BTreeMap::new(),
+            }),
+            config,
+        }
+    }
+
+    /// Hand a sampled request to the plane. Never blocks dispatch: a
+    /// contended queue lock or a full queue costs a drop counter tick (the
+    /// full case drops the *oldest* sample so the queue tracks recent
+    /// traffic), nothing else.
+    pub fn offer(&self, sample: AuditSample) {
+        let Ok(mut q) = self.queue.try_lock() else {
+            self.drops.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        if q.len() >= self.config.queue_cap.max(1) {
+            q.pop_front();
+            self.drops.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(sample);
+        self.enqueued.fetch_add(1, Ordering::Relaxed);
+        drop(q);
+        self.wake.notify_one();
+    }
+
+    /// Ask the worker to exit; `Engine::drop` pairs this with a join.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.wake.notify_all();
+    }
+
+    pub fn is_shut_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Worker loop body: block (with a timeout so shutdown is prompt) until
+    /// samples arrive, then drain them. `resolve` maps an interned key back
+    /// to its (task, variant) names — the engine passes
+    /// `CoordinatorMetrics::key_name`.
+    pub fn run_worker<F: Fn(u32) -> Option<(String, String)>>(
+        &self,
+        manifest: &Manifest,
+        resolve: F,
+    ) {
+        while !self.is_shut_down() {
+            let sample = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if self.is_shut_down() {
+                        return;
+                    }
+                    if let Some(s) = q.pop_front() {
+                        break s;
+                    }
+                    let (guard, _) = self
+                        .wake
+                        .wait_timeout(q, Duration::from_millis(50))
+                        .unwrap();
+                    q = guard;
+                }
+            };
+            self.process_sample(manifest, &resolve, sample);
+        }
+    }
+
+    /// Synchronously drain everything queued right now; returns how many
+    /// samples were processed. Tests and benches call this (via
+    /// `Engine::audit_flush`) instead of racing the worker thread.
+    pub fn process_pending<F: Fn(u32) -> Option<(String, String)>>(
+        &self,
+        manifest: &Manifest,
+        resolve: F,
+    ) -> usize {
+        let mut done = 0;
+        loop {
+            let Some(sample) = self.queue.lock().unwrap().pop_front() else {
+                return done;
+            };
+            self.process_sample(manifest, &resolve, sample);
+            done += 1;
+        }
+    }
+
+    /// Re-solve one sample at the reference tolerance and fold the result
+    /// into the key's ledger.
+    fn process_sample<F: Fn(u32) -> Option<(String, String)>>(
+        &self,
+        manifest: &Manifest,
+        resolve: &F,
+        sample: AuditSample,
+    ) {
+        let Some((task_name, variant_name)) = resolve(sample.key) else {
+            self.unsupported.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let Some(task) = manifest.tasks.get(&task_name) else {
+            self.unsupported.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        // The reference solve integrates the raw state; image tasks serve
+        // through learned augment/readout maps, so their (input, output)
+        // pairs are not comparable in state space — counted, not guessed.
+        let state_dims: usize = task.state_shape.iter().skip(1).product();
+        if task.kind == "image"
+            || sample.dims != state_dims.max(1)
+            || sample.rows == 0
+            || sample.input.len() != sample.rows * sample.dims
+            || sample.served.len() != sample.input.len()
+        {
+            self.unsupported.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let budget = task
+            .variant(&variant_name)
+            .map(|v| v.mape)
+            .unwrap_or(f64::INFINITY);
+
+        let err = {
+            let mut w = self.worker.lock().unwrap();
+            let WorkerState { ws, models } = &mut *w;
+            if !models.contains_key(&task_name) {
+                match NativeModel::load(manifest, task) {
+                    Ok(m) => {
+                        models.insert(task_name.clone(), m);
+                    }
+                    Err(e) => {
+                        crate::log_warn!("audit: cannot load model for {task_name}: {e}");
+                        self.unsupported.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                }
+            }
+            let model = &models[&task_name];
+            let z0 = match Tensor::new(&[sample.rows, sample.dims], sample.input.clone()) {
+                Ok(t) => t,
+                Err(_) => {
+                    self.unsupported.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            };
+            let opts = AdaptiveOpts::with_tol(self.config.tol);
+            match dopri5_ws(model.field(), &z0, task.s_span, &opts, ws) {
+                Ok(r) => relative_error(&sample.served, r.z.data(), sample.dims),
+                Err(e) => {
+                    crate::log_warn!("audit: reference solve failed for {task_name}: {e}");
+                    self.unsupported.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+        };
+        // a non-finite relative error means the served output (or the
+        // reference) went NaN/inf — the worst possible health event. Clamp
+        // to a huge finite error so it saturates the top histogram bucket
+        // and trips the budget machinery, instead of poisoning the EWMA.
+        let err = if err.is_finite() { err } else { 1e12 };
+
+        let mut keys = self.keys.lock().unwrap();
+        let entry = keys.entry(sample.key).or_insert_with(|| {
+            if task.train_stats.is_none() {
+                crate::log_warn!(
+                    "audit: task {task_name} has no train_stats stamp; drift reporting \
+                     disabled for {task_name}/{variant_name} (re-export with a current \
+                     hypertrain/hyperbench to enable)"
+                );
+            }
+            KeyAudit::new(
+                task_name.clone(),
+                variant_name.clone(),
+                budget,
+                sample.dims,
+                task.train_stats.clone(),
+            )
+        });
+        entry.samples.fetch_add(1, Ordering::Relaxed);
+        entry.err.record(Duration::from_micros(
+            ((err * ERR_SCALE).round() as u64).max(1),
+        ));
+        let mut live = entry.live.lock().unwrap();
+        let alpha = self.config.ewma_alpha.clamp(0.0, 1.0);
+        let ewma = match live.ewma {
+            Some(prev) => alpha * err + (1.0 - alpha) * prev,
+            None => err,
+        };
+        live.ewma = Some(ewma);
+        if ewma > self.config.breach_factor * entry.budget {
+            live.streak += 1;
+            if live.streak >= self.config.breach_streak.max(1) {
+                entry.breaches.fetch_add(1, Ordering::Relaxed);
+                live.streak = 0;
+            }
+        } else {
+            live.streak = 0;
+        }
+        for row in sample.input.chunks_exact(sample.dims) {
+            live.drift.observe_row(row);
+        }
+    }
+
+    /// Snapshot every key's ledger, sorted by (task, variant) for a
+    /// deterministic render order.
+    pub fn snapshot(&self) -> Vec<KeySnapshot> {
+        let keys = self.keys.lock().unwrap();
+        let mut out: Vec<KeySnapshot> = keys
+            .values()
+            .map(|k| {
+                let live = k.live.lock().unwrap();
+                KeySnapshot {
+                    task: k.task.clone(),
+                    variant: k.variant.clone(),
+                    samples: k.samples.load(Ordering::Relaxed),
+                    err_p50: k.err.percentile_us(50.0) / ERR_SCALE,
+                    err_p99: k.err.percentile_us(99.0) / ERR_SCALE,
+                    err_mean: k.err.mean_us() / ERR_SCALE,
+                    ewma: live.ewma,
+                    budget: k.budget,
+                    breaches: k.breaches.load(Ordering::Relaxed),
+                    has_train_stats: k.train.is_some(),
+                    drift_rows: live.drift.count(),
+                    drift_score: k.train.as_ref().and_then(|t| live.drift.score(t)),
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.task, &a.variant).cmp(&(&b.task, &b.variant)));
+        out
+    }
+
+    /// queued-but-unprocessed samples (test/bench introspection)
+    pub fn backlog(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+fn relative_error(served: &[f32], reference: &[f32], dims: usize) -> f64 {
+    const EPS: f64 = 1e-12;
+    let mut total = 0.0;
+    let mut rows = 0usize;
+    for (s_row, r_row) in served.chunks_exact(dims).zip(reference.chunks_exact(dims)) {
+        let mut diff2 = 0.0f64;
+        let mut ref2 = 0.0f64;
+        for (s, r) in s_row.iter().zip(r_row) {
+            let d = (*s as f64) - (*r as f64);
+            diff2 += d * d;
+            ref2 += (*r as f64) * (*r as f64);
+        }
+        total += diff2.sqrt() / (ref2.sqrt() + EPS);
+        rows += 1;
+    }
+    if rows == 0 {
+        0.0
+    } else {
+        total / rows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_is_seed_deterministic() {
+        let a = AuditSampler::new(0.25, 42);
+        let b = AuditSampler::new(0.25, 42);
+        let da: Vec<bool> = (0..512).map(|_| a.decide()).collect();
+        let db: Vec<bool> = (0..512).map(|_| b.decide()).collect();
+        assert_eq!(da, db, "same seed + stream must sample the same indices");
+        let c = AuditSampler::new(0.25, 43);
+        let dc: Vec<bool> = (0..512).map(|_| c.decide()).collect();
+        assert_ne!(da, dc, "a different seed should pick a different subset");
+        assert_eq!(a.decisions(), 512);
+    }
+
+    #[test]
+    fn sampler_rate_endpoints_and_proportion() {
+        let off = AuditSampler::new(0.0, 7);
+        assert!((0..256).all(|_| !off.decide()));
+        assert_eq!(off.decisions(), 0, "rate 0 takes no counter ticks");
+        let on = AuditSampler::new(1.0, 7);
+        assert!((0..256).all(|_| on.decide()));
+        let half = AuditSampler::new(0.5, 7);
+        let hits = (0..4096).filter(|_| half.decide()).count();
+        assert!(
+            (1500..=2600).contains(&hits),
+            "rate 0.5 sampled {hits}/4096"
+        );
+    }
+
+    #[test]
+    fn offer_is_bounded_and_counts_drops() {
+        let plane = AuditPlane::new(AuditConfig {
+            rate: 1.0,
+            queue_cap: 4,
+            ..AuditConfig::default()
+        });
+        let mk = |i: usize| AuditSample {
+            key: 0,
+            rows: 1,
+            dims: 2,
+            input: vec![i as f32, 0.0],
+            served: vec![0.0, 0.0],
+        };
+        for i in 0..10 {
+            plane.offer(mk(i));
+        }
+        assert_eq!(plane.backlog(), 4, "queue stays bounded");
+        assert_eq!(plane.drops.load(Ordering::Relaxed), 6);
+        assert_eq!(plane.enqueued.load(Ordering::Relaxed), 10);
+        // drop-oldest: the survivors are the newest four
+        let q = plane.queue.lock().unwrap();
+        let heads: Vec<f32> = q.iter().map(|s| s.input[0]).collect();
+        assert_eq!(heads, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn relative_error_is_zero_on_match_and_scales() {
+        let r = [1.0f32, 2.0, 3.0, 4.0];
+        assert!(relative_error(&r, &r, 2) < 1e-12);
+        let served = [1.1f32, 2.0, 3.0, 4.0];
+        let e = relative_error(&served, &r, 2);
+        assert!(e > 0.01 && e < 0.05, "got {e}");
+    }
+}

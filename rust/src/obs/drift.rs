@@ -1,0 +1,369 @@
+//! Input-drift detection: streaming sketches of request state
+//! distributions, compared against the training-distribution stamp.
+//!
+//! The residual fit (PAPER.md §3, eq. 7–8) only bounds hypersolver error on
+//! the *training* state distribution; off-distribution inputs silently
+//! degrade. This module gives the serving plane a cheap way to notice:
+//!
+//! * [`TrainStats`] — a compact stamp of the training state distribution
+//!   (per-dim mean/variance + a log-magnitude histogram) that the exporters
+//!   (`hypertrain`, `write_sweep_artifacts`) embed in the manifest under a
+//!   task's `train_stats` field. Absent ⇒ drift reporting is disabled for
+//!   that task, loudly.
+//! * [`DriftSketch`] — the live side: per-dim Welford mean/variance plus the
+//!   same magnitude histogram, updated per audited request row by the audit
+//!   worker (off the dispatch hot path).
+//! * [`DriftSketch::score`] — a scalar divergence between the two, exposed
+//!   as the per-(task, variant) `hypersolvers_drift_score` gauge.
+
+use crate::util::json::{self, Value};
+use crate::{Error, Result};
+
+/// Log₂-magnitude histogram resolution: bucket `i` covers
+/// `|x| ∈ [2^(i-16), 2^(i-15))`, clamped at both ends, so the sketch spans
+/// `2^-16 ..= 2^16` — comfortably beyond any sane normalized model input.
+/// Zeros land in bucket 0.
+pub const MAG_BUCKETS: usize = 32;
+
+/// Bucket index for `|x|` in the magnitude histogram.
+#[inline]
+pub fn mag_bucket(x: f32) -> usize {
+    let a = x.abs();
+    if !(a.is_finite()) || a < 1.5258789e-5 {
+        // below 2^-16 (or NaN/inf, which the strict loaders reject upstream)
+        return 0;
+    }
+    let e = a.log2().floor() as i32 + 16;
+    e.clamp(0, MAG_BUCKETS as i32 - 1) as usize
+}
+
+/// Training-distribution stamp: what the hypersolver's residual loss
+/// actually saw. Serialized into the manifest (`train_stats`) by the
+/// exporters; strict-parsed back by [`TrainStats::from_json`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainStats {
+    /// number of training states summarized
+    pub count: u64,
+    /// per-dim mean
+    pub mean: Vec<f64>,
+    /// per-dim population variance
+    pub var: Vec<f64>,
+    /// log₂-magnitude histogram over all coordinates ([`MAG_BUCKETS`] wide)
+    pub mag: Vec<u64>,
+}
+
+impl TrainStats {
+    /// Summarize `rows × dims` training states (row-major), e.g. the batch
+    /// the exporter sampled from the training state distribution.
+    pub fn from_rows(data: &[f32], dims: usize) -> Result<TrainStats> {
+        if dims == 0 || data.is_empty() || data.len() % dims != 0 {
+            return Err(Error::Other(format!(
+                "train_stats: need non-empty row-major data divisible by dims (len {} dims {dims})",
+                data.len()
+            )));
+        }
+        let rows = data.len() / dims;
+        let mut mean = vec![0.0f64; dims];
+        let mut m2 = vec![0.0f64; dims];
+        let mut mag = vec![0u64; MAG_BUCKETS];
+        for (r, row) in data.chunks_exact(dims).enumerate() {
+            let n = (r + 1) as f64;
+            for (d, &x) in row.iter().enumerate() {
+                if !x.is_finite() {
+                    return Err(Error::Other(format!(
+                        "train_stats: non-finite state coordinate at row {r} dim {d}"
+                    )));
+                }
+                let xf = x as f64;
+                let delta = xf - mean[d];
+                mean[d] += delta / n;
+                m2[d] += delta * (xf - mean[d]);
+                mag[mag_bucket(x)] += 1;
+            }
+        }
+        let var = m2.iter().map(|&s| s / rows as f64).collect();
+        Ok(TrainStats {
+            count: rows as u64,
+            mean,
+            var,
+            mag,
+        })
+    }
+
+    /// Manifest serialization (see rust/README.md §"Numerical health" for
+    /// the schema).
+    pub fn to_json(&self) -> Value {
+        let nums = |xs: &[f64]| Value::Arr(xs.iter().map(|&x| json::num(x)).collect());
+        json::obj(vec![
+            ("count", json::num(self.count as f64)),
+            ("mean", nums(&self.mean)),
+            ("var", nums(&self.var)),
+            (
+                "mag",
+                Value::Arr(self.mag.iter().map(|&c| json::num(c as f64)).collect()),
+            ),
+        ])
+    }
+
+    /// Strict parse: a *present* `train_stats` that is malformed is a hard
+    /// manifest error (PR 6 convention: never silently default), while an
+    /// absent one merely disables drift reporting.
+    pub fn from_json(v: &Value) -> Result<TrainStats> {
+        let uint = |v: &Value, what: &str| -> Result<u64> {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| Error::Manifest(format!("train_stats: {what} must be a number")))?;
+            if !x.is_finite() || x < 0.0 || x.fract() != 0.0 || x > 9.007_199_254_740_992e15 {
+                return Err(Error::Manifest(format!(
+                    "train_stats: {what} must be a non-negative integer, got {x}"
+                )));
+            }
+            Ok(x as u64)
+        };
+        let count = uint(v.req("count")?, "count")?;
+        if count == 0 {
+            return Err(Error::Manifest("train_stats: count must be > 0".into()));
+        }
+        let floats = |key: &str| -> Result<Vec<f64>> {
+            let arr = v
+                .req(key)?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest(format!("train_stats: {key} must be an array")))?;
+            arr.iter()
+                .map(|x| {
+                    x.as_f64().filter(|f| f.is_finite()).ok_or_else(|| {
+                        Error::Manifest(format!("train_stats: {key} entries must be finite numbers"))
+                    })
+                })
+                .collect()
+        };
+        let mean = floats("mean")?;
+        let var = floats("var")?;
+        if mean.is_empty() || mean.len() != var.len() {
+            return Err(Error::Manifest(format!(
+                "train_stats: mean/var must be same-length non-empty arrays ({} vs {})",
+                mean.len(),
+                var.len()
+            )));
+        }
+        if var.iter().any(|&x| x < 0.0) {
+            return Err(Error::Manifest("train_stats: var entries must be >= 0".into()));
+        }
+        let mag_arr = v
+            .req("mag")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("train_stats: mag must be an array".into()))?;
+        if mag_arr.len() != MAG_BUCKETS {
+            return Err(Error::Manifest(format!(
+                "train_stats: mag must have {MAG_BUCKETS} buckets, got {}",
+                mag_arr.len()
+            )));
+        }
+        let mag = mag_arr
+            .iter()
+            .map(|x| uint(x, "mag bucket"))
+            .collect::<Result<Vec<u64>>>()?;
+        Ok(TrainStats {
+            count,
+            mean,
+            var,
+            mag,
+        })
+    }
+}
+
+/// Live-side streaming sketch: per-dim Welford mean/variance + magnitude
+/// histogram of the request states actually hitting a (task, variant)
+/// queue. Single-writer (the audit worker owns it behind the key's lock);
+/// reads snapshot via [`DriftSketch::score`].
+#[derive(Clone, Debug, Default)]
+pub struct DriftSketch {
+    count: u64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+    mag: Vec<u64>,
+}
+
+impl DriftSketch {
+    pub fn new(dims: usize) -> DriftSketch {
+        DriftSketch {
+            count: 0,
+            mean: vec![0.0; dims],
+            m2: vec![0.0; dims],
+            mag: vec![0; MAG_BUCKETS],
+        }
+    }
+
+    /// rows observed so far
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Fold one state row in (Welford update per dim + magnitude buckets).
+    /// Rows whose width disagrees with the sketch are ignored — the caller
+    /// (audit worker) screens dims before observing.
+    pub fn observe_row(&mut self, row: &[f32]) {
+        if row.len() != self.mean.len() {
+            return;
+        }
+        self.count += 1;
+        let n = self.count as f64;
+        for (d, &x) in row.iter().enumerate() {
+            let xf = x as f64;
+            let delta = xf - self.mean[d];
+            self.mean[d] += delta / n;
+            self.m2[d] += delta * (xf - self.mean[d]);
+            self.mag[mag_bucket(x)] += 1;
+        }
+    }
+
+    /// Scalar divergence vs the training stamp: mean-shift term (per-dim
+    /// |Δmean| in training-σ units) + variance-ratio term (|ln σ²-ratio|)
+    /// + total-variation distance of the normalized magnitude histograms,
+    /// averaged where appropriate. ≈0 in-distribution; grows without bound
+    /// as the live states leave the training box. `None` until at least
+    /// one row has been observed or if dims disagree with the stamp.
+    pub fn score(&self, train: &TrainStats) -> Option<f64> {
+        if self.count == 0 || self.mean.len() != train.mean.len() {
+            return None;
+        }
+        const EPS: f64 = 1e-9;
+        let dims = self.mean.len() as f64;
+        let mut shift = 0.0;
+        let mut spread = 0.0;
+        for d in 0..self.mean.len() {
+            let live_var = self.m2[d] / self.count as f64;
+            shift += (self.mean[d] - train.mean[d]).abs() / (train.var[d] + EPS).sqrt();
+            spread += ((live_var + EPS) / (train.var[d] + EPS)).ln().abs();
+        }
+        let live_total: u64 = self.mag.iter().sum();
+        let train_total: u64 = train.mag.iter().sum();
+        let mut tv = 0.0;
+        if live_total > 0 && train_total > 0 {
+            for b in 0..MAG_BUCKETS {
+                let p = self.mag[b] as f64 / live_total as f64;
+                let q = train.mag[b] as f64 / train_total as f64;
+                tv += (p - q).abs();
+            }
+            tv *= 0.5;
+        }
+        Some(shift / dims + spread / dims + tv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn box_rows(n: usize, dims: usize, lo: f32, hi: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * dims)
+            .map(|_| rng.uniform_in(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    #[test]
+    fn mag_buckets_cover_the_range() {
+        assert_eq!(mag_bucket(0.0), 0);
+        assert_eq!(mag_bucket(1e-30), 0);
+        assert_eq!(mag_bucket(1.0), 16);
+        assert_eq!(mag_bucket(-1.0), 16);
+        assert_eq!(mag_bucket(2.5), 17);
+        assert_eq!(mag_bucket(1e30), MAG_BUCKETS - 1);
+    }
+
+    #[test]
+    fn from_rows_matches_direct_moments() {
+        let data = [1.0f32, 10.0, 3.0, 10.0, 5.0, 10.0];
+        let st = TrainStats::from_rows(&data, 2).unwrap();
+        assert_eq!(st.count, 3);
+        assert!((st.mean[0] - 3.0).abs() < 1e-12);
+        assert!((st.mean[1] - 10.0).abs() < 1e-12);
+        assert!((st.var[0] - 8.0 / 3.0).abs() < 1e-9);
+        assert!(st.var[1].abs() < 1e-12);
+        assert_eq!(st.mag.iter().sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn from_rows_rejects_garbage() {
+        assert!(TrainStats::from_rows(&[], 2).is_err());
+        assert!(TrainStats::from_rows(&[1.0, 2.0, 3.0], 2).is_err());
+        assert!(TrainStats::from_rows(&[1.0, f32::NAN], 2).is_err());
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let st = TrainStats::from_rows(&box_rows(64, 3, -1.5, 1.5, 7), 3).unwrap();
+        let back = TrainStats::from_json(&st.to_json()).unwrap();
+        assert_eq!(st, back);
+    }
+
+    #[test]
+    fn from_json_is_strict() {
+        let good = TrainStats::from_rows(&box_rows(16, 2, -1.0, 1.0, 1), 2)
+            .unwrap()
+            .to_json();
+        let break_field = |key: &str, v: Value| {
+            let mut obj = good.as_obj().unwrap().clone();
+            obj.insert(key.to_string(), v);
+            Value::Obj(obj)
+        };
+        for (bad, needle) in [
+            (break_field("count", json::num(0.0)), "count must be > 0"),
+            (break_field("count", json::s("many")), "must be a number"),
+            (break_field("mean", json::s("oops")), "must be an array"),
+            (
+                break_field("mean", Value::Arr(vec![json::num(f64::NAN)])),
+                "finite",
+            ),
+            (
+                break_field("var", Value::Arr(vec![json::num(1.0)])),
+                "same-length",
+            ),
+            (
+                break_field("mag", Value::Arr(vec![json::num(1.0)])),
+                "buckets",
+            ),
+        ] {
+            let err = TrainStats::from_json(&bad).unwrap_err().to_string();
+            assert!(err.contains(needle), "want {needle:?} in {err:?}");
+        }
+        let mut missing = good.as_obj().unwrap().clone();
+        missing.remove("mag");
+        assert!(TrainStats::from_json(&Value::Obj(missing)).is_err());
+    }
+
+    #[test]
+    fn in_distribution_scores_low_and_shift_scores_high() {
+        let train = TrainStats::from_rows(&box_rows(512, 2, -1.5, 1.5, 11), 2).unwrap();
+        let mut clean = DriftSketch::new(2);
+        for row in box_rows(256, 2, -1.5, 1.5, 99).chunks_exact(2) {
+            clean.observe_row(row);
+        }
+        let clean_score = clean.score(&train).unwrap();
+        assert!(
+            clean_score < 0.5,
+            "in-distribution drift score too high: {clean_score}"
+        );
+
+        let mut shifted = DriftSketch::new(2);
+        for row in box_rows(256, 2, 6.0, 12.0, 99).chunks_exact(2) {
+            shifted.observe_row(row);
+        }
+        let shifted_score = shifted.score(&train).unwrap();
+        assert!(
+            shifted_score > 4.0 * clean_score && shifted_score > 1.0,
+            "shifted workload should dominate: clean {clean_score} shifted {shifted_score}"
+        );
+    }
+
+    #[test]
+    fn score_guards_empty_and_mismatched() {
+        let train = TrainStats::from_rows(&box_rows(8, 2, -1.0, 1.0, 3), 2).unwrap();
+        assert!(DriftSketch::new(2).score(&train).is_none());
+        let mut wrong = DriftSketch::new(3);
+        wrong.observe_row(&[0.1, 0.2, 0.3]);
+        assert!(wrong.score(&train).is_none());
+    }
+}

@@ -35,6 +35,14 @@ fn escape_label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
+/// HELP text escaping per the exposition format: `\` → `\\`, newline →
+/// `\n` (label values additionally escape `"` — [`escape_label`]). A
+/// multi-line help string must not be able to smuggle extra sample lines
+/// into the scrape.
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
 /// Deterministic Prometheus text builder. Families render in call order;
 /// samples render in call order under their family — callers iterate
 /// sorted snapshots, so repeated renders of the same state are
@@ -55,7 +63,7 @@ impl PromText {
         self.out.push_str("# HELP ");
         self.out.push_str(name);
         self.out.push(' ');
-        self.out.push_str(help);
+        self.out.push_str(&escape_help(help));
         self.out.push_str("\n# TYPE ");
         self.out.push_str(name);
         self.out.push(' ');
@@ -102,9 +110,60 @@ impl PromText {
     }
 }
 
+/// Validate one `{k="v",...}` label block: well-formed pairs, label-name
+/// charset, and properly escaped values — an unescaped `"` inside a value
+/// (a hostile task/variant name leaking through un-escaped) is exactly
+/// the corruption this exists to catch before Prometheus does.
+fn validate_labels(block: &str) -> Result<(), String> {
+    let inner = block
+        .strip_prefix('{')
+        .and_then(|b| b.strip_suffix('}'))
+        .ok_or_else(|| "malformed label block".to_string())?;
+    if inner.is_empty() {
+        return Ok(());
+    }
+    let mut chars = inner.chars().peekable();
+    loop {
+        let mut label = String::new();
+        while let Some(&c) = chars.peek() {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                label.push(c);
+                chars.next();
+            } else {
+                break;
+            }
+        }
+        if label.is_empty() {
+            return Err("empty label name".to_string());
+        }
+        if chars.next() != Some('=') || chars.next() != Some('"') {
+            return Err(format!("label {label}: expected =\" after name"));
+        }
+        loop {
+            match chars.next() {
+                None => return Err(format!("label {label}: unterminated value")),
+                Some('"') => break,
+                Some('\\') => match chars.next() {
+                    Some('\\' | '"' | 'n') => {}
+                    other => {
+                        return Err(format!("label {label}: invalid escape {other:?}"))
+                    }
+                },
+                Some(_) => {}
+            }
+        }
+        match chars.next() {
+            None => return Ok(()),
+            Some(',') => continue,
+            Some(c) => return Err(format!("label {label}: junk {c:?} after value")),
+        }
+    }
+}
+
 /// Validate a scraped exposition: non-empty, every sample line parses as
-/// `name[{labels}] value` with a finite value, and every family in
-/// `required` has at least one sample. Returns the sample count.
+/// `name[{labels}] value` with a well-formed, correctly escaped label
+/// block and a finite value, and every family in `required` has at least
+/// one sample. Returns the sample count.
 pub fn self_check(text: &str, required: &[&str]) -> Result<usize, String> {
     let mut samples = 0usize;
     for (ln, line) in text.lines().enumerate() {
@@ -122,6 +181,10 @@ pub fn self_check(text: &str, required: &[&str]) -> Result<usize, String> {
                 .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
         {
             return Err(format!("line {}: bad metric name: {line:?}", ln + 1));
+        }
+        if head.len() > name.len() {
+            validate_labels(&head[name.len()..])
+                .map_err(|e| format!("line {}: {e}: {line:?}", ln + 1))?;
         }
         let v: f64 = value
             .parse()
@@ -220,6 +283,32 @@ hypersolvers_queue_depth_rows{task=\"cnf_a\",variant=\"euler_k2\"} 3
     }
 
     #[test]
+    fn hostile_variant_names_render_escaped_and_validate() {
+        // task/variant names are operator data: quotes, backslashes and
+        // newlines must escape on the wire (byte-exact golden) and the
+        // escaped form must round-trip the consumer-side validator
+        let mut p = PromText::new();
+        p.family(
+            "hypersolvers_queue_depth_rows",
+            "gauge",
+            "Queued rows\nper queue \\ per key",
+        );
+        p.sample(
+            "hypersolvers_queue_depth_rows",
+            &[("task", "cnf\"quoted\""), ("variant", "euler\\k2\nv2")],
+            1.0,
+        );
+        let got = p.finish();
+        let want = "\
+# HELP hypersolvers_queue_depth_rows Queued rows\\nper queue \\\\ per key
+# TYPE hypersolvers_queue_depth_rows gauge
+hypersolvers_queue_depth_rows{task=\"cnf\\\"quoted\\\"\",variant=\"euler\\\\k2\\nv2\"} 1
+";
+        assert_eq!(got, want);
+        assert!(self_check(&got, &["hypersolvers_queue_depth_rows"]).is_ok());
+    }
+
+    #[test]
     fn self_check_catches_the_failure_modes() {
         assert!(self_check("", &[]).is_err(), "empty");
         assert!(self_check("# HELP only comments\n", &[]).is_err(), "no samples");
@@ -232,5 +321,20 @@ hypersolvers_queue_depth_rows{task=\"cnf_a\",variant=\"euler_k2\"} 3
         );
         let good = "# HELP m help\n# TYPE m counter\nm 3\nm{a=\"b\"} 4\n";
         assert_eq!(self_check(good, &["m"]), Ok(2));
+    }
+
+    #[test]
+    fn self_check_rejects_unescaped_label_output() {
+        // the corruption an un-escaped hostile name would produce
+        assert!(self_check("m{task=\"a\"b\"} 1\n", &[]).is_err(), "raw quote");
+        assert!(self_check("m{task=\"a\\x\"} 1\n", &[]).is_err(), "bad escape");
+        assert!(self_check("m{task=\"open} 1\n", &[]).is_err(), "unterminated");
+        assert!(self_check("m{=\"v\"} 1\n", &[]).is_err(), "empty label name");
+        assert!(self_check("m{task:\"v\"} 1\n", &[]).is_err(), "no equals");
+        assert!(self_check("m{task=\"v\" 1\n", &[]).is_err(), "no close brace");
+        assert!(
+            self_check("m{task=\"a\\\\b\\nc\\\"d\"} 1\n", &[]).is_ok(),
+            "all three legal escapes pass"
+        );
     }
 }

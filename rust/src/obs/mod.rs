@@ -27,6 +27,8 @@
 //! reads the stamp back right after `ExecBackend::execute` returns — no
 //! signature change on the `_ws` solver hot path, and no allocation.
 
+pub mod audit;
+pub mod drift;
 pub mod expo;
 pub mod ring;
 

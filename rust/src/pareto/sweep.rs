@@ -20,6 +20,7 @@ use std::time::Duration;
 use crate::coordinator::{Engine, EngineConfig, Policy, SubmitOptions};
 use crate::metrics::{mape, mean_l2};
 use crate::nn::{CnfModel, FieldNet, HyperMlp};
+use crate::obs::drift::TrainStats;
 use crate::ode::VectorField;
 use crate::pareto::grid::GridConfig;
 use crate::runtime::{BackendKind, Manifest};
@@ -339,6 +340,15 @@ pub fn write_sweep_artifacts(
         ),
         ("delta", json::num(delta as f64)),
         ("hyper_base", json::s(&grid.hyper_base)),
+        // training-distribution stamp for the serving audit plane's drift
+        // detection: the sweep's hypersolver trains on grid box states, so
+        // that is what drift is measured against (obs::drift)
+        ("train_stats", {
+            let mut srng = Rng::new(grid.seed ^ 0x7A57_57A7);
+            let rows = batch.max(512);
+            let states = grid.box_sampler(d).sample_for(field, rows, &mut srng)?;
+            TrainStats::from_rows(states.data(), d)?.to_json()
+        }),
         ("variants", Value::Arr(variants)),
     ]);
 

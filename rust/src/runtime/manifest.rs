@@ -3,6 +3,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::obs::drift::TrainStats;
 use crate::util::json::{self, Value};
 use crate::{Error, Result};
 
@@ -103,6 +104,12 @@ pub struct TaskEntry {
     pub delta: f64,
     pub hyper_base: String,
     pub truth_acc: Option<f64>,
+    /// training-distribution stamp for drift detection
+    /// ([`crate::obs::drift`]); exporters embed it, older manifests lack
+    /// it — absent means drift reporting is disabled for the task (the
+    /// audit plane says so loudly), while a *present but malformed* stamp
+    /// is a hard load error like every other manifest field
+    pub train_stats: Option<TrainStats>,
     pub variants: Vec<Variant>,
     pub data: BTreeMap<String, BlobRef>,
 }
@@ -210,6 +217,12 @@ impl Manifest {
                     delta: tv.req("delta")?.as_f64().unwrap_or(f64::NAN),
                     hyper_base: req_str(tv, "hyper_base")?,
                     truth_acc: tv.get("truth_acc").and_then(Value::as_f64),
+                    train_stats: match tv.get("train_stats") {
+                        None => None,
+                        Some(ts) => Some(TrainStats::from_json(ts).map_err(|e| {
+                            Error::Manifest(format!("task {name}: {e}"))
+                        })?),
+                    },
                     variants,
                     data,
                 },
@@ -405,6 +418,65 @@ mod tests {
             std::fs::write(dir.join("manifest.json"), bad).unwrap();
             let err = Manifest::load(&dir).unwrap_err();
             assert!(err.to_string().contains(needle), "{from}: {err}");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn train_stats_is_optional_but_strict() {
+        // absent: loads fine, drift disabled
+        let dir = write_sample();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.task("cnf_rings").unwrap().train_stats.is_none());
+
+        let with_stats = |stats: &str| {
+            SAMPLE.replace(
+                "\"delta\": 0.03,",
+                &format!("\"delta\": 0.03, \"train_stats\": {stats},"),
+            )
+        };
+        let mag: Vec<String> = (0..32).map(|_| "0".to_string()).collect();
+        let good = with_stats(&format!(
+            "{{\"count\": 4, \"mean\": [0.1, -0.2], \"var\": [1.0, 2.0], \
+             \"mag\": [{}]}}",
+            mag.join(", ")
+        ));
+        let cases: Vec<(String, &str)> = vec![
+            (good.clone(), ""),
+            (
+                good.replace("\"count\": 4", "\"count\": 0"),
+                "count must be > 0",
+            ),
+            (
+                good.replace("\"var\": [1.0, 2.0]", "\"var\": [1.0]"),
+                "same-length",
+            ),
+            (
+                good.replace("\"mean\": [0.1, -0.2]", "\"mean\": \"wide\""),
+                "must be an array",
+            ),
+            (with_stats("{\"count\": 4}"), "missing"),
+        ];
+        for (i, (text, needle)) in cases.iter().enumerate() {
+            let dir = std::env::temp_dir().join(format!(
+                "hsolve_manifest_ts{}_{}",
+                i,
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            assert_ne!(text.as_str(), SAMPLE, "case {i} replacement applied");
+            std::fs::write(dir.join("manifest.json"), text).unwrap();
+            let loaded = Manifest::load(&dir);
+            if needle.is_empty() {
+                let m = loaded.unwrap();
+                let ts = m.task("cnf_rings").unwrap().train_stats.clone().unwrap();
+                assert_eq!(ts.count, 4);
+                assert_eq!(ts.mean, vec![0.1, -0.2]);
+            } else {
+                let err = loaded.unwrap_err().to_string();
+                assert!(err.contains(needle), "case {i}: want {needle:?} in {err:?}");
+                assert!(err.contains("cnf_rings"), "case {i}: error names the task");
+            }
             std::fs::remove_dir_all(&dir).ok();
         }
     }

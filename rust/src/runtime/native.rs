@@ -31,14 +31,16 @@ use crate::{Error, Result};
 pub const DEFAULT_DOPRI5_TOL: f32 = 1e-5;
 
 /// A task's weights, loaded once and shared across dispatch workers.
-enum NativeModel {
+/// `pub(crate)` so the audit plane ([`crate::obs::audit`]) can load the
+/// same weights for its tight-tolerance reference solves.
+pub(crate) enum NativeModel {
     Cnf(CnfModel),
     Tracking(TrackingModel),
     Image(ImageModel),
 }
 
 impl NativeModel {
-    fn load(manifest: &Manifest, task: &TaskEntry) -> Result<NativeModel> {
+    pub(crate) fn load(manifest: &Manifest, task: &TaskEntry) -> Result<NativeModel> {
         let path = manifest.weights_path(task);
         match task.kind.as_str() {
             "cnf" => Ok(NativeModel::Cnf(CnfModel::load(&path)?)),
@@ -51,7 +53,7 @@ impl NativeModel {
         }
     }
 
-    fn field(&self) -> &dyn VectorField {
+    pub(crate) fn field(&self) -> &dyn VectorField {
         match self {
             NativeModel::Cnf(m) => &m.field,
             NativeModel::Tracking(m) => &m.field,

@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::nn::{Act, CnfModel, FieldNet, HyperMlp, Linear, Mlp};
+use crate::obs::drift::TrainStats;
 use crate::ode::VectorField;
 use crate::solvers::{dopri5, odeint_fixed, odeint_hyper, AdaptiveOpts, HyperNet, Tableau};
 use crate::tensor::{Tensor, Workspace};
@@ -437,6 +438,16 @@ pub fn export_trained(
         ),
         ("delta", json::num(report.best_val_loss as f64)),
         ("hyper_base", json::s(&cfg.solver)),
+        // training-distribution stamp: the serving audit plane scores live
+        // input drift against exactly the state distribution the residual
+        // loss saw (see obs::drift); sampled fresh and seeded so re-exports
+        // are reproducible
+        ("train_stats", {
+            let mut srng = Rng::new(cfg.seed ^ 0x7A57_57A7);
+            let stats_rows = export_batch.max(512);
+            let states = cfg.sampler.sample_for(field, stats_rows, &mut srng)?;
+            TrainStats::from_rows(states.data(), d)?.to_json()
+        }),
         ("variants", variants),
     ]);
     // merge into an existing manifest rather than clobbering it — the

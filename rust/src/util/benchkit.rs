@@ -264,6 +264,10 @@ fn entry_f64(v: &Value, key: &str) -> Option<f64> {
     v.get(key).and_then(Value::as_f64)
 }
 
+/// Allowed audit-on / audit-off serving-p50 ratio within one bench entry
+/// (the tentpole's "auditing is effectively free" acceptance bound).
+pub const AUDIT_OVERHEAD_SLACK: f64 = 1.10;
+
 /// Diff the last two entries of every bench stream in a
 /// `BENCH_trajectory.json` array (ordered oldest → newest). Gated today:
 ///
@@ -287,6 +291,10 @@ fn entry_f64(v: &Value, key: &str) -> Option<f64> {
 ///   entry, end-to-end pipelined p50 on the wide workload must be strictly
 ///   faster over the v2 binary frames than over v1 JSON lines
 ///   (`pipelined_big_v1_p50_ms`) — the zero-copy wire path must stay a win;
+/// * `serving_throughput.audit_on_p50_ms` — within the newest entry,
+///   serving p50 with full shadow-audit sampling must stay within
+///   [`AUDIT_OVERHEAD_SLACK`] × the audit-off p50 on the same workload
+///   (`audit_off_p50_ms`) — the audit plane must never tax dispatch;
 /// * `codecbench.v2_decode_mbps` — within the newest entry, v2 request
 ///   decode throughput must strictly exceed `v1_decode_mbps`.
 ///
@@ -365,6 +373,29 @@ pub fn trajectory_gate(entries: &[Value], p50_slack: f64, goodput_drop: f64) -> 
                 if v2 >= v1 {
                     report.regressions.push(format!(
                         "{line} — REGRESSED (v2 frames must strictly beat v1 lines)"
+                    ));
+                } else {
+                    report.checks.push(line);
+                }
+            }
+            // within-entry audit-overhead invariant: shadow auditing at
+            // full sampling must stay effectively free on the serve path
+            // (the decision is lock-free, the copy bounded, the re-solve
+            // off-thread) — audit-on p50 may cost at most 10% over
+            // audit-off on the same workload
+            if let (Some(off), Some(on)) = (
+                entry_f64(latest, "audit_off_p50_ms"),
+                entry_f64(latest, "audit_on_p50_ms"),
+            ) {
+                let line = format!(
+                    "[{name}] audit A/B p50: off {off:.3} ms vs on {on:.3} ms \
+                     (allowed ≤ {:.3})",
+                    off * AUDIT_OVERHEAD_SLACK
+                );
+                if on > off * AUDIT_OVERHEAD_SLACK {
+                    report.regressions.push(format!(
+                        "{line} — REGRESSED (auditing must not slow the serve path \
+                         by more than 10%)"
                     ));
                 } else {
                     report.checks.push(line);
@@ -707,6 +738,33 @@ mod tests {
 
         // entries without the fields gate nothing new
         let plain = json::obj(vec![("bench", json::s("codecbench"))]);
+        assert!(trajectory_gate(&[plain], 1.5, 0.15).passed());
+    }
+
+    #[test]
+    fn trajectory_gate_checks_audit_overhead() {
+        let audited = |off: f64, on: f64| {
+            json::obj(vec![
+                ("bench", json::s("serving_throughput")),
+                ("audit_off_p50_ms", json::num(off)),
+                ("audit_on_p50_ms", json::num(on)),
+            ])
+        };
+        // healthy: auditing costs under the 10% bound
+        let r = trajectory_gate(&[audited(2.0, 2.1)], 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.checks.iter().any(|c| c.contains("audit A/B p50")));
+        // auditing taxing dispatch past the bound fails, even on a first
+        // entry with nothing to diff against
+        let r = trajectory_gate(&[audited(2.0, 2.5)], 1.5, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.regressions[0].contains("auditing must not slow"),
+            "{:?}",
+            r.regressions
+        );
+        // entries without the A/B fields gate nothing new
+        let plain = json::obj(vec![("bench", json::s("serving_throughput"))]);
         assert!(trajectory_gate(&[plain], 1.5, 0.15).passed());
     }
 

@@ -30,6 +30,21 @@ const HYPER_JSON: &str = r#"{
     ]
   }"#;
 
+/// Training-distribution stamp for the synthetic fixtures: a seeded
+/// box-uniform sample over `[-1.5, 1.5]^dims` — the state range every
+/// fixture's bounded trajectories live in — serialized the way the real
+/// exporters stamp it, so engine tests and benches exercise the audit
+/// plane's drift scoring without a training run.
+fn train_stats_json(dims: usize) -> String {
+    let mut rng = crate::util::prng::Rng::new(0x7A57_57A7 ^ dims as u64);
+    let rows: Vec<f32> = (0..256 * dims)
+        .map(|_| rng.uniform_in(-1.5, 1.5) as f32)
+        .collect();
+    let stats = crate::obs::drift::TrainStats::from_rows(&rows, dims)
+        .expect("fixture train_stats");
+    crate::util::json::to_string(&stats.to_json())
+}
+
 fn task_manifest_json(name: &str, batch: usize) -> String {
     format!(
         r#""{name}": {{
@@ -40,6 +55,7 @@ fn task_manifest_json(name: &str, batch: usize) -> String {
       "field_hlo": "{name}_field.hlo.txt",
       "macs": {{"field": 6, "hyper": 12}},
       "delta": 0.01,
+      "train_stats": {train_stats},
       "hyper_base": "heun",
       "variants": [
         {{"name": "euler_k2", "solver": "euler", "k": 2, "hyper": false,
@@ -56,7 +72,8 @@ fn task_manifest_json(name: &str, batch: usize) -> String {
           "mape": 0.0001, "outputs": ["z", "nfe"],
           "in_shape": [{batch}, 2], "out_shape": [{batch}, 2]}}
       ]
-    }}"#
+    }}"#,
+        train_stats = train_stats_json(2),
     )
 }
 
@@ -178,6 +195,7 @@ pub fn write_heavy_native_artifacts(dir: &Path, name: &str, batch: usize) -> Res
       "field_hlo": "{name}_field.hlo.txt",
       "macs": {{"field": {mac_f}, "hyper": 12}},
       "delta": 0.01,
+      "train_stats": {train_stats},
       "hyper_base": "heun",
       "variants": [
         {{"name": "euler_k2", "solver": "euler", "k": 2, "hyper": false,
@@ -191,6 +209,7 @@ pub fn write_heavy_native_artifacts(dir: &Path, name: &str, batch: usize) -> Res
     }}"#,
         m2 = 2 * mac_f,
         m26 = 26 * mac_f,
+        train_stats = train_stats_json(2),
     );
     let weights = format!(
         r#"{{"kind": "cnf", "field": {}, "hyper": {HYPER_JSON}}}"#,
@@ -279,6 +298,7 @@ pub fn write_wide_native_artifacts(
       "field_hlo": "{name}_field.hlo.txt",
       "macs": {{"field": {mac_f}, "hyper": {mac_h}}},
       "delta": 0.01,
+      "train_stats": {train_stats},
       "hyper_base": "heun",
       "variants": [
         {{"name": "euler_k2", "solver": "euler", "k": 2, "hyper": false,
@@ -288,6 +308,7 @@ pub fn write_wide_native_artifacts(
     }}"#,
         mac_h = (2 * dims + 2) * dims,
         m2 = 2 * mac_f,
+        train_stats = train_stats_json(dims),
     );
     let weights = format!(
         r#"{{"kind": "cnf", "field": {}, "hyper": {}}}"#,
@@ -338,6 +359,11 @@ mod tests {
         // the weight files load as a CnfModel and the field has state dim 2
         let model = crate::nn::CnfModel::load(&m.weights_path(a)).unwrap();
         assert_eq!(model.field.state_dim(), 2);
+        // fixtures stamp a training-distribution summary, so engine tests
+        // exercise the audit plane's drift scoring
+        let ts = a.train_stats.as_ref().expect("fixture train_stats");
+        assert_eq!(ts.count, 256);
+        assert_eq!(ts.mean.len(), 2);
     }
 
     #[test]

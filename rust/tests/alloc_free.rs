@@ -289,4 +289,34 @@ fn warm_solver_loops_do_not_touch_the_allocator() {
         trace_allocs, 0,
         "warm tracing path allocated {trace_allocs} times in 16 spans"
     );
+
+    // --- audit sampling decision: exactly 0 allocations ---
+    // The shadow-audit sampler sits on the completion path of EVERY
+    // request (only sampled ones pay the copy); the decide() call itself
+    // is one atomic increment + a splitmix64 mix and must never touch the
+    // allocator, at any rate.
+    use hypersolvers::obs::audit::AuditSampler;
+    let samplers = [
+        AuditSampler::new(0.0, 7),
+        AuditSampler::new(0.25, 7),
+        AuditSampler::new(1.0, 7),
+    ];
+    for s in &samplers {
+        s.decide(); // warm (nothing to warm, but keep windows symmetric)
+    }
+    let before = allocs();
+    let mut sampled = 0u64;
+    for s in &samplers {
+        for _ in 0..256 {
+            if s.decide() {
+                sampled += 1;
+            }
+        }
+    }
+    std::hint::black_box(sampled);
+    let sampler_allocs = allocs() - before;
+    assert_eq!(
+        sampler_allocs, 0,
+        "audit sampling decision allocated {sampler_allocs} times in 768 calls"
+    );
 }

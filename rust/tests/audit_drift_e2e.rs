@@ -1,0 +1,401 @@
+//! End-to-end numerical-health plane: shadow-audit sampling, error-budget
+//! tracking and input-drift detection, driven through real engines.
+//!
+//! Two layers:
+//!
+//! * fixtures engine (synthetic native artifacts): with `rate: 1.0` every
+//!   completed request is shadow-audited, and all the health read
+//!   surfaces are pinned — `cmd:"health"` JSON, every new Prometheus
+//!   family (validated by `expo::self_check` with the health families
+//!   required, exactly as `benchgate --expo-check-health` runs it), and
+//!   the strict optional `n`/`k` params on `cmd:"trace"`/`"trace_slow"`;
+//! * trained engine: a small Van der Pol hypersolver is trained and
+//!   exported (stamping `train_stats` into the manifest), then served.
+//!   In-distribution traffic stays breach-free with a low drift score;
+//!   far-off-distribution traffic trips both the drift gauge and the
+//!   budget-breach counter — the failure mode the whole plane exists to
+//!   catch, since the residual fit only bounds error on the training
+//!   distribution.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::{Duration, Instant};
+
+use hypersolvers::coordinator::{server, Engine, EngineConfig, Policy, SubmitOptions};
+use hypersolvers::nn::{AnalyticField, FieldNet};
+use hypersolvers::obs::audit::AuditConfig;
+use hypersolvers::obs::expo;
+use hypersolvers::runtime::BackendKind;
+use hypersolvers::train::{
+    export_trained, hyper_variant_name, train_hypersolver, FineRef, StateSampler,
+    TrainConfig,
+};
+use hypersolvers::util::fixtures;
+use hypersolvers::util::json::Value;
+use hypersolvers::util::prng::Rng;
+
+/// The Prometheus families the audit plane adds — the same list
+/// `benchgate --expo-check-health` requires of a scraped exposition.
+const HEALTH_FAMILIES: [&str; 5] = [
+    "hypersolvers_audit_samples_total",
+    "hypersolvers_audit_drops_total",
+    "hypersolvers_audit_budget_breach_total",
+    "hypersolvers_audit_error",
+    "hypersolvers_drift_score",
+];
+
+fn audited_engine(dir: PathBuf, rate: f64) -> Engine {
+    Engine::new(EngineConfig {
+        artifacts_dir: dir,
+        max_wait: Duration::from_millis(1),
+        policy: Policy::MinMacs,
+        backend: BackendKind::Native,
+        workers: 2,
+        audit: AuditConfig {
+            rate,
+            ..AuditConfig::default()
+        },
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Wait (bounded) until the audit ledgers hold at least `want` samples.
+/// The dedicated worker and `audit_flush` drain the queue concurrently,
+/// so a single flush can return while the worker still has the last
+/// sample in flight — poll the folded state instead of the queue.
+fn wait_for_samples(engine: &Engine, want: u64) {
+    let t0 = Instant::now();
+    loop {
+        engine.audit_flush();
+        let plane = engine.audit().expect("audit plane enabled");
+        let got: u64 = plane.snapshot().iter().map(|k| k.samples).sum();
+        if got >= want {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "audit plane stuck at {got}/{want} samples (backlog {}, drops {}, unsupported {})",
+            plane.backlog(),
+            plane.drops.load(Relaxed),
+            plane.unsupported.load(Relaxed)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn audited_fixture_engine_exposes_every_health_surface() {
+    let dir = fixtures::temp_native_artifacts("audit_surface", &[("cnf_a", 4)]).unwrap();
+    let engine = audited_engine(dir.clone(), 1.0);
+
+    // budget 0.5 routes to euler_k2 (fixture mape stamp 0.25). Fixture
+    // train_stats cover a ±1.5 box, so these 2-D states are
+    // in-distribution.
+    for i in 0..6 {
+        let x = -1.2 + 0.4 * i as f32;
+        let r = engine.infer("cnf_a", 0.5, vec![x, -0.4]).unwrap();
+        assert_eq!(r.variant, "euler_k2");
+    }
+    wait_for_samples(&engine, 6);
+
+    let plane = engine.audit().unwrap();
+    assert_eq!(plane.sampler.decisions(), 6, "one sampling decision per request");
+    assert_eq!(plane.drops.load(Relaxed), 0);
+    assert_eq!(plane.unsupported.load(Relaxed), 0);
+    let snap = plane.snapshot();
+    assert_eq!(snap.len(), 1, "one audited (task, variant) key");
+    let k = &snap[0];
+    assert_eq!((k.task.as_str(), k.variant.as_str()), ("cnf_a", "euler_k2"));
+    assert_eq!(k.samples, 6);
+    assert!(
+        k.err_p50.is_finite() && k.err_p50 > 0.0,
+        "euler_k2 must show real measured error, got p50 {}",
+        k.err_p50
+    );
+    assert!(k.err_p99 >= k.err_p50);
+    assert!((k.budget - 0.25).abs() < 1e-9, "budget is the manifest mape");
+    assert_eq!(k.breaches, 0, "euler_k2's real error sits well under 2× budget");
+    // the fixture mape stamp (0.25) is a hair under euler k2's real
+    // measured error on the rotation field (~0.26), so the verdict may
+    // land on either side of the budget — but never in breach
+    assert!(
+        matches!(k.budget_status(), "ok" | "over_budget"),
+        "unexpected verdict {}",
+        k.budget_status()
+    );
+    assert!(k.has_train_stats, "fixtures stamp train_stats");
+    assert_eq!(k.drift_rows, 6);
+    let score = k.drift_score.expect("train_stats present ⇒ score present");
+    assert!(score.is_finite() && score >= 0.0);
+
+    // cmd:"health" — the JSON read surface over the same snapshot
+    let health = server::handle_line(&engine, r#"{"cmd":"health"}"#);
+    assert_eq!(health.get("ok").and_then(Value::as_bool), Some(true));
+    assert_eq!(health.get("audit").and_then(Value::as_bool), Some(true));
+    assert_eq!(health.get("rate").and_then(Value::as_f64), Some(1.0));
+    assert_eq!(health.get("drops").and_then(Value::as_f64), Some(0.0));
+    let keys = health.get("keys").and_then(Value::as_arr).unwrap();
+    assert_eq!(keys.len(), 1);
+    let key = &keys[0];
+    assert_eq!(key.get("task").and_then(Value::as_str), Some("cnf_a"));
+    assert_eq!(key.get("variant").and_then(Value::as_str), Some("euler_k2"));
+    assert_eq!(key.get("samples").and_then(Value::as_f64), Some(6.0));
+    assert_eq!(key.get("breaches").and_then(Value::as_f64), Some(0.0));
+    assert_eq!(
+        key.get("budget_status").and_then(Value::as_str),
+        Some(k.budget_status()),
+        "wire verdict must mirror the snapshot"
+    );
+    assert!(key.get("err_ewma").and_then(Value::as_f64).is_some());
+    let drift = key.get("drift").expect("drift field");
+    assert_eq!(
+        drift.get("rows").and_then(Value::as_f64),
+        Some(6.0),
+        "fixtures carry train_stats, so drift must be an object, got {drift:?}"
+    );
+    assert!(drift.get("score").and_then(Value::as_f64).is_some());
+
+    // Prometheus: every health family is declared with at least one
+    // sample, and the whole exposition survives the strict validator
+    // with the health families required — byte-for-byte what
+    // `benchgate --expo-check-health` gates in CI.
+    let text = engine.render_prometheus();
+    for family in HEALTH_FAMILIES {
+        assert!(
+            text.contains(&format!("# TYPE {family} ")),
+            "family {family} not declared in:\n{text}"
+        );
+    }
+    let mut required = vec!["hypersolvers_requests_total"];
+    required.extend(HEALTH_FAMILIES);
+    expo::self_check(&text, &required).unwrap();
+    // golden sample frames (values move with the workload; the
+    // name{labels} shape must not)
+    for frame in [
+        "hypersolvers_audit_samples_total{task=\"cnf_a\",variant=\"euler_k2\"} 6",
+        "hypersolvers_audit_drops_total{reason=\"queue\"} 0",
+        "hypersolvers_audit_drops_total{reason=\"unsupported\"} 0",
+        "hypersolvers_audit_budget_breach_total{task=\"cnf_a\",variant=\"euler_k2\"} 0",
+        "hypersolvers_audit_error{task=\"cnf_a\",variant=\"euler_k2\",quantile=\"0.5\"}",
+        "hypersolvers_audit_error{task=\"cnf_a\",variant=\"euler_k2\",quantile=\"0.99\"}",
+        "hypersolvers_audit_error_count{task=\"cnf_a\",variant=\"euler_k2\"} 6",
+        "hypersolvers_drift_score{task=\"cnf_a\",variant=\"euler_k2\"}",
+    ] {
+        assert!(text.contains(frame), "missing frame {frame:?} in:\n{text}");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn audit_off_engine_says_so_and_renders_no_health_families() {
+    let dir = fixtures::temp_native_artifacts("audit_off", &[("cnf_a", 4)]).unwrap();
+    let engine = audited_engine(dir.clone(), 0.0);
+    assert!(engine.audit().is_none(), "rate 0.0 must not spin up the plane");
+    engine.infer("cnf_a", 0.5, vec![0.1, 0.2]).unwrap();
+
+    let health = server::handle_line(&engine, r#"{"cmd":"health"}"#);
+    assert_eq!(health.get("ok").and_then(Value::as_bool), Some(true));
+    assert_eq!(health.get("audit").and_then(Value::as_bool), Some(false));
+    assert!(health
+        .get("reason")
+        .and_then(Value::as_str)
+        .unwrap()
+        .contains("--audit-rate"));
+
+    // audit-off scrape stays byte-stable against the pre-audit shape
+    let text = engine.render_prometheus();
+    for family in HEALTH_FAMILIES {
+        assert!(
+            !text.contains(family),
+            "audit-off exposition must not mention {family}"
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trace_params_are_strict_positive_integers() {
+    let dir = fixtures::temp_native_artifacts("trace_strict", &[("cnf_a", 4)]).unwrap();
+    let engine = audited_engine(dir.clone(), 0.0);
+    for _ in 0..3 {
+        engine.infer("cnf_a", 0.5, vec![0.1, 0.2]).unwrap();
+    }
+
+    // zero and non-numeric n/k are rejected with the v1 error shape —
+    // previously zero silently meant "everything" and strings were
+    // silently ignored
+    for bad in [
+        r#"{"cmd":"trace","n":0}"#,
+        r#"{"cmd":"trace","n":"lots"}"#,
+        r#"{"cmd":"trace","n":-3}"#,
+        r#"{"cmd":"trace","n":2.5}"#,
+        r#"{"cmd":"trace_slow","k":0}"#,
+        r#"{"cmd":"trace_slow","k":"all"}"#,
+    ] {
+        let resp = server::handle_line(&engine, bad);
+        assert_eq!(
+            resp.get("code").and_then(Value::as_str),
+            Some("bad_request"),
+            "want bad_request for {bad}, got {resp:?}"
+        );
+    }
+
+    // valid and omitted params still work
+    let traced = server::handle_line(&engine, r#"{"cmd":"trace","n":2}"#);
+    assert_eq!(traced.get("ok").and_then(Value::as_bool), Some(true));
+    assert!(traced.get("spans").and_then(Value::as_arr).unwrap().len() <= 2);
+    let slow = server::handle_line(&engine, r#"{"cmd":"trace_slow","k":1}"#);
+    assert_eq!(slow.get("ok").and_then(Value::as_bool), Some(true));
+    assert!(slow.get("spans").and_then(Value::as_arr).unwrap().len() <= 1);
+    let all = server::handle_line(&engine, r#"{"cmd":"trace_slow"}"#);
+    assert_eq!(all.get("ok").and_then(Value::as_bool), Some(true));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Train → export (with `train_stats`) → serve: in-distribution traffic is
+/// clean, a distribution shift trips the drift gauge AND the error-budget
+/// breach counter. This is the tentpole scenario: the trained residual is
+/// only fitted on the training box, so off-box states degrade silently
+/// everywhere except the audit plane.
+#[test]
+fn drift_injection_trips_gauge_and_budget_breach() {
+    let field = FieldNet::Analytic(AnalyticField::VanDerPol { mu: 1.0 });
+    let cfg = TrainConfig {
+        steps: 120,
+        batch: 32,
+        hidden: vec![8],
+        eval_every: 40,
+        eval_batch: 64,
+        fine: FineRef::Rk4Substeps(4),
+        sampler: StateSampler::UniformBox {
+            lo: -1.5,
+            hi: 1.5,
+            dim: 2,
+        },
+        seed: 3,
+        ..TrainConfig::default()
+    };
+    let (g, report) = train_hypersolver(&field, &cfg).unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "hsolve_audit_drift_e2e_{}",
+        std::process::id()
+    ));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    export_trained(&dir, "vdp", &field, &g, &cfg, &report, 32).unwrap();
+
+    let engine = audited_engine(dir.clone(), 1.0);
+    // pin the hypersolved variant: its budget is its *measured* manifest
+    // mape, so in-box traffic sits at the budget by construction and the
+    // breach machinery (EWMA > 2× budget, 4 in a row) stays quiet
+    let opts = SubmitOptions {
+        variant: Some(hyper_variant_name(&cfg)),
+        ..Default::default()
+    };
+    const ROWS: usize = 32;
+    const REQS: usize = 8;
+    let submit_box = |lo: f64, hi: f64, seed: u64| {
+        let mut rng = Rng::new(seed);
+        for _ in 0..REQS {
+            let input: Vec<f32> = (0..ROWS * 2)
+                .map(|_| rng.uniform_in(lo, hi) as f32)
+                .collect();
+            let h = engine.submit_opts("vdp", 0.05, input, ROWS, &opts).unwrap();
+            h.wait().unwrap();
+        }
+    };
+
+    // phase 1: in-distribution (the training box) — audited error tracks
+    // the manifest mape, drift stays low, no breaches
+    submit_box(-1.5, 1.5, 101);
+    wait_for_samples(&engine, REQS as u64);
+    let plane = engine.audit().unwrap();
+    let snap = plane.snapshot();
+    assert_eq!(snap.len(), 1);
+    let clean = &snap[0];
+    assert_eq!(clean.variant, hyper_variant_name(&cfg));
+    assert_eq!(clean.samples, REQS as u64);
+    assert_eq!(clean.breaches, 0, "in-distribution traffic must not breach");
+    assert!(clean.has_train_stats, "export_trained must stamp train_stats");
+    assert_eq!(clean.drift_rows, (REQS * ROWS) as u64);
+    let clean_score = clean.drift_score.expect("stamp present ⇒ score present");
+    assert!(
+        clean_score < 0.75,
+        "in-distribution drift score too high: {clean_score}"
+    );
+    // the audit error (row-norm relative) and the manifest mape
+    // (elementwise, python-identical) are close but not identical in-box,
+    // so the verdict may sit on either side of the budget — never breach
+    assert!(
+        matches!(clean.budget_status(), "ok" | "over_budget"),
+        "unexpected in-distribution verdict {} (ewma {:?} budget {})",
+        clean.budget_status(),
+        clean.ewma,
+        clean.budget
+    );
+
+    // phase 2: far off the training box. euler k=8 (h = 0.125) is
+    // unstable out here (|1 + hλ| > 1 for the VdP Jacobian at |x| ≈ 5)
+    // and the residual net never saw these states, while the dopri5
+    // reference at tol 1e-6 still converges — served error explodes
+    // relative to the in-box budget
+    submit_box(4.0, 6.5, 202);
+    wait_for_samples(&engine, 2 * REQS as u64);
+    let snap = plane.snapshot();
+    let shifted = &snap[0];
+    assert_eq!(shifted.samples, 2 * REQS as u64);
+    let shifted_score = shifted.drift_score.unwrap();
+    assert!(
+        shifted_score > 1.5 && shifted_score > 4.0 * clean_score.max(0.05),
+        "shift must dominate the drift score: clean {clean_score} vs shifted {shifted_score}"
+    );
+    assert!(
+        shifted.breaches >= 1,
+        "sustained off-distribution error must breach the budget \
+         (ewma {:?} vs budget {}, p99 {})",
+        shifted.ewma,
+        shifted.budget,
+        shifted.err_p99
+    );
+    assert_eq!(shifted.budget_status(), "breach");
+    assert!(
+        shifted.err_p99 > 10.0 * shifted.budget,
+        "off-box served error should dwarf the manifest budget: p99 {} budget {}",
+        shifted.err_p99,
+        shifted.budget
+    );
+
+    // both planes agree on the wire: health reports the breach and the
+    // Prometheus exposition carries the non-zero counters
+    let health = server::handle_line(&engine, r#"{"cmd":"health"}"#);
+    let keys = health.get("keys").and_then(Value::as_arr).unwrap();
+    assert_eq!(
+        keys[0].get("budget_status").and_then(Value::as_str),
+        Some("breach")
+    );
+    let breaches = keys[0].get("breaches").and_then(Value::as_f64).unwrap();
+    assert!(breaches >= 1.0);
+    let text = engine.render_prometheus();
+    let mut required = vec!["hypersolvers_requests_total"];
+    required.extend(HEALTH_FAMILIES);
+    expo::self_check(&text, &required).unwrap();
+    let breach_prefix = format!(
+        "hypersolvers_audit_budget_breach_total{{task=\"vdp\",variant=\"{}\"}} ",
+        hyper_variant_name(&cfg)
+    );
+    let breach_value: f64 = text
+        .lines()
+        .find_map(|l| l.strip_prefix(&breach_prefix))
+        .unwrap_or_else(|| panic!("no breach sample in exposition:\n{text}"))
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(breach_value >= 1.0, "exposition breach counter: {breach_value}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -44,6 +44,7 @@ fn native_engine_slo(
         backend: BackendKind::Native,
         workers,
         slo,
+        ..Default::default()
     })
     .unwrap()
 }
