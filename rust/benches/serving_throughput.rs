@@ -34,6 +34,14 @@
 //! the training distribution; the off/on p50 pair feeds benchgate's
 //! audit-overhead bound, and `--health-prom PATH` writes the audit-enabled
 //! exposition for `benchgate --expo-check-health`.
+//!
+//! The cluster scenarios front a `LocalCluster` of engine nodes with the
+//! consistent-hash router (the `hyperrouter` data path in-process): a
+//! steady pipelined run reporting aggregate latency plus the router's
+//! merged per-node metrics, then a kill-one-node-mid-run pair — retries
+//! off vs the failover budget on — whose goodputs land in the bench
+//! trajectory for benchgate's resilience rule (retries-on must strictly
+//! beat retries-off).
 
 use std::collections::HashMap;
 use std::net::TcpListener;
@@ -46,11 +54,13 @@ use hypersolvers::coordinator::{
     server, Engine, EngineConfig, Policy, Priority, SloConfig, SubmitOptions,
 };
 use hypersolvers::data::workload::WorkloadSpec;
+use hypersolvers::router::{Ring, Router, RouterConfig};
 use hypersolvers::runtime::{BackendKind, Manifest};
 use hypersolvers::tensor;
 use hypersolvers::util::artifacts::require_manifest;
 use hypersolvers::util::benchkit::{self, Table};
 use hypersolvers::util::cli::Cli;
+use hypersolvers::util::cluster::LocalCluster;
 use hypersolvers::util::fixtures;
 use hypersolvers::util::json::{self, Value};
 use hypersolvers::util::prng::Rng;
@@ -108,6 +118,17 @@ fn main() {
             "400",
             "requests per shadow-audit A/B run and per drift-shifted run \
              (0 disables the numerical-health scenarios)",
+        )
+        .opt(
+            "cluster-nodes",
+            "3",
+            "engine nodes behind the router in the cluster scenarios \
+             (native backend only; 0 disables)",
+        )
+        .opt(
+            "cluster-requests",
+            "400",
+            "requests per cluster scenario run",
         )
         .opt(
             "health-prom",
@@ -971,6 +992,268 @@ fn main() {
         audit_headline = Some(audit_pair);
     }
 
+    // ---- cluster serving: K engines behind the consistent-hash router ----
+    //
+    // The multi-process deployment story: a LocalCluster of engine nodes
+    // fronted by the router (the hyperrouter data path, in-process), one
+    // pipelined client connection against the router's merged surface.
+    // The steady run reports aggregate latency plus the router's merged
+    // `cmd: "metrics"` view with per-node batch fill. The kill runs then
+    // stop the primary node of one task halfway through, once with the
+    // failover budget off and once on; goodput is the fraction of
+    // requests answered Ok inside their deadline. The health poller is
+    // slowed way down for those runs so retries — not ejection — are the
+    // recovery mechanism under test.
+    let cluster_nodes = args.get_usize("cluster-nodes");
+    let mut cluster_headline: Option<(f64, f64, f64)> = None; // (p50, on, off)
+    if cluster_nodes > 0 && matches!(backend, BackendKind::Native) {
+        let creq = args.get_usize("cluster-requests").max(cluster_nodes * 8);
+        let ctasks = ["cnf_a", "cnf_b"];
+        let cluster_fixture: Vec<(&str, usize)> = ctasks.iter().map(|t| (*t, 8)).collect();
+        let spawn_router = |nodes: Vec<String>, retries: usize, poll: Duration| {
+            let router = Arc::new(Router::new(RouterConfig {
+                nodes,
+                retries,
+                poll_interval: poll,
+                eject_after: 2,
+                connect_timeout: Duration::from_millis(500),
+                ..Default::default()
+            }));
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            {
+                let router = Arc::clone(&router);
+                std::thread::spawn(move || {
+                    let _ = router.serve_listener(listener);
+                });
+            }
+            (router, addr)
+        };
+        let connect = |addr: &str| {
+            server::Client::connect_with(
+                addr,
+                Some(Duration::from_secs(2)),
+                Some(Duration::from_secs(60)),
+            )
+            .unwrap()
+        };
+        let make_req = |i: usize, rng: &mut Rng, deadline: Option<Duration>| {
+            // fixture cnf tasks are 2-dimensional; alternate tasks so the
+            // ring places the stream across distinct nodes
+            let mut req = InferRequest::single(
+                ctasks[i % ctasks.len()],
+                0.05,
+                vec![rng.normal_f32(), rng.normal_f32()],
+            );
+            req.deadline_us = deadline.map(|d| d.as_micros() as u64);
+            req
+        };
+
+        let mut ctable = Table::new(&[
+            "scenario", "nodes", "reqs", "achieved rps", "p50 ms", "p99 ms",
+            "ok", "failed", "goodput",
+        ]);
+
+        // steady state: no failures, aggregate latency + merged metrics
+        {
+            let cluster = LocalCluster::spawn(cluster_nodes, "bench_cluster", &cluster_fixture)
+                .expect("spawn cluster");
+            let (router, raddr) =
+                spawn_router(cluster.addrs(), 2, Duration::from_millis(200));
+            let mut client = connect(&raddr);
+            let mut rng = Rng::new(17);
+            let t0 = Instant::now();
+            let mut sent_at: HashMap<u64, Instant> = HashMap::with_capacity(window);
+            let mut latencies: Vec<f64> = Vec::with_capacity(creq);
+            let mut next = 0usize;
+            while next < creq.min(window) {
+                let id = client.send(&make_req(next, &mut rng, None)).unwrap();
+                sent_at.insert(id, Instant::now());
+                next += 1;
+            }
+            while latencies.len() < creq {
+                let reply = client.recv_reply().unwrap();
+                let id = reply.id().expect("reply without id");
+                let at = sent_at.remove(&id).expect("unmatched reply id");
+                latencies.push(at.elapsed().as_secs_f64() * 1e3);
+                if let InferReply::Err(e) = reply {
+                    panic!("steady cluster request failed: {}", e.error);
+                }
+                if next < creq {
+                    let id = client.send(&make_req(next, &mut rng, None)).unwrap();
+                    sent_at.insert(id, Instant::now());
+                    next += 1;
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let achieved_rps = creq as f64 / wall;
+            let (p50, p95, p99) = (
+                stats::percentile(&latencies, 50.0),
+                stats::percentile(&latencies, 95.0),
+                stats::percentile(&latencies, 99.0),
+            );
+            // the router's merged metrics: cluster totals + per-node fill
+            let merged = client
+                .request(&json::obj(vec![("cmd", json::s("metrics"))]))
+                .expect("router metrics");
+            let fill = merged.get("fill").and_then(Value::as_f64).unwrap_or(0.0);
+            let per_node_fill: Vec<Value> = merged
+                .get("per_node")
+                .and_then(Value::as_arr)
+                .map(|nodes| {
+                    nodes
+                        .iter()
+                        .map(|n| n.get("fill").cloned().unwrap_or(Value::Null))
+                        .collect()
+                })
+                .unwrap_or_default();
+            ctable.row(&[
+                "cluster steady".into(),
+                cluster_nodes.to_string(),
+                creq.to_string(),
+                format!("{achieved_rps:.0}"),
+                format!("{p50:.2}"),
+                format!("{p99:.2}"),
+                creq.to_string(),
+                "0".into(),
+                "1.000".into(),
+            ]);
+            scenarios_json.push(json::obj(vec![
+                ("scenario", json::s("cluster steady")),
+                ("mode", json::s("router_cluster")),
+                ("nodes", json::num(cluster_nodes as f64)),
+                ("requests", json::num(creq as f64)),
+                ("window", json::num(window as f64)),
+                ("throughput_rps", json::num(achieved_rps)),
+                ("p50_ms", json::num(p50)),
+                ("p95_ms", json::num(p95)),
+                ("p99_ms", json::num(p99)),
+                ("fill", json::num(fill)),
+                ("per_node_fill", Value::Arr(per_node_fill)),
+            ]));
+            println!(
+                "\n[cluster steady] {cluster_nodes} nodes, window={window}: \
+                 p50 {p50:.2} ms, merged fill {fill:.2}"
+            );
+            router.stop();
+            cluster_headline = Some((p50, 0.0, 0.0));
+        }
+
+        // kill one node mid-run: retries off, then on. The victim is the
+        // ring primary of the first task, so roughly half the stream is
+        // aimed at the node that disappears.
+        let deadline = Duration::from_secs(2);
+        let victim = Ring::new(cluster_nodes, RouterConfig::default().vnodes)
+            .primary(Ring::key(ctasks[0], None))
+            .expect("non-empty ring has a primary");
+        let mut goodput_pair = (0.0f64, 0.0f64); // (off, on)
+        for retries_on in [false, true] {
+            let scenario =
+                format!("cluster kill retries={}", if retries_on { "on" } else { "off" });
+            let mut cluster =
+                LocalCluster::spawn(cluster_nodes, "bench_cluster_kill", &cluster_fixture)
+                    .expect("spawn cluster");
+            // poll far slower than the run: ejection never happens, so any
+            // recovery in the goodput numbers is the retry path alone
+            let (router, raddr) = spawn_router(
+                cluster.addrs(),
+                if retries_on { 2 } else { 0 },
+                Duration::from_secs(600),
+            );
+            let mut client = connect(&raddr);
+            let mut rng = Rng::new(18);
+            let mut sent_at: HashMap<u64, Instant> = HashMap::with_capacity(window);
+            let mut ok_in_deadline = 0usize;
+            let mut failed = 0usize;
+            let mut done = 0usize;
+            let mut next = 0usize;
+            let mut killed = false;
+            let t0 = Instant::now();
+            while next < creq.min(window) {
+                let id = client.send(&make_req(next, &mut rng, Some(deadline))).unwrap();
+                sent_at.insert(id, Instant::now());
+                next += 1;
+            }
+            while done < creq {
+                let reply = client.recv_reply().unwrap();
+                let id = reply.id().expect("reply without id");
+                let at = sent_at.remove(&id).expect("unmatched reply id");
+                done += 1;
+                match reply {
+                    InferReply::Ok(_) if at.elapsed() <= deadline => ok_in_deadline += 1,
+                    InferReply::Ok(_) => failed += 1,
+                    InferReply::Err(_) => failed += 1,
+                }
+                if !killed && next >= creq / 2 {
+                    // mid-run node loss (graceful: drains, then the port
+                    // goes dark — the router sees resets and refusals)
+                    cluster.stop(victim).expect("stop victim node");
+                    killed = true;
+                }
+                if next < creq {
+                    let id =
+                        client.send(&make_req(next, &mut rng, Some(deadline))).unwrap();
+                    sent_at.insert(id, Instant::now());
+                    next += 1;
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let goodput = ok_in_deadline as f64 / creq as f64;
+            if retries_on {
+                goodput_pair.1 = goodput;
+            } else {
+                goodput_pair.0 = goodput;
+            }
+            ctable.row(&[
+                scenario.clone(),
+                cluster_nodes.to_string(),
+                creq.to_string(),
+                format!("{:.0}", creq as f64 / wall),
+                "-".into(),
+                "-".into(),
+                ok_in_deadline.to_string(),
+                failed.to_string(),
+                format!("{goodput:.3}"),
+            ]);
+            scenarios_json.push(json::obj(vec![
+                ("scenario", json::s(&scenario)),
+                ("mode", json::s("router_cluster_kill")),
+                ("nodes", json::num(cluster_nodes as f64)),
+                ("killed_node", json::num(victim as f64)),
+                ("retries", json::num(if retries_on { 2.0 } else { 0.0 })),
+                ("requests", json::num(creq as f64)),
+                ("deadline_ms", json::num(deadline.as_secs_f64() * 1e3)),
+                ("ok_in_deadline", json::num(ok_in_deadline as f64)),
+                ("failed", json::num(failed as f64)),
+                ("goodput", json::num(goodput)),
+            ]));
+            println!(
+                "[{scenario}] killed node {victim} at {}/{creq}: \
+                 {ok_in_deadline} ok, {failed} failed, goodput {goodput:.3}",
+                creq / 2
+            );
+            router.stop();
+            cluster.stop_all();
+        }
+        if let Some(h) = cluster_headline.as_mut() {
+            h.1 = goodput_pair.1;
+            h.2 = goodput_pair.0;
+        }
+        println!();
+        ctable.print();
+        println!(
+            "\ncluster goodput = Ok-within-deadline replies / all requests \
+             through the router. The retries=on row must beat retries=off: \
+             with the poller slowed down, the failover budget is the only \
+             thing standing between a dead primary and failed requests."
+        );
+    } else if cluster_nodes > 0 {
+        println!(
+            "\n[cluster] skipped: the router scenarios need the native \
+             backend's LocalCluster fixture"
+        );
+    }
+
     println!();
     table.print();
     println!(
@@ -1020,6 +1303,12 @@ fn main() {
         if let Some((off_p50, on_p50)) = audit_headline {
             fields.push(("audit_off_p50_ms", json::num(off_p50)));
             fields.push(("audit_on_p50_ms", json::num(on_p50)));
+        }
+        if let Some((p50, on, off)) = cluster_headline {
+            fields.push(("cluster_nodes", json::num(cluster_nodes as f64)));
+            fields.push(("cluster_p50_ms", json::num(p50)));
+            fields.push(("cluster_kill_goodput_retries_on", json::num(on)));
+            fields.push(("cluster_kill_goodput_retries_off", json::num(off)));
         }
         // engine-side stage breakdown of the headline scenario — benchgate
         // checks that queue+pad+exec p50s stay consistent with the total

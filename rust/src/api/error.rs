@@ -38,11 +38,17 @@ pub enum ErrorCode {
     /// client's row quota was exhausted, or the request was shed at the
     /// queued-rows high-water mark.
     Overloaded,
+    /// The routing layer could not reach any engine node for this
+    /// request: every candidate on the placement ring was ejected,
+    /// excluded by earlier failed attempts, or the retry budget /
+    /// request deadline ran out mid-failover. Raised only by the
+    /// cluster router — a single engine never emits it.
+    UpstreamUnavailable,
 }
 
 impl ErrorCode {
     /// Every code, for exhaustive protocol tests.
-    pub const ALL: [ErrorCode; 9] = [
+    pub const ALL: [ErrorCode; 10] = [
         ErrorCode::BadRequest,
         ErrorCode::UnknownTask,
         ErrorCode::UnknownVariant,
@@ -52,6 +58,7 @@ impl ErrorCode {
         ErrorCode::ExecFailed,
         ErrorCode::Internal,
         ErrorCode::Overloaded,
+        ErrorCode::UpstreamUnavailable,
     ];
 
     /// The frozen wire string.
@@ -66,6 +73,7 @@ impl ErrorCode {
             ErrorCode::ExecFailed => "exec_failed",
             ErrorCode::Internal => "internal",
             ErrorCode::Overloaded => "overloaded",
+            ErrorCode::UpstreamUnavailable => "upstream_unavailable",
         }
     }
 
@@ -130,6 +138,10 @@ impl ApiError {
 
     pub fn overloaded(m: impl Into<String>) -> ApiError {
         ApiError::new(ErrorCode::Overloaded, m)
+    }
+
+    pub fn upstream_unavailable(m: impl Into<String>) -> ApiError {
+        ApiError::new(ErrorCode::UpstreamUnavailable, m)
     }
 
     /// Map a crate-level execution error onto the API code space (batch

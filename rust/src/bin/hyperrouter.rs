@@ -1,0 +1,74 @@
+//! `hyperrouter` — the cluster routing daemon.
+//!
+//! Fronts N `hypersolverd` engine nodes with one v0/v1/v2-speaking
+//! endpoint: consistent-hash placement by `(task, variant)`, periodic
+//! health polls with eject/readmit, and health-aware retries bounded by
+//! a budget and each request's own `deadline_us`. See rust/README.md
+//! §"Cluster serving".
+//!
+//! ```text
+//! hyperrouter --listen 0.0.0.0:7171 --nodes 127.0.0.1:7070,127.0.0.1:7071
+//! ```
+
+use std::time::Duration;
+
+use hypersolvers::router::{Router, RouterConfig};
+use hypersolvers::util::cli::{self, Cli};
+
+fn main() {
+    let args = Cli::new("hyperrouter — consistent-hash router over hypersolverd nodes")
+        .opt("listen", "127.0.0.1:7171", "address to listen on")
+        .opt(
+            "nodes",
+            "127.0.0.1:7070",
+            "comma-separated engine node addresses (ring order)",
+        )
+        .opt("vnodes", "64", "virtual nodes per engine on the placement ring")
+        .opt(
+            "eject-after",
+            "3",
+            "consecutive failed health polls before a node is ejected",
+        )
+        .opt("poll-ms", "500", "health poll cadence in milliseconds")
+        .opt(
+            "retries",
+            "2",
+            "max failover re-sends per request (total sends = retries + 1)",
+        )
+        .opt(
+            "connect-timeout-ms",
+            "1000",
+            "upstream TCP connect bound in milliseconds",
+        )
+        .opt(
+            "probe-timeout-ms",
+            "2000",
+            "read bound for health polls and forwarded commands, in milliseconds",
+        )
+        .parse_env();
+
+    let nodes = cli::parse_list(&args.get("nodes"));
+    if nodes.is_empty() {
+        eprintln!("hyperrouter: --nodes needs at least one engine address");
+        std::process::exit(2);
+    }
+    let cfg = RouterConfig {
+        nodes,
+        vnodes: args.get_usize("vnodes"),
+        eject_after: args.get_usize("eject-after") as u32,
+        poll_interval: Duration::from_millis(args.get_usize("poll-ms") as u64),
+        retries: args.get_usize("retries"),
+        connect_timeout: Duration::from_millis(args.get_usize("connect-timeout-ms") as u64),
+        probe_read_timeout: Duration::from_millis(args.get_usize("probe-timeout-ms") as u64),
+    };
+    if cfg.eject_after == 0 {
+        eprintln!("hyperrouter: --eject-after must be at least 1");
+        std::process::exit(2);
+    }
+    let listen = args.get("listen");
+    let router = Router::new(cfg);
+    if let Err(e) = router.serve(&listen) {
+        eprintln!("hyperrouter: {e}");
+        std::process::exit(1);
+    }
+}

@@ -800,6 +800,28 @@ impl Engine {
         }
         Ok(())
     }
+
+    /// Block until every queued request has been answered and every
+    /// in-flight batch has completed — the graceful-shutdown drain that
+    /// `cmd:"shutdown"` runs before the accept loop exits. The dispatch
+    /// workers stay up the whole time, so queued requests complete
+    /// normally instead of being dropped with their channels. Returns
+    /// `false` when the backlog did not clear within `timeout` (callers
+    /// shut down anyway; the flag just makes the miss loud).
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        loop {
+            let queued: usize = self.queue_depths().iter().map(|d| d.requests).sum();
+            let inflight = self.metrics.inflight_batches.load(Relaxed);
+            if queued == 0 && inflight == 0 {
+                return true;
+            }
+            if t0.elapsed() >= timeout {
+                return false;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
 }
 
 impl Drop for Engine {

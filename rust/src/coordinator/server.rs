@@ -31,8 +31,10 @@
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 use crate::api::v1::{self, InferReply, InferRequest};
 use crate::api::{v2, ApiError};
@@ -49,19 +51,90 @@ pub fn serve(engine: Arc<Engine>, addr: &str) -> Result<()> {
 }
 
 /// Serve on an already-bound listener (lets tests bind port 0 and read the
-/// ephemeral port back before serving).
+/// ephemeral port back before serving). Returns `Ok(())` when a loopback
+/// peer requests a graceful stop via `cmd: "shutdown"` (see
+/// [`handle_shutdown`]); otherwise blocks forever.
 pub fn serve_listener(engine: Arc<Engine>, listener: TcpListener) -> Result<()> {
     log_info!("listening on {:?}", listener.local_addr());
+    let ctl = Arc::new(ServeCtl {
+        shutdown: AtomicBool::new(false),
+        addr: listener.local_addr().ok(),
+    });
     for stream in listener.incoming() {
+        if ctl.is_shutdown() {
+            break;
+        }
         let stream = stream?;
         let engine = Arc::clone(&engine);
+        let ctl = Arc::clone(&ctl);
         std::thread::spawn(move || {
-            if let Err(e) = handle_conn(&engine, stream) {
+            if let Err(e) = handle_conn(&engine, stream, &ctl) {
                 crate::log_debug!("connection closed: {e}");
             }
         });
     }
+    log_info!("accept loop exited after graceful shutdown");
     Ok(())
+}
+
+/// Shared control block for one serve loop: lets any connection request a
+/// graceful shutdown that the accept loop and every sibling connection
+/// observe.
+struct ServeCtl {
+    shutdown: AtomicBool,
+    /// the listener's own address — used to poke the blocked accept loop
+    /// awake so it observes the flag instead of waiting for a real peer
+    addr: Option<SocketAddr>,
+}
+
+impl ServeCtl {
+    fn is_shutdown(&self) -> bool {
+        self.shutdown.load(SeqCst)
+    }
+
+    /// Wake the accept loop with a throwaway connection (best effort —
+    /// if the listener address is unknown the loop exits on its next
+    /// real accept instead).
+    fn wake(&self) {
+        if let Some(addr) = self.addr {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+        }
+    }
+}
+
+/// How long a graceful shutdown waits for queued + in-flight work to
+/// finish before replying `drained: false` and exiting anyway.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// `cmd: "shutdown"` — admin-gated graceful stop, only honoured for
+/// loopback peers (the serving port is otherwise unauthenticated). Flips
+/// the serve loop's shutdown flag so no sibling connection accepts new
+/// work, waits for the engine to answer everything already queued or
+/// in flight ([`Engine::drain`]), wakes the accept loop so it exits, and
+/// only then replies — when the caller sees `ok: true` the engine is
+/// quiescent. Sibling connections close as soon as their next message
+/// arrives; a router reads that as a connection reset and fails over.
+fn handle_shutdown(engine: &Engine, peer: Option<SocketAddr>, ctl: &ServeCtl) -> Value {
+    let loopback = peer.map(|p| p.ip().is_loopback()).unwrap_or(false);
+    if !loopback {
+        return v1::encode_error(
+            None,
+            None,
+            &ApiError::bad_request(format!(
+                "cmd \"shutdown\" is admin-only: accepted from loopback peers, \
+                 denied for {peer:?}"
+            )),
+            1,
+        );
+    }
+    ctl.shutdown.store(true, SeqCst);
+    let drained = engine.drain(DRAIN_TIMEOUT);
+    ctl.wake();
+    json::obj(vec![
+        ("ok", Value::Bool(true)),
+        ("shutdown", Value::Bool(true)),
+        ("drained", Value::Bool(drained)),
+    ])
 }
 
 /// Serve the Prometheus exposition on its own plaintext listener (the
@@ -196,7 +269,7 @@ fn write_msg(writer: &Mutex<BufWriter<TcpStream>>, bytes: &[u8]) -> std::io::Res
     w.flush()
 }
 
-fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
+fn handle_conn(engine: &Engine, stream: TcpStream, ctl: &ServeCtl) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let writer = Arc::new(Mutex::new(BufWriter::new(stream.try_clone()?)));
     let pending: Arc<Mutex<HashMap<u64, PendingMeta>>> = Arc::new(Mutex::new(HashMap::new()));
@@ -245,6 +318,12 @@ fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
                 break;
             }
         };
+        // a sibling connection triggered graceful shutdown while we were
+        // blocked reading: close instead of accepting this message (the
+        // engine has already drained — new work would be dropped)
+        if ctl.is_shutdown() {
+            break;
+        }
         if first == v2::FRAME_MAGIC {
             let frame = match v2::read_frame(&mut reader) {
                 Ok(f) => f,
@@ -291,10 +370,15 @@ fn handle_conn(engine: &Engine, stream: TcpStream) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        if let Some(reply) = handle_pipelined(engine, &line, &done_tx, &pending) {
+        if let Some(reply) = handle_pipelined(engine, &line, &done_tx, &pending, peer, ctl) {
             if write_msg(&writer, &line_bytes(&reply)).is_err() {
                 break;
             }
+        }
+        // this very message was the shutdown command: its reply is out,
+        // close the connection so the caller's teardown is deterministic
+        if ctl.is_shutdown() {
+            break;
         }
     }
     drop(done_tx);
@@ -337,6 +421,8 @@ fn handle_pipelined(
     line: &str,
     done: &mpsc::Sender<Completion>,
     pending: &Mutex<HashMap<u64, PendingMeta>>,
+    peer: Option<SocketAddr>,
+    ctl: &ServeCtl,
 ) -> Option<Value> {
     let v = match json::parse(line) {
         Ok(v) => v,
@@ -350,6 +436,12 @@ fn handle_pipelined(
         }
     };
     if v.get("cmd").is_some() {
+        // shutdown needs the connection's peer (admin gating) and the
+        // serve loop's control block, so it is handled here rather than
+        // in the socketless handle_cmd
+        if v.get("cmd").and_then(Value::as_str) == Some("shutdown") {
+            return Some(handle_shutdown(engine, peer, ctl));
+        }
         return Some(handle_cmd(engine, &v));
     }
     let version_guess = v1::wire_version(&v).unwrap_or(1);
@@ -546,16 +638,40 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
                     ])
                 })
                 .collect();
+            use std::sync::atomic::Ordering::Relaxed;
             let m = engine.metrics();
-            let shed = m.shed.load(std::sync::atomic::Ordering::Relaxed);
-            let rejects = m.overload_rejects.load(std::sync::atomic::Ordering::Relaxed);
+            let shed = m.shed.load(Relaxed);
+            let rejects = m.overload_rejects.load(Relaxed);
+            // the flat numeric counters double as the router's merge
+            // inputs (util::merge::merge_metrics) — sums, ratio-of-sums
+            // denominators, and responses-weighted percentile means all
+            // come from these fields
             json::obj(vec![
                 ("ok", Value::Bool(true)),
                 ("backend", json::s(engine.backend_name())),
                 ("report", json::s(&m.report())),
                 ("goodput", json::num(m.goodput())),
+                ("fill", json::num(m.fill_ratio())),
                 ("shed", json::num(shed as f64)),
                 ("overload_rejects", json::num(rejects as f64)),
+                ("requests", json::num(m.requests.load(Relaxed) as f64)),
+                ("responses", json::num(m.responses.load(Relaxed) as f64)),
+                ("failures", json::num(m.failures.load(Relaxed) as f64)),
+                ("deadline_met", json::num(m.deadline_met.load(Relaxed) as f64)),
+                (
+                    "deadline_misses",
+                    json::num(m.deadline_misses.load(Relaxed) as f64),
+                ),
+                ("rows", json::num(m.rows.load(Relaxed) as f64)),
+                ("padded_slots", json::num(m.padded_slots.load(Relaxed) as f64)),
+                (
+                    "total_p50_us",
+                    json::num(m.total_latency.percentile_us(50.0)),
+                ),
+                (
+                    "total_p99_us",
+                    json::num(m.total_latency.percentile_us(99.0)),
+                ),
                 ("queues", Value::Arr(queues)),
             ])
         }
@@ -702,6 +818,17 @@ pub fn handle_cmd(engine: &Engine, req: &Value) -> Value {
                 ])
             }
         },
+        // graceful stop is a property of a live serve loop (it needs the
+        // peer address and the accept loop's control block); the
+        // socketless handle_line/handle_cmd path has nothing to stop
+        "shutdown" => v1::encode_error(
+            None,
+            None,
+            &ApiError::bad_request(
+                "cmd \"shutdown\" is only valid on a live serving connection",
+            ),
+            1,
+        ),
         // command errors use the v1 error shape (the version tag is how
         // clients branch); only v0-dialect *infer* replies omit it
         other => v1::encode_error(
@@ -750,17 +877,83 @@ pub struct Client {
     next_id: u64,
     /// Encode requests as binary v2 frames (set by [`Self::prefer_v2`]).
     use_v2: bool,
+    /// Active read timeout, echoed in timeout errors (`None` = block
+    /// forever, the historical behaviour).
+    read_timeout: Option<Duration>,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr)?;
+        Client::connect_with(addr, None, None)
+    }
+
+    /// [`Self::connect`] with explicit socket timeouts: `connect` bounds
+    /// the TCP connect, `read` bounds every blocking read thereafter. On
+    /// expiry the pending call returns a loud [`Error::Coordinator`]
+    /// instead of hanging forever on a dead or stalled peer — the router
+    /// and the cluster fixtures rely on this to bound failover latency.
+    pub fn connect_with(
+        addr: &str,
+        connect: Option<Duration>,
+        read: Option<Duration>,
+    ) -> Result<Client> {
+        let stream = match connect {
+            None => TcpStream::connect(addr)?,
+            Some(t) => {
+                use std::net::ToSocketAddrs;
+                let mut last: Option<std::io::Error> = None;
+                let mut found = None;
+                for a in addr.to_socket_addrs()? {
+                    match TcpStream::connect_timeout(&a, t) {
+                        Ok(s) => {
+                            found = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                match (found, last) {
+                    (Some(s), _) => s,
+                    (None, Some(e)) => return Err(e.into()),
+                    (None, None) => {
+                        return Err(Error::Coordinator(format!(
+                            "{addr}: resolved to no socket addresses"
+                        )))
+                    }
+                }
+            }
+        };
+        stream.set_read_timeout(read)?;
         Ok(Client {
             writer: stream.try_clone()?,
             reader: BufReader::new(stream),
             next_id: 1,
             use_v2: false,
+            read_timeout: read,
         })
+    }
+
+    /// Change the read timeout on the live connection (both halves share
+    /// one socket, so it applies to the next blocking read immediately).
+    pub fn set_read_timeout(&mut self, read: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(read)?;
+        self.read_timeout = read;
+        Ok(())
+    }
+
+    /// Map a socket-level read error: timeout expiry becomes a loud,
+    /// actionable message (the whole point of the timeout), everything
+    /// else passes through unchanged.
+    fn read_error(&self, e: std::io::Error) -> Error {
+        use std::io::ErrorKind;
+        if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+            Error::Coordinator(format!(
+                "read timed out after {:?} waiting for a reply — peer dead or stalled",
+                self.read_timeout.unwrap_or_default()
+            ))
+        } else {
+            e.into()
+        }
     }
 
     /// Negotiate up to binary v2: ask the server which protocol versions
@@ -786,10 +979,11 @@ impl Client {
 
     fn read_value(&mut self) -> Result<Value> {
         let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
-            return Err(Error::Coordinator("server closed the connection".into()));
+        match self.reader.read_line(&mut line) {
+            Ok(0) => Err(Error::Coordinator("server closed the connection".into())),
+            Ok(_) => json::parse(&line),
+            Err(e) => Err(self.read_error(e)),
         }
-        json::parse(&line)
     }
 
     /// Raw line round trip (command lines, protocol experiments).
@@ -837,14 +1031,19 @@ impl Client {
     /// first byte so v1 lines and v2 frames can interleave on one
     /// connection.
     pub fn recv_reply(&mut self) -> Result<InferReply> {
-        let first = self
-            .reader
-            .fill_buf()?
-            .first()
-            .copied()
-            .ok_or_else(|| Error::Coordinator("server closed the connection".into()))?;
+        let first = match self.reader.fill_buf() {
+            Ok(buf) => buf
+                .first()
+                .copied()
+                .ok_or_else(|| Error::Coordinator("server closed the connection".into()))?,
+            Err(e) => return Err(self.read_error(e)),
+        };
         if first == v2::FRAME_MAGIC {
-            let frame = v2::read_frame(&mut self.reader).map_err(Error::from)?;
+            let frame = match v2::read_frame(&mut self.reader) {
+                Ok(f) => f,
+                Err(v2::FrameError::Io(e)) => return Err(self.read_error(e)),
+                Err(e) => return Err(e.into()),
+            };
             return v2::decode_reply(frame).map_err(Error::from);
         }
         let v = self.read_value()?;

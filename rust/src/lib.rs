@@ -56,6 +56,7 @@ pub mod nn;
 pub mod obs;
 pub mod ode;
 pub mod pareto;
+pub mod router;
 pub mod runtime;
 pub mod solvers;
 pub mod tensor;

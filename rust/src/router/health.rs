@@ -1,0 +1,186 @@
+//! Per-node health: the eject/readmit state machine and the poll loop.
+//!
+//! A node starts healthy. Each failed probe increments a consecutive-
+//! failure counter; reaching `eject_after` ejects the node from
+//! placement. Any successful probe zeroes the counter and — if the node
+//! was ejected — re-admits it immediately (recovery should not wait out
+//! a penalty window; the poll cadence already rate-limits flapping).
+
+use std::sync::atomic::{AtomicU32, Ordering::SeqCst};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::log_info;
+
+struct NodeState {
+    /// consecutive failed probes since the last success
+    fails: u32,
+    healthy: bool,
+}
+
+/// Health state for every node, shared between the poller and the
+/// request path (which only reads [`Self::healthy`]).
+pub struct HealthTracker {
+    states: Vec<Mutex<NodeState>>,
+    eject_after: u32,
+    /// total ejections since startup (observability)
+    pub ejections: AtomicU32,
+}
+
+impl HealthTracker {
+    /// All nodes start healthy; `eject_after` consecutive failures eject.
+    pub fn new(nodes: usize, eject_after: u32) -> HealthTracker {
+        assert!(eject_after > 0, "eject_after must be at least 1");
+        HealthTracker {
+            states: (0..nodes)
+                .map(|_| {
+                    Mutex::new(NodeState {
+                        fails: 0,
+                        healthy: true,
+                    })
+                })
+                .collect(),
+            eject_after,
+            ejections: AtomicU32::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Is the node currently in placement?
+    pub fn healthy(&self, node: usize) -> bool {
+        self.states[node].lock().unwrap().healthy
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        (0..self.len()).filter(|&i| self.healthy(i)).count()
+    }
+
+    /// Record a successful probe. Returns `true` when this re-admits a
+    /// previously ejected node.
+    pub fn record_success(&self, node: usize) -> bool {
+        let mut s = self.states[node].lock().unwrap();
+        let readmitted = !s.healthy;
+        s.fails = 0;
+        s.healthy = true;
+        readmitted
+    }
+
+    /// Record a failed probe. Returns `true` when this probe crosses the
+    /// ejection threshold (exactly once per ejection).
+    pub fn record_failure(&self, node: usize) -> bool {
+        let mut s = self.states[node].lock().unwrap();
+        s.fails = s.fails.saturating_add(1);
+        let ejected = s.healthy && s.fails >= self.eject_after;
+        if ejected {
+            s.healthy = false;
+            self.ejections.fetch_add(1, SeqCst);
+        }
+        ejected
+    }
+}
+
+/// Run the poll loop on its own thread: probe every node, record the
+/// outcome, sleep `interval`, repeat until `stop()` turns true. The
+/// probe itself is a closure so the tracker stays transport-agnostic
+/// (the router probes `cmd: "health"` over a fresh timed-out
+/// connection; tests inject scripted outcomes).
+pub fn spawn_poller(
+    tracker: Arc<HealthTracker>,
+    interval: Duration,
+    stop: impl Fn() -> bool + Send + 'static,
+    probe: impl Fn(usize) -> bool + Send + 'static,
+) -> JoinHandle<()> {
+    thread::spawn(move || {
+        while !stop() {
+            for node in 0..tracker.len() {
+                if stop() {
+                    return;
+                }
+                if probe(node) {
+                    if tracker.record_success(node) {
+                        log_info!("node {node} re-admitted to placement");
+                    }
+                } else if tracker.record_failure(node) {
+                    log_info!("node {node} ejected from placement");
+                }
+            }
+            // sleep in slices so a stop request is honoured promptly
+            let mut slept = Duration::ZERO;
+            while slept < interval && !stop() {
+                let step = (interval - slept).min(Duration::from_millis(20));
+                thread::sleep(step);
+                slept += step;
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    #[test]
+    fn ejects_after_k_consecutive_failures_only() {
+        let t = HealthTracker::new(2, 3);
+        assert!(t.healthy(0) && t.healthy(1));
+        assert!(!t.record_failure(0));
+        assert!(!t.record_failure(0));
+        assert!(t.healthy(0), "below the threshold stays in placement");
+        assert!(t.record_failure(0), "third consecutive failure ejects");
+        assert!(!t.healthy(0));
+        assert!(!t.record_failure(0), "ejection reports exactly once");
+        assert!(t.healthy(1), "other nodes unaffected");
+        assert_eq!(t.ejections.load(SeqCst), 1);
+    }
+
+    #[test]
+    fn a_success_resets_the_streak_and_readmits() {
+        let t = HealthTracker::new(1, 2);
+        // interleaved success: never ejects
+        assert!(!t.record_failure(0));
+        assert!(!t.record_success(0), "healthy success is not a readmit");
+        assert!(!t.record_failure(0));
+        assert!(t.healthy(0));
+        // now a real ejection, then recovery on the first good probe
+        assert!(t.record_failure(0));
+        assert!(!t.healthy(0));
+        assert!(t.record_success(0), "first success after ejection readmits");
+        assert!(t.healthy(0));
+        // the streak restarted from zero
+        assert!(!t.record_failure(0));
+        assert!(t.healthy(0));
+    }
+
+    #[test]
+    fn poller_drives_the_state_machine_and_stops() {
+        let t = Arc::new(HealthTracker::new(2, 3));
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = {
+            let stop = Arc::clone(&stop);
+            // node 0 always fails its probe, node 1 always passes
+            spawn_poller(
+                Arc::clone(&t),
+                Duration::from_millis(1),
+                move || stop.load(SeqCst),
+                |node| node == 1,
+            )
+        };
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while t.healthy(0) && std::time::Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!t.healthy(0), "persistently failing node must be ejected");
+        assert!(t.healthy(1), "passing node stays in placement");
+        stop.store(true, SeqCst);
+        h.join().unwrap();
+    }
+}

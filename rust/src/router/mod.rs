@@ -1,0 +1,30 @@
+//! The cluster routing layer — one process in front of N engine nodes.
+//!
+//! * [`ring`] — consistent-hash placement: requests map to nodes by a
+//!   stable FNV-1a hash of `(task, variant)` over a virtual-node ring,
+//!   so placement survives node loss and every key has a deterministic
+//!   failover sequence.
+//! * [`health`] — per-node health: a poller probes each node's
+//!   `cmd: "health"` on a fixed cadence; a node failing K consecutive
+//!   polls is ejected from placement and re-admitted on its first
+//!   successful poll.
+//! * [`proxy`] — the router itself ([`Router`], the `hyperrouter` bin):
+//!   a v0/v1/v2-speaking proxy with per-connection upstream pools,
+//!   id-remapping so out-of-order completions from different nodes
+//!   multiplex onto one client connection, and health-aware retries
+//!   with excluded-node memory, a bounded budget, and a hard
+//!   `deadline_us` fence. Exhausted failover surfaces as the frozen
+//!   `upstream_unavailable` error code.
+//!
+//! Every wire dialect transits the router unchanged: replies return in
+//! the dialect their request arrived in. See rust/README.md §"Cluster
+//! serving" for the placement rule, the eject/readmit state machine and
+//! the retry budget semantics.
+
+pub mod health;
+pub mod proxy;
+pub mod ring;
+
+pub use health::HealthTracker;
+pub use proxy::{Router, RouterConfig};
+pub use ring::Ring;

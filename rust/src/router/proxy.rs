@@ -1,0 +1,895 @@
+//! The cluster router: a v0/v1/v2-speaking proxy over N engine nodes.
+//!
+//! Placement is the consistent-hash ring ([`super::ring`]) keyed on
+//! `(task, variant)`; health is the poller-driven eject/readmit machine
+//! ([`super::health`]). Each downstream connection gets its own lazy
+//! pool of pipelined upstream connections — one per node actually used —
+//! and a **router id** per request: the router rewrites request ids on
+//! the way up and maps completions (arriving out of order, from
+//! different nodes) back to the client's ids and dialect on the way
+//! down. v0 lines keep their strict request→reply order by blocking the
+//! downstream reader on the proxied reply; v1 lines and v2 frames
+//! pipeline freely.
+//!
+//! Failure handling: `exec_failed` replies and upstream connection
+//! resets re-dispatch the request on the next ring node, remembering
+//! every node already tried (a node is never retried twice for one
+//! request), bounded by [`RouterConfig::retries`] and by the request's
+//! own `deadline_us` — a retry never launches past the deadline. When
+//! failover is exhausted the client receives the frozen
+//! `upstream_unavailable` error code.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering::SeqCst};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::api::v1::{self, ErrorReply, InferReply, InferRequest};
+use crate::api::{v2, ApiError, ErrorCode};
+use crate::coordinator::server::Client;
+use crate::router::health::{self, HealthTracker};
+use crate::router::ring::Ring;
+use crate::util::json::{self, Value};
+use crate::util::merge;
+use crate::{log_debug, log_info, Error, Result};
+
+/// Bound on how long a v0 (strict-order) request may hold its reader
+/// thread — a backstop well above any sane engine latency; normal
+/// failures resolve much earlier via timeouts and the retry budget.
+const V0_SYNC_CAP: Duration = Duration::from_secs(60);
+
+/// Router tuning. `Default` gives the test/bench profile; `hyperrouter`
+/// exposes every knob as a flag.
+#[derive(Clone)]
+pub struct RouterConfig {
+    /// Engine node addresses (`host:port`); list order defines ring
+    /// node indices.
+    pub nodes: Vec<String>,
+    /// Virtual nodes per engine on the placement ring.
+    pub vnodes: usize,
+    /// Consecutive failed health polls before a node is ejected.
+    pub eject_after: u32,
+    /// Health poll cadence.
+    pub poll_interval: Duration,
+    /// Max re-dispatch attempts after the first (so a request touches at
+    /// most `retries + 1` nodes).
+    pub retries: usize,
+    /// Upstream TCP connect bound.
+    pub connect_timeout: Duration,
+    /// Read bound for health polls and one-shot forwarded commands
+    /// (persistent pipelined upstreams read unbounded — idle is normal).
+    pub probe_read_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            nodes: Vec::new(),
+            vnodes: 64,
+            eject_after: 3,
+            poll_interval: Duration::from_millis(500),
+            retries: 2,
+            connect_timeout: Duration::from_secs(1),
+            probe_read_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Everything the accept loop, connection handlers, and poller share.
+struct Shared {
+    cfg: RouterConfig,
+    ring: Ring,
+    health: Arc<HealthTracker>,
+    stop: AtomicBool,
+    /// The bound listen address once serving — lets `cmd: "shutdown"`
+    /// (and [`Router::stop`]) wake the blocked accept loop.
+    listen_addr: Mutex<Option<SocketAddr>>,
+}
+
+/// The router front end. Construction starts the health poller;
+/// [`Self::serve`]/[`Self::serve_listener`] run the accept loop.
+pub struct Router {
+    shared: Arc<Shared>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        assert!(!cfg.nodes.is_empty(), "router needs at least one node");
+        let ring = Ring::new(cfg.nodes.len(), cfg.vnodes);
+        let health = Arc::new(HealthTracker::new(cfg.nodes.len(), cfg.eject_after));
+        let shared = Arc::new(Shared {
+            cfg,
+            ring,
+            health,
+            stop: AtomicBool::new(false),
+            listen_addr: Mutex::new(None),
+        });
+        {
+            let s = Arc::clone(&shared);
+            let p = Arc::clone(&shared);
+            // detached: the poller exits on the stop flag, not on join
+            let _ = health::spawn_poller(
+                Arc::clone(&shared.health),
+                shared.cfg.poll_interval,
+                move || s.stop.load(SeqCst),
+                move |node| probe_node(&p, node),
+            );
+        }
+        Router { shared }
+    }
+
+    /// Route on `addr`. Returns `Ok(())` after a graceful
+    /// `cmd: "shutdown"` (loopback-gated, like the engine's).
+    pub fn serve(&self, addr: &str) -> Result<()> {
+        self.serve_listener(TcpListener::bind(addr)?)
+    }
+
+    /// [`Self::serve`] on an already-bound listener (tests bind port 0).
+    pub fn serve_listener(&self, listener: TcpListener) -> Result<()> {
+        log_info!(
+            "router listening on {:?} over {} node(s)",
+            listener.local_addr(),
+            self.shared.cfg.nodes.len()
+        );
+        *self.shared.listen_addr.lock().unwrap() = listener.local_addr().ok();
+        for stream in listener.incoming() {
+            if self.shared.stop.load(SeqCst) {
+                break;
+            }
+            let stream = stream?;
+            let shared = Arc::clone(&self.shared);
+            thread::spawn(move || {
+                if let Err(e) = handle_conn(shared, stream) {
+                    log_debug!("router connection closed: {e}");
+                }
+            });
+        }
+        log_info!("router accept loop exited");
+        Ok(())
+    }
+
+    /// Stop the poller and, when serving, the accept loop.
+    pub fn stop(&self) {
+        self.shared.stop.store(true, SeqCst);
+        if let Some(addr) = *self.shared.listen_addr.lock().unwrap() {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+        }
+    }
+
+    /// The health view the poller maintains (for tests and diagnostics).
+    pub fn health(&self) -> &HealthTracker {
+        &self.shared.health
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, SeqCst);
+    }
+}
+
+/// One health probe: fresh timed-out connection, `cmd: "health"`, any
+/// `ok: true` counts (the command answers even with auditing disabled).
+fn probe_node(shared: &Shared, node: usize) -> bool {
+    let addr = &shared.cfg.nodes[node];
+    let mut c = match Client::connect_with(
+        addr,
+        Some(shared.cfg.connect_timeout),
+        Some(shared.cfg.probe_read_timeout),
+    ) {
+        Ok(c) => c,
+        Err(_) => return false,
+    };
+    matches!(
+        c.request(&json::obj(vec![("cmd", json::s("health"))])),
+        Ok(v) if v.get("ok").and_then(Value::as_bool) == Some(true)
+    )
+}
+
+/// One JSON line as wire bytes (trailing newline included).
+fn line_bytes(v: &Value) -> Vec<u8> {
+    let mut s = json::to_string(v);
+    s.push('\n');
+    s.into_bytes()
+}
+
+/// What the router remembers about one in-flight proxied request.
+struct PendingProxy {
+    /// The upstream-facing request; `id` is the router-assigned id.
+    req: InferRequest,
+    /// Downstream dialect (0 | 1 | 2) — replies re-encode into it.
+    version: u8,
+    /// The client's own id, restored on the way down.
+    client_id: Option<u64>,
+    trace: Option<u64>,
+    /// Node currently holding the request.
+    node: usize,
+    /// Nodes that already failed this request — never retried twice.
+    excluded: Vec<usize>,
+    /// Send attempts so far (`attempts > retries` ⇒ budget exhausted).
+    attempts: usize,
+    /// Absolute retry fence derived from the request's `deadline_us`.
+    deadline: Option<Instant>,
+    /// Human context for the final `upstream_unavailable` message.
+    last_error: Option<String>,
+    /// v0 strict-order path: the downstream reader blocks on this.
+    v0_reply: Option<mpsc::Sender<Value>>,
+}
+
+struct ConnState {
+    next_id: u64,
+    pending: HashMap<u64, PendingProxy>,
+}
+
+/// One pipelined upstream connection (per downstream connection, per
+/// node): writes go through `writer`, replies come back on a pump
+/// thread ([`pump_upstream`]).
+struct Upstream {
+    node: usize,
+    writer: Mutex<TcpStream>,
+    /// Negotiated at connect via `cmd: "protocol"`.
+    use_v2: bool,
+    dead: AtomicBool,
+}
+
+/// Per-downstream-connection proxy state. Upstream pumps deliver
+/// completions straight onto the (mutex-serialized) downstream writer.
+struct ProxyConn {
+    shared: Arc<Shared>,
+    down: Mutex<TcpStream>,
+    state: Mutex<ConnState>,
+    upstreams: Mutex<HashMap<usize, Arc<Upstream>>>,
+    closed: AtomicBool,
+}
+
+fn handle_conn(shared: Arc<Shared>, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let conn = Arc::new(ProxyConn {
+        shared,
+        down: Mutex::new(stream.try_clone()?),
+        state: Mutex::new(ConnState {
+            next_id: 1,
+            pending: HashMap::new(),
+        }),
+        upstreams: Mutex::new(HashMap::new()),
+        closed: AtomicBool::new(false),
+    });
+    let mut reader = BufReader::new(stream);
+    loop {
+        // same first-byte sniff as the engine server: frame magic →
+        // binary v2, anything else → a JSON line (v0/v1)
+        let first = match reader.fill_buf() {
+            Ok(buf) => match buf.first() {
+                Some(b) => *b,
+                None => break,
+            },
+            Err(_) => break,
+        };
+        if conn.shared.stop.load(SeqCst) {
+            break;
+        }
+        if first == v2::FRAME_MAGIC {
+            let frame = match v2::read_frame(&mut reader) {
+                Ok(f) => f,
+                Err(v2::FrameError::Bad(e)) => {
+                    conn.write_down(&v2::encode_error(None, None, &e));
+                    break;
+                }
+                Err(v2::FrameError::Io(_)) => break,
+            };
+            let client_id = v1::peek_id(&frame.header);
+            let client_trace = v1::peek_trace(&frame.header);
+            match v2::decode_request(frame) {
+                Ok(req) => {
+                    let router_id = conn.register(req, 2, None);
+                    conn.dispatch(router_id);
+                }
+                Err(e) => conn.write_down(&v2::encode_error(client_id, client_trace, &e)),
+            }
+            continue;
+        }
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(_) => break,
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        handle_line(&conn, &line, peer);
+        if conn.shared.stop.load(SeqCst) {
+            break; // the line was a shutdown command: reply is out, close
+        }
+    }
+    conn.close();
+    log_debug!("router peer {peer:?} disconnected");
+    Ok(())
+}
+
+/// One downstream JSON line: command, v0 strict-order request, or
+/// pipelined v1 request.
+fn handle_line(conn: &Arc<ProxyConn>, line: &str, peer: Option<SocketAddr>) {
+    let v = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            conn.write_down(&line_bytes(&v1::encode_error(
+                None,
+                None,
+                &ApiError::bad_request(format!("invalid JSON: {e}")),
+                1,
+            )));
+            return;
+        }
+    };
+    if v.get("cmd").is_some() {
+        let reply = handle_router_cmd(conn, &v, peer);
+        conn.write_down(&line_bytes(&reply));
+        return;
+    }
+    let version_guess = v1::wire_version(&v).unwrap_or(1);
+    let (req, version) = match v1::decode_request(&v) {
+        Ok(x) => x,
+        Err(e) => {
+            conn.write_down(&line_bytes(&v1::encode_error(
+                v1::peek_id(&v),
+                v1::peek_trace(&v),
+                &e,
+                version_guess,
+            )));
+            return;
+        }
+    };
+    if version == 0 {
+        // v0 clients rely on strict request→reply order: the reader
+        // thread blocks on the proxied reply (which may still fail over
+        // across nodes) before reading the next line
+        let (tx, rx) = mpsc::channel();
+        let router_id = conn.register(req, 0, Some(tx));
+        conn.dispatch(router_id);
+        match rx.recv_timeout(V0_SYNC_CAP) {
+            Ok(value) => conn.write_down(&line_bytes(&value)),
+            Err(_) => {
+                conn.state.lock().unwrap().pending.remove(&router_id);
+                conn.write_down(&line_bytes(&v1::encode_error(
+                    None,
+                    None,
+                    &ApiError::upstream_unavailable(format!(
+                        "no upstream reply within {V0_SYNC_CAP:?}"
+                    )),
+                    0,
+                )));
+            }
+        }
+        return;
+    }
+    let router_id = conn.register(req, version, None);
+    conn.dispatch(router_id);
+}
+
+impl ProxyConn {
+    /// Assign a router id, remember the client's framing, and park the
+    /// request as pending. The router id is what transits upstream.
+    fn register(
+        &self,
+        mut req: InferRequest,
+        version: u8,
+        v0_reply: Option<mpsc::Sender<Value>>,
+    ) -> u64 {
+        let deadline = req
+            .deadline_us
+            .map(|us| Instant::now() + Duration::from_micros(us));
+        let client_id = req.id;
+        let trace = req.trace;
+        let mut st = self.state.lock().unwrap();
+        let router_id = st.next_id;
+        st.next_id += 1;
+        req.id = Some(router_id);
+        st.pending.insert(
+            router_id,
+            PendingProxy {
+                req,
+                version,
+                client_id,
+                trace,
+                node: usize::MAX,
+                excluded: Vec::new(),
+                attempts: 0,
+                deadline,
+                last_error: None,
+                v0_reply,
+            },
+        );
+        router_id
+    }
+
+    /// Place (or re-place) one pending request on the first healthy,
+    /// not-yet-excluded node of its ring sequence and send it. Loops
+    /// over send-level failures (connect refused, broken pipe), so a
+    /// request always settles: delivered to a node, or failed loudly
+    /// with `upstream_unavailable`.
+    fn dispatch(self: &Arc<Self>, router_id: u64) {
+        loop {
+            // phase 1 — under the state lock: pick the next candidate or
+            // conclude the request is unroutable
+            let step = {
+                let mut st = self.state.lock().unwrap();
+                let picked = match st.pending.get_mut(&router_id) {
+                    None => return, // completed or abandoned meanwhile
+                    Some(entry) => next_candidate(&self.shared, entry),
+                };
+                match picked {
+                    Ok(x) => Ok(x),
+                    Err(reason) => {
+                        let entry = st.pending.remove(&router_id).expect("just seen");
+                        Err((entry, reason))
+                    }
+                }
+            };
+            let (node, req) = match step {
+                Ok(x) => x,
+                Err((entry, reason)) => {
+                    self.fail_request(&entry, &reason);
+                    return;
+                }
+            };
+            // phase 2 — connect or reuse the upstream (no state lock)
+            let up = match self.ensure_upstream(node) {
+                Ok(up) => up,
+                Err(e) => {
+                    self.note_failure(
+                        router_id,
+                        node,
+                        format!("connect {}: {e}", self.shared.cfg.nodes[node]),
+                    );
+                    continue;
+                }
+            };
+            // phase 3 — encode in the upstream's dialect and send
+            let bytes = if up.use_v2 {
+                v2::encode_request(&req)
+            } else {
+                line_bytes(&v1::encode_request(&req))
+            };
+            let sent = {
+                let mut w = up.writer.lock().unwrap();
+                w.write_all(&bytes)
+            };
+            match sent {
+                Ok(()) => return,
+                Err(e) => {
+                    self.drop_upstream(node);
+                    self.note_failure(
+                        router_id,
+                        node,
+                        format!("send to {}: {e}", self.shared.cfg.nodes[node]),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Mark a failed attempt on `node` so the next dispatch skips it.
+    fn note_failure(&self, router_id: u64, node: usize, err: String) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(entry) = st.pending.get_mut(&router_id) {
+            if !entry.excluded.contains(&node) {
+                entry.excluded.push(node);
+            }
+            entry.last_error = Some(err);
+        }
+    }
+
+    /// Failover is out of road: tell the client with the frozen
+    /// `upstream_unavailable` code and the last upstream error.
+    fn fail_request(&self, entry: &PendingProxy, reason: &str) {
+        let detail = match &entry.last_error {
+            Some(last) => format!(
+                "{reason} after {} attempt(s); last error: {last}",
+                entry.attempts
+            ),
+            None => format!("{reason} after {} attempt(s)", entry.attempts),
+        };
+        self.deliver(
+            entry,
+            InferReply::Err(ErrorReply {
+                id: None,
+                error: ApiError::upstream_unavailable(detail),
+                trace: None,
+            }),
+        );
+    }
+
+    /// Get the live upstream for `node`, dialling (and negotiating v2,
+    /// and starting the reply pump) on first use. The pool lock is held
+    /// across the dial — contending dispatches wait rather than racing
+    /// duplicate connections.
+    fn ensure_upstream(self: &Arc<Self>, node: usize) -> Result<Arc<Upstream>> {
+        let mut ups = self.upstreams.lock().unwrap();
+        if let Some(up) = ups.get(&node) {
+            if !up.dead.load(SeqCst) {
+                return Ok(Arc::clone(up));
+            }
+        }
+        ups.remove(&node);
+        let addr = &self.shared.cfg.nodes[node];
+        let sockaddr = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            Error::Coordinator(format!("{addr}: resolved to no socket addresses"))
+        })?;
+        let stream = TcpStream::connect_timeout(&sockaddr, self.shared.cfg.connect_timeout)?;
+        let use_v2 = negotiate_v2(&stream, self.shared.cfg.probe_read_timeout)?;
+        let up = Arc::new(Upstream {
+            node,
+            writer: Mutex::new(stream.try_clone()?),
+            use_v2,
+            dead: AtomicBool::new(false),
+        });
+        ups.insert(node, Arc::clone(&up));
+        {
+            let conn = Arc::clone(self);
+            let up = Arc::clone(&up);
+            thread::spawn(move || pump_upstream(conn, up, stream));
+        }
+        Ok(up)
+    }
+
+    fn drop_upstream(&self, node: usize) {
+        if let Some(up) = self.upstreams.lock().unwrap().remove(&node) {
+            up.dead.store(true, SeqCst);
+        }
+    }
+
+    /// One decoded upstream reply: retire its pending entry, then either
+    /// hand it downstream or fail the request over (`exec_failed` means
+    /// the batch died on that node — the request itself is re-playable).
+    fn complete(self: &Arc<Self>, node: usize, reply: InferReply) {
+        let Some(router_id) = reply.id() else {
+            return; // id-less error reply — nothing to correlate
+        };
+        let entry = {
+            let mut st = self.state.lock().unwrap();
+            match st.pending.remove(&router_id) {
+                Some(e) => e,
+                None => return, // stale or duplicate completion
+            }
+        };
+        if let InferReply::Err(err) = &reply {
+            if err.error.code == ErrorCode::ExecFailed && entry.node == node {
+                let mut entry = entry;
+                if !entry.excluded.contains(&node) {
+                    entry.excluded.push(node);
+                }
+                entry.last_error =
+                    Some(format!("node {}: {}", self.shared.cfg.nodes[node], err.error));
+                self.state.lock().unwrap().pending.insert(router_id, entry);
+                self.dispatch(router_id);
+                return;
+            }
+        }
+        self.deliver(&entry, reply);
+    }
+
+    /// Re-encode one settled reply in the client's dialect, with the
+    /// client's id restored, and hand it downstream.
+    fn deliver(&self, entry: &PendingProxy, mut reply: InferReply) {
+        let router_id = entry.req.id.expect("router id assigned at register");
+        let down_id = entry.client_id.unwrap_or(router_id);
+        match &mut reply {
+            InferReply::Ok(r) => {
+                r.id = down_id;
+                r.trace = entry.trace;
+            }
+            InferReply::Err(e) => {
+                e.id = Some(down_id);
+                e.trace = entry.trace;
+            }
+        }
+        if let Some(tx) = &entry.v0_reply {
+            // v0: wake the blocked reader thread, which writes in order
+            let value = match &reply {
+                InferReply::Ok(r) => v1::encode_response(r, 0),
+                InferReply::Err(e) => v1::encode_error(e.id, e.trace, &e.error, 0),
+            };
+            let _ = tx.send(value);
+            return;
+        }
+        let bytes = match (&reply, entry.version) {
+            (InferReply::Ok(r), 2) => v2::encode_response(r),
+            (InferReply::Err(e), 2) => v2::encode_error(e.id, e.trace, &e.error),
+            (InferReply::Ok(r), ver) => line_bytes(&v1::encode_response(r, ver)),
+            (InferReply::Err(e), ver) => line_bytes(&v1::encode_error(e.id, e.trace, &e.error, ver)),
+        };
+        self.write_down(&bytes);
+    }
+
+    /// The upstream to `node` died (EOF or reset): every request parked
+    /// on it fails over to its next ring node.
+    fn fail_node(self: &Arc<Self>, node: usize) {
+        self.drop_upstream(node);
+        if self.closed.load(SeqCst) {
+            return;
+        }
+        let ids: Vec<u64> = {
+            let mut st = self.state.lock().unwrap();
+            st.pending
+                .iter_mut()
+                .filter(|(_, e)| e.node == node)
+                .map(|(id, e)| {
+                    if !e.excluded.contains(&node) {
+                        e.excluded.push(node);
+                    }
+                    e.last_error =
+                        Some(format!("connection to {} reset", self.shared.cfg.nodes[node]));
+                    *id
+                })
+                .collect()
+        };
+        for id in ids {
+            self.dispatch(id);
+        }
+    }
+
+    /// Serialize one complete downstream message (pump threads and the
+    /// reader thread share the socket through this).
+    fn write_down(&self, bytes: &[u8]) {
+        if self.closed.load(SeqCst) {
+            return;
+        }
+        let mut w = self.down.lock().unwrap();
+        if w.write_all(bytes).is_err() {
+            self.closed.store(true, SeqCst);
+        }
+    }
+
+    /// Downstream hung up: stop delivering and unblock every pump.
+    fn close(&self) {
+        self.closed.store(true, SeqCst);
+        let ups: Vec<Arc<Upstream>> = self
+            .upstreams
+            .lock()
+            .unwrap()
+            .drain()
+            .map(|(_, u)| u)
+            .collect();
+        for up in ups {
+            up.dead.store(true, SeqCst);
+            let w = up.writer.lock().unwrap();
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// Pick the next node for a pending request, enforcing the deadline
+/// fence, the retry budget, and the excluded-node memory. `Err` carries
+/// the give-up reason.
+fn next_candidate(
+    shared: &Shared,
+    entry: &mut PendingProxy,
+) -> std::result::Result<(usize, InferRequest), String> {
+    if entry.attempts > 0 {
+        // retrying — never past the request's own deadline
+        if let Some(d) = entry.deadline {
+            if Instant::now() >= d {
+                return Err("request deadline elapsed during failover".to_string());
+            }
+        }
+        if entry.attempts > shared.cfg.retries {
+            return Err(format!("retry budget ({}) exhausted", shared.cfg.retries));
+        }
+    }
+    let key = Ring::key(&entry.req.task, entry.req.variant.as_deref());
+    let node = shared
+        .ring
+        .sequence(key)
+        .into_iter()
+        .find(|&n| shared.health.healthy(n) && !entry.excluded.contains(&n))
+        .ok_or_else(|| "no healthy un-tried node remains on the ring".to_string())?;
+    entry.attempts += 1;
+    entry.node = node;
+    Ok((node, entry.req.clone()))
+}
+
+/// Negotiate the upstream dialect on a fresh connection: `cmd:
+/// "protocol"`, prefer v2 when offered. The read is bounded; afterwards
+/// the socket reverts to unbounded reads (the pump idles by design).
+fn negotiate_v2(stream: &TcpStream, read_timeout: Duration) -> Result<bool> {
+    stream.set_read_timeout(Some(read_timeout))?;
+    let mut w = stream.try_clone()?;
+    w.write_all(&line_bytes(&json::obj(vec![("cmd", json::s("protocol"))])))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Err(Error::Coordinator(
+            "node closed the connection during protocol negotiation".into(),
+        ));
+    }
+    let v = json::parse(&line)?;
+    stream.set_read_timeout(None)?;
+    Ok(v.get("ok").and_then(Value::as_bool) == Some(true)
+        && v.get("versions")
+            .and_then(Value::as_arr)
+            .is_some_and(|vs| vs.iter().any(|x| x.as_f64() == Some(2.0))))
+}
+
+/// Read replies off one upstream connection and complete them. Exit (EOF
+/// or error) means the node connection is gone: fail everything parked
+/// there over to the next ring node.
+fn pump_upstream(conn: Arc<ProxyConn>, up: Arc<Upstream>, stream: TcpStream) {
+    let mut reader = BufReader::new(stream);
+    loop {
+        let first = match reader.fill_buf() {
+            Ok(buf) => match buf.first() {
+                Some(b) => *b,
+                None => break,
+            },
+            Err(_) => break,
+        };
+        let reply = if first == v2::FRAME_MAGIC {
+            match v2::read_frame(&mut reader) {
+                Ok(f) => v2::decode_reply(f),
+                Err(_) => break, // framing lost — no resync, reconnect
+            }
+        } else {
+            let mut line = String::new();
+            match reader.read_line(&mut line) {
+                Ok(0) => break,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+            match json::parse(&line) {
+                Ok(v) => v1::decode_reply(&v),
+                Err(_) => break,
+            }
+        };
+        match reply {
+            Ok(r) => conn.complete(up.node, r),
+            Err(e) => log_debug!("undecodable reply from node {}: {e}", up.node),
+        }
+    }
+    up.dead.store(true, SeqCst);
+    conn.fail_node(up.node);
+}
+
+/// Router-level command handling. `protocol`, `health`, `metrics` and
+/// `shutdown` answer at the router; anything else forwards one-shot to
+/// the first healthy node.
+fn handle_router_cmd(conn: &Arc<ProxyConn>, v: &Value, peer: Option<SocketAddr>) -> Value {
+    let shared = &conn.shared;
+    let cmd = match v.get("cmd").and_then(Value::as_str) {
+        Some(c) => c,
+        None => {
+            return v1::encode_error(
+                None,
+                None,
+                &ApiError::bad_request("cmd must be a string"),
+                1,
+            )
+        }
+    };
+    match cmd {
+        "protocol" => json::obj(vec![
+            ("ok", Value::Bool(true)),
+            (
+                "versions",
+                Value::Arr(vec![json::num(0.0), json::num(1.0), json::num(2.0)]),
+            ),
+        ]),
+        // the router's own placement health view (the engine's audit
+        // "health" is reachable by asking a node directly)
+        "health" => {
+            let nodes: Vec<Value> = shared
+                .cfg
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, addr)| {
+                    json::obj(vec![
+                        ("addr", json::s(addr)),
+                        ("healthy", Value::Bool(shared.health.healthy(i))),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("router", Value::Bool(true)),
+                ("nodes", Value::Arr(nodes)),
+            ])
+        }
+        "metrics" => cluster_metrics(shared),
+        "shutdown" => {
+            let loopback = peer.map(|p| p.ip().is_loopback()).unwrap_or(false);
+            if !loopback {
+                return v1::encode_error(
+                    None,
+                    None,
+                    &ApiError::bad_request(format!(
+                        "cmd \"shutdown\" is admin-only: accepted from loopback \
+                         peers, denied for {peer:?}"
+                    )),
+                    1,
+                );
+            }
+            shared.stop.store(true, SeqCst);
+            if let Some(addr) = *shared.listen_addr.lock().unwrap() {
+                let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+            }
+            json::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("shutdown", Value::Bool(true)),
+            ])
+        }
+        _ => {
+            let Some(node) = (0..shared.cfg.nodes.len()).find(|&i| shared.health.healthy(i))
+            else {
+                return v1::encode_error(
+                    None,
+                    None,
+                    &ApiError::upstream_unavailable(
+                        "no healthy node to forward the command to",
+                    ),
+                    1,
+                );
+            };
+            match forward_cmd(shared, node, v) {
+                Ok(reply) => reply,
+                Err(e) => v1::encode_error(
+                    None,
+                    None,
+                    &ApiError::upstream_unavailable(format!(
+                        "forwarding cmd to {}: {e}",
+                        shared.cfg.nodes[node]
+                    )),
+                    1,
+                ),
+            }
+        }
+    }
+}
+
+/// One-shot command round trip to a node on a fresh timed-out connection.
+fn forward_cmd(shared: &Shared, node: usize, v: &Value) -> Result<Value> {
+    let mut c = Client::connect_with(
+        &shared.cfg.nodes[node],
+        Some(shared.cfg.connect_timeout),
+        Some(shared.cfg.probe_read_timeout),
+    )?;
+    c.request(v)
+}
+
+/// Live-poll every node's `cmd: "metrics"` and merge into one reply:
+/// counters as sums, goodput/fill as ratio-of-sums, percentiles as a
+/// responses-weighted mean (see [`merge`]); a `per_node` array carries
+/// each node's health and headline gauges.
+fn cluster_metrics(shared: &Shared) -> Value {
+    let mut oks: Vec<Value> = Vec::new();
+    let mut per_node: Vec<Value> = Vec::new();
+    for (i, addr) in shared.cfg.nodes.iter().enumerate() {
+        let reply = forward_cmd(shared, i, &json::obj(vec![("cmd", json::s("metrics"))]))
+            .ok()
+            .filter(|r| r.get("ok").and_then(Value::as_bool) == Some(true));
+        let mut fields = vec![
+            ("addr", json::s(addr)),
+            ("healthy", Value::Bool(shared.health.healthy(i))),
+            ("ok", Value::Bool(reply.is_some())),
+        ];
+        if let Some(r) = &reply {
+            for key in ["fill", "goodput", "responses", "total_p50_us", "total_p99_us"] {
+                if let Some(x) = r.get(key).and_then(Value::as_f64) {
+                    fields.push((key, json::num(x)));
+                }
+            }
+        }
+        per_node.push(json::obj(fields));
+        if let Some(r) = reply {
+            oks.push(r);
+        }
+    }
+    let mut merged = merge::merge_metrics(&oks);
+    if let Value::Obj(map) = &mut merged {
+        map.insert("per_node".to_string(), Value::Arr(per_node));
+    }
+    merged
+}

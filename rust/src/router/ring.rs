@@ -1,0 +1,165 @@
+//! Consistent-hash placement ring with virtual nodes.
+//!
+//! Each engine node contributes `vnodes` points to a 64-bit hash ring;
+//! a request's key — the hash of its `(task, variant)` — is placed on
+//! the first node clockwise from the key. Virtual nodes smooth the
+//! per-node share; the hand-rolled FNV-1a hash keeps placement stable
+//! across platforms, releases, and std hasher changes (a router restart
+//! must not reshuffle the cluster). Node loss is handled by *skipping*
+//! dead nodes along the ring rather than rebuilding it, so only keys
+//! owned by the lost node move — the consistent-hashing property the
+//! retry path relies on.
+
+/// 64-bit FNV-1a. Tiny, dependency-free, and frozen: these constants are
+/// part of the cluster's placement contract.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The placement ring: `(point, node)` pairs sorted by point.
+pub struct Ring {
+    points: Vec<(u64, usize)>,
+    nodes: usize,
+}
+
+impl Ring {
+    /// Build a ring of `nodes` engines with `vnodes` virtual nodes each.
+    /// Point labels are `node{i}#vnode{v}`, hashed with [`fnv1a`] — the
+    /// ring for a given (nodes, vnodes) is identical everywhere.
+    pub fn new(nodes: usize, vnodes: usize) -> Ring {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(nodes * vnodes);
+        for n in 0..nodes {
+            for v in 0..vnodes {
+                points.push((fnv1a(format!("node{n}#vnode{v}").as_bytes()), n));
+            }
+        }
+        points.sort_unstable();
+        Ring { points, nodes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes == 0
+    }
+
+    /// The placement key of a request: `task` and the pinned `variant`
+    /// (requests without a pin hash on the task alone). The NUL
+    /// separator keeps `("ab", "c")` and `("a", "bc")` distinct.
+    pub fn key(task: &str, variant: Option<&str>) -> u64 {
+        let mut bytes = Vec::with_capacity(task.len() + 1 + variant.map_or(0, str::len));
+        bytes.extend_from_slice(task.as_bytes());
+        bytes.push(0);
+        if let Some(v) = variant {
+            bytes.extend_from_slice(v.as_bytes());
+        }
+        fnv1a(&bytes)
+    }
+
+    /// Every node once, in ring order starting at `key`'s successor
+    /// point — position 0 is the primary, the rest is the failover
+    /// sequence. Deterministic for a given ring and key.
+    pub fn sequence(&self, key: u64) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.nodes);
+        if self.points.is_empty() {
+            return out;
+        }
+        let start = self.points.partition_point(|&(p, _)| p < key);
+        let mut seen = vec![false; self.nodes];
+        for i in 0..self.points.len() {
+            let (_, n) = self.points[(start + i) % self.points.len()];
+            if !seen[n] {
+                seen[n] = true;
+                out.push(n);
+                if out.len() == self.nodes {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// The key's primary owner.
+    pub fn primary(&self, key: u64) -> Option<usize> {
+        self.sequence(key).first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_the_frozen_fnv1a() {
+        // reference vectors for the 64-bit FNV-1a everyone implements
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn sequence_is_deterministic_and_covers_every_node() {
+        let ring = Ring::new(5, 64);
+        for task in ["cnf_a", "cnf_b", "cnf_wide", "x"] {
+            let key = Ring::key(task, None);
+            let s1 = ring.sequence(key);
+            let s2 = ring.sequence(key);
+            assert_eq!(s1, s2);
+            let mut sorted = s1.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4], "all nodes appear once");
+        }
+    }
+
+    #[test]
+    fn variant_and_task_both_shape_the_key() {
+        assert_ne!(Ring::key("cnf_a", None), Ring::key("cnf_b", None));
+        assert_ne!(
+            Ring::key("cnf_a", Some("euler_k2")),
+            Ring::key("cnf_a", Some("heun_k2"))
+        );
+        // the NUL separator keeps concatenation ambiguity out
+        assert_ne!(Ring::key("ab", Some("c")), Ring::key("a", Some("bc")));
+    }
+
+    #[test]
+    fn virtual_nodes_spread_primaries_across_the_cluster() {
+        let ring = Ring::new(4, 64);
+        let mut counts = [0usize; 4];
+        for i in 0..1000 {
+            let key = Ring::key(&format!("task_{i}"), None);
+            counts[ring.primary(key).unwrap()] += 1;
+        }
+        for (n, &c) in counts.iter().enumerate() {
+            assert!(
+                c >= 50,
+                "node {n} owns only {c}/1000 keys — vnode spread broken: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn skipping_a_dead_node_only_moves_its_own_keys() {
+        let ring = Ring::new(4, 64);
+        for i in 0..200 {
+            let key = Ring::key(&format!("task_{i}"), None);
+            let seq = ring.sequence(key);
+            let dead = 2usize;
+            let survivor = seq.iter().copied().find(|&n| n != dead).unwrap();
+            if seq[0] != dead {
+                // keys not owned by the dead node keep their primary
+                assert_eq!(survivor, seq[0]);
+            } else {
+                // keys owned by the dead node fail over to its ring successor
+                assert_eq!(survivor, seq[1]);
+            }
+        }
+    }
+}

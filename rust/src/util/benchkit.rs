@@ -361,6 +361,27 @@ pub fn trajectory_gate(entries: &[Value], p50_slack: f64, goodput_drop: f64) -> 
                     report.checks.push(line);
                 }
             }
+            // within-entry cluster-resilience invariant: with a node
+            // killed mid-run, the router's failover retries must strictly
+            // beat running with the retry budget off — otherwise the
+            // failover path is dead weight (or worse, slowing recovery)
+            if let (Some(on), Some(off)) = (
+                entry_f64(latest, "cluster_kill_goodput_retries_on"),
+                entry_f64(latest, "cluster_kill_goodput_retries_off"),
+            ) {
+                let line = format!(
+                    "[{name}] cluster kill goodput: retries-on {on:.3} vs \
+                     retries-off {off:.3}"
+                );
+                if on <= off {
+                    report.regressions.push(format!(
+                        "{line} — REGRESSED (failover retries must strictly beat \
+                         no retries when a node dies mid-run)"
+                    ));
+                } else {
+                    report.checks.push(line);
+                }
+            }
             // within-entry wire invariant: the v2 frames must beat the v1
             // lines end to end on the wide pipelined workload
             if let (Some(v1), Some(v2)) = (
@@ -739,6 +760,35 @@ mod tests {
         // entries without the fields gate nothing new
         let plain = json::obj(vec![("bench", json::s("codecbench"))]);
         assert!(trajectory_gate(&[plain], 1.5, 0.15).passed());
+    }
+
+    #[test]
+    fn trajectory_gate_checks_cluster_kill_goodput() {
+        let cluster = |on: f64, off: f64| {
+            json::obj(vec![
+                ("bench", json::s("serving_throughput")),
+                ("cluster_kill_goodput_retries_on", json::num(on)),
+                ("cluster_kill_goodput_retries_off", json::num(off)),
+            ])
+        };
+        // healthy: failover recovers work that retries-off loses
+        let r = trajectory_gate(&[cluster(0.95, 0.70)], 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
+        assert!(r.checks.iter().any(|c| c.contains("cluster kill goodput")));
+        // retries not strictly beating retries-off fails, even on a first
+        // entry with nothing to diff against
+        let r = trajectory_gate(&[cluster(0.70, 0.70)], 1.5, 0.15);
+        assert!(!r.passed());
+        assert!(
+            r.regressions[0].contains("failover retries must strictly beat"),
+            "{:?}",
+            r.regressions
+        );
+        // only the newest entry is gated; entries without the pair gate
+        // nothing new
+        let plain = json::obj(vec![("bench", json::s("serving_throughput"))]);
+        let r = trajectory_gate(&[cluster(0.1, 0.9), plain], 1.5, 0.15);
+        assert!(r.passed(), "{:?}", r.regressions);
     }
 
     #[test]

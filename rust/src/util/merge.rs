@@ -1,0 +1,199 @@
+//! Cluster summary-merge helpers — fold per-node `cmd: "metrics"` replies
+//! into one aggregate reply at the router.
+//!
+//! Counters merge as **sums**; rate-style gauges (goodput, batch fill)
+//! merge as **ratio-of-sums** of their underlying counters, keeping the
+//! engine's vacuous-1.0 convention when nothing has been observed; latency
+//! percentiles merge as a **responses-weighted mean** of the per-node
+//! percentiles. Exact percentile merging would need the raw histograms on
+//! the wire, so the merged percentile is an approximation — documented as
+//! such in rust/README.md §"Cluster serving" — but it is monotone in every
+//! node's value and exact when nodes are identically loaded.
+
+use crate::util::json::{self, Value};
+
+/// Sum `key` across every reply; absent or non-numeric fields contribute
+/// nothing (a node predating a field must not poison the merge).
+pub fn sum_field(replies: &[Value], key: &str) -> f64 {
+    replies
+        .iter()
+        .filter_map(|r| r.get(key).and_then(Value::as_f64))
+        .sum()
+}
+
+/// `Σ num / Σ den` with the engine's vacuous convention: a zero
+/// denominator (nothing observed anywhere) reads 1.0, matching the
+/// per-node `goodput()` / `fill_ratio()` gauges being merged.
+pub fn ratio_of_sums(replies: &[Value], num: &str, den: &str) -> f64 {
+    let d = sum_field(replies, den);
+    if d <= 0.0 {
+        1.0
+    } else {
+        sum_field(replies, num) / d
+    }
+}
+
+/// Mean of `key` weighted by `weight_key` — the percentile merge rule.
+/// Replies missing either field drop out of both sums; zero total weight
+/// reads 0.0 (an idle cluster has no latency to report).
+pub fn weighted_mean_field(replies: &[Value], key: &str, weight_key: &str) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for r in replies {
+        let (Some(v), Some(w)) = (
+            r.get(key).and_then(Value::as_f64),
+            r.get(weight_key).and_then(Value::as_f64),
+        ) else {
+            continue;
+        };
+        num += v * w;
+        den += w;
+    }
+    if den <= 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Merge per-node `cmd: "metrics"` replies into the router's one reply.
+/// The output carries the same flat numeric fields a single engine
+/// reports (so clients need no cluster-specific parsing), plus `nodes`
+/// and `merged: true` so callers can tell an aggregate from a single
+/// engine's answer.
+pub fn merge_metrics(replies: &[Value]) -> Value {
+    const SUMS: &[&str] = &[
+        "requests",
+        "responses",
+        "failures",
+        "deadline_met",
+        "deadline_misses",
+        "rows",
+        "padded_slots",
+        "shed",
+        "overload_rejects",
+    ];
+    let mut fields: Vec<(&str, Value)> = vec![
+        ("ok", Value::Bool(true)),
+        ("merged", Value::Bool(true)),
+        ("nodes", json::num(replies.len() as f64)),
+    ];
+    for key in SUMS {
+        fields.push((key, json::num(sum_field(replies, key))));
+    }
+    fields.push((
+        "goodput",
+        json::num(ratio_of_sums(replies, "deadline_met", "responses")),
+    ));
+    let rows = sum_field(replies, "rows");
+    let padded = sum_field(replies, "padded_slots");
+    let fill = if rows + padded <= 0.0 {
+        1.0
+    } else {
+        rows / (rows + padded)
+    };
+    fields.push(("fill", json::num(fill)));
+    fields.push((
+        "total_p50_us",
+        json::num(weighted_mean_field(replies, "total_p50_us", "responses")),
+    ));
+    fields.push((
+        "total_p99_us",
+        json::num(weighted_mean_field(replies, "total_p99_us", "responses")),
+    ));
+    json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(fields: &[(&str, f64)]) -> Value {
+        json::obj(
+            fields
+                .iter()
+                .map(|(k, v)| (*k, json::num(*v)))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn counters_merge_as_sums() {
+        let replies = [
+            node(&[("requests", 10.0), ("responses", 8.0)]),
+            node(&[("requests", 5.0), ("responses", 5.0)]),
+            // a node predating the field contributes nothing, not NaN
+            node(&[("responses", 1.0)]),
+        ];
+        assert_eq!(sum_field(&replies, "requests"), 15.0);
+        assert_eq!(sum_field(&replies, "responses"), 14.0);
+        assert_eq!(sum_field(&replies, "no_such_field"), 0.0);
+    }
+
+    #[test]
+    fn goodput_is_ratio_of_sums_not_mean_of_ratios() {
+        // node A: 9/10 met, node B: 1/2 met — the mean of ratios (0.70)
+        // overweights the tiny node; the true cluster goodput is 10/12
+        let replies = [
+            node(&[("deadline_met", 9.0), ("responses", 10.0)]),
+            node(&[("deadline_met", 1.0), ("responses", 2.0)]),
+        ];
+        let g = ratio_of_sums(&replies, "deadline_met", "responses");
+        assert!((g - 10.0 / 12.0).abs() < 1e-12, "{g}");
+        // vacuous cluster: nothing observed reads 1.0 like a fresh engine
+        assert_eq!(ratio_of_sums(&[], "deadline_met", "responses"), 1.0);
+    }
+
+    #[test]
+    fn percentiles_merge_weighted_by_responses() {
+        let replies = [
+            node(&[("total_p99_us", 100.0), ("responses", 1.0)]),
+            node(&[("total_p99_us", 400.0), ("responses", 3.0)]),
+        ];
+        let p = weighted_mean_field(&replies, "total_p99_us", "responses");
+        assert!((p - 325.0).abs() < 1e-12, "{p}");
+        assert_eq!(weighted_mean_field(&[], "total_p99_us", "responses"), 0.0);
+    }
+
+    #[test]
+    fn merged_reply_carries_flat_fields_and_node_count() {
+        let replies = [
+            node(&[
+                ("requests", 10.0),
+                ("responses", 10.0),
+                ("deadline_met", 10.0),
+                ("rows", 90.0),
+                ("padded_slots", 10.0),
+                ("total_p50_us", 50.0),
+                ("total_p99_us", 200.0),
+            ]),
+            node(&[
+                ("requests", 30.0),
+                ("responses", 30.0),
+                ("deadline_met", 15.0),
+                ("rows", 60.0),
+                ("padded_slots", 40.0),
+                ("total_p50_us", 90.0),
+                ("total_p99_us", 400.0),
+            ]),
+        ];
+        let m = merge_metrics(&replies);
+        assert_eq!(m.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(m.get("merged").and_then(Value::as_bool), Some(true));
+        assert_eq!(m.get("nodes").and_then(Value::as_f64), Some(2.0));
+        assert_eq!(m.get("requests").and_then(Value::as_f64), Some(40.0));
+        assert_eq!(m.get("goodput").and_then(Value::as_f64), Some(25.0 / 40.0));
+        assert_eq!(m.get("fill").and_then(Value::as_f64), Some(150.0 / 200.0));
+        let p50 = m.get("total_p50_us").and_then(Value::as_f64).unwrap();
+        assert!((p50 - (50.0 * 10.0 + 90.0 * 30.0) / 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_cluster_merges_to_the_vacuous_reply() {
+        let m = merge_metrics(&[]);
+        assert_eq!(m.get("nodes").and_then(Value::as_f64), Some(0.0));
+        assert_eq!(m.get("goodput").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(m.get("fill").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(m.get("requests").and_then(Value::as_f64), Some(0.0));
+    }
+}

@@ -4,9 +4,11 @@
 pub mod artifacts;
 pub mod benchkit;
 pub mod cli;
+pub mod cluster;
 pub mod fixtures;
 pub mod json;
 pub mod logging;
+pub mod merge;
 pub mod prng;
 pub mod propkit;
 pub mod stats;

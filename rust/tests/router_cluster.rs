@@ -1,0 +1,338 @@
+//! Cluster routing tests: a [`Router`] fronting a [`LocalCluster`] of
+//! engine nodes. Covers the tentpole acceptance suite — mixed v0/v1/v2
+//! dialects pipelined through one router connection with every reply
+//! id-correlated in its sender's dialect — plus health-aware failover
+//! (first ring node down, request still succeeds within its deadline),
+//! exhausted-failover `upstream_unavailable`, merged `cmd:"metrics"`,
+//! poller-driven ejection, loud client read timeouts, and the router's
+//! own graceful shutdown.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use hypersolvers::api::v1::{self, InferReply, InferRequest};
+use hypersolvers::api::{v2, ErrorCode};
+use hypersolvers::coordinator::server::Client;
+use hypersolvers::router::{Ring, Router, RouterConfig};
+use hypersolvers::util::cluster::LocalCluster;
+use hypersolvers::util::json::{self, Value};
+
+/// Watchdog: a wedged router or node would otherwise hang `cargo test`
+/// forever on a blocking socket read.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let t = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: cluster test did not finish within {secs}s")
+        }
+    }
+}
+
+/// The test router profile: fast polls so ejection happens within a test
+/// budget, short connect bound so failover is quick.
+fn test_cfg(nodes: Vec<String>) -> RouterConfig {
+    RouterConfig {
+        nodes,
+        vnodes: 64,
+        eject_after: 2,
+        poll_interval: Duration::from_millis(50),
+        retries: 2,
+        connect_timeout: Duration::from_millis(500),
+        probe_read_timeout: Duration::from_secs(2),
+    }
+}
+
+/// Bind port 0, serve the router on its own thread, return the address.
+fn spawn_router(cfg: RouterConfig) -> (Arc<Router>, String, thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let router = Arc::new(Router::new(cfg));
+    let handle = {
+        let r = Arc::clone(&router);
+        thread::spawn(move || {
+            let _ = r.serve_listener(listener);
+        })
+    };
+    (router, addr, handle)
+}
+
+fn connect_client(addr: &str) -> Client {
+    Client::connect_with(
+        addr,
+        Some(Duration::from_secs(2)),
+        Some(Duration::from_secs(60)),
+    )
+    .unwrap()
+}
+
+/// One downstream message in whatever dialect it arrived: sniff the first
+/// byte exactly like the server does.
+enum Msg {
+    Line(Value),
+    Frame(v2::Frame),
+}
+
+fn read_msg(reader: &mut BufReader<TcpStream>) -> Msg {
+    let first = *reader
+        .fill_buf()
+        .unwrap()
+        .first()
+        .expect("router closed the connection");
+    if first == v2::FRAME_MAGIC {
+        Msg::Frame(v2::read_frame(reader).unwrap())
+    } else {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0);
+        Msg::Line(json::parse(&line).unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole acceptance: mixed dialects, one router connection, ids correlated
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mixed_dialects_pipeline_through_the_router_id_correlated() {
+    with_watchdog(120, || {
+        let cluster =
+            LocalCluster::spawn(3, "router_mixed", &[("cnf_a", 4), ("cnf_b", 4)]).unwrap();
+        let (_router, addr, _h) = spawn_router(test_cfg(cluster.addrs()));
+
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+
+        // six pipelined v1 lines across both tasks (they hash to ring
+        // positions independently), ids chosen by the client
+        let v1_ids: Vec<u64> = (0..6).map(|i| 100 + i).collect();
+        for (i, &id) in v1_ids.iter().enumerate() {
+            let task = if i % 2 == 0 { "cnf_a" } else { "cnf_b" };
+            let mut r = InferRequest::single(task, 0.05, vec![0.1 * i as f32, -0.2]);
+            r.id = Some(id);
+            let mut line = json::to_string(&v1::encode_request(&r));
+            line.push('\n');
+            writer.write_all(line.as_bytes()).unwrap();
+        }
+        // one binary v2 frame
+        let mut r = InferRequest::single("cnf_b", 0.05, vec![0.3, 0.4]);
+        r.id = Some(202);
+        writer.write_all(&v2::encode_request(&r)).unwrap();
+        // one legacy v0 line (no "v"), last — v0 is strict request→reply
+        // order, so the router's reader blocks this connection's *intake*
+        // (not the already-dispatched replies) until it settles
+        writer
+            .write_all(b"{\"task\":\"cnf_a\",\"budget\":0.05,\"input\":[0.5,0.5]}\n")
+            .unwrap();
+
+        let mut v1_seen: Vec<u64> = Vec::new();
+        let mut v2_seen = 0u32;
+        let mut v0_seen = 0u32;
+        for _ in 0..8 {
+            match read_msg(&mut reader) {
+                Msg::Frame(f) => {
+                    // the v2 request came back as a v2 frame, same id
+                    match v2::decode_reply(f).unwrap() {
+                        InferReply::Ok(resp) => {
+                            assert_eq!(resp.id, 202);
+                            assert_eq!(resp.output.len(), 2);
+                        }
+                        other => panic!("v2 request failed through the router: {other:?}"),
+                    }
+                    v2_seen += 1;
+                }
+                Msg::Line(v) => {
+                    if v.get("v").is_none() {
+                        // the v0 reply keeps the legacy shape: flat output,
+                        // deprecation notice, no version tag
+                        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+                        assert!(v.get("deprecation").is_some());
+                        assert_eq!(
+                            v.get("output").and_then(Value::as_arr).map(<[Value]>::len),
+                            Some(2)
+                        );
+                        v0_seen += 1;
+                    } else {
+                        match v1::decode_reply(&v).unwrap() {
+                            InferReply::Ok(resp) => v1_seen.push(resp.id),
+                            other => panic!("v1 request failed through the router: {other:?}"),
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(v2_seen, 1);
+        assert_eq!(v0_seen, 1);
+        v1_seen.sort_unstable();
+        assert_eq!(v1_seen, v1_ids, "every v1 id answered exactly once");
+
+        // merged metrics through the same connection: counters are summed
+        // across all three nodes, per_node carries each node's gauges
+        writer.write_all(b"{\"cmd\":\"metrics\"}\n").unwrap();
+        let merged = match read_msg(&mut reader) {
+            Msg::Line(v) => v,
+            Msg::Frame(_) => panic!("metrics reply must be a JSON line"),
+        };
+        assert_eq!(merged.get("ok").and_then(Value::as_bool), Some(true));
+        assert_eq!(merged.get("merged").and_then(Value::as_bool), Some(true));
+        assert_eq!(merged.get("nodes").and_then(Value::as_f64), Some(3.0));
+        let per_node = merged.get("per_node").and_then(Value::as_arr).unwrap();
+        assert_eq!(per_node.len(), 3);
+        for n in per_node {
+            assert_eq!(n.get("ok").and_then(Value::as_bool), Some(true), "{n:?}");
+        }
+        let requests = merged.get("requests").and_then(Value::as_f64).unwrap();
+        assert!(
+            requests >= 8.0,
+            "3 nodes served 8 requests between them, merged says {requests}"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Failover: first ring node down, retries recover within the deadline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn retries_recover_when_the_primary_node_is_down() {
+    with_watchdog(120, || {
+        let mut cluster =
+            LocalCluster::spawn(3, "router_failover", &[("cnf_a", 4)]).unwrap();
+        let (_router, addr, _h) = spawn_router(test_cfg(cluster.addrs()));
+
+        // kill exactly the node the ring places cnf_a on — the router must
+        // discover the dead primary on dispatch and fail over along the
+        // ring, all inside the request's own deadline
+        let ring = Ring::new(3, 64);
+        let primary = ring.primary(Ring::key("cnf_a", None)).unwrap();
+        cluster.stop(primary).unwrap();
+
+        let started = Instant::now();
+        let mut c = connect_client(&addr);
+        let mut req = InferRequest::single("cnf_a", 0.05, vec![0.1, -0.2]);
+        req.deadline_us = Some(5_000_000);
+        match c.infer_v1(&req).unwrap() {
+            InferReply::Ok(resp) => assert_eq!(resp.output.len(), 2),
+            other => panic!("failover did not recover: {other:?}"),
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(5),
+            "failover must finish within the request deadline"
+        );
+
+        // now kill everything: failover runs out of ring and the client
+        // gets the frozen upstream_unavailable code, id still correlated
+        cluster.stop_all();
+        match c.infer_v1(&req).unwrap() {
+            InferReply::Err(e) => {
+                assert_eq!(e.error.code, ErrorCode::UpstreamUnavailable, "{e:?}");
+                assert!(
+                    !e.error.message.is_empty(),
+                    "exhausted failover must say what it tried"
+                );
+            }
+            other => panic!("no node is alive, yet the request succeeded: {other:?}"),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Health: the poller ejects a dead node (visible via the router's health cmd)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn the_poller_ejects_a_stopped_node() {
+    with_watchdog(120, || {
+        let mut cluster = LocalCluster::spawn(2, "router_eject", &[("cnf_a", 4)]).unwrap();
+        let (router, addr, _h) = spawn_router(test_cfg(cluster.addrs()));
+        cluster.stop(1).unwrap();
+
+        // eject_after=2 at a 50 ms cadence: well under this deadline
+        let deadline = Instant::now() + Duration::from_secs(15);
+        while router.health().healthy(1) && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(20));
+        }
+        assert!(!router.health().healthy(1), "dead node never ejected");
+        assert!(router.health().healthy(0), "live node must stay placed");
+
+        // the ejection is observable on the wire too
+        let mut c = connect_client(&addr);
+        let v = c.request(&json::obj(vec![("cmd", json::s("health"))])).unwrap();
+        assert_eq!(v.get("router").and_then(Value::as_bool), Some(true));
+        let nodes = v.get("nodes").and_then(Value::as_arr).unwrap();
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0].get("healthy").and_then(Value::as_bool), Some(true));
+        assert_eq!(nodes[1].get("healthy").and_then(Value::as_bool), Some(false));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Client timeouts: expiry is a loud error, not an eternal hang
+// ---------------------------------------------------------------------------
+
+#[test]
+fn client_read_timeout_expires_loudly() {
+    with_watchdog(60, || {
+        // a server that accepts and then never answers
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hold = thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            // outlive the client's read timeout, then hang up
+            thread::sleep(Duration::from_millis(800));
+            drop(stream);
+        });
+        let mut c = Client::connect_with(
+            &addr,
+            Some(Duration::from_secs(1)),
+            Some(Duration::from_millis(150)),
+        )
+        .unwrap();
+        let err = c
+            .request(&json::obj(vec![("cmd", json::s("metrics"))]))
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("timed out") && msg.contains("150ms"),
+            "timeout expiry must name the timeout, got: {msg}"
+        );
+        hold.join().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Router shutdown: loopback-gated, then the accept loop exits
+// ---------------------------------------------------------------------------
+
+#[test]
+fn router_shutdown_exits_the_accept_loop() {
+    with_watchdog(60, || {
+        let cluster = LocalCluster::spawn(1, "router_shutdown", &[("cnf_a", 4)]).unwrap();
+        let (_router, addr, handle) = spawn_router(test_cfg(cluster.addrs()));
+
+        // sanity: the router proxies before shutdown
+        let mut c = connect_client(&addr);
+        let reply = c
+            .infer_v1(&InferRequest::single("cnf_a", 0.05, vec![0.1, -0.2]))
+            .unwrap();
+        assert!(matches!(reply, InferReply::Ok(_)), "{reply:?}");
+
+        let v = c.request(&json::obj(vec![("cmd", json::s("shutdown"))])).unwrap();
+        assert_eq!(v.get("ok").and_then(Value::as_bool), Some(true), "{v:?}");
+        assert_eq!(v.get("shutdown").and_then(Value::as_bool), Some(true));
+
+        // the serve thread exits and the port stops accepting
+        handle.join().unwrap();
+        assert!(
+            Client::connect_with(&addr, Some(Duration::from_millis(300)), None).is_err(),
+            "router port must be closed after shutdown"
+        );
+    });
+}
